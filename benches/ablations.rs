@@ -1,0 +1,112 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   * routing policy (minimal vs Valiant) on the latency budget;
+//!   * placement policy (packed vs spread) on LBM step time;
+//!   * DVFS workpoint sweep on energy-to-solution;
+//!   * real HPL LU: host-only vs PJRT-offloaded trailing updates.
+
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::hpl;
+use leonardo_twin::lbm::{LbmConfig, LbmDriver};
+use leonardo_twin::metrics::{f1, f2, Table};
+use leonardo_twin::network::Placement;
+use leonardo_twin::power::{DvfsPoint, Utilization};
+use leonardo_twin::runtime::Engine;
+use leonardo_twin::util::bench::{black_box, Criterion};
+
+fn placement_ablation(twin: &Twin) {
+    let node = twin.cfg.gpu_node_spec().unwrap().clone();
+    let mut t = Table::new(
+        "Ablation — placement policy x fabric load (512-node LBM step [ms])",
+        &["Placement", "Cells", "Idle fabric", "Busy fabric (80% global load)"],
+    );
+    let packed = twin.place(512);
+    let spread = Placement {
+        nodes_per_cell: (0..16).map(|c| (c, 32)).collect(),
+    };
+    let mut busy_net = twin.net.clone();
+    busy_net.background_global_load = 0.8;
+    let step = |net: &leonardo_twin::network::Network, p: &Placement| {
+        LbmDriver::new(&node, net, LbmConfig::default())
+            .point(512, p)
+            .step_seconds
+            * 1e3
+    };
+    t.row(vec![
+        "packed (scheduler)".into(),
+        packed.cells_used().to_string(),
+        f2(step(&twin.net, &packed)),
+        f2(step(&busy_net, &packed)),
+    ]);
+    t.row(vec![
+        "spread (round-robin)".into(),
+        spread.cells_used().to_string(),
+        f2(step(&twin.net, &spread)),
+        f2(step(&busy_net, &spread)),
+    ]);
+    println!("{}", t.to_console());
+}
+
+fn dvfs_ablation(twin: &Twin) {
+    let mut t = Table::new(
+        "Ablation — DVFS workpoint (HPL-class load, boundness 0.9)",
+        &["Scale", "Power [W/node]", "Time factor", "Energy factor"],
+    );
+    let u = Utilization::hpl();
+    let idle = twin.power.node_power_w(Utilization::idle());
+    let dynamic = twin.power.node_power_w(u) - idle;
+    for scale in [1.0f64, 0.9, 0.8, 0.7, 0.6, 0.5] {
+        let p = DvfsPoint { scale };
+        let power = idle + dynamic * p.power_factor();
+        let tf = p.time_factor(0.9);
+        let nominal = idle + dynamic;
+        t.row(vec![
+            f2(scale),
+            f1(power),
+            f2(tf),
+            f2(power * tf / nominal),
+        ]);
+    }
+    println!("{}", t.to_console());
+}
+
+fn bench(c: &mut Criterion) {
+    let twin = Twin::leonardo();
+    placement_ablation(&twin);
+    dvfs_ablation(&twin);
+
+    // Routing policy ablation as a micro-bench (hot path of every
+    // collective estimate).
+    use leonardo_twin::topology::Routing;
+    c.bench_function("ablation/route_minimal", |b| {
+        b.iter(|| twin.topo.route(black_box(3), black_box(4100), Routing::Minimal))
+    });
+    c.bench_function("ablation/route_valiant", |b| {
+        b.iter(|| twin.topo.route(black_box(3), black_box(4100), Routing::Valiant))
+    });
+
+    // Real blocked LU: host vs PJRT-offloaded trailing update.
+    let n = 512; // two 256-panels: the trailing update offloads one full tile
+    let mut host = hpl::random_matrix(n, 5);
+    let r_host = hpl::lu_factor(&mut host, n, None).unwrap();
+    println!(
+        "hpl-lu/host        n={n}: {:.2} s, {:.2} GFLOPS",
+        r_host.seconds, r_host.gflops
+    );
+    if let Ok(engine) = Engine::load(Engine::default_dir()) {
+        let mut dev = hpl::random_matrix(n, 5);
+        let r_dev = hpl::lu_factor(&mut dev, n, Some(&engine)).unwrap();
+        println!(
+            "hpl-lu/pjrt-offload n={n}: {:.2} s, {:.2} GFLOPS ({}% offloaded)",
+            r_dev.seconds,
+            r_dev.gflops,
+            (r_dev.offload_fraction * 100.0) as u32
+        );
+    } else {
+        eprintln!("artifacts/ missing — PJRT LU ablation skipped");
+    }
+}
+
+fn main() {
+    let mut c = Criterion::default();
+    bench(&mut c);
+}

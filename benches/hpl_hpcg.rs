@@ -1,0 +1,48 @@
+//! Bench for Table 4: HPL/HPCG/Green500 models, plus the *real* DGEMM
+//! kernel through PJRT when artifacts are available (the calibration
+//! that ties the model to measured execution).
+
+use leonardo_twin::util::bench::{black_box, Criterion};
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::hardware::NodeSpec;
+use leonardo_twin::perfmodel::{HpcgModel, HplModel};
+use leonardo_twin::runtime::{literal_f32, Engine};
+
+fn bench(c: &mut Criterion) {
+    println!("{}", Twin::leonardo().table4(None).to_console());
+
+    let hpl = HplModel::new(NodeSpec::davinci());
+    let hpcg = HpcgModel::new(NodeSpec::davinci());
+    c.bench_function("table4/hpl_model_sweep", |b| {
+        b.iter(|| {
+            let mut acc = 0.0;
+            for n in [64u32, 256, 1024, 3300, 3456] {
+                acc += hpl.rmax(black_box(n)) + hpcg.rate(n);
+            }
+            acc
+        })
+    });
+
+    // Real kernel: blocked Pallas DGEMM via PJRT (skipped without artifacts).
+    if let Ok(engine) = Engine::load(Engine::default_dir()) {
+        let n = 256usize;
+        let inputs = [
+            literal_f32(&vec![1.0f32; n * n], &[n, n]).unwrap(),
+            literal_f32(&vec![0.5f32; n * n], &[n, n]).unwrap(),
+        ];
+        let _ = engine.execute("dgemm_256", &inputs).unwrap(); // compile
+        let mut group = c.benchmark_group("table4/pjrt");
+        group.sample_size(10);
+        group.bench_function("dgemm_256", |bch| {
+            bch.iter(|| engine.execute("dgemm_256", black_box(&inputs)).unwrap())
+        });
+        group.finish();
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts` for PJRT benches");
+    }
+}
+
+fn main() {
+    let mut c = Criterion::default();
+    bench(&mut c);
+}

@@ -1,0 +1,37 @@
+//! Bench for Table 5: the IO500 workload engine.
+
+use leonardo_twin::util::bench::{black_box, Criterion};
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::storage::{io500, StorageSystem};
+
+fn bench(c: &mut Criterion) {
+    println!("{}", Twin::leonardo().table5().to_console());
+
+    c.bench_function("io500/full_run", |b| {
+        b.iter(|| black_box(io500::run_leonardo()).score)
+    });
+
+    let sys = StorageSystem::leonardo();
+    let scratch = sys.namespace("/scratch").unwrap();
+    c.bench_function("io500/client_sweep", |b| {
+        b.iter(|| {
+            let mut acc = 0.0;
+            for clients in [4u32, 16, 64, 256] {
+                acc += io500::run(
+                    black_box(scratch),
+                    io500::Io500Config {
+                        client_nodes: clients,
+                        client_link_gbs: 45.0,
+                    },
+                )
+                .score;
+            }
+            acc
+        })
+    });
+}
+
+fn main() {
+    let mut c = Criterion::default();
+    bench(&mut c);
+}

@@ -1,0 +1,47 @@
+//! Bench for Table 7 / Fig 5: the LBM weak-scaling campaign, plus the
+//! *real* Pallas LBM kernel through PJRT when artifacts are available.
+
+use leonardo_twin::util::bench::{black_box, Criterion};
+use leonardo_twin::coordinator::{equilibrium_f32, Twin};
+use leonardo_twin::lbm::{LbmConfig, LbmDriver, TABLE7_NODES};
+use leonardo_twin::runtime::{literal_f32, Engine};
+
+fn bench(c: &mut Criterion) {
+    let twin = Twin::leonardo();
+    println!("{}", twin.table7(None).to_console());
+    println!("{}", twin.fig5().to_console());
+
+    let node = twin.cfg.gpu_node_spec().unwrap().clone();
+    c.bench_function("table7/full_sweep", |b| {
+        let driver = LbmDriver::new(&node, &twin.net, LbmConfig::default());
+        b.iter(|| driver.sweep(black_box(TABLE7_NODES), |n| twin.place(n)))
+    });
+    c.bench_function("fig5/both_machines", |b| {
+        b.iter(|| black_box(&twin).fig5())
+    });
+
+    // Real kernel: one D3Q19 step (32^3) via PJRT.
+    if let Ok(engine) = Engine::load(Engine::default_dir()) {
+        let f = literal_f32(&equilibrium_f32(32), &[19, 32, 32, 32]).unwrap();
+        let omega = literal_f32(&[1.2f32], &[1]).unwrap();
+        let inputs = [f, omega];
+        let _ = engine.execute("lbm_step_32", &inputs).unwrap(); // compile
+        let mut group = c.benchmark_group("table7/pjrt");
+        group.sample_size(10);
+        group.bench_function("lbm_step_32", |bch| {
+            bch.iter(|| engine.execute("lbm_step_32", black_box(&inputs)).unwrap())
+        });
+        group.bench_function("lbm_steps8_32", |bch| {
+            let _ = engine.execute("lbm_steps8_32", &inputs).unwrap();
+            bch.iter(|| engine.execute("lbm_steps8_32", black_box(&inputs)).unwrap())
+        });
+        group.finish();
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts` for PJRT benches");
+    }
+}
+
+fn main() {
+    let mut c = Criterion::default();
+    bench(&mut c);
+}

@@ -1,0 +1,43 @@
+//! Bench for the §2.2 latency budget and the network simulator hot path
+//! (routing + effective-bandwidth computation drive every scaling bench).
+
+use leonardo_twin::util::bench::{black_box, Criterion};
+use leonardo_twin::config::MachineConfig;
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::network::{Network, Placement};
+use leonardo_twin::topology::{Routing, Topology};
+
+fn bench(c: &mut Criterion) {
+    println!("{}", Twin::leonardo().latency_table().to_console());
+
+    let cfg = MachineConfig::leonardo();
+    let topo = Topology::build(&cfg);
+    let net = Network::new(topo.clone(), 400.0);
+
+    c.bench_function("network/route_minimal", |b| {
+        b.iter(|| topo.route(black_box(0), black_box(4000), Routing::Minimal))
+    });
+    c.bench_function("network/route_valiant", |b| {
+        b.iter(|| topo.route(black_box(17), black_box(4900), Routing::Valiant))
+    });
+    c.bench_function("network/p2p_1mib", |b| {
+        b.iter(|| net.p2p_time(black_box(0), black_box(2000), 1 << 20))
+    });
+    let placement = Placement {
+        nodes_per_cell: (0..8).map(|c| (c, 256)).collect(),
+    };
+    c.bench_function("network/effective_bw_8cells", |b| {
+        b.iter(|| net.effective_node_bw(black_box(&placement)))
+    });
+    c.bench_function("network/halo_exchange", |b| {
+        b.iter(|| net.halo_exchange_time(black_box(&placement), 6, 5 << 20))
+    });
+    c.bench_function("network/allreduce_2048", |b| {
+        b.iter(|| net.allreduce_time(black_box(&placement), 1 << 20))
+    });
+}
+
+fn main() {
+    let mut c = Criterion::default();
+    bench(&mut c);
+}

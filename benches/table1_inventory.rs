@@ -1,0 +1,25 @@
+//! Bench for Table 1: machine construction + inventory derivation.
+//! Regenerates the paper's rack/cell/node census and measures how fast
+//! the config layer assembles the full 155-rack machine description.
+
+use leonardo_twin::util::bench::{black_box, Criterion};
+use leonardo_twin::config::MachineConfig;
+use leonardo_twin::coordinator::Twin;
+
+fn bench(c: &mut Criterion) {
+    // Print the regenerated table once, like the paper prints it.
+    println!("{}", Twin::leonardo().table1().to_console());
+
+    c.bench_function("table1/build_machine", |b| {
+        b.iter(|| black_box(MachineConfig::leonardo()).total_nodes())
+    });
+    c.bench_function("table1/derive_inventory", |b| {
+        let cfg = MachineConfig::leonardo();
+        b.iter(|| black_box(&cfg).table1())
+    });
+}
+
+fn main() {
+    let mut c = Criterion::default();
+    bench(&mut c);
+}

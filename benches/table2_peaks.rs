@@ -1,0 +1,44 @@
+//! Bench for Table 2: GPU peak-rate derivation across all precisions.
+
+use leonardo_twin::util::bench::{black_box, Criterion};
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::hardware::{GpuSpec, Precision};
+
+fn bench(c: &mut Criterion) {
+    println!("{}", Twin::leonardo().table2().to_console());
+
+    let precisions = [
+        Precision::Fp64,
+        Precision::Fp32,
+        Precision::Fp64TensorCore,
+        Precision::Tf32TensorCore,
+        Precision::Fp16TensorCore,
+        Precision::Int8TensorCore,
+        Precision::Int4TensorCore,
+    ];
+    c.bench_function("table2/peaks_all_precisions", |b| {
+        let gpus = [
+            GpuSpec::a100_custom(),
+            GpuSpec::a100_standard(),
+            GpuSpec::v100(),
+        ];
+        b.iter(|| {
+            let mut acc = 0.0;
+            for g in &gpus {
+                for p in precisions {
+                    acc += black_box(g).peak_flops(p).unwrap_or(0.0);
+                }
+            }
+            acc
+        })
+    });
+    c.bench_function("table2/render", |b| {
+        let twin = Twin::leonardo();
+        b.iter(|| black_box(&twin).table2().to_markdown())
+    });
+}
+
+fn main() {
+    let mut c = Criterion::default();
+    bench(&mut c);
+}

@@ -1,0 +1,44 @@
+//! Bench for Table 3: storage capacity/bandwidth derivation and the
+//! striping model.
+
+use leonardo_twin::util::bench::{black_box, Criterion};
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::storage::{StorageSystem, Stripe};
+
+fn bench(c: &mut Criterion) {
+    println!("{}", Twin::leonardo().table3().to_console());
+
+    c.bench_function("table3/build_storage", |b| {
+        b.iter(|| black_box(StorageSystem::leonardo()).appliance_count())
+    });
+    let sys = StorageSystem::leonardo();
+    let scratch = sys.namespace("/scratch").unwrap();
+    c.bench_function("table3/namespace_derivations", |b| {
+        b.iter(|| {
+            (
+                black_box(scratch).net_pib(),
+                scratch.peak_write_gbs(),
+                scratch.peak_read_gbs(),
+                scratch.md_kiops(),
+            )
+        })
+    });
+    c.bench_function("table3/stripe_sweep", |b| {
+        b.iter(|| {
+            let mut acc = 0.0;
+            for count in 1..=64u32 {
+                acc += Stripe {
+                    count,
+                    size_mib: 16,
+                }
+                .file_bw_gbs(45.0, black_box(scratch), count % 2 == 0);
+            }
+            acc
+        })
+    });
+}
+
+fn main() {
+    let mut c = Criterion::default();
+    bench(&mut c);
+}

@@ -1,0 +1,61 @@
+//! The application benchmark campaign (Table 6): QuantumEspresso, MILC,
+//! SPECFEM3D and PLUTO at the paper's job sizes, plus a node-count sweep
+//! per application showing the TTS/ETS trade-off the Bull Dynamic Power
+//! Optimizer navigates.
+//!
+//! ```text
+//! cargo run --release --example app_benchmarks
+//! ```
+
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::metrics::{f1, f2, Table};
+use leonardo_twin::power::{best_workpoint, DvfsPoint};
+use leonardo_twin::workloads::AppBenchmark;
+
+fn main() {
+    let twin = Twin::leonardo();
+    println!("{}", twin.table6().to_console());
+
+    // Strong-scaling sweep per app.
+    let mut t = Table::new(
+        "Application strong scaling (TTS [s] / ETS [kWh])",
+        &["Application", "N/2", "N (paper)", "2N", "4N"],
+    );
+    for app in AppBenchmark::table6() {
+        let mut cells = vec![app.name.to_string()];
+        for factor in [0.5f64, 1.0, 2.0, 4.0] {
+            let nodes = ((app.ref_nodes as f64 * factor) as u32).max(2);
+            let placement = twin.place(nodes);
+            let tts = app.tts(nodes, &twin.net, &placement);
+            let ets = app.ets(nodes, tts, &twin.power);
+            cells.push(format!("{} / {}", f1(tts), f2(ets)));
+        }
+        t.row(cells);
+    }
+    println!("{}", t.to_console());
+
+    // DVFS workpoints: what the Bull Dynamic Power Optimizer would pick
+    // per app (memory-bound codes downclock almost for free).
+    let mut t = Table::new(
+        "Bull Dynamic Power Optimizer analogue: best DVFS workpoints",
+        &["Application", "Boundness", "Best scale", "Energy saved", "Slowdown"],
+    );
+    for (app, boundness) in AppBenchmark::table6().iter().zip([0.6, 0.8, 0.5, 0.4]) {
+        let p = best_workpoint(&twin.power, app.util, boundness, 1.10);
+        let nominal = twin.power.node_power_w(app.util);
+        let idle = twin.power.node_power_w(leonardo_twin::power::Utilization::idle());
+        let dynamic = nominal - idle;
+        let capped = idle + dynamic * p.power_factor();
+        let slowdown = DvfsPoint { scale: p.scale }.time_factor(boundness);
+        let saved = 1.0 - capped * slowdown / nominal;
+        t.row(vec![
+            app.name.to_string(),
+            f2(boundness),
+            f2(p.scale),
+            format!("{:.1}%", saved * 100.0),
+            format!("{:.1}%", (slowdown - 1.0) * 100.0),
+        ]);
+    }
+    println!("{}", t.to_console());
+    println!("paper Table 6: QE 439s/1.14kWh@12, MILC 178s/0.56kWh@12, SPECFEM3D 270s/1.43kWh@16, PLUTO 2874s/11.7kWh@32");
+}

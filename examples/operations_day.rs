@@ -1,0 +1,141 @@
+//! A day in the life of LEONARDO: the operations-side subsystems the
+//! paper describes outside the benchmark appendix, composed end-to-end:
+//!
+//!   1. an ISCRA/EuroHPC allocation round awards node-hour budgets (§3);
+//!   2. users land on the login balancer (§2.4) and submit a morning's
+//!      job mix; admission checks project budgets;
+//!   3. the SLURM-like scheduler runs the day under the facility power
+//!      cap (§2.6), backfilling and DVFS-throttling as needed;
+//!   4. IPMI-style telemetry logs every job's power profile; the health
+//!      checker watches the §2.6 envelope;
+//!   5. accounting charges the budgets and reports.
+//!
+//! ```text
+//! cargo run --release --example operations_day
+//! ```
+
+use leonardo_twin::allocation::{run_round, CallKind, Proposal};
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::frontend::{fleet_table, leonardo_service_fleet, LoginBalancer};
+use leonardo_twin::power::{PowerModel, Utilization};
+use leonardo_twin::scheduler::{Job, Partition, PowerCap, Scheduler};
+use leonardo_twin::telemetry::{health_summary, log_job_power, MetricStore};
+use leonardo_twin::util::rng::Rng;
+
+fn main() {
+    let twin = Twin::leonardo();
+    println!("{}", fleet_table().to_console());
+
+    // ---- 1. Allocation round: 30M node-hours on offer this cycle.
+    let mut rng = Rng::new(2023);
+    let proposals: Vec<Proposal> = (0..12)
+        .map(|i| Proposal {
+            id: i,
+            call: if i % 2 == 0 {
+                CallKind::EuroHpc
+            } else {
+                CallKind::Iscra
+            },
+            title: format!("project-{i:02}"),
+            merit: 5.0 + 5.0 * rng.f64(),
+            technical: 4.0 + 6.0 * rng.f64(),
+            requested_nh: 2e6 + 6e6 * rng.f64(),
+        })
+        .collect();
+    let mut round = run_round(proposals, 30e6);
+    println!(
+        "allocation round: {} projects awarded, {:.1}M node-hours total\n",
+        round.projects.len(),
+        round.total_awarded() / 1e6
+    );
+
+    // ---- 2. Login + submission.
+    let fleet = leonardo_service_fleet();
+    let mut balancer = LoginBalancer::new(&fleet);
+    let project_ids: Vec<u64> = round.projects.keys().copied().collect();
+    let mut jobs = Vec::new();
+    let mut owners = Vec::new();
+    for i in 0..40u64 {
+        let _login_node = balancer.connect().expect("login capacity");
+        let project = *rng.choose(&project_ids);
+        let job = Job {
+            id: i,
+            partition: Partition::Booster,
+            nodes: rng.range_u32(16, 1024),
+            est_seconds: rng.range_f64(600.0, 7200.0),
+            run_seconds: rng.range_f64(300.0, 7200.0),
+            submit_time: rng.range_f64(0.0, 14_400.0), // over four hours
+            boundness: rng.f64(),
+        };
+        if round.admit(project, &job) {
+            owners.push((i, project));
+            jobs.push(job);
+        }
+    }
+    println!(
+        "{} sessions connected, {} jobs admitted against budgets",
+        balancer.total_sessions(),
+        jobs.len()
+    );
+
+    // ---- 3. Run the day under a 6 MW facility cap (the Booster at full load
+    // draws ~7.7 MW, so heavy phases must throttle).
+    let power = PowerModel::new(twin.power.node.clone(), twin.cfg.pue);
+    let mut sched = Scheduler::new(&twin.cfg);
+    sched.power_cap = Some(PowerCap {
+        cap_mw: 6.0,
+        node_watts: power.node_power_w(Utilization::hpl()),
+        idle_watts: power.node_power_w(Utilization::idle()),
+    });
+    let records = sched.run(jobs.clone());
+    let makespan = records
+        .values()
+        .fold(0f64, |m, r| m.max(r.end_time));
+    let throttled = records.values().filter(|r| r.dvfs_scale < 1.0).count();
+    println!(
+        "day complete: makespan {:.1} h, {} jobs DVFS-throttled under the cap",
+        makespan / 3600.0,
+        throttled
+    );
+
+    // ---- 4. Telemetry: per-job power profiles + health.
+    let mut store = MetricStore::default();
+    let u = Utilization {
+        cpu: 0.4,
+        gpu: Some(0.8),
+    };
+    let mut jobs_by_id = std::collections::BTreeMap::new();
+    for j in &jobs {
+        jobs_by_id.insert(j.id, j);
+    }
+    for (id, rec) in &records {
+        let j = jobs_by_id[id];
+        let watts = power.node_power_w(u) * j.nodes as f64 * rec.dvfs_scale;
+        log_job_power(
+            &mut store,
+            &format!("job{id:02}_power_w"),
+            rec.start_time,
+            rec.end_time,
+            watts,
+            600.0,
+        );
+    }
+    store.record("gpu_temp_c", makespan, 78.0);
+    store.record("inlet_temp_c", makespan, 37.0);
+    let total_kwh: f64 = records
+        .keys()
+        .map(|id| store.energy_kwh(&format!("job{id:02}_power_w")))
+        .sum();
+    println!("IT energy for the day's jobs: {total_kwh:.0} kWh (+10% cooling at PUE 1.1)");
+    let (health, worst) = health_summary(&store);
+    println!("{}", health.to_console());
+    println!("fleet health: {worst:?}\n");
+
+    // ---- 5. Accounting.
+    for (job_id, project) in &owners {
+        if let Some(rec) = records.get(job_id) {
+            round.charge(*project, jobs_by_id[job_id], rec);
+        }
+    }
+    println!("{}", round.report().to_console());
+}

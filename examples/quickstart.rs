@@ -1,0 +1,53 @@
+//! Quickstart: build the LEONARDO twin, print the machine facts, and run
+//! one *real* D3Q19 lattice-Boltzmann step through the PJRT runtime.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use leonardo_twin::coordinator::{equilibrium_f32, Twin};
+use leonardo_twin::runtime::{literal_f32, Engine};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The machine, straight from Table 1/2 of the paper.
+    let twin = Twin::leonardo();
+    println!("{}", twin.table1().to_console());
+    println!(
+        "fabric: {} switches, max latency {:.2} us",
+        twin.topo.total_switches(),
+        twin.topo.max_latency_ns() / 1000.0
+    );
+
+    // 2. A real kernel: the Pallas D3Q19 collide+stream step, AOT-lowered
+    //    by `make artifacts`, executed on the PJRT CPU client.
+    let engine = Engine::load(Engine::default_dir())?;
+    println!("\nPJRT platform: {}", engine.platform());
+    println!("modules: {:?}", engine.modules());
+
+    let n = 32usize;
+    let f = literal_f32(&equilibrium_f32(n), &[19, n, n, n])?;
+    let omega = literal_f32(&[1.2f32], &[1])?;
+
+    let outputs = engine.execute("lbm_step_32", &[f, omega])?;
+    let result: Vec<f32> = outputs[0].to_vec()?;
+
+    // Mass conservation is the LBM sanity check: rho must stay 1 at
+    // every site (quiescent equilibrium is a fixed point of the step).
+    let sites = n * n * n;
+    let mut max_err = 0f32;
+    for s in 0..sites {
+        let rho: f32 = (0..19).map(|q| result[q * sites + s]).sum();
+        max_err = max_err.max((rho - 1.0).abs());
+    }
+    println!("\nLBM step on {n}^3: max |rho - 1| = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-5, "mass not conserved");
+
+    // 3. Timed: per-site update rate on this host, projected to the A100.
+    let f = literal_f32(&equilibrium_f32(n), &[19, n, n, n])?;
+    let omega = literal_f32(&[1.2f32], &[1])?;
+    let secs = engine.time_execute("lbm_steps8_32", &[f, omega], 2)?;
+    let mlups = 8.0 * (sites as f64) / secs / 1e6;
+    println!("host rate: {mlups:.1} MLUPS (scan of 8 steps, one dispatch)");
+    println!("\nquickstart OK");
+    Ok(())
+}

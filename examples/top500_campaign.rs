@@ -1,0 +1,65 @@
+//! The TOP500/Green500 campaign (Table 4): HPL and HPCG at the paper's
+//! submission scale, with the HPL model fed by the *measured* blocked
+//! Pallas DGEMM when artifacts are available.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example top500_campaign
+//! ```
+
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::hardware::NodeSpec;
+use leonardo_twin::metrics::{f1, f2, Table};
+use leonardo_twin::perfmodel::{HpcgModel, HplModel};
+use leonardo_twin::power::Utilization;
+use leonardo_twin::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let twin = Twin::leonardo();
+
+    let calib = match Engine::load(Engine::default_dir()) {
+        Ok(engine) => Some(twin.calibrate(&engine)?),
+        Err(e) => {
+            eprintln!("(no artifacts: {e:#})");
+            None
+        }
+    };
+
+    println!("{}", twin.table4(calib.as_ref()).to_console());
+
+    // Scaling sweep: how Rmax, efficiency, power and Green500 evolve with
+    // machine fraction — the "what if we submitted with N nodes" table.
+    let hpl = HplModel::new(NodeSpec::davinci());
+    let hpcg = HpcgModel::new(NodeSpec::davinci());
+    let mut t = Table::new(
+        "HPL/HPCG scaling sweep (what-if submissions)",
+        &[
+            "Nodes",
+            "N (fills 80% HBM)",
+            "Rmax [PF]",
+            "Eff",
+            "HPCG [PF]",
+            "Power [MW]",
+            "GFLOPS/W",
+        ],
+    );
+    for nodes in [256u32, 1024, 2048, 3300, 3456] {
+        let rmax = hpl.rmax(nodes);
+        let power = twin.power.fleet_power_mw(nodes, Utilization::hpl());
+        t.row(vec![
+            nodes.to_string(),
+            hpl.problem_size(nodes, 0.8).to_string(),
+            f1(rmax / 1e15),
+            f2(hpl.efficiency(nodes)),
+            f2(hpcg.rate(nodes) / 1e15),
+            f1(power),
+            f1(rmax / 1e9 / (power * 1e6)),
+        ]);
+    }
+    println!("{}", t.to_console());
+
+    if let Some(c) = &calib {
+        println!("{}", twin.calibration_table(c).to_console());
+    }
+    println!("paper: Rmax 238.7 PF (rank 4), HPCG 3.11 PF (rank 4), 32.2 GFLOPS/W (rank 15)");
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT exporter: lower every L2 entry point to HLO *text* + a manifest.
+
+HLO text (NOT `lowered.compile()`/`.serialize()`) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Writes: artifacts/<name>.hlo.txt for every registry entry, plus
+        artifacts/manifest.json describing argument shapes/dtypes so the
+        Rust runtime can allocate input literals without guessing.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _scalar():
+    return jax.ShapeDtypeStruct((1,), jnp.float32)
+
+
+def _lbm_step_entry(n):
+    return (model.lbm_step, [_spec((19, n, n, n)), _scalar()])
+
+
+def _lbm_steps_entry(n, steps):
+    fn = functools.partial(model.lbm_steps, n_steps=steps)
+    return (fn, [_spec((19, n, n, n)), _scalar()])
+
+
+def _dgemm_entry(n):
+    return (model.dgemm, [_spec((n, n)), _spec((n, n))])
+
+
+def _hpl_update_entry(n):
+    return (model.hpl_update, [_spec((n, n)), _spec((n, n)), _spec((n, n))])
+
+
+def _spmv_entry(n):
+    return (model.spmv, [_spec((n, n, n))])
+
+
+def _cg_iter_entry(n):
+    g = _spec((n, n, n))
+    return (model.cg_iter, [g, g, g, _spec((), jnp.float32)])
+
+
+def _cg_iters_entry(n, iters):
+    fn = functools.partial(model.cg_iters, n_iters=iters)
+    g = _spec((n, n, n))
+    return (fn, [g, g, g, _spec((), jnp.float32)])
+
+
+def _sparse_entry(n):
+    from .kernels import sparse
+
+    return (sparse.sparse_matmul, [_spec((n, n)), _spec((n, n))])
+
+
+# name -> (fn, [arg specs]); names are load-bearing: the Rust runtime and
+# coordinator refer to artifacts by these keys.
+REGISTRY = {
+    "lbm_step_32": _lbm_step_entry(32),
+    "lbm_step_48": _lbm_step_entry(48),
+    "lbm_steps8_32": _lbm_steps_entry(32, 8),
+    "dgemm_256": _dgemm_entry(256),
+    "dgemm_512": _dgemm_entry(512),
+    "hpl_update_256": _hpl_update_entry(256),
+    "spmv_64": _spmv_entry(64),
+    "cg_iter_64": _cg_iter_entry(64),
+    "cg_iters8_64": _cg_iters_entry(64, 8),
+    "sparse_matmul_256": _sparse_entry(256),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_one(name, fn, specs, out_dir):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    flat, _ = jax.tree_util.tree_flatten(
+        jax.eval_shape(fn, *specs)
+    )
+    return {
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+        ],
+        "outputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in flat
+        ],
+        "hlo_chars": len(text),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated registry subset"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = list(REGISTRY) if not args.only else args.only.split(",")
+    # --only must not clobber the other entries: merge into any existing
+    # manifest so partial re-exports keep artifacts/ self-describing.
+    manifest = {}
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if args.only and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    for name in names:
+        fn, specs = REGISTRY[name]
+        manifest[name] = export_one(name, fn, specs, args.out_dir)
+        print(f"exported {name}: {manifest[name]['hlo_chars']} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest for {len(manifest)} modules to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

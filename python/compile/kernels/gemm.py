@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: blocked GEMM (the HPL hot spot).
+
+HPL spends >90% of its time in the trailing-matrix DGEMM update
+C <- C - A @ B. On the A100 this runs on tensor cores with threadblock
+tiles staged through shared memory; the MXU analogue is a 128x128 output
+tile with the K dimension marched through VMEM (DESIGN.md
+§Hardware-Adaptation). Accumulation is f32.
+
+Default block edge is 256: a perf sweep on the interpret/CPU path (the
+execution target of this repo) measured 9.9 / 18.2 / 30.9 GFLOPS at
+block 128 / 256 / 512 on a 512^2 matmul — per-block dispatch overhead
+dominates interpret mode, so fewer, larger blocks win; 256 keeps three
+levels of blocking (the TPU-structural shape) while recovering most of
+the win (EXPERIMENTS.md §Perf). On a real MXU the 128 tile is optimal;
+pass bm/bn/bk explicitly when lowering for hardware.
+
+interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # K is the innermost grid axis: initialize the output tile on the first
+    # K step, then accumulate — the canonical MXU pipeline structure.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, bm=256, bn=256, bk=256):
+    """Blocked matmul a @ b via Pallas.
+
+    Shapes must tile evenly: a (M, K), b (K, N) with bm|M, bk|K, bn|N.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"({m},{k})x({k},{n}) not tiled by ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def gemm_update(c, a, b, alpha=-1.0, bm=256, bn=256, bk=256):
+    """HPL trailing update C <- C + alpha * A @ B (alpha=-1 in HPL)."""
+    return c + alpha * matmul(a, b, bm=bm, bn=bn, bk=bk)

@@ -1,0 +1,142 @@
+"""L1 Pallas kernel: D3Q19 lattice-Boltzmann BGK collision.
+
+The collision operator is the FLOP hot spot of the LBM benchmark the paper
+scales to 9,900 GPUs (Appendix A.3): ~250 flops per lattice site per step.
+Streaming (pure data movement) lives at L2 (`model.lbm_step`) as jnp rolls
+that XLA fuses with the collision output.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): on the A100 this
+kernel is HBM-bandwidth bound and written with one threadblock per lattice
+tile staged in shared memory; here the BlockSpec tiles the lattice into
+x-slabs sized for a ~16 MB VMEM budget, the 19 distributions stay in the
+leading axis so each slab is a contiguous (19, BX, NY, NZ) block, and the
+kernel reads and writes each distribution exactly once (single pass).
+
+Pallas runs with interpret=True: CPU-PJRT cannot execute Mosaic custom
+calls; numerics are identical to the compiled path.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# D3Q19 velocity set: rest particle, 6 face neighbours, 12 edge neighbours.
+# Order matters: model.lbm_step streams with the same table.
+C = np.array(
+    [
+        [0, 0, 0],
+        [1, 0, 0], [-1, 0, 0], [0, 1, 0], [0, -1, 0], [0, 0, 1], [0, 0, -1],
+        [1, 1, 0], [-1, -1, 0], [1, -1, 0], [-1, 1, 0],
+        [1, 0, 1], [-1, 0, -1], [1, 0, -1], [-1, 0, 1],
+        [0, 1, 1], [0, -1, -1], [0, 1, -1], [0, -1, 1],
+    ],
+    dtype=np.int32,
+)
+
+W = np.array(
+    [1.0 / 3.0]
+    + [1.0 / 18.0] * 6
+    + [1.0 / 36.0] * 12,
+    dtype=np.float32,
+)
+
+# Index of the opposite direction (used for bounce-back boundaries at L2).
+OPP = np.array(
+    [0, 2, 1, 4, 3, 6, 5, 8, 7, 10, 9, 12, 11, 14, 13, 16, 15, 18, 17],
+    dtype=np.int32,
+)
+
+Q = 19
+
+
+def _collide_kernel(f_ref, omega_ref, out_ref):
+    """BGK collision, fully unrolled over the 19 directions.
+
+    The unrolled form (Python-float coefficients, one moment accumulation
+    pass + one equilibrium/relax pass) mirrors the production CUDA kernel
+    and sidesteps Pallas's no-captured-array-constants rule: every
+    coefficient is a compile-time scalar.
+    """
+    omega = omega_ref[0]
+    f = [f_ref[q] for q in range(Q)]
+
+    rho = f[0]
+    for q in range(1, Q):
+        rho = rho + f[q]
+    inv_rho = 1.0 / rho
+
+    ux = uy = uz = None
+    for q in range(Q):
+        cx, cy, cz = (float(v) for v in C[q])
+        if cx:
+            ux = cx * f[q] if ux is None else ux + cx * f[q]
+        if cy:
+            uy = cy * f[q] if uy is None else uy + cy * f[q]
+        if cz:
+            uz = cz * f[q] if uz is None else uz + cz * f[q]
+    ux, uy, uz = ux * inv_rho, uy * inv_rho, uz * inv_rho
+    usq = ux * ux + uy * uy + uz * uz
+
+    for q in range(Q):
+        cx, cy, cz = (float(v) for v in C[q])
+        cu = cx * ux + cy * uy + cz * uz
+        feq = float(W[q]) * rho * (1.0 + 3.0 * cu + 4.5 * cu * cu - 1.5 * usq)
+        out_ref[q] = f[q] + omega * (feq - f[q])
+
+
+def collide(f, omega, block_x=None):
+    """Pallas D3Q19 BGK collision.
+
+    Args:
+      f: distributions, shape (19, NX, NY, NZ), float32.
+      omega: relaxation rate scalar (array shape (1,)) in (0, 2).
+      block_x: x-slab width; must divide NX. Default: whole extent if the
+        slab fits a 16 MB VMEM budget, else the largest divisor that does.
+    Returns:
+      post-collision distributions, same shape.
+    """
+    q, nx, ny, nz = f.shape
+    assert q == Q, f"expected leading axis 19, got {q}"
+    if block_x is None:
+        block_x = _default_block_x(nx, ny, nz)
+    assert nx % block_x == 0, f"block_x={block_x} must divide NX={nx}"
+    omega = jnp.asarray(omega, jnp.float32).reshape((1,))
+
+    grid = (nx // block_x,)
+    return pl.pallas_call(
+        _collide_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Q, block_x, ny, nz), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((Q, block_x, ny, nz), lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(f.shape, f.dtype),
+        interpret=True,
+    )(f, omega)
+
+
+def _default_block_x(nx, ny, nz, vmem_bytes=16 * 2**20):
+    """Largest divisor of nx whose in+out blocks fit the VMEM budget."""
+    site_bytes = 2 * Q * 4 * ny * nz  # in + out slabs, f32
+    best = 1
+    for bx in range(1, nx + 1):
+        if nx % bx == 0 and bx * site_bytes <= vmem_bytes:
+            best = bx
+    return best
+
+
+@partial(jax.jit, static_argnames=())
+def equilibrium(rho, ux, uy, uz):
+    """Equilibrium distributions from macroscopic fields (used to init)."""
+    shape = rho.shape
+    w = jnp.asarray(W).reshape((Q,) + (1,) * len(shape))
+    cx = jnp.asarray(C[:, 0], rho.dtype).reshape(w.shape)
+    cy = jnp.asarray(C[:, 1], rho.dtype).reshape(w.shape)
+    cz = jnp.asarray(C[:, 2], rho.dtype).reshape(w.shape)
+    cu = cx * ux[None] + cy * uy[None] + cz * uz[None]
+    usq = (ux * ux + uy * uy + uz * uz)[None]
+    return w * rho[None] * (1.0 + 3.0 * cu + 4.5 * cu * cu - 1.5 * usq)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: 2:4 structured-sparse matmul (paper §2.1.1).
+
+The A100's Sparse Tensor Cores double matmul throughput when the weight
+matrix is pruned so that every group of 4 consecutive elements along K
+keeps at most 2 non-zeros ("Structural Sparsity"). This kernel implements
+the *semantics* of that path: prune-to-2:4, then multiply. On real
+hardware the pruned representation is compressed and the MXU skips the
+zeros (the 2x of Table 2's sparse rows); under interpret-mode CPU we
+verify numerics and model the speedup in `rust/src/hardware/gpu.rs`
+(`peak_flops_sparse`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def prune_2_4(w):
+    """Keep the 2 largest-|.| of every 4 consecutive elements along axis 1.
+
+    Deterministic tie-break (first occurrence wins) so kernel and oracle
+    agree bit-for-bit.
+    """
+    k, n = w.shape
+    assert k % 4 == 0, f"K={k} must be a multiple of 4"
+    g = w.reshape(k // 4, 4, n)
+    a = jnp.abs(g)
+    # rank elements within each group of 4; keep top 2
+    order = jnp.argsort(-a, axis=1, stable=True)
+    rank = jnp.argsort(order, axis=1, stable=True)
+    mask = rank < 2
+    return (g * mask).reshape(k, n)
+
+
+def _sparse_matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def sparse_matmul(x, w, bm=128, bn=128, bk=128):
+    """x @ prune_2_4(w) via Pallas (pruning fused ahead of the blocks)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    wp = prune_2_4(w)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _sparse_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, wp)
+
+
+def sparsity_ratio(w):
+    """Fraction of zeros after pruning (exactly 0.5 for 2:4)."""
+    wp = prune_2_4(w)
+    return float(jnp.mean(wp == 0.0))

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: HPCG 27-point stencil SpMV.
+
+HPCG's operator is the 3D 27-point stencil (diagonal 26, off-diagonals -1)
+with zero Dirichlet boundaries. The A100 implementation stages a halo'd
+tile in shared memory; here each grid step owns an x-slab and reads a
+halo'd input slab expressed through an element-offset BlockSpec is not
+available in interpret mode for ragged edges, so the kernel takes the halo
+explicitly: the input block is the full lattice (VMEM analysis in
+DESIGN.md §Perf notes the compiled-TPU variant would use an overlapped
+(BX+2) slab; the arithmetic per site is identical).
+
+interpret=True throughout.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DIAG = 26.0
+OFF = -1.0
+
+
+def _shifted_sum(xp):
+    """Sum of the 26 neighbours of the interior of a zero-padded field."""
+    acc = None
+    for dx in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dz in (-1, 0, 1):
+                if dx == 0 and dy == 0 and dz == 0:
+                    continue
+                nx, ny, nz = xp.shape
+                sl = xp[
+                    1 + dx : nx - 1 + dx,
+                    1 + dy : ny - 1 + dy,
+                    1 + dz : nz - 1 + dz,
+                ]
+                acc = sl if acc is None else acc + sl
+    return acc
+
+
+def _stencil_kernel(x_ref, o_ref, *, block_x):
+    i = pl.program_id(0)
+    xfull = x_ref[...]
+    xp = jnp.pad(xfull, 1)  # zero Dirichlet halo
+    # interior slab [i*block_x, (i+1)*block_x) of the padded field
+    slab = jax.lax.dynamic_slice_in_dim(xp, i * block_x, block_x + 2, axis=0)
+    o_ref[...] = DIAG * jax.lax.dynamic_slice_in_dim(
+        xfull, i * block_x, block_x, axis=0
+    ) + OFF * _shifted_sum(slab)
+
+
+@functools.partial(jax.jit, static_argnames=("block_x",))
+def stencil27(x, block_x=None):
+    """y = A x for the HPCG 27-point operator, zero boundaries.
+
+    x: (NX, NY, NZ) float32.
+    """
+    nx, ny, nz = x.shape
+    if block_x is None:
+        block_x = nx
+    assert nx % block_x == 0
+    grid = (nx // block_x,)
+    kernel = functools.partial(_stencil_kernel, block_x=block_x)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((nx, ny, nz), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((block_x, ny, nz), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)

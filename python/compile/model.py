@@ -1,0 +1,108 @@
+"""L2: JAX compute graphs for the LEONARDO benchmark motifs.
+
+Each public function here is AOT-lowered by `aot.py` into an
+`artifacts/*.hlo.txt` module that the Rust runtime executes via PJRT.
+They call the L1 Pallas kernels (`kernels/`) so kernel and graph lower
+into one HLO module; Python never runs at serve time.
+
+Motifs:
+  - LBM D3Q19 step(s): the weak-scaling benchmark of Appendix A.3
+    (collision = Pallas, streaming = jnp rolls XLA fuses into the
+    surrounding graph).
+  - HPL trailing update: the DGEMM that dominates Linpack (Table 4).
+  - HPCG CG iteration: 27-point stencil SpMV + dots + axpys (Table 4).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm, lbm, stencil
+
+
+# ---------------------------------------------------------------------------
+# LBM
+# ---------------------------------------------------------------------------
+
+def lbm_step(f, omega):
+    """One D3Q19 BGK step: collide (Pallas) then periodic stream.
+
+    Periodic boundaries model the *interior* of one node's subdomain; the
+    Rust driver owns inter-node halo exchange (network-simulated), exactly
+    as the MPI version the paper benchmarks does.
+    """
+    fc = lbm.collide(f, omega)
+    out = [None] * lbm.Q
+    for q in range(lbm.Q):
+        cx, cy, cz = (int(v) for v in lbm.C[q])
+        out[q] = jnp.roll(fc[q], (cx, cy, cz), axis=(0, 1, 2))
+    return jnp.stack(out)
+
+
+def lbm_steps(f, omega, n_steps):
+    """n_steps LBM steps via lax.scan (no unroll: keeps the HLO compact)."""
+
+    def body(carry, _):
+        return lbm_step(carry, omega), None
+
+    out, _ = jax.lax.scan(body, f, None, length=n_steps)
+    return out
+
+
+def lbm_macroscopics(f):
+    """Density and momentum fields — used for conservation checks."""
+    c = jnp.asarray(lbm.C, f.dtype)
+    rho = jnp.sum(f, axis=0)
+    mom = jnp.einsum("qd,qxyz->dxyz", c, f)
+    return rho, mom
+
+
+# ---------------------------------------------------------------------------
+# HPL
+# ---------------------------------------------------------------------------
+
+def hpl_update(c, a, b):
+    """Trailing-matrix update C <- C - A @ B (the HPL hot loop)."""
+    return gemm.gemm_update(c, a, b, alpha=-1.0)
+
+
+def dgemm(a, b):
+    """Plain blocked matmul — the calibration kernel for the HPL model."""
+    return gemm.matmul(a, b)
+
+
+# ---------------------------------------------------------------------------
+# HPCG
+# ---------------------------------------------------------------------------
+
+def spmv(x):
+    """y = A x for the HPCG 27-point operator."""
+    return stencil.stencil27(x)
+
+
+def cg_iter(x, r, p, rz):
+    """One unpreconditioned CG iteration on the stencil operator.
+
+    State: solution x, residual r, direction p, and rz = <r, r>.
+    Returns the advanced state. Fusing the whole iteration into one HLO
+    module keeps the Rust hot path at one PJRT dispatch per iteration.
+    """
+    tiny = jnp.float32(1e-30)  # keeps the iteration a no-op at convergence
+    ap = stencil.stencil27(p)
+    pap = jnp.sum(p * ap)
+    alpha = rz / (pap + tiny)
+    x = x + alpha * p
+    r = r - alpha * ap
+    rz_new = jnp.sum(r * r)
+    beta = rz_new / (rz + tiny)
+    p = r + beta * p
+    return x, r, p, rz_new
+
+
+def cg_iters(x, r, p, rz, n_iters):
+    """n CG iterations via scan; returns final state."""
+
+    def body(carry, _):
+        return cg_iter(*carry), None
+
+    (x, r, p, rz), _ = jax.lax.scan(body, (x, r, p, rz), None, length=n_iters)
+    return x, r, p, rz

@@ -1,0 +1,147 @@
+"""Kernel-vs-oracle tests for the D3Q19 Pallas collision kernel.
+
+Hypothesis sweeps shapes and relaxation rates; fixed tests pin the physics
+invariants (conservation, equilibrium fixed point, velocity-set algebra).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lbm
+from compile.kernels.ref import lbm_collide_ref, lbm_stream_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_f(key, shape, eps=0.05):
+    """Random positive distributions near equilibrium weights."""
+    w = jnp.asarray(lbm.W).reshape((lbm.Q, 1, 1, 1))
+    noise = jax.random.uniform(
+        key, (lbm.Q,) + shape, minval=-eps, maxval=eps
+    )
+    return (w * (1.0 + noise)).astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# velocity-set algebra
+# ----------------------------------------------------------------------
+
+def test_velocity_set_is_d3q19():
+    assert lbm.C.shape == (19, 3)
+    norms = np.sum(lbm.C**2, axis=1)
+    assert norms[0] == 0
+    assert np.sum(norms == 1) == 6
+    assert np.sum(norms == 2) == 12
+
+
+def test_weights_sum_to_one():
+    np.testing.assert_allclose(np.sum(lbm.W), 1.0, rtol=1e-6)
+
+
+def test_weights_match_speed_class():
+    norms = np.sum(lbm.C**2, axis=1)
+    assert np.allclose(lbm.W[norms == 0], 1 / 3)
+    assert np.allclose(lbm.W[norms == 1], 1 / 18)
+    assert np.allclose(lbm.W[norms == 2], 1 / 36)
+
+
+def test_opposite_table():
+    for q in range(lbm.Q):
+        assert (lbm.C[lbm.OPP[q]] == -lbm.C[q]).all()
+
+
+def test_velocity_moments_isotropy():
+    """Second moment sum_q w_q c_qa c_qb = cs^2 delta_ab with cs^2=1/3."""
+    m = np.einsum("q,qa,qb->ab", lbm.W, lbm.C.astype(float), lbm.C.astype(float))
+    np.testing.assert_allclose(m, np.eye(3) / 3.0, atol=1e-7)
+
+
+# ----------------------------------------------------------------------
+# kernel vs oracle
+# ----------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nx=st.sampled_from([2, 4, 8]),
+    ny=st.sampled_from([2, 3, 5, 8]),
+    nz=st.sampled_from([2, 4, 7]),
+    omega=st.floats(0.1, 1.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_collide_matches_ref(nx, ny, nz, omega, seed):
+    f = random_f(jax.random.PRNGKey(seed), (nx, ny, nz))
+    got = lbm.collide(f, omega)
+    want = lbm_collide_ref(f, jnp.float32(omega))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("block_x", [1, 2, 4, 8])
+def test_collide_blocking_invariance(block_x):
+    """Result must not depend on the BlockSpec tiling."""
+    f = random_f(jax.random.PRNGKey(7), (8, 4, 4))
+    base = lbm.collide(f, 1.2, block_x=8)
+    got = lbm.collide(f, 1.2, block_x=block_x)
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=8, deadline=None)
+@given(omega=st.floats(0.2, 1.8), seed=st.integers(0, 2**31 - 1))
+def test_collision_conserves_mass_momentum(omega, seed):
+    f = random_f(jax.random.PRNGKey(seed), (4, 4, 4))
+    fc = lbm.collide(f, omega)
+    c = jnp.asarray(lbm.C, jnp.float32)
+    np.testing.assert_allclose(
+        jnp.sum(fc, 0), jnp.sum(f, 0), rtol=1e-5, atol=1e-7
+    )
+    np.testing.assert_allclose(
+        jnp.einsum("qd,qxyz->dxyz", c, fc),
+        jnp.einsum("qd,qxyz->dxyz", c, f),
+        rtol=1e-4,
+        atol=1e-6,
+    )
+
+
+def test_equilibrium_is_fixed_point():
+    """Collision leaves an equilibrium distribution unchanged."""
+    shape = (4, 4, 4)
+    rho = jnp.full(shape, 1.0, jnp.float32)
+    ux = jnp.full(shape, 0.03, jnp.float32)
+    uy = jnp.full(shape, -0.01, jnp.float32)
+    uz = jnp.full(shape, 0.02, jnp.float32)
+    feq = lbm.equilibrium(rho, ux, uy, uz)
+    fc = lbm.collide(feq, 1.7)
+    np.testing.assert_allclose(fc, feq, rtol=1e-5, atol=1e-7)
+
+
+def test_collide_rest_fluid_identity():
+    """Zero-velocity uniform fluid: f = w, collision is the identity."""
+    f = jnp.tile(
+        jnp.asarray(lbm.W).reshape((lbm.Q, 1, 1, 1)), (1, 4, 4, 4)
+    ).astype(jnp.float32)
+    fc = lbm.collide(f, 1.0)
+    np.testing.assert_allclose(fc, f, rtol=1e-6, atol=1e-8)
+
+
+def test_omega_zero_is_identity():
+    f = random_f(jax.random.PRNGKey(3), (4, 4, 4))
+    np.testing.assert_allclose(
+        lbm.collide(f, 0.0), f, rtol=1e-6, atol=1e-8
+    )
+
+
+def test_stream_ref_is_permutation():
+    """Streaming permutes sites: global mass per direction unchanged."""
+    f = random_f(jax.random.PRNGKey(11), (4, 5, 6))
+    fs = lbm_stream_ref(f)
+    np.testing.assert_allclose(
+        jnp.sum(fs, axis=(1, 2, 3)), jnp.sum(f, axis=(1, 2, 3)), rtol=1e-6
+    )
+
+
+def test_default_block_x_fits_budget():
+    bx = lbm._default_block_x(64, 64, 64)
+    assert 64 % bx == 0
+    assert 2 * 19 * 4 * 64 * 64 * bx <= 16 * 2**20

@@ -1,0 +1,135 @@
+"""L2 model tests: step composition, CG convergence, HPL update."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import lbm
+from compile.kernels.ref import lbm_collide_ref, lbm_stream_ref, stencil27_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_f(key, shape, eps=0.05):
+    w = jnp.asarray(lbm.W).reshape((lbm.Q, 1, 1, 1))
+    noise = jax.random.uniform(key, (lbm.Q,) + shape, minval=-eps, maxval=eps)
+    return (w * (1.0 + noise)).astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# LBM step
+# ----------------------------------------------------------------------
+
+def test_lbm_step_is_stream_of_collide():
+    f = random_f(jax.random.PRNGKey(0), (4, 4, 4))
+    got = model.lbm_step(f, 1.3)
+    want = lbm_stream_ref(lbm_collide_ref(f, jnp.float32(1.3)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-7)
+
+
+def test_lbm_step_conserves_global_mass_momentum():
+    f = random_f(jax.random.PRNGKey(1), (4, 6, 4))
+    f2 = model.lbm_step(f, 1.1)
+    rho0, mom0 = model.lbm_macroscopics(f)
+    rho1, mom1 = model.lbm_macroscopics(f2)
+    np.testing.assert_allclose(jnp.sum(rho1), jnp.sum(rho0), rtol=1e-5)
+    np.testing.assert_allclose(
+        jnp.sum(mom1, (1, 2, 3)), jnp.sum(mom0, (1, 2, 3)), rtol=1e-3, atol=1e-5
+    )
+
+
+@settings(max_examples=4, deadline=None)
+@given(n=st.sampled_from([2, 4]), seed=st.integers(0, 1000))
+def test_lbm_steps_scan_equals_loop(n, seed):
+    f = random_f(jax.random.PRNGKey(seed), (4, 4, 4))
+    scanned = model.lbm_steps(f, 1.5, n)
+    looped = f
+    for _ in range(n):
+        looped = model.lbm_step(looped, 1.5)
+    np.testing.assert_allclose(scanned, looped, rtol=1e-4, atol=1e-6)
+
+
+def test_lbm_shear_wave_decays():
+    """A sinusoidal shear wave must decay monotonically (viscosity > 0)."""
+    n = 16
+    x = jnp.arange(n)
+    uy = 0.02 * jnp.sin(2 * jnp.pi * x / n)
+    uy = jnp.broadcast_to(uy[:, None, None], (n, 4, 4)).astype(jnp.float32)
+    zero = jnp.zeros_like(uy)
+    f = lbm.equilibrium(jnp.ones_like(uy), zero, uy, zero)
+    amp = []
+    for _ in range(3):
+        _, mom = model.lbm_macroscopics(f)
+        amp.append(float(jnp.max(jnp.abs(mom[1]))))
+        f = model.lbm_steps(f, 1.0, 8)
+    assert amp[0] > amp[1] > amp[2]
+
+
+# ----------------------------------------------------------------------
+# HPL / HPCG
+# ----------------------------------------------------------------------
+
+def test_hpl_update():
+    k = jax.random.split(jax.random.PRNGKey(2), 3)
+    c = jax.random.normal(k[0], (32, 32), jnp.float32)
+    a = jax.random.normal(k[1], (32, 32), jnp.float32)
+    b = jax.random.normal(k[2], (32, 32), jnp.float32)
+    np.testing.assert_allclose(
+        model.hpl_update(c, a, b), c - a @ b, rtol=2e-4, atol=2e-4
+    )
+
+
+def test_spmv_equals_ref():
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 8, 8), jnp.float32)
+    np.testing.assert_allclose(
+        model.spmv(x), stencil27_ref(x), rtol=1e-5, atol=1e-5
+    )
+
+
+def _cg_state(b):
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rz = jnp.sum(r * r)
+    return x, r, p, rz
+
+
+def test_cg_iter_reduces_residual():
+    b = jax.random.normal(jax.random.PRNGKey(4), (8, 8, 8), jnp.float32)
+    x, r, p, rz = _cg_state(b)
+    for _ in range(5):
+        x, r, p, rz_new = model.cg_iter(x, r, p, rz)
+        assert float(rz_new) < float(rz) * 1.0001
+        rz = rz_new
+
+
+def test_cg_converges_on_stencil_system():
+    """CG must actually solve A x = b to high accuracy."""
+    b = jax.random.normal(jax.random.PRNGKey(5), (6, 6, 6), jnp.float32)
+    state = _cg_state(b)
+    x, r, p, rz = model.cg_iters(*state, n_iters=25)
+    res = b - model.spmv(x)
+    rel = float(jnp.linalg.norm(res.ravel()) / jnp.linalg.norm(b.ravel()))
+    assert rel < 1e-4, rel
+
+
+def test_cg_is_noop_after_convergence():
+    """Past convergence rz underflows; guarded divisions must not NaN."""
+    b = jax.random.normal(jax.random.PRNGKey(7), (4, 4, 4), jnp.float32)
+    x, r, p, rz = model.cg_iters(*_cg_state(b), n_iters=120)
+    assert bool(jnp.all(jnp.isfinite(x)))
+    res = b - model.spmv(x)
+    rel = float(jnp.linalg.norm(res.ravel()) / jnp.linalg.norm(b.ravel()))
+    assert rel < 1e-4, rel
+
+
+def test_cg_iters_scan_equals_loop():
+    b = jax.random.normal(jax.random.PRNGKey(6), (6, 6, 6), jnp.float32)
+    scanned = model.cg_iters(*_cg_state(b), n_iters=4)
+    state = _cg_state(b)
+    for _ in range(4):
+        state = model.cg_iter(*state)
+    for s, l in zip(scanned, state):
+        np.testing.assert_allclose(s, l, rtol=1e-3, atol=1e-5)

@@ -1,0 +1,79 @@
+"""Tests for the 2:4 structured-sparsity kernel (paper §2.1.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import sparse
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def test_prune_keeps_exactly_two_of_four():
+    w = rand(jax.random.PRNGKey(0), (16, 8))
+    wp = sparse.prune_2_4(w)
+    groups = np.asarray(wp).reshape(4, 4, 8)
+    nonzero = (groups != 0).sum(axis=1)
+    assert (nonzero <= 2).all()
+    # Generic Gaussian weights: exactly two survive per group.
+    assert (nonzero == 2).all()
+
+
+def test_prune_keeps_the_largest_magnitudes():
+    w = jnp.asarray(
+        [[1.0], [-5.0], [0.1], [3.0]], dtype=jnp.float32
+    )  # K=4, N=1
+    wp = sparse.prune_2_4(w)
+    np.testing.assert_allclose(
+        wp.ravel(), jnp.asarray([0.0, -5.0, 0.0, 3.0]), atol=0
+    )
+
+
+def test_sparsity_ratio_is_half():
+    w = rand(jax.random.PRNGKey(1), (64, 32))
+    assert abs(sparse.sparsity_ratio(w) - 0.5) < 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([8, 16]),
+    k=st.sampled_from([16, 32]),
+    n=st.sampled_from([8, 24]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_matmul_matches_dense_on_pruned(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = rand(k1, (m, k)), rand(k2, (k, n))
+    got = sparse.sparse_matmul(x, w, bm=8, bn=8, bk=8)
+    want = x @ sparse.prune_2_4(w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_pruned_product_approximates_dense_for_spiky_weights():
+    """2:4 pruning is near-lossless when weights are naturally sparse-ish."""
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # two dominant entries per group of 4
+    base = rand(k1, (32, 16)) * 0.01
+    spikes = rand(k2, (8, 16))
+    w = base.at[::4].add(spikes).at[1::4].add(rand(k3, (8, 16)))
+    x = rand(key, (8, 32))
+    dense = x @ w
+    pruned = sparse.sparse_matmul(x, w, bm=8, bn=8, bk=8)
+    rel = float(
+        jnp.linalg.norm(pruned - dense) / jnp.linalg.norm(dense)
+    )
+    assert rel < 0.05, rel
+
+
+def test_ragged_k_rejected():
+    x = jnp.zeros((8, 6), jnp.float32)
+    w = jnp.zeros((6, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        sparse.prune_2_4(w)

@@ -1,0 +1,70 @@
+"""Kernel-vs-oracle tests for the HPCG 27-point stencil."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import stencil
+from compile.kernels.ref import stencil27_dense, stencil27_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nx=st.sampled_from([2, 4, 8]),
+    ny=st.sampled_from([2, 3, 6]),
+    nz=st.sampled_from([2, 5, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stencil_matches_ref(nx, ny, nz, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (nx, ny, nz), jnp.float32)
+    np.testing.assert_allclose(
+        stencil.stencil27(x), stencil27_ref(x), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("block_x", [1, 2, 4, 8])
+def test_blocking_invariance(block_x):
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4, 4), jnp.float32)
+    np.testing.assert_allclose(
+        stencil.stencil27(x, block_x=block_x),
+        stencil27_ref(x),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_matches_dense_matrix():
+    """Cross-check against an explicitly assembled operator matrix."""
+    n = 3
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, n, n), jnp.float32)
+    a = stencil27_dense(n)
+    want = (a @ np.asarray(x).ravel()).reshape((n, n, n))
+    np.testing.assert_allclose(stencil.stencil27(x), want, rtol=1e-5, atol=1e-5)
+
+
+def test_operator_is_symmetric():
+    """<Ax, y> == <x, Ay> — CG requires a symmetric operator."""
+    kx, ky = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(kx, (6, 6, 6), jnp.float32)
+    y = jax.random.normal(ky, (6, 6, 6), jnp.float32)
+    lhs = jnp.sum(stencil.stencil27(x) * y)
+    rhs = jnp.sum(x * stencil.stencil27(y))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+def test_operator_is_positive_definite_sample():
+    for seed in range(5):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (5, 5, 5), jnp.float32)
+        assert jnp.sum(x * stencil.stencil27(x)) > 0
+
+
+def test_constant_field_interior():
+    """On the interior, A @ 1 = 26 - 26 = 0; boundary rows are positive."""
+    x = jnp.ones((6, 6, 6), jnp.float32)
+    y = stencil.stencil27(x)
+    np.testing.assert_allclose(y[2:-2, 2:-2, 2:-2], 0.0, atol=1e-5)
+    assert float(y[0, 0, 0]) > 0.0

@@ -1,0 +1,249 @@
+//! Access and resource allocation (paper §3): LEONARDO's computing time
+//! is granted through peer-reviewed Calls for Proposal — 50% EuroHPC,
+//! 50% CINECA/ISCRA — and consumed as node-hour budgets that the
+//! scheduler accounts against.
+//!
+//! This module models that pipeline: calls, proposals with review
+//! scores, the 50/50 capacity split, awarded projects with node-hour
+//! budgets, and job-level accounting (a job is admitted only while its
+//! project has budget; usage is charged on completion).
+
+use std::collections::BTreeMap;
+
+use crate::metrics::{f1, Table};
+use crate::scheduler::{Job, JobRecord};
+
+/// The two access routes of §3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CallKind {
+    EuroHpc,
+    Iscra,
+}
+
+/// A submitted proposal.
+#[derive(Debug, Clone)]
+pub struct Proposal {
+    pub id: u64,
+    pub call: CallKind,
+    pub title: String,
+    /// Peer-review scientific merit, 0..=10.
+    pub merit: f64,
+    /// Technical suitability for the architecture, 0..=10.
+    pub technical: f64,
+    /// Requested budget, node-hours.
+    pub requested_nh: f64,
+}
+
+impl Proposal {
+    /// Combined score: merit gates, technical weighs (the §3 process:
+    /// peer review for merit plus a technical assessment).
+    pub fn score(&self) -> f64 {
+        if self.technical < 5.0 {
+            0.0 // not suitable for the architecture
+        } else {
+            0.7 * self.merit + 0.3 * self.technical
+        }
+    }
+}
+
+/// An awarded project.
+#[derive(Debug, Clone)]
+pub struct Project {
+    pub proposal: Proposal,
+    pub awarded_nh: f64,
+    pub used_nh: f64,
+}
+
+impl Project {
+    pub fn remaining_nh(&self) -> f64 {
+        (self.awarded_nh - self.used_nh).max(0.0)
+    }
+}
+
+/// One allocation round over a capacity of node-hours.
+#[derive(Debug, Default)]
+pub struct AllocationRound {
+    pub projects: BTreeMap<u64, Project>,
+}
+
+/// Run a call: rank by score, award in order until the call's share of
+/// capacity runs out (half-awards are allowed for the last grantee).
+pub fn run_round(proposals: Vec<Proposal>, capacity_nh: f64) -> AllocationRound {
+    let mut round = AllocationRound::default();
+    // §3: 50% EuroHPC / 50% ISCRA.
+    for (kind, share) in [(CallKind::EuroHpc, 0.5), (CallKind::Iscra, 0.5)] {
+        let mut pool: Vec<&Proposal> = proposals
+            .iter()
+            .filter(|p| p.call == kind && p.score() > 0.0)
+            .collect();
+        pool.sort_by(|a, b| {
+            b.score()
+                .partial_cmp(&a.score())
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let mut left = capacity_nh * share;
+        for p in pool {
+            if left <= 0.0 {
+                break;
+            }
+            let award = p.requested_nh.min(left);
+            left -= award;
+            round.projects.insert(
+                p.id,
+                Project {
+                    proposal: p.clone(),
+                    awarded_nh: award,
+                    used_nh: 0.0,
+                },
+            );
+        }
+    }
+    round
+}
+
+impl AllocationRound {
+    /// Can `project` run a job of this size/length?
+    pub fn admit(&self, project: u64, job: &Job) -> bool {
+        self.projects
+            .get(&project)
+            .map(|p| p.remaining_nh() >= job_cost_nh(job))
+            .unwrap_or(false)
+    }
+
+    /// Charge a completed job to its project.
+    pub fn charge(&mut self, project: u64, job: &Job, record: &JobRecord) {
+        let hours = (record.end_time - record.start_time) / 3600.0;
+        let cost = job.nodes as f64 * hours;
+        if let Some(p) = self.projects.get_mut(&project) {
+            p.used_nh += cost;
+        }
+    }
+
+    pub fn report(&self) -> Table {
+        let mut t = Table::new(
+            "Allocation accounting (ISCRA/EuroHPC, §3)",
+            &["Project", "Call", "Score", "Awarded [kNh]", "Used [kNh]", "Left [kNh]"],
+        );
+        for p in self.projects.values() {
+            t.row(vec![
+                p.proposal.title.clone(),
+                format!("{:?}", p.proposal.call),
+                f1(p.proposal.score()),
+                f1(p.awarded_nh / 1e3),
+                f1(p.used_nh / 1e3),
+                f1(p.remaining_nh() / 1e3),
+            ]);
+        }
+        t
+    }
+
+    pub fn total_awarded(&self) -> f64 {
+        self.projects.values().map(|p| p.awarded_nh).sum()
+    }
+}
+
+/// Estimated cost of a job, node-hours.
+pub fn job_cost_nh(job: &Job) -> f64 {
+    job.nodes as f64 * job.est_seconds / 3600.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::Placement;
+    use crate::scheduler::Partition;
+
+    fn proposal(id: u64, call: CallKind, merit: f64, technical: f64, nh: f64) -> Proposal {
+        Proposal {
+            id,
+            call,
+            title: format!("P{id}"),
+            merit,
+            technical,
+            requested_nh: nh,
+        }
+    }
+
+    fn job(nodes: u32, secs: f64) -> Job {
+        Job {
+            id: 0,
+            partition: Partition::Booster,
+            nodes,
+            est_seconds: secs,
+            run_seconds: secs,
+            submit_time: 0.0,
+            boundness: 1.0,
+        }
+    }
+
+    #[test]
+    fn fifty_fifty_split_respected() {
+        let proposals = vec![
+            proposal(1, CallKind::EuroHpc, 10.0, 10.0, 1e6),
+            proposal(2, CallKind::Iscra, 10.0, 10.0, 1e6),
+        ];
+        let round = run_round(proposals, 1000.0);
+        assert_eq!(round.projects[&1].awarded_nh, 500.0);
+        assert_eq!(round.projects[&2].awarded_nh, 500.0);
+    }
+
+    #[test]
+    fn ranking_by_score_with_merit_weight() {
+        let proposals = vec![
+            proposal(1, CallKind::Iscra, 9.0, 8.0, 400.0),
+            proposal(2, CallKind::Iscra, 6.0, 10.0, 400.0),
+        ];
+        // capacity 500 total -> ISCRA share 250: only the better one fits
+        // fully, second gets the remainder.
+        let round = run_round(proposals, 500.0);
+        assert!((round.projects[&1].awarded_nh - 250.0).abs() < 1e-9);
+        assert!(!round.projects.contains_key(&2));
+    }
+
+    #[test]
+    fn technically_unsuitable_proposals_are_rejected() {
+        let proposals = vec![proposal(1, CallKind::EuroHpc, 10.0, 3.0, 100.0)];
+        let round = run_round(proposals, 1000.0);
+        assert!(round.projects.is_empty());
+    }
+
+    #[test]
+    fn admission_and_charging() {
+        let proposals = vec![proposal(1, CallKind::Iscra, 9.0, 9.0, 100.0)];
+        let mut round = run_round(proposals, 200.0);
+        let j = job(50, 3600.0); // 50 node-hours
+        assert!(round.admit(1, &j));
+        let record = JobRecord {
+            id: 0,
+            start_time: 0.0,
+            end_time: 3600.0,
+            placement: Placement {
+                nodes_per_cell: vec![(0, 50)],
+            },
+            dvfs_scale: 1.0,
+        };
+        round.charge(1, &j, &record);
+        assert!((round.projects[&1].used_nh - 50.0).abs() < 1e-9);
+        assert!(round.admit(1, &j)); // 50 left, job costs 50
+        round.charge(1, &j, &record);
+        assert!(!round.admit(1, &j)); // budget exhausted
+    }
+
+    #[test]
+    fn unknown_project_never_admits() {
+        let round = run_round(vec![], 100.0);
+        assert!(!round.admit(42, &job(1, 60.0)));
+    }
+
+    #[test]
+    fn report_lists_projects() {
+        let proposals = vec![
+            proposal(1, CallKind::EuroHpc, 8.0, 9.0, 50.0),
+            proposal(2, CallKind::Iscra, 7.0, 9.0, 50.0),
+        ];
+        let round = run_round(proposals, 1000.0);
+        assert_eq!(round.report().rows.len(), 2);
+        assert!((round.total_awarded() - 100.0).abs() < 1e-9);
+    }
+}

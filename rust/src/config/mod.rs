@@ -1,0 +1,319 @@
+//! Machine configuration: the cell/rack/blade/node inventory of Table 1
+//! and machine presets (LEONARDO, plus the Marconi100 comparator used by
+//! the Fig 5 weak-scaling comparison).
+//!
+//! A [`MachineConfig`] is the single source of truth the other subsystems
+//! consume: [`crate::topology`] wires its cells, [`crate::scheduler`]
+//! allocates its nodes, [`crate::power`] integrates over its blades.
+
+
+
+use crate::hardware::NodeSpec;
+
+/// The kind of compute hosted by a cell (colours of Fig 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    /// GPU-accelerated Booster cells (green in Fig 4).
+    Booster,
+    /// CPU Data-Centric cells (blue).
+    DataCentric,
+    /// The mixed Booster/DC cell (cell 22 in LEONARDO).
+    Hybrid,
+    /// Storage + service cell (pink; the twenty-third cell).
+    Io,
+}
+
+/// One group of identical racks inside a cell.
+#[derive(Debug, Clone)]
+pub struct RackGroup {
+    /// Racks in this group.
+    pub racks: u32,
+    /// Blades per rack.
+    pub blades_per_rack: u32,
+    /// Nodes per blade (1 for the GPU blade, 3 for the DC X2140).
+    pub nodes_per_blade: u32,
+    /// Node hardware for this group.
+    pub node: NodeSpec,
+}
+
+impl RackGroup {
+    pub fn nodes(&self) -> u32 {
+        self.racks * self.blades_per_rack * self.nodes_per_blade
+    }
+
+    pub fn gpu_nodes(&self) -> u32 {
+        if self.node.gpus > 0 {
+            self.nodes()
+        } else {
+            0
+        }
+    }
+
+    pub fn cpu_nodes(&self) -> u32 {
+        if self.node.gpus == 0 {
+            self.nodes()
+        } else {
+            0
+        }
+    }
+}
+
+/// One dragonfly+ cell.
+#[derive(Debug, Clone)]
+pub struct CellConfig {
+    pub kind: CellKind,
+    pub groups: Vec<RackGroup>,
+}
+
+impl CellConfig {
+    pub fn nodes(&self) -> u32 {
+        self.groups.iter().map(RackGroup::nodes).sum()
+    }
+
+    pub fn racks(&self) -> u32 {
+        self.groups.iter().map(|g| g.racks).sum()
+    }
+}
+
+/// A whole machine.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub name: String,
+    pub cells: Vec<CellConfig>,
+    /// Facility IT power envelope, MW (§2.6: 10 MW current step).
+    pub facility_power_mw: f64,
+    /// Power usage effectiveness (§2.6: 1.1 with warm-water DLC).
+    pub pue: f64,
+    /// Above-leaf fabric oversubscription (1.0 = non-blocking dragonfly+;
+    /// Marconi100's island fat-tree prunes ~4x across islands).
+    pub network_oversubscription: f64,
+}
+
+impl MachineConfig {
+    /// The LEONARDO preset: 19 Booster cells (6 racks x 30 single-node GPU
+    /// blades), 2 DC cells (8 racks x 26 three-node blades), one Hybrid
+    /// cell (2 Booster-style racks of 18 blades + 6 DC-style racks of 16
+    /// blades) and the I/O cell — Table 1 exactly.
+    pub fn leonardo() -> Self {
+        let mut cells = Vec::new();
+        for _ in 0..19 {
+            cells.push(CellConfig {
+                kind: CellKind::Booster,
+                groups: vec![RackGroup {
+                    racks: 6,
+                    blades_per_rack: 30,
+                    nodes_per_blade: 1,
+                    node: NodeSpec::davinci(),
+                }],
+            });
+        }
+        for _ in 0..2 {
+            cells.push(CellConfig {
+                kind: CellKind::DataCentric,
+                groups: vec![RackGroup {
+                    racks: 8,
+                    blades_per_rack: 26,
+                    nodes_per_blade: 3,
+                    node: NodeSpec::dc_node(),
+                }],
+            });
+        }
+        cells.push(CellConfig {
+            kind: CellKind::Hybrid,
+            groups: vec![
+                RackGroup {
+                    racks: 2,
+                    blades_per_rack: 18,
+                    nodes_per_blade: 1,
+                    node: NodeSpec::davinci(),
+                },
+                RackGroup {
+                    racks: 6,
+                    blades_per_rack: 16,
+                    nodes_per_blade: 3,
+                    node: NodeSpec::dc_node(),
+                },
+            ],
+        });
+        cells.push(CellConfig {
+            kind: CellKind::Io,
+            groups: vec![],
+        });
+        MachineConfig {
+            name: "LEONARDO".into(),
+            cells,
+            facility_power_mw: 10.0,
+            pue: 1.1,
+            network_oversubscription: 1.0,
+        }
+    }
+
+    /// Marconi100-like comparator for Fig 5: ~980 nodes of 4 x V100 on a
+    /// fat-tree; modelled as 7 cells of 140 nodes so the same dragonfly+
+    /// machinery can wire it (the comparison is about node technology and
+    /// scaling shape, which this preserves — see DESIGN.md substitutions).
+    pub fn marconi100() -> Self {
+        let cells = (0..7)
+            .map(|_| CellConfig {
+                kind: CellKind::Booster,
+                groups: vec![RackGroup {
+                    racks: 5,
+                    blades_per_rack: 28,
+                    nodes_per_blade: 1,
+                    node: NodeSpec::marconi100_node(),
+                }],
+            })
+            .collect();
+        MachineConfig {
+            name: "Marconi100".into(),
+            cells,
+            facility_power_mw: 2.0,
+            pue: 1.4,
+            network_oversubscription: 4.0,
+        }
+    }
+
+    pub fn total_nodes(&self) -> u32 {
+        self.cells.iter().map(CellConfig::nodes).sum()
+    }
+
+    pub fn gpu_nodes(&self) -> u32 {
+        self.cells
+            .iter()
+            .flat_map(|c| &c.groups)
+            .map(RackGroup::gpu_nodes)
+            .sum()
+    }
+
+    pub fn cpu_nodes(&self) -> u32 {
+        self.cells
+            .iter()
+            .flat_map(|c| &c.groups)
+            .map(RackGroup::cpu_nodes)
+            .sum()
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.cells
+            .iter()
+            .flat_map(|c| &c.groups)
+            .map(|g| g.nodes() * g.node.gpus)
+            .sum()
+    }
+
+    pub fn compute_racks(&self) -> u32 {
+        self.cells.iter().map(CellConfig::racks).sum()
+    }
+
+    /// Cells hosting compute (excludes the I/O cell).
+    pub fn compute_cells(&self) -> usize {
+        self.cells
+            .iter()
+            .filter(|c| c.kind != CellKind::Io)
+            .count()
+    }
+
+    /// The first GPU node spec (None on a CPU-only machine).
+    pub fn gpu_node_spec(&self) -> Option<&NodeSpec> {
+        self.cells
+            .iter()
+            .flat_map(|c| &c.groups)
+            .find(|g| g.node.gpus > 0)
+            .map(|g| &g.node)
+    }
+
+    /// Table 1 as rows: (type, cells, racks, cpu nodes, gpu nodes).
+    pub fn table1(&self) -> Vec<(String, u32, u32, u32, u32)> {
+        use std::collections::BTreeMap;
+        let mut agg: BTreeMap<&str, (u32, u32, u32, u32)> = BTreeMap::new();
+        for c in &self.cells {
+            let name = match c.kind {
+                CellKind::Booster => "Booster",
+                CellKind::DataCentric => "DC",
+                CellKind::Hybrid => "Hybrid",
+                CellKind::Io => continue,
+            };
+            let e = agg.entry(name).or_default();
+            e.0 += 1;
+            e.1 += c.racks();
+            e.2 += c.groups.iter().map(RackGroup::cpu_nodes).sum::<u32>();
+            e.3 += c.groups.iter().map(RackGroup::gpu_nodes).sum::<u32>();
+        }
+        agg.into_iter()
+            .map(|(k, (c, r, cn, gn))| (k.to_string(), c, r, cn, gn))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_booster_counts() {
+        let m = MachineConfig::leonardo();
+        let t = m.table1();
+        let booster = t.iter().find(|r| r.0 == "Booster").unwrap();
+        assert_eq!((booster.1, booster.2, booster.4), (19, 114, 3420));
+        assert_eq!(booster.3, 0);
+    }
+
+    #[test]
+    fn table1_dc_counts() {
+        let m = MachineConfig::leonardo();
+        let t = m.table1();
+        let dc = t.iter().find(|r| r.0 == "DC").unwrap();
+        assert_eq!((dc.1, dc.2, dc.3, dc.4), (2, 16, 1248, 0));
+    }
+
+    #[test]
+    fn table1_hybrid_counts() {
+        let m = MachineConfig::leonardo();
+        let t = m.table1();
+        let h = t.iter().find(|r| r.0 == "Hybrid").unwrap();
+        assert_eq!((h.1, h.2, h.3, h.4), (1, 8, 288, 36));
+    }
+
+    #[test]
+    fn table1_totals() {
+        let m = MachineConfig::leonardo();
+        assert_eq!(m.compute_cells(), 22);
+        assert_eq!(m.compute_racks(), 138);
+        assert_eq!(m.cpu_nodes(), 1536);
+        assert_eq!(m.gpu_nodes(), 3456);
+        assert_eq!(m.total_nodes(), 1536 + 3456);
+    }
+
+    #[test]
+    fn leonardo_has_13824_gpus() {
+        // §2.1: "about 14k GPUs" — exactly 3456 x 4.
+        assert_eq!(MachineConfig::leonardo().total_gpus(), 13_824);
+    }
+
+    #[test]
+    fn leonardo_has_23_cells_including_io() {
+        assert_eq!(MachineConfig::leonardo().cells.len(), 23);
+    }
+
+    #[test]
+    fn facility_envelope() {
+        let m = MachineConfig::leonardo();
+        assert_eq!(m.facility_power_mw, 10.0);
+        assert!((m.pue - 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn marconi_preset_is_v100() {
+        let m = MachineConfig::marconi100();
+        assert_eq!(m.gpu_node_spec().unwrap().gpu.as_ref().unwrap().name, "Volta V100");
+        assert_eq!(m.gpu_nodes(), 980);
+    }
+
+    #[test]
+    fn config_clones_consistently() {
+        let m = MachineConfig::leonardo();
+        let back = m.clone();
+        assert_eq!(back.total_nodes(), m.total_nodes());
+        assert_eq!(back.total_gpus(), m.total_gpus());
+    }
+}

@@ -1,0 +1,656 @@
+//! The campaign coordinator: composes config, topology, network, storage,
+//! scheduler, power, performance models, the LBM driver and the PJRT
+//! runtime to regenerate every table and figure of the paper.
+//!
+//! Each `table*`/`fig*` method returns a [`Table`] whose rows mirror the
+//! paper's layout, so the CLI, the examples and the criterion benches all
+//! print the same artifact the paper prints.
+
+use crate::config::MachineConfig;
+use crate::hardware::{GpuSpec, NodeSpec, Precision};
+use crate::lbm::{LbmConfig, LbmDriver, TABLE7_NODES};
+use crate::metrics::{f1, f2, sig3, Table};
+use crate::network::{Network, Placement};
+use crate::perfmodel::{Calibration, HpcgModel, HplModel};
+use crate::power::{PowerModel, Utilization};
+use crate::runtime::{literal_f32, scalar_f32, Engine};
+use crate::scheduler::{Partition, Scheduler};
+use crate::storage::{io500, StorageSystem};
+use crate::topology::{Routing, Topology};
+use crate::workloads::AppBenchmark;
+use crate::Result;
+
+/// Documented host-roofline estimates used to project measured kernel
+/// rates onto device rooflines (see DESIGN.md §Hardware-Adaptation and
+/// EXPERIMENTS.md §Calibration): a single CPU core running the interpret
+/// -mode kernel sustains at most ~20 GB/s of memory traffic and
+/// ~50 GFLOPS f32.
+pub const HOST_BW_GBS: f64 = 20.0;
+pub const HOST_GFLOPS: f64 = 50.0;
+
+/// The assembled twin of one machine.
+pub struct Twin {
+    pub cfg: MachineConfig,
+    pub topo: Topology,
+    pub net: Network,
+    pub power: PowerModel,
+}
+
+impl Twin {
+    pub fn new(cfg: MachineConfig) -> Self {
+        let topo = Topology::build(&cfg);
+        let node = cfg
+            .gpu_node_spec()
+            .cloned()
+            .unwrap_or_else(NodeSpec::davinci);
+        let mut net = Network::new(topo.clone(), node.injection_gbps());
+        net.oversubscription = cfg.network_oversubscription;
+        let power = PowerModel::new(node, cfg.pue);
+        Twin {
+            cfg,
+            topo,
+            net,
+            power,
+        }
+    }
+
+    pub fn leonardo() -> Self {
+        Self::new(MachineConfig::leonardo())
+    }
+
+    pub fn marconi100() -> Self {
+        Self::new(MachineConfig::marconi100())
+    }
+
+    /// Topology-aware placement for an `n`-node Booster job on an
+    /// otherwise idle machine.
+    pub fn place(&self, n: u32) -> Placement {
+        let mut s = Scheduler::new(&self.cfg);
+        s.place(Partition::Booster, n)
+            .unwrap_or_else(|| panic!("{} nodes do not fit", n))
+    }
+
+    // ------------------------------------------------------------------
+    // Tables
+    // ------------------------------------------------------------------
+
+    /// Table 1: compute partitions racks.
+    pub fn table1(&self) -> Table {
+        let mut t = Table::new(
+            "Table 1 — Compute partition racks",
+            &["Type", "Cells", "Racks", "CPU nodes", "GPU nodes"],
+        );
+        for (name, cells, racks, cpu, gpu) in self.cfg.table1() {
+            t.row(vec![
+                name,
+                cells.to_string(),
+                racks.to_string(),
+                cpu.to_string(),
+                gpu.to_string(),
+            ]);
+        }
+        t.row(vec![
+            "Total".into(),
+            self.cfg.compute_cells().to_string(),
+            self.cfg.compute_racks().to_string(),
+            self.cfg.cpu_nodes().to_string(),
+            self.cfg.gpu_nodes().to_string(),
+        ]);
+        t
+    }
+
+    /// Table 2: GPU specifications and peak performance (derived).
+    pub fn table2(&self) -> Table {
+        let gpus = [
+            GpuSpec::a100_custom(),
+            GpuSpec::a100_standard(),
+            GpuSpec::v100(),
+        ];
+        let mut t = Table::new(
+            "Table 2 — GPU chips specifications and peak performance",
+            &["Metric", "A100 (custom)", "A100", "V100"],
+        );
+        let fmt = |v: Option<f64>, scale: f64| {
+            v.map(|x| sig3(x / scale)).unwrap_or_else(|| "n.a.".into())
+        };
+        let rows: Vec<(&str, Box<dyn Fn(&GpuSpec) -> String>)> = vec![
+            (
+                "FP64 [teraFLOPS]",
+                Box::new(|g: &GpuSpec| fmt(g.peak_flops(Precision::Fp64), 1e12)),
+            ),
+            (
+                "FP32 [teraFLOPS]",
+                Box::new(|g: &GpuSpec| fmt(g.peak_flops(Precision::Fp32), 1e12)),
+            ),
+            (
+                "FP64 TC [teraFLOPS]",
+                Box::new(|g: &GpuSpec| {
+                    fmt(g.peak_flops(Precision::Fp64TensorCore), 1e12)
+                }),
+            ),
+            (
+                "TF32 TC [teraFLOPS]",
+                Box::new(|g: &GpuSpec| {
+                    fmt(g.peak_flops(Precision::Tf32TensorCore), 1e12)
+                }),
+            ),
+            (
+                "FP16 TC [teraFLOPS]",
+                Box::new(|g: &GpuSpec| {
+                    fmt(g.peak_flops(Precision::Fp16TensorCore), 1e12)
+                }),
+            ),
+            (
+                "INT8 TC [teraOPS]",
+                Box::new(|g: &GpuSpec| {
+                    fmt(g.peak_flops(Precision::Int8TensorCore), 1e12)
+                }),
+            ),
+            (
+                "INT4 TC [teraOPS]",
+                Box::new(|g: &GpuSpec| {
+                    fmt(g.peak_flops(Precision::Int4TensorCore), 1e12)
+                }),
+            ),
+            ("SM [#]", Box::new(|g: &GpuSpec| g.sm_count.to_string())),
+            (
+                "CUDA FP64 core [#]",
+                Box::new(|g: &GpuSpec| g.fp64_cores().to_string()),
+            ),
+            (
+                "CUDA FP32 core [#]",
+                Box::new(|g: &GpuSpec| g.fp32_cores().to_string()),
+            ),
+            (
+                "Tensor core [#]",
+                Box::new(|g: &GpuSpec| g.tensor_cores().to_string()),
+            ),
+            (
+                "Max Clock [MHz]",
+                Box::new(|g: &GpuSpec| g.boost_clock_mhz.to_string()),
+            ),
+            (
+                "L2 Cache [MB]",
+                Box::new(|g: &GpuSpec| g.l2_cache_mib.to_string()),
+            ),
+            (
+                "Memory [GB]",
+                Box::new(|g: &GpuSpec| g.memory_gib.to_string()),
+            ),
+            (
+                "Memory BW [GB/s]",
+                Box::new(|g: &GpuSpec| format!("{:.0}", g.memory_bw_gbs)),
+            ),
+            ("TDP [W]", Box::new(|g: &GpuSpec| format!("{:.0}", g.tdp_w))),
+        ];
+        for (name, f) in rows {
+            let mut row = vec![name.to_string()];
+            for g in &gpus {
+                row.push(f(g));
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    /// Table 3: filesystem organisation and specifications.
+    pub fn table3(&self) -> Table {
+        let sys = StorageSystem::leonardo();
+        let mut t = Table::new(
+            "Table 3 — Filesystem organization and specifications",
+            &[
+                "Work area",
+                "ES7990X #",
+                "ES400NVX2 #",
+                "ES400NV #",
+                "NetSize PiB",
+                "Bandwidth GB/s",
+            ],
+        );
+        for ns in &sys.namespaces {
+            let count = |name: &str| -> u32 {
+                ns.data_appliances
+                    .iter()
+                    .chain(ns.md_appliances.iter())
+                    .filter(|(a, _)| a.name == name)
+                    .map(|(_, n)| *n)
+                    .sum()
+            };
+            t.row(vec![
+                ns.mount.to_string(),
+                count("ES7990X").to_string(),
+                count("ES400NVX2").to_string(),
+                count("ES400NV").to_string(),
+                f1(ns.net_pib()),
+                format!("{:.0}", ns.nominal_bw_gbs),
+            ]);
+        }
+        t
+    }
+
+    /// Table 4: HPL + HPCG at the TOP500 submission scale, plus Green500.
+    pub fn table4(&self, calib: Option<&Calibration>) -> Table {
+        let node = self.power.node.clone();
+        let hpl = HplModel::new(node.clone());
+        let hpcg = HpcgModel::new(node);
+        let nodes = 3300u32;
+        let rmax = hpl.rmax(nodes);
+        let power_mw = self.power.fleet_power_mw(nodes, Utilization::hpl());
+        let green = self.power.gflops_per_watt(rmax, nodes, Utilization::hpl());
+        let mut t = Table::new(
+            "Table 4 — LEONARDO at TOP500 (modelled vs paper)",
+            &["Benchmark", "Twin", "Paper", "Unit"],
+        );
+        t.row(vec![
+            "HPL Rmax".into(),
+            f1(rmax / 1e15),
+            "238.7".into(),
+            "petaFLOPS".into(),
+        ]);
+        t.row(vec![
+            "HPL Rpeak (3300 nodes)".into(),
+            f1(hpl.rpeak(nodes) / 1e15),
+            "304.5 (full)".into(),
+            "petaFLOPS".into(),
+        ]);
+        t.row(vec![
+            "HPL efficiency".into(),
+            f2(hpl.efficiency(nodes)),
+            "0.78".into(),
+            "Rmax/Rpeak".into(),
+        ]);
+        t.row(vec![
+            "HPCG".into(),
+            f2(hpcg.rate(nodes) / 1e15),
+            "3.11".into(),
+            "petaFLOPS".into(),
+        ]);
+        t.row(vec![
+            "Power".into(),
+            f1(power_mw),
+            "7.4".into(),
+            "MW".into(),
+        ]);
+        t.row(vec![
+            "Green500".into(),
+            f1(green),
+            "32.2".into(),
+            "GFLOPS/W".into(),
+        ]);
+        if let Some(c) = calib {
+            t.row(vec![
+                "host DGEMM (measured)".into(),
+                f1(c.dgemm_gflops),
+                "-".into(),
+                "GFLOPS".into(),
+            ]);
+        }
+        t
+    }
+
+    /// Table 5: IO500.
+    pub fn table5(&self) -> Table {
+        let r = io500::run_leonardo();
+        let mut t = Table::new(
+            "Table 5 — IO500 (twin vs ISC23 submission)",
+            &["Phase", "Twin", "Paper", "Unit"],
+        );
+        let paper: &[(&str, &str)] = &[
+            ("ior-easy-write", "1533"),
+            ("ior-easy-read", "1883"),
+        ];
+        for p in &r.phases {
+            let ref_v = paper
+                .iter()
+                .find(|(n, _)| *n == p.name)
+                .map(|(_, v)| v.to_string())
+                .unwrap_or_else(|| "-".into());
+            t.row(vec![
+                p.name.to_string(),
+                f1(p.value),
+                ref_v,
+                if p.is_bandwidth { "GiB/s" } else { "kIOP/s" }.into(),
+            ]);
+        }
+        t.row(vec!["BW score".into(), f1(r.bw_gibs), "807".into(), "GiB/s".into()]);
+        t.row(vec![
+            "MD score".into(),
+            f1(r.md_kiops),
+            "522".into(),
+            "kIOP/s".into(),
+        ]);
+        t.row(vec!["IO500 score".into(), f1(r.score), "649".into(), "".into()]);
+        t
+    }
+
+    /// Table 6: application benchmarks.
+    pub fn table6(&self) -> Table {
+        let mut t = Table::new(
+            "Table 6 — Application benchmarks (twin vs paper)",
+            &[
+                "Application",
+                "Domain",
+                "Nodes",
+                "TTS twin [s]",
+                "TTS paper [s]",
+                "ETS twin [kWh]",
+                "ETS paper [kWh]",
+            ],
+        );
+        for app in AppBenchmark::table6() {
+            let placement = self.place(app.ref_nodes);
+            let tts = app.tts(app.ref_nodes, &self.net, &placement);
+            let ets = app.ets(app.ref_nodes, tts, &self.power);
+            t.row(vec![
+                app.name.into(),
+                app.domain.into(),
+                app.ref_nodes.to_string(),
+                format!("{tts:.0}"),
+                format!("{:.0}", app.ref_tts),
+                f2(ets),
+                f2(app.ref_ets),
+            ]);
+        }
+        t
+    }
+
+    /// Table 7: LBM weak scaling.
+    pub fn table7(&self, calib: Option<&Calibration>) -> Table {
+        let node = self.cfg.gpu_node_spec().expect("GPU machine").clone();
+        let cfg = LbmConfig {
+            per_gpu_lups: calib.and_then(|c| self.project_lbm_lups(c)),
+            ..LbmConfig::default()
+        };
+        let driver = LbmDriver::new(&node, &self.net, cfg);
+        let pts = driver.sweep(TABLE7_NODES, |n| self.place(n));
+        let paper_lups = [
+            0.0476, 0.192, 1.38, 2.76, 5.24, 10.8, 21.6, 43.3, 51.2,
+        ];
+        let paper_eff = [1.00, 1.01, 0.91, 0.91, 0.86, 0.89, 0.89, 0.89, 0.88];
+        let mut t = Table::new(
+            "Table 7 — LBM weak scaling (twin vs paper)",
+            &[
+                "Nodes",
+                "GPUs",
+                "TLUPS twin",
+                "TLUPS paper",
+                "Eff twin",
+                "Eff paper",
+            ],
+        );
+        for (i, p) in pts.iter().enumerate() {
+            t.row(vec![
+                p.nodes.to_string(),
+                p.gpus.to_string(),
+                sig3(p.lups / 1e12),
+                sig3(paper_lups[i]),
+                f2(p.efficiency),
+                f2(paper_eff[i]),
+            ]);
+        }
+        t
+    }
+
+    /// Fig 5: weak-scaling efficiency, LEONARDO vs Marconi100.
+    pub fn fig5(&self) -> Table {
+        let leo_pts = {
+            let node = self.cfg.gpu_node_spec().unwrap().clone();
+            let d = LbmDriver::new(&node, &self.net, LbmConfig::default());
+            d.sweep(TABLE7_NODES, |n| self.place(n))
+        };
+        let marconi = Twin::marconi100();
+        let m_nodes: Vec<u32> = TABLE7_NODES
+            .iter()
+            .copied()
+            .filter(|&n| n <= marconi.cfg.gpu_nodes())
+            .collect();
+        let m_pts = {
+            let node = marconi.cfg.gpu_node_spec().unwrap().clone();
+            let d = LbmDriver::new(&node, &marconi.net, LbmConfig::default());
+            d.sweep(&m_nodes, |n| marconi.place(n))
+        };
+        let mut t = Table::new(
+            "Fig 5 — LBM weak-scaling efficiency comparison",
+            &["GPUs", "LEONARDO eff", "Marconi100 eff"],
+        );
+        for (i, p) in leo_pts.iter().enumerate() {
+            let m = m_pts
+                .get(i)
+                .map(|m| f2(m.efficiency))
+                .unwrap_or_else(|| "-".into());
+            t.row(vec![p.gpus.to_string(), f2(p.efficiency), m]);
+        }
+        t
+    }
+
+    /// §2.2 latency budget table.
+    pub fn latency_table(&self) -> Table {
+        let mut t = Table::new(
+            "§2.2 — Fabric latency budget",
+            &["Path", "Switch hops", "Latency us"],
+        );
+        let total = self.topo.total_nodes();
+        let cases: &[(&str, u32, u32, Routing)] = &[
+            ("same leaf", 0, 18, Routing::Minimal),
+            ("same cell", 0, 1, Routing::Minimal),
+            ("cross cell minimal", 0, total - 1, Routing::Minimal),
+            ("cross cell valiant (max)", 0, total - 1, Routing::Valiant),
+        ];
+        for (name, a, b, policy) in cases {
+            let r = self.topo.route(*a, *b, *policy);
+            t.row(vec![
+                name.to_string(),
+                r.switch_hops.to_string(),
+                format!("{:.2}", r.latency_ns() / 1000.0),
+            ]);
+        }
+        t
+    }
+
+    // ------------------------------------------------------------------
+    // Calibration: real kernels through PJRT
+    // ------------------------------------------------------------------
+
+    /// Run the AOT kernels and measure host rates.
+    pub fn calibrate(&self, engine: &Engine) -> Result<Calibration> {
+        // DGEMM 512: 2*512^3 flops per call.
+        let n = 512usize;
+        let a = literal_f32(&vec![1.0f32; n * n], &[n, n])?;
+        let b = literal_f32(&vec![0.5f32; n * n], &[n, n])?;
+        let t = engine.time_execute("dgemm_512", &[a, b], 3)?;
+        let dgemm_gflops = 2.0 * (n as f64).powi(3) / t / 1e9;
+
+        // LBM step on 32^3 (scan-of-8 artifact amortises dispatch).
+        let f = equilibrium_f32(32);
+        let omega = literal_f32(&[1.2f32], &[1])?;
+        let lat = literal_f32(&f, &[19, 32, 32, 32])?;
+        let t = engine.time_execute("lbm_steps8_32", &[lat, omega], 2)?;
+        let lbm_mlups = 8.0 * 32f64.powi(3) / t / 1e6;
+
+        // CG iteration on 64^3.
+        let g = 64usize;
+        let zeros = vec![0f32; g * g * g];
+        let ones = vec![1f32; g * g * g];
+        let x = literal_f32(&zeros, &[g, g, g])?;
+        let r = literal_f32(&ones, &[g, g, g])?;
+        let p = literal_f32(&ones, &[g, g, g])?;
+        let rz = scalar_f32((g * g * g) as f32)?;
+        let cg_iter_seconds = engine.time_execute("cg_iter_64", &[x, r, p, rz], 3)?;
+
+        Ok(Calibration {
+            dgemm_gflops,
+            lbm_mlups,
+            cg_iter_seconds,
+        })
+    }
+
+    /// Project the measured host LBM rate onto the A100 HBM roofline:
+    /// rate_gpu = rate_host x (bw_gpu x eff_gpu) / bw_host, capped at the
+    /// device model rate. Returns None when the measurement is missing.
+    pub fn project_lbm_lups(&self, c: &Calibration) -> Option<f64> {
+        if c.lbm_mlups <= 0.0 {
+            return None;
+        }
+        let gpu = self.cfg.gpu_node_spec()?.gpu.as_ref()?;
+        let device_model = gpu.memory_bw_gbs * 1e9
+            * crate::lbm::lbm_hbm_efficiency(gpu.name)
+            / crate::lbm::BYTES_PER_SITE;
+        let host_rate = c.lbm_mlups * 1e6;
+        let projected = host_rate * (gpu.memory_bw_gbs / HOST_BW_GBS);
+        Some(projected.min(device_model))
+    }
+
+    /// Calibration report table.
+    pub fn calibration_table(&self, c: &Calibration) -> Table {
+        let mut t = Table::new(
+            "Calibration — measured kernel rates (PJRT CPU host)",
+            &["Kernel", "Measured", "Unit", "Projected (A100)", "Unit"],
+        );
+        t.row(vec![
+            "blocked DGEMM 512".into(),
+            f1(c.dgemm_gflops),
+            "GFLOPS".into(),
+            "-".into(),
+            "".into(),
+        ]);
+        let proj = self
+            .project_lbm_lups(c)
+            .map(|v| f2(v / 1e9))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            "LBM D3Q19 step".into(),
+            f2(c.lbm_mlups),
+            "MLUPS".into(),
+            proj,
+            "GLUPS/GPU".into(),
+        ]);
+        t.row(vec![
+            "CG iteration 64^3".into(),
+            format!("{:.2}", c.cg_iter_seconds * 1e3),
+            "ms".into(),
+            "-".into(),
+            "".into(),
+        ]);
+        t
+    }
+}
+
+/// Equilibrium D3Q19 distributions for a quiescent fluid on an n^3 grid
+/// (weights w_i tiled over the lattice) — the standard LBM initial state.
+pub fn equilibrium_f32(n: usize) -> Vec<f32> {
+    const W: [f32; 19] = [
+        1.0 / 3.0,
+        1.0 / 18.0,
+        1.0 / 18.0,
+        1.0 / 18.0,
+        1.0 / 18.0,
+        1.0 / 18.0,
+        1.0 / 18.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+        1.0 / 36.0,
+    ];
+    let mut out = Vec::with_capacity(19 * n * n * n);
+    for w in W {
+        out.extend(std::iter::repeat(w).take(n * n * n));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape() {
+        let t = Twin::leonardo().table1();
+        assert_eq!(t.rows.len(), 4); // Booster, DC, Hybrid, Total
+        let total = t.rows.last().unwrap();
+        assert_eq!(total[3], "1536");
+        assert_eq!(total[4], "3456");
+    }
+
+    #[test]
+    fn table2_has_na_for_volta_tc() {
+        let t = Twin::leonardo().table2();
+        let tf32 = t
+            .rows
+            .iter()
+            .find(|r| r[0].starts_with("TF32"))
+            .unwrap();
+        assert_eq!(tf32[3], "n.a.");
+        assert_eq!(tf32[1], "177"); // 124 SM x 1024 x 1.395 GHz / 1e12
+    }
+
+    #[test]
+    fn table4_hits_paper_numbers() {
+        let t = Twin::leonardo().table4(None);
+        let rmax: f64 = t.rows[0][1].parse().unwrap();
+        assert!((rmax - 238.7).abs() < 5.0, "{rmax}");
+        let hpcg: f64 = t.rows[3][1].parse().unwrap();
+        assert!((hpcg - 3.11).abs() < 0.1, "{hpcg}");
+    }
+
+    #[test]
+    fn table5_score_column() {
+        let t = Twin::leonardo().table5();
+        let score: f64 = t.rows.last().unwrap()[1].parse().unwrap();
+        assert!((score - 649.0).abs() / 649.0 < 0.10, "{score}");
+    }
+
+    #[test]
+    fn table6_four_apps() {
+        let t = Twin::leonardo().table6();
+        assert_eq!(t.rows.len(), 4);
+    }
+
+    #[test]
+    fn table7_nine_points() {
+        let t = Twin::leonardo().table7(None);
+        assert_eq!(t.rows.len(), 9);
+        assert_eq!(t.rows[8][1], "9900");
+    }
+
+    #[test]
+    fn fig5_marconi_series_is_shorter_and_worse_at_scale() {
+        let t = Twin::leonardo().fig5();
+        assert_eq!(t.rows.len(), 9);
+        // Marconi runs out of nodes before 1024 (980 max).
+        assert_eq!(t.rows[8][2], "-");
+        // Where both exist at scale, LEONARDO's efficiency is >= Marconi's.
+        let leo: f64 = t.rows[5][1].parse().unwrap();
+        let mar: f64 = t.rows[5][2].parse().unwrap();
+        assert!(leo >= mar - 0.02, "{leo} vs {mar}");
+    }
+
+    #[test]
+    fn latency_table_max_under_3us() {
+        let t = Twin::leonardo().latency_table();
+        let max: f64 = t.rows.last().unwrap()[2].parse().unwrap();
+        assert!(max <= 3.0, "{max}");
+    }
+
+    #[test]
+    fn equilibrium_sums_to_rho_one() {
+        let f = equilibrium_f32(4);
+        let sites = 64;
+        let mut rho = vec![0f32; sites];
+        for q in 0..19 {
+            for s in 0..sites {
+                rho[s] += f[q * sites + s];
+            }
+        }
+        for r in rho {
+            assert!((r - 1.0).abs() < 1e-6);
+        }
+    }
+}

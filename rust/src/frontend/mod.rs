@@ -1,0 +1,217 @@
+//! Frontend and service partitions (paper §2.4, Appendix B): 32 frontend
+//! servers (16 login + 16 graphical/visualization) and the 11 Operational
+//! Management Nodes, plus a login load-balancer and a session model for
+//! the typical frontend operations the paper lists (development,
+//! compilation, data management, submission, post-processing).
+
+use crate::hardware::CpuSpec;
+use crate::metrics::Table;
+
+/// Role of a frontend/service node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrontendRole {
+    /// Login node: 6 TB HDD RAID-1 (BullSequana X430-E6).
+    Login,
+    /// Visualization node: 6.4 TB NVMe + 2 x Quadro RTX8000 (X450-E6).
+    Graphical,
+    /// Operational Management Node master (EPYC Rome, 128 GiB).
+    OmnMaster,
+    /// OMN worker (512 GiB, bulk storage).
+    OmnWorker,
+}
+
+/// A frontend/service server.
+#[derive(Debug, Clone)]
+pub struct ServiceNode {
+    pub role: FrontendRole,
+    pub cpu: CpuSpec,
+    pub cpu_sockets: u32,
+    pub local_storage_tb: f64,
+    pub gpus: u32,
+    /// Concurrent interactive sessions the node is sized for.
+    pub session_capacity: u32,
+}
+
+/// The whole frontend + service complement of §2.4 / Appendix B.
+pub fn leonardo_service_fleet() -> Vec<ServiceNode> {
+    let mut fleet = Vec::new();
+    for _ in 0..16 {
+        fleet.push(ServiceNode {
+            role: FrontendRole::Login,
+            cpu: CpuSpec::icelake_8358(),
+            cpu_sockets: 2,
+            local_storage_tb: 6.0,
+            gpus: 0,
+            session_capacity: 64,
+        });
+    }
+    for _ in 0..16 {
+        fleet.push(ServiceNode {
+            role: FrontendRole::Graphical,
+            cpu: CpuSpec::icelake_8358(),
+            cpu_sockets: 2,
+            local_storage_tb: 6.4,
+            gpus: 2, // Quadro RTX8000 48 GB each
+            session_capacity: 8,
+        });
+    }
+    for _ in 0..3 {
+        fleet.push(ServiceNode {
+            role: FrontendRole::OmnMaster,
+            cpu: CpuSpec::epyc_rome_7h12(),
+            cpu_sockets: 1,
+            local_storage_tb: 2.0 * 0.96 + 2.0 * 3.84,
+            gpus: 0,
+            session_capacity: 0,
+        });
+    }
+    for _ in 0..8 {
+        fleet.push(ServiceNode {
+            role: FrontendRole::OmnWorker,
+            cpu: CpuSpec::epyc_rome_7h12(),
+            cpu_sockets: 1,
+            local_storage_tb: 2.0 * 3.2 + 4.0 * 3.84 + 8.0 * 12.0,
+            gpus: 0,
+            session_capacity: 0,
+        });
+    }
+    fleet
+}
+
+/// Least-loaded login balancer (what the login DNS round-robin plus
+/// session caps amount to).
+#[derive(Debug, Clone)]
+pub struct LoginBalancer {
+    capacity: Vec<u32>,
+    load: Vec<u32>,
+}
+
+impl LoginBalancer {
+    pub fn new(fleet: &[ServiceNode]) -> Self {
+        let capacity: Vec<u32> = fleet
+            .iter()
+            .filter(|n| n.role == FrontendRole::Login)
+            .map(|n| n.session_capacity)
+            .collect();
+        LoginBalancer {
+            load: vec![0; capacity.len()],
+            capacity,
+        }
+    }
+
+    /// Place a session; returns the node index or None when full.
+    pub fn connect(&mut self) -> Option<usize> {
+        let (idx, &load) = self
+            .load
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, &l)| (l, *i))?;
+        if load >= self.capacity[idx] {
+            return None;
+        }
+        self.load[idx] += 1;
+        Some(idx)
+    }
+
+    pub fn disconnect(&mut self, node: usize) {
+        assert!(self.load[node] > 0, "disconnect from idle node");
+        self.load[node] -= 1;
+    }
+
+    pub fn total_sessions(&self) -> u32 {
+        self.load.iter().sum()
+    }
+
+    pub fn total_capacity(&self) -> u32 {
+        self.capacity.iter().sum()
+    }
+}
+
+/// §2.4 summary table.
+pub fn fleet_table() -> Table {
+    let fleet = leonardo_service_fleet();
+    let mut t = Table::new(
+        "Frontend & service partitions (§2.4)",
+        &["Role", "Count", "Sockets", "Local TB", "GPUs", "Sessions"],
+    );
+    for role in [
+        FrontendRole::Login,
+        FrontendRole::Graphical,
+        FrontendRole::OmnMaster,
+        FrontendRole::OmnWorker,
+    ] {
+        let nodes: Vec<&ServiceNode> = fleet.iter().filter(|n| n.role == role).collect();
+        let n0 = nodes[0];
+        t.row(vec![
+            format!("{role:?}"),
+            nodes.len().to_string(),
+            n0.cpu_sockets.to_string(),
+            format!("{:.1}", n0.local_storage_tb),
+            n0.gpus.to_string(),
+            n0.session_capacity.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_counts_match_paper() {
+        let fleet = leonardo_service_fleet();
+        let count = |r: FrontendRole| fleet.iter().filter(|n| n.role == r).count();
+        assert_eq!(count(FrontendRole::Login), 16);
+        assert_eq!(count(FrontendRole::Graphical), 16);
+        assert_eq!(count(FrontendRole::OmnMaster), 3);
+        assert_eq!(count(FrontendRole::OmnWorker), 8);
+        assert_eq!(fleet.len(), 32 + 11);
+    }
+
+    #[test]
+    fn graphical_nodes_have_two_rtx8000() {
+        let fleet = leonardo_service_fleet();
+        let g = fleet
+            .iter()
+            .find(|n| n.role == FrontendRole::Graphical)
+            .unwrap();
+        assert_eq!(g.gpus, 2);
+        assert!((g.local_storage_tb - 6.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn omn_uses_rome() {
+        let fleet = leonardo_service_fleet();
+        let m = fleet
+            .iter()
+            .find(|n| n.role == FrontendRole::OmnMaster)
+            .unwrap();
+        assert_eq!(m.cpu.cores, 64);
+    }
+
+    #[test]
+    fn balancer_spreads_least_loaded_and_caps() {
+        let fleet = leonardo_service_fleet();
+        let mut lb = LoginBalancer::new(&fleet);
+        assert_eq!(lb.total_capacity(), 16 * 64);
+        // First 16 sessions land on 16 distinct nodes.
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..16 {
+            seen.insert(lb.connect().unwrap());
+        }
+        assert_eq!(seen.len(), 16);
+        // Fill to capacity, then reject.
+        while lb.total_sessions() < lb.total_capacity() {
+            assert!(lb.connect().is_some());
+        }
+        assert!(lb.connect().is_none());
+        lb.disconnect(0);
+        assert!(lb.connect().is_some());
+    }
+
+    #[test]
+    fn fleet_table_has_four_roles() {
+        assert_eq!(fleet_table().rows.len(), 4);
+    }
+}

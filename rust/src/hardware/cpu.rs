@@ -1,0 +1,139 @@
+//! Host CPU specification models (paper §2.1.2, §2, Appendix B).
+
+
+
+/// Static description of a CPU socket.
+#[derive(Debug, Clone)]
+pub struct CpuSpec {
+    pub name: &'static str,
+    pub cores: u32,
+    /// Nominal all-core frequency, GHz.
+    pub clock_ghz: f64,
+    /// AVX-512 FMA units per core (2 on Ice Lake Platinum / SPR).
+    pub avx512_units: u32,
+    /// Last-level cache, MiB.
+    pub llc_mib: u32,
+    /// Memory channels per socket.
+    pub memory_channels: u32,
+    /// Per-channel bandwidth, GB/s.
+    pub channel_bw_gbs: f64,
+    /// Installed DRAM per socket, GiB.
+    pub dram_gib: u32,
+    /// Socket TDP, W.
+    pub tdp_w: f64,
+    /// Idle draw, W.
+    pub idle_w: f64,
+}
+
+impl CpuSpec {
+    /// The Booster host: Intel Xeon Platinum 8358 "Ice Lake", 32 cores,
+    /// 2.6 GHz, 48 MiB LLC, 8 x DDR4-3200 channels (25 GB/s each, 200 GB/s
+    /// total), 8 x 64 GiB DIMMs (§2.1.2).
+    pub fn icelake_8358() -> Self {
+        CpuSpec {
+            name: "Xeon Platinum 8358 (Ice Lake)",
+            cores: 32,
+            clock_ghz: 2.6,
+            avx512_units: 2,
+            llc_mib: 48,
+            memory_channels: 8,
+            channel_bw_gbs: 25.0,
+            dram_gib: 512,
+            tdp_w: 250.0,
+            idle_w: 45.0,
+        }
+    }
+
+    /// The Data-Centric partition socket: Xeon Platinum 8480+ "Sapphire
+    /// Rapids", 56 cores, 2.0 GHz, DDR5-4800 (§1, Appendix B).
+    pub fn sapphire_rapids_8480p() -> Self {
+        CpuSpec {
+            name: "Xeon Platinum 8480+ (Sapphire Rapids)",
+            cores: 56,
+            clock_ghz: 2.0,
+            avx512_units: 2,
+            llc_mib: 105,
+            memory_channels: 8,
+            channel_bw_gbs: 38.4,
+            dram_gib: 256, // 16 x 32 GiB shared across 2 sockets = 512/node
+            tdp_w: 350.0,
+            idle_w: 60.0,
+        }
+    }
+
+    /// Service-partition socket: AMD EPYC 7H12 "Rome", 64 cores (§2.4).
+    pub fn epyc_rome_7h12() -> Self {
+        CpuSpec {
+            name: "EPYC 7H12 (Rome)",
+            cores: 64,
+            clock_ghz: 2.6,
+            avx512_units: 0, // AVX2-class, modelled as 0 AVX-512 units
+            llc_mib: 256,
+            memory_channels: 8,
+            channel_bw_gbs: 25.6,
+            dram_gib: 512,
+            tdp_w: 280.0,
+            idle_w: 65.0,
+        }
+    }
+
+    /// Double-precision FLOP per core per clock cycle.
+    ///
+    /// Each AVX-512 unit retires one FMA on 8 f64 lanes per cycle:
+    /// 2 units x 8 lanes x 2 flops = 32 flop/cycle/core. The paper's
+    /// "1024 operations per clock cycle" is the per-socket figure
+    /// (32 cores x 32): we compute, not transcribe.
+    pub fn fp64_flop_per_core_clk(&self) -> f64 {
+        self.avx512_units as f64 * 8.0 * 2.0
+    }
+
+    /// Peak double-precision FLOPS for the whole socket.
+    pub fn peak_fp64_flops(&self) -> f64 {
+        self.cores as f64 * self.fp64_flop_per_core_clk() * self.clock_ghz * 1e9
+    }
+
+    /// Aggregate DRAM bandwidth, GB/s.
+    pub fn memory_bw_gbs(&self) -> f64 {
+        self.memory_channels as f64 * self.channel_bw_gbs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn icelake_ops_per_clock_match_paper() {
+        let c = CpuSpec::icelake_8358();
+        // §2.1.2: "1024 operations per clock cycle" across the socket.
+        let socket_ops = c.cores as f64 * c.fp64_flop_per_core_clk();
+        assert_eq!(socket_ops, 1024.0);
+    }
+
+    #[test]
+    fn icelake_peak_is_about_2_6_tflops() {
+        // §2.1.2 quotes 2.6 TFLOPS (the text says "per core", an obvious
+        // slip: 1024 op/clk x 2.6 GHz = 2.66 TFLOPS per *socket*).
+        let c = CpuSpec::icelake_8358();
+        assert!((c.peak_fp64_flops() / 1e12 - 2.66).abs() < 0.05);
+    }
+
+    #[test]
+    fn icelake_memory_system() {
+        let c = CpuSpec::icelake_8358();
+        assert_eq!(c.memory_bw_gbs(), 200.0); // 8 x 25 GB/s (§2.1.2)
+        assert_eq!(c.dram_gib, 512); // 8 x 64 GiB DIMMs
+    }
+
+    #[test]
+    fn dc_node_core_count() {
+        // Appendix B: 1536 nodes x 2 x 56 cores = 172032 cores.
+        let c = CpuSpec::sapphire_rapids_8480p();
+        assert_eq!(1536 * 2 * c.cores, 172_032);
+    }
+
+    #[test]
+    fn rome_has_64_cores() {
+        assert_eq!(CpuSpec::epyc_rome_7h12().cores, 64);
+    }
+}

@@ -1,0 +1,283 @@
+//! GPU accelerator specification models (paper §2.1.1, Table 2).
+//!
+//! Encodes the three devices the paper compares — the *custom* Da Vinci
+//! A100 variant installed in LEONARDO (124 SM), the standard SXM A100
+//! (108 SM) and the Volta V100 (80 SM) — and derives every peak-rate row
+//! of Table 2 from first principles (SM count x per-SM issue width x
+//! clock), so the table is *computed*, not transcribed.
+
+
+
+/// Numerical formats of Table 2 (plus the sparse variants of §2.1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// IEEE double precision on the CUDA FP64 cores.
+    Fp64,
+    /// IEEE single precision on the CUDA FP32 cores.
+    Fp32,
+    /// Double precision on the tensor cores (DMMA) — Ampere only.
+    Fp64TensorCore,
+    /// TensorFloat-32: 8-bit range / 10-bit mantissa, the transparent
+    /// default for AI training on Ampere.
+    Tf32TensorCore,
+    /// FP16 tensor-core math (also covers BF16: same throughput class).
+    Fp16TensorCore,
+    /// INT8 tensor-core ops.
+    Int8TensorCore,
+    /// INT4 tensor-core ops.
+    Int4TensorCore,
+}
+
+/// GPU micro-architecture generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuArch {
+    Ampere,
+    Volta,
+}
+
+/// Static description of a GPU device.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub arch: GpuArch,
+    /// Streaming multiprocessors enabled on this part.
+    pub sm_count: u32,
+    /// Boost clock used for peak-rate arithmetic, MHz.
+    pub boost_clock_mhz: u32,
+    /// L2 cache, MiB.
+    pub l2_cache_mib: u32,
+    /// On-package HBM capacity, GiB.
+    pub memory_gib: u32,
+    /// HBM bandwidth, GB/s.
+    pub memory_bw_gbs: f64,
+    /// Board power limit, W.
+    pub tdp_w: f64,
+    /// Idle power draw, W (used by the energy model).
+    pub idle_w: f64,
+}
+
+impl GpuSpec {
+    /// The custom "Da Vinci" A100 installed in LEONARDO: 124 of 128 SMs
+    /// (a 97% implementation of the full GA100), 64 GiB HBM2e, 440 W.
+    pub fn a100_custom() -> Self {
+        GpuSpec {
+            name: "Ampere A100 (custom)",
+            arch: GpuArch::Ampere,
+            sm_count: 124,
+            boost_clock_mhz: 1395,
+            l2_cache_mib: 32,
+            memory_gib: 64,
+            memory_bw_gbs: 1640.0,
+            tdp_w: 440.0,
+            idle_w: 55.0,
+        }
+    }
+
+    /// The standard SXM4 A100 (108 SM, 40 GiB) for reference.
+    pub fn a100_standard() -> Self {
+        GpuSpec {
+            name: "Ampere A100",
+            arch: GpuArch::Ampere,
+            sm_count: 108,
+            boost_clock_mhz: 1410,
+            l2_cache_mib: 40,
+            memory_gib: 40,
+            memory_bw_gbs: 1555.0,
+            tdp_w: 400.0,
+            idle_w: 50.0,
+        }
+    }
+
+    /// The Volta V100 (Marconi100's GPU, the Fig 5 comparator).
+    pub fn v100() -> Self {
+        GpuSpec {
+            name: "Volta V100",
+            arch: GpuArch::Volta,
+            sm_count: 80,
+            boost_clock_mhz: 1530,
+            l2_cache_mib: 6,
+            memory_gib: 16,
+            memory_bw_gbs: 900.0,
+            tdp_w: 300.0,
+            idle_w: 40.0,
+        }
+    }
+
+    /// CUDA FP64 cores (32 per SM on both Volta and Ampere).
+    pub fn fp64_cores(&self) -> u32 {
+        self.sm_count * 32
+    }
+
+    /// CUDA FP32 cores (64 per SM).
+    pub fn fp32_cores(&self) -> u32 {
+        self.sm_count * 64
+    }
+
+    /// Tensor cores: 4 per SM on Ampere (3rd gen), 8 per SM on Volta.
+    pub fn tensor_cores(&self) -> u32 {
+        match self.arch {
+            GpuArch::Ampere => self.sm_count * 4,
+            GpuArch::Volta => self.sm_count * 8,
+        }
+    }
+
+    /// Peak rate in FLOPS (or OPS for integer formats) for `p`.
+    ///
+    /// Derivation (per clock, per SM): FP64 32 cores x 2 (FMA) = 64;
+    /// FP32 128; Ampere tensor cores: FP64 DMMA 128, TF32 1024,
+    /// FP16/BF16 2048, INT8 4096, INT4 8192. Volta tensor cores only
+    /// support FP16 (1024/SM/clk); its TC FP64/TF32/INT rows are `None`
+    /// (Table 2 prints "n.a.").
+    pub fn peak_flops(&self, p: Precision) -> Option<f64> {
+        let clk = self.boost_clock_mhz as f64 * 1e6;
+        let sm = self.sm_count as f64;
+        let per_sm_per_clk: f64 = match (self.arch, p) {
+            (_, Precision::Fp64) => 64.0,
+            (_, Precision::Fp32) => 128.0,
+            (GpuArch::Ampere, Precision::Fp64TensorCore) => 128.0,
+            (GpuArch::Ampere, Precision::Tf32TensorCore) => 1024.0,
+            (GpuArch::Ampere, Precision::Fp16TensorCore) => 2048.0,
+            (GpuArch::Ampere, Precision::Int8TensorCore) => 4096.0,
+            (GpuArch::Ampere, Precision::Int4TensorCore) => 8192.0,
+            (GpuArch::Volta, Precision::Fp16TensorCore) => 1024.0,
+            (GpuArch::Volta, _) => return None,
+        };
+        Some(sm * per_sm_per_clk * clk)
+    }
+
+    /// Peak with 2:4 structural sparsity (§2.1.1): a clean 2x on the
+    /// tensor-core formats of Ampere, unavailable elsewhere.
+    pub fn peak_flops_sparse(&self, p: Precision) -> Option<f64> {
+        if self.arch != GpuArch::Ampere {
+            return None;
+        }
+        match p {
+            Precision::Fp64 | Precision::Fp32 | Precision::Fp64TensorCore => None,
+            _ => self.peak_flops(p).map(|f| 2.0 * f),
+        }
+    }
+
+    /// HBM stacks: the custom A100 carries 4 x 16 GiB HBM2e stacks, each
+    /// driven by two 512-bit controllers at 3200 MT/s (§2.1.2).
+    pub fn hbm_stacks(&self) -> u32 {
+        self.memory_gib / 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tflops(v: Option<f64>) -> f64 {
+        v.unwrap() / 1e12
+    }
+
+    /// Every numeric cell of Table 2, derived, within rounding tolerance.
+    #[test]
+    fn table2_a100_custom() {
+        let g = GpuSpec::a100_custom();
+        assert!((tflops(g.peak_flops(Precision::Fp64)) - 11.2).abs() < 0.2);
+        assert!((tflops(g.peak_flops(Precision::Fp32)) - 22.4).abs() < 0.4);
+        assert!(
+            (tflops(g.peak_flops(Precision::Fp64TensorCore)) - 22.4).abs() < 0.4
+        );
+        assert!(
+            (tflops(g.peak_flops(Precision::Tf32TensorCore)) - 179.0).abs() < 3.0
+        );
+        assert!(
+            (tflops(g.peak_flops(Precision::Fp16TensorCore)) - 358.0).abs() < 6.0
+        );
+        assert!(
+            (tflops(g.peak_flops(Precision::Int8TensorCore)) - 716.0).abs() < 12.0
+        );
+        assert!(
+            (tflops(g.peak_flops(Precision::Int4TensorCore)) - 1432.0).abs() < 24.0
+        );
+    }
+
+    #[test]
+    fn table2_a100_standard() {
+        let g = GpuSpec::a100_standard();
+        assert!((tflops(g.peak_flops(Precision::Fp64)) - 9.7).abs() < 0.2);
+        assert!((tflops(g.peak_flops(Precision::Fp32)) - 19.5).abs() < 0.3);
+        assert!(
+            (tflops(g.peak_flops(Precision::Tf32TensorCore)) - 156.0).abs() < 3.0
+        );
+        assert!(
+            (tflops(g.peak_flops(Precision::Fp16TensorCore)) - 312.0).abs() < 5.0
+        );
+        assert!(
+            (tflops(g.peak_flops(Precision::Int8TensorCore)) - 624.0).abs() < 10.0
+        );
+    }
+
+    #[test]
+    fn table2_v100() {
+        let g = GpuSpec::v100();
+        assert!((tflops(g.peak_flops(Precision::Fp64)) - 7.8).abs() < 0.2);
+        assert!((tflops(g.peak_flops(Precision::Fp32)) - 15.7).abs() < 0.3);
+        assert!(g.peak_flops(Precision::Fp64TensorCore).is_none());
+        assert!(g.peak_flops(Precision::Tf32TensorCore).is_none());
+        assert!(g.peak_flops(Precision::Int8TensorCore).is_none());
+        // V100 FP16 TC: 125 TFLOPS on the datasheet.
+        assert!(
+            (tflops(g.peak_flops(Precision::Fp16TensorCore)) - 125.0).abs() < 3.0
+        );
+    }
+
+    #[test]
+    fn table2_core_counts() {
+        let c = GpuSpec::a100_custom();
+        assert_eq!(c.fp64_cores(), 3968);
+        assert_eq!(c.fp32_cores(), 7936);
+        assert_eq!(c.tensor_cores(), 496);
+        let s = GpuSpec::a100_standard();
+        assert_eq!(s.fp64_cores(), 3456);
+        assert_eq!(s.fp32_cores(), 6912);
+        assert_eq!(s.tensor_cores(), 432);
+        let v = GpuSpec::v100();
+        assert_eq!(v.fp64_cores(), 2560);
+        assert_eq!(v.fp32_cores(), 5120);
+        assert_eq!(v.tensor_cores(), 640);
+    }
+
+    #[test]
+    fn custom_is_97_percent_of_full_ga100() {
+        let g = GpuSpec::a100_custom();
+        assert!((g.sm_count as f64 / 128.0 - 0.97).abs() < 0.01);
+    }
+
+    #[test]
+    fn structural_sparsity_doubles_tc_rates() {
+        let g = GpuSpec::a100_custom();
+        let dense = g.peak_flops(Precision::Int8TensorCore).unwrap();
+        let sparse = g.peak_flops_sparse(Precision::Int8TensorCore).unwrap();
+        assert_eq!(sparse, 2.0 * dense);
+        assert!(g.peak_flops_sparse(Precision::Fp64).is_none());
+        assert!(GpuSpec::v100()
+            .peak_flops_sparse(Precision::Fp16TensorCore)
+            .is_none());
+    }
+
+    #[test]
+    fn hbm_geometry() {
+        let g = GpuSpec::a100_custom();
+        assert_eq!(g.hbm_stacks(), 4);
+        // 4 stacks x 2 controllers x 512 bit x 3200 MT/s = 1638 GB/s (§2.1.2)
+        let bw: f64 = 4.0 * 2.0 * 512.0 / 8.0 * 3.2e9 / 1e9;
+        assert!((bw - 1638.4).abs() < 1.0);
+        assert!((g.memory_bw_gbs - bw).abs() < 5.0);
+    }
+
+    #[test]
+    fn ampere_vs_volta_improvements() {
+        // §2.1.1: +24% FP and +73% memory bandwidth minimum A100 vs V100.
+        let a = GpuSpec::a100_standard();
+        let v = GpuSpec::v100();
+        let fp = a.peak_flops(Precision::Fp64).unwrap()
+            / v.peak_flops(Precision::Fp64).unwrap();
+        assert!(fp > 1.20, "fp64 speedup {fp}");
+        let bw = a.memory_bw_gbs / v.memory_bw_gbs;
+        assert!(bw > 1.70, "bw speedup {bw}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Hardware specification models for every component the paper names:
+//! GPU devices (§2.1.1, Table 2), host CPUs (§2.1.2), and node/blade
+//! assemblies with their intra-node fabric (Fig 3).
+//!
+//! All peak rates are *derived* from micro-architectural parameters
+//! (SM/core counts, issue widths, clocks) and unit-tested against the
+//! paper's tables, so a config change propagates consistently through
+//! the performance and power models.
+
+pub mod cpu;
+pub mod gpu;
+pub mod node;
+
+pub use cpu::CpuSpec;
+pub use gpu::{GpuArch, GpuSpec, Precision};
+pub use node::{IntraLink, NodeSpec};

@@ -1,0 +1,219 @@
+//! Node/blade models: the Da Vinci GPU blade (§2.1.2, Fig 2-3), the DC
+//! blade and the Marconi100 comparator node, with intra-node fabric
+//! (PCIe Gen4 + NVLink 3.0) bandwidth arithmetic.
+
+
+
+use super::cpu::CpuSpec;
+use super::gpu::{GpuSpec, Precision};
+
+/// Intra-node link technologies (Fig 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntraLink {
+    /// One x16 PCIe Gen 4.0 bundle: 32 GB/s per direction.
+    PcieGen4x16,
+    /// NVLink 3.0: 200 GB/s bidirectional per GPU pair.
+    NvLink3,
+}
+
+impl IntraLink {
+    /// Usable bandwidth of one link, GB/s.
+    pub fn bandwidth_gbs(self) -> f64 {
+        match self {
+            IntraLink::PcieGen4x16 => 32.0,
+            IntraLink::NvLink3 => 200.0,
+        }
+    }
+}
+
+/// A compute node specification.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: &'static str,
+    pub cpu: CpuSpec,
+    pub cpu_sockets: u32,
+    pub gpu: Option<GpuSpec>,
+    pub gpus: u32,
+    /// InfiniBand rails out of the node and per-rail Gbps.
+    pub nic_rails: u32,
+    pub rail_gbps: f64,
+    /// Per-message NIC latency, ns (§2.2: ConnectX-6 is 600 ns).
+    pub nic_latency_ns: f64,
+    /// GPU->NIC staging bandwidth when GPUDirect RDMA is unavailable,
+    /// GB/s. `None` = GPUDirect (CX6 on LEONARDO, §2.2/§2.3): device
+    /// buffers go straight to the wire. `Some(bw)` = halos bounce through
+    /// host memory at `bw` (V100-era PCIe Gen3 staging on Marconi100).
+    pub host_staging_gbs: Option<f64>,
+}
+
+impl NodeSpec {
+    /// LEONARDO Booster "Da Vinci" blade (BullSequana X2135): one Ice Lake
+    /// socket, four custom A100s, 2 dual-port HDR100 NICs = 4 x 100 Gbps
+    /// rails (400 Gbps aggregated).
+    pub fn davinci() -> Self {
+        NodeSpec {
+            name: "Da Vinci (BullSequana X2135)",
+            cpu: CpuSpec::icelake_8358(),
+            cpu_sockets: 1,
+            gpu: Some(GpuSpec::a100_custom()),
+            gpus: 4,
+            nic_rails: 4,
+            rail_gbps: 100.0,
+            nic_latency_ns: 600.0,
+            host_staging_gbs: None,
+        }
+    }
+
+    /// Data-Centric node (1/3 of a BullSequana X2140 blade): two Sapphire
+    /// Rapids sockets, one HDR100 link.
+    pub fn dc_node() -> Self {
+        NodeSpec {
+            name: "DC (BullSequana X2140)",
+            cpu: CpuSpec::sapphire_rapids_8480p(),
+            cpu_sockets: 2,
+            gpu: None,
+            gpus: 0,
+            nic_rails: 1,
+            rail_gbps: 100.0,
+            nic_latency_ns: 600.0,
+            host_staging_gbs: None,
+        }
+    }
+
+    /// Marconi100 node (the Fig 5 comparator): POWER9-class host modelled
+    /// with the Ice Lake spec (host is irrelevant to the GPU-bound LBM),
+    /// 4 x V100, 2 x 100 Gbps EDR rails.
+    pub fn marconi100_node() -> Self {
+        NodeSpec {
+            name: "Marconi100 (IC922-class)",
+            cpu: CpuSpec::icelake_8358(),
+            cpu_sockets: 2,
+            gpu: Some(GpuSpec::v100()),
+            gpus: 4,
+            nic_rails: 2,
+            rail_gbps: 100.0,
+            nic_latency_ns: 700.0,
+            host_staging_gbs: Some(10.0), // PCIe Gen3 host bounce buffers
+        }
+    }
+
+    /// Node peak FLOPS at precision `p` (GPUs + host AVX-512).
+    pub fn peak_flops(&self, p: Precision) -> f64 {
+        let gpu = self
+            .gpu
+            .as_ref()
+            .and_then(|g| g.peak_flops(p))
+            .unwrap_or(0.0)
+            * self.gpus as f64;
+        let cpu = if p == Precision::Fp64 {
+            self.cpu.peak_fp64_flops() * self.cpu_sockets as f64
+        } else {
+            0.0
+        };
+        gpu + cpu
+    }
+
+    /// Aggregate GPU HBM bandwidth, GB/s (§2.1.2: 6.5 TB/s per blade).
+    pub fn gpu_memory_bw_gbs(&self) -> f64 {
+        self.gpu.as_ref().map_or(0.0, |g| g.memory_bw_gbs) * self.gpus as f64
+    }
+
+    /// Aggregate GPU memory capacity, GiB (§2.1.2: 320 GB per blade...
+    /// the paper text says 320, i.e. 4 x 64 = 256 GiB of HBM2e plus 64 GiB
+    /// of spill — we expose the HBM figure).
+    pub fn gpu_memory_gib(&self) -> u32 {
+        self.gpu.as_ref().map_or(0, |g| g.memory_gib) * self.gpus
+    }
+
+    /// CPU->GPU PCIe bandwidth: one x16 Gen4 bundle per GPU (Fig 3).
+    pub fn pcie_bw_per_gpu_gbs(&self) -> f64 {
+        IntraLink::PcieGen4x16.bandwidth_gbs()
+    }
+
+    /// Total CPU PCIe bandwidth across the 64 lanes (Fig 3: 128 GB/s).
+    pub fn pcie_total_bw_gbs(&self) -> f64 {
+        self.gpus as f64 * self.pcie_bw_per_gpu_gbs()
+    }
+
+    /// All-pairs NVLink bisection: 200 GB/s per pair, 600 GB/s per GPU
+    /// total across its 3 peers (Fig 3).
+    pub fn nvlink_bw_per_gpu_gbs(&self) -> f64 {
+        if self.gpus < 2 || self.gpu.is_none() {
+            return 0.0;
+        }
+        IntraLink::NvLink3.bandwidth_gbs() * (self.gpus - 1).min(3) as f64
+    }
+
+    /// Injection bandwidth into the fabric, Gbps.
+    pub fn injection_gbps(&self) -> f64 {
+        self.nic_rails as f64 * self.rail_gbps
+    }
+
+    /// Node DRAM, GiB.
+    pub fn dram_gib(&self) -> u32 {
+        self.cpu.dram_gib * self.cpu_sockets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn davinci_peak_is_about_89_tflops_fp64_tc() {
+        // §1 quotes "78 teraFLOPS" per node — that is 4 x 19.5 (standard
+        // A100 FP64 TC); with the custom part it is 4 x 22.4 ~ 89.6 + CPU.
+        let n = NodeSpec::davinci();
+        let peak = n.peak_flops(Precision::Fp64TensorCore) / 1e12;
+        assert!((peak - 89.6).abs() < 1.5, "{peak}");
+        let std = 4.0
+            * GpuSpec::a100_standard()
+                .peak_flops(Precision::Fp64TensorCore)
+                .unwrap()
+            / 1e12;
+        assert!((std - 78.0).abs() < 1.0, "{std}");
+    }
+
+    #[test]
+    fn davinci_hbm_aggregate_is_6_5_tbs() {
+        let n = NodeSpec::davinci();
+        assert!((n.gpu_memory_bw_gbs() / 1000.0 - 6.56).abs() < 0.1);
+        assert_eq!(n.gpu_memory_gib(), 256);
+    }
+
+    #[test]
+    fn davinci_pcie_budget_matches_fig3() {
+        let n = NodeSpec::davinci();
+        assert_eq!(n.pcie_bw_per_gpu_gbs(), 32.0);
+        assert_eq!(n.pcie_total_bw_gbs(), 128.0);
+    }
+
+    #[test]
+    fn davinci_nvlink_600_gbs_per_gpu() {
+        let n = NodeSpec::davinci();
+        assert_eq!(n.nvlink_bw_per_gpu_gbs(), 600.0);
+    }
+
+    #[test]
+    fn davinci_injection_400_gbps() {
+        let n = NodeSpec::davinci();
+        assert_eq!(n.injection_gbps(), 400.0);
+        assert_eq!(n.dram_gib(), 512);
+    }
+
+    #[test]
+    fn dc_node_single_rail() {
+        let n = NodeSpec::dc_node();
+        assert_eq!(n.injection_gbps(), 100.0);
+        assert_eq!(n.gpus, 0);
+        assert_eq!(n.gpu_memory_bw_gbs(), 0.0);
+        assert_eq!(n.dram_gib(), 512);
+    }
+
+    #[test]
+    fn marconi_node_is_v100_based() {
+        let n = NodeSpec::marconi100_node();
+        assert_eq!(n.gpu.as_ref().unwrap().name, "Volta V100");
+        assert_eq!(n.nvlink_bw_per_gpu_gbs(), 600.0);
+    }
+}

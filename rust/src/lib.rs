@@ -1,0 +1,63 @@
+//! # leonardo-twin
+//!
+//! A digital-twin reproduction of the LEONARDO pre-exascale supercomputer
+//! ("LEONARDO: A Pan-European Pre-Exascale Supercomputer for HPC and AI
+//! Applications", Turisini, Amati, Cestari — 2023).
+//!
+//! The crate models every subsystem the paper describes —
+//!
+//! * [`hardware`] — the Da Vinci blade: custom A100 GPUs, Ice Lake host,
+//!   HBM2e/DDR4 memory systems, PCIe/NVLink intra-node fabric (Table 2,
+//!   Fig 3);
+//! * [`config`] — machine presets: cell/rack/blade/node inventory for
+//!   LEONARDO's Booster, Data-Centric and Hybrid partitions (Table 1), plus
+//!   the Marconi100 comparator used by Fig 5;
+//! * [`topology`] — the 23-cell dragonfly+ InfiniBand fabric: spine/leaf
+//!   wiring, port budgets, gateways, minimal and Valiant routing (Fig 4);
+//! * [`network`] — a flow-level network simulator: the paper's latency
+//!   budget (§2.2), bandwidth sharing, collectives and halo exchanges;
+//! * [`storage`] — the DDN/Lustre two-tier storage system: appliances, OST
+//!   striping, namespaces (Table 3) and an IO500-style workload engine
+//!   (Table 5);
+//! * [`scheduler`] — a SLURM-like batch scheduler with topology-aware
+//!   placement, backfill and power capping (§2.5, §2.6);
+//! * [`power`] — node/facility power and energy models, PUE, DVFS capping,
+//!   Green500 arithmetic (§2.6, Table 4);
+//! * [`perfmodel`] — rooflines and the HPL/HPCG analytic performance models
+//!   calibrated by real kernel runs (Table 4, Appendix A);
+//! * [`workloads`] — the four application benchmarks of Table 6;
+//! * [`lbm`] — the distributed lattice-Boltzmann driver behind the paper's
+//!   weak-scaling study (Table 7, Fig 5);
+//! * [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust;
+//! * [`coordinator`] — the campaign runner that composes all of the above
+//!   to regenerate every table and figure of the paper;
+//! * [`metrics`] — table/CSV/markdown emitters used by the CLI and benches.
+//!
+//! Compute is real: the LBM/GEMM/CG kernels are JAX + Pallas programs
+//! AOT-lowered to HLO at build time (`make artifacts`) and executed through
+//! the PJRT CPU client — Python never runs on the Rust hot path.
+
+pub mod allocation;
+pub mod config;
+pub mod coordinator;
+pub mod frontend;
+pub mod hardware;
+pub mod hpcg;
+pub mod hpl;
+pub mod telemetry;
+pub mod util;
+pub mod lbm;
+pub mod metrics;
+pub mod network;
+pub mod perfmodel;
+pub mod power;
+pub mod runtime;
+pub mod scheduler;
+pub mod software;
+pub mod storage;
+pub mod topology;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

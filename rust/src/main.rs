@@ -1,0 +1,249 @@
+//! `leonardo-twin` CLI: regenerate any table or figure of the paper, run
+//! calibration against the AOT kernel artifacts, or dump machine facts.
+//!
+//! ```text
+//! leonardo-twin table1                 # rack inventory (Table 1)
+//! leonardo-twin table7 --calibrated    # LBM scaling from measured kernels
+//! leonardo-twin all --markdown         # every table, markdown to stdout
+//! leonardo-twin topology --dot > fabric.dot
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline build has no clap.)
+
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::metrics::Table;
+use leonardo_twin::runtime::Engine;
+use leonardo_twin::topology::Routing;
+
+const USAGE: &str = "\
+leonardo-twin — digital twin of the LEONARDO pre-exascale supercomputer
+
+USAGE: leonardo-twin <COMMAND> [--markdown] [--calibrated] [--artifacts DIR]
+
+COMMANDS:
+  table1      Compute partition rack inventory        (Table 1)
+  table2      GPU specifications and derived peaks    (Table 2)
+  table3      Filesystem organisation                 (Table 3)
+  table4      HPL / HPCG / Green500                   (Table 4)   [--calibrated]
+  table5      IO500 phases and score                  (Table 5)
+  table6      Application benchmarks TTS/ETS          (Table 6)
+  table7      LBM weak scaling                        (Table 7)   [--calibrated]
+  fig5        LBM efficiency: LEONARDO vs Marconi100  (Fig 5)
+  latency     Fabric latency budget                   (Sec 2.2)
+  topology    Dragonfly+ facts                        (Fig 4)     [--dot]
+  overview    Architecture + blade summary            (Fig 1/3)
+  calibrate   Measure the AOT kernels through PJRT
+  all         Every table in paper order              [--calibrated]
+
+OPTIONS:
+  --markdown        markdown tables instead of console layout
+  --calibrated      calibrate models with real PJRT kernel runs first
+  --artifacts DIR   artifacts directory (default ./artifacts)
+";
+
+struct Args {
+    cmd: String,
+    markdown: bool,
+    calibrated: bool,
+    dot: bool,
+    artifacts: Option<String>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().ok_or_else(|| USAGE.to_string())?;
+    let mut args = Args {
+        cmd,
+        markdown: false,
+        calibrated: false,
+        dot: false,
+        artifacts: None,
+    };
+    while let Some(a) = argv.next() {
+        match a.as_str() {
+            "--markdown" => args.markdown = true,
+            "--calibrated" => args.calibrated = true,
+            "--dot" => args.dot = true,
+            "--artifacts" => {
+                args.artifacts =
+                    Some(argv.next().ok_or("--artifacts needs a value")?)
+            }
+            "-h" | "--help" => return Err(USAGE.to_string()),
+            other => return Err(format!("unknown flag '{other}'\n\n{USAGE}")),
+        }
+    }
+    Ok(args)
+}
+
+fn print(t: &Table, markdown: bool) {
+    if markdown {
+        println!("{}", t.to_markdown());
+    } else {
+        println!("{}", t.to_console());
+    }
+}
+
+fn engine(dir: &Option<String>) -> anyhow::Result<Engine> {
+    match dir {
+        Some(d) => Engine::load(d),
+        None => Engine::load(Engine::default_dir()),
+    }
+}
+
+fn maybe_calibrate(
+    twin: &Twin,
+    args: &Args,
+) -> anyhow::Result<Option<leonardo_twin::perfmodel::Calibration>> {
+    if !args.calibrated {
+        return Ok(None);
+    }
+    let eng = engine(&args.artifacts)?;
+    Ok(Some(twin.calibrate(&eng)?))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let twin = Twin::leonardo();
+    let md = args.markdown;
+    match args.cmd.as_str() {
+        "table1" => print(&twin.table1(), md),
+        "table2" => print(&twin.table2(), md),
+        "table3" => print(&twin.table3(), md),
+        "table4" => {
+            let c = maybe_calibrate(&twin, &args)?;
+            print(&twin.table4(c.as_ref()), md);
+        }
+        "table5" => print(&twin.table5(), md),
+        "table6" => print(&twin.table6(), md),
+        "table7" => {
+            let c = maybe_calibrate(&twin, &args)?;
+            print(&twin.table7(c.as_ref()), md);
+        }
+        "fig5" => print(&twin.fig5(), md),
+        "latency" => print(&twin.latency_table(), md),
+        "topology" => {
+            if args.dot {
+                println!("{}", topology_dot(&twin));
+            } else {
+                topology_summary(&twin);
+            }
+        }
+        "overview" => overview(&twin),
+        "calibrate" => {
+            let eng = engine(&args.artifacts)?;
+            println!("platform: {}", eng.platform());
+            let c = twin.calibrate(&eng)?;
+            print(&twin.calibration_table(&c), md);
+        }
+        "all" => {
+            let c = maybe_calibrate(&twin, &args)?;
+            print(&twin.table1(), md);
+            print(&twin.table2(), md);
+            print(&twin.table3(), md);
+            print(&twin.table4(c.as_ref()), md);
+            print(&twin.table5(), md);
+            print(&twin.table6(), md);
+            print(&twin.table7(c.as_ref()), md);
+            print(&twin.fig5(), md);
+            print(&twin.latency_table(), md);
+            if let Some(c) = &c {
+                print(&twin.calibration_table(c), md);
+            }
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn topology_summary(twin: &Twin) {
+    let t = &twin.topo;
+    println!(
+        "dragonfly+ fabric: {} cells, {} switches ({} gateways)",
+        t.cells.len(),
+        t.total_switches(),
+        leonardo_twin::topology::GATEWAYS
+    );
+    println!(
+        "global links: {} total ({} per cell pair, {:.1} Tbps per pair)",
+        t.total_global_links(),
+        t.links_per_cell_pair,
+        t.cell_pair_bw_gbps() / 1000.0
+    );
+    println!(
+        "max node-to-node latency: {:.2} us (valiant), {:.2} us (minimal)",
+        t.max_latency_ns() / 1000.0,
+        t.route(0, t.total_nodes() - 1, Routing::Minimal)
+            .latency_ns()
+            / 1000.0
+    );
+}
+
+fn topology_dot(twin: &Twin) -> String {
+    use std::fmt::Write;
+    let mut out = String::from("graph leonardo {\n  layout=circo;\n");
+    for (i, c) in twin.topo.cells.iter().enumerate() {
+        let color = match c.kind {
+            leonardo_twin::config::CellKind::Booster => "green",
+            leonardo_twin::config::CellKind::DataCentric => "blue",
+            leonardo_twin::config::CellKind::Hybrid => "orange",
+            leonardo_twin::config::CellKind::Io => "pink",
+        };
+        let _ = writeln!(
+            out,
+            "  c{i} [label=\"cell {i}\\n{} nodes\", style=filled, fillcolor={color}];",
+            c.nodes
+        );
+    }
+    for i in 0..twin.topo.cells.len() {
+        for j in (i + 1)..twin.topo.cells.len() {
+            let _ = writeln!(out, "  c{i} -- c{j};");
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn overview(twin: &Twin) {
+    let cfg = &twin.cfg;
+    let node = cfg.gpu_node_spec().unwrap();
+    println!("LEONARDO digital twin — architecture overview (Fig 1/3)");
+    println!(
+        "  Booster: {} nodes x 4 custom A100 = {} GPUs",
+        cfg.gpu_nodes(),
+        cfg.total_gpus()
+    );
+    println!(
+        "  Data-Centric: {} nodes (2 x Sapphire Rapids 8480+)",
+        cfg.cpu_nodes()
+    );
+    println!("  blade: {}", node.name);
+    println!(
+        "    host {} | PCIe Gen4 x16 per GPU ({} GB/s, {} GB/s total)",
+        node.cpu.name,
+        node.pcie_bw_per_gpu_gbs(),
+        node.pcie_total_bw_gbs()
+    );
+    println!(
+        "    NVLink 3.0: {} GB/s per GPU | HBM2e aggregate {:.1} TB/s",
+        node.nvlink_bw_per_gpu_gbs(),
+        node.gpu_memory_bw_gbs() / 1000.0
+    );
+    println!(
+        "    injection: {} Gbps over {} HDR100 rails",
+        node.injection_gbps(),
+        node.nic_rails
+    );
+    println!(
+        "  power: {:.1} MW facility envelope, PUE {:.2}",
+        cfg.facility_power_mw, cfg.pue
+    );
+}

@@ -1,0 +1,331 @@
+//! Flow-level network simulator over the dragonfly+ fabric (§2.2).
+//!
+//! Models what the paper's benchmarks exercise: point-to-point transfer
+//! time (latency budget + bandwidth), message-rate limits, collective
+//! operations (allreduce/allgather used by HPL, HPCG and the LBM global
+//! diagnostics) and nearest-neighbour halo exchange (the LBM communication
+//! pattern), including contention on the inter-cell global links when a
+//! job spans multiple cells.
+//!
+//! The simulator is analytic and deterministic: given a placement it
+//! computes the bandwidth share of every traffic class on the narrowest
+//! link it crosses (max-min style), which is what drives the weak-scaling
+//! efficiency shape of Table 7 / Fig 5.
+
+
+
+use crate::topology::{Routing, Topology, HDR_GBPS, HDR100_GBPS};
+
+/// Message-rate ceilings (§2.2).
+pub const NIC_MSGS_PER_S: f64 = 200e6;
+pub const SWITCH_PORT_MSGS_PER_S: f64 = 390e6;
+
+/// Fabric efficiency actually achievable by verbs/RDMA on HDR links
+/// (protocol + PCIe overheads; ~90% of line rate is the accepted figure).
+pub const WIRE_EFFICIENCY: f64 = 0.90;
+
+/// A placement of a job on the machine: how many nodes in each cell.
+#[derive(Debug, Clone, Default)]
+pub struct Placement {
+    pub nodes_per_cell: Vec<(u32, u32)>, // (cell id, node count)
+}
+
+impl Placement {
+    pub fn total_nodes(&self) -> u32 {
+        self.nodes_per_cell.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn cells_used(&self) -> usize {
+        self.nodes_per_cell.iter().filter(|(_, n)| *n > 0).count()
+    }
+}
+
+/// The network model: topology + node injection capability.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub topo: Topology,
+    /// Per-node injection bandwidth, Gbps (Booster: 4 x HDR100 = 400).
+    pub injection_gbps: f64,
+    pub routing: Routing,
+    /// Above-leaf pruning of the fabric: 1.0 for LEONARDO's dragonfly+,
+    /// >1 for oversubscribed fat-trees (Marconi100's two 2:1 tiers).
+    pub oversubscription: f64,
+    /// Fraction of global-link capacity consumed by *other* jobs
+    /// (0 = idle machine). Drives the locality-vs-spread trade-off the
+    /// scheduler's packed placement exists for.
+    pub background_global_load: f64,
+}
+
+impl Network {
+    pub fn new(topo: Topology, injection_gbps: f64) -> Self {
+        Network {
+            topo,
+            injection_gbps,
+            routing: Routing::Minimal,
+            oversubscription: 1.0,
+            background_global_load: 0.0,
+        }
+    }
+
+    /// Effective node injection bandwidth, GB/s.
+    pub fn injection_gbs(&self) -> f64 {
+        self.injection_gbps / 8.0 * WIRE_EFFICIENCY
+    }
+
+    /// Point-to-point transfer time for `bytes`, seconds.
+    pub fn p2p_time(&self, a: u32, b: u32, bytes: u64) -> f64 {
+        let route = self.topo.route(a, b, self.routing);
+        let lat = route.latency_ns() * 1e-9;
+        if a == b {
+            return 0.0; // intra-node: handled by the NVLink model
+        }
+        // A single flow cannot exceed one rail (ports are HDR100 at the
+        // leaf level); multi-rail striping applies to multi-flow traffic.
+        let bw = (HDR100_GBPS / 8.0 * WIRE_EFFICIENCY) * 1e9;
+        lat + bytes as f64 / bw
+    }
+
+    /// Small-message latency between two nodes, seconds.
+    pub fn latency(&self, a: u32, b: u32) -> f64 {
+        self.topo.route(a, b, self.routing).latency_ns() * 1e-9
+    }
+
+    /// Ring allreduce across `p` nodes of `bytes` payload, seconds.
+    ///
+    /// 2(p-1) steps, each moving bytes/p at the per-node effective
+    /// bandwidth, plus the per-step latency of the longest hop in the
+    /// ring. This is the NCCL/UCC algorithm the paper's stack (NCCL,
+    /// SHARP-less fallback) uses for large payloads.
+    pub fn allreduce_time(&self, placement: &Placement, bytes: u64) -> f64 {
+        let p = placement.total_nodes() as f64;
+        if p <= 1.0 {
+            return 0.0;
+        }
+        let hop_lat = self.worst_latency(placement);
+        let chunk = bytes as f64 / p;
+        let bw = self.effective_node_bw(placement) * 1e9;
+        2.0 * (p - 1.0) * (hop_lat + chunk / bw)
+    }
+
+    /// Nearest-neighbour halo exchange: each node sends `bytes_per_face`
+    /// to each of `faces` logical neighbours, seconds.
+    ///
+    /// All faces transfer concurrently: the node's rails stripe the
+    /// aggregate, so the completion time is the aggregate volume over the
+    /// effective (possibly congested) per-node bandwidth plus one
+    /// synchronisation latency.
+    pub fn halo_exchange_time(
+        &self,
+        placement: &Placement,
+        faces: u32,
+        bytes_per_face: u64,
+    ) -> f64 {
+        if placement.total_nodes() <= 1 {
+            return 0.0;
+        }
+        let volume = faces as f64 * bytes_per_face as f64;
+        let bw = self.effective_node_bw(placement) * 1e9;
+        self.worst_latency(placement) + volume / bw
+    }
+
+    /// Effective per-node bandwidth under this placement, GB/s: the
+    /// injection rate, reduced when the job's inter-cell traffic
+    /// oversubscribes the global links (the dragonfly pruning factor at
+    /// scale).
+    ///
+    /// Model: nearest-neighbour traffic leaving a cell scales with the
+    /// surface-to-volume ratio of the per-cell node block (~n^-1/3 of a
+    /// node's halo crosses a cell boundary for n nodes per cell); packed
+    /// placements line cells along the decomposition's slowest axis, so
+    /// k cells expose k-1 global boundaries. Cross traffic beyond the
+    /// boundary capacity is throttled; intra-cell traffic continues at
+    /// full rate. `oversubscription` models fat-tree-style pruning above
+    /// the leaf level (1.0 on LEONARDO's dragonfly+).
+    pub fn effective_node_bw(&self, placement: &Placement) -> f64 {
+        let inj = self.injection_gbs();
+        let k = placement.cells_used();
+        if k <= 1 || placement.total_nodes() <= 1 {
+            return inj;
+        }
+        let total = placement.total_nodes() as f64;
+        let avg_cell = total / k as f64;
+        let cross_fraction = (1.0 / avg_cell.cbrt()).min(1.0);
+        let global_gbs = self.topo.cell_pair_bw_gbps() / 8.0
+            * WIRE_EFFICIENCY
+            * (1.0 - self.background_global_load.clamp(0.0, 0.95));
+        let supply_per_node =
+            global_gbs * (k as f64 - 1.0) / total / self.oversubscription;
+        let demand_per_node = inj * cross_fraction;
+        let scale = if demand_per_node <= supply_per_node {
+            1.0
+        } else {
+            (1.0 - cross_fraction)
+                + cross_fraction * (supply_per_node / demand_per_node)
+        };
+        inj * scale
+    }
+
+    /// Worst small-message latency inside the placement, seconds.
+    pub fn worst_latency(&self, placement: &Placement) -> f64 {
+        let multi_cell = placement.cells_used() > 1;
+        let r = if multi_cell {
+            // representative inter-cell route
+            crate::topology::Route {
+                switch_hops: 4,
+                fiber_m: 32.0,
+                global_hops: 1,
+            }
+        } else {
+            crate::topology::Route {
+                switch_hops: 3,
+                fiber_m: 12.0,
+                global_hops: 0,
+            }
+        };
+        r.latency_ns() * 1e-9
+    }
+
+    /// Can the fabric sustain `msgs_per_s` per node? (§2.2 rate limits.)
+    pub fn message_rate_ok(&self, msgs_per_s: f64) -> bool {
+        msgs_per_s <= NIC_MSGS_PER_S && msgs_per_s <= SWITCH_PORT_MSGS_PER_S
+    }
+
+    /// Gateways aggregate bandwidth to external networks, Tbps (§2.2:
+    /// 4 units x 8 x 200 Gbps = 6.4 Tbps).
+    pub fn gateway_aggregate_tbps(&self) -> f64 {
+        crate::topology::GATEWAYS as f64 * 8.0 * HDR_GBPS / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    fn net() -> Network {
+        let cfg = MachineConfig::leonardo();
+        let inj = cfg.gpu_node_spec().unwrap().injection_gbps();
+        Network::new(Topology::build(&cfg), inj)
+    }
+
+    fn placement(cells: &[(u32, u32)]) -> Placement {
+        Placement {
+            nodes_per_cell: cells.to_vec(),
+        }
+    }
+
+    #[test]
+    fn p2p_time_has_latency_floor() {
+        let n = net();
+        let t0 = n.p2p_time(0, 1, 0);
+        assert!(t0 > 1.3e-6 && t0 < 3.0e-6, "{t0}");
+        // 1 MiB at ~11 GB/s adds ~90 us.
+        let t1 = n.p2p_time(0, 1, 1 << 20);
+        assert!(t1 > t0 + 80e-6 && t1 < t0 + 120e-6, "{t1}");
+    }
+
+    #[test]
+    fn p2p_is_monotone_in_bytes() {
+        let n = net();
+        let mut last = 0.0;
+        for b in [0u64, 1 << 10, 1 << 16, 1 << 22, 1 << 26] {
+            let t = n.p2p_time(0, 3000, b);
+            assert!(t >= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn single_cell_placement_gets_full_injection() {
+        let n = net();
+        let p = placement(&[(0, 64)]);
+        assert!((n.effective_node_bw(&p) - n.injection_gbs()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_cell_placement_may_throttle_but_never_boosts() {
+        let n = net();
+        for k in [2u32, 4, 8, 16] {
+            let cells: Vec<_> = (0..k).map(|c| (c, 180)).collect();
+            let p = placement(&cells);
+            let bw = n.effective_node_bw(&p);
+            assert!(bw <= n.injection_gbs() + 1e-9);
+            assert!(bw > 0.2 * n.injection_gbs(), "k={k} bw={bw}");
+        }
+    }
+
+    #[test]
+    fn spreading_a_job_never_beats_packing_it() {
+        let n = net();
+        let packed = n.effective_node_bw(&placement(&[(0, 512)]));
+        for k in [2u32, 4, 8, 16] {
+            let per = 512 / k;
+            let cells: Vec<_> = (0..k).map(|c| (c, per)).collect();
+            let bw = n.effective_node_bw(&placement(&cells));
+            assert!(bw <= packed + 1e-9, "k={k}: {bw} > {packed}");
+            assert!(bw >= 0.5 * packed, "k={k}: collapse to {bw}");
+        }
+    }
+
+    #[test]
+    fn oversubscription_reduces_multi_cell_bandwidth() {
+        let mut a = net();
+        let p = placement(&[(0, 180), (1, 180), (2, 152)]);
+        let base = a.effective_node_bw(&p);
+        a.oversubscription = 4.0;
+        let pruned = a.effective_node_bw(&p);
+        assert!(pruned < base, "{pruned} vs {base}");
+        // Single-cell jobs are below the leaf layer: unaffected.
+        let single = placement(&[(0, 128)]);
+        assert_eq!(a.effective_node_bw(&single), a.injection_gbs());
+    }
+
+    #[test]
+    fn allreduce_grows_with_node_count() {
+        let n = net();
+        let bytes = 1 << 20;
+        let mut last = 0.0;
+        for k in [2u32, 8, 32, 128] {
+            let cells: Vec<_> = (0..(k / 2).max(1)).map(|c| (c, 2 * k / k.max(1))).collect();
+            let p = placement(&cells);
+            let t = n.allreduce_time(&p, bytes);
+            assert!(t >= last * 0.5, "k={k}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn allreduce_zero_for_single_node() {
+        let n = net();
+        assert_eq!(n.allreduce_time(&placement(&[(0, 1)]), 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn halo_exchange_scales_with_volume() {
+        let n = net();
+        let p = placement(&[(0, 128), (1, 128)]);
+        let t1 = n.halo_exchange_time(&p, 6, 1 << 20);
+        let t2 = n.halo_exchange_time(&p, 6, 1 << 22);
+        assert!(t2 > t1 * 2.0, "{t1} {t2}");
+        assert!(t2 < t1 * 8.0);
+    }
+
+    #[test]
+    fn message_rates_within_paper_limits() {
+        let n = net();
+        assert!(n.message_rate_ok(150e6));
+        assert!(!n.message_rate_ok(250e6));
+    }
+
+    #[test]
+    fn gateway_bandwidth_is_6_4_tbps() {
+        assert!((net().gateway_aggregate_tbps() - 6.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wire_efficiency_applied() {
+        let n = net();
+        // 400 Gbps x 0.9 / 8 = 45 GB/s
+        assert!((n.injection_gbs() - 45.0).abs() < 1e-9);
+    }
+}

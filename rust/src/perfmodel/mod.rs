@@ -1,0 +1,244 @@
+//! Performance models: rooflines and the analytic HPL/HPCG models behind
+//! Table 4, calibrated against the paper's TOP500 submission and fed by
+//! *measured* kernel rates from the PJRT runtime (see
+//! [`crate::coordinator`]).
+//!
+//! Model constants and where they come from:
+//! * `GEMM_EFFICIENCY` = 0.85 — sustained DGEMM / peak FP64-TC on the
+//!   A100 (datasheet-class; also what our Pallas GEMM achieves against
+//!   its own roofline, see EXPERIMENTS.md §Perf);
+//! * HPL communication decay `E0 - A ln(P)/ln(4096)` — the weak
+//!   logarithmic panel-broadcast overhead of blocked LU once N grows as
+//!   sqrt(P) (memory-filled runs); fit to the single published point
+//!   (238.7 PF at 3300 nodes) and validated against Rpeak/Rmax = 0.784;
+//! * HPCG arithmetic intensity 0.25 flop/byte x 0.575 HBM efficiency —
+//!   the 27-point stencil's f64 SpMV byte traffic and the fraction of
+//!   HBM bandwidth a latency-bound SpMV sustains.
+
+
+
+use crate::hardware::{NodeSpec, Precision};
+
+/// Sustained-DGEMM fraction of tensor-core FP64 peak.
+pub const GEMM_EFFICIENCY: f64 = 0.85;
+/// HPL network-efficiency fit: E(P) = E0 - A * ln(P)/ln(4096).
+pub const HPL_E0: f64 = 0.975;
+pub const HPL_DECAY: f64 = 0.025;
+/// HPCG: effective flop/byte of the f64 27-point SpMV.
+pub const HPCG_AI: f64 = 0.25;
+/// Fraction of HBM bandwidth a latency-bound SpMV sustains.
+pub const HPCG_MEM_EFF: f64 = 0.575;
+
+/// A simple roofline.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    pub peak_flops: f64,
+    pub mem_bw_bytes: f64,
+}
+
+impl Roofline {
+    /// Attainable FLOPS at arithmetic intensity `ai` (flop/byte).
+    pub fn attainable(&self, ai: f64) -> f64 {
+        self.peak_flops.min(ai * self.mem_bw_bytes)
+    }
+
+    /// The ridge point (flop/byte) where compute takes over.
+    pub fn ridge(&self) -> f64 {
+        self.peak_flops / self.mem_bw_bytes
+    }
+}
+
+/// HPL performance model over a GPU node fleet.
+#[derive(Debug, Clone)]
+pub struct HplModel {
+    pub node: NodeSpec,
+}
+
+impl HplModel {
+    pub fn new(node: NodeSpec) -> Self {
+        HplModel { node }
+    }
+
+    /// Per-node FP64 peak used for Rpeak accounting (tensor-core DMMA on
+    /// Ampere; plain FP64 on Volta).
+    pub fn node_peak_flops(&self) -> f64 {
+        let g = self.node.gpu.as_ref().expect("HPL model needs GPUs");
+        let per_gpu = g
+            .peak_flops(Precision::Fp64TensorCore)
+            .or_else(|| g.peak_flops(Precision::Fp64))
+            .unwrap();
+        per_gpu * self.node.gpus as f64
+            + self.node.cpu.peak_fp64_flops() * self.node.cpu_sockets as f64
+    }
+
+    /// Theoretical Rpeak for `nodes` nodes, FLOPS.
+    pub fn rpeak(&self, nodes: u32) -> f64 {
+        nodes as f64 * self.node_peak_flops()
+    }
+
+    /// Network efficiency at scale.
+    pub fn network_efficiency(&self, nodes: u32) -> f64 {
+        if nodes <= 1 {
+            return HPL_E0;
+        }
+        (HPL_E0 - HPL_DECAY * (nodes as f64).ln() / 4096f64.ln()).max(0.5)
+    }
+
+    /// Modelled Rmax, FLOPS.
+    pub fn rmax(&self, nodes: u32) -> f64 {
+        self.rpeak(nodes) * GEMM_EFFICIENCY * self.network_efficiency(nodes)
+    }
+
+    /// Overall HPL efficiency Rmax/Rpeak.
+    pub fn efficiency(&self, nodes: u32) -> f64 {
+        self.rmax(nodes) / self.rpeak(nodes)
+    }
+
+    /// Problem size N that fills `frac` of the fleet's GPU memory.
+    pub fn problem_size(&self, nodes: u32, frac: f64) -> u64 {
+        let bytes =
+            self.node.gpu_memory_gib() as f64 * 1.073741824e9 * nodes as f64;
+        (frac * bytes / 8.0).sqrt() as u64
+    }
+}
+
+/// HPCG performance model (bandwidth-bound CG on the 27-point stencil).
+#[derive(Debug, Clone)]
+pub struct HpcgModel {
+    pub node: NodeSpec,
+}
+
+impl HpcgModel {
+    pub fn new(node: NodeSpec) -> Self {
+        HpcgModel { node }
+    }
+
+    /// Modelled HPCG rate for `nodes` nodes, FLOPS.
+    pub fn rate(&self, nodes: u32) -> f64 {
+        let bw = self.node.gpu_memory_bw_gbs() * 1e9;
+        nodes as f64 * bw * HPCG_AI * HPCG_MEM_EFF
+    }
+}
+
+/// Calibration record: measured kernel rates from the PJRT runtime,
+/// used to tie the simulator to real execution (EXPERIMENTS.md §Calib).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Calibration {
+    /// Measured blocked-GEMM rate on this host, GFLOPS.
+    pub dgemm_gflops: f64,
+    /// Measured LBM site-update rate on this host, MLUPS.
+    pub lbm_mlups: f64,
+    /// Measured CG iteration time on a 64^3 grid, seconds.
+    pub cg_iter_seconds: f64,
+}
+
+impl Calibration {
+    /// Scale a host-measured rate to a device with `device_roof` /
+    /// `host_roof` rooflines: rate_dev = rate_host * (dev/host), capped
+    /// at the device roofline. The *structure* (kernel, schedule) is
+    /// identical — only the iron changes.
+    pub fn project(&self, host_rate: f64, host_roof: f64, device_roof: f64) -> f64 {
+        if host_roof <= 0.0 {
+            return 0.0;
+        }
+        (host_rate * device_roof / host_roof).min(device_roof)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::NodeSpec;
+
+    #[test]
+    fn roofline_attainable() {
+        let r = Roofline {
+            peak_flops: 100.0,
+            mem_bw_bytes: 10.0,
+        };
+        assert_eq!(r.attainable(1.0), 10.0);
+        assert_eq!(r.attainable(100.0), 100.0);
+        assert_eq!(r.ridge(), 10.0);
+    }
+
+    #[test]
+    fn table4_hpl_rmax_at_3300_nodes() {
+        // Paper: 238.7 PF measured on 3300 nodes.
+        let m = HplModel::new(NodeSpec::davinci());
+        let rmax_pf = m.rmax(3300) / 1e15;
+        assert!((rmax_pf - 238.7).abs() / 238.7 < 0.02, "{rmax_pf}");
+    }
+
+    #[test]
+    fn table4_rpeak_consistent_with_top500() {
+        // Paper: 304.5 PF Rpeak quoted (full submission); our per-node
+        // accounting gives ~296 PF for the 3300-node run.
+        let m = HplModel::new(NodeSpec::davinci());
+        let rpeak_pf = m.rpeak(3300) / 1e15;
+        assert!((rpeak_pf - 296.0).abs() < 6.0, "{rpeak_pf}");
+        // Full Booster:
+        let full = m.rpeak(3456) / 1e15;
+        assert!(full > 304.5, "{full}");
+    }
+
+    #[test]
+    fn hpl_efficiency_is_about_0_8() {
+        let m = HplModel::new(NodeSpec::davinci());
+        let e = m.efficiency(3300);
+        assert!((e - 0.807).abs() < 0.02, "{e}");
+    }
+
+    #[test]
+    fn hpl_efficiency_decays_with_scale() {
+        let m = HplModel::new(NodeSpec::davinci());
+        assert!(m.efficiency(64) > m.efficiency(512));
+        assert!(m.efficiency(512) > m.efficiency(3300));
+        assert!(m.efficiency(3300) > 0.5);
+    }
+
+    #[test]
+    fn table4_hpcg_at_3300_nodes() {
+        // Paper: 3.11 PF HPCG.
+        let m = HpcgModel::new(NodeSpec::davinci());
+        let pf = m.rate(3300) / 1e15;
+        assert!((pf - 3.11).abs() / 3.11 < 0.02, "{pf}");
+    }
+
+    #[test]
+    fn hpcg_is_two_orders_below_hpl() {
+        let hpl = HplModel::new(NodeSpec::davinci()).rmax(3300);
+        let hpcg = HpcgModel::new(NodeSpec::davinci()).rate(3300);
+        let ratio = hpcg / hpl;
+        assert!(ratio > 0.005 && ratio < 0.03, "{ratio}");
+    }
+
+    #[test]
+    fn problem_size_fills_memory() {
+        let m = HplModel::new(NodeSpec::davinci());
+        let n = m.problem_size(3300, 0.8);
+        // N^2 * 8 bytes ~ 0.8 x 3300 x 256 GiB.
+        let bytes = (n as f64).powi(2) * 8.0;
+        let budget = 0.8 * 3300.0 * 256.0 * 1.073741824e9;
+        assert!((bytes / budget - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn calibration_projection_caps_at_roofline() {
+        let c = Calibration {
+            dgemm_gflops: 50.0,
+            ..Default::default()
+        };
+        // Host achieves 50 of 100 (50%); device roof 1000 -> 500.
+        assert_eq!(c.project(50.0, 100.0, 1000.0), 500.0);
+        // Can never exceed the device roofline.
+        assert_eq!(c.project(150.0, 100.0, 1000.0), 1000.0);
+    }
+
+    #[test]
+    fn v100_node_hpl_uses_plain_fp64() {
+        let m = HplModel::new(NodeSpec::marconi100_node());
+        // 4 x 7.8 + CPU ~ 36 TF/node.
+        let tf = m.node_peak_flops() / 1e12;
+        assert!((tf - 36.6).abs() < 2.0, "{tf}");
+    }
+}

@@ -1,0 +1,283 @@
+//! Power, energy and cooling models (paper §2.6, Table 4, Green500).
+//!
+//! Per-node power is a linear idle+dynamic model over CPU and GPU
+//! utilisation, with a per-blade constant covering VRM/PSU losses, NICs
+//! and the node's share of fabric and DLC pumping — calibrated once
+//! against the TOP500 submission (7.4 MW at 3300 nodes under HPL) and
+//! reused unchanged for every other experiment. Facility power applies
+//! the warm-water-cooling PUE of 1.1; the Bull Dynamic Power Optimizer
+//! analogue searches DVFS workpoints; energy-to-solution integrates
+//! power over a job.
+
+
+
+use crate::hardware::NodeSpec;
+
+/// Per-blade constant draw: PSU/VRM losses, 2 x CX6 NICs, BMC, and the
+/// node's share of switch + DLC pump power, W.
+pub const BLADE_OVERHEAD_W: f64 = 310.0;
+
+/// Utilisation of a node's components during a workload.
+#[derive(Debug, Clone, Copy)]
+pub struct Utilization {
+    /// CPU dynamic-range fraction, 0..=1.
+    pub cpu: f64,
+    /// GPU dynamic-range fraction; `None` = GPUs not powered for this
+    /// accounting (the paper's PLUTO row counts CPU power only).
+    pub gpu: Option<f64>,
+}
+
+impl Utilization {
+    pub fn hpl() -> Self {
+        Utilization {
+            cpu: 0.60,
+            gpu: Some(1.0),
+        }
+    }
+
+    pub fn idle() -> Self {
+        Utilization {
+            cpu: 0.0,
+            gpu: Some(0.0),
+        }
+    }
+}
+
+/// Node power model.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub node: NodeSpec,
+    pub pue: f64,
+}
+
+impl PowerModel {
+    pub fn new(node: NodeSpec, pue: f64) -> Self {
+        PowerModel { node, pue }
+    }
+
+    /// IT power of one node at utilisation `u`, W.
+    pub fn node_power_w(&self, u: Utilization) -> f64 {
+        let cpu = &self.node.cpu;
+        let sockets = self.node.cpu_sockets as f64;
+        let mut p = BLADE_OVERHEAD_W
+            + sockets * (cpu.idle_w + u.cpu.clamp(0.0, 1.0) * (cpu.tdp_w - cpu.idle_w));
+        if let (Some(gpu), Some(gu)) = (self.node.gpu.as_ref(), u.gpu) {
+            p += self.node.gpus as f64
+                * (gpu.idle_w + gu.clamp(0.0, 1.0) * (gpu.tdp_w - gpu.idle_w));
+        }
+        p
+    }
+
+    /// IT power of `nodes` nodes, MW.
+    pub fn fleet_power_mw(&self, nodes: u32, u: Utilization) -> f64 {
+        nodes as f64 * self.node_power_w(u) / 1e6
+    }
+
+    /// Facility power including cooling overhead, MW (PUE x IT).
+    pub fn facility_power_mw(&self, nodes: u32, u: Utilization) -> f64 {
+        self.fleet_power_mw(nodes, u) * self.pue
+    }
+
+    /// Energy-to-solution for a job, kWh (IT power, as in Table 6).
+    pub fn energy_kwh(&self, nodes: u32, u: Utilization, seconds: f64) -> f64 {
+        self.fleet_power_mw(nodes, u) * 1e3 * seconds / 3600.0
+    }
+
+    /// Green500 metric: GFLOPS per watt.
+    pub fn gflops_per_watt(&self, rmax_flops: f64, nodes: u32, u: Utilization) -> f64 {
+        rmax_flops / 1e9 / (self.fleet_power_mw(nodes, u) * 1e6)
+    }
+}
+
+/// DVFS workpoint: clocks scaled to `s` of nominal.
+///
+/// Dynamic power scales ~ s^2 (voltage tracks frequency in the efficient
+/// band), compute-bound runtime scales ~ 1/s. The Bull Dynamic Power
+/// Optimizer's job is to pick `s` minimising energy at bounded slowdown.
+#[derive(Debug, Clone, Copy)]
+pub struct DvfsPoint {
+    pub scale: f64,
+}
+
+impl DvfsPoint {
+    /// Power multiplier on the *dynamic* component.
+    pub fn power_factor(&self) -> f64 {
+        self.scale * self.scale
+    }
+
+    /// Runtime multiplier for a compute-bound job (`boundness` in 0..=1:
+    /// 1 = fully clock-bound, 0 = fully memory/IO-bound).
+    pub fn time_factor(&self, boundness: f64) -> f64 {
+        let b = boundness.clamp(0.0, 1.0);
+        b / self.scale + (1.0 - b)
+    }
+}
+
+/// Bull Dynamic Power Optimizer analogue: sweep DVFS workpoints and
+/// return the one minimising energy subject to a slowdown bound.
+pub fn best_workpoint(
+    model: &PowerModel,
+    u: Utilization,
+    boundness: f64,
+    max_slowdown: f64,
+) -> DvfsPoint {
+    let idle = model.node_power_w(Utilization::idle());
+    let active = model.node_power_w(u);
+    let dynamic = active - idle;
+    let mut best = DvfsPoint { scale: 1.0 };
+    let mut best_energy = f64::INFINITY;
+    let mut s = 0.50;
+    while s <= 1.0001 {
+        let p = DvfsPoint { scale: s };
+        let t = p.time_factor(boundness);
+        if t <= max_slowdown {
+            let energy = (idle + dynamic * p.power_factor()) * t;
+            if energy < best_energy {
+                best_energy = energy;
+                best = p;
+            }
+        }
+        s += 0.01;
+    }
+    best
+}
+
+/// Power capping (Bull Energy Optimizer analogue): the DVFS scale that
+/// brings `nodes` under `cap_mw`, or `None` if even the floor won't fit.
+pub fn cap_scale(
+    model: &PowerModel,
+    nodes: u32,
+    u: Utilization,
+    cap_mw: f64,
+) -> Option<DvfsPoint> {
+    let idle = model.node_power_w(Utilization::idle());
+    let dynamic = model.node_power_w(u) - idle;
+    let budget_w = cap_mw * 1e6 / nodes as f64;
+    if idle + dynamic <= budget_w {
+        return Some(DvfsPoint { scale: 1.0 });
+    }
+    // idle + dynamic*s^2 = budget  =>  s = sqrt((budget-idle)/dynamic)
+    let s2 = (budget_w - idle) / dynamic;
+    if s2 < 0.25 {
+        return None; // below the 0.5 floor
+    }
+    Some(DvfsPoint {
+        scale: s2.sqrt().min(1.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::NodeSpec;
+
+    fn leo_model() -> PowerModel {
+        PowerModel::new(NodeSpec::davinci(), 1.1)
+    }
+
+    #[test]
+    fn hpl_power_matches_top500_submission() {
+        // Table 4 context: 7.4 MW for 3300 nodes under HPL.
+        let m = leo_model();
+        let mw = m.fleet_power_mw(3300, Utilization::hpl());
+        assert!((mw - 7.4).abs() / 7.4 < 0.02, "{mw} MW");
+    }
+
+    #[test]
+    fn green500_is_32_gflops_per_watt() {
+        let m = leo_model();
+        let g = m.gflops_per_watt(238.7e15, 3300, Utilization::hpl());
+        assert!((g - 32.2).abs() < 1.0, "{g}");
+    }
+
+    #[test]
+    fn pue_overhead_is_10_percent() {
+        let m = leo_model();
+        let it = m.fleet_power_mw(3300, Utilization::hpl());
+        let fac = m.facility_power_mw(3300, Utilization::hpl());
+        assert!((fac / it - 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_machine_fits_the_10mw_envelope() {
+        // §2.6: 10 MW IT load supports the whole machine under HPL-class
+        // load on the Booster plus the DC partition.
+        let m = leo_model();
+        let booster = m.fleet_power_mw(3456, Utilization::hpl());
+        assert!(booster < 8.0, "{booster}");
+    }
+
+    #[test]
+    fn idle_is_much_cheaper_than_loaded() {
+        let m = leo_model();
+        let idle = m.node_power_w(Utilization::idle());
+        let hpl = m.node_power_w(Utilization::hpl());
+        assert!(idle < 0.4 * hpl, "idle {idle} vs hpl {hpl}");
+    }
+
+    #[test]
+    fn cpu_only_accounting_excludes_gpus() {
+        let m = leo_model();
+        let with = m.node_power_w(Utilization {
+            cpu: 0.5,
+            gpu: Some(0.0),
+        });
+        let without = m.node_power_w(Utilization {
+            cpu: 0.5,
+            gpu: None,
+        });
+        assert!(with > without + 4.0 * 50.0);
+    }
+
+    #[test]
+    fn energy_integral_matches_hand_calc() {
+        let m = leo_model();
+        let u = Utilization {
+            cpu: 0.35,
+            gpu: Some(0.086),
+        };
+        let kwh = m.energy_kwh(12, u, 439.0);
+        // QE row of Table 6: 1.14 kWh.
+        assert!((kwh - 1.14).abs() < 0.06, "{kwh}");
+    }
+
+    #[test]
+    fn dvfs_power_and_time_factors() {
+        let p = DvfsPoint { scale: 0.8 };
+        assert!((p.power_factor() - 0.64).abs() < 1e-12);
+        assert!((p.time_factor(1.0) - 1.25).abs() < 1e-12);
+        assert!((p.time_factor(0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimizer_downclocks_memory_bound_jobs() {
+        let m = leo_model();
+        let u = Utilization::hpl();
+        // Memory-bound: slowdown tiny, so deep downclock wins.
+        let mem = best_workpoint(&m, u, 0.1, 1.10);
+        // Compute-bound with tight slowdown bound: stays near nominal.
+        let cpu = best_workpoint(&m, u, 1.0, 1.05);
+        assert!(mem.scale < cpu.scale, "{} vs {}", mem.scale, cpu.scale);
+        assert!(cpu.scale > 0.9);
+    }
+
+    #[test]
+    fn cap_scale_brings_fleet_under_cap() {
+        let m = leo_model();
+        let u = Utilization::hpl();
+        let uncapped = m.fleet_power_mw(3300, u);
+        let cap = uncapped * 0.8;
+        let p = cap_scale(&m, 3300, u, cap).unwrap();
+        assert!(p.scale < 1.0);
+        let idle = m.node_power_w(Utilization::idle());
+        let dynamic = m.node_power_w(u) - idle;
+        let capped_mw = 3300.0 * (idle + dynamic * p.power_factor()) / 1e6;
+        assert!(capped_mw <= cap * 1.001, "{capped_mw} vs {cap}");
+    }
+
+    #[test]
+    fn cap_scale_none_when_impossible() {
+        let m = leo_model();
+        assert!(cap_scale(&m, 3300, Utilization::hpl(), 0.5).is_none());
+    }
+}

@@ -1,0 +1,245 @@
+//! Software ecosystem (paper §2.5): the environment-modules / Spack-style
+//! stack LEONARDO ships — architecture-specific suites (Intel OneAPI,
+//! NVIDIA HPC SDK, GNU), category-organised scientific software, and a
+//! dependency-resolving module loader with conflict detection (what
+//! `module load` does on the real frontends).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::metrics::Table;
+
+/// A software package in the module tree.
+#[derive(Debug, Clone)]
+pub struct Package {
+    pub name: &'static str,
+    pub version: &'static str,
+    pub category: &'static str,
+    /// Module names this one needs loaded first.
+    pub requires: Vec<&'static str>,
+    /// Module names this one cannot coexist with (compiler families,
+    /// MPI implementations).
+    pub conflicts: Vec<&'static str>,
+}
+
+/// The §2.5 baseline stack.
+pub fn leonardo_stack() -> Vec<Package> {
+    fn p(
+        name: &'static str,
+        version: &'static str,
+        category: &'static str,
+        requires: Vec<&'static str>,
+        conflicts: Vec<&'static str>,
+    ) -> Package {
+        Package {
+            name,
+            version,
+            category,
+            requires,
+            conflicts,
+        }
+    }
+    vec![
+        // compilers
+        p("gcc", "12.2.0", "compilers", vec![], vec!["intel-oneapi"]),
+        p("intel-oneapi", "2023.1", "compilers", vec![], vec!["gcc"]),
+        p("nvhpc", "23.5", "compilers", vec![], vec![]),
+        p("cuda", "12.1", "compilers", vec![], vec![]),
+        // MPI
+        p("openmpi", "4.1.5", "mpi", vec!["gcc"], vec!["intel-mpi"]),
+        p("intel-mpi", "2021.9", "mpi", vec!["intel-oneapi"], vec!["openmpi"]),
+        // numerical libraries
+        p("mkl", "2023.1", "numerics", vec!["intel-oneapi"], vec![]),
+        p("gsl", "2.7", "numerics", vec!["gcc"], vec![]),
+        p("cudnn", "8.9", "ai", vec!["cuda"], vec![]),
+        p("nccl", "2.18", "ai", vec!["cuda"], vec![]),
+        // tools
+        p("gdb", "13.1", "tools", vec![], vec![]),
+        p("vtune", "2023.1", "tools", vec!["intel-oneapi"], vec![]),
+        p("nsight", "2023.2", "tools", vec!["cuda"], vec![]),
+        p("valgrind", "3.21", "tools", vec![], vec![]),
+        p("singularity", "3.11", "containers", vec![], vec![]),
+        p("pyxis", "0.15", "containers", vec!["singularity"], vec![]),
+        // scientific categories (§2.5: chemistry-physics, deep learning,
+        // life sciences, meteo)
+        p("quantum-espresso", "7.2", "chemistry-physics", vec!["openmpi", "gsl"], vec![]),
+        p("specfem3d", "4.0", "chemistry-physics", vec!["openmpi"], vec![]),
+        p("pytorch", "2.0", "deep-learning", vec!["cuda", "cudnn", "nccl"], vec![]),
+        p("gromacs", "2023", "life-sciences", vec!["openmpi"], vec![]),
+        p("wrf", "4.5", "meteo", vec!["openmpi"], vec![]),
+    ]
+}
+
+/// The module environment: resolves `load` requests like Lmod does.
+#[derive(Debug, Default)]
+pub struct ModuleEnv {
+    index: BTreeMap<&'static str, Package>,
+    loaded: BTreeSet<&'static str>,
+}
+
+impl ModuleEnv {
+    pub fn new(stack: Vec<Package>) -> Self {
+        let mut index = BTreeMap::new();
+        for p in stack {
+            index.insert(p.name, p);
+        }
+        ModuleEnv {
+            index,
+            loaded: BTreeSet::new(),
+        }
+    }
+
+    pub fn loaded(&self) -> Vec<&'static str> {
+        self.loaded.iter().copied().collect()
+    }
+
+    /// Load a module and (recursively) its requirements.
+    /// Fails on unknown modules, dependency cycles and conflicts.
+    pub fn load(&mut self, name: &str) -> Result<Vec<&'static str>, String> {
+        let mut order = Vec::new();
+        let mut visiting = BTreeSet::new();
+        self.resolve(name, &mut order, &mut visiting)?;
+        // conflict check against everything already loaded + the batch
+        for &m in &order {
+            let pkg = &self.index[m];
+            for &c in &pkg.conflicts {
+                if self.loaded.contains(c) || order.contains(&c) {
+                    return Err(format!("{m} conflicts with loaded {c}"));
+                }
+            }
+        }
+        for &m in &order {
+            self.loaded.insert(m);
+        }
+        Ok(order)
+    }
+
+    fn resolve(
+        &self,
+        name: &str,
+        order: &mut Vec<&'static str>,
+        visiting: &mut BTreeSet<String>,
+    ) -> Result<(), String> {
+        let pkg = self
+            .index
+            .get(name)
+            .ok_or_else(|| format!("unknown module '{name}'"))?;
+        if self.loaded.contains(pkg.name) || order.contains(&pkg.name) {
+            return Ok(());
+        }
+        if !visiting.insert(name.to_string()) {
+            return Err(format!("dependency cycle through '{name}'"));
+        }
+        for &req in &pkg.requires {
+            self.resolve(req, order, visiting)?;
+        }
+        visiting.remove(name);
+        order.push(pkg.name);
+        Ok(())
+    }
+
+    /// Unload a module; refuses while something loaded requires it.
+    pub fn unload(&mut self, name: &str) -> Result<(), String> {
+        for &m in &self.loaded {
+            if m != name && self.index[m].requires.contains(&name) {
+                return Err(format!("'{m}' still requires '{name}'"));
+            }
+        }
+        if self.loaded.remove(name) {
+            Ok(())
+        } else {
+            Err(format!("'{name}' is not loaded"))
+        }
+    }
+
+    /// `module avail`-style category listing.
+    pub fn avail(&self) -> Table {
+        let mut t = Table::new(
+            "Software ecosystem (§2.5)",
+            &["Category", "Modules"],
+        );
+        let mut by_cat: BTreeMap<&str, Vec<String>> = BTreeMap::new();
+        for p in self.index.values() {
+            by_cat
+                .entry(p.category)
+                .or_default()
+                .push(format!("{}/{}", p.name, p.version));
+        }
+        for (cat, mods) in by_cat {
+            t.row(vec![cat.to_string(), mods.join(", ")]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> ModuleEnv {
+        ModuleEnv::new(leonardo_stack())
+    }
+
+    #[test]
+    fn load_resolves_transitive_dependencies_in_order() {
+        let mut e = env();
+        let order = e.load("pytorch").unwrap();
+        // cuda before cudnn/nccl, all before pytorch
+        let pos = |m: &str| order.iter().position(|&x| x == m).unwrap();
+        assert!(pos("cuda") < pos("cudnn"));
+        assert!(pos("cuda") < pos("nccl"));
+        assert!(pos("cudnn") < pos("pytorch"));
+        assert!(e.loaded().contains(&"pytorch"));
+    }
+
+    #[test]
+    fn compiler_families_conflict() {
+        let mut e = env();
+        e.load("gcc").unwrap();
+        let err = e.load("intel-oneapi").unwrap_err();
+        assert!(err.contains("conflicts"), "{err}");
+        // And transitively: intel-mpi needs intel-oneapi which conflicts.
+        let err = e.load("intel-mpi").unwrap_err();
+        assert!(err.contains("conflicts"), "{err}");
+    }
+
+    #[test]
+    fn load_is_idempotent() {
+        let mut e = env();
+        e.load("quantum-espresso").unwrap();
+        let n = e.loaded().len();
+        let second = e.load("quantum-espresso").unwrap();
+        assert!(second.is_empty());
+        assert_eq!(e.loaded().len(), n);
+    }
+
+    #[test]
+    fn unload_protects_dependents() {
+        let mut e = env();
+        e.load("pytorch").unwrap();
+        let err = e.unload("cuda").unwrap_err();
+        assert!(err.contains("requires"), "{err}");
+        e.unload("pytorch").unwrap();
+        e.unload("nsight").unwrap_err(); // never loaded
+    }
+
+    #[test]
+    fn unknown_module_is_an_error() {
+        let mut e = env();
+        assert!(e.load("fortranpp").is_err());
+    }
+
+    #[test]
+    fn avail_covers_paper_categories() {
+        let t = env().avail();
+        let cats: Vec<&str> = t.rows.iter().map(|r| r[0].as_str()).collect();
+        for want in [
+            "chemistry-physics",
+            "deep-learning",
+            "life-sciences",
+            "meteo",
+            "containers",
+        ] {
+            assert!(cats.contains(&want), "missing {want}");
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! The DDN/Lustre storage system (paper §2.3, Table 3, Table 5).
+//!
+//! Two tiers — a full-flash Fast Tier (31 x ES400NVX2) and a Capacity
+//! Tier (31 x ES7990X + SS9012 expansions, 4 x ES400NV metadata) — mapped
+//! onto three Lustre namespaces (/home, /archive, /scratch). Capacities
+//! are *derived* from the component inventory of Appendix B (drive counts
+//! x sizes x the declustered-RAID efficiency), and an IOR/mdtest-style
+//! workload engine reproduces the IO500 submission of Table 5.
+
+pub mod io500;
+
+
+
+/// Declustered-RAID (8+2 + spare) usable fraction observed across all
+/// three namespaces of Table 3 (net/raw = 0.766 on each; see tests).
+pub const RAID_EFFICIENCY: f64 = 0.766;
+
+/// A DDN appliance model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Appliance {
+    pub name: &'static str,
+    /// Raw media capacity, TB.
+    pub raw_tb: f64,
+    /// Sustained media write bandwidth, GB/s.
+    pub write_gbs: f64,
+    /// Sustained media read bandwidth, GB/s.
+    pub read_gbs: f64,
+    /// InfiniBand ports aggregate, Gbps.
+    pub ports_gbps: f64,
+    /// Metadata capability, kIOP/s (0 for pure data movers).
+    pub md_kiops: f64,
+}
+
+impl Appliance {
+    /// Fast-tier ES400NVX2: 24 x 7.68 TB NVMe, 4 x HDR (800 Gbps).
+    /// Media rates are the DDN-class sustained figures that reproduce the
+    /// ior-easy results of Table 5 (51/64 GB/s write/read per appliance).
+    pub fn es400nvx2() -> Self {
+        Appliance {
+            name: "ES400NVX2",
+            raw_tb: 24.0 * 7.68,
+            write_gbs: 51.3,
+            read_gbs: 64.3,
+            ports_gbps: 800.0,
+            md_kiops: 0.0, // data mover; metadata lives on the ES400NVs
+        }
+    }
+
+    /// Capacity-tier module: ES7990X head + 2 x SS9012 = 246 x 18 TB HDD,
+    /// 4 x HDR100 (400 Gbps).
+    pub fn es7990x() -> Self {
+        Appliance {
+            name: "ES7990X",
+            raw_tb: 246.0 * 18.0,
+            write_gbs: 20.0,
+            read_gbs: 22.0,
+            ports_gbps: 400.0,
+            md_kiops: 0.0,
+        }
+    }
+
+    /// Flash metadata unit (ES400NV / SFA400NVX class): 21 x 3.84 TB.
+    pub fn es400nv() -> Self {
+        Appliance {
+            name: "ES400NV",
+            raw_tb: 21.0 * 3.84,
+            write_gbs: 30.0,
+            read_gbs: 40.0,
+            ports_gbps: 800.0,
+            md_kiops: 320.0,
+        }
+    }
+
+    /// Deliverable bandwidth is media- or port-limited, GB/s.
+    pub fn deliverable_write_gbs(&self) -> f64 {
+        self.write_gbs.min(self.ports_gbps / 8.0)
+    }
+
+    pub fn deliverable_read_gbs(&self) -> f64 {
+        self.read_gbs.min(self.ports_gbps / 8.0)
+    }
+}
+
+/// A Lustre namespace backed by a pool of appliances (one Table 3 row).
+#[derive(Debug, Clone)]
+pub struct Namespace {
+    pub mount: &'static str,
+    pub data_appliances: Vec<(Appliance, u32)>,
+    pub md_appliances: Vec<(Appliance, u32)>,
+    /// Vendor-quoted sustained namespace bandwidth, GB/s (Table 3) —
+    /// mixed-workload figure below the raw media aggregate.
+    pub nominal_bw_gbs: f64,
+}
+
+impl Namespace {
+    pub fn raw_tb(&self) -> f64 {
+        self.data_appliances
+            .iter()
+            .map(|(a, n)| a.raw_tb * *n as f64)
+            .sum()
+    }
+
+    /// Net usable size in PiB after RAID overhead (Table 3 "NetSize").
+    pub fn net_pib(&self) -> f64 {
+        self.raw_tb() * RAID_EFFICIENCY * 1e12 / (1u64 << 50) as f64
+    }
+
+    /// Aggregate deliverable write/read bandwidth of the pool, GB/s.
+    pub fn peak_write_gbs(&self) -> f64 {
+        self.data_appliances
+            .iter()
+            .map(|(a, n)| a.deliverable_write_gbs() * *n as f64)
+            .sum()
+    }
+
+    pub fn peak_read_gbs(&self) -> f64 {
+        self.data_appliances
+            .iter()
+            .map(|(a, n)| a.deliverable_read_gbs() * *n as f64)
+            .sum()
+    }
+
+    /// Aggregate metadata rate, kIOP/s.
+    pub fn md_kiops(&self) -> f64 {
+        self.md_appliances
+            .iter()
+            .chain(self.data_appliances.iter())
+            .map(|(a, n)| a.md_kiops * *n as f64)
+            .sum()
+    }
+
+    /// Number of object storage targets exposed (one OST per data
+    /// appliance controller pair, the DDN EXAScaler layout).
+    pub fn ost_count(&self) -> u32 {
+        self.data_appliances.iter().map(|(_, n)| *n * 2).sum()
+    }
+}
+
+/// The whole storage system (Table 3).
+#[derive(Debug, Clone)]
+pub struct StorageSystem {
+    pub namespaces: Vec<Namespace>,
+}
+
+impl StorageSystem {
+    /// LEONARDO's layout (Table 3 / Appendix B).
+    pub fn leonardo() -> Self {
+        StorageSystem {
+            namespaces: vec![
+                Namespace {
+                    mount: "/home",
+                    data_appliances: vec![(Appliance::es400nvx2(), 4)],
+                    md_appliances: vec![],
+                    nominal_bw_gbs: 240.0,
+                },
+                Namespace {
+                    mount: "/archive",
+                    data_appliances: vec![(Appliance::es7990x(), 18)],
+                    md_appliances: vec![(Appliance::es400nv(), 2)],
+                    nominal_bw_gbs: 360.0,
+                },
+                Namespace {
+                    mount: "/scratch",
+                    data_appliances: vec![
+                        (Appliance::es7990x(), 13),
+                        (Appliance::es400nvx2(), 27),
+                    ],
+                    md_appliances: vec![(Appliance::es400nv(), 2)],
+                    nominal_bw_gbs: 1300.0,
+                },
+            ],
+        }
+    }
+
+    pub fn namespace(&self, mount: &str) -> Option<&Namespace> {
+        self.namespaces.iter().find(|n| n.mount == mount)
+    }
+
+    /// Total DDN appliances (paper: 66 overall).
+    pub fn appliance_count(&self) -> u32 {
+        self.namespaces
+            .iter()
+            .flat_map(|n| n.data_appliances.iter().chain(n.md_appliances.iter()))
+            .map(|(_, n)| *n)
+            .sum()
+    }
+
+    /// Fast-tier raw capacity, PB (paper: 5.7 PB).
+    pub fn fast_tier_raw_pb(&self) -> f64 {
+        self.namespaces
+            .iter()
+            .flat_map(|n| n.data_appliances.iter())
+            .filter(|(a, _)| a.name == "ES400NVX2")
+            .map(|(a, n)| a.raw_tb * *n as f64 / 1000.0)
+            .sum()
+    }
+
+    /// Capacity-tier raw capacity, PB (paper: 137.6 PB).
+    pub fn capacity_tier_raw_pb(&self) -> f64 {
+        self.namespaces
+            .iter()
+            .flat_map(|n| n.data_appliances.iter())
+            .filter(|(a, _)| a.name == "ES7990X")
+            .map(|(a, n)| a.raw_tb * *n as f64 / 1000.0)
+            .sum()
+    }
+}
+
+/// Lustre file striping: a file striped over `stripe_count` OSTs moves at
+/// min(client link, stripe_count x per-OST share) — near-wire speed for
+/// wide stripes (§2.3).
+#[derive(Debug, Clone, Copy)]
+pub struct Stripe {
+    pub count: u32,
+    pub size_mib: u32,
+}
+
+impl Stripe {
+    /// Single-client file bandwidth, GB/s.
+    pub fn file_bw_gbs(
+        &self,
+        client_link_gbs: f64,
+        ns: &Namespace,
+        write: bool,
+    ) -> f64 {
+        let pool = if write {
+            ns.peak_write_gbs()
+        } else {
+            ns.peak_read_gbs()
+        };
+        let per_ost = pool / ns.ost_count() as f64;
+        client_link_gbs.min(self.count.min(ns.ost_count()) as f64 * per_ost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_net_sizes() {
+        let s = StorageSystem::leonardo();
+        let home = s.namespace("/home").unwrap();
+        let archive = s.namespace("/archive").unwrap();
+        let scratch = s.namespace("/scratch").unwrap();
+        // Table 3: 0.5 / 53.9 / 42.4 PiB net.
+        assert!((home.net_pib() - 0.5).abs() < 0.03, "{}", home.net_pib());
+        assert!(
+            (archive.net_pib() - 53.9).abs() < 1.0,
+            "{}",
+            archive.net_pib()
+        );
+        assert!(
+            (scratch.net_pib() - 42.4).abs() < 1.2,
+            "{}",
+            scratch.net_pib()
+        );
+    }
+
+    #[test]
+    fn table3_bandwidths() {
+        let s = StorageSystem::leonardo();
+        assert_eq!(s.namespace("/home").unwrap().nominal_bw_gbs, 240.0);
+        assert_eq!(s.namespace("/archive").unwrap().nominal_bw_gbs, 360.0);
+        assert_eq!(s.namespace("/scratch").unwrap().nominal_bw_gbs, 1300.0);
+        // The nominal figure must not exceed what the media can deliver.
+        for ns in &s.namespaces {
+            assert!(
+                ns.nominal_bw_gbs <= ns.peak_read_gbs() * 1.05,
+                "{}: nominal {} > peak read {}",
+                ns.mount,
+                ns.nominal_bw_gbs,
+                ns.peak_read_gbs()
+            );
+        }
+    }
+
+    #[test]
+    fn appliance_census_is_66() {
+        // §2.3: "the storage system consists of 66 DDN's appliances".
+        assert_eq!(StorageSystem::leonardo().appliance_count(), 66);
+    }
+
+    #[test]
+    fn tier_raw_capacities() {
+        let s = StorageSystem::leonardo();
+        assert!((s.fast_tier_raw_pb() - 5.7).abs() < 0.1, "{}", s.fast_tier_raw_pb());
+        assert!(
+            (s.capacity_tier_raw_pb() - 137.3).abs() < 1.0,
+            "{}",
+            s.capacity_tier_raw_pb()
+        );
+    }
+
+    #[test]
+    fn archive_uses_es7990x_only() {
+        let s = StorageSystem::leonardo();
+        let a = s.namespace("/archive").unwrap();
+        assert_eq!(a.data_appliances.len(), 1);
+        assert_eq!(a.data_appliances[0].0.name, "ES7990X");
+        assert_eq!(a.data_appliances[0].1, 18);
+    }
+
+    #[test]
+    fn port_limits_respected() {
+        let a = Appliance::es400nvx2();
+        // 800 Gbps = 100 GB/s ports; media 64 GB/s read is the binding cap.
+        assert_eq!(a.deliverable_read_gbs(), a.read_gbs);
+        assert!(a.deliverable_read_gbs() <= a.ports_gbps / 8.0);
+    }
+
+    #[test]
+    fn wide_stripes_reach_near_wire_speed() {
+        let s = StorageSystem::leonardo();
+        let scratch = s.namespace("/scratch").unwrap();
+        // A 400 Gbps (50 GB/s) client striping wide saturates its link.
+        let wide = Stripe {
+            count: 64,
+            size_mib: 16,
+        };
+        assert!((wide.file_bw_gbs(50.0, scratch, false) - 50.0).abs() < 1e-9);
+        // A single-OST file is OST-bound instead.
+        let narrow = Stripe {
+            count: 1,
+            size_mib: 16,
+        };
+        assert!(narrow.file_bw_gbs(50.0, scratch, false) < 30.0);
+    }
+
+    #[test]
+    fn stripe_bw_monotone_in_count() {
+        let s = StorageSystem::leonardo();
+        let ns = s.namespace("/scratch").unwrap();
+        let mut last = 0.0;
+        for c in [1u32, 2, 4, 8, 16, 128] {
+            let bw = Stripe {
+                count: c,
+                size_mib: 4,
+            }
+            .file_bw_gbs(1e9, ns, true);
+            assert!(bw >= last);
+            last = bw;
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Monitoring and energy telemetry (paper §2.5-2.6): the Atos SMC
+//! xScale / Prometheus-style metric pipeline, the Bull Energy Optimizer's
+//! IPMI/SNMP time-profile logging, and a Parastation-HealthChecker-like
+//! node health framework.
+//!
+//! Everything is virtual-time and deterministic so campaign runs are
+//! exactly reproducible: the scheduler/power layers push samples, the
+//! [`MetricStore`] aggregates them, and reports (energy profiles, PUE
+//! accounting, health summaries) come out as [`crate::metrics::Table`]s.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::{f1, f2, Table};
+
+/// One time-stamped sample of a named series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub t: f64,
+    pub value: f64,
+}
+
+/// An append-only time series (samples must arrive in time order, the
+/// way a scrape loop produces them).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<Sample>,
+}
+
+impl Series {
+    pub fn push(&mut self, t: f64, value: f64) {
+        if let Some(last) = self.samples.last() {
+            assert!(t >= last.t, "out-of-order sample: {t} after {}", last.t);
+        }
+        self.samples.push(Sample { t, value });
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn last(&self) -> Option<Sample> {
+        self.samples.last().copied()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().fold(f64::NEG_INFINITY, |m, s| m.max(s.value))
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|s| s.value).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Trapezoidal integral over time — watts in, joules out.
+    pub fn integral(&self) -> f64 {
+        self.samples
+            .windows(2)
+            .map(|w| 0.5 * (w[0].value + w[1].value) * (w[1].t - w[0].t))
+            .sum()
+    }
+}
+
+/// The metric store: named series, Prometheus-flavoured.
+#[derive(Debug, Clone, Default)]
+pub struct MetricStore {
+    series: BTreeMap<String, Series>,
+}
+
+impl MetricStore {
+    pub fn record(&mut self, name: &str, t: f64, value: f64) {
+        self.series.entry(name.to_string()).or_default().push(t, value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Energy (kWh) of a power series logged in watts.
+    pub fn energy_kwh(&self, name: &str) -> f64 {
+        self.get(name).map_or(0.0, |s| s.integral() / 3.6e6)
+    }
+
+    /// The Bull Energy Optimizer report: per-series mean/max/integral.
+    pub fn energy_report(&self) -> Table {
+        let mut t = Table::new(
+            "Energy telemetry (Bull Energy Optimizer analogue)",
+            &["Series", "Samples", "Mean", "Max", "Energy [kWh]"],
+        );
+        for (name, s) in &self.series {
+            t.row(vec![
+                name.clone(),
+                s.len().to_string(),
+                f1(s.mean()),
+                f1(s.max()),
+                f2(s.integral() / 3.6e6),
+            ]);
+        }
+        t
+    }
+}
+
+/// Health states the checker reports (Parastation HealthChecker model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Ok,
+    Degraded,
+    Failed,
+}
+
+/// A health check over node telemetry.
+pub struct HealthCheck {
+    pub name: &'static str,
+    /// (metric name, warn threshold, fail threshold); value above warn
+    /// => Degraded, above fail => Failed.
+    pub metric: &'static str,
+    pub warn: f64,
+    pub fail: f64,
+}
+
+impl HealthCheck {
+    /// LEONARDO's §2.6 operating envelope: warm-water inlet at 37 C,
+    /// GPUs capped by DCGM when the energy threshold is passed.
+    pub fn standard_set() -> Vec<HealthCheck> {
+        vec![
+            HealthCheck {
+                name: "gpu-temperature",
+                metric: "gpu_temp_c",
+                warn: 85.0,
+                fail: 95.0,
+            },
+            HealthCheck {
+                name: "coolant-inlet",
+                metric: "inlet_temp_c",
+                warn: 40.0,
+                fail: 45.0,
+            },
+            HealthCheck {
+                name: "node-power",
+                metric: "node_power_w",
+                warn: 2400.0,
+                fail: 2800.0,
+            },
+            HealthCheck {
+                name: "ib-link-errors",
+                metric: "ib_symbol_errors_per_s",
+                warn: 1.0,
+                fail: 100.0,
+            },
+        ]
+    }
+
+    pub fn evaluate(&self, store: &MetricStore) -> Health {
+        let Some(series) = store.get(self.metric) else {
+            return Health::Ok; // no data, no alarm (scrape gap)
+        };
+        let Some(last) = series.last() else {
+            return Health::Ok;
+        };
+        if last.value >= self.fail {
+            Health::Failed
+        } else if last.value >= self.warn {
+            Health::Degraded
+        } else {
+            Health::Ok
+        }
+    }
+}
+
+/// Run the standard check set and summarise.
+pub fn health_summary(store: &MetricStore) -> (Table, Health) {
+    let mut worst = Health::Ok;
+    let mut t = Table::new(
+        "Node health (Parastation HealthChecker analogue)",
+        &["Check", "Metric", "Last", "State"],
+    );
+    for check in HealthCheck::standard_set() {
+        let state = check.evaluate(store);
+        if state == Health::Failed
+            || (state == Health::Degraded && worst == Health::Ok)
+        {
+            worst = state;
+        }
+        let last = store
+            .get(check.metric)
+            .and_then(Series::last)
+            .map(|s| f1(s.value))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            check.name.to_string(),
+            check.metric.to_string(),
+            last,
+            format!("{state:?}"),
+        ]);
+    }
+    (t, worst)
+}
+
+/// Log a job's power profile into the store, sampling every `dt` seconds
+/// — what the IPMI/SNMP collectors do on the real machine.
+pub fn log_job_power(
+    store: &mut MetricStore,
+    series: &str,
+    start: f64,
+    end: f64,
+    watts: f64,
+    dt: f64,
+) {
+    let mut t = start;
+    while t < end {
+        store.record(series, t, watts);
+        t += dt;
+    }
+    store.record(series, end, watts);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_integral_is_trapezoidal() {
+        let mut s = Series::default();
+        s.push(0.0, 100.0);
+        s.push(10.0, 100.0);
+        assert!((s.integral() - 1000.0).abs() < 1e-9);
+        s.push(20.0, 0.0); // ramp down
+        assert!((s.integral() - 1500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-order")]
+    fn series_rejects_time_travel() {
+        let mut s = Series::default();
+        s.push(5.0, 1.0);
+        s.push(4.0, 1.0);
+    }
+
+    #[test]
+    fn energy_kwh_of_constant_load() {
+        let mut store = MetricStore::default();
+        // 2238 W for one hour = 2.238 kWh.
+        log_job_power(&mut store, "node0_power_w", 0.0, 3600.0, 2238.0, 60.0);
+        let kwh = store.energy_kwh("node0_power_w");
+        assert!((kwh - 2.238).abs() < 1e-6, "{kwh}");
+    }
+
+    #[test]
+    fn health_thresholds() {
+        let mut store = MetricStore::default();
+        store.record("gpu_temp_c", 0.0, 70.0);
+        let (_, h) = health_summary(&store);
+        assert_eq!(h, Health::Ok);
+        store.record("gpu_temp_c", 1.0, 88.0);
+        let (_, h) = health_summary(&store);
+        assert_eq!(h, Health::Degraded);
+        store.record("gpu_temp_c", 2.0, 96.0);
+        let (table, h) = health_summary(&store);
+        assert_eq!(h, Health::Failed);
+        assert_eq!(table.rows.len(), 4);
+    }
+
+    #[test]
+    fn missing_metric_is_not_an_alarm() {
+        let store = MetricStore::default();
+        let (_, h) = health_summary(&store);
+        assert_eq!(h, Health::Ok);
+    }
+
+    #[test]
+    fn report_table_lists_all_series() {
+        let mut store = MetricStore::default();
+        store.record("a", 0.0, 1.0);
+        store.record("b", 0.0, 2.0);
+        let t = store.energy_report();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(store.names(), vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,397 @@
+//! The dragonfly+ interconnect topology (paper §2.2, Fig 4).
+//!
+//! LEONARDO's fabric is a two-level hierarchy: inside each of the 23
+//! cells, leaf and spine switches form a fully-connected bipartite graph
+//! (the "+" of dragonfly+); at the top level the 23 cells are fully
+//! connected through spine up-links. This module *constructs* that graph
+//! from a [`MachineConfig`] — spine counts, per-cell-type leaf counts,
+//! node attachments, global link budget — and provides minimal/Valiant
+//! routing with the paper's per-hop latency budget.
+//!
+//! Paper invariants reproduced (and unit-tested):
+//! * 18 spines per cell, 40-port 200G mode, 22 up / 18 down (pruning
+//!   factor 18/22 = 0.82);
+//! * 18 leaves in Booster/Hybrid cells, 16 in DC cells, 13 in the I/O
+//!   cell, HDR100 toward nodes;
+//! * Booster nodes attach to two leaves (dual rail), DC nodes to one;
+//! * 823 switches in total (including the 4 Ethernet gateways);
+//! * worst-case node-to-node latency ~3 us, NIC-dominated (§2.2).
+
+
+
+use crate::config::{CellKind, MachineConfig};
+
+/// Spines per cell — constant across cell types (§2.2).
+pub const SPINES_PER_CELL: u32 = 18;
+/// Up-links per spine toward other cells (40-port switch, 18 down).
+pub const SPINE_UPLINKS: u32 = 22;
+/// InfiniBand gateways to external networks (§2.2).
+pub const GATEWAYS: u32 = 4;
+/// Per-port HDR bandwidth in the spine layer, Gbps.
+pub const HDR_GBPS: f64 = 200.0;
+/// Leaf-to-node HDR100 bandwidth, Gbps.
+pub const HDR100_GBPS: f64 = 100.0;
+
+/// Per-hop latency budget (§2.2).
+pub mod latency {
+    /// Switch port-to-port latency, ns (QM8700).
+    pub const SWITCH_NS: f64 = 90.0;
+    /// NIC latency per side, ns (ConnectX-6).
+    pub const NIC_NS: f64 = 600.0;
+    /// Optical fiber propagation, ns per meter (~c/1.5).
+    pub const FIBER_NS_PER_M: f64 = 5.0;
+    /// Fiber runs, meters (§2.2).
+    pub const NODE_LEAF_M: f64 = 1.0;
+    pub const LEAF_SPINE_M: f64 = 5.0;
+    pub const SPINE_SPINE_M: f64 = 20.0;
+}
+
+/// Routing policy across the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Shortest path (leaf-spine-global-spine-leaf between cells).
+    Minimal,
+    /// Valiant load balancing through a random intermediate cell —
+    /// the adaptive-routing worst case that bounds latency (§2.2).
+    Valiant,
+}
+
+/// Where a node sits in the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeAddr {
+    pub cell: u32,
+    /// Primary leaf within the cell.
+    pub leaf: u32,
+    /// Position under the leaf.
+    pub port: u32,
+    /// Rails (1 = single HDR100 uplink, 2 = dual rail).
+    pub rails: u32,
+}
+
+/// Summary of a route through the fabric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Route {
+    pub switch_hops: u32,
+    pub fiber_m: f64,
+    /// Inter-cell (global) links traversed.
+    pub global_hops: u32,
+}
+
+impl Route {
+    /// End-to-end small-message latency over this route, ns.
+    pub fn latency_ns(&self) -> f64 {
+        2.0 * latency::NIC_NS
+            + self.switch_hops as f64 * latency::SWITCH_NS
+            + self.fiber_m * latency::FIBER_NS_PER_M
+    }
+}
+
+/// One cell of the fabric.
+#[derive(Debug, Clone)]
+pub struct CellTopo {
+    pub kind: CellKind,
+    pub spines: u32,
+    pub leaves: u32,
+    pub nodes: u32,
+    /// Rails per node (2 for Booster-style attach, 1 for DC).
+    pub rails: u32,
+}
+
+/// The whole fabric.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub cells: Vec<CellTopo>,
+    /// Global links between each unordered pair of cells.
+    pub links_per_cell_pair: u32,
+    /// Cumulative node counts for address lookup.
+    starts: Vec<u32>,
+}
+
+impl Topology {
+    /// Wire the fabric for a machine description.
+    pub fn build(cfg: &MachineConfig) -> Self {
+        let cells: Vec<CellTopo> = cfg
+            .cells
+            .iter()
+            .map(|c| {
+                let leaves = match c.kind {
+                    CellKind::Booster | CellKind::Hybrid => 18,
+                    CellKind::DataCentric => 16,
+                    CellKind::Io => 13,
+                };
+                let rails = match c.kind {
+                    CellKind::DataCentric => 1,
+                    _ => 2,
+                };
+                CellTopo {
+                    kind: c.kind,
+                    spines: SPINES_PER_CELL,
+                    leaves,
+                    nodes: c.nodes(),
+                    rails,
+                }
+            })
+            .collect();
+        // Full cell-to-cell connectivity: every spine spends its up-links
+        // one per peer cell; a pair of cells is joined by one link per
+        // spine pair up to the up-link budget.
+        let n_cells = cells.len() as u32;
+        let links_per_cell_pair = if n_cells > 1 {
+            (SPINES_PER_CELL * SPINE_UPLINKS / (n_cells - 1)).min(SPINES_PER_CELL)
+        } else {
+            0
+        };
+        let mut starts = Vec::with_capacity(cells.len() + 1);
+        let mut acc = 0;
+        for c in &cells {
+            starts.push(acc);
+            acc += c.nodes;
+        }
+        starts.push(acc);
+        Topology {
+            cells,
+            links_per_cell_pair,
+            starts,
+        }
+    }
+
+    pub fn total_nodes(&self) -> u32 {
+        *self.starts.last().unwrap()
+    }
+
+    /// Leaf + spine switches, plus the external gateways.
+    pub fn total_switches(&self) -> u32 {
+        self.cells
+            .iter()
+            .map(|c| c.spines + c.leaves)
+            .sum::<u32>()
+            + GATEWAYS
+    }
+
+    /// Global (inter-cell) links in the whole fabric.
+    pub fn total_global_links(&self) -> u32 {
+        let n = self.cells.len() as u32;
+        n * (n - 1) / 2 * self.links_per_cell_pair
+    }
+
+    /// Address of a node by global index (nodes are numbered cell-major,
+    /// round-robin across the cell's leaves — the wiring ATOS uses to
+    /// balance leaf down-links).
+    pub fn node_addr(&self, node: u32) -> NodeAddr {
+        assert!(node < self.total_nodes(), "node {node} out of range");
+        let cell = match self.starts.binary_search(&node) {
+            Ok(i) if i + 1 < self.starts.len() => i,
+            Ok(i) => i - 1,
+            Err(i) => i - 1,
+        };
+        let c = &self.cells[cell];
+        let local = node - self.starts[cell];
+        NodeAddr {
+            cell: cell as u32,
+            leaf: local % c.leaves,
+            port: local / c.leaves,
+            rails: c.rails,
+        }
+    }
+
+    /// Route between two nodes under `policy`.
+    pub fn route(&self, a: u32, b: u32, policy: Routing) -> Route {
+        use latency::*;
+        let ia = self.node_addr(a);
+        let ib = self.node_addr(b);
+        if a == b {
+            return Route {
+                switch_hops: 0,
+                fiber_m: 0.0,
+                global_hops: 0,
+            };
+        }
+        if ia.cell == ib.cell {
+            if ia.leaf == ib.leaf {
+                // node -> leaf -> node
+                return Route {
+                    switch_hops: 1,
+                    fiber_m: 2.0 * NODE_LEAF_M,
+                    global_hops: 0,
+                };
+            }
+            // node -> leaf -> spine -> leaf -> node
+            return Route {
+                switch_hops: 3,
+                fiber_m: 2.0 * NODE_LEAF_M + 2.0 * LEAF_SPINE_M,
+                global_hops: 0,
+            };
+        }
+        match policy {
+            Routing::Minimal => Route {
+                // leaf -> spine -> (global) -> spine -> leaf
+                switch_hops: 4,
+                fiber_m: 2.0 * NODE_LEAF_M + 2.0 * LEAF_SPINE_M + SPINE_SPINE_M,
+                global_hops: 1,
+            },
+            Routing::Valiant => Route {
+                // detour through an intermediate cell: two global hops and
+                // a leaf bounce inside the intermediate group.
+                switch_hops: 6,
+                fiber_m: 2.0 * NODE_LEAF_M
+                    + 4.0 * LEAF_SPINE_M
+                    + 2.0 * SPINE_SPINE_M,
+                global_hops: 2,
+            },
+        }
+    }
+
+    /// Worst-case small-message latency across the machine, ns: the
+    /// Valiant route between nodes in different cells (§2.2 quotes 3 us,
+    /// dominated by the two NIC traversals).
+    pub fn max_latency_ns(&self) -> f64 {
+        let last = self.total_nodes() - 1;
+        self.route(0, last, Routing::Valiant).latency_ns()
+    }
+
+    /// Aggregate bandwidth between two distinct cells, Gbps.
+    pub fn cell_pair_bw_gbps(&self) -> f64 {
+        self.links_per_cell_pair as f64 * HDR_GBPS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    fn leo() -> Topology {
+        Topology::build(&MachineConfig::leonardo())
+    }
+
+    #[test]
+    fn switch_census_is_823() {
+        // §2.2: "The total number of HDR switches is 823."
+        // 23 x 18 spines + (19x18 + 18 + 2x16 + 13) leaves + 4 gateways.
+        assert_eq!(leo().total_switches(), 823);
+    }
+
+    #[test]
+    fn leaf_counts_by_cell_kind() {
+        let t = leo();
+        for c in &t.cells {
+            let expect = match c.kind {
+                CellKind::Booster | CellKind::Hybrid => 18,
+                CellKind::DataCentric => 16,
+                CellKind::Io => 13,
+            };
+            assert_eq!(c.leaves, expect);
+            assert_eq!(c.spines, 18);
+        }
+    }
+
+    #[test]
+    fn pruning_factor_is_0_82() {
+        // 18 down / 22 up on every spine (§2.2).
+        let f = SPINES_PER_CELL as f64 / SPINE_UPLINKS as f64;
+        assert!((f - 0.818).abs() < 0.01);
+    }
+
+    #[test]
+    fn global_links_per_pair() {
+        let t = leo();
+        // 18 spines x 22 uplinks / 22 peers = 18 links to each other cell.
+        assert_eq!(t.links_per_cell_pair, 18);
+        assert_eq!(t.cell_pair_bw_gbps(), 3600.0);
+        assert_eq!(t.total_global_links(), 23 * 22 / 2 * 18);
+    }
+
+    #[test]
+    fn booster_nodes_are_dual_rail() {
+        let t = leo();
+        let a = t.node_addr(0);
+        assert_eq!(a.rails, 2);
+        // DC nodes start after the 19 Booster cells (19 x 180 nodes).
+        let dc = t.node_addr(19 * 180 + 5);
+        assert_eq!(dc.rails, 1);
+    }
+
+    #[test]
+    fn addresses_partition_the_machine() {
+        let t = leo();
+        assert_eq!(t.total_nodes(), 1536 + 3456);
+        let mut per_cell = vec![0u32; t.cells.len()];
+        for n in 0..t.total_nodes() {
+            per_cell[t.node_addr(n).cell as usize] += 1;
+        }
+        for (c, &count) in t.cells.iter().zip(&per_cell) {
+            assert_eq!(count, c.nodes);
+        }
+    }
+
+    #[test]
+    fn leaf_attachment_is_balanced() {
+        let t = leo();
+        // Booster cell 0: 180 nodes over 18 leaves = 10 per leaf.
+        let mut per_leaf = vec![0u32; 18];
+        for n in 0..180 {
+            per_leaf[t.node_addr(n).leaf as usize] += 1;
+        }
+        assert!(per_leaf.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn same_leaf_route_is_one_switch() {
+        let t = leo();
+        // Nodes 0 and 18 share leaf 0 of cell 0 (round-robin attach).
+        let r = t.route(0, 18, Routing::Minimal);
+        assert_eq!(r.switch_hops, 1);
+        assert_eq!(r.global_hops, 0);
+    }
+
+    #[test]
+    fn intra_cell_route_is_three_switches() {
+        let t = leo();
+        let r = t.route(0, 1, Routing::Minimal);
+        assert_eq!(r.switch_hops, 3);
+        assert_eq!(r.global_hops, 0);
+    }
+
+    #[test]
+    fn inter_cell_minimal_is_four_switches_one_global() {
+        let t = leo();
+        let r = t.route(0, 2000, Routing::Minimal);
+        assert_eq!(r.switch_hops, 4);
+        assert_eq!(r.global_hops, 1);
+    }
+
+    #[test]
+    fn valiant_is_longer_than_minimal() {
+        let t = leo();
+        let m = t.route(0, 2000, Routing::Minimal);
+        let v = t.route(0, 2000, Routing::Valiant);
+        assert!(v.switch_hops > m.switch_hops);
+        assert!(v.latency_ns() > m.latency_ns());
+    }
+
+    #[test]
+    fn max_latency_is_about_3us_and_nic_dominated() {
+        let t = leo();
+        let max = t.max_latency_ns();
+        // §2.2: worst case ~3 us; NICs contribute 1.2 us regardless.
+        assert!(max <= 3000.0, "max {max} ns");
+        assert!(max >= 1500.0, "max {max} ns");
+        let nic = 2.0 * latency::NIC_NS;
+        assert!(nic / max > 0.35, "NIC share {}", nic / max);
+    }
+
+    #[test]
+    fn self_route_is_free() {
+        let t = leo();
+        let r = t.route(42, 42, Routing::Minimal);
+        assert_eq!(r.switch_hops, 0);
+        assert_eq!(r.latency_ns(), 2.0 * latency::NIC_NS);
+    }
+
+    #[test]
+    fn marconi_topology_builds() {
+        let t = Topology::build(&MachineConfig::marconi100());
+        assert_eq!(t.total_nodes(), 980);
+        assert!(t.links_per_cell_pair >= 18);
+    }
+}

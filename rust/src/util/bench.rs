@@ -1,0 +1,199 @@
+//! Criterion-style micro-benchmark harness (the offline build has no
+//! criterion crate). Same call shape as criterion's, so the `benches/`
+//! files read like standard criterion benches: warmup, adaptive iteration
+//! count, mean/min/max over samples, ns-per-iter reporting.
+
+use std::time::{Duration, Instant};
+
+/// Opaque-value helper preventing const-folding of benchmark inputs.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Harness entry point (mirrors criterion's `Criterion`).
+pub struct Criterion {
+    /// Target measurement time per benchmark.
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    pub samples: u32,
+}
+
+impl Default for Criterion {
+    fn default() -> Self {
+        Criterion {
+            measure_time: Duration::from_millis(600),
+            warmup_time: Duration::from_millis(150),
+            samples: 12,
+        }
+    }
+}
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct Sampled {
+    pub name: String,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub iters: u64,
+}
+
+impl Criterion {
+    pub fn bench_function(&mut self, name: &str, mut f: impl FnMut(&mut Bencher)) {
+        let mut b = Bencher {
+            cfg: BenchCfg {
+                measure_time: self.measure_time,
+                warmup_time: self.warmup_time,
+                samples: self.samples,
+            },
+            result: None,
+        };
+        f(&mut b);
+        if let Some(r) = b.result {
+            report(name, &r);
+        }
+    }
+
+    pub fn benchmark_group(&mut self, name: &str) -> Group<'_> {
+        Group {
+            parent: self,
+            name: name.to_string(),
+            sample_size: None,
+        }
+    }
+}
+
+/// A named group (mirrors criterion's `BenchmarkGroup`).
+pub struct Group<'a> {
+    parent: &'a mut Criterion,
+    name: String,
+    sample_size: Option<u32>,
+}
+
+impl<'a> Group<'a> {
+    pub fn sample_size(&mut self, n: u32) -> &mut Self {
+        self.sample_size = Some(n);
+        self
+    }
+
+    pub fn bench_function(&mut self, name: &str, f: impl FnMut(&mut Bencher)) {
+        let full = format!("{}/{}", self.name, name);
+        let saved = self.parent.samples;
+        if let Some(n) = self.sample_size {
+            self.parent.samples = n;
+        }
+        self.parent.bench_function(&full, f);
+        self.parent.samples = saved;
+    }
+
+    pub fn finish(&mut self) {}
+}
+
+#[derive(Clone, Copy)]
+struct BenchCfg {
+    measure_time: Duration,
+    warmup_time: Duration,
+    samples: u32,
+}
+
+/// Passed to the closure; call `iter` with the code under test.
+pub struct Bencher {
+    cfg: BenchCfg,
+    result: Option<Sampled>,
+}
+
+impl Bencher {
+    pub fn iter<R>(&mut self, mut f: impl FnMut() -> R) {
+        // Warmup + calibration: how many iters fit in the warmup window?
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed() < self.cfg.warmup_time {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.cfg.warmup_time.as_secs_f64() / warm_iters as f64;
+        let sample_target =
+            self.cfg.measure_time.as_secs_f64() / self.cfg.samples as f64;
+        let iters_per_sample = ((sample_target / per_iter) as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.cfg.samples as usize);
+        for _ in 0..self.cfg.samples {
+            let s = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            samples_ns
+                .push(s.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let min = samples_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = samples_ns.iter().cloned().fold(0.0, f64::max);
+        self.result = Some(Sampled {
+            name: String::new(),
+            mean_ns: mean,
+            min_ns: min,
+            max_ns: max,
+            iters: iters_per_sample * self.cfg.samples as u64 + warm_iters,
+        });
+    }
+}
+
+fn human(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn report(name: &str, r: &Sampled) {
+    println!(
+        "{name:<42} time: [{} {} {}]  ({} iters)",
+        human(r.min_ns),
+        human(r.mean_ns),
+        human(r.max_ns),
+        r.iters
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut c = Criterion {
+            measure_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+            samples: 3,
+        };
+        // No panic, and ordering min <= mean <= max enforced internally.
+        c.bench_function("noop", |b| b.iter(|| black_box(1 + 1)));
+    }
+
+    #[test]
+    fn group_api_compiles_and_runs() {
+        let mut c = Criterion {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(4),
+            samples: 2,
+        };
+        let mut g = c.benchmark_group("g");
+        g.sample_size(2);
+        g.bench_function("inner", |b| b.iter(|| black_box(vec![1u8; 16])));
+        g.finish();
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human(12.0).ends_with("ns"));
+        assert!(human(12_000.0).ends_with("us"));
+        assert!(human(12_000_000.0).ends_with("ms"));
+        assert!(human(2e9).ends_with(" s"));
+    }
+}

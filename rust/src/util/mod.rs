@@ -1,0 +1,7 @@
+//! Self-contained replacements for crates unavailable in the offline
+//! build: a JSON parser ([`json`]), a criterion-style bench harness
+//! ([`bench`]) and a deterministic PRNG ([`rng`]).
+
+pub mod bench;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,141 @@
+//! Cross-module integration: the full campaign layer (config + topology +
+//! network + storage + scheduler + power + perfmodel + lbm) reproduces
+//! every table of the paper within tolerance, end to end, with no PJRT
+//! dependency (pure simulation path).
+
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::power::Utilization;
+use leonardo_twin::scheduler::{Job, Partition, PowerCap, Scheduler};
+use leonardo_twin::workloads::AppBenchmark;
+
+fn cell(t: &leonardo_twin::metrics::Table, row: usize, col: usize) -> f64 {
+    t.rows[row][col].parse().unwrap()
+}
+
+#[test]
+fn every_paper_table_regenerates() {
+    let twin = Twin::leonardo();
+    // Table 1 totals.
+    let t1 = twin.table1();
+    assert_eq!(t1.rows.last().unwrap()[4], "3456");
+    // Table 2 has 16 metric rows x 3 GPUs.
+    let t2 = twin.table2();
+    assert_eq!(t2.rows.len(), 16);
+    // Table 3 rows: /home /archive /scratch.
+    let t3 = twin.table3();
+    assert_eq!(t3.rows.len(), 3);
+    // Table 4 headline numbers.
+    let t4 = twin.table4(None);
+    assert!((cell(&t4, 0, 1) - 238.7).abs() / 238.7 < 0.03); // Rmax
+    assert!((cell(&t4, 3, 1) - 3.11).abs() / 3.11 < 0.03); // HPCG
+    assert!((cell(&t4, 4, 1) - 7.4).abs() / 7.4 < 0.03); // MW
+    assert!((cell(&t4, 5, 1) - 32.2).abs() / 32.2 < 0.05); // Green500
+    // Table 5 score.
+    let t5 = twin.table5();
+    let score = t5.rows.last().unwrap()[1].parse::<f64>().unwrap();
+    assert!((score - 649.0).abs() / 649.0 < 0.05, "{score}");
+    // Table 6: TTS within 1%, ETS within 5% per app.
+    let t6 = twin.table6();
+    for row in &t6.rows {
+        let tts: f64 = row[3].parse().unwrap();
+        let tts_paper: f64 = row[4].parse().unwrap();
+        assert!((tts - tts_paper).abs() / tts_paper < 0.02, "{row:?}");
+        let ets: f64 = row[5].parse().unwrap();
+        let ets_paper: f64 = row[6].parse().unwrap();
+        assert!((ets - ets_paper).abs() / ets_paper < 0.06, "{row:?}");
+    }
+    // Table 7: shape within banded tolerance; headline LUPS within 10%.
+    let t7 = twin.table7(None);
+    let last = t7.rows.last().unwrap();
+    let tlups: f64 = last[2].parse().unwrap();
+    assert!((tlups - 51.2).abs() / 51.2 < 0.10, "{tlups}");
+}
+
+#[test]
+fn fig5_leonardo_scales_at_least_as_well_as_marconi() {
+    let t = Twin::leonardo().fig5();
+    for row in t.rows.iter().skip(1) {
+        if row[2] == "-" {
+            continue;
+        }
+        let leo: f64 = row[1].parse().unwrap();
+        let mar: f64 = row[2].parse().unwrap();
+        assert!(leo >= mar - 0.01, "GPUs={} leo={leo} mar={mar}", row[0]);
+    }
+}
+
+#[test]
+fn scheduler_campaign_under_power_cap_completes_and_throttles() {
+    let twin = Twin::leonardo();
+    let mut sched = Scheduler::new(&twin.cfg);
+    sched.power_cap = Some(PowerCap {
+        cap_mw: 5.0,
+        node_watts: twin.power.node_power_w(Utilization::hpl()),
+        idle_watts: twin.power.node_power_w(Utilization::idle()),
+    });
+    let jobs: Vec<Job> = (0..20)
+        .map(|i| Job {
+            id: i,
+            partition: Partition::Booster,
+            nodes: 400 + (i as u32 % 5) * 300,
+            est_seconds: 100.0,
+            run_seconds: 90.0,
+            submit_time: (i as f64) * 5.0,
+            boundness: 0.7,
+        })
+        .collect();
+    let recs = sched.run(jobs.clone());
+    assert_eq!(recs.len(), 20);
+    // Under a 5 MW cap with 2.2 kW nodes, concurrent load must throttle.
+    let throttled = recs.values().filter(|r| r.dvfs_scale < 1.0).count();
+    assert!(throttled > 0, "no job was throttled under the cap");
+    for j in &jobs {
+        let r = &recs[&j.id];
+        assert!(r.end_time - r.start_time >= j.run_seconds - 1e-6);
+    }
+}
+
+#[test]
+fn app_sweeps_compose_with_scheduler_placements() {
+    let twin = Twin::leonardo();
+    for app in AppBenchmark::table6() {
+        let mut last_tts = f64::INFINITY;
+        for factor in [1u32, 2, 4] {
+            let nodes = app.ref_nodes * factor;
+            let placement = twin.place(nodes);
+            let tts = app.tts(nodes, &twin.net, &placement);
+            assert!(tts < last_tts, "{}: no speedup at {nodes}", app.name);
+            assert!(tts > 0.0);
+            last_tts = tts;
+        }
+    }
+}
+
+#[test]
+fn marconi_twin_is_self_consistent() {
+    let m = Twin::marconi100();
+    assert_eq!(m.cfg.gpu_nodes(), 980);
+    assert!(m.net.oversubscription > 1.0);
+    // Its largest possible job still places.
+    let p = m.place(980);
+    assert_eq!(p.total_nodes(), 980);
+    // Per-GPU LBM rate ~ 2.5x slower than LEONARDO's (Appendix A.3).
+    let leo = Twin::leonardo();
+    let leo_node = leo.cfg.gpu_node_spec().unwrap();
+    let m_node = m.cfg.gpu_node_spec().unwrap();
+    use leonardo_twin::lbm::{LbmConfig, LbmDriver};
+    let rl = LbmDriver::new(leo_node, &leo.net, LbmConfig::default()).per_gpu_lups();
+    let rm = LbmDriver::new(m_node, &m.net, LbmConfig::default()).per_gpu_lups();
+    assert!((rl / rm - 2.5).abs() < 0.2, "{}", rl / rm);
+}
+
+#[test]
+fn latency_budget_matches_paper_bounds() {
+    let twin = Twin::leonardo();
+    let t = twin.latency_table();
+    // All paths between 1 and 3 us; NIC floor 1.2 us everywhere.
+    for row in &t.rows {
+        let us: f64 = row[2].parse().unwrap();
+        assert!(us >= 1.2 && us <= 3.0, "{row:?}");
+    }
+}

@@ -1,0 +1,289 @@
+//! Property-based tests over randomized inputs (deterministic SplitMix64
+//! sweeps — the offline build carries no proptest, so these are explicit
+//! generate-and-check loops with fixed seeds and wide case counts).
+
+use leonardo_twin::config::MachineConfig;
+use leonardo_twin::lbm::decompose_3d;
+use leonardo_twin::network::{Network, Placement};
+use leonardo_twin::power::{cap_scale, DvfsPoint, PowerModel, Utilization};
+use leonardo_twin::scheduler::{Job, Partition, Scheduler};
+use leonardo_twin::storage::{StorageSystem, Stripe};
+use leonardo_twin::topology::{Routing, Topology};
+use leonardo_twin::util::json::Json;
+use leonardo_twin::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// scheduler invariants
+// ---------------------------------------------------------------------
+
+/// Random job streams: every job completes, never exceeds capacity,
+/// respects submit times, and the machine drains back to fully free.
+#[test]
+fn prop_scheduler_random_streams() {
+    let cfg = MachineConfig::leonardo();
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed);
+        let n_jobs = rng.range_u32(5, 60);
+        let jobs: Vec<Job> = (0..n_jobs)
+            .map(|i| {
+                let booster = rng.f64() < 0.7;
+                Job {
+                    id: i as u64,
+                    partition: if booster {
+                        Partition::Booster
+                    } else {
+                        Partition::DataCentric
+                    },
+                    nodes: rng.range_u32(1, if booster { 3456 } else { 1536 }),
+                    est_seconds: rng.range_f64(1.0, 500.0),
+                    run_seconds: rng.range_f64(1.0, 500.0),
+                    submit_time: rng.range_f64(0.0, 100.0),
+                    boundness: rng.f64(),
+                }
+            })
+            .collect();
+        let mut sched = Scheduler::new(&cfg);
+        let recs = sched.run(jobs.clone());
+        assert_eq!(recs.len(), jobs.len(), "seed {seed}: lost jobs");
+        for j in &jobs {
+            let r = &recs[&j.id];
+            assert!(r.start_time >= j.submit_time - 1e-9, "seed {seed}");
+            assert!(r.end_time > r.start_time, "seed {seed}");
+            assert_eq!(r.placement.total_nodes(), j.nodes, "seed {seed}");
+        }
+        assert_eq!(sched.free_nodes(Partition::Booster), 3456);
+        assert_eq!(sched.free_nodes(Partition::DataCentric), 1536);
+
+        // No instant may oversubscribe either partition: sweep events.
+        for part in [Partition::Booster, Partition::DataCentric] {
+            let cap = sched.total_nodes(part);
+            let mut events: Vec<(f64, i64)> = Vec::new();
+            for j in &jobs {
+                if j.partition != part {
+                    continue;
+                }
+                let r = &recs[&j.id];
+                events.push((r.start_time, j.nodes as i64));
+                events.push((r.end_time, -(j.nodes as i64)));
+            }
+            events.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+            });
+            let mut load = 0i64;
+            for (_, delta) in events {
+                load += delta;
+                assert!(load <= cap as i64, "seed {seed}: oversubscribed");
+            }
+        }
+    }
+}
+
+/// Placement is exact and release is the inverse of place.
+#[test]
+fn prop_place_release_roundtrip() {
+    let cfg = MachineConfig::leonardo();
+    let mut rng = Rng::new(99);
+    for _ in 0..200 {
+        let mut sched = Scheduler::new(&cfg);
+        let n = rng.range_u32(1, 3456);
+        let p = sched.place(Partition::Booster, n).unwrap();
+        assert_eq!(p.total_nodes(), n);
+        assert_eq!(sched.free_nodes(Partition::Booster), 3456 - n);
+        sched.release(Partition::Booster, &p);
+        assert_eq!(sched.free_nodes(Partition::Booster), 3456);
+    }
+}
+
+// ---------------------------------------------------------------------
+// network invariants
+// ---------------------------------------------------------------------
+
+fn leo_net() -> Network {
+    let cfg = MachineConfig::leonardo();
+    let inj = cfg.gpu_node_spec().unwrap().injection_gbps();
+    Network::new(Topology::build(&cfg), inj)
+}
+
+/// Latency is symmetric, bounded by the paper's budget, and minimal
+/// routing never beats the NIC floor.
+#[test]
+fn prop_latency_symmetric_and_bounded() {
+    let net = leo_net();
+    let total = net.topo.total_nodes();
+    let mut rng = Rng::new(5);
+    for _ in 0..500 {
+        let a = rng.range_u32(0, total - 1);
+        let b = rng.range_u32(0, total - 1);
+        for policy in [Routing::Minimal, Routing::Valiant] {
+            let ab = net.topo.route(a, b, policy).latency_ns();
+            let ba = net.topo.route(b, a, policy).latency_ns();
+            assert_eq!(ab, ba, "asymmetric {a}<->{b}");
+            assert!(ab >= 1200.0, "below NIC floor");
+            assert!(ab <= 3000.0, "above paper bound: {ab}");
+        }
+    }
+}
+
+/// Effective bandwidth never exceeds injection and never collapses below
+/// half of it for packed placements.
+#[test]
+fn prop_effective_bw_bounds() {
+    let net = leo_net();
+    let mut rng = Rng::new(17);
+    for _ in 0..300 {
+        let k = rng.range_u32(1, 19);
+        let per = rng.range_u32(1, 180);
+        let placement = Placement {
+            nodes_per_cell: (0..k).map(|c| (c, per)).collect(),
+        };
+        let bw = net.effective_node_bw(&placement);
+        assert!(bw <= net.injection_gbs() + 1e-9);
+        assert!(bw >= 0.4 * net.injection_gbs(), "collapse: k={k} per={per} {bw}");
+    }
+}
+
+/// Halo + allreduce are monotone in payload and node count direction.
+#[test]
+fn prop_collectives_monotone() {
+    let net = leo_net();
+    let mut rng = Rng::new(23);
+    for _ in 0..100 {
+        let k = rng.range_u32(1, 8);
+        let per = rng.range_u32(2, 180);
+        let p = Placement {
+            nodes_per_cell: (0..k).map(|c| (c, per)).collect(),
+        };
+        let b1 = rng.range_u32(1, 1 << 20) as u64;
+        let b2 = b1 * 2;
+        assert!(net.halo_exchange_time(&p, 6, b2) >= net.halo_exchange_time(&p, 6, b1));
+        assert!(net.allreduce_time(&p, b2) >= net.allreduce_time(&p, b1));
+        assert!(net.halo_exchange_time(&p, 6, b1) >= net.halo_exchange_time(&p, 2, b1));
+    }
+}
+
+// ---------------------------------------------------------------------
+// storage invariants
+// ---------------------------------------------------------------------
+
+/// Striped file bandwidth is monotone in stripe count, capped by client
+/// link and pool capability.
+#[test]
+fn prop_striping_bounds() {
+    let sys = StorageSystem::leonardo();
+    let mut rng = Rng::new(31);
+    for ns in &sys.namespaces {
+        let mut last = 0.0f64;
+        for count in 1..=64u32 {
+            let link = rng.range_f64(1.0, 100.0);
+            let bw = Stripe {
+                count,
+                size_mib: 16,
+            }
+            .file_bw_gbs(1e9, ns, false);
+            assert!(bw >= last - 1e-9, "{}: stripe {count}", ns.mount);
+            assert!(bw <= ns.peak_read_gbs() + 1e-9);
+            last = bw;
+            // Client-limited variant never exceeds the link.
+            let capped = Stripe {
+                count,
+                size_mib: 16,
+            }
+            .file_bw_gbs(link, ns, false);
+            assert!(capped <= link + 1e-9);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// power invariants
+// ---------------------------------------------------------------------
+
+/// Capping is sound: the returned scale always satisfies the cap, and
+/// tighter caps give lower scales.
+#[test]
+fn prop_power_cap_soundness() {
+    let model = PowerModel::new(
+        leonardo_twin::hardware::NodeSpec::davinci(),
+        1.1,
+    );
+    let u = Utilization::hpl();
+    let idle = model.node_power_w(Utilization::idle());
+    let dynamic = model.node_power_w(u) - idle;
+    let mut rng = Rng::new(41);
+    let mut last_scale = 0.0f64;
+    let uncapped = model.fleet_power_mw(3300, u);
+    for i in 0..50 {
+        let cap = uncapped * (0.55 + 0.009 * i as f64);
+        if let Some(p) = cap_scale(&model, 3300, u, cap) {
+            let power = 3300.0 * (idle + dynamic * p.power_factor()) / 1e6;
+            assert!(power <= cap * 1.001, "cap {cap}: {power}");
+            assert!(p.scale >= last_scale - 1e-9, "monotone in cap");
+            last_scale = p.scale;
+        }
+        let _ = rng.next_u64();
+    }
+}
+
+/// DVFS time factor: slowing clocks never speeds a job up; memory-bound
+/// jobs suffer less.
+#[test]
+fn prop_dvfs_time_factor() {
+    let mut rng = Rng::new(47);
+    for _ in 0..500 {
+        let s = rng.range_f64(0.5, 1.0);
+        let b1 = rng.f64();
+        let b2 = (b1 + rng.f64() * (1.0 - b1)).min(1.0);
+        let p = DvfsPoint { scale: s };
+        assert!(p.time_factor(b1) >= 1.0 - 1e-12);
+        assert!(p.time_factor(b2) >= p.time_factor(b1) - 1e-12);
+    }
+}
+
+// ---------------------------------------------------------------------
+// misc invariants
+// ---------------------------------------------------------------------
+
+/// 3-D decomposition is exact for every n and near-balanced for cubes.
+#[test]
+fn prop_decompose_exact() {
+    let mut rng = Rng::new(53);
+    for _ in 0..2000 {
+        let n = rng.range_u32(1, 10_000);
+        let (x, y, z) = decompose_3d(n);
+        assert_eq!(
+            x as u64 * y as u64 * z as u64,
+            n as u64,
+            "decompose_3d({n})"
+        );
+    }
+    for e in [1u32, 2, 3, 4, 5, 8, 10] {
+        let n = e * e * e;
+        assert_eq!(decompose_3d(n), (e, e, e));
+    }
+}
+
+/// JSON parser round-trips machine-generated manifests of random shape.
+#[test]
+fn prop_json_random_manifests() {
+    let mut rng = Rng::new(61);
+    for _ in 0..50 {
+        let entries = rng.range_u32(1, 8);
+        let mut text = String::from("{");
+        for i in 0..entries {
+            if i > 0 {
+                text.push(',');
+            }
+            let dims = rng.range_u32(0, 4);
+            let shape: Vec<String> =
+                (0..dims).map(|_| rng.range_u32(1, 512).to_string()).collect();
+            text.push_str(&format!(
+                "\"m{i}\": {{\"hlo_chars\": {}, \"inputs\": [{{\"dtype\": \"float32\", \"shape\": [{}]}}], \"outputs\": []}}",
+                rng.range_u32(1, 1 << 20),
+                shape.join(",")
+            ));
+        }
+        text.push('}');
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.as_obj().unwrap().len(), entries as usize);
+    }
+}

@@ -1,0 +1,264 @@
+//! Integration tests across the PJRT runtime boundary: load every AOT
+//! artifact, execute it from Rust, and verify *numerics* against
+//! physics/algebra invariants computed on the Rust side.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it);
+//! each test skips with a notice when artifacts are absent so plain
+//! `cargo test` stays green on a fresh checkout.
+
+use leonardo_twin::coordinator::equilibrium_f32;
+use leonardo_twin::runtime::{literal_f32, scalar_f32, Engine};
+
+fn engine() -> Option<Engine> {
+    match Engine::load(Engine::default_dir()) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP (run `make artifacts`): {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_expected_modules() {
+    let Some(engine) = engine() else { return };
+    for name in [
+        "lbm_step_32",
+        "lbm_steps8_32",
+        "dgemm_256",
+        "dgemm_512",
+        "hpl_update_256",
+        "spmv_64",
+        "cg_iter_64",
+        "cg_iters8_64",
+    ] {
+        assert!(
+            engine.spec(name).is_some(),
+            "artifact '{name}' missing from manifest"
+        );
+    }
+}
+
+#[test]
+fn lbm_step_conserves_mass_and_is_equilibrium_fixed_point() {
+    let Some(engine) = engine() else { return };
+    let n = 32usize;
+    let sites = n * n * n;
+    let f0 = equilibrium_f32(n);
+    let f = literal_f32(&f0, &[19, n, n, n]).unwrap();
+    let omega = literal_f32(&[1.7f32], &[1]).unwrap();
+    let out = engine.execute("lbm_step_32", &[f, omega]).unwrap();
+    let result: Vec<f32> = out[0].to_vec().unwrap();
+    assert_eq!(result.len(), 19 * sites);
+    // Quiescent equilibrium is a fixed point of collide+stream.
+    let mut max_dev = 0f32;
+    for (a, b) in result.iter().zip(&f0) {
+        max_dev = max_dev.max((a - b).abs());
+    }
+    assert!(max_dev < 1e-5, "equilibrium drifted by {max_dev}");
+}
+
+#[test]
+fn lbm_step_preserves_perturbed_mass() {
+    let Some(engine) = engine() else { return };
+    let n = 32usize;
+    let _sites = n * n * n;
+    let mut f0 = equilibrium_f32(n);
+    // Deterministic perturbation.
+    let mut rng = leonardo_twin::util::rng::Rng::new(7);
+    for v in f0.iter_mut() {
+        *v *= 1.0 + 0.05 * (rng.f64() as f32 - 0.5);
+    }
+    let total0: f64 = f0.iter().map(|&v| v as f64).sum();
+    let f = literal_f32(&f0, &[19, n, n, n]).unwrap();
+    let omega = literal_f32(&[1.2f32], &[1]).unwrap();
+    let out = engine.execute("lbm_steps8_32", &[f, omega]).unwrap();
+    let result: Vec<f32> = out[0].to_vec().unwrap();
+    let total1: f64 = result.iter().map(|&v| v as f64).sum();
+    assert!(
+        ((total1 - total0) / total0).abs() < 1e-5,
+        "mass drift over 8 steps: {total0} -> {total1}"
+    );
+    assert!(result.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn dgemm_matches_rust_reference() {
+    let Some(engine) = engine() else { return };
+    let n = 256usize;
+    let mut rng = leonardo_twin::util::rng::Rng::new(42);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.f64() as f32 - 0.5).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.f64() as f32 - 0.5).collect();
+    let out = engine
+        .execute(
+            "dgemm_256",
+            &[
+                literal_f32(&a, &[n, n]).unwrap(),
+                literal_f32(&b, &[n, n]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let c: Vec<f32> = out[0].to_vec().unwrap();
+    // Spot-check 64 entries against a straightforward dot product.
+    let mut rng = leonardo_twin::util::rng::Rng::new(1);
+    for _ in 0..64 {
+        let i = (rng.next_u64() % n as u64) as usize;
+        let j = (rng.next_u64() % n as u64) as usize;
+        let want: f32 = (0..n).map(|k| a[i * n + k] * b[k * n + j]).sum();
+        let got = c[i * n + j];
+        assert!(
+            (got - want).abs() < 1e-2 + want.abs() * 1e-3,
+            "c[{i}][{j}] = {got}, want {want}"
+        );
+    }
+}
+
+#[test]
+fn hpl_update_is_c_minus_ab() {
+    let Some(engine) = engine() else { return };
+    let n = 256usize;
+    let c0 = vec![1.0f32; n * n];
+    let a = vec![0.5f32; n * n];
+    let b = vec![0.25f32; n * n];
+    let out = engine
+        .execute(
+            "hpl_update_256",
+            &[
+                literal_f32(&c0, &[n, n]).unwrap(),
+                literal_f32(&a, &[n, n]).unwrap(),
+                literal_f32(&b, &[n, n]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let c: Vec<f32> = out[0].to_vec().unwrap();
+    // C - A@B = 1 - 256 * 0.5 * 0.25 = 1 - 32 = -31 everywhere.
+    for (idx, v) in c.iter().enumerate() {
+        assert!((v + 31.0).abs() < 1e-2, "c[{idx}] = {v}");
+    }
+}
+
+#[test]
+fn spmv_constant_field_vanishes_in_interior() {
+    let Some(engine) = engine() else { return };
+    let g = 64usize;
+    let x = vec![1.0f32; g * g * g];
+    let out = engine
+        .execute("spmv_64", &[literal_f32(&x, &[g, g, g]).unwrap()])
+        .unwrap();
+    let y: Vec<f32> = out[0].to_vec().unwrap();
+    // Interior rows of the 27-point operator sum to zero on constants;
+    // boundary rows are positive (lost neighbours).
+    let idx = |i: usize, j: usize, k: usize| (i * g + j) * g + k;
+    assert!(y[idx(32, 32, 32)].abs() < 1e-4);
+    assert!(y[idx(0, 0, 0)] > 1.0);
+}
+
+#[test]
+fn cg_iterations_reduce_residual_norm() {
+    let Some(engine) = engine() else { return };
+    let g = 64usize;
+    let size = g * g * g;
+    let mut rng = leonardo_twin::util::rng::Rng::new(3);
+    let b: Vec<f32> = (0..size).map(|_| rng.f64() as f32 - 0.5).collect();
+    let rz0: f32 = b.iter().map(|v| v * v).sum();
+
+    let x = vec![0.0f32; size];
+    let out = engine
+        .execute(
+            "cg_iters8_64",
+            &[
+                literal_f32(&x, &[g, g, g]).unwrap(),
+                literal_f32(&b, &[g, g, g]).unwrap(),
+                literal_f32(&b, &[g, g, g]).unwrap(),
+                scalar_f32(rz0).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 4);
+    let rz8: f32 = out[3].to_vec::<f32>().unwrap()[0];
+    assert!(
+        rz8 < rz0 * 1e-2,
+        "8 CG iterations reduced rz only {rz0} -> {rz8}"
+    );
+    assert!(rz8.is_finite() && rz8 >= 0.0);
+}
+
+#[test]
+fn timing_helper_returns_positive_rates() {
+    let Some(engine) = engine() else { return };
+    let n = 256usize;
+    let a = literal_f32(&vec![1.0f32; n * n], &[n, n]).unwrap();
+    let b = literal_f32(&vec![0.5f32; n * n], &[n, n]).unwrap();
+    let secs = engine.time_execute("dgemm_256", &[a, b], 2).unwrap();
+    assert!(secs > 0.0 && secs < 30.0, "{secs}");
+    let gflops = 2.0 * (n as f64).powi(3) / secs / 1e9;
+    assert!(gflops > 0.01, "{gflops}");
+}
+
+#[test]
+fn blocked_lu_with_pjrt_offload_is_correct() {
+    let Some(engine) = engine() else { return };
+    use leonardo_twin::hpl;
+    let n = 512;
+    let a0 = hpl::random_matrix(n, 21);
+    let mut lu = a0.clone();
+    let res = hpl::lu_factor(&mut lu, n, Some(&engine)).unwrap();
+    assert!(res.offload_fraction > 0.3, "{}", res.offload_fraction);
+    // Solve and check the HPL residual criterion (r < 16 passes).
+    let x_true: Vec<f32> = (0..n).map(|i| ((i % 5) as f32) - 2.0).collect();
+    let mut b = vec![0f32; n];
+    for i in 0..n {
+        b[i] = (0..n).map(|j| a0[i * n + j] * x_true[j]).sum();
+    }
+    let x = hpl::lu_solve(&lu, n, &res.perm, &b);
+    let r = hpl::hpl_residual(&a0, n, &x, &b);
+    assert!(r < 16.0, "HPL residual {r}");
+}
+
+#[test]
+fn hpcg_solver_via_pjrt_converges() {
+    let Some(engine) = engine() else { return };
+    use leonardo_twin::hpcg;
+    let points = hpcg::GRID * hpcg::GRID * hpcg::GRID;
+    let mut rng = leonardo_twin::util::rng::Rng::new(33);
+    let b: Vec<f32> = (0..points).map(|_| rng.f64() as f32 - 0.5).collect();
+    let res = hpcg::solve(&engine, &b, 1e-4, 200).unwrap();
+    assert!(res.rel_residual < 1e-4, "{}", res.rel_residual);
+    assert!(res.iterations >= 8 && res.iterations <= 200);
+    assert!(res.gflops > 0.0);
+}
+
+#[test]
+fn sparse_matmul_artifact_prunes_2_of_4() {
+    let Some(engine) = engine() else { return };
+    let n = 256usize;
+    // x = identity -> output IS the pruned weight matrix.
+    let mut x = vec![0f32; n * n];
+    for i in 0..n {
+        x[i * n + i] = 1.0;
+    }
+    let mut rng = leonardo_twin::util::rng::Rng::new(55);
+    let w: Vec<f32> = (0..n * n).map(|_| rng.f64() as f32 - 0.5).collect();
+    let out = engine
+        .execute(
+            "sparse_matmul_256",
+            &[
+                literal_f32(&x, &[n, n]).unwrap(),
+                literal_f32(&w, &[n, n]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let wp: Vec<f32> = out[0].to_vec().unwrap();
+    // Every K-group of 4 keeps exactly 2 non-zeros (§2.1.1 sparsity).
+    let mut zeros = 0usize;
+    for j in 0..n {
+        for g in 0..(n / 4) {
+            let nz = (0..4)
+                .filter(|&q| wp[(4 * g + q) * n + j].abs() > 0.0)
+                .count();
+            assert!(nz <= 2, "group {g} col {j}: {nz} nonzeros");
+            zeros += 4 - nz;
+        }
+    }
+    assert!((zeros as f64 / (n * n) as f64 - 0.5).abs() < 0.01);
+}
