@@ -19,7 +19,7 @@ fn placement_ablation(twin: &Twin) {
         "Ablation — placement policy x fabric load (512-node LBM step [ms])",
         &["Placement", "Cells", "Idle fabric", "Busy fabric (80% global load)"],
     );
-    let packed = twin.place(512);
+    let packed = twin.place(512).unwrap();
     let spread = Placement {
         nodes_per_cell: (0..16).map(|c| (c, 32)).collect(),
     };

@@ -7,17 +7,17 @@ use leonardo_twin::workloads::AppBenchmark;
 
 fn bench(c: &mut Criterion) {
     let twin = Twin::leonardo();
-    println!("{}", twin.table6().to_console());
+    println!("{}", twin.table6().unwrap().to_console());
 
     c.bench_function("table6/full_campaign", |b| {
-        b.iter(|| black_box(&twin).table6())
+        b.iter(|| black_box(&twin).table6().unwrap())
     });
     c.bench_function("table6/single_app_scaling_sweep", |b| {
         let app = AppBenchmark::milc();
         b.iter(|| {
             let mut acc = 0.0;
             for n in [12u32, 24, 48, 96, 192] {
-                let placement = twin.place(n);
+                let placement = twin.place(n).unwrap();
                 let tts = app.tts(n, &twin.net, &placement);
                 acc += tts + app.ets(n, tts, &twin.power);
             }

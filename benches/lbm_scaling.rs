@@ -8,13 +8,13 @@ use leonardo_twin::runtime::{literal_f32, Engine};
 
 fn bench(c: &mut Criterion) {
     let twin = Twin::leonardo();
-    println!("{}", twin.table7(None).to_console());
-    println!("{}", twin.fig5().to_console());
+    println!("{}", twin.table7(None).unwrap().to_console());
+    println!("{}", twin.fig5().unwrap().to_console());
 
     let node = twin.cfg.gpu_node_spec().unwrap().clone();
     c.bench_function("table7/full_sweep", |b| {
         let driver = LbmDriver::new(&node, &twin.net, LbmConfig::default());
-        b.iter(|| driver.sweep(black_box(TABLE7_NODES), |n| twin.place(n)))
+        b.iter(|| driver.sweep(black_box(TABLE7_NODES), |n| twin.place(n)).unwrap())
     });
     c.bench_function("fig5/both_machines", |b| {
         b.iter(|| black_box(&twin).fig5())

@@ -14,7 +14,7 @@ use leonardo_twin::workloads::AppBenchmark;
 
 fn main() {
     let twin = Twin::leonardo();
-    println!("{}", twin.table6().to_console());
+    println!("{}", twin.table6().expect("reference sizes fit").to_console());
 
     // Strong-scaling sweep per app.
     let mut t = Table::new(
@@ -25,7 +25,7 @@ fn main() {
         let mut cells = vec![app.name.to_string()];
         for factor in [0.5f64, 1.0, 2.0, 4.0] {
             let nodes = ((app.ref_nodes as f64 * factor) as u32).max(2);
-            let placement = twin.place(nodes);
+            let placement = twin.place(nodes).expect("sweep sizes fit");
             let tts = app.tts(nodes, &twin.net, &placement);
             let ets = app.ets(nodes, tts, &twin.power);
             cells.push(format!("{} / {}", f1(tts), f2(ets)));

@@ -108,7 +108,7 @@ fn main() -> anyhow::Result<()> {
     println!("{}", table.to_console());
 
     // ---- 4. The Fig 5 comparison (LEONARDO vs Marconi100).
-    println!("{}", twin.fig5().to_console());
+    println!("{}", twin.fig5()?.to_console());
 
     println!("paper: 51.2 TLUPS at 9900 GPUs, efficiency 0.88 — see Table 7 above");
     Ok(())

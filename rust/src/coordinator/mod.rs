@@ -6,18 +6,24 @@
 //! paper's layout, so the CLI, the examples and the criterion benches all
 //! print the same artifact the paper prints.
 
+use std::collections::BTreeMap;
+
+use anyhow::anyhow;
+
 use crate::config::MachineConfig;
 use crate::hardware::{GpuSpec, NodeSpec, Precision};
 use crate::lbm::{LbmConfig, LbmDriver, TABLE7_NODES};
 use crate::metrics::{f1, f2, sig3, Table};
-use crate::network::{Network, Placement};
+use crate::network::{CongestionTracker, Network, Placement};
 use crate::perfmodel::{Calibration, HpcgModel, HplModel};
-use crate::power::{PowerModel, Utilization};
+use crate::power::{PowerModel, PowerMonitor, Utilization};
 use crate::runtime::{literal_f32, scalar_f32, Engine};
-use crate::scheduler::{Partition, Scheduler};
+use crate::scheduler::{JobRecord, Partition, PowerCap, Scheduler};
+use crate::sim::Component;
 use crate::storage::{io500, StorageSystem};
+use crate::telemetry::{EventCounter, MetricStore};
 use crate::topology::{Routing, Topology};
-use crate::workloads::AppBenchmark;
+use crate::workloads::{AppBenchmark, TraceGen};
 use crate::Result;
 
 /// Documented host-roofline estimates used to project measured kernel
@@ -34,6 +40,18 @@ pub struct Twin {
     pub topo: Topology,
     pub net: Network,
     pub power: PowerModel,
+}
+
+/// Output of [`Twin::operations_replay`]: per-job records, the per-event
+/// telemetry store, and rendered report tables.
+pub struct OpsReport {
+    pub records: BTreeMap<u64, JobRecord>,
+    /// Per-event facility power / utilization / busy-node series.
+    pub store: MetricStore,
+    /// Highest mean global-link load observed.
+    pub peak_congestion: f64,
+    pub summary: Table,
+    pub power: Table,
 }
 
 impl Twin {
@@ -63,11 +81,16 @@ impl Twin {
     }
 
     /// Topology-aware placement for an `n`-node Booster job on an
-    /// otherwise idle machine.
-    pub fn place(&self, n: u32) -> Placement {
+    /// otherwise idle machine. Errs when the request exceeds the
+    /// partition instead of crashing the caller.
+    pub fn place(&self, n: u32) -> Result<Placement> {
         let mut s = Scheduler::new(&self.cfg);
-        s.place(Partition::Booster, n)
-            .unwrap_or_else(|| panic!("{} nodes do not fit", n))
+        s.place(Partition::Booster, n).ok_or_else(|| {
+            anyhow!(
+                "{n} nodes do not fit: the Booster partition has {} GPU nodes",
+                self.cfg.gpu_nodes()
+            )
+        })
     }
 
     // ------------------------------------------------------------------
@@ -324,7 +347,7 @@ impl Twin {
     }
 
     /// Table 6: application benchmarks.
-    pub fn table6(&self) -> Table {
+    pub fn table6(&self) -> Result<Table> {
         let mut t = Table::new(
             "Table 6 — Application benchmarks (twin vs paper)",
             &[
@@ -338,7 +361,7 @@ impl Twin {
             ],
         );
         for app in AppBenchmark::table6() {
-            let placement = self.place(app.ref_nodes);
+            let placement = self.place(app.ref_nodes)?;
             let tts = app.tts(app.ref_nodes, &self.net, &placement);
             let ets = app.ets(app.ref_nodes, tts, &self.power);
             t.row(vec![
@@ -351,18 +374,18 @@ impl Twin {
                 f2(app.ref_ets),
             ]);
         }
-        t
+        Ok(t)
     }
 
     /// Table 7: LBM weak scaling.
-    pub fn table7(&self, calib: Option<&Calibration>) -> Table {
+    pub fn table7(&self, calib: Option<&Calibration>) -> Result<Table> {
         let node = self.cfg.gpu_node_spec().expect("GPU machine").clone();
         let cfg = LbmConfig {
             per_gpu_lups: calib.and_then(|c| self.project_lbm_lups(c)),
             ..LbmConfig::default()
         };
         let driver = LbmDriver::new(&node, &self.net, cfg);
-        let pts = driver.sweep(TABLE7_NODES, |n| self.place(n));
+        let pts = driver.sweep(TABLE7_NODES, |n| self.place(n))?;
         let paper_lups = [
             0.0476, 0.192, 1.38, 2.76, 5.24, 10.8, 21.6, 43.3, 51.2,
         ];
@@ -388,15 +411,15 @@ impl Twin {
                 f2(paper_eff[i]),
             ]);
         }
-        t
+        Ok(t)
     }
 
     /// Fig 5: weak-scaling efficiency, LEONARDO vs Marconi100.
-    pub fn fig5(&self) -> Table {
+    pub fn fig5(&self) -> Result<Table> {
         let leo_pts = {
             let node = self.cfg.gpu_node_spec().unwrap().clone();
             let d = LbmDriver::new(&node, &self.net, LbmConfig::default());
-            d.sweep(TABLE7_NODES, |n| self.place(n))
+            d.sweep(TABLE7_NODES, |n| self.place(n))?
         };
         let marconi = Twin::marconi100();
         let m_nodes: Vec<u32> = TABLE7_NODES
@@ -407,7 +430,7 @@ impl Twin {
         let m_pts = {
             let node = marconi.cfg.gpu_node_spec().unwrap().clone();
             let d = LbmDriver::new(&node, &marconi.net, LbmConfig::default());
-            d.sweep(&m_nodes, |n| marconi.place(n))
+            d.sweep(&m_nodes, |n| marconi.place(n))?
         };
         let mut t = Table::new(
             "Fig 5 — LBM weak-scaling efficiency comparison",
@@ -420,7 +443,98 @@ impl Twin {
                 .unwrap_or_else(|| "-".into());
             t.row(vec![p.gpus.to_string(), f2(p.efficiency), m]);
         }
-        t
+        Ok(t)
+    }
+
+    // ------------------------------------------------------------------
+    // Operations replay: the event-driven day on the Booster partition
+    // ------------------------------------------------------------------
+
+    /// Replay an operational trace through the event-driven scheduler
+    /// with the power monitor, congestion tracker and telemetry scraper
+    /// subscribed to the same [`crate::sim`] stream. `cap_mw` optionally
+    /// applies a facility power cap (Bull Energy Optimizer analogue).
+    pub fn operations_replay(
+        &self,
+        trace: &TraceGen,
+        cap_mw: Option<f64>,
+    ) -> Result<OpsReport> {
+        let jobs = trace.generate();
+        anyhow::ensure!(!jobs.is_empty(), "empty trace");
+
+        let mut sched = Scheduler::new(&self.cfg);
+        if let Some(mw) = cap_mw {
+            sched.power_cap = Some(PowerCap::for_model(&self.power, mw));
+        }
+        let total_nodes = sched.total_nodes(trace.partition);
+        // Mixed-day fleet utilisation: busy but not HPL-saturated.
+        let util = Utilization {
+            cpu: 0.40,
+            gpu: Some(0.80),
+        };
+        let mut monitor = PowerMonitor::new(self.power.clone(), util, total_nodes);
+        monitor.booster_only = trace.partition == Partition::Booster;
+        let mut congestion = CongestionTracker::for_booster(&self.cfg);
+        let mut counter = EventCounter::default();
+        let records = {
+            let mut observers: [&mut dyn Component; 3] =
+                [&mut monitor, &mut congestion, &mut counter];
+            sched.run_with(jobs.clone(), Vec::new(), &mut observers)
+        };
+
+        let makespan = records.values().fold(0.0f64, |m, r| m.max(r.end_time));
+        let mut waits: Vec<f64> = jobs.iter().map(|j| records[&j.id].wait(j)).collect();
+        waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean_wait = waits.iter().sum::<f64>() / waits.len() as f64;
+        let pct = |p: f64| waits[((waits.len() - 1) as f64 * p) as usize];
+        let throttled = records.values().filter(|r| r.dvfs_scale < 1.0).count();
+        let node_seconds: f64 = jobs
+            .iter()
+            .map(|j| j.nodes as f64 * (records[&j.id].end_time - records[&j.id].start_time))
+            .sum();
+        let utilization = node_seconds / (total_nodes as f64 * makespan.max(1e-9));
+        let peak_mw = monitor.store.get("facility_power_w").map_or(0.0, |s| s.max()) / 1e6;
+        let energy_mwh = monitor.energy_kwh() / 1e3;
+
+        let mut summary = Table::new(
+            "Operations replay — event-driven day on the Booster partition",
+            &["Metric", "Value", "Unit"],
+        );
+        let row = |t: &mut Table, k: &str, v: String, u: &str| {
+            t.row(vec![k.to_string(), v, u.to_string()]);
+        };
+        row(&mut summary, "jobs completed", records.len().to_string(), "");
+        row(&mut summary, "makespan", f2(makespan / 3600.0), "h");
+        row(&mut summary, "mean wait", f1(mean_wait / 60.0), "min");
+        row(&mut summary, "p95 wait", f1(pct(0.95) / 60.0), "min");
+        row(&mut summary, "max wait", f1(pct(1.0) / 60.0), "min");
+        row(&mut summary, "mean utilization", f2(utilization), "of nodes");
+        row(&mut summary, "peak facility power", f2(peak_mw), "MW");
+        row(&mut summary, "facility energy", f2(energy_mwh), "MWh");
+        row(&mut summary, "DVFS-throttled jobs", throttled.to_string(), "");
+        row(
+            &mut summary,
+            "peak fabric congestion",
+            f2(congestion.peak_load()),
+            "global-link load",
+        );
+        let (submitted, started, ended) = counter.totals();
+        row(
+            &mut summary,
+            "lifecycle events",
+            format!("{submitted}/{started}/{ended}"),
+            "submit/start/end",
+        );
+
+        let power = monitor.store.energy_report();
+        let store = monitor.store.clone();
+        Ok(OpsReport {
+            records,
+            store,
+            peak_congestion: congestion.peak_load(),
+            summary,
+            power,
+        })
     }
 
     /// §2.2 latency budget table.
@@ -609,20 +723,28 @@ mod tests {
 
     #[test]
     fn table6_four_apps() {
-        let t = Twin::leonardo().table6();
+        let t = Twin::leonardo().table6().unwrap();
         assert_eq!(t.rows.len(), 4);
     }
 
     #[test]
     fn table7_nine_points() {
-        let t = Twin::leonardo().table7(None);
+        let t = Twin::leonardo().table7(None).unwrap();
         assert_eq!(t.rows.len(), 9);
         assert_eq!(t.rows[8][1], "9900");
     }
 
     #[test]
+    fn oversized_placement_is_an_error_not_a_panic() {
+        let twin = Twin::leonardo();
+        assert!(twin.place(3456).is_ok());
+        let err = twin.place(10_000).unwrap_err();
+        assert!(format!("{err}").contains("do not fit"), "{err}");
+    }
+
+    #[test]
     fn fig5_marconi_series_is_shorter_and_worse_at_scale() {
-        let t = Twin::leonardo().fig5();
+        let t = Twin::leonardo().fig5().unwrap();
         assert_eq!(t.rows.len(), 9);
         // Marconi runs out of nodes before 1024 (980 max).
         assert_eq!(t.rows[8][2], "-");
@@ -637,6 +759,36 @@ mod tests {
         let t = Twin::leonardo().latency_table();
         let max: f64 = t.rows.last().unwrap()[2].parse().unwrap();
         assert!(max <= 3.0, "{max}");
+    }
+
+    #[test]
+    fn operations_replay_small_day() {
+        let twin = Twin::leonardo();
+        let trace = crate::workloads::TraceGen::booster_day(300, 3);
+        let r = twin.operations_replay(&trace, Some(6.0)).unwrap();
+        assert_eq!(r.records.len(), 300);
+        // Per-event power series exists and integrates to positive energy.
+        let fac = r.store.get("facility_power_w").unwrap();
+        assert!(fac.len() >= 600, "one sample per start and per end");
+        assert!(fac.integral() > 0.0);
+        // Utilization gauge stays in [0, 1].
+        let util = r.store.get("utilization").unwrap();
+        assert!(util.max() <= 1.0 + 1e-9);
+        assert!(r.summary.rows.len() >= 10);
+    }
+
+    #[test]
+    fn operations_replay_is_deterministic() {
+        let twin = Twin::leonardo();
+        let trace = crate::workloads::TraceGen::booster_day(200, 9);
+        let a = twin.operations_replay(&trace, None).unwrap();
+        let b = twin.operations_replay(&trace, None).unwrap();
+        for (id, ra) in &a.records {
+            let rb = &b.records[id];
+            assert_eq!(ra.start_time, rb.start_time);
+            assert_eq!(ra.end_time, rb.end_time);
+        }
+        assert_eq!(a.peak_congestion, b.peak_congestion);
     }
 
     #[test]

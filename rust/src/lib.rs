@@ -4,8 +4,12 @@
 //! ("LEONARDO: A Pan-European Pre-Exascale Supercomputer for HPC and AI
 //! Applications", Turisini, Amati, Cestari — 2023).
 //!
-//! The crate models every subsystem the paper describes —
+//! The crate models every subsystem the paper describes, layered over a
+//! shared discrete-event core (see ARCHITECTURE.md for the diagram) —
 //!
+//! * [`sim`] — the deterministic discrete-event kernel: virtual
+//!   [`sim::Clock`], `BinaryHeap`-backed [`sim::EventQueue`] and the
+//!   [`sim::Component`] trait every operational layer plugs into;
 //! * [`hardware`] — the Da Vinci blade: custom A100 GPUs, Ice Lake host,
 //!   HBM2e/DDR4 memory systems, PCIe/NVLink intra-node fabric (Table 2,
 //!   Fig 3);
@@ -15,23 +19,35 @@
 //! * [`topology`] — the 23-cell dragonfly+ InfiniBand fabric: spine/leaf
 //!   wiring, port budgets, gateways, minimal and Valiant routing (Fig 4);
 //! * [`network`] — a flow-level network simulator: the paper's latency
-//!   budget (§2.2), bandwidth sharing, collectives and halo exchanges;
+//!   budget (§2.2), bandwidth sharing, collectives, halo exchanges, and
+//!   event-driven per-cell congestion from concurrently running jobs;
 //! * [`storage`] — the DDN/Lustre two-tier storage system: appliances, OST
 //!   striping, namespaces (Table 3) and an IO500-style workload engine
 //!   (Table 5);
-//! * [`scheduler`] — a SLURM-like batch scheduler with topology-aware
-//!   placement, backfill and power capping (§2.5, §2.6);
+//! * [`scheduler`] — a SLURM-like batch scheduler on the event kernel:
+//!   topology-aware placement, FIFO + EASY backfill and power capping
+//!   (§2.5, §2.6), emitting the `Start`/`End` stream observers subscribe
+//!   to;
 //! * [`power`] — node/facility power and energy models, PUE, DVFS capping,
-//!   Green500 arithmetic (§2.6, Table 4);
+//!   Green500 arithmetic (§2.6, Table 4), and the per-event
+//!   [`power::PowerMonitor`];
+//! * [`telemetry`] — Prometheus-style metric store, health checks, and the
+//!   event-stream scraper (§2.5–2.6);
 //! * [`perfmodel`] — rooflines and the HPL/HPCG analytic performance models
 //!   calibrated by real kernel runs (Table 4, Appendix A);
-//! * [`workloads`] — the four application benchmarks of Table 6;
+//! * [`workloads`] — the four application benchmarks of Table 6 and the
+//!   mixed HPC+AI operational trace generator [`workloads::TraceGen`];
 //! * [`lbm`] — the distributed lattice-Boltzmann driver behind the paper's
 //!   weak-scaling study (Table 7, Fig 5);
 //! * [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust;
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust
+//!   (feature `pjrt`; a host-only stub otherwise);
+//! * [`allocation`] / [`frontend`] / [`software`] — ISCRA/EuroHPC award
+//!   rounds, login balancing and the programming-environment inventory
+//!   (§2.4, §3);
 //! * [`coordinator`] — the campaign runner that composes all of the above
-//!   to regenerate every table and figure of the paper;
+//!   to regenerate every table and figure of the paper, plus the
+//!   operations-day replay ([`coordinator::Twin::operations_replay`]);
 //! * [`metrics`] — table/CSV/markdown emitters used by the CLI and benches.
 //!
 //! Compute is real: the LBM/GEMM/CG kernels are JAX + Pallas programs
@@ -45,8 +61,6 @@ pub mod frontend;
 pub mod hardware;
 pub mod hpcg;
 pub mod hpl;
-pub mod telemetry;
-pub mod util;
 pub mod lbm;
 pub mod metrics;
 pub mod network;
@@ -54,9 +68,12 @@ pub mod perfmodel;
 pub mod power;
 pub mod runtime;
 pub mod scheduler;
+pub mod sim;
 pub mod software;
 pub mod storage;
+pub mod telemetry;
 pub mod topology;
+pub mod util;
 pub mod workloads;
 
 /// Crate-wide result alias.

@@ -1,9 +1,11 @@
 //! `leonardo-twin` CLI: regenerate any table or figure of the paper, run
-//! calibration against the AOT kernel artifacts, or dump machine facts.
+//! calibration against the AOT kernel artifacts, replay an operational
+//! day, or dump machine facts.
 //!
 //! ```text
 //! leonardo-twin table1                 # rack inventory (Table 1)
 //! leonardo-twin table7 --calibrated    # LBM scaling from measured kernels
+//! leonardo-twin operations --jobs 10000 --cap 8.0
 //! leonardo-twin all --markdown         # every table, markdown to stdout
 //! leonardo-twin topology --dot > fabric.dot
 //! ```
@@ -14,6 +16,7 @@ use leonardo_twin::coordinator::Twin;
 use leonardo_twin::metrics::Table;
 use leonardo_twin::runtime::Engine;
 use leonardo_twin::topology::Routing;
+use leonardo_twin::workloads::TraceGen;
 
 const USAGE: &str = "\
 leonardo-twin — digital twin of the LEONARDO pre-exascale supercomputer
@@ -32,6 +35,8 @@ COMMANDS:
   latency     Fabric latency budget                   (Sec 2.2)
   topology    Dragonfly+ facts                        (Fig 4)     [--dot]
   overview    Architecture + blade summary            (Fig 1/3)
+  operations  Replay a mixed HPC+AI day on the Booster partition
+              through the event-driven scheduler      [--jobs N] [--seed S] [--cap MW]
   calibrate   Measure the AOT kernels through PJRT
   all         Every table in paper order              [--calibrated]
 
@@ -39,6 +44,9 @@ OPTIONS:
   --markdown        markdown tables instead of console layout
   --calibrated      calibrate models with real PJRT kernel runs first
   --artifacts DIR   artifacts directory (default ./artifacts)
+  --jobs N          operations: jobs in the synthetic day (default 10000)
+  --seed S          operations: trace seed (default 2023)
+  --cap MW          operations: facility power cap in MW (default uncapped)
 ";
 
 struct Args {
@@ -47,6 +55,9 @@ struct Args {
     calibrated: bool,
     dot: bool,
     artifacts: Option<String>,
+    jobs: usize,
+    seed: u64,
+    cap_mw: Option<f64>,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -58,6 +69,9 @@ fn parse_args() -> Result<Args, String> {
         calibrated: false,
         dot: false,
         artifacts: None,
+        jobs: 10_000,
+        seed: 2023,
+        cap_mw: None,
     };
     while let Some(a) = argv.next() {
         match a.as_str() {
@@ -65,8 +79,29 @@ fn parse_args() -> Result<Args, String> {
             "--calibrated" => args.calibrated = true,
             "--dot" => args.dot = true,
             "--artifacts" => {
-                args.artifacts =
-                    Some(argv.next().ok_or("--artifacts needs a value")?)
+                args.artifacts = Some(argv.next().ok_or("--artifacts needs a value")?)
+            }
+            "--jobs" => {
+                args.jobs = argv
+                    .next()
+                    .ok_or("--jobs needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--jobs: {e}"))?
+            }
+            "--seed" => {
+                args.seed = argv
+                    .next()
+                    .ok_or("--seed needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--seed: {e}"))?
+            }
+            "--cap" => {
+                args.cap_mw = Some(
+                    argv.next()
+                        .ok_or("--cap needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--cap: {e}"))?,
+                )
             }
             "-h" | "--help" => return Err(USAGE.to_string()),
             other => return Err(format!("unknown flag '{other}'\n\n{USAGE}")),
@@ -120,12 +155,12 @@ fn main() -> anyhow::Result<()> {
             print(&twin.table4(c.as_ref()), md);
         }
         "table5" => print(&twin.table5(), md),
-        "table6" => print(&twin.table6(), md),
+        "table6" => print(&twin.table6()?, md),
         "table7" => {
             let c = maybe_calibrate(&twin, &args)?;
-            print(&twin.table7(c.as_ref()), md);
+            print(&twin.table7(c.as_ref())?, md);
         }
-        "fig5" => print(&twin.fig5(), md),
+        "fig5" => print(&twin.fig5()?, md),
         "latency" => print(&twin.latency_table(), md),
         "topology" => {
             if args.dot {
@@ -135,6 +170,12 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "overview" => overview(&twin),
+        "operations" => {
+            let trace = TraceGen::booster_day(args.jobs, args.seed);
+            let report = twin.operations_replay(&trace, args.cap_mw)?;
+            print(&report.summary, md);
+            print(&report.power, md);
+        }
         "calibrate" => {
             let eng = engine(&args.artifacts)?;
             println!("platform: {}", eng.platform());
@@ -148,9 +189,9 @@ fn main() -> anyhow::Result<()> {
             print(&twin.table3(), md);
             print(&twin.table4(c.as_ref()), md);
             print(&twin.table5(), md);
-            print(&twin.table6(), md);
-            print(&twin.table7(c.as_ref()), md);
-            print(&twin.fig5(), md);
+            print(&twin.table6()?, md);
+            print(&twin.table7(c.as_ref())?, md);
+            print(&twin.fig5()?, md);
             print(&twin.latency_table(), md);
             if let Some(c) = &c {
                 print(&twin.calibration_table(c), md);

@@ -11,9 +11,17 @@
 //! computes the bandwidth share of every traffic class on the narrowest
 //! link it crosses (max-min style), which is what drives the weak-scaling
 //! efficiency shape of Table 7 / Fig 5.
+//!
+//! Congestion is event-driven: [`CongestionTracker`] subscribes to the
+//! shared [`crate::sim`] stream, and every multi-cell job `Start`/`End`
+//! updates per-cell background load that [`Network::effective_node_bw`]
+//! folds into the global-link capacity — so a job's achievable bandwidth
+//! depends on what else the scheduler is running, not just its own shape.
 
+use std::collections::BTreeMap;
 
-
+use crate::config::MachineConfig;
+use crate::sim::{Component, Event, ScheduledEvent};
 use crate::topology::{Routing, Topology, HDR_GBPS, HDR100_GBPS};
 
 /// Message-rate ceilings (§2.2).
@@ -54,6 +62,11 @@ pub struct Network {
     /// (0 = idle machine). Drives the locality-vs-spread trade-off the
     /// scheduler's packed placement exists for.
     pub background_global_load: f64,
+    /// Per-cell background load on the global links (fraction 0..=1),
+    /// maintained by a [`CongestionTracker`] from job start/end events.
+    /// Added to `background_global_load` for the cells a placement
+    /// touches.
+    pub cell_background: BTreeMap<u32, f64>,
 }
 
 impl Network {
@@ -64,7 +77,36 @@ impl Network {
             routing: Routing::Minimal,
             oversubscription: 1.0,
             background_global_load: 0.0,
+            cell_background: BTreeMap::new(),
         }
+    }
+
+    /// Set the background global-link load of one cell (clamped 0..=1;
+    /// ~zero entries are dropped).
+    pub fn set_cell_background_load(&mut self, cell: u32, load: f64) {
+        let load = load.clamp(0.0, 1.0);
+        if load < 1e-12 {
+            self.cell_background.remove(&cell);
+        } else {
+            self.cell_background.insert(cell, load);
+        }
+    }
+
+    pub fn cell_background_load(&self, cell: u32) -> f64 {
+        self.cell_background.get(&cell).copied().unwrap_or(0.0)
+    }
+
+    /// Mean per-cell background load over the cells a placement spans.
+    fn placement_background(&self, placement: &Placement) -> f64 {
+        if self.cell_background.is_empty() || placement.nodes_per_cell.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = placement
+            .nodes_per_cell
+            .iter()
+            .map(|&(c, _)| self.cell_background_load(c))
+            .sum();
+        sum / placement.nodes_per_cell.len() as f64
     }
 
     /// Effective node injection bandwidth, GB/s.
@@ -150,9 +192,11 @@ impl Network {
         let total = placement.total_nodes() as f64;
         let avg_cell = total / k as f64;
         let cross_fraction = (1.0 / avg_cell.cbrt()).min(1.0);
-        let global_gbs = self.topo.cell_pair_bw_gbps() / 8.0
-            * WIRE_EFFICIENCY
-            * (1.0 - self.background_global_load.clamp(0.0, 0.95));
+        let background = (self.background_global_load
+            + self.placement_background(placement))
+        .clamp(0.0, 0.95);
+        let global_gbs =
+            self.topo.cell_pair_bw_gbps() / 8.0 * WIRE_EFFICIENCY * (1.0 - background);
         let supply_per_node =
             global_gbs * (k as f64 - 1.0) / total / self.oversubscription;
         let demand_per_node = inj * cross_fraction;
@@ -194,6 +238,133 @@ impl Network {
     /// 4 units x 8 x 200 Gbps = 6.4 Tbps).
     pub fn gateway_aggregate_tbps(&self) -> f64 {
         crate::topology::GATEWAYS as f64 * 8.0 * HDR_GBPS / 1000.0
+    }
+}
+
+/// Per-cell load state of one cell tracked by [`CongestionTracker`].
+#[derive(Debug, Clone, Copy)]
+struct CellLoad {
+    /// Nodes in this cell belonging to running *multi-cell* jobs (the
+    /// traffic class that crosses the global links).
+    cross_nodes: u32,
+    total: u32,
+}
+
+/// Event-driven congestion accounting: a [`Component`] that watches job
+/// `Start`/`End` events and maintains, per cell, the fraction of nodes
+/// busy with multi-cell jobs — the surface traffic that loads the
+/// dragonfly global links. Apply the result to a [`Network`] (or query
+/// the load directly) to couple application performance to what the
+/// scheduler is concurrently running.
+#[derive(Debug, Clone)]
+pub struct CongestionTracker {
+    cells: BTreeMap<u32, CellLoad>,
+    /// Count only Booster-partition jobs (set by [`Self::for_booster`]).
+    /// Cell totals are partition-scoped, so a tracker built over GPU
+    /// cells must not charge DataCentric traffic to them — the Hybrid
+    /// cell hosts both partitions.
+    pub booster_only: bool,
+    /// Mean cross-traffic load over all tracked cells, sampled per event.
+    pub series: crate::telemetry::Series,
+    peak: f64,
+}
+
+impl CongestionTracker {
+    /// Track the given `(cell id, node total)` set, counting every job.
+    pub fn new(cells: impl IntoIterator<Item = (u32, u32)>) -> Self {
+        CongestionTracker {
+            cells: cells
+                .into_iter()
+                .map(|(id, total)| {
+                    (
+                        id,
+                        CellLoad {
+                            cross_nodes: 0,
+                            total: total.max(1),
+                        },
+                    )
+                })
+                .collect(),
+            booster_only: false,
+            series: crate::telemetry::Series::default(),
+            peak: 0.0,
+        }
+    }
+
+    /// Track the Booster partition's GPU cells of `cfg`, counting only
+    /// Booster jobs.
+    pub fn for_booster(cfg: &MachineConfig) -> Self {
+        let mut t = Self::new(cfg.cells.iter().enumerate().filter_map(|(id, cell)| {
+            let gpu: u32 = cell.groups.iter().map(|g| g.gpu_nodes()).sum();
+            (gpu > 0).then_some((id as u32, gpu))
+        }));
+        t.booster_only = true;
+        t
+    }
+
+    /// Cross-traffic load fraction of one cell (0 when untracked).
+    pub fn cell_load(&self, cell: u32) -> f64 {
+        self.cells
+            .get(&cell)
+            .map(|c| c.cross_nodes as f64 / c.total as f64)
+            .unwrap_or(0.0)
+    }
+
+    /// Mean load over all tracked cells.
+    pub fn mean_load(&self) -> f64 {
+        if self.cells.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .cells
+            .values()
+            .map(|c| c.cross_nodes as f64 / c.total as f64)
+            .sum();
+        sum / self.cells.len() as f64
+    }
+
+    /// Highest mean load observed over the run.
+    pub fn peak_load(&self) -> f64 {
+        self.peak
+    }
+
+    /// Write the current per-cell loads into `net` so
+    /// [`Network::effective_node_bw`] sees them.
+    pub fn apply_to(&self, net: &mut Network) {
+        for (&cell, load) in &self.cells {
+            net.set_cell_background_load(cell, load.cross_nodes as f64 / load.total as f64);
+        }
+    }
+
+    fn update(&mut self, cells: &[(u32, u32)], sign: i64) {
+        // Single-cell jobs never touch the global links.
+        if cells.len() <= 1 {
+            return;
+        }
+        for &(cell, nodes) in cells {
+            if let Some(c) = self.cells.get_mut(&cell) {
+                let next = c.cross_nodes as i64 + sign * nodes as i64;
+                c.cross_nodes = next.clamp(0, c.total as i64) as u32;
+            }
+        }
+    }
+}
+
+impl Component for CongestionTracker {
+    fn on_event(&mut self, now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+        match ev {
+            Event::Start { booster, cells, .. } if *booster || !self.booster_only => {
+                self.update(cells, 1)
+            }
+            Event::End { booster, cells, .. } if *booster || !self.booster_only => {
+                self.update(cells, -1)
+            }
+            _ => return Vec::new(),
+        }
+        let mean = self.mean_load();
+        self.peak = self.peak.max(mean);
+        self.series.push(now, mean);
+        Vec::new()
     }
 }
 
@@ -327,5 +498,94 @@ mod tests {
         let n = net();
         // 400 Gbps x 0.9 / 8 = 45 GB/s
         assert!((n.injection_gbs() - 45.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cell_background_load_throttles_touched_cells_only() {
+        let mut n = net();
+        let loaded = placement(&[(0, 180), (1, 180)]);
+        let elsewhere = placement(&[(4, 180), (5, 180)]);
+        let base = n.effective_node_bw(&loaded);
+        n.set_cell_background_load(0, 0.8);
+        n.set_cell_background_load(1, 0.8);
+        assert!(n.effective_node_bw(&loaded) < base);
+        assert!((n.effective_node_bw(&elsewhere) - base).abs() < 1e-9);
+        // Clearing restores the idle-fabric bandwidth.
+        n.set_cell_background_load(0, 0.0);
+        n.set_cell_background_load(1, 0.0);
+        assert!((n.effective_node_bw(&loaded) - base).abs() < 1e-9);
+        // Single-cell placements stay below the global links regardless.
+        let single = placement(&[(0, 64)]);
+        n.set_cell_background_load(0, 0.9);
+        assert_eq!(n.effective_node_bw(&single), n.injection_gbs());
+    }
+
+    #[test]
+    fn congestion_tracker_follows_start_end_events() {
+        use crate::sim::{Component, Event};
+        let mut t = CongestionTracker::new([(0, 180), (1, 180), (2, 180)]);
+        let start = Event::Start {
+            job: 1,
+            booster: true,
+            dvfs_scale: 1.0,
+            cells: vec![(0, 90), (1, 90)],
+        };
+        t.on_event(0.0, &start);
+        assert!((t.cell_load(0) - 0.5).abs() < 1e-12);
+        assert!((t.cell_load(2) - 0.0).abs() < 1e-12);
+        assert!(t.mean_load() > 0.0);
+        // Single-cell jobs do not load the global links.
+        t.on_event(1.0, &Event::Start {
+            job: 2,
+            booster: true,
+            dvfs_scale: 1.0,
+            cells: vec![(2, 180)],
+        });
+        assert_eq!(t.cell_load(2), 0.0);
+        t.on_event(2.0, &Event::End {
+            job: 1,
+            booster: true,
+            cells: vec![(0, 90), (1, 90)],
+        });
+        assert_eq!(t.mean_load(), 0.0);
+        assert!(t.peak_load() > 0.0);
+        // One sample per Start/End event, including the no-op single-cell
+        // start.
+        assert_eq!(t.series.len(), 3);
+    }
+
+    #[test]
+    fn booster_tracker_ignores_datacentric_jobs() {
+        use crate::sim::{Component, Event};
+        let mut t = CongestionTracker::for_booster(&MachineConfig::leonardo());
+        assert!(t.booster_only);
+        // A wide DataCentric job spanning CPU cells (incl. the Hybrid
+        // cell's CPU side) must not register as GPU-fabric load.
+        t.on_event(0.0, &Event::Start {
+            job: 1,
+            booster: false,
+            dvfs_scale: 1.0,
+            cells: vec![(19, 300), (20, 300), (21, 100)],
+        });
+        assert_eq!(t.mean_load(), 0.0);
+        assert_eq!(t.peak_load(), 0.0);
+    }
+
+    #[test]
+    fn tracker_applies_loads_to_network() {
+        use crate::sim::{Component, Event};
+        let mut n = net();
+        let mut t = CongestionTracker::for_booster(&MachineConfig::leonardo());
+        t.on_event(0.0, &Event::Start {
+            job: 1,
+            booster: true,
+            dvfs_scale: 1.0,
+            cells: vec![(0, 180), (1, 180)],
+        });
+        t.apply_to(&mut n);
+        assert!(n.cell_background_load(0) > 0.9);
+        let p = placement(&[(0, 90), (1, 90)]);
+        let idle = net().effective_node_bw(&p);
+        assert!(n.effective_node_bw(&p) < idle);
     }
 }

@@ -8,10 +8,18 @@
 //! the warm-water-cooling PUE of 1.1; the Bull Dynamic Power Optimizer
 //! analogue searches DVFS workpoints; energy-to-solution integrates
 //! power over a job.
+//!
+//! [`PowerMonitor`] subscribes to the shared [`crate::sim`] event stream:
+//! every job `Start`/`End` updates the fleet's busy-node and
+//! DVFS-weighted dynamic-power accounting and appends facility power and
+//! utilization samples to a [`crate::telemetry::MetricStore`] — series
+//! are emitted per-event instead of being recomputed after the fact.
 
-
+use std::collections::BTreeMap;
 
 use crate::hardware::NodeSpec;
+use crate::sim::{Component, Event, ScheduledEvent};
+use crate::telemetry::MetricStore;
 
 /// Per-blade constant draw: PSU/VRM losses, 2 x CX6 NICs, BMC, and the
 /// node's share of switch + DLC pump power, W.
@@ -166,6 +174,115 @@ pub fn cap_scale(
     })
 }
 
+/// Per-event facility power and utilization telemetry: a
+/// [`Component`] fed by the scheduler's `Start`/`End` stream.
+///
+/// Running jobs contribute their nodes' dynamic power scaled by the DVFS
+/// workpoint they started at (`power_factor = scale^2`); every other
+/// node idles. Series written into [`PowerMonitor::store`]:
+///
+/// * `facility_power_w` — PUE-inclusive facility draw, watts;
+/// * `utilization` — busy fraction of `total_nodes`;
+/// * `busy_nodes` — absolute busy node count.
+#[derive(Debug, Clone)]
+pub struct PowerMonitor {
+    pub model: PowerModel,
+    /// Per-node utilisation assumed for running jobs.
+    pub util: Utilization,
+    /// Fleet size the idle floor and utilization are computed over.
+    pub total_nodes: u32,
+    /// Count only Booster-partition jobs. Set this when `total_nodes`
+    /// is one partition's size and the event stream may carry both
+    /// partitions — otherwise DataCentric starts inflate `busy_nodes`
+    /// past the fleet and charge CPU nodes at GPU-node dynamic power.
+    pub booster_only: bool,
+    busy_nodes: u32,
+    /// Σ nodes x scale^2 over running jobs (dynamic-power weight).
+    dyn_weight: f64,
+    running: BTreeMap<u64, (u32, f64)>,
+    pub store: MetricStore,
+}
+
+impl PowerMonitor {
+    pub fn new(model: PowerModel, util: Utilization, total_nodes: u32) -> Self {
+        PowerMonitor {
+            model,
+            util,
+            total_nodes,
+            booster_only: false,
+            busy_nodes: 0,
+            dyn_weight: 0.0,
+            running: BTreeMap::new(),
+            store: MetricStore::default(),
+        }
+    }
+
+    pub fn busy_nodes(&self) -> u32 {
+        self.busy_nodes
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.total_nodes == 0 {
+            return 0.0;
+        }
+        self.busy_nodes as f64 / self.total_nodes as f64
+    }
+
+    /// Current facility draw, W (PUE-inclusive).
+    pub fn facility_w(&self) -> f64 {
+        let idle = self.model.node_power_w(Utilization::idle());
+        let active = self.model.node_power_w(self.util);
+        let dynamic = active - idle;
+        (self.total_nodes as f64 * idle + self.dyn_weight * dynamic) * self.model.pue
+    }
+
+    /// PUE-inclusive facility energy so far, kWh (integral of the
+    /// per-event power series).
+    pub fn energy_kwh(&self) -> f64 {
+        self.store.energy_kwh("facility_power_w")
+    }
+
+    fn sample(&mut self, now: f64) {
+        let fac = self.facility_w();
+        let util = self.utilization();
+        self.store.record("facility_power_w", now, fac);
+        self.store.record("utilization", now, util);
+        self.store
+            .record("busy_nodes", now, self.busy_nodes as f64);
+    }
+}
+
+impl Component for PowerMonitor {
+    fn on_event(&mut self, now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+        match ev {
+            Event::Start {
+                job,
+                booster,
+                dvfs_scale,
+                ..
+            } => {
+                if self.booster_only && !booster {
+                    return Vec::new();
+                }
+                let nodes = ev.nodes();
+                self.busy_nodes += nodes;
+                self.dyn_weight += nodes as f64 * dvfs_scale * dvfs_scale;
+                self.running.insert(*job, (nodes, *dvfs_scale));
+                self.sample(now);
+            }
+            Event::End { job, .. } => {
+                if let Some((nodes, scale)) = self.running.remove(job) {
+                    self.busy_nodes -= nodes;
+                    self.dyn_weight -= nodes as f64 * scale * scale;
+                    self.sample(now);
+                }
+            }
+            _ => {}
+        }
+        Vec::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,5 +396,75 @@ mod tests {
     fn cap_scale_none_when_impossible() {
         let m = leo_model();
         assert!(cap_scale(&m, 3300, Utilization::hpl(), 0.5).is_none());
+    }
+
+    fn start_ev(job: u64, nodes: u32, scale: f64) -> Event {
+        Event::Start {
+            job,
+            booster: true,
+            dvfs_scale: scale,
+            cells: vec![(0, nodes)],
+        }
+    }
+
+    fn end_ev(job: u64, nodes: u32) -> Event {
+        Event::End {
+            job,
+            booster: true,
+            cells: vec![(0, nodes)],
+        }
+    }
+
+    #[test]
+    fn monitor_tracks_busy_nodes_and_power() {
+        let mut mon = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
+        let idle_w = mon.facility_w();
+        mon.on_event(0.0, &start_ev(1, 1000, 1.0));
+        assert_eq!(mon.busy_nodes(), 1000);
+        let loaded_w = mon.facility_w();
+        assert!(loaded_w > idle_w);
+        mon.on_event(100.0, &end_ev(1, 1000));
+        assert_eq!(mon.busy_nodes(), 0);
+        assert!((mon.facility_w() - idle_w).abs() < 1e-6);
+        // Per-event series: one sample at start, one at end.
+        assert_eq!(mon.store.get("facility_power_w").unwrap().len(), 2);
+        assert!(mon.energy_kwh() > 0.0);
+    }
+
+    #[test]
+    fn monitor_dvfs_scale_reduces_dynamic_power() {
+        let mut nominal = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
+        let mut capped = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
+        nominal.on_event(0.0, &start_ev(1, 2000, 1.0));
+        capped.on_event(0.0, &start_ev(1, 2000, 0.8));
+        assert!(capped.facility_w() < nominal.facility_w());
+        // Idle floor identical: the difference is purely dynamic.
+        let idle = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456).facility_w();
+        assert!(capped.facility_w() > idle);
+    }
+
+    #[test]
+    fn booster_only_monitor_ignores_datacentric_jobs() {
+        let mut mon = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
+        mon.booster_only = true;
+        let dc_start = Event::Start {
+            job: 1,
+            booster: false,
+            dvfs_scale: 1.0,
+            cells: vec![(19, 1200)],
+        };
+        mon.on_event(0.0, &dc_start);
+        assert_eq!(mon.busy_nodes(), 0);
+        mon.on_event(0.0, &start_ev(2, 3000, 1.0));
+        assert_eq!(mon.busy_nodes(), 3000);
+        assert!(mon.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn monitor_ignores_unknown_job_end() {
+        let mut mon = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
+        mon.on_event(0.0, &end_ev(42, 100));
+        assert_eq!(mon.busy_nodes(), 0);
+        assert!(mon.store.get("facility_power_w").is_none());
     }
 }

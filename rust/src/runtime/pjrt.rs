@@ -1,0 +1,210 @@
+//! The real PJRT engine (feature `pjrt`): XLA client, compiled-executable
+//! cache, literal/buffer plumbing. Requires the toolchain's vendored
+//! `xla` bindings (see Cargo.toml).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context};
+
+use super::{default_artifacts_dir, ModuleSpec, TensorSpec};
+use crate::Result;
+
+/// The engine: PJRT client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ModuleSpec>,
+    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Open an artifacts directory (reads `manifest.json`, lazy-compiles
+    /// modules on first use).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("reading {manifest_path:?} — run `make artifacts` first")
+        })?;
+        let manifest = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        default_artifacts_dir()
+    }
+
+    /// Whether artifacts exist where [`Engine::load`] would look.
+    pub fn available() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of available modules.
+    pub fn modules(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.manifest.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ModuleSpec> {
+        self.manifest.get(name)
+    }
+
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        if !self.manifest.contains_key(name) {
+            return Err(anyhow!(
+                "unknown module '{name}'; available: {:?}",
+                self.modules()
+            ));
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.exes
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Force-compile a module (useful to amortize JIT cost up front).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Execute a module on host literals; returns the untupled outputs.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let spec = &self.manifest[name];
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "'{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let out = exe.execute::<xla::Literal>(inputs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Stage a literal on device for buffer-based hot loops.
+    pub fn buffer_from_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Execute on staged device buffers; returns raw output buffers
+    /// (still on device — chain them into the next step without a host
+    /// round-trip).
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = self.executable(name)?;
+        let mut out = exe.execute_b::<xla::PjRtBuffer>(inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// Read an output buffer back as a tuple of literals.
+    pub fn buffers_to_literals(&self, buf: &xla::PjRtBuffer) -> Result<Vec<xla::Literal>> {
+        Ok(buf.to_literal_sync()?.to_tuple()?)
+    }
+
+    /// Time `iters` executions of `name` on `inputs`, seconds per call
+    /// (first call compiles and is excluded).
+    pub fn time_execute(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+        iters: u32,
+    ) -> Result<f64> {
+        self.execute(name, inputs)?; // warmup + compile
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            self.execute(name, inputs)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() / iters.max(1) as f64)
+    }
+}
+
+/// Parse `manifest.json` with the in-crate JSON parser (offline build —
+/// no serde_json; see `util::json`).
+fn parse_manifest(text: &str) -> Result<HashMap<String, ModuleSpec>> {
+    use crate::util::json::Json;
+    let root = Json::parse(text)?;
+    let mut out = HashMap::new();
+    for (name, entry) in root.as_obj()? {
+        let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+            entry
+                .get(key)?
+                .as_arr()?
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec {
+                        shape: t
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_>>()?,
+                        dtype: t.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect()
+        };
+        out.insert(
+            name.clone(),
+            ModuleSpec {
+                inputs: tensors("inputs")?,
+                outputs: tensors("outputs")?,
+                hlo_chars: entry.get("hlo_chars")?.as_usize()?,
+            },
+        );
+    }
+    Ok(out)
+}
+
+/// Build an f32 literal of `shape` from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        return Err(anyhow!(
+            "shape {shape:?} wants {n} elements, got {}",
+            data.len()
+        ));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// A scalar f32 literal (rank-0, as the CG state uses).
+pub fn scalar_f32(v: f32) -> Result<xla::Literal> {
+    Ok(xla::Literal::scalar(v))
+}
+
+/// Zero-filled f32 literal for a manifest spec.
+pub fn zeros_for(spec: &TensorSpec) -> Result<xla::Literal> {
+    let data = vec![0f32; spec.element_count()];
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+}

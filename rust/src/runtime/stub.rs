@@ -1,0 +1,146 @@
+//! Host-only stand-in for the PJRT engine (feature `pjrt` off).
+//!
+//! Keeps the whole crate compiling and testable without the `xla`
+//! bindings: `Literal` carries real f32 data so literal plumbing and its
+//! tests work, while [`Engine::load`] always errs — callers that guard
+//! with `if let Ok(engine) = Engine::load(...)` (every artifact-dependent
+//! test, bench and example) skip exactly as they do on a checkout that
+//! has not run `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::anyhow;
+
+use super::{default_artifacts_dir, ModuleSpec};
+use crate::Result;
+
+/// Host-side stand-in for `xla::Literal`: flat f32 data + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Literal {
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from(v)).collect())
+    }
+}
+
+/// Opaque stand-in for `xla::PjRtBuffer` (never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+fn unavailable() -> anyhow::Error {
+    anyhow!(
+        "PJRT engine unavailable: built without the `pjrt` cargo feature \
+         (run `make artifacts` and rebuild with `--features pjrt` plus the \
+         toolchain's xla bindings)"
+    )
+}
+
+/// The stub engine. [`Engine::load`] always errs, so no other method is
+/// reachable on a value — they exist to keep call sites compiling.
+pub struct Engine {
+    _private: (),
+}
+
+impl Engine {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = dir.as_ref().join("manifest.json");
+        Err(unavailable().context(format!(
+            "loading {manifest:?} — run `make artifacts` first"
+        )))
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        default_artifacts_dir()
+    }
+
+    /// The stub engine can never execute artifacts.
+    pub fn available() -> bool {
+        false
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn modules(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    pub fn spec(&self, _name: &str) -> Option<&ModuleSpec> {
+        None
+    }
+
+    pub fn warmup(&self, _name: &str) -> Result<()> {
+        Err(unavailable())
+    }
+
+    pub fn execute(&self, _name: &str, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_literal(&self, _lit: &Literal) -> Result<PjRtBuffer> {
+        Err(unavailable())
+    }
+
+    pub fn execute_buffers(
+        &self,
+        _name: &str,
+        _inputs: &[PjRtBuffer],
+    ) -> Result<Vec<PjRtBuffer>> {
+        Err(unavailable())
+    }
+
+    pub fn buffers_to_literals(&self, _buf: &PjRtBuffer) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn time_execute(&self, _name: &str, _inputs: &[Literal], _iters: u32) -> Result<f64> {
+        Err(unavailable())
+    }
+}
+
+/// Build an f32 literal of `shape` from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        return Err(anyhow!(
+            "shape {shape:?} wants {n} elements, got {}",
+            data.len()
+        ));
+    }
+    Ok(Literal {
+        data: data.to_vec(),
+        shape: shape.to_vec(),
+    })
+}
+
+/// A scalar f32 literal (rank-0, as the CG state uses).
+pub fn scalar_f32(v: f32) -> Result<Literal> {
+    Ok(Literal {
+        data: vec![v],
+        shape: Vec::new(),
+    })
+}
+
+/// Zero-filled f32 literal for a manifest spec.
+pub fn zeros_for(spec: &super::TensorSpec) -> Result<Literal> {
+    Ok(Literal {
+        data: vec![0f32; spec.element_count()],
+        shape: spec.shape.clone(),
+    })
+}

@@ -1,24 +1,41 @@
 //! SLURM-like batch scheduler (paper §2.5: SLURM is LEONARDO's workload
 //! manager; §2.6: power-aware operation via the Bull Energy Optimizer).
 //!
-//! Virtual-time event simulation of partitions, a FIFO queue with EASY
-//! backfill, topology-aware placement (pack a job into as few dragonfly
-//! cells as possible — locality is what keeps the Table 7 efficiencies
-//! flat), and an optional facility power cap that DVFS-throttles jobs
-//! (extending their runtime) instead of starving the queue.
+//! Event-driven simulation of partitions on the shared [`crate::sim`]
+//! kernel: a FIFO queue with EASY backfill, topology-aware placement
+//! (pack a job into as few dragonfly cells as possible — locality is
+//! what keeps the Table 7 efficiencies flat), and an optional facility
+//! power cap that DVFS-throttles jobs (extending their runtime) instead
+//! of starving the queue.
+//!
+//! [`Scheduler::run`] drives the job lifecycle purely from
+//! `Submit`/`End`/`CapChange` events — running jobs live in an
+//! end-time-ordered map, a scheduling pass fires only when state changed
+//! — and emits `Start`/`End` events observers (power, telemetry, network
+//! congestion) subscribe to via [`Scheduler::run_with`]. The legacy
+//! scan-and-rescan loop is preserved as [`Scheduler::run_rescan`]: it is
+//! the baseline `benches/scheduler_throughput.rs` measures against, and
+//! the equivalence oracle the tests hold the event engine to.
 
 use std::collections::BTreeMap;
 
-
-
 use crate::config::{CellKind, MachineConfig};
 use crate::network::Placement;
+use crate::power::{PowerModel, Utilization};
+use crate::sim::{Component, Event, ScheduledEvent, SimTime, Simulation, TIME_EPS};
 
 /// Target partition of a job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Partition {
     Booster,
     DataCentric,
+}
+
+fn pidx(p: Partition) -> usize {
+    match p {
+        Partition::Booster => 0,
+        Partition::DataCentric => 1,
+    }
 }
 
 /// A batch job.
@@ -78,6 +95,18 @@ pub struct PowerCap {
     pub node_watts: f64,
     /// Per-node idle power, W.
     pub idle_watts: f64,
+}
+
+impl PowerCap {
+    /// Cap at `cap_mw` with per-node watts taken from `model` (HPL-class
+    /// load for running nodes, idle for the rest).
+    pub fn for_model(model: &PowerModel, cap_mw: f64) -> Self {
+        PowerCap {
+            cap_mw,
+            node_watts: model.node_power_w(Utilization::hpl()),
+            idle_watts: model.node_power_w(Utilization::idle()),
+        }
+    }
 }
 
 impl Scheduler {
@@ -171,10 +200,60 @@ impl Scheduler {
         }
     }
 
-    /// Run a workload to completion with FIFO + EASY backfill.
-    ///
-    /// Returns per-job records. Virtual time; deterministic.
-    pub fn run(&mut self, mut jobs: Vec<Job>) -> BTreeMap<u64, JobRecord> {
+    /// Run a workload to completion with FIFO + EASY backfill on the
+    /// event engine. Returns per-job records. Virtual time; deterministic.
+    pub fn run(&mut self, jobs: Vec<Job>) -> BTreeMap<u64, JobRecord> {
+        self.run_with(jobs, Vec::new(), &mut [])
+    }
+
+    /// Event-driven run with external events (e.g. `CapChange`) injected
+    /// into the stream and `observers` subscribed to every event the job
+    /// lifecycle produces (`Submit`, `Start`, `End`, `CapChange`).
+    pub fn run_with(
+        &mut self,
+        mut jobs: Vec<Job>,
+        extra_events: Vec<ScheduledEvent>,
+        observers: &mut [&mut dyn Component],
+    ) -> BTreeMap<u64, JobRecord> {
+        jobs.sort_by(|a, b| {
+            a.submit_time
+                .partial_cmp(&b.submit_time)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let mut sim = Simulation::new();
+        for job in &jobs {
+            // Virtual time starts at 0: the legacy loop admitted any
+            // earlier submit at t=0, so clamp to keep that behaviour.
+            sim.schedule(job.submit_time.max(0.0), Event::Submit { job: job.id });
+        }
+        for se in extra_events {
+            sim.schedule(se.time, se.event);
+        }
+        let mut engine = JobEngine::new(self, jobs);
+        {
+            let mut comps: Vec<&mut dyn Component> = Vec::with_capacity(1 + observers.len());
+            comps.push(&mut engine);
+            for o in observers.iter_mut() {
+                comps.push(&mut **o);
+            }
+            sim.run(&mut comps);
+        }
+        assert!(
+            engine.queue.is_empty(),
+            "scheduler stuck: {} jobs can never be placed",
+            engine.queue.len()
+        );
+        engine.records
+    }
+
+    /// The legacy scan-and-rescan loop (the seed implementation):
+    /// recomputes the next wake-up by scanning the running vector,
+    /// re-sorts it for every head reservation and rescans the whole
+    /// queue each iteration. Kept as the baseline for
+    /// `benches/scheduler_throughput.rs` and as the semantic oracle the
+    /// event engine is tested against — use [`Scheduler::run`].
+    pub fn run_rescan(&mut self, mut jobs: Vec<Job>) -> BTreeMap<u64, JobRecord> {
         jobs.sort_by(|a, b| {
             a.submit_time
                 .partial_cmp(&b.submit_time)
@@ -203,10 +282,7 @@ impl Scheduler {
             for (qpos, &ji) in queue.iter().enumerate() {
                 let job = &jobs[ji];
                 if self.free_nodes(job.partition) < job.nodes {
-                    if qpos == 0 {
-                        continue; // head waits; others may backfill
-                    }
-                    continue;
+                    continue; // head waits; others may backfill
                 }
                 if qpos > 0 {
                     if let Some((res_time, res_part, res_nodes)) = head_reservation {
@@ -223,8 +299,7 @@ impl Scheduler {
                 let placement = self
                     .place(job.partition, job.nodes)
                     .expect("checked free_nodes");
-                let slowdown = crate::power::DvfsPoint { scale }
-                    .time_factor(job.boundness);
+                let slowdown = crate::power::DvfsPoint { scale }.time_factor(job.boundness);
                 let end = now + job.run_seconds * slowdown;
                 records.insert(
                     job.id,
@@ -272,8 +347,7 @@ impl Scheduler {
                 if running[i].0 <= now + 1e-9 {
                     let (_, ji) = running.remove(i);
                     let job = &jobs[ji];
-                    let placement =
-                        records.get(&job.id).unwrap().placement.clone();
+                    let placement = records.get(&job.id).unwrap().placement.clone();
                     self.release(job.partition, &placement);
                 } else {
                     i += 1;
@@ -284,7 +358,7 @@ impl Scheduler {
     }
 
     /// Earliest time the queue head could start, given running jobs:
-    /// (time, partition, nodes it needs).
+    /// (time, partition, nodes it needs). Legacy-loop helper.
     fn head_reservation(
         &self,
         jobs: &[Job],
@@ -314,24 +388,25 @@ impl Scheduler {
     }
 
     /// DVFS scale for a job about to start (`new_nodes`) under the
-    /// facility power cap, if any.
-    fn dvfs_scale_for(
-        &self,
-        jobs: &[Job],
-        running: &[(f64, usize)],
-        new_nodes: u32,
-    ) -> f64 {
+    /// facility power cap, if any. Legacy-loop helper.
+    fn dvfs_scale_for(&self, jobs: &[Job], running: &[(f64, usize)], new_nodes: u32) -> f64 {
+        if self.power_cap.is_none() {
+            return 1.0;
+        }
+        let busy: u32 =
+            running.iter().map(|(_, ji)| jobs[*ji].nodes).sum::<u32>() + new_nodes;
+        self.dvfs_scale_at(busy)
+    }
+
+    /// DVFS scale when `busy` nodes (including the one about to start)
+    /// are loaded, under the facility power cap.
+    fn dvfs_scale_at(&self, busy: u32) -> f64 {
         let Some(cap) = self.power_cap else {
             return 1.0;
         };
-        let busy: u32 = running.iter().map(|(_, ji)| jobs[*ji].nodes).sum::<u32>()
-            + new_nodes;
-        let idle_nodes = self
-            .total_nodes(Partition::Booster)
-            .saturating_sub(busy);
-        let draw_mw = (busy as f64 * cap.node_watts
-            + idle_nodes as f64 * cap.idle_watts)
-            / 1e6;
+        let idle_nodes = self.total_nodes(Partition::Booster).saturating_sub(busy);
+        let draw_mw =
+            (busy as f64 * cap.node_watts + idle_nodes as f64 * cap.idle_watts) / 1e6;
         if draw_mw <= cap.cap_mw {
             1.0
         } else {
@@ -342,10 +417,232 @@ impl Scheduler {
     }
 }
 
+/// The event-driven job lifecycle: a [`Component`] translating
+/// `Submit`/`End`/`CapChange` events into placement decisions, emitting
+/// `Start`/`End` events for observers.
+///
+/// State the legacy loop recomputed per wake-up is maintained
+/// incrementally: free nodes per partition are O(1) counters, running
+/// jobs live in a `BTreeMap` keyed by `(end time, start seq)` so both
+/// the next completion and the head reservation walk come out in order
+/// without re-sorting, and the scheduling pass runs only when an event
+/// actually changed capacity or the queue (`dirty`).
+struct JobEngine<'a> {
+    sched: &'a mut Scheduler,
+    jobs: Vec<Job>,
+    idx_of: BTreeMap<u64, usize>,
+    /// Queued job indices in FIFO (submit) order.
+    queue: Vec<usize>,
+    /// Running jobs: (end time, start seq) -> job index.
+    running: BTreeMap<(SimTime, u64), usize>,
+    start_seq: u64,
+    /// Total running nodes across both partitions (power-cap accounting,
+    /// matching the legacy loop).
+    running_nodes: u32,
+    /// Cached free nodes per partition (indexed by [`pidx`]).
+    free: [u32; 2],
+    records: BTreeMap<u64, JobRecord>,
+    dirty: bool,
+}
+
+impl<'a> JobEngine<'a> {
+    fn new(sched: &'a mut Scheduler, jobs: Vec<Job>) -> Self {
+        let mut idx_of = BTreeMap::new();
+        for (i, job) in jobs.iter().enumerate() {
+            let prev = idx_of.insert(job.id, i);
+            assert!(prev.is_none(), "duplicate job id {}", job.id);
+        }
+        let free = [
+            sched.free_nodes(Partition::Booster),
+            sched.free_nodes(Partition::DataCentric),
+        ];
+        JobEngine {
+            sched,
+            jobs,
+            idx_of,
+            queue: Vec::new(),
+            running: BTreeMap::new(),
+            start_seq: 0,
+            running_nodes: 0,
+            free,
+            records: BTreeMap::new(),
+            dirty: false,
+        }
+    }
+
+    /// Earliest time the queue head could start: walk running jobs in
+    /// end-time order (the map's native order) instead of re-sorting.
+    fn head_reservation(&self, now: f64) -> Option<(f64, Partition, u32)> {
+        let &head = self.queue.first()?;
+        let job = &self.jobs[head];
+        let mut free = self.free[pidx(job.partition)];
+        if free >= job.nodes {
+            return Some((now, job.partition, job.nodes));
+        }
+        for (&(t, _), &ji) in &self.running {
+            let j = &self.jobs[ji];
+            if j.partition != job.partition {
+                continue;
+            }
+            free += j.nodes;
+            if free >= job.nodes {
+                return Some((t.0, job.partition, job.nodes));
+            }
+        }
+        None
+    }
+
+    /// DVFS scale for a start of `new_nodes` (O(1) via the counter;
+    /// same formula as the legacy loop via [`Scheduler::dvfs_scale_at`]).
+    fn dvfs_scale(&self, new_nodes: u32) -> f64 {
+        self.sched.dvfs_scale_at(self.running_nodes + new_nodes)
+    }
+
+    /// Complete every running job whose end falls within `TIME_EPS` of
+    /// `now` (the legacy loop's completion tolerance).
+    fn complete_due(&mut self, now: f64) {
+        while let Some((&(t, seq), &ji)) = self.running.first_key_value() {
+            if t.0 > now + TIME_EPS {
+                break;
+            }
+            self.running.remove(&(t, seq));
+            let job = &self.jobs[ji];
+            let placement = self.records.get(&job.id).unwrap().placement.clone();
+            self.sched.release(job.partition, &placement);
+            self.free[pidx(job.partition)] += job.nodes;
+            self.running_nodes -= job.nodes;
+            self.dirty = true;
+        }
+    }
+
+    /// One scheduling pass: head strictly FIFO, the rest EASY backfill.
+    /// Semantically identical to one iteration of the legacy loop.
+    fn pass(&mut self, now: f64) -> Vec<ScheduledEvent> {
+        let head_res = self.head_reservation(now);
+        let mut started: Vec<usize> = Vec::new();
+        let mut out = Vec::new();
+        for qpos in 0..self.queue.len() {
+            let ji = self.queue[qpos];
+            let job = &self.jobs[ji];
+            let p = pidx(job.partition);
+            if self.free[p] < job.nodes {
+                continue; // head waits; others may backfill
+            }
+            if qpos > 0 {
+                if let Some((res_time, res_part, res_nodes)) = head_res {
+                    // Would this backfill delay the head?
+                    let fits_before = now + job.est_seconds <= res_time + 1e-9;
+                    let disjoint = job.partition != res_part
+                        || self.free[p] - job.nodes >= res_nodes;
+                    if !fits_before && !disjoint {
+                        continue;
+                    }
+                }
+            }
+            let scale = self.dvfs_scale(job.nodes);
+            let placement = self
+                .sched
+                .place(job.partition, job.nodes)
+                .expect("checked free counter");
+            self.free[p] -= job.nodes;
+            let slowdown = crate::power::DvfsPoint { scale }.time_factor(job.boundness);
+            let end = now + job.run_seconds * slowdown;
+            let booster = job.partition == Partition::Booster;
+            out.push(ScheduledEvent::at(
+                now,
+                Event::Start {
+                    job: job.id,
+                    booster,
+                    dvfs_scale: scale,
+                    cells: placement.nodes_per_cell.clone(),
+                },
+            ));
+            out.push(ScheduledEvent::at(
+                end,
+                Event::End {
+                    job: job.id,
+                    booster,
+                    cells: placement.nodes_per_cell.clone(),
+                },
+            ));
+            self.records.insert(
+                job.id,
+                JobRecord {
+                    id: job.id,
+                    start_time: now,
+                    end_time: end,
+                    placement,
+                    dvfs_scale: scale,
+                },
+            );
+            self.running.insert((SimTime(end), self.start_seq), ji);
+            self.start_seq += 1;
+            self.running_nodes += job.nodes;
+            started.push(qpos);
+        }
+        if !started.is_empty() {
+            let mut rm = started.iter().copied().peekable();
+            let mut i = 0usize;
+            self.queue.retain(|_| {
+                let drop = rm.peek() == Some(&i);
+                if drop {
+                    rm.next();
+                }
+                i += 1;
+                !drop
+            });
+        }
+        out
+    }
+}
+
+impl Component for JobEngine<'_> {
+    fn on_event(&mut self, _now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+        match ev {
+            Event::Submit { job } => {
+                if let Some(&ji) = self.idx_of.get(job) {
+                    self.queue.push(ji);
+                    self.dirty = true;
+                }
+            }
+            // Releases happen in the quiescent completion sweep so
+            // equal-time Ends and Submits see one consistent pass.
+            Event::End { .. } => self.dirty = true,
+            Event::CapChange { cap_mw } => {
+                match *cap_mw {
+                    None => self.sched.power_cap = None,
+                    Some(mw) => match self.sched.power_cap.as_mut() {
+                        Some(cap) => cap.cap_mw = mw,
+                        // No watt model configured: the scheduler cannot
+                        // invent one for an arbitrary machine, so a level
+                        // change on a capless scheduler is a no-op. Set
+                        // `power_cap` (see `PowerCap::for_model`) before
+                        // the run to make cap events effective.
+                        None => return Vec::new(),
+                    },
+                }
+                self.dirty = true;
+            }
+            Event::Start { .. } => {} // self-emitted
+        }
+        Vec::new()
+    }
+
+    fn on_quiescent(&mut self, now: f64) -> Vec<ScheduledEvent> {
+        self.complete_due(now);
+        if !self.dirty {
+            return Vec::new();
+        }
+        self.dirty = false;
+        self.pass(now)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::MachineConfig;
+    use crate::util::rng::Rng;
 
     fn sched() -> Scheduler {
         Scheduler::new(&MachineConfig::leonardo())
@@ -486,5 +783,137 @@ mod tests {
         }
         // Machine fully free afterwards.
         assert_eq!(s.free_nodes(Partition::Booster), 3456);
+    }
+
+    fn random_stream(seed: u64, n_jobs: u32) -> Vec<Job> {
+        let mut rng = Rng::new(seed);
+        (0..n_jobs)
+            .map(|i| {
+                let booster = rng.f64() < 0.7;
+                Job {
+                    id: i as u64,
+                    partition: if booster {
+                        Partition::Booster
+                    } else {
+                        Partition::DataCentric
+                    },
+                    nodes: rng.range_u32(1, if booster { 3456 } else { 1536 }),
+                    est_seconds: rng.range_f64(1.0, 500.0),
+                    run_seconds: rng.range_f64(1.0, 500.0),
+                    submit_time: rng.range_f64(0.0, 100.0),
+                    boundness: rng.f64(),
+                }
+            })
+            .collect()
+    }
+
+    /// The event engine is bit-for-bit equivalent to the legacy loop.
+    #[test]
+    fn event_engine_matches_rescan_loop() {
+        for seed in 0..6u64 {
+            let jobs = random_stream(seed, 80);
+            let ev = sched().run(jobs.clone());
+            let legacy = sched().run_rescan(jobs);
+            assert_eq!(ev.len(), legacy.len(), "seed {seed}");
+            for (id, r) in &ev {
+                let l = &legacy[id];
+                assert_eq!(r.start_time, l.start_time, "seed {seed} job {id}");
+                assert_eq!(r.end_time, l.end_time, "seed {seed} job {id}");
+                assert_eq!(r.dvfs_scale, l.dvfs_scale, "seed {seed} job {id}");
+                assert_eq!(
+                    r.placement.nodes_per_cell, l.placement.nodes_per_cell,
+                    "seed {seed} job {id}"
+                );
+            }
+        }
+    }
+
+    /// Same equivalence under a facility power cap (DVFS path).
+    #[test]
+    fn event_engine_matches_rescan_under_cap() {
+        for seed in 10..14u64 {
+            let jobs = random_stream(seed, 50);
+            let cap = PowerCap {
+                cap_mw: 5.0,
+                node_watts: 2238.0,
+                idle_watts: 365.0,
+            };
+            let mut a = sched();
+            a.power_cap = Some(cap);
+            let ev = a.run(jobs.clone());
+            let mut b = sched();
+            b.power_cap = Some(cap);
+            let legacy = b.run_rescan(jobs);
+            for (id, r) in &ev {
+                let l = &legacy[id];
+                assert_eq!(r.start_time, l.start_time, "seed {seed} job {id}");
+                assert_eq!(r.end_time, l.end_time, "seed {seed} job {id}");
+                assert_eq!(r.dvfs_scale, l.dvfs_scale, "seed {seed} job {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn cap_change_event_throttles_later_jobs_only() {
+        let mut s = sched();
+        // Two identical whole-machine jobs back to back; the cap lands
+        // between their starts.
+        let jobs = vec![job(1, 3000, 100.0, 0.0), job(2, 3000, 100.0, 50.0)];
+        let cap = PowerCap {
+            cap_mw: 4.0,
+            node_watts: 2238.0,
+            idle_watts: 365.0,
+        };
+        let events = vec![ScheduledEvent::at(
+            99.0,
+            Event::CapChange {
+                cap_mw: Some(cap.cap_mw),
+            },
+        )];
+        s.power_cap = Some(PowerCap { cap_mw: 99.0, ..cap });
+        let rec = s.run_with(jobs, events, &mut []);
+        assert_eq!(rec[&1].dvfs_scale, 1.0, "started under the loose cap");
+        assert!(rec[&2].dvfs_scale < 1.0, "started after the 4 MW cap");
+    }
+
+    #[test]
+    fn cap_change_without_watt_model_is_ignored() {
+        let mut s = sched();
+        assert!(s.power_cap.is_none());
+        let events = vec![ScheduledEvent::at(0.0, Event::CapChange { cap_mw: Some(4.0) })];
+        let rec = s.run_with(vec![job(1, 3000, 100.0, 1.0)], events, &mut []);
+        // No watt model to build a cap from: the job runs at nominal.
+        assert_eq!(rec[&1].dvfs_scale, 1.0);
+        assert!(s.power_cap.is_none());
+    }
+
+    /// Observers receive the full lifecycle stream.
+    #[test]
+    fn observers_see_submit_start_end() {
+        struct Counter {
+            submits: u32,
+            starts: u32,
+            ends: u32,
+        }
+        impl Component for Counter {
+            fn on_event(&mut self, _now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+                match ev {
+                    Event::Submit { .. } => self.submits += 1,
+                    Event::Start { .. } => self.starts += 1,
+                    Event::End { .. } => self.ends += 1,
+                    _ => {}
+                }
+                Vec::new()
+            }
+        }
+        let mut c = Counter {
+            submits: 0,
+            starts: 0,
+            ends: 0,
+        };
+        let jobs: Vec<Job> = (0..20).map(|i| job(i, 200, 30.0, i as f64)).collect();
+        let rec = sched().run_with(jobs, Vec::new(), &mut [&mut c]);
+        assert_eq!(rec.len(), 20);
+        assert_eq!((c.submits, c.starts, c.ends), (20, 20, 20));
     }
 }

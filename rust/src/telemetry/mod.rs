@@ -7,10 +7,16 @@
 //! exactly reproducible: the scheduler/power layers push samples, the
 //! [`MetricStore`] aggregates them, and reports (energy profiles, PUE
 //! accounting, health summaries) come out as [`crate::metrics::Table`]s.
+//!
+//! [`EventCounter`] subscribes to the shared [`crate::sim`] event stream
+//! and scrapes queue/running gauges per event — utilization series come
+//! out of the simulation itself rather than being reconstructed from job
+//! records afterwards.
 
 use std::collections::BTreeMap;
 
 use crate::metrics::{f1, f2, Table};
+use crate::sim::{Component, Event, ScheduledEvent};
 
 /// One time-stamped sample of a named series.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -205,6 +211,49 @@ pub fn health_summary(store: &MetricStore) -> (Table, Health) {
     (t, worst)
 }
 
+/// Prometheus-style scheduler gauges scraped from the event stream: a
+/// [`Component`] that samples cumulative job counts, queue depth and
+/// running jobs at every `Submit`/`Start`/`End`.
+#[derive(Debug, Clone, Default)]
+pub struct EventCounter {
+    pub store: MetricStore,
+    submitted: u64,
+    started: u64,
+    ended: u64,
+}
+
+impl EventCounter {
+    /// (submitted, started, ended) totals so far.
+    pub fn totals(&self) -> (u64, u64, u64) {
+        (self.submitted, self.started, self.ended)
+    }
+
+    fn sample(&mut self, now: f64) {
+        self.store
+            .record("jobs_submitted_total", now, self.submitted as f64);
+        self.store.record(
+            "queue_depth",
+            now,
+            (self.submitted - self.started) as f64,
+        );
+        self.store
+            .record("running_jobs", now, (self.started - self.ended) as f64);
+    }
+}
+
+impl Component for EventCounter {
+    fn on_event(&mut self, now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+        match ev {
+            Event::Submit { .. } => self.submitted += 1,
+            Event::Start { .. } => self.started += 1,
+            Event::End { .. } => self.ended += 1,
+            Event::CapChange { .. } => return Vec::new(),
+        }
+        self.sample(now);
+        Vec::new()
+    }
+}
+
 /// Log a job's power profile into the store, sampling every `dt` seconds
 /// — what the IPMI/SNMP collectors do on the real machine.
 pub fn log_job_power(
@@ -284,5 +333,38 @@ mod tests {
         let t = store.energy_report();
         assert_eq!(t.rows.len(), 2);
         assert_eq!(store.names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn event_counter_scrapes_lifecycle_gauges() {
+        let mut c = EventCounter::default();
+        c.on_event(0.0, &Event::Submit { job: 1 });
+        c.on_event(0.0, &Event::Submit { job: 2 });
+        c.on_event(
+            0.0,
+            &Event::Start {
+                job: 1,
+                booster: true,
+                dvfs_scale: 1.0,
+                cells: vec![(0, 8)],
+            },
+        );
+        c.on_event(
+            5.0,
+            &Event::End {
+                job: 1,
+                booster: true,
+                cells: vec![(0, 8)],
+            },
+        );
+        assert_eq!(c.totals(), (2, 1, 1));
+        let depth = c.store.get("queue_depth").unwrap();
+        assert_eq!(depth.last().unwrap().value, 1.0);
+        let running = c.store.get("running_jobs").unwrap();
+        assert_eq!(running.last().unwrap().value, 0.0);
+        // Cap changes are not job lifecycle: no sample.
+        let before = depth.len();
+        c.on_event(6.0, &Event::CapChange { cap_mw: None });
+        assert_eq!(c.store.get("queue_depth").unwrap().len(), before);
     }
 }

@@ -9,11 +9,17 @@
 //! energy-to-solution through the power model. The utilisations are the
 //! physically-meaningful decomposition of the paper's own ETS/TTS ratios
 //! (see tests: each app's mean node power in watts is ETS/TTS).
-
-
+//!
+//! [`TraceGen`] synthesizes mixed HPC+AI *operational* traces — Poisson
+//! arrivals, bimodal node counts and per-class boundness, the job-mix
+//! shape the JUWELS Booster (Kesselheim et al., 2021) and Isambard-AI
+//! (McIntosh-Smith et al., 2024) operations reports describe — for the
+//! coordinator's day-replay and the scheduler throughput bench.
 
 use crate::network::{Network, Placement};
 use crate::power::{PowerModel, Utilization};
+use crate::scheduler::{Job, Partition};
+use crate::util::rng::Rng;
 
 /// One application benchmark.
 #[derive(Debug, Clone)]
@@ -138,6 +144,161 @@ impl AppBenchmark {
     }
 }
 
+/// Application classes of a mixed operational day. Each class fixes the
+/// distributions a sampled job draws from: node count (bimodal:
+/// a common small mode and a rarer large mode), nominal runtime, and
+/// clock-boundness (1 = fully clock-bound, so DVFS hurts; low values are
+/// memory/communication-bound and throttle almost for free).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppClass {
+    /// Hero runs: wide jobs, long runtimes, compute-bound.
+    HpcCapability,
+    /// Bread-and-butter MPI jobs: small, moderate runtimes.
+    HpcCapacity,
+    /// Data-parallel training: bimodal between debug and full runs,
+    /// memory/communication-bound.
+    AiTraining,
+    /// Inference/evaluation batches: tiny and short.
+    AiInference,
+}
+
+impl AppClass {
+    pub fn all() -> [AppClass; 4] {
+        [
+            AppClass::HpcCapability,
+            AppClass::HpcCapacity,
+            AppClass::AiTraining,
+            AppClass::AiInference,
+        ]
+    }
+
+    /// Sample a node count (bimodal per class).
+    fn nodes(&self, rng: &mut Rng) -> u32 {
+        match self {
+            AppClass::HpcCapability => {
+                if rng.f64() < 0.7 {
+                    rng.range_u32(32, 64)
+                } else {
+                    rng.range_u32(128, 256)
+                }
+            }
+            AppClass::HpcCapacity => {
+                if rng.f64() < 0.7 {
+                    rng.range_u32(1, 8)
+                } else {
+                    rng.range_u32(8, 32)
+                }
+            }
+            AppClass::AiTraining => {
+                if rng.f64() < 0.7 {
+                    rng.range_u32(2, 16)
+                } else {
+                    rng.range_u32(32, 64)
+                }
+            }
+            AppClass::AiInference => rng.range_u32(1, 4),
+        }
+    }
+
+    /// Sample a nominal runtime, seconds.
+    fn run_seconds(&self, rng: &mut Rng) -> f64 {
+        match self {
+            AppClass::HpcCapability => rng.range_f64(600.0, 3600.0),
+            AppClass::HpcCapacity => rng.range_f64(600.0, 3600.0),
+            AppClass::AiTraining => rng.range_f64(900.0, 5400.0),
+            AppClass::AiInference => rng.range_f64(300.0, 1800.0),
+        }
+    }
+
+    /// Sample a clock-boundness.
+    fn boundness(&self, rng: &mut Rng) -> f64 {
+        match self {
+            AppClass::HpcCapability => rng.range_f64(0.75, 0.95),
+            AppClass::HpcCapacity => rng.range_f64(0.50, 0.90),
+            AppClass::AiTraining => rng.range_f64(0.20, 0.50),
+            AppClass::AiInference => rng.range_f64(0.10, 0.40),
+        }
+    }
+}
+
+/// Deterministic generator of mixed HPC+AI arrival traces.
+#[derive(Debug, Clone)]
+pub struct TraceGen {
+    pub seed: u64,
+    /// Number of jobs to synthesize.
+    pub jobs: usize,
+    /// Window the Poisson arrivals cover, seconds.
+    pub duration_s: f64,
+    pub partition: Partition,
+    /// Node-count cap (partition size).
+    pub max_nodes: u32,
+    /// Class mixture `(class, weight)`; weights need not sum to 1.
+    pub mix: Vec<(AppClass, f64)>,
+}
+
+impl TraceGen {
+    /// A day of mixed operations on the Booster partition, sized so the
+    /// offered load roughly saturates the 3456 nodes (queues form,
+    /// backfill matters) — the JUWELS/Isambard-AI style mixed day.
+    pub fn booster_day(jobs: usize, seed: u64) -> Self {
+        TraceGen {
+            seed,
+            jobs,
+            duration_s: 86_400.0,
+            partition: Partition::Booster,
+            max_nodes: 3456,
+            mix: vec![
+                (AppClass::HpcCapability, 0.05),
+                (AppClass::HpcCapacity, 0.45),
+                (AppClass::AiTraining, 0.20),
+                (AppClass::AiInference, 0.30),
+            ],
+        }
+    }
+
+    fn pick_class(&self, rng: &mut Rng) -> AppClass {
+        let total: f64 = self.mix.iter().map(|(_, w)| w).sum();
+        let mut draw = rng.f64() * total;
+        for &(class, w) in &self.mix {
+            if draw < w {
+                return class;
+            }
+            draw -= w;
+        }
+        self.mix.last().map(|&(c, _)| c).unwrap_or(AppClass::HpcCapacity)
+    }
+
+    /// Synthesize the trace: Poisson arrivals at rate `jobs/duration_s`,
+    /// job shapes drawn per class. Deterministic in `seed`.
+    pub fn generate(&self) -> Vec<Job> {
+        assert!(self.duration_s > 0.0 && !self.mix.is_empty());
+        let mut rng = Rng::new(self.seed);
+        let rate = self.jobs as f64 / self.duration_s;
+        let mut t = 0.0f64;
+        (0..self.jobs)
+            .map(|i| {
+                // Exponential inter-arrival gap (1 - u in (0, 1]).
+                t += -(1.0 - rng.f64()).ln() / rate;
+                let class = self.pick_class(&mut rng);
+                let nodes = class.nodes(&mut rng).clamp(1, self.max_nodes);
+                let run_seconds = class.run_seconds(&mut rng);
+                // Users overestimate wall time; EASY reservations rely on
+                // est >= run.
+                let est_seconds = run_seconds * rng.range_f64(1.05, 1.60);
+                Job {
+                    id: i as u64,
+                    partition: self.partition,
+                    nodes,
+                    est_seconds,
+                    run_seconds,
+                    submit_time: t,
+                    boundness: class.boundness(&mut rng),
+                }
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,5 +382,57 @@ mod tests {
         };
         let scattered = app.tts(512, &net, &spread);
         assert!(scattered >= packed, "{scattered} < {packed}");
+    }
+
+    #[test]
+    fn tracegen_is_deterministic_and_well_formed() {
+        let tg = TraceGen::booster_day(500, 42);
+        let a = tg.generate();
+        let b = tg.generate();
+        assert_eq!(a.len(), 500);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.nodes, y.nodes);
+            assert_eq!(x.submit_time, y.submit_time);
+            assert_eq!(x.run_seconds, y.run_seconds);
+        }
+        let mut last = 0.0;
+        for j in &a {
+            assert!(j.nodes >= 1 && j.nodes <= 3456);
+            assert!(j.run_seconds > 0.0);
+            assert!(j.est_seconds >= j.run_seconds, "EASY needs est >= run");
+            assert!((0.0..=1.0).contains(&j.boundness));
+            assert!(j.submit_time >= last, "arrivals must be ordered");
+            last = j.submit_time;
+        }
+    }
+
+    #[test]
+    fn tracegen_arrivals_roughly_poisson() {
+        let tg = TraceGen::booster_day(2000, 7);
+        let jobs = tg.generate();
+        // Mean inter-arrival gap should be close to duration/jobs.
+        let span = jobs.last().unwrap().submit_time;
+        let expect = tg.duration_s;
+        assert!(
+            (span - expect).abs() / expect < 0.15,
+            "arrival span {span} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn tracegen_mix_is_bimodal_in_nodes() {
+        let jobs = TraceGen::booster_day(2000, 11).generate();
+        let small = jobs.iter().filter(|j| j.nodes <= 8).count();
+        let large = jobs.iter().filter(|j| j.nodes >= 64).count();
+        assert!(small > 500, "small mode missing: {small}");
+        assert!(large > 20, "large mode missing: {large}");
+    }
+
+    #[test]
+    fn tracegen_different_seeds_differ() {
+        let a = TraceGen::booster_day(100, 1).generate();
+        let b = TraceGen::booster_day(100, 2).generate();
+        assert!(a.iter().zip(&b).any(|(x, y)| x.nodes != y.nodes));
     }
 }

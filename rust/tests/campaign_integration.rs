@@ -35,7 +35,7 @@ fn every_paper_table_regenerates() {
     let score = t5.rows.last().unwrap()[1].parse::<f64>().unwrap();
     assert!((score - 649.0).abs() / 649.0 < 0.05, "{score}");
     // Table 6: TTS within 1%, ETS within 5% per app.
-    let t6 = twin.table6();
+    let t6 = twin.table6().unwrap();
     for row in &t6.rows {
         let tts: f64 = row[3].parse().unwrap();
         let tts_paper: f64 = row[4].parse().unwrap();
@@ -45,7 +45,7 @@ fn every_paper_table_regenerates() {
         assert!((ets - ets_paper).abs() / ets_paper < 0.06, "{row:?}");
     }
     // Table 7: shape within banded tolerance; headline LUPS within 10%.
-    let t7 = twin.table7(None);
+    let t7 = twin.table7(None).unwrap();
     let last = t7.rows.last().unwrap();
     let tlups: f64 = last[2].parse().unwrap();
     assert!((tlups - 51.2).abs() / 51.2 < 0.10, "{tlups}");
@@ -53,7 +53,7 @@ fn every_paper_table_regenerates() {
 
 #[test]
 fn fig5_leonardo_scales_at_least_as_well_as_marconi() {
-    let t = Twin::leonardo().fig5();
+    let t = Twin::leonardo().fig5().unwrap();
     for row in t.rows.iter().skip(1) {
         if row[2] == "-" {
             continue;
@@ -102,7 +102,7 @@ fn app_sweeps_compose_with_scheduler_placements() {
         let mut last_tts = f64::INFINITY;
         for factor in [1u32, 2, 4] {
             let nodes = app.ref_nodes * factor;
-            let placement = twin.place(nodes);
+            let placement = twin.place(nodes).unwrap();
             let tts = app.tts(nodes, &twin.net, &placement);
             assert!(tts < last_tts, "{}: no speedup at {nodes}", app.name);
             assert!(tts > 0.0);
@@ -117,7 +117,7 @@ fn marconi_twin_is_self_consistent() {
     assert_eq!(m.cfg.gpu_nodes(), 980);
     assert!(m.net.oversubscription > 1.0);
     // Its largest possible job still places.
-    let p = m.place(980);
+    let p = m.place(980).unwrap();
     assert_eq!(p.total_nodes(), 980);
     // Per-GPU LBM rate ~ 2.5x slower than LEONARDO's (Appendix A.3).
     let leo = Twin::leonardo();

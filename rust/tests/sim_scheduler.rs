@@ -1,0 +1,191 @@
+//! Scheduler invariants on the event-driven engine: equivalence with the
+//! legacy rescan loop, EASY backfill head protection, node-accounting
+//! safety (no double release, no oversubscription) and determinism of
+//! the 10k-job mixed HPC+AI day trace.
+
+use leonardo_twin::config::MachineConfig;
+use leonardo_twin::network::CongestionTracker;
+use leonardo_twin::power::{PowerModel, PowerMonitor, Utilization};
+use leonardo_twin::scheduler::{Job, JobRecord, Partition, Scheduler};
+use leonardo_twin::sim::Component;
+use leonardo_twin::telemetry::EventCounter;
+use leonardo_twin::util::rng::Rng;
+use leonardo_twin::workloads::TraceGen;
+
+use std::collections::BTreeMap;
+
+fn sched() -> Scheduler {
+    Scheduler::new(&MachineConfig::leonardo())
+}
+
+fn job(id: u64, nodes: u32, secs: f64, submit: f64) -> Job {
+    Job {
+        id,
+        partition: Partition::Booster,
+        nodes,
+        est_seconds: secs,
+        run_seconds: secs,
+        submit_time: submit,
+        boundness: 1.0,
+    }
+}
+
+fn assert_identical(a: &BTreeMap<u64, JobRecord>, b: &BTreeMap<u64, JobRecord>, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: record counts differ");
+    for (id, ra) in a {
+        let rb = &b[id];
+        assert_eq!(ra.start_time, rb.start_time, "{tag}: job {id} start");
+        assert_eq!(ra.end_time, rb.end_time, "{tag}: job {id} end");
+        assert_eq!(ra.dvfs_scale, rb.dvfs_scale, "{tag}: job {id} scale");
+        assert_eq!(
+            ra.placement.nodes_per_cell, rb.placement.nodes_per_cell,
+            "{tag}: job {id} placement"
+        );
+    }
+}
+
+/// The event engine reproduces the legacy loop bit-for-bit on random
+/// dual-partition streams.
+#[test]
+fn event_engine_equals_rescan_on_random_streams() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed);
+        let n_jobs = rng.range_u32(20, 120);
+        let jobs: Vec<Job> = (0..n_jobs)
+            .map(|i| {
+                let booster = rng.f64() < 0.7;
+                Job {
+                    id: i as u64,
+                    partition: if booster {
+                        Partition::Booster
+                    } else {
+                        Partition::DataCentric
+                    },
+                    nodes: rng.range_u32(1, if booster { 3456 } else { 1536 }),
+                    est_seconds: rng.range_f64(1.0, 500.0),
+                    run_seconds: rng.range_f64(1.0, 500.0),
+                    submit_time: rng.range_f64(0.0, 100.0),
+                    boundness: rng.f64(),
+                }
+            })
+            .collect();
+        let ev = sched().run(jobs.clone());
+        let legacy = sched().run_rescan(jobs);
+        assert_identical(&ev, &legacy, &format!("seed {seed}"));
+    }
+}
+
+/// Same equivalence on a realistic 1k-job mixed HPC+AI trace.
+#[test]
+fn event_engine_equals_rescan_on_mixed_trace() {
+    let jobs = TraceGen::booster_day(1000, 17).generate();
+    let ev = sched().run(jobs.clone());
+    let legacy = sched().run_rescan(jobs);
+    assert_identical(&ev, &legacy, "mixed trace");
+}
+
+/// EASY backfill must never delay the queue head: injecting a stream of
+/// backfill candidates leaves the head's start time exactly where it was
+/// without them.
+#[test]
+fn easy_backfill_never_delays_queue_head() {
+    // Job 1 occupies most of the machine until t=100; the head (job 2)
+    // needs the whole machine. Short narrow jobs may run in the hole.
+    let blocker = job(1, 3000, 100.0, 0.0);
+    let head = job(2, 3456, 50.0, 1.0);
+
+    let baseline = sched().run(vec![blocker.clone(), head.clone()]);
+    let head_start = baseline[&2].start_time;
+    assert!((head_start - 100.0).abs() < 1e-9);
+
+    let mut with_backfill = vec![blocker, head];
+    // 30 backfill candidates that fit in the 456-node hole and finish
+    // before t=100.
+    for i in 0..30u64 {
+        with_backfill.push(job(10 + i, 10, 40.0, 2.0 + i as f64 * 0.1));
+    }
+    let recs = sched().run(with_backfill);
+    assert_eq!(
+        recs[&2].start_time, head_start,
+        "backfill delayed the queue head"
+    );
+    // And the candidates did actually backfill ahead of the head.
+    let backfilled = (10..40u64)
+        .filter(|id| recs[id].start_time < head_start)
+        .count();
+    assert!(backfilled > 0, "no job backfilled into the hole");
+}
+
+/// Node accounting: every release returns exactly the placed nodes (the
+/// scheduler asserts on double release internally), the machine drains
+/// back to fully free, and no instant oversubscribes either partition.
+#[test]
+fn no_double_release_and_no_oversubscription() {
+    let jobs = TraceGen::booster_day(2000, 23).generate();
+    let mut s = sched();
+    let recs = s.run(jobs.clone());
+    assert_eq!(recs.len(), jobs.len());
+    assert_eq!(s.free_nodes(Partition::Booster), 3456);
+    assert_eq!(s.free_nodes(Partition::DataCentric), 1536);
+
+    // Sweep start/end events: booster load must never exceed capacity.
+    let mut events: Vec<(f64, i64)> = Vec::new();
+    for j in &jobs {
+        let r = &recs[&j.id];
+        events.push((r.start_time, j.nodes as i64));
+        events.push((r.end_time, -(j.nodes as i64)));
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut load = 0i64;
+    for (_, delta) in events {
+        load += delta;
+        assert!(load <= 3456, "booster oversubscribed: {load}");
+    }
+}
+
+/// The flagship scenario: a 10k-job mixed day replays identically across
+/// two full runs (generator and engine are both deterministic).
+#[test]
+fn trace_10k_deterministic_across_runs() {
+    let trace = TraceGen::booster_day(10_000, 2023);
+    let jobs_a = trace.generate();
+    let jobs_b = trace.generate();
+    let rec_a = sched().run(jobs_a);
+    let rec_b = sched().run(jobs_b);
+    assert_identical(&rec_a, &rec_b, "10k trace");
+    assert_eq!(rec_a.len(), 10_000);
+}
+
+/// Observers on the shared event stream stay consistent with the job
+/// records: lifecycle counts match, busy nodes drain to zero, power
+/// series integrate to positive energy and congestion returns to idle.
+#[test]
+fn observers_agree_with_records() {
+    let cfg = MachineConfig::leonardo();
+    let jobs = TraceGen::booster_day(500, 5).generate();
+    let mut s = Scheduler::new(&cfg);
+    let model = PowerModel::new(leonardo_twin::hardware::NodeSpec::davinci(), 1.1);
+    let mut monitor = PowerMonitor::new(
+        model,
+        Utilization {
+            cpu: 0.4,
+            gpu: Some(0.8),
+        },
+        3456,
+    );
+    let mut congestion = CongestionTracker::for_booster(&cfg);
+    let mut counter = EventCounter::default();
+    let recs = {
+        let mut obs: [&mut dyn Component; 3] = [&mut monitor, &mut congestion, &mut counter];
+        s.run_with(jobs.clone(), Vec::new(), &mut obs)
+    };
+    assert_eq!(recs.len(), 500);
+    assert_eq!(counter.totals(), (500, 500, 500));
+    assert_eq!(monitor.busy_nodes(), 0, "all started nodes released");
+    assert!(monitor.energy_kwh() > 0.0);
+    assert_eq!(congestion.mean_load(), 0.0, "fabric idle after the day");
+    // The store has one utilization sample per start and per end.
+    let util = monitor.store.get("utilization").unwrap();
+    assert_eq!(util.len(), 1000);
+    assert!(util.max() <= 1.0 + 1e-9);
+}

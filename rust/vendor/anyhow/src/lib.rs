@@ -1,0 +1,215 @@
+//! Vendored stand-in for the `anyhow` crate (the offline build has no
+//! crates.io access, mirroring the in-crate JSON parser and bench
+//! harness). Implements the API subset the twin uses: [`Error`],
+//! [`Result`], the `anyhow!` / `bail!` / `ensure!` macros and the
+//! [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Behavioural notes kept compatible with the real crate:
+//! * `Error` deliberately does **not** implement `std::error::Error`, so
+//!   the blanket `From<E: std::error::Error>` impl can coexist with the
+//!   reflexive `From<Error>` the `?` operator needs;
+//! * `{err:#}` (alternate display) renders the full cause chain
+//!   `outer: inner: ...`, which the CLI and tests rely on.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An error type carrying a message and an optional cause chain.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+/// `Result` alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+            cause: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: context.to_string(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    /// The outermost message (no cause chain).
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Messages from outermost to innermost cause.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cause = &self.cause;
+        while let Some(e) = cause {
+            out.push(e.msg.as_str());
+            cause = &e.cause;
+        }
+        out
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Flatten the std source chain into nested Errors.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut err = Error::msg(it.next().expect("at least one message"));
+        for m in it {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cause = &self.cause;
+            while let Some(e) = cause {
+                write!(f, ": {}", e.msg)?;
+                cause = &e.cause;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(first) = &self.cause {
+            write!(f, "\n\nCaused by:")?;
+            let mut cause = Some(first);
+            while let Some(e) = cause {
+                write!(f, "\n    {}", e.msg)?;
+                cause = e.cause.as_ref();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn context_chain_renders_in_alternate_display() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest — run `make artifacts` first".to_string())
+            .unwrap_err();
+        let full = format!("{e:#}");
+        assert!(full.contains("make artifacts"), "{full}");
+        assert!(full.contains("no such file"), "{full}");
+        // Plain display shows only the outer message.
+        assert!(!format!("{e}").contains("no such file"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(v: u32) -> Result<u32> {
+            ensure!(v < 10, "v too big: {v}");
+            if v == 7 {
+                bail!("unlucky {v}");
+            }
+            Err(anyhow!("fallthrough {}", v))
+        }
+        assert_eq!(f(12).unwrap_err().root_message(), "v too big: 12");
+        assert_eq!(f(7).unwrap_err().root_message(), "unlucky 7");
+        assert_eq!(f(1).unwrap_err().root_message(), "fallthrough 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.root_message(), "missing value");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::msg("inner").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by") && dbg.contains("inner"));
+    }
+}
