@@ -1,20 +1,35 @@
-//! Scheduler throughput: simulated jobs/sec on the 10k-job mixed HPC+AI
-//! day trace — the event-driven engine (`Scheduler::run`) vs the seed's
-//! scan-and-rescan loop (`Scheduler::run_rescan`).
+//! Scheduler throughput: simulated jobs/sec on mixed HPC+AI day traces
+//! across the three engine generations —
 //!
-//! The two implementations are semantically identical (asserted below on
-//! a prefix of the trace); the contrast is pure engine cost: the legacy
-//! loop recomputes the next wake-up by scanning the running vector,
-//! re-sorts it for every head reservation and rescans per-cell free
-//! counts per queued job, while the event engine keeps running jobs in
-//! an end-time-ordered map, free nodes in O(1) counters, and wakes only
-//! on events.
+//! 1. `run_rescan`    — the seed's scan-and-rescan loop;
+//! 2. `run_event_baseline` — the PR 1 event engine (alloc-and-sort
+//!    placement, full queue scan per pass, per-event placement copies);
+//! 3. `run`           — the allocation-free hot path (O(1) counters,
+//!    cached placement order, indexed release, interned `Start`/`End`
+//!    placements, min-queued pass pruning, reused dispatch buffers).
+//!
+//! All three are record-identical (asserted below on a trace prefix, and
+//! bit-for-bit in `rust/tests/sim_scheduler.rs`); the contrast is pure
+//! engine cost.
+//!
+//! Tiers: the 10k-job day (the PR 1 flagship trace, where the gates
+//! apply) and a 100k-job ten-day stress tier (same offered load per
+//! day; the rescan loop is quadratic there and is skipped). Results are
+//! also written to `BENCH_scheduler.json` so future PRs have a
+//! perf trajectory to diff against.
+//!
+//! Gates (assert-enforced, also run by CI in `--smoke` mode):
+//!   * optimized >= 5x rescan     on the 10k-job day;
+//!   * optimized >= 2x event base on the 10k-job day.
+//!
+//! `cargo bench --bench scheduler_throughput -- --smoke` runs single-rep
+//! timings and skips the 100k tier — the short mode CI uses.
 
 use std::time::Instant;
 
 use leonardo_twin::config::MachineConfig;
 use leonardo_twin::metrics::{f1, Table};
-use leonardo_twin::scheduler::{Job, Scheduler};
+use leonardo_twin::scheduler::{Job, JobRecord, Scheduler};
 use leonardo_twin::workloads::TraceGen;
 
 fn time_best<F: FnMut() -> usize>(reps: u32, mut f: F) -> (f64, usize) {
@@ -28,53 +43,168 @@ fn time_best<F: FnMut() -> usize>(reps: u32, mut f: F) -> (f64, usize) {
     (best, jobs)
 }
 
+fn assert_identical(
+    a: &std::collections::BTreeMap<u64, JobRecord>,
+    b: &std::collections::BTreeMap<u64, JobRecord>,
+    tag: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{tag}: record counts differ");
+    for (id, r) in a {
+        let o = &b[id];
+        assert_eq!(r.start_time, o.start_time, "{tag}: job {id} start");
+        assert_eq!(r.end_time, o.end_time, "{tag}: job {id} end");
+        assert_eq!(
+            r.placement.nodes_per_cell, o.placement.nodes_per_cell,
+            "{tag}: job {id} placement"
+        );
+    }
+}
+
+struct TierResult {
+    jobs: usize,
+    rescan_rate: Option<f64>,
+    event_rate: f64,
+    optimized_rate: f64,
+}
+
+fn json_num(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.1}"),
+        None => "null".to_string(),
+    }
+}
+
+fn write_json(tiers: &[TierResult], smoke: bool) {
+    let mut entries = Vec::new();
+    for t in tiers {
+        entries.push(format!(
+            concat!(
+                "    {{\"jobs\": {}, \"rescan_jobs_per_s\": {}, ",
+                "\"event_jobs_per_s\": {:.1}, \"optimized_jobs_per_s\": {:.1}, ",
+                "\"optimized_vs_rescan\": {}, \"optimized_vs_event\": {:.2}}}"
+            ),
+            t.jobs,
+            json_num(t.rescan_rate),
+            t.event_rate,
+            t.optimized_rate,
+            json_num(t.rescan_rate.map(|r| t.optimized_rate / r)),
+            t.optimized_rate / t.event_rate,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"scheduler_throughput\",\n  \"trace\": \"booster_day\",\n  \"smoke\": {},\n  \"tiers\": [\n{}\n  ]\n}}\n",
+        smoke,
+        entries.join(",\n")
+    );
+    match std::fs::write("BENCH_scheduler.json", &json) {
+        Ok(()) => println!("wrote BENCH_scheduler.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_scheduler.json: {e}"),
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let cfg = MachineConfig::leonardo();
     let trace = TraceGen::booster_day(10_000, 7).generate();
 
-    // Correctness gate: both engines agree on a 1.5k-job prefix.
+    // Correctness gate: all three engines agree on a 1.5k-job prefix.
     let prefix: Vec<Job> = trace.iter().take(1500).cloned().collect();
-    let ev = Scheduler::new(&cfg).run(prefix.clone());
+    let opt = Scheduler::new(&cfg).run(prefix.clone());
+    let base = Scheduler::new(&cfg).run_event_baseline(prefix.clone());
     let legacy = Scheduler::new(&cfg).run_rescan(prefix);
-    assert_eq!(ev.len(), legacy.len());
-    for (id, r) in &ev {
-        assert_eq!(r.start_time, legacy[id].start_time, "job {id}");
-        assert_eq!(r.end_time, legacy[id].end_time, "job {id}");
-    }
-    println!("equivalence check passed on 1500-job prefix\n");
+    assert_identical(&opt, &base, "optimized vs event baseline");
+    assert_identical(&opt, &legacy, "optimized vs rescan");
+    println!("equivalence check passed on 1500-job prefix (3 engines)\n");
 
-    let (event_s, n) = time_best(3, || {
-        Scheduler::new(&cfg).run(trace.clone()).len()
+    let (opt_reps, base_reps, rescan_reps) = if smoke { (2, 1, 1) } else { (3, 2, 2) };
+
+    // ---- Tier 1: the 10k-job day (the gated tier).
+    let (opt_s, n) = time_best(opt_reps, || Scheduler::new(&cfg).run(trace.clone()).len());
+    let (base_s, _) = time_best(base_reps, || {
+        Scheduler::new(&cfg).run_event_baseline(trace.clone()).len()
     });
-    let (rescan_s, _) = time_best(2, || {
+    let (rescan_s, _) = time_best(rescan_reps, || {
         Scheduler::new(&cfg).run_rescan(trace.clone()).len()
     });
+    let day = TierResult {
+        jobs: n,
+        rescan_rate: Some(n as f64 / rescan_s),
+        event_rate: n as f64 / base_s,
+        optimized_rate: n as f64 / opt_s,
+    };
 
-    let event_rate = n as f64 / event_s;
-    let rescan_rate = n as f64 / rescan_s;
-    let speedup = event_rate / rescan_rate;
+    let mut tiers = vec![day];
+
+    // ---- Tier 2: 100k jobs over ten days (same offered load per day);
+    // the quadratic rescan loop is skipped here.
+    if !smoke {
+        let mut big = TraceGen::booster_day(100_000, 7);
+        big.duration_s *= 10.0;
+        let big_trace = big.generate();
+        let (opt_s, n) =
+            time_best(2, || Scheduler::new(&cfg).run(big_trace.clone()).len());
+        let (base_s, _) = time_best(1, || {
+            Scheduler::new(&cfg)
+                .run_event_baseline(big_trace.clone())
+                .len()
+        });
+        tiers.push(TierResult {
+            jobs: n,
+            rescan_rate: None,
+            event_rate: n as f64 / base_s,
+            optimized_rate: n as f64 / opt_s,
+        });
+    }
 
     let mut t = Table::new(
-        "Scheduler throughput — 10k-job mixed HPC+AI day (Booster)",
-        &["Engine", "Wall [s]", "Simulated jobs/sec", "Speedup"],
+        "Scheduler throughput — mixed HPC+AI day traces (Booster)",
+        &["Engine", "Jobs", "Simulated jobs/sec", "vs rescan", "vs event"],
     );
-    t.row(vec![
-        "legacy rescan loop (seed)".into(),
-        format!("{rescan_s:.3}"),
-        f1(rescan_rate),
-        "1.0x".into(),
-    ]);
-    t.row(vec![
-        "event engine (sim kernel)".into(),
-        format!("{event_s:.3}"),
-        f1(event_rate),
-        format!("{speedup:.1}x"),
-    ]);
+    for tier in &tiers {
+        if let Some(rr) = tier.rescan_rate {
+            t.row(vec![
+                "legacy rescan loop (seed)".into(),
+                tier.jobs.to_string(),
+                f1(rr),
+                "1.0x".into(),
+                "-".into(),
+            ]);
+        }
+        t.row(vec![
+            "event engine (PR 1 baseline)".into(),
+            tier.jobs.to_string(),
+            f1(tier.event_rate),
+            tier.rescan_rate
+                .map(|rr| format!("{:.1}x", tier.event_rate / rr))
+                .unwrap_or_else(|| "-".into()),
+            "1.0x".into(),
+        ]);
+        t.row(vec![
+            "optimized hot path".into(),
+            tier.jobs.to_string(),
+            f1(tier.optimized_rate),
+            tier.rescan_rate
+                .map(|rr| format!("{:.1}x", tier.optimized_rate / rr))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.1}x", tier.optimized_rate / tier.event_rate),
+        ]);
+    }
     println!("{}", t.to_console());
 
+    write_json(&tiers, smoke);
+
+    let day = &tiers[0];
+    let vs_rescan = day.optimized_rate / day.rescan_rate.expect("day tier has rescan");
+    let vs_event = day.optimized_rate / day.event_rate;
     assert!(
-        speedup >= 5.0,
-        "event engine must be >= 5x the seed loop, got {speedup:.2}x"
+        vs_rescan >= 5.0,
+        "optimized engine must be >= 5x the seed loop, got {vs_rescan:.2}x"
     );
-    println!("OK: event engine is {speedup:.1}x the seed loop");
+    assert!(
+        vs_event >= 2.0,
+        "optimized engine must be >= 2x the PR 1 event engine, got {vs_event:.2}x"
+    );
+    println!(
+        "OK: optimized path is {vs_rescan:.1}x the seed loop, {vs_event:.1}x the PR 1 event engine"
+    );
 }

@@ -1,0 +1,542 @@
+//! Multi-threaded scenario-sweep campaign engine (ROADMAP north star:
+//! "as many scenarios as you can imagine", paper §2.5–2.6: flexible,
+//! scalable operation).
+//!
+//! A single [`crate::coordinator::Twin::operations_replay`] answers
+//! "what did one day look like"; operators of machines like JUWELS
+//! Booster and Isambard-AI ask grid questions — *how does p95 wait move
+//! across power-cap levels, per workload mix, robust over arrival
+//! seeds?* This module expands a [`SweepGrid`]
+//! (`seeds x cap levels x TraceGen mixes`) into scenarios and fans them
+//! across cores with `std::thread::scope` (no extra dependencies — the
+//! build stays offline-hermetic). Each worker owns its own
+//! [`Scheduler`], [`PowerMonitor`] and [`CongestionTracker`], so
+//! workers share nothing but the read-only [`Twin`]; scenarios are
+//! handed out through one atomic cursor and results are merged back in
+//! grid order, which makes the [`CampaignReport`] bit-for-bit identical
+//! for any worker-thread count (the `campaign_sweep` integration suite
+//! pins 1 == 2 == 8 threads).
+//!
+//! The per-scenario replay runs on the scheduler's allocation-free hot
+//! path (see `rust/src/scheduler`), which is what makes thousand-
+//! scenario campaigns tractable.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{anyhow, ensure};
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::Twin;
+use crate::metrics::{f1, f2, Table};
+use crate::network::CongestionTracker;
+use crate::power::{PowerMonitor, Utilization};
+use crate::scheduler::{Job, JobRecord, Partition, PowerCap, Scheduler};
+use crate::sim::Component;
+use crate::workloads::TraceGen;
+use crate::Result;
+
+/// One cell of the scenario grid: a trace (mix + seed) under an
+/// optional facility power cap.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub mix: String,
+    pub seed: u64,
+    pub cap_mw: Option<f64>,
+    pub trace: TraceGen,
+}
+
+impl Scenario {
+    pub fn label(&self) -> String {
+        format!("{} seed={} {}", self.mix, self.seed, cap_label(self.cap_mw))
+    }
+}
+
+fn cap_label(cap_mw: Option<f64>) -> String {
+    match cap_mw {
+        Some(mw) => format!("cap {mw:.1} MW"),
+        None => "uncapped".to_string(),
+    }
+}
+
+/// The sweep grid: arrival seeds x facility power-cap levels x workload
+/// mixes (by [`TraceGen::named`] name), each scenario a `jobs`-job day.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub seeds: Vec<u64>,
+    pub caps: Vec<Option<f64>>,
+    pub mixes: Vec<String>,
+    /// Jobs per scenario trace.
+    pub jobs: usize,
+}
+
+impl SweepGrid {
+    /// Validate and build a grid. Every axis must be non-empty and all
+    /// mix names must resolve via [`TraceGen::named`].
+    pub fn new(
+        seeds: Vec<u64>,
+        caps: Vec<Option<f64>>,
+        mixes: Vec<String>,
+        jobs: usize,
+    ) -> Result<Self> {
+        ensure!(!seeds.is_empty(), "sweep grid needs at least one seed");
+        ensure!(!caps.is_empty(), "sweep grid needs at least one cap level");
+        ensure!(!mixes.is_empty(), "sweep grid needs at least one mix");
+        ensure!(jobs > 0, "sweep grid needs jobs > 0 per scenario");
+        for cap in caps.iter().flatten() {
+            // A NaN/negative cap would poison DVFS scales and panic a
+            // worker on a non-finite event time — reject it here, at
+            // the CLI-facing boundary.
+            ensure!(
+                cap.is_finite() && *cap > 0.0,
+                "cap level {cap} MW must be finite and positive"
+            );
+        }
+        for mix in &mixes {
+            if TraceGen::named(mix, 1, 0).is_none() {
+                return Err(anyhow!(
+                    "unknown mix '{mix}' (known: {})",
+                    TraceGen::known_mixes().join(", ")
+                ));
+            }
+        }
+        Ok(SweepGrid {
+            seeds,
+            caps,
+            mixes,
+            jobs,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.seeds.len() * self.caps.len() * self.mixes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the grid in deterministic mix-major, then cap, then seed
+    /// order — the order scenarios are numbered, reported and merged
+    /// in, regardless of which worker ran which.
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        for mix in &self.mixes {
+            for &cap_mw in &self.caps {
+                for &seed in &self.seeds {
+                    let trace = TraceGen::named(mix, self.jobs, seed)
+                        .expect("mix names validated at grid construction");
+                    out.push(Scenario {
+                        mix: mix.clone(),
+                        seed,
+                        cap_mw,
+                        trace,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Numeric outcome of one scenario replay. Plain data, so merged
+/// campaign results compare bit-for-bit across thread counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioStats {
+    pub mix: String,
+    pub seed: u64,
+    pub cap_mw: Option<f64>,
+    pub jobs: usize,
+    pub makespan_h: f64,
+    pub mean_wait_min: f64,
+    pub p95_wait_min: f64,
+    pub max_wait_min: f64,
+    /// Mean busy fraction of the partition over the makespan.
+    pub utilization: f64,
+    /// Peak PUE-inclusive facility draw, MW.
+    pub peak_mw: f64,
+    /// PUE-inclusive facility energy, MWh.
+    pub energy_mwh: f64,
+    /// Jobs that ran DVFS-throttled under the cap.
+    pub throttled: usize,
+    /// Highest mean global-link load observed.
+    pub peak_congestion: f64,
+}
+
+/// Index-percentile over an ascending-sorted slice (the same
+/// convention `Twin::operations_replay` reports).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p) as usize]
+}
+
+impl ScenarioStats {
+    /// Compute the numeric outcome of a finished replay from its job
+    /// records and observers. The identity fields (`mix`/`seed`/
+    /// `cap_mw`) are left empty for the caller to fill. Shared by
+    /// [`run_scenario`] and `Twin::operations_replay`, so the single-
+    /// day CLI and the sweep always report identical arithmetic.
+    pub fn collect(
+        jobs: &[Job],
+        records: &BTreeMap<u64, JobRecord>,
+        total_nodes: u32,
+        monitor: &PowerMonitor,
+        congestion: &CongestionTracker,
+    ) -> Self {
+        assert!(!jobs.is_empty(), "stats over an empty replay");
+        let makespan = records.values().fold(0.0f64, |m, r| m.max(r.end_time));
+        let mut waits: Vec<f64> = jobs.iter().map(|j| records[&j.id].wait(j)).collect();
+        waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean_wait = waits.iter().sum::<f64>() / waits.len() as f64;
+        let throttled = records.values().filter(|r| r.dvfs_scale < 1.0).count();
+        let node_seconds: f64 = jobs
+            .iter()
+            .map(|j| {
+                j.nodes as f64 * (records[&j.id].end_time - records[&j.id].start_time)
+            })
+            .sum();
+        let utilization = node_seconds / (total_nodes as f64 * makespan.max(1e-9));
+        let peak_mw =
+            monitor.store.get("facility_power_w").map_or(0.0, |s| s.max()) / 1e6;
+        ScenarioStats {
+            mix: String::new(),
+            seed: 0,
+            cap_mw: None,
+            jobs: records.len(),
+            makespan_h: makespan / 3600.0,
+            mean_wait_min: mean_wait / 60.0,
+            p95_wait_min: percentile(&waits, 0.95) / 60.0,
+            max_wait_min: percentile(&waits, 1.0) / 60.0,
+            utilization,
+            peak_mw,
+            energy_mwh: monitor.energy_kwh() / 1e3,
+            throttled,
+            peak_congestion: congestion.peak_load(),
+        }
+    }
+}
+
+/// One replay's scheduler + observer set, wired identically for every
+/// surface that replays a trace — the sweep workers here and
+/// `Twin::operations_replay` — so a `sweep` scenario and a matching
+/// `operations` run can never model the machine differently.
+pub struct ReplayRig {
+    pub sched: Scheduler,
+    pub monitor: PowerMonitor,
+    pub congestion: CongestionTracker,
+    pub total_nodes: u32,
+}
+
+impl ReplayRig {
+    pub fn new(twin: &Twin, partition: Partition, cap_mw: Option<f64>) -> Self {
+        let mut sched = Scheduler::new(&twin.cfg);
+        if let Some(mw) = cap_mw {
+            sched.power_cap = Some(PowerCap::for_model(&twin.power, mw));
+        }
+        let total_nodes = sched.total_nodes(partition);
+        // Mixed-day fleet utilisation: busy but not HPL-saturated.
+        let util = Utilization {
+            cpu: 0.40,
+            gpu: Some(0.80),
+        };
+        let mut monitor = PowerMonitor::new(twin.power.clone(), util, total_nodes);
+        monitor.booster_only = partition == Partition::Booster;
+        let congestion = CongestionTracker::for_booster(&twin.cfg);
+        ReplayRig {
+            sched,
+            monitor,
+            congestion,
+            total_nodes,
+        }
+    }
+}
+
+/// Replay one scenario on a private scheduler + observer set. Pure in
+/// `(twin, scenario)` — the unit of work the sweep fans out.
+pub fn run_scenario(twin: &Twin, sc: &Scenario) -> ScenarioStats {
+    let jobs = sc.trace.generate();
+    assert!(!jobs.is_empty(), "empty scenario trace");
+    let mut rig = ReplayRig::new(twin, sc.trace.partition, sc.cap_mw);
+    let records = {
+        let mut observers: [&mut dyn Component; 2] =
+            [&mut rig.monitor, &mut rig.congestion];
+        rig.sched.run_with(jobs.clone(), Vec::new(), &mut observers)
+    };
+    let mut stats =
+        ScenarioStats::collect(&jobs, &records, rig.total_nodes, &rig.monitor, &rig.congestion);
+    stats.mix = sc.mix.clone();
+    stats.seed = sc.seed;
+    stats.cap_mw = sc.cap_mw;
+    stats
+}
+
+/// Merged outcome of a sweep: per-scenario stats in grid order plus
+/// rendered report tables. Identical for any worker-thread count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignReport {
+    pub stats: Vec<ScenarioStats>,
+}
+
+impl CampaignReport {
+    /// One row per scenario, in grid order.
+    pub fn scenario_table(&self) -> Table {
+        let mut t = Table::new(
+            "Campaign sweep — per-scenario outcomes",
+            &[
+                "Mix",
+                "Seed",
+                "Cap",
+                "Jobs",
+                "Makespan [h]",
+                "Mean wait [min]",
+                "p95 wait [min]",
+                "Util",
+                "Peak [MW]",
+                "Energy [MWh]",
+                "Throttled",
+            ],
+        );
+        for s in &self.stats {
+            t.row(vec![
+                s.mix.clone(),
+                s.seed.to_string(),
+                cap_label(s.cap_mw),
+                s.jobs.to_string(),
+                f2(s.makespan_h),
+                f1(s.mean_wait_min),
+                f1(s.p95_wait_min),
+                f2(s.utilization),
+                f2(s.peak_mw),
+                f2(s.energy_mwh),
+                s.throttled.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Aggregate percentiles of the headline metrics across scenarios.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Campaign summary — {} scenarios (percentiles across the grid)",
+                self.stats.len()
+            ),
+            &["Metric", "min", "p50", "p95", "max", "Unit"],
+        );
+        let mut metric = |name: &str, unit: &str, pick: &dyn Fn(&ScenarioStats) -> f64| {
+            let mut vals: Vec<f64> = self.stats.iter().map(pick).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            t.row(vec![
+                name.to_string(),
+                f2(percentile(&vals, 0.0)),
+                f2(percentile(&vals, 0.5)),
+                f2(percentile(&vals, 0.95)),
+                f2(percentile(&vals, 1.0)),
+                unit.to_string(),
+            ]);
+        };
+        metric("mean wait", "min", &|s| s.mean_wait_min);
+        metric("p95 wait", "min", &|s| s.p95_wait_min);
+        metric("utilization", "of nodes", &|s| s.utilization);
+        metric("facility energy", "MWh", &|s| s.energy_mwh);
+        metric("peak facility power", "MW", &|s| s.peak_mw);
+        metric("peak congestion", "link load", &|s| s.peak_congestion);
+        t
+    }
+
+    /// Cap-sensitivity curve: metrics averaged over seeds and mixes per
+    /// cap level, in first-appearance (grid) order.
+    pub fn cap_table(&self) -> Table {
+        let mut t = Table::new(
+            "Cap sensitivity — means over seeds and mixes per cap level",
+            &[
+                "Cap",
+                "Scenarios",
+                "Mean wait [min]",
+                "p95 wait [min]",
+                "Util",
+                "Energy [MWh]",
+                "Throttled jobs",
+            ],
+        );
+        let mut caps: Vec<Option<f64>> = Vec::new();
+        for s in &self.stats {
+            if !caps.contains(&s.cap_mw) {
+                caps.push(s.cap_mw);
+            }
+        }
+        for cap in caps {
+            let group: Vec<&ScenarioStats> =
+                self.stats.iter().filter(|s| s.cap_mw == cap).collect();
+            let n = group.len() as f64;
+            let mean = |pick: &dyn Fn(&ScenarioStats) -> f64| {
+                group.iter().copied().map(pick).sum::<f64>() / n
+            };
+            t.row(vec![
+                cap_label(cap),
+                group.len().to_string(),
+                f1(mean(&|s| s.mean_wait_min)),
+                f1(mean(&|s| s.p95_wait_min)),
+                f2(mean(&|s| s.utilization)),
+                f2(mean(&|s| s.energy_mwh)),
+                group.iter().map(|s| s.throttled).sum::<usize>().to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Fan the grid across `threads` workers with `std::thread::scope`.
+///
+/// Work distribution is an atomic cursor (cheap work stealing — long
+/// scenarios don't convoy short ones); each worker owns its scheduler
+/// and observers and shares only the read-only `twin`. Results carry
+/// their grid index and are merged in index order after the join, so
+/// the report does not depend on `threads` or on OS scheduling.
+pub fn run_sweep(twin: &Twin, grid: &SweepGrid, threads: usize) -> CampaignReport {
+    let scenarios = grid.scenarios();
+    let workers = threads.clamp(1, scenarios.len().max(1));
+    let next = AtomicUsize::new(0);
+    let mut indexed: Vec<(usize, ScenarioStats)> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let next = &next;
+            let scenarios = &scenarios;
+            handles.push(s.spawn(move || {
+                let mut done: Vec<(usize, ScenarioStats)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= scenarios.len() {
+                        break;
+                    }
+                    done.push((i, run_scenario(twin, &scenarios[i])));
+                }
+                done
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("campaign worker panicked"))
+            .collect()
+    });
+    indexed.sort_by_key(|&(i, _)| i);
+    CampaignReport {
+        stats: indexed.into_iter().map(|(_, s)| s).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_grid() -> SweepGrid {
+        SweepGrid::new(
+            vec![1, 2],
+            vec![None, Some(5.5)],
+            vec!["day".into()],
+            60,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn grid_expands_in_mix_cap_seed_order() {
+        let g = SweepGrid::new(
+            vec![7, 8],
+            vec![None, Some(6.0)],
+            vec!["day".into(), "ai".into()],
+            10,
+        )
+        .unwrap();
+        assert_eq!(g.len(), 8);
+        let sc = g.scenarios();
+        assert_eq!(sc.len(), 8);
+        assert_eq!((sc[0].mix.as_str(), sc[0].cap_mw, sc[0].seed), ("day", None, 7));
+        assert_eq!((sc[1].mix.as_str(), sc[1].cap_mw, sc[1].seed), ("day", None, 8));
+        assert_eq!(sc[2].cap_mw, Some(6.0));
+        assert_eq!(sc[4].mix, "ai");
+        assert_eq!(sc[7].label(), "ai seed=8 cap 6.0 MW");
+    }
+
+    #[test]
+    fn grid_rejects_bad_input() {
+        assert!(SweepGrid::new(vec![], vec![None], vec!["day".into()], 10).is_err());
+        assert!(SweepGrid::new(vec![1], vec![], vec!["day".into()], 10).is_err());
+        assert!(SweepGrid::new(vec![1], vec![None], vec![], 10).is_err());
+        assert!(SweepGrid::new(vec![1], vec![None], vec!["day".into()], 0).is_err());
+        assert!(
+            SweepGrid::new(vec![1], vec![Some(f64::NAN)], vec!["day".into()], 10).is_err()
+        );
+        assert!(
+            SweepGrid::new(vec![1], vec![Some(-2.0)], vec!["day".into()], 10).is_err()
+        );
+        let err = SweepGrid::new(vec![1], vec![None], vec!["nope".into()], 10)
+            .unwrap_err();
+        assert!(format!("{err}").contains("unknown mix"), "{err}");
+    }
+
+    #[test]
+    fn single_scenario_matches_direct_replay() {
+        let twin = Twin::leonardo();
+        let grid =
+            SweepGrid::new(vec![3], vec![Some(6.0)], vec!["day".into()], 80).unwrap();
+        let report = run_sweep(&twin, &grid, 1);
+        assert_eq!(report.stats.len(), 1);
+        let direct = run_scenario(&twin, &grid.scenarios()[0]);
+        assert_eq!(report.stats[0], direct);
+        assert_eq!(direct.jobs, 80);
+        assert!(direct.makespan_h > 0.0);
+        assert!(direct.energy_mwh > 0.0);
+        assert!(direct.utilization > 0.0 && direct.utilization <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn sweep_is_thread_count_independent() {
+        let twin = Twin::leonardo();
+        let grid = small_grid();
+        let one = run_sweep(&twin, &grid, 1);
+        let two = run_sweep(&twin, &grid, 2);
+        let many = run_sweep(&twin, &grid, 16);
+        assert_eq!(one, two);
+        assert_eq!(one, many);
+        assert_eq!(one.stats.len(), 4);
+    }
+
+    #[test]
+    fn tight_cap_throttles_and_report_tables_render() {
+        let twin = Twin::leonardo();
+        // 1.0 MW sits below the fleet's idle floor (~1.26 MW), so every
+        // start sees the cap exceeded — throttling is guaranteed, not
+        // load-dependent.
+        let grid = SweepGrid::new(
+            vec![1, 2],
+            vec![None, Some(1.0)],
+            vec!["day".into()],
+            150,
+        )
+        .unwrap();
+        let report = run_sweep(&twin, &grid, 4);
+        let uncapped: usize = report
+            .stats
+            .iter()
+            .filter(|s| s.cap_mw.is_none())
+            .map(|s| s.throttled)
+            .sum();
+        let capped: usize = report
+            .stats
+            .iter()
+            .filter(|s| s.cap_mw.is_some())
+            .map(|s| s.throttled)
+            .sum();
+        assert_eq!(uncapped, 0, "no cap, no throttling");
+        assert!(capped > 0, "a sub-idle-floor cap must throttle every job");
+        let t = report.scenario_table();
+        assert_eq!(t.rows.len(), 4);
+        let caps = report.cap_table();
+        assert_eq!(caps.rows.len(), 2);
+        let summary = report.summary_table();
+        assert_eq!(summary.rows.len(), 6);
+    }
+}

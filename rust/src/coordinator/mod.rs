@@ -14,11 +14,11 @@ use crate::config::MachineConfig;
 use crate::hardware::{GpuSpec, NodeSpec, Precision};
 use crate::lbm::{LbmConfig, LbmDriver, TABLE7_NODES};
 use crate::metrics::{f1, f2, sig3, Table};
-use crate::network::{CongestionTracker, Network, Placement};
+use crate::network::{Network, Placement};
 use crate::perfmodel::{Calibration, HpcgModel, HplModel};
-use crate::power::{PowerModel, PowerMonitor, Utilization};
+use crate::power::{PowerModel, Utilization};
 use crate::runtime::{literal_f32, scalar_f32, Engine};
-use crate::scheduler::{JobRecord, Partition, PowerCap, Scheduler};
+use crate::scheduler::{JobRecord, Partition, Scheduler};
 use crate::sim::Component;
 use crate::storage::{io500, StorageSystem};
 use crate::telemetry::{EventCounter, MetricStore};
@@ -462,39 +462,23 @@ impl Twin {
         let jobs = trace.generate();
         anyhow::ensure!(!jobs.is_empty(), "empty trace");
 
-        let mut sched = Scheduler::new(&self.cfg);
-        if let Some(mw) = cap_mw {
-            sched.power_cap = Some(PowerCap::for_model(&self.power, mw));
-        }
-        let total_nodes = sched.total_nodes(trace.partition);
-        // Mixed-day fleet utilisation: busy but not HPL-saturated.
-        let util = Utilization {
-            cpu: 0.40,
-            gpu: Some(0.80),
-        };
-        let mut monitor = PowerMonitor::new(self.power.clone(), util, total_nodes);
-        monitor.booster_only = trace.partition == Partition::Booster;
-        let mut congestion = CongestionTracker::for_booster(&self.cfg);
+        // Shared replay wiring + arithmetic: the same rig and the same
+        // stats code path the campaign sweep uses, so `operations` and
+        // `sweep` can never model or report differently.
+        let mut rig = crate::campaign::ReplayRig::new(self, trace.partition, cap_mw);
         let mut counter = EventCounter::default();
         let records = {
             let mut observers: [&mut dyn Component; 3] =
-                [&mut monitor, &mut congestion, &mut counter];
-            sched.run_with(jobs.clone(), Vec::new(), &mut observers)
+                [&mut rig.monitor, &mut rig.congestion, &mut counter];
+            rig.sched.run_with(jobs.clone(), Vec::new(), &mut observers)
         };
-
-        let makespan = records.values().fold(0.0f64, |m, r| m.max(r.end_time));
-        let mut waits: Vec<f64> = jobs.iter().map(|j| records[&j.id].wait(j)).collect();
-        waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean_wait = waits.iter().sum::<f64>() / waits.len() as f64;
-        let pct = |p: f64| waits[((waits.len() - 1) as f64 * p) as usize];
-        let throttled = records.values().filter(|r| r.dvfs_scale < 1.0).count();
-        let node_seconds: f64 = jobs
-            .iter()
-            .map(|j| j.nodes as f64 * (records[&j.id].end_time - records[&j.id].start_time))
-            .sum();
-        let utilization = node_seconds / (total_nodes as f64 * makespan.max(1e-9));
-        let peak_mw = monitor.store.get("facility_power_w").map_or(0.0, |s| s.max()) / 1e6;
-        let energy_mwh = monitor.energy_kwh() / 1e3;
+        let stats = crate::campaign::ScenarioStats::collect(
+            &jobs,
+            &records,
+            rig.total_nodes,
+            &rig.monitor,
+            &rig.congestion,
+        );
 
         let mut summary = Table::new(
             "Operations replay — event-driven day on the Booster partition",
@@ -503,19 +487,19 @@ impl Twin {
         let row = |t: &mut Table, k: &str, v: String, u: &str| {
             t.row(vec![k.to_string(), v, u.to_string()]);
         };
-        row(&mut summary, "jobs completed", records.len().to_string(), "");
-        row(&mut summary, "makespan", f2(makespan / 3600.0), "h");
-        row(&mut summary, "mean wait", f1(mean_wait / 60.0), "min");
-        row(&mut summary, "p95 wait", f1(pct(0.95) / 60.0), "min");
-        row(&mut summary, "max wait", f1(pct(1.0) / 60.0), "min");
-        row(&mut summary, "mean utilization", f2(utilization), "of nodes");
-        row(&mut summary, "peak facility power", f2(peak_mw), "MW");
-        row(&mut summary, "facility energy", f2(energy_mwh), "MWh");
-        row(&mut summary, "DVFS-throttled jobs", throttled.to_string(), "");
+        row(&mut summary, "jobs completed", stats.jobs.to_string(), "");
+        row(&mut summary, "makespan", f2(stats.makespan_h), "h");
+        row(&mut summary, "mean wait", f1(stats.mean_wait_min), "min");
+        row(&mut summary, "p95 wait", f1(stats.p95_wait_min), "min");
+        row(&mut summary, "max wait", f1(stats.max_wait_min), "min");
+        row(&mut summary, "mean utilization", f2(stats.utilization), "of nodes");
+        row(&mut summary, "peak facility power", f2(stats.peak_mw), "MW");
+        row(&mut summary, "facility energy", f2(stats.energy_mwh), "MWh");
+        row(&mut summary, "DVFS-throttled jobs", stats.throttled.to_string(), "");
         row(
             &mut summary,
             "peak fabric congestion",
-            f2(congestion.peak_load()),
+            f2(stats.peak_congestion),
             "global-link load",
         );
         let (submitted, started, ended) = counter.totals();
@@ -526,15 +510,27 @@ impl Twin {
             "submit/start/end",
         );
 
-        let power = monitor.store.energy_report();
-        let store = monitor.store.clone();
+        let power = rig.monitor.store.energy_report();
+        let store = rig.monitor.store.clone();
         Ok(OpsReport {
             records,
             store,
-            peak_congestion: congestion.peak_load(),
+            peak_congestion: stats.peak_congestion,
             summary,
             power,
         })
+    }
+
+    /// Fan a `seeds x caps x mixes` scenario grid across `threads`
+    /// workers and merge the outcomes into a deterministic,
+    /// thread-count-independent campaign report (see [`crate::campaign`];
+    /// CLI: `leonardo-twin sweep`).
+    pub fn sweep(
+        &self,
+        grid: &crate::campaign::SweepGrid,
+        threads: usize,
+    ) -> crate::campaign::CampaignReport {
+        crate::campaign::run_sweep(self, grid, threads)
     }
 
     /// §2.2 latency budget table.

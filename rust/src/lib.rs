@@ -48,6 +48,11 @@
 //! * [`coordinator`] — the campaign runner that composes all of the above
 //!   to regenerate every table and figure of the paper, plus the
 //!   operations-day replay ([`coordinator::Twin::operations_replay`]);
+//! * [`campaign`] — the multi-threaded scenario-sweep engine: a
+//!   `seeds x power caps x mixes` grid fanned across cores with
+//!   `std::thread::scope`, merged into a deterministic,
+//!   thread-count-independent report ([`campaign::run_sweep`], CLI
+//!   `sweep`);
 //! * [`metrics`] — table/CSV/markdown emitters used by the CLI and benches.
 //!
 //! Compute is real: the LBM/GEMM/CG kernels are JAX + Pallas programs
@@ -55,6 +60,7 @@
 //! the PJRT CPU client — Python never runs on the Rust hot path.
 
 pub mod allocation;
+pub mod campaign;
 pub mod config;
 pub mod coordinator;
 pub mod frontend;

@@ -1,17 +1,19 @@
 //! `leonardo-twin` CLI: regenerate any table or figure of the paper, run
 //! calibration against the AOT kernel artifacts, replay an operational
-//! day, or dump machine facts.
+//! day, sweep a scenario grid across cores, or dump machine facts.
 //!
 //! ```text
 //! leonardo-twin table1                 # rack inventory (Table 1)
 //! leonardo-twin table7 --calibrated    # LBM scaling from measured kernels
 //! leonardo-twin operations --jobs 10000 --cap 8.0
+//! leonardo-twin sweep --seeds 4 --caps none,7.5,6.5 --mixes day,ai
 //! leonardo-twin all --markdown         # every table, markdown to stdout
 //! leonardo-twin topology --dot > fabric.dot
 //! ```
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
+use leonardo_twin::campaign::SweepGrid;
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::metrics::Table;
 use leonardo_twin::runtime::Engine;
@@ -37,6 +39,12 @@ COMMANDS:
   overview    Architecture + blade summary            (Fig 1/3)
   operations  Replay a mixed HPC+AI day on the Booster partition
               through the event-driven scheduler      [--jobs N] [--seed S] [--cap MW]
+  sweep       Multi-threaded scenario-sweep campaign: replay a
+              seeds x power-caps x mixes grid of operational days and
+              merge the outcomes (per-scenario, cap-sensitivity and
+              aggregate-percentile tables — identical for any thread
+              count)   [--jobs N] [--seed S] [--seeds K] [--caps LIST]
+                       [--mixes LIST] [--threads T]
   calibrate   Measure the AOT kernels through PJRT
   all         Every table in paper order              [--calibrated]
 
@@ -44,9 +52,16 @@ OPTIONS:
   --markdown        markdown tables instead of console layout
   --calibrated      calibrate models with real PJRT kernel runs first
   --artifacts DIR   artifacts directory (default ./artifacts)
-  --jobs N          operations: jobs in the synthetic day (default 10000)
-  --seed S          operations: trace seed (default 2023)
+  --jobs N          operations/sweep: jobs per synthetic day
+                    (default 10000 for operations, 2000 per sweep scenario)
+  --seed S          operations: trace seed; sweep: first seed (default 2023)
   --cap MW          operations: facility power cap in MW (default uncapped)
+  --seeds K         sweep: number of arrival seeds S, S+1, ... (default 4)
+  --caps LIST       sweep: comma-separated cap levels in MW; 'none' lifts
+                    the cap (default none,7.5,6.5)
+  --mixes LIST      sweep: comma-separated TraceGen mixes: day, ai, hpc
+                    (default day,ai)
+  --threads T       sweep: worker threads (default: available cores)
 ";
 
 struct Args {
@@ -55,9 +70,13 @@ struct Args {
     calibrated: bool,
     dot: bool,
     artifacts: Option<String>,
-    jobs: usize,
+    jobs: Option<usize>,
     seed: u64,
     cap_mw: Option<f64>,
+    seeds: u64,
+    caps: String,
+    mixes: String,
+    threads: Option<usize>,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -69,9 +88,13 @@ fn parse_args() -> Result<Args, String> {
         calibrated: false,
         dot: false,
         artifacts: None,
-        jobs: 10_000,
+        jobs: None,
         seed: 2023,
         cap_mw: None,
+        seeds: 4,
+        caps: "none,7.5,6.5".to_string(),
+        mixes: "day,ai".to_string(),
+        threads: None,
     };
     while let Some(a) = argv.next() {
         match a.as_str() {
@@ -82,11 +105,12 @@ fn parse_args() -> Result<Args, String> {
                 args.artifacts = Some(argv.next().ok_or("--artifacts needs a value")?)
             }
             "--jobs" => {
-                args.jobs = argv
-                    .next()
-                    .ok_or("--jobs needs a value")?
-                    .parse()
-                    .map_err(|e| format!("--jobs: {e}"))?
+                args.jobs = Some(
+                    argv.next()
+                        .ok_or("--jobs needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--jobs: {e}"))?,
+                )
             }
             "--seed" => {
                 args.seed = argv
@@ -103,11 +127,44 @@ fn parse_args() -> Result<Args, String> {
                         .map_err(|e| format!("--cap: {e}"))?,
                 )
             }
+            "--seeds" => {
+                args.seeds = argv
+                    .next()
+                    .ok_or("--seeds needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--seeds: {e}"))?
+            }
+            "--caps" => args.caps = argv.next().ok_or("--caps needs a value")?,
+            "--mixes" => args.mixes = argv.next().ok_or("--mixes needs a value")?,
+            "--threads" => {
+                args.threads = Some(
+                    argv.next()
+                        .ok_or("--threads needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--threads: {e}"))?,
+                )
+            }
             "-h" | "--help" => return Err(USAGE.to_string()),
             other => return Err(format!("unknown flag '{other}'\n\n{USAGE}")),
         }
     }
     Ok(args)
+}
+
+/// Parse the sweep's `--caps` list: MW floats, with `none`/`off`/
+/// `uncapped` lifting the cap for that grid level.
+fn parse_caps(list: &str) -> Result<Vec<Option<f64>>, String> {
+    list.split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| match s.to_ascii_lowercase().as_str() {
+            "none" | "off" | "uncapped" => Ok(None),
+            _ => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|e| format!("--caps '{s}': {e}")),
+        })
+        .collect()
 }
 
 fn print(t: &Table, markdown: bool) {
@@ -171,10 +228,56 @@ fn main() -> anyhow::Result<()> {
         }
         "overview" => overview(&twin),
         "operations" => {
-            let trace = TraceGen::booster_day(args.jobs, args.seed);
+            let trace = TraceGen::booster_day(args.jobs.unwrap_or(10_000), args.seed);
             let report = twin.operations_replay(&trace, args.cap_mw)?;
             print(&report.summary, md);
             print(&report.power, md);
+        }
+        "sweep" => {
+            if args.cap_mw.is_some() {
+                eprintln!(
+                    "sweep sweeps a grid of cap levels: use --caps LIST (e.g. \
+                     --caps none,6.0), not the operations flag --cap"
+                );
+                std::process::exit(2);
+            }
+            let caps = match parse_caps(&args.caps) {
+                Ok(c) => c,
+                Err(msg) => {
+                    eprintln!("{msg}");
+                    std::process::exit(2);
+                }
+            };
+            let seeds: Vec<u64> = (0..args.seeds).map(|k| args.seed + k).collect();
+            let mixes: Vec<String> = args
+                .mixes
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let grid = match SweepGrid::new(seeds, caps, mixes, args.jobs.unwrap_or(2_000)) {
+                Ok(g) => g,
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            };
+            let threads = args.threads.unwrap_or_else(|| {
+                std::thread::available_parallelism().map_or(1, |n| n.get())
+            });
+            eprintln!(
+                "sweep: {} scenarios ({} seeds x {} caps x {} mixes, {} jobs each) on {} threads",
+                grid.len(),
+                grid.seeds.len(),
+                grid.caps.len(),
+                grid.mixes.len(),
+                grid.jobs,
+                threads
+            );
+            let report = twin.sweep(&grid, threads);
+            print(&report.scenario_table(), md);
+            print(&report.cap_table(), md);
+            print(&report.summary_table(), md);
         }
         "calibrate" => {
             let eng = engine(&args.artifacts)?;

@@ -351,7 +351,7 @@ impl CongestionTracker {
 }
 
 impl Component for CongestionTracker {
-    fn on_event(&mut self, now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+    fn on_event(&mut self, now: f64, ev: &Event, _out: &mut Vec<ScheduledEvent>) {
         match ev {
             Event::Start { booster, cells, .. } if *booster || !self.booster_only => {
                 self.update(cells, 1)
@@ -359,12 +359,11 @@ impl Component for CongestionTracker {
             Event::End { booster, cells, .. } if *booster || !self.booster_only => {
                 self.update(cells, -1)
             }
-            _ => return Vec::new(),
+            _ => return,
         }
         let mean = self.mean_load();
         self.peak = self.peak.max(mean);
         self.series.push(now, mean);
-        Vec::new()
     }
 }
 
@@ -523,30 +522,39 @@ mod tests {
     #[test]
     fn congestion_tracker_follows_start_end_events() {
         use crate::sim::{Component, Event};
+        let mut out = Vec::new();
         let mut t = CongestionTracker::new([(0, 180), (1, 180), (2, 180)]);
         let start = Event::Start {
             job: 1,
             booster: true,
             dvfs_scale: 1.0,
-            cells: vec![(0, 90), (1, 90)],
+            cells: vec![(0, 90), (1, 90)].into(),
         };
-        t.on_event(0.0, &start);
+        t.on_event(0.0, &start, &mut out);
         assert!((t.cell_load(0) - 0.5).abs() < 1e-12);
         assert!((t.cell_load(2) - 0.0).abs() < 1e-12);
         assert!(t.mean_load() > 0.0);
         // Single-cell jobs do not load the global links.
-        t.on_event(1.0, &Event::Start {
-            job: 2,
-            booster: true,
-            dvfs_scale: 1.0,
-            cells: vec![(2, 180)],
-        });
+        t.on_event(
+            1.0,
+            &Event::Start {
+                job: 2,
+                booster: true,
+                dvfs_scale: 1.0,
+                cells: vec![(2, 180)].into(),
+            },
+            &mut out,
+        );
         assert_eq!(t.cell_load(2), 0.0);
-        t.on_event(2.0, &Event::End {
-            job: 1,
-            booster: true,
-            cells: vec![(0, 90), (1, 90)],
-        });
+        t.on_event(
+            2.0,
+            &Event::End {
+                job: 1,
+                booster: true,
+                cells: vec![(0, 90), (1, 90)].into(),
+            },
+            &mut out,
+        );
         assert_eq!(t.mean_load(), 0.0);
         assert!(t.peak_load() > 0.0);
         // One sample per Start/End event, including the no-op single-cell
@@ -561,12 +569,16 @@ mod tests {
         assert!(t.booster_only);
         // A wide DataCentric job spanning CPU cells (incl. the Hybrid
         // cell's CPU side) must not register as GPU-fabric load.
-        t.on_event(0.0, &Event::Start {
-            job: 1,
-            booster: false,
-            dvfs_scale: 1.0,
-            cells: vec![(19, 300), (20, 300), (21, 100)],
-        });
+        t.on_event(
+            0.0,
+            &Event::Start {
+                job: 1,
+                booster: false,
+                dvfs_scale: 1.0,
+                cells: vec![(19, 300), (20, 300), (21, 100)].into(),
+            },
+            &mut Vec::new(),
+        );
         assert_eq!(t.mean_load(), 0.0);
         assert_eq!(t.peak_load(), 0.0);
     }
@@ -576,12 +588,16 @@ mod tests {
         use crate::sim::{Component, Event};
         let mut n = net();
         let mut t = CongestionTracker::for_booster(&MachineConfig::leonardo());
-        t.on_event(0.0, &Event::Start {
-            job: 1,
-            booster: true,
-            dvfs_scale: 1.0,
-            cells: vec![(0, 180), (1, 180)],
-        });
+        t.on_event(
+            0.0,
+            &Event::Start {
+                job: 1,
+                booster: true,
+                dvfs_scale: 1.0,
+                cells: vec![(0, 180), (1, 180)].into(),
+            },
+            &mut Vec::new(),
+        );
         t.apply_to(&mut n);
         assert!(n.cell_background_load(0) > 0.9);
         let p = placement(&[(0, 90), (1, 90)]);

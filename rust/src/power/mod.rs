@@ -253,7 +253,7 @@ impl PowerMonitor {
 }
 
 impl Component for PowerMonitor {
-    fn on_event(&mut self, now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+    fn on_event(&mut self, now: f64, ev: &Event, _out: &mut Vec<ScheduledEvent>) {
         match ev {
             Event::Start {
                 job,
@@ -262,7 +262,7 @@ impl Component for PowerMonitor {
                 ..
             } => {
                 if self.booster_only && !booster {
-                    return Vec::new();
+                    return;
                 }
                 let nodes = ev.nodes();
                 self.busy_nodes += nodes;
@@ -279,7 +279,6 @@ impl Component for PowerMonitor {
             }
             _ => {}
         }
-        Vec::new()
     }
 }
 
@@ -403,7 +402,7 @@ mod tests {
             job,
             booster: true,
             dvfs_scale: scale,
-            cells: vec![(0, nodes)],
+            cells: vec![(0, nodes)].into(),
         }
     }
 
@@ -411,19 +410,20 @@ mod tests {
         Event::End {
             job,
             booster: true,
-            cells: vec![(0, nodes)],
+            cells: vec![(0, nodes)].into(),
         }
     }
 
     #[test]
     fn monitor_tracks_busy_nodes_and_power() {
+        let mut out = Vec::new();
         let mut mon = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
         let idle_w = mon.facility_w();
-        mon.on_event(0.0, &start_ev(1, 1000, 1.0));
+        mon.on_event(0.0, &start_ev(1, 1000, 1.0), &mut out);
         assert_eq!(mon.busy_nodes(), 1000);
         let loaded_w = mon.facility_w();
         assert!(loaded_w > idle_w);
-        mon.on_event(100.0, &end_ev(1, 1000));
+        mon.on_event(100.0, &end_ev(1, 1000), &mut out);
         assert_eq!(mon.busy_nodes(), 0);
         assert!((mon.facility_w() - idle_w).abs() < 1e-6);
         // Per-event series: one sample at start, one at end.
@@ -433,10 +433,11 @@ mod tests {
 
     #[test]
     fn monitor_dvfs_scale_reduces_dynamic_power() {
+        let mut out = Vec::new();
         let mut nominal = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
         let mut capped = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
-        nominal.on_event(0.0, &start_ev(1, 2000, 1.0));
-        capped.on_event(0.0, &start_ev(1, 2000, 0.8));
+        nominal.on_event(0.0, &start_ev(1, 2000, 1.0), &mut out);
+        capped.on_event(0.0, &start_ev(1, 2000, 0.8), &mut out);
         assert!(capped.facility_w() < nominal.facility_w());
         // Idle floor identical: the difference is purely dynamic.
         let idle = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456).facility_w();
@@ -445,25 +446,27 @@ mod tests {
 
     #[test]
     fn booster_only_monitor_ignores_datacentric_jobs() {
+        let mut out = Vec::new();
         let mut mon = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
         mon.booster_only = true;
         let dc_start = Event::Start {
             job: 1,
             booster: false,
             dvfs_scale: 1.0,
-            cells: vec![(19, 1200)],
+            cells: vec![(19, 1200)].into(),
         };
-        mon.on_event(0.0, &dc_start);
+        mon.on_event(0.0, &dc_start, &mut out);
         assert_eq!(mon.busy_nodes(), 0);
-        mon.on_event(0.0, &start_ev(2, 3000, 1.0));
+        mon.on_event(0.0, &start_ev(2, 3000, 1.0), &mut out);
         assert_eq!(mon.busy_nodes(), 3000);
         assert!(mon.utilization() <= 1.0);
     }
 
     #[test]
     fn monitor_ignores_unknown_job_end() {
+        let mut out = Vec::new();
         let mut mon = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
-        mon.on_event(0.0, &end_ev(42, 100));
+        mon.on_event(0.0, &end_ev(42, 100), &mut out);
         assert_eq!(mon.busy_nodes(), 0);
         assert!(mon.store.get("facility_power_w").is_none());
     }

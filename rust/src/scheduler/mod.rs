@@ -12,17 +12,50 @@
 //! `Submit`/`End`/`CapChange` events — running jobs live in an
 //! end-time-ordered map, a scheduling pass fires only when state changed
 //! — and emits `Start`/`End` events observers (power, telemetry, network
-//! congestion) subscribe to via [`Scheduler::run_with`]. The legacy
-//! scan-and-rescan loop is preserved as [`Scheduler::run_rescan`]: it is
-//! the baseline `benches/scheduler_throughput.rs` measures against, and
-//! the equivalence oracle the tests hold the event engine to.
+//! congestion) subscribe to via [`Scheduler::run_with`].
+//!
+//! ## The allocation-free hot path
+//!
+//! The scenario-sweep campaigns (see [`crate::campaign`]) replay
+//! thousands of day traces, so the per-event path holds these
+//! invariants (enforced by the bit-for-bit oracle suites in
+//! `rust/tests/sim_scheduler.rs`):
+//!
+//! * **O(1) free/total counters** per partition — `free_nodes` /
+//!   `total_nodes` never re-sum pools;
+//! * **indexed release** — pools are indexed by cell id, so
+//!   [`Scheduler::release`] is O(1) per placed cell instead of a linear
+//!   `find`;
+//! * **in-place placement order** — [`Scheduler::place`] re-sorts a
+//!   persistent fullest-first index buffer in place behind an O(1)
+//!   capacity guard, replacing the seed's allocate-and-sort-and-re-sum
+//!   on every call;
+//! * **interned placements** — a job's `Start` and `End` events share
+//!   one [`Cells`] `Arc` instead of cloning the cell list per event,
+//!   and completion releases straight from the job record without a
+//!   placement clone;
+//! * **pruned passes** — the engine tracks a per-partition lower bound
+//!   on the smallest queued node count; a pass is skipped (and a pass's
+//!   queue scan cut short) whenever no queued job can possibly fit;
+//! * **settled-prefix scans** — across Submit-only intervals (free
+//!   counts and running jobs unchanged) a pass resumes from the first
+//!   unevaluated queue position instead of rescanning the whole queue;
+//!   any `End`/`CapChange` or started job resets the cursor.
+//!
+//! Two cost-faithful baselines are kept for the throughput bench and
+//! the oracle tests: [`Scheduler::run_rescan`] (the seed's
+//! scan-and-rescan loop) and [`Scheduler::run_event_baseline`] (the
+//! PR 1 event engine: allocate-and-sort placement, full queue scan per
+//! pass, per-event placement copies). All three paths produce identical
+//! records.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::config::{CellKind, MachineConfig};
 use crate::network::Placement;
 use crate::power::{PowerModel, Utilization};
-use crate::sim::{Component, Event, ScheduledEvent, SimTime, Simulation, TIME_EPS};
+use crate::sim::{Cells, Component, Event, ScheduledEvent, SimTime, Simulation, TIME_EPS};
 
 /// Target partition of a job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,11 +111,32 @@ struct CellPool {
     total: u32,
 }
 
+/// `cell id -> pool position` sentinel for cells outside a partition.
+const NO_POOL: u32 = u32::MAX;
+
 /// The scheduler over one machine.
+///
+/// Pools are indexed by cell id for O(1) release, free/total node
+/// counts are maintained as O(1) counters, and placement re-sorts a
+/// persistent order buffer in place (see the module docs for the full
+/// hot-path contract).
 #[derive(Debug, Clone)]
 pub struct Scheduler {
     booster: Vec<CellPool>,
     dc: Vec<CellPool>,
+    /// `cell id -> pool position` per partition ([`NO_POOL`] when the
+    /// cell has no nodes of that partition).
+    booster_by_cell: Vec<u32>,
+    dc_by_cell: Vec<u32>,
+    /// Persistent placement-order buffers: pool positions, fullest cell
+    /// first with pool order (= cell-id order) breaking ties — exactly
+    /// the stable sort the seed performed per call, but rebuilt in
+    /// place instead of allocated fresh.
+    booster_order: Vec<u32>,
+    dc_order: Vec<u32>,
+    /// O(1) free/total node counters per partition, indexed by [`pidx`].
+    free: [u32; 2],
+    total: [u32; 2],
     /// Optional facility IT power cap, MW, with per-node-at-load watts.
     pub power_cap: Option<PowerCap>,
 }
@@ -113,10 +167,13 @@ impl Scheduler {
     pub fn new(cfg: &MachineConfig) -> Self {
         let mut booster = Vec::new();
         let mut dc = Vec::new();
+        let mut booster_by_cell = vec![NO_POOL; cfg.cells.len()];
+        let mut dc_by_cell = vec![NO_POOL; cfg.cells.len()];
         for (cell_id, cell) in cfg.cells.iter().enumerate() {
             let gpu: u32 = cell.groups.iter().map(|g| g.gpu_nodes()).sum();
             let cpu: u32 = cell.groups.iter().map(|g| g.cpu_nodes()).sum();
             if gpu > 0 {
+                booster_by_cell[cell_id] = booster.len() as u32;
                 booster.push(CellPool {
                     cell_id: cell_id as u32,
                     free: gpu,
@@ -124,6 +181,7 @@ impl Scheduler {
                 });
             }
             if cpu > 0 && cell.kind != CellKind::Io {
+                dc_by_cell[cell_id] = dc.len() as u32;
                 dc.push(CellPool {
                     cell_id: cell_id as u32,
                     free: cpu,
@@ -131,21 +189,39 @@ impl Scheduler {
                 });
             }
         }
+        let free = [
+            booster.iter().map(|c| c.free).sum(),
+            dc.iter().map(|c| c.free).sum(),
+        ];
         Scheduler {
             booster,
             dc,
+            booster_by_cell,
+            dc_by_cell,
+            booster_order: Vec::new(),
+            dc_order: Vec::new(),
+            free,
+            total: free,
             power_cap: None,
         }
     }
 
-    fn pools(&mut self, p: Partition) -> &mut Vec<CellPool> {
-        match p {
-            Partition::Booster => &mut self.booster,
-            Partition::DataCentric => &mut self.dc,
-        }
+    /// Free nodes in partition `p` — an O(1) counter read.
+    pub fn free_nodes(&self, p: Partition) -> u32 {
+        self.free[pidx(p)]
     }
 
-    pub fn free_nodes(&self, p: Partition) -> u32 {
+    /// Total nodes in partition `p` — an O(1) counter read (this is the
+    /// cached Booster total the per-start DVFS check reads, replacing
+    /// the seed's per-call pool re-sum).
+    pub fn total_nodes(&self, p: Partition) -> u32 {
+        self.total[pidx(p)]
+    }
+
+    /// The seed's per-call pool re-sum, kept only so the cost-faithful
+    /// baselines ([`Scheduler::run_rescan`]) pay the price the seed
+    /// paid. Equals [`Scheduler::free_nodes`].
+    fn free_nodes_scan(&self, p: Partition) -> u32 {
         let pools = match p {
             Partition::Booster => &self.booster,
             Partition::DataCentric => &self.dc,
@@ -153,21 +229,68 @@ impl Scheduler {
         pools.iter().map(|c| c.free).sum()
     }
 
-    pub fn total_nodes(&self, p: Partition) -> u32 {
-        let pools = match p {
-            Partition::Booster => &self.booster,
-            Partition::DataCentric => &self.dc,
+    /// Re-sort the persistent placement-order buffer of partition `p`
+    /// in place: identity permutation, then a stable sort by descending
+    /// free count — bit-for-bit the order the seed's per-call sort
+    /// produced, with no allocation.
+    fn rebuild_order(&mut self, p: Partition) {
+        let (pools, order) = match p {
+            Partition::Booster => (&self.booster, &mut self.booster_order),
+            Partition::DataCentric => (&self.dc, &mut self.dc_order),
         };
-        pools.iter().map(|c| c.total).sum()
+        order.clear();
+        order.extend(0..pools.len() as u32);
+        order.sort_by_key(|&i| std::cmp::Reverse(pools[i as usize].free));
     }
 
     /// Topology-aware placement: greedily fill the cells with the most
     /// free nodes, minimising the number of cells the job spans.
+    ///
+    /// Allocation-free: the capacity check is an O(1) counter read (no
+    /// pool re-sum) and the fullest-first order is re-sorted into a
+    /// persistent buffer (no per-call `Vec`).
     pub fn place(&mut self, p: Partition, nodes: u32) -> Option<Placement> {
-        if self.free_nodes(p) < nodes {
+        let pi = pidx(p);
+        if self.free[pi] < nodes {
             return None;
         }
-        let pools = self.pools(p);
+        self.rebuild_order(p);
+        let (pools, order) = match p {
+            Partition::Booster => (&mut self.booster, &self.booster_order),
+            Partition::DataCentric => (&mut self.dc, &self.dc_order),
+        };
+        let mut left = nodes;
+        let mut placement = Placement::default();
+        for &i in order {
+            if left == 0 {
+                break;
+            }
+            let pool = &mut pools[i as usize];
+            let take = pool.free.min(left);
+            if take > 0 {
+                pool.free -= take;
+                placement.nodes_per_cell.push((pool.cell_id, take));
+                left -= take;
+            }
+        }
+        debug_assert_eq!(left, 0);
+        self.free[pi] -= nodes;
+        Some(placement)
+    }
+
+    /// The seed's placement path, kept verbatim for the throughput
+    /// bench and the oracle suites: re-sums free nodes, allocates an
+    /// index `Vec` and re-sorts the pools on every call. Produces
+    /// exactly the same placements as [`Scheduler::place`].
+    pub fn place_scan(&mut self, p: Partition, nodes: u32) -> Option<Placement> {
+        let pi = pidx(p);
+        if self.free_nodes_scan(p) < nodes {
+            return None;
+        }
+        let pools = match p {
+            Partition::Booster => &mut self.booster,
+            Partition::DataCentric => &mut self.dc,
+        };
         let mut order: Vec<usize> = (0..pools.len()).collect();
         order.sort_by_key(|&i| std::cmp::Reverse(pools[i].free));
         let mut left = nodes;
@@ -184,24 +307,37 @@ impl Scheduler {
             }
         }
         debug_assert_eq!(left, 0);
+        self.free[pi] -= nodes;
         Some(placement)
     }
 
-    /// Return a placement's nodes to the free pools.
+    /// Return a placement's nodes to the free pools — O(1) per placed
+    /// cell via the cell-id index (the seed did a linear `find` per
+    /// cell).
     pub fn release(&mut self, p: Partition, placement: &Placement) {
-        let pools = self.pools(p);
+        let (pools, by_cell) = match p {
+            Partition::Booster => (&mut self.booster, &self.booster_by_cell),
+            Partition::DataCentric => (&mut self.dc, &self.dc_by_cell),
+        };
+        let mut released = 0u32;
         for &(cell_id, n) in &placement.nodes_per_cell {
-            let pool = pools
-                .iter_mut()
-                .find(|c| c.cell_id == cell_id)
+            let idx = by_cell
+                .get(cell_id as usize)
+                .copied()
+                .filter(|&i| i != NO_POOL)
                 .expect("release to unknown cell");
+            let pool = &mut pools[idx as usize];
             pool.free += n;
             assert!(pool.free <= pool.total, "double release");
+            released += n;
         }
+        let pi = pidx(p);
+        self.free[pi] += released;
     }
 
     /// Run a workload to completion with FIFO + EASY backfill on the
-    /// event engine. Returns per-job records. Virtual time; deterministic.
+    /// optimized event engine. Returns per-job records. Virtual time;
+    /// deterministic.
     pub fn run(&mut self, jobs: Vec<Job>) -> BTreeMap<u64, JobRecord> {
         self.run_with(jobs, Vec::new(), &mut [])
     }
@@ -211,9 +347,28 @@ impl Scheduler {
     /// lifecycle produces (`Submit`, `Start`, `End`, `CapChange`).
     pub fn run_with(
         &mut self,
+        jobs: Vec<Job>,
+        extra_events: Vec<ScheduledEvent>,
+        observers: &mut [&mut dyn Component],
+    ) -> BTreeMap<u64, JobRecord> {
+        self.run_mode(jobs, extra_events, observers, true)
+    }
+
+    /// The PR 1 event engine, kept cost-faithful as the middle rung of
+    /// the throughput ladder (`rescan < event baseline < optimized`):
+    /// allocate-and-sort placement per start, a full queue scan per
+    /// pass, and per-event placement copies. Record-identical to
+    /// [`Scheduler::run`].
+    pub fn run_event_baseline(&mut self, jobs: Vec<Job>) -> BTreeMap<u64, JobRecord> {
+        self.run_mode(jobs, Vec::new(), &mut [], false)
+    }
+
+    fn run_mode(
+        &mut self,
         mut jobs: Vec<Job>,
         extra_events: Vec<ScheduledEvent>,
         observers: &mut [&mut dyn Component],
+        optimized: bool,
     ) -> BTreeMap<u64, JobRecord> {
         jobs.sort_by(|a, b| {
             a.submit_time
@@ -230,7 +385,7 @@ impl Scheduler {
         for se in extra_events {
             sim.schedule(se.time, se.event);
         }
-        let mut engine = JobEngine::new(self, jobs);
+        let mut engine = JobEngine::new(self, jobs, optimized);
         {
             let mut comps: Vec<&mut dyn Component> = Vec::with_capacity(1 + observers.len());
             comps.push(&mut engine);
@@ -249,10 +404,11 @@ impl Scheduler {
 
     /// The legacy scan-and-rescan loop (the seed implementation):
     /// recomputes the next wake-up by scanning the running vector,
-    /// re-sorts it for every head reservation and rescans the whole
-    /// queue each iteration. Kept as the baseline for
-    /// `benches/scheduler_throughput.rs` and as the semantic oracle the
-    /// event engine is tested against — use [`Scheduler::run`].
+    /// re-sorts it for every head reservation, rescans the whole queue
+    /// each iteration and re-sums per-cell free counts per check. Kept
+    /// as the baseline for `benches/scheduler_throughput.rs` and as the
+    /// semantic oracle the event engine is tested against — use
+    /// [`Scheduler::run`].
     pub fn run_rescan(&mut self, mut jobs: Vec<Job>) -> BTreeMap<u64, JobRecord> {
         jobs.sort_by(|a, b| {
             a.submit_time
@@ -281,7 +437,7 @@ impl Scheduler {
             let head_reservation = self.head_reservation(&jobs, &queue, &running, now);
             for (qpos, &ji) in queue.iter().enumerate() {
                 let job = &jobs[ji];
-                if self.free_nodes(job.partition) < job.nodes {
+                if self.free_nodes_scan(job.partition) < job.nodes {
                     continue; // head waits; others may backfill
                 }
                 if qpos > 0 {
@@ -289,7 +445,7 @@ impl Scheduler {
                         // Would this backfill delay the head?
                         let fits_before = now + job.est_seconds <= res_time + 1e-9;
                         let disjoint = job.partition != res_part
-                            || self.free_nodes(job.partition) - job.nodes >= res_nodes;
+                            || self.free_nodes_scan(job.partition) - job.nodes >= res_nodes;
                         if !fits_before && !disjoint {
                             continue;
                         }
@@ -297,7 +453,7 @@ impl Scheduler {
                 }
                 let scale = self.dvfs_scale_for(&jobs, &running, job.nodes);
                 let placement = self
-                    .place(job.partition, job.nodes)
+                    .place_scan(job.partition, job.nodes)
                     .expect("checked free_nodes");
                 let slowdown = crate::power::DvfsPoint { scale }.time_factor(job.boundness);
                 let end = now + job.run_seconds * slowdown;
@@ -368,7 +524,7 @@ impl Scheduler {
     ) -> Option<(f64, Partition, u32)> {
         let &head = queue.first()?;
         let job = &jobs[head];
-        let mut free = self.free_nodes(job.partition);
+        let mut free = self.free_nodes_scan(job.partition);
         if free >= job.nodes {
             return Some((now, job.partition, job.nodes));
         }
@@ -399,12 +555,14 @@ impl Scheduler {
     }
 
     /// DVFS scale when `busy` nodes (including the one about to start)
-    /// are loaded, under the facility power cap.
+    /// are loaded, under the facility power cap. The Booster total is
+    /// the O(1) cached counter, so the per-start check never re-sums
+    /// pools.
     fn dvfs_scale_at(&self, busy: u32) -> f64 {
         let Some(cap) = self.power_cap else {
             return 1.0;
         };
-        let idle_nodes = self.total_nodes(Partition::Booster).saturating_sub(busy);
+        let idle_nodes = self.total[pidx(Partition::Booster)].saturating_sub(busy);
         let draw_mw =
             (busy as f64 * cap.node_watts + idle_nodes as f64 * cap.idle_watts) / 1e6;
         if draw_mw <= cap.cap_mw {
@@ -417,45 +575,89 @@ impl Scheduler {
     }
 }
 
+/// A queued job, compact (12 bytes) so the optimized pass streams a
+/// dense array instead of dereferencing into the 56-byte [`Job`] table
+/// per entry — the scan over can't-fit entries is the hottest loop in a
+/// saturated replay. The baseline path still dereferences `jobs[ji]`
+/// per entry (the PR 1 access pattern).
+#[derive(Debug, Clone, Copy)]
+struct QEntry {
+    ji: u32,
+    nodes: u32,
+    partition: Partition,
+}
+
+/// A running job as the engine's hot loops need it (head-reservation
+/// walks and completions read nodes/partition without touching the job
+/// table).
+#[derive(Debug, Clone, Copy)]
+struct RunEntry {
+    ji: u32,
+    nodes: u32,
+    partition: Partition,
+}
+
 /// The event-driven job lifecycle: a [`Component`] translating
 /// `Submit`/`End`/`CapChange` events into placement decisions, emitting
 /// `Start`/`End` events for observers.
 ///
 /// State the legacy loop recomputed per wake-up is maintained
-/// incrementally: free nodes per partition are O(1) counters, running
-/// jobs live in a `BTreeMap` keyed by `(end time, start seq)` so both
-/// the next completion and the head reservation walk come out in order
-/// without re-sorting, and the scheduling pass runs only when an event
-/// actually changed capacity or the queue (`dirty`).
+/// incrementally: free nodes per partition are the scheduler's O(1)
+/// counters, running jobs live in a `BTreeMap` keyed by
+/// `(end time, start seq)` so both the next completion and the head
+/// reservation walk come out in order without re-sorting, and the
+/// scheduling pass runs only when an event actually changed capacity or
+/// the queue (`dirty`). In optimized mode the pass is additionally
+/// pruned by `min_queued_lb`, a per-partition lower bound on the
+/// smallest queued node count: when neither partition's free count
+/// reaches its bound, no queued job can fit and the pass (or the rest
+/// of its queue scan) is skipped — a pure necessary-condition prune, so
+/// records stay bit-for-bit identical.
 struct JobEngine<'a> {
     sched: &'a mut Scheduler,
     jobs: Vec<Job>,
     idx_of: BTreeMap<u64, usize>,
-    /// Queued job indices in FIFO (submit) order.
-    queue: Vec<usize>,
-    /// Running jobs: (end time, start seq) -> job index.
-    running: BTreeMap<(SimTime, u64), usize>,
+    /// Queued jobs in FIFO (submit) order.
+    queue: Vec<QEntry>,
+    /// Running jobs: (end time, start seq) -> run entry.
+    running: BTreeMap<(SimTime, u64), RunEntry>,
     start_seq: u64,
     /// Total running nodes across both partitions (power-cap accounting,
     /// matching the legacy loop).
     running_nodes: u32,
-    /// Cached free nodes per partition (indexed by [`pidx`]).
-    free: [u32; 2],
     records: BTreeMap<u64, JobRecord>,
     dirty: bool,
+    /// Allocation-free fast path on; off = the PR 1 cost baseline.
+    optimized: bool,
+    /// Lower bound on the smallest queued node count per partition
+    /// (`u32::MAX` when nothing of that partition is queued). Tightened
+    /// on submit; reset only when a partition's queue empties, so it is
+    /// always a sound lower bound.
+    min_queued_lb: [u32; 2],
+    /// Queued-job count per partition (keeps `min_queued_lb` resettable).
+    queued: [u32; 2],
+    /// First queue position the next pass must evaluate. Positions
+    /// below it are *settled*: they were rejected by a previous pass
+    /// and nothing since has made them startable — a Submit changes
+    /// neither free counts nor running jobs, rejection by capacity is
+    /// unchanged at constant free, and rejection by the EASY window
+    /// (`now + est <= res_time`) only hardens as `now` advances toward
+    /// a reservation pinned to a running job's end. Reset to 0 by any
+    /// `End`/`CapChange` and by any pass that starts a job (starts
+    /// change free and may promote a new queue head).
+    scan_from: usize,
+    /// Scratch: queue positions started by the current pass (reused
+    /// across passes — no per-pass allocation).
+    started_scratch: Vec<usize>,
 }
 
 impl<'a> JobEngine<'a> {
-    fn new(sched: &'a mut Scheduler, jobs: Vec<Job>) -> Self {
+    fn new(sched: &'a mut Scheduler, jobs: Vec<Job>, optimized: bool) -> Self {
         let mut idx_of = BTreeMap::new();
         for (i, job) in jobs.iter().enumerate() {
             let prev = idx_of.insert(job.id, i);
             assert!(prev.is_none(), "duplicate job id {}", job.id);
         }
-        let free = [
-            sched.free_nodes(Partition::Booster),
-            sched.free_nodes(Partition::DataCentric),
-        ];
         JobEngine {
             sched,
             jobs,
@@ -464,29 +666,38 @@ impl<'a> JobEngine<'a> {
             running: BTreeMap::new(),
             start_seq: 0,
             running_nodes: 0,
-            free,
             records: BTreeMap::new(),
             dirty: false,
+            optimized,
+            min_queued_lb: [u32::MAX; 2],
+            queued: [0; 2],
+            scan_from: 0,
+            started_scratch: Vec::new(),
         }
+    }
+
+    /// True unless the free-vs-lower-bound prune proves no queued job
+    /// of either partition can fit right now.
+    fn any_could_fit(&self) -> bool {
+        self.sched.free[0] >= self.min_queued_lb[0]
+            || self.sched.free[1] >= self.min_queued_lb[1]
     }
 
     /// Earliest time the queue head could start: walk running jobs in
     /// end-time order (the map's native order) instead of re-sorting.
     fn head_reservation(&self, now: f64) -> Option<(f64, Partition, u32)> {
-        let &head = self.queue.first()?;
-        let job = &self.jobs[head];
-        let mut free = self.free[pidx(job.partition)];
-        if free >= job.nodes {
-            return Some((now, job.partition, job.nodes));
+        let head = *self.queue.first()?;
+        let mut free = self.sched.free[pidx(head.partition)];
+        if free >= head.nodes {
+            return Some((now, head.partition, head.nodes));
         }
-        for (&(t, _), &ji) in &self.running {
-            let j = &self.jobs[ji];
-            if j.partition != job.partition {
+        for (&(t, _), r) in &self.running {
+            if r.partition != head.partition {
                 continue;
             }
-            free += j.nodes;
-            if free >= job.nodes {
-                return Some((t.0, job.partition, job.nodes));
+            free += r.nodes;
+            if free >= head.nodes {
+                return Some((t.0, head.partition, head.nodes));
             }
         }
         None
@@ -501,60 +712,131 @@ impl<'a> JobEngine<'a> {
     /// Complete every running job whose end falls within `TIME_EPS` of
     /// `now` (the legacy loop's completion tolerance).
     fn complete_due(&mut self, now: f64) {
-        while let Some((&(t, seq), &ji)) = self.running.first_key_value() {
+        while let Some((&(t, seq), &r)) = self.running.first_key_value() {
             if t.0 > now + TIME_EPS {
                 break;
             }
             self.running.remove(&(t, seq));
-            let job = &self.jobs[ji];
-            let placement = self.records.get(&job.id).unwrap().placement.clone();
-            self.sched.release(job.partition, &placement);
-            self.free[pidx(job.partition)] += job.nodes;
-            self.running_nodes -= job.nodes;
+            let id = self.jobs[r.ji as usize].id;
+            if self.optimized {
+                // Release straight from the record — no placement clone.
+                let rec = self.records.get(&id).expect("record of running job");
+                self.sched.release(r.partition, &rec.placement);
+            } else {
+                // PR 1 copied the placement out of the record per
+                // release; the baseline keeps that cost.
+                let placement = self.records.get(&id).unwrap().placement.clone();
+                self.sched.release(r.partition, &placement);
+            }
+            self.running_nodes -= r.nodes;
             self.dirty = true;
         }
     }
 
     /// One scheduling pass: head strictly FIFO, the rest EASY backfill.
     /// Semantically identical to one iteration of the legacy loop.
-    fn pass(&mut self, now: f64) -> Vec<ScheduledEvent> {
-        let head_res = self.head_reservation(now);
-        let mut started: Vec<usize> = Vec::new();
-        let mut out = Vec::new();
-        for qpos in 0..self.queue.len() {
-            let ji = self.queue[qpos];
-            let job = &self.jobs[ji];
-            let p = pidx(job.partition);
-            if self.free[p] < job.nodes {
+    fn pass(&mut self, now: f64, out: &mut Vec<ScheduledEvent>) {
+        if self.optimized && !self.any_could_fit() {
+            // Nothing queued can fit — provably a no-op pass, and every
+            // entry is settled until free nodes change.
+            self.scan_from = self.queue.len();
+            return;
+        }
+        // The head reservation walks the running map. Optimized passes
+        // defer it until first needed — but it must be pinned to the
+        // *pass-entry* state, so it is always materialized before the
+        // pass's first start mutates free/running (see below). The
+        // baseline computes it eagerly per pass like PR 1 did.
+        let mut head_res: Option<Option<(f64, Partition, u32)>> = if self.optimized {
+            None
+        } else {
+            Some(self.head_reservation(now))
+        };
+        self.started_scratch.clear();
+        // Settled prefix (optimized mode): positions below `scan_from`
+        // were rejected by an earlier pass and nothing startable has
+        // changed for them — a full sweep would reject them again with
+        // identical free counts, so skipping them is decision-identical.
+        let begin = if self.optimized {
+            self.scan_from.min(self.queue.len())
+        } else {
+            0
+        };
+        for qpos in begin..self.queue.len() {
+            if self.optimized && !self.any_could_fit() {
+                break; // remaining scan provably starts nothing
+            }
+            let entry = self.queue[qpos];
+            // The optimized scan reads the dense queue entry; the
+            // baseline keeps PR 1's per-entry deref into the job table.
+            let (nodes, partition) = if self.optimized {
+                (entry.nodes, entry.partition)
+            } else {
+                let j = &self.jobs[entry.ji as usize];
+                (j.nodes, j.partition)
+            };
+            let pi = pidx(partition);
+            let free_p = self.sched.free[pi];
+            if free_p < nodes {
                 continue; // head waits; others may backfill
             }
             if qpos > 0 {
-                if let Some((res_time, res_part, res_nodes)) = head_res {
+                let hr = match head_res {
+                    Some(hr) => hr,
+                    None => {
+                        let hr = self.head_reservation(now);
+                        head_res = Some(hr);
+                        hr
+                    }
+                };
+                if let Some((res_time, res_part, res_nodes)) = hr {
                     // Would this backfill delay the head?
-                    let fits_before = now + job.est_seconds <= res_time + 1e-9;
-                    let disjoint = job.partition != res_part
-                        || self.free[p] - job.nodes >= res_nodes;
+                    let est = self.jobs[entry.ji as usize].est_seconds;
+                    let fits_before = now + est <= res_time + 1e-9;
+                    let disjoint = partition != res_part || free_p - nodes >= res_nodes;
                     if !fits_before && !disjoint {
                         continue;
                     }
                 }
             }
-            let scale = self.dvfs_scale(job.nodes);
-            let placement = self
-                .sched
-                .place(job.partition, job.nodes)
-                .expect("checked free counter");
-            self.free[p] -= job.nodes;
+            if head_res.is_none() {
+                // This start is the queue head (qpos == 0 never consults
+                // the reservation). Materialize it NOW, while free and
+                // running are still the pass-entry state — a lazy
+                // computation after this start would see the head's own
+                // nodes as consumed and mis-reserve for later backfill
+                // candidates (any qpos > 0 path materialized it above).
+                head_res = Some(self.head_reservation(now));
+            }
+            let job = &self.jobs[entry.ji as usize];
+            let scale = self.dvfs_scale(nodes);
+            let placement = if self.optimized {
+                self.sched.place(partition, nodes)
+            } else {
+                self.sched.place_scan(partition, nodes)
+            }
+            .expect("checked free counter");
             let slowdown = crate::power::DvfsPoint { scale }.time_factor(job.boundness);
             let end = now + job.run_seconds * slowdown;
-            let booster = job.partition == Partition::Booster;
+            let booster = partition == Partition::Booster;
+            let (start_cells, end_cells): (Cells, Cells) = if self.optimized {
+                // One interned copy per job, shared by Start and End.
+                let cells: Cells = Arc::from(placement.nodes_per_cell.as_slice());
+                (cells.clone(), cells)
+            } else {
+                // PR 1 cloned the cell list once per event.
+                (
+                    Arc::from(placement.nodes_per_cell.as_slice()),
+                    Arc::from(placement.nodes_per_cell.as_slice()),
+                )
+            };
             out.push(ScheduledEvent::at(
                 now,
                 Event::Start {
                     job: job.id,
                     booster,
                     dvfs_scale: scale,
-                    cells: placement.nodes_per_cell.clone(),
+                    cells: start_cells,
                 },
             ));
             out.push(ScheduledEvent::at(
@@ -562,7 +844,7 @@ impl<'a> JobEngine<'a> {
                 Event::End {
                     job: job.id,
                     booster,
-                    cells: placement.nodes_per_cell.clone(),
+                    cells: end_cells,
                 },
             ));
             self.records.insert(
@@ -575,13 +857,24 @@ impl<'a> JobEngine<'a> {
                     dvfs_scale: scale,
                 },
             );
-            self.running.insert((SimTime(end), self.start_seq), ji);
+            self.running.insert(
+                (SimTime(end), self.start_seq),
+                RunEntry {
+                    ji: entry.ji,
+                    nodes,
+                    partition,
+                },
+            );
             self.start_seq += 1;
-            self.running_nodes += job.nodes;
-            started.push(qpos);
+            self.running_nodes += nodes;
+            self.queued[pi] -= 1;
+            if self.queued[pi] == 0 {
+                self.min_queued_lb[pi] = u32::MAX;
+            }
+            self.started_scratch.push(qpos);
         }
-        if !started.is_empty() {
-            let mut rm = started.iter().copied().peekable();
+        if !self.started_scratch.is_empty() {
+            let mut rm = self.started_scratch.iter().copied().peekable();
             let mut i = 0usize;
             self.queue.retain(|_| {
                 let drop = rm.peek() == Some(&i);
@@ -592,49 +885,75 @@ impl<'a> JobEngine<'a> {
                 !drop
             });
         }
-        out
+        // Starts changed free counts (and may have promoted a new
+        // head): rescan everything next time. A no-start pass settles
+        // the whole queue until an End/CapChange perturbs it.
+        self.scan_from = if self.started_scratch.is_empty() {
+            self.queue.len()
+        } else {
+            0
+        };
     }
 }
 
 impl Component for JobEngine<'_> {
-    fn on_event(&mut self, _now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+    fn on_event(&mut self, _now: f64, ev: &Event, _out: &mut Vec<ScheduledEvent>) {
         match ev {
             Event::Submit { job } => {
                 if let Some(&ji) = self.idx_of.get(job) {
-                    self.queue.push(ji);
+                    let job = &self.jobs[ji];
+                    let pi = pidx(job.partition);
+                    self.queue.push(QEntry {
+                        ji: ji as u32,
+                        nodes: job.nodes,
+                        partition: job.partition,
+                    });
+                    self.queued[pi] += 1;
+                    if job.nodes < self.min_queued_lb[pi] {
+                        self.min_queued_lb[pi] = job.nodes;
+                    }
                     self.dirty = true;
                 }
             }
             // Releases happen in the quiescent completion sweep so
             // equal-time Ends and Submits see one consistent pass.
-            Event::End { .. } => self.dirty = true,
+            Event::End { .. } => {
+                self.dirty = true;
+                self.scan_from = 0; // free nodes change: full rescan
+            }
             Event::CapChange { cap_mw } => {
                 match *cap_mw {
-                    None => self.sched.power_cap = None,
+                    None => {
+                        self.sched.power_cap = None;
+                        self.dirty = true;
+                        self.scan_from = 0;
+                    }
                     Some(mw) => match self.sched.power_cap.as_mut() {
-                        Some(cap) => cap.cap_mw = mw,
+                        Some(cap) => {
+                            cap.cap_mw = mw;
+                            self.dirty = true;
+                            self.scan_from = 0;
+                        }
                         // No watt model configured: the scheduler cannot
                         // invent one for an arbitrary machine, so a level
                         // change on a capless scheduler is a no-op. Set
                         // `power_cap` (see `PowerCap::for_model`) before
                         // the run to make cap events effective.
-                        None => return Vec::new(),
+                        None => {}
                     },
                 }
-                self.dirty = true;
             }
             Event::Start { .. } => {} // self-emitted
         }
-        Vec::new()
     }
 
-    fn on_quiescent(&mut self, now: f64) -> Vec<ScheduledEvent> {
+    fn on_quiescent(&mut self, now: f64, out: &mut Vec<ScheduledEvent>) {
         self.complete_due(now);
         if !self.dirty {
-            return Vec::new();
+            return;
         }
         self.dirty = false;
-        self.pass(now)
+        self.pass(now, out);
     }
 }
 
@@ -693,6 +1012,73 @@ mod tests {
         assert_eq!(s.free_nodes(Partition::Booster), 3456 - 2000);
         s.release(Partition::Booster, &p);
         assert_eq!(s.free_nodes(Partition::Booster), 3456);
+    }
+
+    /// Regression for the O(cells) release scan: a max-span 14-cell
+    /// placement releases through the cell-id index, restores every
+    /// pool exactly, and the next placement is bit-identical to a fresh
+    /// scheduler's.
+    #[test]
+    fn max_span_release_restores_every_cell() {
+        let mut s = sched();
+        let p = s.place(Partition::Booster, 2475).unwrap();
+        assert_eq!(p.cells_used(), 14);
+        s.release(Partition::Booster, &p);
+        assert_eq!(s.free_nodes(Partition::Booster), 3456);
+        // Pool-level restoration: placing the same job again must give
+        // the same cells as a fresh scheduler would.
+        let again = s.place(Partition::Booster, 2475).unwrap();
+        let fresh = sched().place(Partition::Booster, 2475).unwrap();
+        assert_eq!(again.nodes_per_cell, fresh.nodes_per_cell);
+    }
+
+    #[test]
+    #[should_panic(expected = "release to unknown cell")]
+    fn release_to_unknown_cell_panics() {
+        let mut s = sched();
+        let bogus = Placement {
+            nodes_per_cell: vec![(9999, 10)],
+        };
+        s.release(Partition::Booster, &bogus);
+    }
+
+    /// The in-place-order fast path and the seed's allocate-and-sort
+    /// path make identical placement decisions through arbitrary
+    /// place/release interleavings.
+    #[test]
+    fn place_matches_place_scan_through_interleavings() {
+        let mut fast = sched();
+        let mut slow = sched();
+        let mut rng = Rng::new(31);
+        let mut live: Vec<Placement> = Vec::new();
+        for step in 0..400 {
+            if !live.is_empty() && rng.f64() < 0.4 {
+                let i = (rng.next_u64() % live.len() as u64) as usize;
+                let p = live.swap_remove(i);
+                fast.release(Partition::Booster, &p);
+                slow.release(Partition::Booster, &p);
+            } else {
+                let n = rng.range_u32(1, 600);
+                let a = fast.place(Partition::Booster, n);
+                let b = slow.place_scan(Partition::Booster, n);
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(pa), Some(pb)) => {
+                        assert_eq!(
+                            pa.nodes_per_cell, pb.nodes_per_cell,
+                            "step {step}: divergent placement for {n} nodes"
+                        );
+                        live.push(pa);
+                    }
+                    (a, b) => panic!("step {step}: fit disagreement {a:?} vs {b:?}"),
+                }
+            }
+            assert_eq!(
+                fast.free_nodes(Partition::Booster),
+                slow.free_nodes(Partition::Booster),
+                "step {step}: counter drift"
+            );
+        }
     }
 
     #[test]
@@ -807,12 +1193,14 @@ mod tests {
             .collect()
     }
 
-    /// The event engine is bit-for-bit equivalent to the legacy loop.
+    /// The optimized engine, the PR 1 event baseline and the legacy
+    /// loop are bit-for-bit equivalent.
     #[test]
     fn event_engine_matches_rescan_loop() {
         for seed in 0..6u64 {
             let jobs = random_stream(seed, 80);
             let ev = sched().run(jobs.clone());
+            let baseline = sched().run_event_baseline(jobs.clone());
             let legacy = sched().run_rescan(jobs);
             assert_eq!(ev.len(), legacy.len(), "seed {seed}");
             for (id, r) in &ev {
@@ -823,6 +1211,13 @@ mod tests {
                 assert_eq!(
                     r.placement.nodes_per_cell, l.placement.nodes_per_cell,
                     "seed {seed} job {id}"
+                );
+                let b = &baseline[id];
+                assert_eq!(r.start_time, b.start_time, "seed {seed} job {id} (base)");
+                assert_eq!(r.end_time, b.end_time, "seed {seed} job {id} (base)");
+                assert_eq!(
+                    r.placement.nodes_per_cell, b.placement.nodes_per_cell,
+                    "seed {seed} job {id} (base)"
                 );
             }
         }
@@ -896,14 +1291,13 @@ mod tests {
             ends: u32,
         }
         impl Component for Counter {
-            fn on_event(&mut self, _now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+            fn on_event(&mut self, _now: f64, ev: &Event, _out: &mut Vec<ScheduledEvent>) {
                 match ev {
                     Event::Submit { .. } => self.submits += 1,
                     Event::Start { .. } => self.starts += 1,
                     Event::End { .. } => self.ends += 1,
                     _ => {}
                 }
-                Vec::new()
             }
         }
         let mut c = Counter {

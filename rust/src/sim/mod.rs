@@ -14,11 +14,11 @@
 //!   `(time, insertion seq)`, so equal-time events pop in the order they
 //!   were scheduled and runs are bit-for-bit reproducible;
 //! * [`Component`] — anything that reacts to events
-//!   (`on_event(&mut self, now, ev) -> Vec<ScheduledEvent>`) and may do
-//!   follow-up work once a timestamp's batch has fully drained
+//!   (`on_event(&mut self, now, ev, out)` pushing follow-up events into
+//!   `out`) and may do work once a timestamp's batch has fully drained
 //!   (`on_quiescent`);
 //! * [`Simulation`] — the driver loop: pop the earliest batch, dispatch
-//!   each event to every component in registration order, feed returned
+//!   each event to every component in registration order, feed pushed
 //!   events back into the queue, then give components their quiescent
 //!   callback.
 //!
@@ -28,12 +28,29 @@
 //! completed jobs whose end fell within `1e-9` of the wake-up instant).
 //! `Submit`s inside that window do *not* join — the legacy loop admitted
 //! arrivals only at `submit_time <= now`.
+//!
+//! ## Hot-path discipline
+//!
+//! The dispatch loop is allocation-free in steady state: components
+//! write follow-up events into a caller-owned scratch buffer
+//! (`out: &mut Vec<ScheduledEvent>`) that [`Simulation::run`] drains
+//! into the queue and reuses for every dispatch, and `Start`/`End`
+//! events carry their placement as a shared [`Cells`]
+//! (`Arc<[(cell, nodes)]>`) so the scheduler, power monitor, congestion
+//! tracker and telemetry scraper all read one interned copy instead of
+//! each event cloning the cell list.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 /// Job identifier used in lifecycle events.
 pub type JobId = u64;
+
+/// A shared placement payload: `(cell id, node count)` pairs. `Start`
+/// and `End` events of one job hold clones of the same `Arc`, so the
+/// placement is materialised once per job, not once per event.
+pub type Cells = Arc<[(u32, u32)]>;
 
 /// Completion tolerance: an `End` within this window of a batch time is
 /// processed with the batch (inherited from the legacy scheduler loop).
@@ -60,9 +77,9 @@ impl Ord for SimTime {
 
 /// The event vocabulary of the machine-operations domain.
 ///
-/// `Start`/`End` carry the placement as `(cell id, node count)` pairs so
-/// observers (power, telemetry, network congestion) need no access to
-/// scheduler internals.
+/// `Start`/`End` carry the placement as shared [`Cells`] so observers
+/// (power, telemetry, network congestion) need no access to scheduler
+/// internals and no per-observer copies are made.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
     /// A job arrived in the scheduler queue.
@@ -72,13 +89,13 @@ pub enum Event {
         job: JobId,
         booster: bool,
         dvfs_scale: f64,
-        cells: Vec<(u32, u32)>,
+        cells: Cells,
     },
     /// A job finished and released `cells`.
     End {
         job: JobId,
         booster: bool,
-        cells: Vec<(u32, u32)>,
+        cells: Cells,
     },
     /// The facility power cap changed (`None` lifts the cap).
     CapChange { cap_mw: Option<f64> },
@@ -124,19 +141,20 @@ impl ScheduledEvent {
 }
 
 /// A simulation participant. Events are dispatched to every component in
-/// registration order; returned events are fed back into the queue.
+/// registration order; events pushed into `out` are fed back into the
+/// queue. `out` is a scratch buffer owned by the driver and reused
+/// across dispatches — implementations must only `push` to it, never
+/// clear or drain it.
 ///
 /// `on_quiescent` fires once per timestamp after the batch at that time
 /// has fully drained — schedule follow-up work (e.g. a scheduling pass)
-/// there. Events it returns at the *same* timestamp form a new batch and
+/// there. Events it pushes at the *same* timestamp form a new batch and
 /// trigger another quiescent callback, so implementations must be
 /// idempotent at a fixed time (track a dirty flag).
 pub trait Component {
-    fn on_event(&mut self, now: f64, ev: &Event) -> Vec<ScheduledEvent>;
+    fn on_event(&mut self, now: f64, ev: &Event, out: &mut Vec<ScheduledEvent>);
 
-    fn on_quiescent(&mut self, _now: f64) -> Vec<ScheduledEvent> {
-        Vec::new()
-    }
+    fn on_quiescent(&mut self, _now: f64, _out: &mut Vec<ScheduledEvent>) {}
 }
 
 /// Monotone virtual clock, seconds.
@@ -247,7 +265,13 @@ impl Simulation {
     }
 
     /// Run to queue exhaustion. Returns the number of events dispatched.
+    ///
+    /// One scratch buffer is reused for every `on_event`/`on_quiescent`
+    /// dispatch: components push follow-up events into it and the loop
+    /// drains it into the queue, so steady-state dispatch allocates
+    /// nothing.
     pub fn run(&mut self, components: &mut [&mut dyn Component]) -> u64 {
+        let mut out: Vec<ScheduledEvent> = Vec::new();
         while let Some(t) = self.queue.next_time() {
             self.clock.advance_to(t);
             // Drain the batch: everything at exactly t, plus Ends within
@@ -264,13 +288,15 @@ impl Simulation {
                 let (_, ev) = self.queue.pop().expect("peeked");
                 self.events_processed += 1;
                 for c in components.iter_mut() {
-                    for se in c.on_event(t, &ev) {
+                    c.on_event(t, &ev, &mut out);
+                    for se in out.drain(..) {
                         self.queue.push(se.time, se.event);
                     }
                 }
             }
             for c in components.iter_mut() {
-                for se in c.on_quiescent(t) {
+                c.on_quiescent(t, &mut out);
+                for se in out.drain(..) {
                     debug_assert!(
                         se.time >= t,
                         "quiescent event in the past: {} < {t}",
@@ -302,14 +328,12 @@ mod tests {
     }
 
     impl Component for Probe {
-        fn on_event(&mut self, now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+        fn on_event(&mut self, now: f64, ev: &Event, _out: &mut Vec<ScheduledEvent>) {
             self.log.push((now, ev.clone()));
-            Vec::new()
         }
 
-        fn on_quiescent(&mut self, now: f64) -> Vec<ScheduledEvent> {
+        fn on_quiescent(&mut self, now: f64, _out: &mut Vec<ScheduledEvent>) {
             self.quiescents.push(now);
-            Vec::new()
         }
     }
 
@@ -321,7 +345,7 @@ mod tests {
         Event::End {
             job,
             booster: true,
-            cells: vec![(0, 1)],
+            cells: vec![(0, 1)].into(),
         }
     }
 
@@ -377,37 +401,34 @@ mod tests {
     }
 
     /// A component that reacts to a Submit by emitting a Start now and an
-    /// End later — the scheduler's shape.
+    /// End later — the scheduler's shape. The Start and End share one
+    /// placement `Arc`.
     struct Reactor {
         started: u32,
     }
 
     impl Component for Reactor {
-        fn on_event(&mut self, now: f64, ev: &Event) -> Vec<ScheduledEvent> {
-            match ev {
-                Event::Submit { job } => {
-                    self.started += 1;
-                    vec![
-                        ScheduledEvent::at(
-                            now,
-                            Event::Start {
-                                job: *job,
-                                booster: true,
-                                dvfs_scale: 1.0,
-                                cells: vec![(0, 4)],
-                            },
-                        ),
-                        ScheduledEvent::at(
-                            now + 10.0,
-                            Event::End {
-                                job: *job,
-                                booster: true,
-                                cells: vec![(0, 4)],
-                            },
-                        ),
-                    ]
-                }
-                _ => Vec::new(),
+        fn on_event(&mut self, now: f64, ev: &Event, out: &mut Vec<ScheduledEvent>) {
+            if let Event::Submit { job } = ev {
+                self.started += 1;
+                let cells: Cells = vec![(0, 4)].into();
+                out.push(ScheduledEvent::at(
+                    now,
+                    Event::Start {
+                        job: *job,
+                        booster: true,
+                        dvfs_scale: 1.0,
+                        cells: cells.clone(),
+                    },
+                ));
+                out.push(ScheduledEvent::at(
+                    now + 10.0,
+                    Event::End {
+                        job: *job,
+                        booster: true,
+                        cells,
+                    },
+                ));
             }
         }
     }
@@ -441,6 +462,37 @@ mod tests {
             .map(|(_, e)| e.nodes())
             .unwrap();
         assert_eq!(start_nodes, 4);
+    }
+
+    /// A job's Start and End events point at the same shared placement
+    /// allocation, not two copies.
+    #[test]
+    fn start_and_end_share_one_placement_arc() {
+        let mut sim = Simulation::new();
+        sim.schedule(0.0, submit(1));
+        let mut r = Reactor { started: 0 };
+        let mut p = Probe::default();
+        {
+            let mut comps: Vec<&mut dyn Component> = vec![&mut r, &mut p];
+            sim.run(&mut comps);
+        }
+        let start_cells = p
+            .log
+            .iter()
+            .find_map(|(_, e)| match e {
+                Event::Start { cells, .. } => Some(cells.clone()),
+                _ => None,
+            })
+            .unwrap();
+        let end_cells = p
+            .log
+            .iter()
+            .find_map(|(_, e)| match e {
+                Event::End { cells, .. } => Some(cells.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert!(Arc::ptr_eq(&start_cells, &end_cells), "placement copied");
     }
 
     #[test]

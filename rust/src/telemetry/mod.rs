@@ -242,15 +242,14 @@ impl EventCounter {
 }
 
 impl Component for EventCounter {
-    fn on_event(&mut self, now: f64, ev: &Event) -> Vec<ScheduledEvent> {
+    fn on_event(&mut self, now: f64, ev: &Event, _out: &mut Vec<ScheduledEvent>) {
         match ev {
             Event::Submit { .. } => self.submitted += 1,
             Event::Start { .. } => self.started += 1,
             Event::End { .. } => self.ended += 1,
-            Event::CapChange { .. } => return Vec::new(),
+            Event::CapChange { .. } => return,
         }
         self.sample(now);
-        Vec::new()
     }
 }
 
@@ -337,25 +336,28 @@ mod tests {
 
     #[test]
     fn event_counter_scrapes_lifecycle_gauges() {
+        let mut out = Vec::new();
         let mut c = EventCounter::default();
-        c.on_event(0.0, &Event::Submit { job: 1 });
-        c.on_event(0.0, &Event::Submit { job: 2 });
+        c.on_event(0.0, &Event::Submit { job: 1 }, &mut out);
+        c.on_event(0.0, &Event::Submit { job: 2 }, &mut out);
         c.on_event(
             0.0,
             &Event::Start {
                 job: 1,
                 booster: true,
                 dvfs_scale: 1.0,
-                cells: vec![(0, 8)],
+                cells: vec![(0, 8)].into(),
             },
+            &mut out,
         );
         c.on_event(
             5.0,
             &Event::End {
                 job: 1,
                 booster: true,
-                cells: vec![(0, 8)],
+                cells: vec![(0, 8)].into(),
             },
+            &mut out,
         );
         assert_eq!(c.totals(), (2, 1, 1));
         let depth = c.store.get("queue_depth").unwrap();
@@ -364,7 +366,8 @@ mod tests {
         assert_eq!(running.last().unwrap().value, 0.0);
         // Cap changes are not job lifecycle: no sample.
         let before = depth.len();
-        c.on_event(6.0, &Event::CapChange { cap_mw: None });
+        c.on_event(6.0, &Event::CapChange { cap_mw: None }, &mut out);
         assert_eq!(c.store.get("queue_depth").unwrap().len(), before);
+        assert!(out.is_empty(), "observer pushed no events");
     }
 }

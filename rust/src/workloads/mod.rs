@@ -256,6 +256,53 @@ impl TraceGen {
         }
     }
 
+    /// An AI-dominated burst day: training and inference own the
+    /// partition (a "model release week" load shape), HPC bread-and-
+    /// butter squeezed to the margins. The second mix axis of the
+    /// campaign sweep.
+    pub fn booster_ai_day(jobs: usize, seed: u64) -> Self {
+        TraceGen {
+            mix: vec![
+                (AppClass::HpcCapability, 0.02),
+                (AppClass::HpcCapacity, 0.18),
+                (AppClass::AiTraining, 0.45),
+                (AppClass::AiInference, 0.35),
+            ],
+            ..Self::booster_day(jobs, seed)
+        }
+    }
+
+    /// A classic HPC-dominated day: capability heroes plus capacity MPI
+    /// jobs, AI a trickle — the pre-AI-era LEONARDO load shape.
+    pub fn booster_hpc_day(jobs: usize, seed: u64) -> Self {
+        TraceGen {
+            mix: vec![
+                (AppClass::HpcCapability, 0.12),
+                (AppClass::HpcCapacity, 0.68),
+                (AppClass::AiTraining, 0.12),
+                (AppClass::AiInference, 0.08),
+            ],
+            ..Self::booster_day(jobs, seed)
+        }
+    }
+
+    /// Preset mixes by name — the mix axis of the campaign sweep grid
+    /// (`"day"` mixed HPC+AI, `"ai"` AI-burst, `"hpc"` HPC-classic).
+    /// `None` for an unknown name.
+    pub fn named(mix: &str, jobs: usize, seed: u64) -> Option<Self> {
+        match mix {
+            "day" => Some(Self::booster_day(jobs, seed)),
+            "ai" => Some(Self::booster_ai_day(jobs, seed)),
+            "hpc" => Some(Self::booster_hpc_day(jobs, seed)),
+            _ => None,
+        }
+    }
+
+    /// The preset mix names [`TraceGen::named`] accepts.
+    pub fn known_mixes() -> &'static [&'static str] {
+        &["day", "ai", "hpc"]
+    }
+
     fn pick_class(&self, rng: &mut Rng) -> AppClass {
         let total: f64 = self.mix.iter().map(|(_, w)| w).sum();
         let mut draw = rng.f64() * total;
@@ -434,5 +481,28 @@ mod tests {
         let a = TraceGen::booster_day(100, 1).generate();
         let b = TraceGen::booster_day(100, 2).generate();
         assert!(a.iter().zip(&b).any(|(x, y)| x.nodes != y.nodes));
+    }
+
+    #[test]
+    fn named_mixes_resolve_and_differ_in_shape() {
+        for name in TraceGen::known_mixes() {
+            let tg = TraceGen::named(name, 500, 3).expect("known mix");
+            assert_eq!(tg.jobs, 500);
+            assert_eq!(tg.seed, 3);
+            assert!(!tg.generate().is_empty());
+        }
+        assert!(TraceGen::named("bogus", 10, 0).is_none());
+        // The AI day is training/inference-heavy relative to the HPC day.
+        let ai = TraceGen::booster_ai_day(2000, 5).generate();
+        let hpc = TraceGen::booster_hpc_day(2000, 5).generate();
+        let big = |js: &[Job]| js.iter().filter(|j| j.nodes >= 64).count();
+        assert!(big(&hpc) > big(&ai), "hpc mix lost its capability mode");
+        let bound = |js: &[Job]| {
+            js.iter().map(|j| j.boundness).sum::<f64>() / js.len() as f64
+        };
+        assert!(
+            bound(&hpc) > bound(&ai),
+            "AI jobs should be less clock-bound on average"
+        );
     }
 }

@@ -70,18 +70,55 @@ fn event_engine_equals_rescan_on_random_streams() {
             })
             .collect();
         let ev = sched().run(jobs.clone());
+        let baseline = sched().run_event_baseline(jobs.clone());
         let legacy = sched().run_rescan(jobs);
         assert_identical(&ev, &legacy, &format!("seed {seed}"));
+        assert_identical(&ev, &baseline, &format!("seed {seed} (event baseline)"));
     }
 }
 
-/// Same equivalence on a realistic 1k-job mixed HPC+AI trace.
+/// Same equivalence on a realistic 1k-job mixed HPC+AI trace — the
+/// optimized hot path (cached placement order, settled-prefix scans,
+/// min-queued pruning) against both the PR 1 event engine and the seed
+/// loop.
 #[test]
 fn event_engine_equals_rescan_on_mixed_trace() {
     let jobs = TraceGen::booster_day(1000, 17).generate();
     let ev = sched().run(jobs.clone());
+    let baseline = sched().run_event_baseline(jobs.clone());
     let legacy = sched().run_rescan(jobs);
     assert_identical(&ev, &legacy, "mixed trace");
+    assert_identical(&ev, &baseline, "mixed trace (event baseline)");
+}
+
+/// The optimized placement path under a facility power cap stays
+/// bit-for-bit on the DVFS decisions too (the cap couples every start
+/// to the global busy-node count, so any skipped-or-reordered pass
+/// would show up here).
+#[test]
+fn optimized_path_equals_baseline_under_cap_on_mixed_trace() {
+    use leonardo_twin::scheduler::PowerCap;
+    let jobs = TraceGen::booster_day(800, 29).generate();
+    let cap = PowerCap {
+        cap_mw: 5.0,
+        node_watts: 2238.0,
+        idle_watts: 365.0,
+    };
+    let mut a = sched();
+    a.power_cap = Some(cap);
+    let ev = a.run(jobs.clone());
+    let mut b = sched();
+    b.power_cap = Some(cap);
+    let baseline = b.run_event_baseline(jobs.clone());
+    let mut c = sched();
+    c.power_cap = Some(cap);
+    let legacy = c.run_rescan(jobs);
+    for (id, r) in &ev {
+        assert_eq!(r.dvfs_scale, baseline[id].dvfs_scale, "job {id} scale (base)");
+        assert_eq!(r.dvfs_scale, legacy[id].dvfs_scale, "job {id} scale (legacy)");
+    }
+    assert_identical(&ev, &baseline, "capped trace (event baseline)");
+    assert_identical(&ev, &legacy, "capped trace (legacy)");
 }
 
 /// EASY backfill must never delay the queue head: injecting a stream of
