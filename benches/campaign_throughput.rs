@@ -1,0 +1,94 @@
+//! Campaign sweep throughput: scenarios/sec on the coupled 24-scenario
+//! acceptance grid (4 seeds x 3 caps x 2 mixes), fanned across all
+//! available cores.
+//!
+//! This is the perf trajectory of the *campaign* layer — the scheduler
+//! bench (`BENCH_scheduler.json`) tracks the per-event hot path, this
+//! one tracks the end-to-end scenario engine with runtime coupling on
+//! (provisional-End retiming, congestion + cap feedback), which is the
+//! configuration operators actually sweep. Results are written to
+//! `BENCH_campaign.json`.
+//!
+//! `cargo bench --bench campaign_throughput -- --smoke` shrinks the
+//! per-scenario day and runs one rep — the CI smoke that both gates the
+//! coupled sweep end-to-end and emits the JSON artifact.
+
+use std::time::Instant;
+
+use leonardo_twin::campaign::{run_sweep, SweepGrid};
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::scheduler::Coupling;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let jobs = if smoke { 200 } else { 1_000 };
+    let reps = if smoke { 1 } else { 3 };
+    let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+
+    let twin = Twin::leonardo();
+    let grid = SweepGrid::new(
+        vec![1, 2, 3, 4],
+        vec![None, Some(7.5), Some(6.0)],
+        vec!["day".into(), "ai".into()],
+        jobs,
+    )
+    .expect("static grid")
+    .with_coupling(Coupling::full());
+    assert_eq!(grid.len(), 24, "the acceptance grid is 24 scenarios");
+
+    let mut best = f64::INFINITY;
+    let mut report = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = run_sweep(&twin, &grid, threads);
+        best = best.min(t0.elapsed().as_secs_f64());
+        report = Some(r);
+    }
+    let report = report.expect("at least one rep");
+
+    // The coupled sweep must be a real sweep: every scenario completed,
+    // capped scenarios throttled, and the coupled stretch shows up.
+    assert_eq!(report.stats.len(), 24);
+    assert!(report.stats.iter().all(|s| s.jobs == jobs));
+    let throttled: usize = report
+        .stats
+        .iter()
+        .filter(|s| s.cap_mw.is_some())
+        .map(|s| s.throttled)
+        .sum();
+    assert!(throttled > 0, "capped scenarios did not throttle");
+    let max_stretch = report
+        .stats
+        .iter()
+        .map(|s| s.p95_stretch)
+        .fold(0.0f64, f64::max);
+    assert!(max_stretch > 1.0, "coupling produced no stretch");
+
+    let scenarios_per_s = 24.0 / best;
+    let jobs_per_s = (24 * jobs) as f64 / best;
+    println!(
+        "campaign sweep: 24 coupled scenarios x {jobs} jobs on {threads} threads \
+         in {best:.2} s = {scenarios_per_s:.2} scenarios/s ({jobs_per_s:.0} jobs/s)"
+    );
+    println!("max p95 stretch across the grid: {max_stretch:.3}x nominal");
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"campaign_throughput\",\n",
+            "  \"grid\": \"4 seeds x 3 caps x 2 mixes (coupled)\",\n",
+            "  \"smoke\": {},\n",
+            "  \"jobs_per_scenario\": {},\n",
+            "  \"threads\": {},\n",
+            "  \"seconds\": {:.3},\n",
+            "  \"scenarios_per_s\": {:.3},\n",
+            "  \"jobs_per_s\": {:.1}\n",
+            "}}\n"
+        ),
+        smoke, jobs, threads, best, scenarios_per_s, jobs_per_s
+    );
+    match std::fs::write("BENCH_campaign.json", &json) {
+        Ok(()) => println!("wrote BENCH_campaign.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_campaign.json: {e}"),
+    }
+}

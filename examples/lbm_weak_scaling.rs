@@ -89,6 +89,7 @@ fn main() -> anyhow::Result<()> {
                 run_seconds: wall,
                 submit_time: 0.0,
                 boundness: 0.3,
+                comm_fraction: 0.15,
             }]);
             assert_eq!(rec.len(), 1);
         }

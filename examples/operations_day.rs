@@ -66,6 +66,7 @@ fn main() {
             run_seconds: rng.range_f64(300.0, 7200.0),
             submit_time: rng.range_f64(0.0, 14_400.0), // over four hours
             boundness: rng.f64(),
+            comm_fraction: rng.f64() * 0.4,
         };
         if round.admit(project, &job) {
             owners.push((i, project));

@@ -76,12 +76,7 @@ pub fn run_round(proposals: Vec<Proposal>, capacity_nh: f64) -> AllocationRound 
             .iter()
             .filter(|p| p.call == kind && p.score() > 0.0)
             .collect();
-        pool.sort_by(|a, b| {
-            b.score()
-                .partial_cmp(&a.score())
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        pool.sort_by(|a, b| b.score().total_cmp(&a.score()).then(a.id.cmp(&b.id)));
         let mut left = capacity_nh * share;
         for p in pool {
             if left <= 0.0 {
@@ -174,6 +169,7 @@ mod tests {
             run_seconds: secs,
             submit_time: 0.0,
             boundness: 1.0,
+            comm_fraction: 0.0,
         }
     }
 
@@ -222,6 +218,7 @@ mod tests {
                 nodes_per_cell: vec![(0, 50)],
             },
             dvfs_scale: 1.0,
+            min_dvfs_scale: 1.0,
         };
         round.charge(1, &j, &record);
         assert!((round.projects[&1].used_nh - 50.0).abs() < 1e-9);

@@ -20,6 +20,14 @@
 //! The per-scenario replay runs on the scheduler's allocation-free hot
 //! path (see `rust/src/scheduler`), which is what makes thousand-
 //! scenario campaigns tractable.
+//!
+//! A [`SweepGrid::with_coupling`] grid replays every scenario with
+//! runtime coupling on: job end times become provisional and re-time
+//! under fabric contention and cap moves, the report gains runtime-
+//! stretch percentiles, and the cap-sensitivity curve turns into a real
+//! time/energy trade-off. Coupling changes nothing about the engine's
+//! determinism, so coupled reports are still bit-for-bit identical for
+//! any worker-thread count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -31,18 +39,19 @@ use crate::coordinator::Twin;
 use crate::metrics::{f1, f2, Table};
 use crate::network::CongestionTracker;
 use crate::power::{PowerMonitor, Utilization};
-use crate::scheduler::{Job, JobRecord, Partition, PowerCap, Scheduler};
+use crate::scheduler::{Coupling, Job, JobRecord, Partition, PowerCap, Scheduler};
 use crate::sim::Component;
 use crate::workloads::TraceGen;
 use crate::Result;
 
 /// One cell of the scenario grid: a trace (mix + seed) under an
-/// optional facility power cap.
+/// optional facility power cap, with or without runtime coupling.
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub mix: String,
     pub seed: u64,
     pub cap_mw: Option<f64>,
+    pub coupling: Coupling,
     pub trace: TraceGen,
 }
 
@@ -68,6 +77,9 @@ pub struct SweepGrid {
     pub mixes: Vec<String>,
     /// Jobs per scenario trace.
     pub jobs: usize,
+    /// Runtime coupling applied to every scenario (default off — the
+    /// replay is then bit-for-bit the uncoupled oracle engines).
+    pub coupling: Coupling,
 }
 
 impl SweepGrid {
@@ -105,7 +117,14 @@ impl SweepGrid {
             caps,
             mixes,
             jobs,
+            coupling: Coupling::default(),
         })
+    }
+
+    /// Same grid with runtime coupling applied to every scenario.
+    pub fn with_coupling(mut self, coupling: Coupling) -> Self {
+        self.coupling = coupling;
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -130,6 +149,7 @@ impl SweepGrid {
                         mix: mix.clone(),
                         seed,
                         cap_mw,
+                        coupling: self.coupling,
                         trace,
                     });
                 }
@@ -161,6 +181,12 @@ pub struct ScenarioStats {
     pub throttled: usize,
     /// Highest mean global-link load observed.
     pub peak_congestion: f64,
+    /// Mean runtime stretch (actual / nominal runtime; 1.0 = no
+    /// slowdown). Above 1 only when DVFS capping or runtime coupling
+    /// extended jobs.
+    pub mean_stretch: f64,
+    /// 95th-percentile runtime stretch.
+    pub p95_stretch: f64,
 }
 
 /// Index-percentile over an ascending-sorted slice (the same
@@ -188,9 +214,20 @@ impl ScenarioStats {
         assert!(!jobs.is_empty(), "stats over an empty replay");
         let makespan = records.values().fold(0.0f64, |m, r| m.max(r.end_time));
         let mut waits: Vec<f64> = jobs.iter().map(|j| records[&j.id].wait(j)).collect();
-        waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        waits.sort_by(f64::total_cmp);
         let mean_wait = waits.iter().sum::<f64>() / waits.len() as f64;
-        let throttled = records.values().filter(|r| r.dvfs_scale < 1.0).count();
+        // "Ever ran below nominal", not "finished below nominal" — a
+        // coupled job relieved by a mid-day cap lift still counts.
+        let throttled = records.values().filter(|r| r.min_dvfs_scale < 1.0).count();
+        let mut stretches: Vec<f64> = jobs
+            .iter()
+            .map(|j| {
+                let r = &records[&j.id];
+                (r.end_time - r.start_time) / j.run_seconds.max(1e-9)
+            })
+            .collect();
+        stretches.sort_by(f64::total_cmp);
+        let mean_stretch = stretches.iter().sum::<f64>() / stretches.len() as f64;
         let node_seconds: f64 = jobs
             .iter()
             .map(|j| {
@@ -214,6 +251,8 @@ impl ScenarioStats {
             energy_mwh: monitor.energy_kwh() / 1e3,
             throttled,
             peak_congestion: congestion.peak_load(),
+            mean_stretch,
+            p95_stretch: percentile(&stretches, 0.95),
         }
     }
 }
@@ -230,8 +269,19 @@ pub struct ReplayRig {
 }
 
 impl ReplayRig {
-    pub fn new(twin: &Twin, partition: Partition, cap_mw: Option<f64>) -> Self {
+    pub fn new(
+        twin: &Twin,
+        partition: Partition,
+        cap_mw: Option<f64>,
+        coupling: Coupling,
+    ) -> Self {
         let mut sched = Scheduler::new(&twin.cfg);
+        sched.coupling = coupling;
+        if coupling.congestion {
+            // The coupled engine derives comm slowdowns from the twin's
+            // network model (routing policy included).
+            sched.net = Some(twin.net.clone());
+        }
         if let Some(mw) = cap_mw {
             sched.power_cap = Some(PowerCap::for_model(&twin.power, mw));
         }
@@ -258,7 +308,7 @@ impl ReplayRig {
 pub fn run_scenario(twin: &Twin, sc: &Scenario) -> ScenarioStats {
     let jobs = sc.trace.generate();
     assert!(!jobs.is_empty(), "empty scenario trace");
-    let mut rig = ReplayRig::new(twin, sc.trace.partition, sc.cap_mw);
+    let mut rig = ReplayRig::new(twin, sc.trace.partition, sc.cap_mw, sc.coupling);
     let records = {
         let mut observers: [&mut dyn Component; 2] =
             [&mut rig.monitor, &mut rig.congestion];
@@ -296,6 +346,7 @@ impl CampaignReport {
                 "Peak [MW]",
                 "Energy [MWh]",
                 "Throttled",
+                "p95 stretch",
             ],
         );
         for s in &self.stats {
@@ -311,6 +362,7 @@ impl CampaignReport {
                 f2(s.peak_mw),
                 f2(s.energy_mwh),
                 s.throttled.to_string(),
+                f2(s.p95_stretch),
             ]);
         }
         t
@@ -327,7 +379,7 @@ impl CampaignReport {
         );
         let mut metric = |name: &str, unit: &str, pick: &dyn Fn(&ScenarioStats) -> f64| {
             let mut vals: Vec<f64> = self.stats.iter().map(pick).collect();
-            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.sort_by(f64::total_cmp);
             t.row(vec![
                 name.to_string(),
                 f2(percentile(&vals, 0.0)),
@@ -343,6 +395,8 @@ impl CampaignReport {
         metric("facility energy", "MWh", &|s| s.energy_mwh);
         metric("peak facility power", "MW", &|s| s.peak_mw);
         metric("peak congestion", "link load", &|s| s.peak_congestion);
+        metric("mean stretch", "x nominal", &|s| s.mean_stretch);
+        metric("p95 stretch", "x nominal", &|s| s.p95_stretch);
         t
     }
 
@@ -359,6 +413,7 @@ impl CampaignReport {
                 "Util",
                 "Energy [MWh]",
                 "Throttled jobs",
+                "Mean stretch",
             ],
         );
         let mut caps: Vec<Option<f64>> = Vec::new();
@@ -382,9 +437,80 @@ impl CampaignReport {
                 f2(mean(&|s| s.utilization)),
                 f2(mean(&|s| s.energy_mwh)),
                 group.iter().map(|s| s.throttled).sum::<usize>().to_string(),
+                f2(mean(&|s| s.mean_stretch)),
             ]);
         }
         t
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI boundary: `sweep`/`operations` flag parsing. Malformed input must
+// come back as an `anyhow` error the CLI can print (exit 2), never a
+// panic inside a worker.
+// ---------------------------------------------------------------------
+
+/// Parse a `--caps` list: comma-separated MW levels, with
+/// `none`/`off`/`uncapped` lifting the cap for that grid level.
+pub fn parse_caps(list: &str) -> Result<Vec<Option<f64>>> {
+    let caps: Vec<Option<f64>> = list
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| match s.to_ascii_lowercase().as_str() {
+            "none" | "off" | "uncapped" => Ok(None),
+            _ => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|e| anyhow!("--caps '{s}': {e}")),
+        })
+        .collect::<Result<_>>()?;
+    ensure!(!caps.is_empty(), "--caps needs at least one level");
+    // Non-finite or non-positive levels are rejected again by
+    // `SweepGrid::new`; catching them here gives the flag-shaped error.
+    for cap in caps.iter().flatten() {
+        ensure!(
+            cap.is_finite() && *cap > 0.0,
+            "--caps level {cap} MW must be finite and positive"
+        );
+    }
+    Ok(caps)
+}
+
+/// Parse a `--mixes` list: comma-separated [`TraceGen::named`] names.
+pub fn parse_mixes(list: &str) -> Result<Vec<String>> {
+    let mixes: Vec<String> = list
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    ensure!(!mixes.is_empty(), "--mixes needs at least one mix");
+    for mix in &mixes {
+        ensure!(
+            TraceGen::named(mix, 1, 0).is_some(),
+            "--mixes: unknown mix '{mix}' (known: {})",
+            TraceGen::known_mixes().join(", ")
+        );
+    }
+    Ok(mixes)
+}
+
+/// Resolve a `--threads` flag: `None` means all available cores, and an
+/// explicit 0 is an error rather than a silent clamp.
+pub fn parse_threads(threads: Option<usize>) -> Result<usize> {
+    match threads {
+        Some(0) => Err(anyhow!("--threads 0: need at least one worker thread")),
+        Some(t) => Ok(t),
+        None => Ok(std::thread::available_parallelism().map_or(1, |n| n.get())),
+    }
+}
+
+/// Parse a `--routing` flag into a [`crate::topology::Routing`] policy.
+pub fn parse_routing(name: &str) -> Result<crate::topology::Routing> {
+    match name.to_ascii_lowercase().as_str() {
+        "minimal" => Ok(crate::topology::Routing::Minimal),
+        "valiant" => Ok(crate::topology::Routing::Valiant),
+        other => Err(anyhow!("--routing '{other}': expected minimal or valiant")),
     }
 }
 
@@ -537,6 +663,62 @@ mod tests {
         let caps = report.cap_table();
         assert_eq!(caps.rows.len(), 2);
         let summary = report.summary_table();
-        assert_eq!(summary.rows.len(), 6);
+        assert_eq!(summary.rows.len(), 8);
+        // Sub-idle-floor capping forces every job onto the 0.5 DVFS
+        // floor: clock-bound work stretches, and the stretch percentiles
+        // surface it.
+        let capped_stretch = report
+            .stats
+            .iter()
+            .filter(|s| s.cap_mw.is_some())
+            .map(|s| s.mean_stretch)
+            .fold(0.0f64, f64::max);
+        assert!(capped_stretch > 1.0, "{capped_stretch}");
+    }
+
+    #[test]
+    fn coupled_grid_propagates_to_scenarios_and_changes_outcomes() {
+        let twin = Twin::leonardo();
+        // The hpc mix's capability heroes (128-256 nodes) span cells, so
+        // a day this size reliably contains comm-bound multi-cell jobs.
+        let grid = SweepGrid::new(vec![3], vec![None], vec!["hpc".into()], 800)
+            .unwrap()
+            .with_coupling(Coupling::full());
+        assert!(grid.scenarios().iter().all(|s| s.coupling == Coupling::full()));
+        let coupled = run_sweep(&twin, &grid, 2);
+        let mut plain_grid = grid.clone();
+        plain_grid.coupling = Coupling::default();
+        let plain = run_sweep(&twin, &plain_grid, 2);
+        // Uncoupled days never stretch without a cap; coupled days do
+        // (comm-bound multi-cell capability jobs).
+        assert!(plain.stats[0].mean_stretch <= 1.0 + 1e-9);
+        assert!(
+            coupled.stats[0].mean_stretch > plain.stats[0].mean_stretch,
+            "{} vs {}",
+            coupled.stats[0].mean_stretch,
+            plain.stats[0].mean_stretch
+        );
+    }
+
+    #[test]
+    fn cli_parsers_reject_malformed_input() {
+        // Caps: floats with none/off/uncapped sentinels.
+        assert_eq!(parse_caps("none,7.5").unwrap(), vec![None, Some(7.5)]);
+        assert!(parse_caps("7.5,oops").is_err());
+        assert!(parse_caps("").is_err());
+        assert!(parse_caps("-3.0").is_err());
+        assert!(parse_caps("nan").is_err());
+        // Mixes: validated against TraceGen's registry.
+        assert_eq!(parse_mixes(" day , ai ").unwrap(), vec!["day", "ai"]);
+        assert!(parse_mixes("day,bogus").is_err());
+        assert!(parse_mixes(",").is_err());
+        // Threads: 0 is an error, None resolves to the core count.
+        assert!(parse_threads(Some(0)).is_err());
+        assert_eq!(parse_threads(Some(3)).unwrap(), 3);
+        assert!(parse_threads(None).unwrap() >= 1);
+        // Routing policies.
+        assert!(matches!(parse_routing("valiant"), Ok(crate::topology::Routing::Valiant)));
+        assert!(matches!(parse_routing("MINIMAL"), Ok(crate::topology::Routing::Minimal)));
+        assert!(parse_routing("adaptive").is_err());
     }
 }

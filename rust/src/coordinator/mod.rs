@@ -459,13 +459,25 @@ impl Twin {
         trace: &TraceGen,
         cap_mw: Option<f64>,
     ) -> Result<OpsReport> {
+        self.operations_replay_with(trace, cap_mw, crate::scheduler::Coupling::default())
+    }
+
+    /// [`Twin::operations_replay`] with runtime coupling: job end times
+    /// become provisional and re-time under fabric contention and cap
+    /// moves (CLI: `operations --coupled`).
+    pub fn operations_replay_with(
+        &self,
+        trace: &TraceGen,
+        cap_mw: Option<f64>,
+        coupling: crate::scheduler::Coupling,
+    ) -> Result<OpsReport> {
         let jobs = trace.generate();
         anyhow::ensure!(!jobs.is_empty(), "empty trace");
 
         // Shared replay wiring + arithmetic: the same rig and the same
         // stats code path the campaign sweep uses, so `operations` and
         // `sweep` can never model or report differently.
-        let mut rig = crate::campaign::ReplayRig::new(self, trace.partition, cap_mw);
+        let mut rig = crate::campaign::ReplayRig::new(self, trace.partition, cap_mw, coupling);
         let mut counter = EventCounter::default();
         let records = {
             let mut observers: [&mut dyn Component; 3] =
@@ -501,6 +513,18 @@ impl Twin {
             "peak fabric congestion",
             f2(stats.peak_congestion),
             "global-link load",
+        );
+        row(
+            &mut summary,
+            "mean runtime stretch",
+            f2(stats.mean_stretch),
+            "x nominal",
+        );
+        row(
+            &mut summary,
+            "p95 runtime stretch",
+            f2(stats.p95_stretch),
+            "x nominal",
         );
         let (submitted, started, ended) = counter.totals();
         row(
@@ -771,6 +795,27 @@ mod tests {
         let util = r.store.get("utilization").unwrap();
         assert!(util.max() <= 1.0 + 1e-9);
         assert!(r.summary.rows.len() >= 10);
+    }
+
+    #[test]
+    fn coupled_operations_replay_runs_and_differs() {
+        let twin = Twin::leonardo();
+        // hpc mix: capability heroes span cells, so coupling has comm-
+        // bound multi-cell jobs to stretch.
+        let trace = crate::workloads::TraceGen::booster_hpc_day(600, 11);
+        let plain = twin.operations_replay(&trace, None).unwrap();
+        let coupled = twin
+            .operations_replay_with(&trace, None, crate::scheduler::Coupling::full())
+            .unwrap();
+        assert_eq!(coupled.records.len(), 600);
+        // At least one job's completion moved under coupling.
+        let moved = coupled
+            .records
+            .iter()
+            .filter(|(id, r)| r.end_time != plain.records[id].end_time)
+            .count();
+        assert!(moved > 0, "coupling changed no completion");
+        assert!(coupled.summary.rows.len() >= 12);
     }
 
     #[test]

@@ -13,10 +13,11 @@
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
-use leonardo_twin::campaign::SweepGrid;
+use leonardo_twin::campaign::{parse_caps, parse_mixes, parse_routing, parse_threads, SweepGrid};
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::metrics::Table;
 use leonardo_twin::runtime::Engine;
+use leonardo_twin::scheduler::Coupling;
 use leonardo_twin::topology::Routing;
 use leonardo_twin::workloads::TraceGen;
 
@@ -39,12 +40,13 @@ COMMANDS:
   overview    Architecture + blade summary            (Fig 1/3)
   operations  Replay a mixed HPC+AI day on the Booster partition
               through the event-driven scheduler      [--jobs N] [--seed S] [--cap MW]
+                                                      [--coupled] [--routing P]
   sweep       Multi-threaded scenario-sweep campaign: replay a
               seeds x power-caps x mixes grid of operational days and
               merge the outcomes (per-scenario, cap-sensitivity and
               aggregate-percentile tables — identical for any thread
               count)   [--jobs N] [--seed S] [--seeds K] [--caps LIST]
-                       [--mixes LIST] [--threads T]
+                       [--mixes LIST] [--threads T] [--coupled] [--routing P]
   calibrate   Measure the AOT kernels through PJRT
   all         Every table in paper order              [--calibrated]
 
@@ -62,6 +64,14 @@ OPTIONS:
   --mixes LIST      sweep: comma-separated TraceGen mixes: day, ai, hpc
                     (default day,ai)
   --threads T       sweep: worker threads (default: available cores)
+  --coupled         operations/sweep: runtime coupling on — running jobs'
+                    provisional end times re-time under fabric contention
+                    and cap moves (default: off, end times frozen at Start)
+  --routing P       operations/sweep: fabric routing policy, minimal or
+                    valiant (default minimal; valiant is the adaptive-
+                    routing worst case — detours halve global supply;
+                    requires --coupled, the uncoupled replay never
+                    consults the network model)
 ";
 
 struct Args {
@@ -77,6 +87,8 @@ struct Args {
     caps: String,
     mixes: String,
     threads: Option<usize>,
+    coupled: bool,
+    routing: String,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -95,12 +107,16 @@ fn parse_args() -> Result<Args, String> {
         caps: "none,7.5,6.5".to_string(),
         mixes: "day,ai".to_string(),
         threads: None,
+        coupled: false,
+        routing: "minimal".to_string(),
     };
     while let Some(a) = argv.next() {
         match a.as_str() {
             "--markdown" => args.markdown = true,
             "--calibrated" => args.calibrated = true,
             "--dot" => args.dot = true,
+            "--coupled" => args.coupled = true,
+            "--routing" => args.routing = argv.next().ok_or("--routing needs a value")?,
             "--artifacts" => {
                 args.artifacts = Some(argv.next().ok_or("--artifacts needs a value")?)
             }
@@ -151,20 +167,47 @@ fn parse_args() -> Result<Args, String> {
     Ok(args)
 }
 
-/// Parse the sweep's `--caps` list: MW floats, with `none`/`off`/
-/// `uncapped` lifting the cap for that grid level.
-fn parse_caps(list: &str) -> Result<Vec<Option<f64>>, String> {
-    list.split(',')
-        .map(|s| s.trim())
-        .filter(|s| !s.is_empty())
-        .map(|s| match s.to_ascii_lowercase().as_str() {
-            "none" | "off" | "uncapped" => Ok(None),
-            _ => s
-                .parse::<f64>()
-                .map(Some)
-                .map_err(|e| format!("--caps '{s}': {e}")),
-        })
-        .collect()
+/// Resolve the `--routing`/`--coupled` flags shared by `operations` and
+/// `sweep`, enforcing that a non-minimal routing policy has coupling to
+/// act on (the uncoupled replay freezes end times at `Start` and never
+/// consults the network model, so the policy would silently change
+/// nothing).
+fn routing_and_coupling(args: &Args) -> anyhow::Result<(Routing, Coupling)> {
+    let routing = parse_routing(&args.routing)?;
+    let coupling = if args.coupled {
+        Coupling::full()
+    } else {
+        Coupling::default()
+    };
+    anyhow::ensure!(
+        routing == Routing::Minimal || coupling.enabled(),
+        "--routing valiant requires --coupled: the uncoupled replay freezes \
+         end times at Start and never consults the network model, so the \
+         routing policy would silently change nothing"
+    );
+    Ok((routing, coupling))
+}
+
+/// Validate and assemble every `sweep` input (grid, worker threads,
+/// routing policy, coupling) from the raw flags. Malformed input —
+/// unparsable `--caps`, an unknown mix, `--threads 0`, a bogus
+/// `--routing` — comes back as an `anyhow` error for the CLI to print,
+/// never a panic inside a worker.
+fn sweep_inputs(args: &Args) -> anyhow::Result<(SweepGrid, usize, Routing, Coupling)> {
+    anyhow::ensure!(
+        args.cap_mw.is_none(),
+        "sweep sweeps a grid of cap levels: use --caps LIST (e.g. --caps none,6.0), \
+         not the operations flag --cap"
+    );
+    let caps = parse_caps(&args.caps)?;
+    let mixes = parse_mixes(&args.mixes)?;
+    let threads = parse_threads(args.threads)?;
+    let (routing, coupling) = routing_and_coupling(args)?;
+    anyhow::ensure!(args.seeds > 0, "--seeds must be at least 1");
+    let seeds: Vec<u64> = (0..args.seeds).map(|k| args.seed + k).collect();
+    let grid = SweepGrid::new(seeds, caps, mixes, args.jobs.unwrap_or(2_000))?
+        .with_coupling(coupling);
+    Ok((grid, threads, routing, coupling))
 }
 
 fn print(t: &Table, markdown: bool) {
@@ -201,7 +244,7 @@ fn main() -> anyhow::Result<()> {
             std::process::exit(2);
         }
     };
-    let twin = Twin::leonardo();
+    let mut twin = Twin::leonardo();
     let md = args.markdown;
     match args.cmd.as_str() {
         "table1" => print(&twin.table1(), md),
@@ -228,51 +271,43 @@ fn main() -> anyhow::Result<()> {
         }
         "overview" => overview(&twin),
         "operations" => {
-            let trace = TraceGen::booster_day(args.jobs.unwrap_or(10_000), args.seed);
-            let report = twin.operations_replay(&trace, args.cap_mw)?;
-            print(&report.summary, md);
-            print(&report.power, md);
-        }
-        "sweep" => {
-            if args.cap_mw.is_some() {
-                eprintln!(
-                    "sweep sweeps a grid of cap levels: use --caps LIST (e.g. \
-                     --caps none,6.0), not the operations flag --cap"
-                );
-                std::process::exit(2);
-            }
-            let caps = match parse_caps(&args.caps) {
-                Ok(c) => c,
-                Err(msg) => {
-                    eprintln!("{msg}");
-                    std::process::exit(2);
-                }
-            };
-            let seeds: Vec<u64> = (0..args.seeds).map(|k| args.seed + k).collect();
-            let mixes: Vec<String> = args
-                .mixes
-                .split(',')
-                .map(|s| s.trim().to_string())
-                .filter(|s| !s.is_empty())
-                .collect();
-            let grid = match SweepGrid::new(seeds, caps, mixes, args.jobs.unwrap_or(2_000)) {
-                Ok(g) => g,
+            let (routing, coupling) = match routing_and_coupling(&args) {
+                Ok(v) => v,
                 Err(e) => {
                     eprintln!("{e}");
                     std::process::exit(2);
                 }
             };
-            let threads = args.threads.unwrap_or_else(|| {
-                std::thread::available_parallelism().map_or(1, |n| n.get())
-            });
+            twin.net.routing = routing;
+            let trace = TraceGen::booster_day(args.jobs.unwrap_or(10_000), args.seed);
+            let report = twin.operations_replay_with(&trace, args.cap_mw, coupling)?;
+            print(&report.summary, md);
+            print(&report.power, md);
+        }
+        "sweep" => {
+            let (grid, threads, routing, coupling) = match sweep_inputs(&args) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            };
+            twin.net.routing = routing;
             eprintln!(
-                "sweep: {} scenarios ({} seeds x {} caps x {} mixes, {} jobs each) on {} threads",
+                "sweep: {} scenarios ({} seeds x {} caps x {} mixes, {} jobs each) \
+                 on {} threads{}{}",
                 grid.len(),
                 grid.seeds.len(),
                 grid.caps.len(),
                 grid.mixes.len(),
                 grid.jobs,
-                threads
+                threads,
+                if coupling.enabled() { ", coupled" } else { "" },
+                if routing == Routing::Valiant {
+                    ", valiant routing"
+                } else {
+                    ""
+                },
             );
             let report = twin.sweep(&grid, threads);
             print(&report.scenario_table(), md);
@@ -354,6 +389,105 @@ fn topology_dot(twin: &Twin) -> String {
     }
     out.push_str("}\n");
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        Args {
+            cmd: "sweep".into(),
+            markdown: false,
+            calibrated: false,
+            dot: false,
+            artifacts: None,
+            jobs: None,
+            seed: 2023,
+            cap_mw: None,
+            seeds: 4,
+            caps: "none,7.5,6.5".to_string(),
+            mixes: "day,ai".to_string(),
+            threads: None,
+            coupled: false,
+            routing: "minimal".to_string(),
+        }
+    }
+
+    /// Malformed sweep flags come back as anyhow errors (the CLI prints
+    /// them and exits 2), never as panics.
+    #[test]
+    fn sweep_inputs_validates_flags() {
+        let (grid, threads, routing, coupling) = sweep_inputs(&args()).unwrap();
+        assert_eq!(grid.len(), 4 * 3 * 2);
+        assert!(threads >= 1);
+        assert_eq!(routing, Routing::Minimal);
+        assert!(!coupling.enabled());
+
+        let mut a = args();
+        a.caps = "7.5,oops".into();
+        assert!(sweep_inputs(&a).is_err(), "malformed cap accepted");
+
+        let mut a = args();
+        a.caps = "-1.0".into();
+        assert!(sweep_inputs(&a).is_err(), "negative cap accepted");
+
+        let mut a = args();
+        a.mixes = "day,bogus".into();
+        let err = sweep_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("unknown mix"), "{err}");
+
+        let mut a = args();
+        a.threads = Some(0);
+        assert!(sweep_inputs(&a).is_err(), "--threads 0 accepted");
+
+        let mut a = args();
+        a.routing = "adaptive".into();
+        assert!(sweep_inputs(&a).is_err(), "unknown routing accepted");
+
+        // Valiant without coupling would silently change nothing: error.
+        let mut a = args();
+        a.routing = "valiant".into();
+        let err = sweep_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("requires --coupled"), "{err}");
+
+        let mut a = args();
+        a.seeds = 0;
+        assert!(sweep_inputs(&a).is_err(), "--seeds 0 accepted");
+
+        let mut a = args();
+        a.cap_mw = Some(6.0);
+        assert!(sweep_inputs(&a).is_err(), "--cap accepted by sweep");
+    }
+
+    /// The shared operations/sweep flag resolution enforces the
+    /// valiant-needs-coupling rule in one place.
+    #[test]
+    fn routing_and_coupling_shared_rule() {
+        let mut a = args();
+        a.routing = "valiant".into();
+        assert!(routing_and_coupling(&a).is_err(), "valiant without coupling");
+        a.coupled = true;
+        let (routing, coupling) = routing_and_coupling(&a).unwrap();
+        assert_eq!(routing, Routing::Valiant);
+        assert_eq!(coupling, Coupling::full());
+        let (routing, coupling) = routing_and_coupling(&args()).unwrap();
+        assert_eq!(routing, Routing::Minimal);
+        assert!(!coupling.enabled());
+    }
+
+    #[test]
+    fn sweep_inputs_wires_coupling_and_valiant() {
+        let mut a = args();
+        a.coupled = true;
+        a.routing = "valiant".into();
+        a.jobs = Some(10);
+        let (grid, _, routing, coupling) = sweep_inputs(&a).unwrap();
+        assert_eq!(routing, Routing::Valiant);
+        assert_eq!(coupling, Coupling::full());
+        assert_eq!(grid.coupling, Coupling::full());
+        assert_eq!(grid.jobs, 10);
+    }
 }
 
 fn overview(twin: &Twin) {

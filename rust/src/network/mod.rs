@@ -184,21 +184,40 @@ impl Network {
     /// full rate. `oversubscription` models fat-tree-style pruning above
     /// the leaf level (1.0 on LEONARDO's dragonfly+).
     pub fn effective_node_bw(&self, placement: &Placement) -> f64 {
+        self.node_bw_for_cells(
+            &placement.nodes_per_cell,
+            self.placement_background(placement),
+        )
+    }
+
+    /// Core of [`Network::effective_node_bw`] over a raw cell list, with
+    /// the per-cell background load supplied by the caller instead of
+    /// read from [`Network::cell_background`] — the entry point the
+    /// scheduler's congestion coupling uses (its engine tracks cross
+    /// loads itself, self-excluded per job).
+    ///
+    /// Valiant routing detours every global flow through an intermediate
+    /// cell, doubling the load its traffic puts on the global links —
+    /// the adaptive-routing worst case of §2.2.
+    pub fn node_bw_for_cells(&self, cells: &[(u32, u32)], cell_background: f64) -> f64 {
         let inj = self.injection_gbs();
-        let k = placement.cells_used();
-        if k <= 1 || placement.total_nodes() <= 1 {
+        let k = cells.iter().filter(|(_, n)| *n > 0).count();
+        let total_nodes: u32 = cells.iter().map(|(_, n)| n).sum();
+        if k <= 1 || total_nodes <= 1 {
             return inj;
         }
-        let total = placement.total_nodes() as f64;
+        let total = total_nodes as f64;
         let avg_cell = total / k as f64;
         let cross_fraction = (1.0 / avg_cell.cbrt()).min(1.0);
-        let background = (self.background_global_load
-            + self.placement_background(placement))
-        .clamp(0.0, 0.95);
+        let background = (self.background_global_load + cell_background).clamp(0.0, 0.95);
+        let route_factor = match self.routing {
+            Routing::Minimal => 1.0,
+            Routing::Valiant => 2.0,
+        };
         let global_gbs =
             self.topo.cell_pair_bw_gbps() / 8.0 * WIRE_EFFICIENCY * (1.0 - background);
         let supply_per_node =
-            global_gbs * (k as f64 - 1.0) / total / self.oversubscription;
+            global_gbs * (k as f64 - 1.0) / total / self.oversubscription / route_factor;
         let demand_per_node = inj * cross_fraction;
         let scale = if demand_per_node <= supply_per_node {
             1.0
@@ -207,6 +226,27 @@ impl Network {
                 + cross_fraction * (supply_per_node / demand_per_node)
         };
         inj * scale
+    }
+
+    /// Per-placement runtime slowdown factor (>= 1) for a job that
+    /// spends `comm_fraction` of its runtime communicating, under
+    /// `cell_background` load on its cells' global links: the compute
+    /// share is untouched, the communication share stretches by the
+    /// ratio of idle-fabric injection to the achievable bandwidth. This
+    /// is the coupling lever — comm-bound multi-cell jobs stretch under
+    /// contention, compute-bound (or single-cell) jobs don't.
+    pub fn comm_slowdown(
+        &self,
+        cells: &[(u32, u32)],
+        comm_fraction: f64,
+        cell_background: f64,
+    ) -> f64 {
+        let cf = comm_fraction.clamp(0.0, 1.0);
+        if cf <= 0.0 {
+            return 1.0;
+        }
+        let bw = self.node_bw_for_cells(cells, cell_background).max(1e-9);
+        (1.0 - cf) + cf * (self.injection_gbs() / bw)
     }
 
     /// Worst small-message latency inside the placement, seconds.
@@ -520,6 +560,49 @@ mod tests {
     }
 
     #[test]
+    fn valiant_routing_halves_global_supply() {
+        let mut n = net();
+        let multi = placement(&[(0, 180), (1, 180), (2, 180)]);
+        let minimal_bw = n.effective_node_bw(&multi);
+        n.routing = Routing::Valiant;
+        let valiant_bw = n.effective_node_bw(&multi);
+        assert!(valiant_bw < minimal_bw, "{valiant_bw} vs {minimal_bw}");
+        // Single-cell placements never touch the global links.
+        let single = placement(&[(0, 64)]);
+        assert_eq!(n.effective_node_bw(&single), n.injection_gbs());
+    }
+
+    #[test]
+    fn comm_slowdown_stretches_comm_bound_multi_cell_jobs_only() {
+        let n = net();
+        let multi = [(0u32, 180u32), (1, 180)];
+        let single = [(0u32, 64u32)];
+        // Compute-bound: no stretch regardless of congestion.
+        assert_eq!(n.comm_slowdown(&multi, 0.0, 0.8), 1.0);
+        // Single-cell: below the global links, no stretch.
+        assert_eq!(n.comm_slowdown(&single, 0.9, 0.8), 1.0);
+        // Comm-bound multi-cell: stretches, and more under background.
+        let idle = n.comm_slowdown(&multi, 0.6, 0.0);
+        let busy = n.comm_slowdown(&multi, 0.6, 0.5);
+        assert!(idle >= 1.0);
+        assert!(busy > idle, "{busy} vs {idle}");
+        // More comm fraction, more stretch.
+        assert!(n.comm_slowdown(&multi, 0.9, 0.5) > busy);
+    }
+
+    #[test]
+    fn node_bw_for_cells_matches_effective_node_bw() {
+        let mut n = net();
+        n.set_cell_background_load(0, 0.3);
+        n.set_cell_background_load(1, 0.3);
+        let p = placement(&[(0, 120), (1, 120), (2, 120)]);
+        let via_placement = n.effective_node_bw(&p);
+        let bg = (0.3 + 0.3 + 0.0) / 3.0;
+        let via_cells = n.node_bw_for_cells(&p.nodes_per_cell, bg);
+        assert!((via_placement - via_cells).abs() < 1e-12);
+    }
+
+    #[test]
     fn congestion_tracker_follows_start_end_events() {
         use crate::sim::{Component, Event};
         let mut out = Vec::new();
@@ -552,6 +635,7 @@ mod tests {
                 job: 1,
                 booster: true,
                 cells: vec![(0, 90), (1, 90)].into(),
+                gen: 0,
             },
             &mut out,
         );

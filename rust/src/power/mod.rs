@@ -236,10 +236,13 @@ impl PowerMonitor {
         (self.total_nodes as f64 * idle + self.dyn_weight * dynamic) * self.model.pue
     }
 
-    /// PUE-inclusive facility energy so far, kWh (integral of the
-    /// per-event power series).
+    /// PUE-inclusive facility energy so far, kWh: the *step* integral of
+    /// the per-event power series. Facility draw is piecewise-constant —
+    /// every sample opens a rate segment that holds until the next
+    /// `Start`/`End`/`Retime` — so the left-constant integral is exact,
+    /// and DVFS-capped intervals show up in joules, not just watts.
     pub fn energy_kwh(&self) -> f64 {
-        self.store.energy_kwh("facility_power_w")
+        self.store.step_energy_kwh("facility_power_w")
     }
 
     fn sample(&mut self, now: f64) {
@@ -276,6 +279,21 @@ impl Component for PowerMonitor {
                     self.dyn_weight -= nodes as f64 * scale * scale;
                     self.sample(now);
                 }
+            }
+            Event::Retime {
+                job, dvfs_scale, ..
+            } => {
+                // A running job's rate changed mid-flight (coupled
+                // mode): close the old piecewise-constant segment and
+                // open one at the new dynamic-power weight. Jobs this
+                // monitor doesn't track (partition-filtered) are absent
+                // from `running` and skipped.
+                let Some(&(nodes, scale)) = self.running.get(job) else {
+                    return;
+                };
+                self.dyn_weight += nodes as f64 * (dvfs_scale * dvfs_scale - scale * scale);
+                self.running.insert(*job, (nodes, *dvfs_scale));
+                self.sample(now);
             }
             _ => {}
         }
@@ -411,6 +429,7 @@ mod tests {
             job,
             booster: true,
             cells: vec![(0, nodes)].into(),
+            gen: 0,
         }
     }
 
@@ -460,6 +479,44 @@ mod tests {
         mon.on_event(0.0, &start_ev(2, 3000, 1.0), &mut out);
         assert_eq!(mon.busy_nodes(), 3000);
         assert!(mon.utilization() <= 1.0);
+    }
+
+    /// A mid-job Retime re-weights dynamic power and the step-integral
+    /// energy reflects the piecewise-constant segments exactly.
+    #[test]
+    fn monitor_retime_changes_dynamic_power_and_energy() {
+        let mut out = Vec::new();
+        let mut mon = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
+        mon.on_event(0.0, &start_ev(1, 2000, 1.0), &mut out);
+        let full_w = mon.facility_w();
+        // Capped to 0.8 of nominal clocks at t=100.
+        mon.on_event(
+            100.0,
+            &Event::Retime {
+                job: 1,
+                dvfs_scale: 0.8,
+                end: 300.0,
+            },
+            &mut out,
+        );
+        let capped_w = mon.facility_w();
+        assert!(capped_w < full_w, "{capped_w} vs {full_w}");
+        mon.on_event(300.0, &end_ev(1, 2000), &mut out);
+        // Exact step integral: 100 s at full + 200 s capped.
+        let joules = full_w * 100.0 + capped_w * 200.0;
+        assert!((mon.energy_kwh() - joules / 3.6e6).abs() < 1e-9);
+        // Retime of an untracked job is a no-op.
+        let before = mon.store.get("facility_power_w").unwrap().len();
+        mon.on_event(
+            301.0,
+            &Event::Retime {
+                job: 99,
+                dvfs_scale: 0.5,
+                end: 400.0,
+            },
+            &mut out,
+        );
+        assert_eq!(mon.store.get("facility_power_w").unwrap().len(), before);
     }
 
     #[test]

@@ -48,14 +48,31 @@
 //! PR 1 event engine: allocate-and-sort placement, full queue scan per
 //! pass, per-event placement copies). All three paths produce identical
 //! records.
+//!
+//! ## Runtime coupling
+//!
+//! With a [`Coupling`] configured, a running job's completion is
+//! *provisional*: the engine tracks per-job remaining work and a
+//! progress rate (DVFS x congestion) instead of a frozen end time, and
+//! re-times the generation-stamped `End` whenever the machine state
+//! around the job changes — a multi-cell neighbour starting or ending
+//! in shared cells (congestion axis), or a `CapChange` moving the DVFS
+//! workpoint of every running job (cap axis). Stale `End`s are skipped
+//! at pop time ([`Component::accept_event`]), `Retime` events let the
+//! power monitor integrate energy over the piecewise-constant rate
+//! segments, and head reservations read the re-timed map, so EASY
+//! backfill sees the feedback too. With coupling off (default) none of
+//! this machinery runs and every engine stays bit-for-bit the seed
+//! loop.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::config::{CellKind, MachineConfig};
-use crate::network::Placement;
+use crate::network::{Network, Placement};
 use crate::power::{PowerModel, Utilization};
 use crate::sim::{Cells, Component, Event, ScheduledEvent, SimTime, Simulation, TIME_EPS};
+use crate::topology::Topology;
 
 /// Target partition of a job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,6 +101,10 @@ pub struct Job {
     pub submit_time: f64,
     /// Clock-boundness for DVFS slowdown (1 = fully clock-bound).
     pub boundness: f64,
+    /// Fraction of runtime spent communicating (0 = pure compute).
+    /// Drives congestion coupling — comm-bound multi-cell jobs stretch
+    /// under fabric contention; inert when [`Coupling`] is off.
+    pub comm_fraction: f64,
 }
 
 /// Outcome of a completed job.
@@ -93,8 +114,15 @@ pub struct JobRecord {
     pub start_time: f64,
     pub end_time: f64,
     pub placement: Placement,
-    /// DVFS scale the job ran at (1.0 = nominal).
+    /// DVFS scale the job ran at (1.0 = nominal). In coupled runs this
+    /// is the workpoint in effect at completion (re-timed cap moves
+    /// update it); uncoupled runs freeze it at `Start`.
     pub dvfs_scale: f64,
+    /// Lowest DVFS scale the job ever ran at — the "was it throttled"
+    /// question. Equal to `dvfs_scale` in uncoupled runs; in coupled
+    /// runs a job capped mid-life keeps the evidence here even if the
+    /// cap lifts before it completes.
+    pub min_dvfs_scale: f64,
 }
 
 impl JobRecord {
@@ -139,6 +167,45 @@ pub struct Scheduler {
     total: [u32; 2],
     /// Optional facility IT power cap, MW, with per-node-at-load watts.
     pub power_cap: Option<PowerCap>,
+    /// Runtime feedback coupling (default off: job end times are frozen
+    /// at `Start` and every engine is bit-for-bit the seed loop).
+    pub coupling: Coupling,
+    /// Network model congestion coupling derives comm slowdowns from.
+    /// Required when `coupling.congestion` is on (see
+    /// [`Scheduler::with_coupling`]).
+    pub net: Option<Network>,
+}
+
+/// Which feedback loops retime a *running* job's provisional `End`.
+///
+/// With both axes off (the default), a job's completion is frozen at
+/// `Start` exactly like the seed loop — the oracle suites pin this
+/// bit-for-bit. With an axis on, the event engine keeps per-job
+/// remaining work and a progress rate, and re-times the generation-
+/// stamped `End` whenever the machine state around the job changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Coupling {
+    /// Comm-bound multi-cell jobs stretch under fabric contention
+    /// (per-cell cross-traffic load folded into
+    /// [`Network::comm_slowdown`]).
+    pub congestion: bool,
+    /// A `CapChange` re-scales every *running* job's DVFS workpoint
+    /// mid-flight instead of only affecting later starts.
+    pub cap: bool,
+}
+
+impl Coupling {
+    /// Both feedback loops on.
+    pub fn full() -> Self {
+        Coupling {
+            congestion: true,
+            cap: true,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.congestion || self.cap
+    }
 }
 
 /// Facility power cap configuration.
@@ -203,7 +270,22 @@ impl Scheduler {
             free,
             total: free,
             power_cap: None,
+            coupling: Coupling::default(),
+            net: None,
         }
+    }
+
+    /// A scheduler with runtime coupling configured. Congestion coupling
+    /// needs a network model to derive comm slowdowns from, so one is
+    /// built from `cfg` when that axis is on.
+    pub fn with_coupling(cfg: &MachineConfig, coupling: Coupling) -> Self {
+        let mut s = Self::new(cfg);
+        s.coupling = coupling;
+        if coupling.congestion {
+            let inj = cfg.gpu_node_spec().map(|n| n.injection_gbps()).unwrap_or(400.0);
+            s.net = Some(Network::new(Topology::build(cfg), inj));
+        }
+        s
     }
 
     /// Free nodes in partition `p` — an O(1) counter read.
@@ -370,12 +452,12 @@ impl Scheduler {
         observers: &mut [&mut dyn Component],
         optimized: bool,
     ) -> BTreeMap<u64, JobRecord> {
-        jobs.sort_by(|a, b| {
-            a.submit_time
-                .partial_cmp(&b.submit_time)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        assert!(
+            !(self.coupling.congestion && self.net.is_none()),
+            "congestion coupling needs a network model: use Scheduler::with_coupling \
+             or set Scheduler::net"
+        );
+        jobs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time).then(a.id.cmp(&b.id)));
         let mut sim = Simulation::new();
         for job in &jobs {
             // Virtual time starts at 0: the legacy loop admitted any
@@ -399,6 +481,11 @@ impl Scheduler {
             "scheduler stuck: {} jobs can never be placed",
             engine.queue.len()
         );
+        debug_assert!(
+            engine.coupled.is_empty(),
+            "coupled jobs left running: {}",
+            engine.coupled.len()
+        );
         engine.records
     }
 
@@ -410,12 +497,7 @@ impl Scheduler {
     /// semantic oracle the event engine is tested against — use
     /// [`Scheduler::run`].
     pub fn run_rescan(&mut self, mut jobs: Vec<Job>) -> BTreeMap<u64, JobRecord> {
-        jobs.sort_by(|a, b| {
-            a.submit_time
-                .partial_cmp(&b.submit_time)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        jobs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time).then(a.id.cmp(&b.id)));
         let mut records: BTreeMap<u64, JobRecord> = BTreeMap::new();
         // (end_time, job idx) of running jobs.
         let mut running: Vec<(f64, usize)> = Vec::new();
@@ -465,6 +547,7 @@ impl Scheduler {
                         end_time: end,
                         placement,
                         dvfs_scale: scale,
+                        min_dvfs_scale: scale,
                     },
                 );
                 running.push((end, ji));
@@ -533,7 +616,7 @@ impl Scheduler {
             .filter(|(_, ji)| jobs[*ji].partition == job.partition)
             .map(|(t, ji)| (*t, jobs[*ji].nodes))
             .collect();
-        ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        ends.sort_by(|a, b| a.0.total_cmp(&b.0));
         for (t, n) in ends {
             free += n;
             if free >= job.nodes {
@@ -575,6 +658,37 @@ impl Scheduler {
     }
 }
 
+/// Mean cross-traffic load on `cells` given the engine's per-cell cross
+/// counts: the one formula both the start-time slowdown and the re-time
+/// pass use, kept as a free function so the re-timer (which holds a
+/// mutable borrow of the coupled map) shares it with
+/// `JobEngine::background_for` instead of diverging.
+fn cross_background(
+    cell_cross: &[u32],
+    cell_total: &[u32],
+    cells: &[(u32, u32)],
+    exclude_own: bool,
+) -> f64 {
+    if cells.is_empty() {
+        return 0.0;
+    }
+    let mut sum = 0.0;
+    for &(cell, nodes) in cells {
+        let Some(&total) = cell_total.get(cell as usize) else {
+            continue;
+        };
+        if total == 0 {
+            continue;
+        }
+        let mut cross = cell_cross[cell as usize];
+        if exclude_own {
+            cross = cross.saturating_sub(nodes);
+        }
+        sum += cross as f64 / total as f64;
+    }
+    sum / cells.len() as f64
+}
+
 /// A queued job, compact (12 bytes) so the optimized pass streams a
 /// dense array instead of dereferencing into the 56-byte [`Job`] table
 /// per entry — the scan over can't-fit entries is the hottest loop in a
@@ -595,6 +709,35 @@ struct RunEntry {
     ji: u32,
     nodes: u32,
     partition: Partition,
+}
+
+/// Coupled-progress state of one running job (coupled mode only): the
+/// job's completion is provisional — instead of a frozen `end_time`,
+/// the engine keeps remaining work and the progress rate in effect, and
+/// re-times the generation-stamped `End` when either changes.
+#[derive(Debug, Clone)]
+struct CoupledJob {
+    ji: u32,
+    /// Start sequence — the second half of the running-map key.
+    seq: u64,
+    booster: bool,
+    multi_cell: bool,
+    /// Interned placement (shared with the Start/End events).
+    cells: Cells,
+    /// Work left, seconds at nominal rate.
+    remaining: f64,
+    /// Runtime multiplier in effect (DVFS x congestion), >= 1.
+    slowdown: f64,
+    /// DVFS workpoint in effect (re-scaled on `CapChange` when cap
+    /// coupling is on).
+    scale: f64,
+    /// Instant `remaining` was last settled at.
+    updated: f64,
+    /// Currently scheduled provisional end (the running-map key time).
+    end: f64,
+    /// Generation of the current `End` event; stale generations are
+    /// skipped at pop time.
+    gen: u64,
 }
 
 /// The event-driven job lifecycle: a [`Component`] translating
@@ -649,6 +792,24 @@ struct JobEngine<'a> {
     /// Scratch: queue positions started by the current pass (reused
     /// across passes — no per-pass allocation).
     started_scratch: Vec<usize>,
+    /// Copy of the scheduler's [`Coupling`] config.
+    coupling: Coupling,
+    /// Coupled-progress state per running job id (coupled mode only).
+    coupled: BTreeMap<u64, CoupledJob>,
+    /// Per-cell nodes of running multi-cell Booster jobs (the traffic
+    /// class that loads the dragonfly global links), indexed by cell id.
+    /// The engine's own congestion view — mirrors what a
+    /// [`crate::network::CongestionTracker`] observes, but queryable
+    /// mid-pass and self-excludable per job.
+    cell_cross: Vec<u32>,
+    /// Booster node total per cell id (0 = cell not in the partition).
+    cell_total: Vec<u32>,
+    /// A `Start`/`End`/`CapChange` changed the machine state: re-time
+    /// running jobs at the next quiescent point.
+    recouple: bool,
+    /// A `CapChange` moved the cap level: re-derive every running job's
+    /// DVFS workpoint during the next re-time.
+    rescale: bool,
 }
 
 impl<'a> JobEngine<'a> {
@@ -658,6 +819,15 @@ impl<'a> JobEngine<'a> {
             let prev = idx_of.insert(job.id, i);
             assert!(prev.is_none(), "duplicate job id {}", job.id);
         }
+        let coupling = sched.coupling;
+        let mut cell_total = Vec::new();
+        if coupling.congestion {
+            cell_total = vec![0u32; sched.booster_by_cell.len()];
+            for pool in &sched.booster {
+                cell_total[pool.cell_id as usize] = pool.total;
+            }
+        }
+        let cell_cross = vec![0u32; cell_total.len()];
         JobEngine {
             sched,
             jobs,
@@ -673,6 +843,12 @@ impl<'a> JobEngine<'a> {
             queued: [0; 2],
             scan_from: 0,
             started_scratch: Vec::new(),
+            coupling,
+            coupled: BTreeMap::new(),
+            cell_cross,
+            cell_total,
+            recouple: false,
+            rescale: false,
         }
     }
 
@@ -709,6 +885,54 @@ impl<'a> JobEngine<'a> {
         self.sched.dvfs_scale_at(self.running_nodes + new_nodes)
     }
 
+    /// Mean cross-traffic load on `cells` from *other* running
+    /// multi-cell Booster jobs. `exclude_own` subtracts this job's own
+    /// per-cell nodes — set once the job's `Start` has been folded into
+    /// the counts (a job's own surface traffic is already modelled by
+    /// the cross-fraction term of the bandwidth model, not background).
+    fn background_for(&self, cells: &[(u32, u32)], exclude_own: bool) -> f64 {
+        cross_background(&self.cell_cross, &self.cell_total, cells, exclude_own)
+    }
+
+    /// Fold a multi-cell Booster job's placement into (sign > 0) or out
+    /// of (sign < 0) the per-cell cross-traffic counts. Single-cell
+    /// jobs never touch the global links; DataCentric traffic does not
+    /// ride the GPU fabric's global link budget. Returns whether the
+    /// congestion picture changed — the caller's re-time trigger, so
+    /// the (dominant) single-cell traffic never provokes a no-op
+    /// re-time walk.
+    fn cross_update(&mut self, booster: bool, cells: &[(u32, u32)], sign: i64) -> bool {
+        if !self.coupling.congestion || !booster || cells.len() <= 1 {
+            return false;
+        }
+        for &(cell, nodes) in cells {
+            if let Some(c) = self.cell_cross.get_mut(cell as usize) {
+                let total = self.cell_total[cell as usize] as i64;
+                let next = *c as i64 + sign * nodes as i64;
+                *c = next.clamp(0, total) as u32;
+            }
+        }
+        true
+    }
+
+    /// Congestion slowdown for a job under the current cross loads.
+    /// 1.0 when the axis is off, the job is DataCentric or single-cell,
+    /// or it does not communicate.
+    fn comm_slowdown_for(
+        &self,
+        booster: bool,
+        cells: &[(u32, u32)],
+        comm_fraction: f64,
+        exclude_own: bool,
+    ) -> f64 {
+        if !self.coupling.congestion || !booster || cells.len() <= 1 {
+            return 1.0;
+        }
+        let net = self.sched.net.as_ref().expect("checked in run_mode");
+        let bg = self.background_for(cells, exclude_own);
+        net.comm_slowdown(cells, comm_fraction, bg)
+    }
+
     /// Complete every running job whose end falls within `TIME_EPS` of
     /// `now` (the legacy loop's completion tolerance).
     fn complete_due(&mut self, now: f64) {
@@ -729,7 +953,107 @@ impl<'a> JobEngine<'a> {
                 self.sched.release(r.partition, &placement);
             }
             self.running_nodes -= r.nodes;
+            if self.coupling.enabled() {
+                self.coupled.remove(&id);
+            }
             self.dirty = true;
+        }
+    }
+
+    /// Re-time every running job's provisional `End` from the current
+    /// machine state (coupled mode): settle the work done so far at the
+    /// old rate, derive the new slowdown (DVFS x congestion), and when
+    /// the completion moved, bump the job's generation, re-key the
+    /// running map and enqueue a fresh `End` (plus a `Retime` so
+    /// observers close their rate segments). The stale `End` stays in
+    /// the queue and is skipped at pop time.
+    fn retime(&mut self, now: f64, out: &mut Vec<ScheduledEvent>) {
+        let rescale = std::mem::take(&mut self.rescale) && self.coupling.cap;
+        let new_scale = if rescale {
+            self.sched.dvfs_scale_at(self.running_nodes)
+        } else {
+            1.0
+        };
+        let mut moved = false;
+        for (&job_id, cj) in self.coupled.iter_mut() {
+            let job = &self.jobs[cj.ji as usize];
+            let congestion_sensitive = self.coupling.congestion
+                && cj.booster
+                && cj.multi_cell
+                && job.comm_fraction > 0.0;
+            if !rescale && !congestion_sensitive {
+                // Neither axis can change this job's rate: skip without
+                // settling (remaining stays derivable from `updated`
+                // because the rate is constant across the gap).
+                continue;
+            }
+            // Settle progress at the rate that was in effect.
+            let elapsed = now - cj.updated;
+            if elapsed > 0.0 {
+                cj.remaining = (cj.remaining - elapsed / cj.slowdown).max(0.0);
+            }
+            cj.updated = now;
+            let old_scale = cj.scale;
+            if rescale {
+                cj.scale = new_scale;
+            }
+            let dvfs = crate::power::DvfsPoint { scale: cj.scale }.time_factor(job.boundness);
+            let comm = if congestion_sensitive {
+                let net = self.sched.net.as_ref().expect("checked in run_mode");
+                let bg = cross_background(&self.cell_cross, &self.cell_total, &cj.cells, true);
+                net.comm_slowdown(&cj.cells, job.comm_fraction, bg)
+            } else {
+                1.0
+            };
+            let slowdown = dvfs * comm;
+            // A scale move that leaves the rate untouched (fully
+            // memory-bound work: time_factor == 1 for any scale) still
+            // changes the job's *power*, so observers must hear about
+            // it even though the End stays put.
+            if slowdown == cj.slowdown && cj.scale == old_scale {
+                continue;
+            }
+            if slowdown != cj.slowdown {
+                cj.slowdown = slowdown;
+                let new_end = now + cj.remaining * slowdown;
+                let entry = self
+                    .running
+                    .remove(&(SimTime(cj.end), cj.seq))
+                    .expect("running entry of coupled job");
+                self.running.insert((SimTime(new_end), cj.seq), entry);
+                cj.end = new_end;
+                cj.gen += 1;
+                out.push(ScheduledEvent::at(
+                    new_end,
+                    Event::End {
+                        job: job_id,
+                        booster: cj.booster,
+                        cells: cj.cells.clone(),
+                        gen: cj.gen,
+                    },
+                ));
+                moved = true;
+            }
+            if let Some(rec) = self.records.get_mut(&job_id) {
+                rec.end_time = cj.end;
+                rec.dvfs_scale = cj.scale;
+                rec.min_dvfs_scale = rec.min_dvfs_scale.min(cj.scale);
+            }
+            out.push(ScheduledEvent::at(
+                now,
+                Event::Retime {
+                    job: job_id,
+                    dvfs_scale: cj.scale,
+                    end: cj.end,
+                },
+            ));
+        }
+        if moved {
+            // Provisional ends moved: head reservations (and with them
+            // the EASY backfill window) changed, so the settled-prefix
+            // and no-op-pass conclusions no longer hold.
+            self.dirty = true;
+            self.scan_from = 0;
         }
     }
 
@@ -816,9 +1140,23 @@ impl<'a> JobEngine<'a> {
                 self.sched.place_scan(partition, nodes)
             }
             .expect("checked free counter");
-            let slowdown = crate::power::DvfsPoint { scale }.time_factor(job.boundness);
-            let end = now + job.run_seconds * slowdown;
             let booster = partition == Partition::Booster;
+            let coupled = self.coupling.enabled();
+            let mut slowdown = crate::power::DvfsPoint { scale }.time_factor(job.boundness);
+            if coupled {
+                // Initial provisional rate: the congestion term joins
+                // the DVFS term. Loads from starts earlier in this same
+                // batch are folded in by the re-time pass that follows
+                // the Start dispatches at this same timestamp.
+                slowdown *= self.comm_slowdown_for(
+                    booster,
+                    &placement.nodes_per_cell,
+                    job.comm_fraction,
+                    false,
+                );
+            }
+            let end = now + job.run_seconds * slowdown;
+            let gen = u64::from(coupled);
             let (start_cells, end_cells): (Cells, Cells) = if self.optimized {
                 // One interned copy per job, shared by Start and End.
                 let cells: Cells = Arc::from(placement.nodes_per_cell.as_slice());
@@ -830,6 +1168,24 @@ impl<'a> JobEngine<'a> {
                     Arc::from(placement.nodes_per_cell.as_slice()),
                 )
             };
+            if coupled {
+                self.coupled.insert(
+                    job.id,
+                    CoupledJob {
+                        ji: entry.ji,
+                        seq: self.start_seq,
+                        booster,
+                        multi_cell: placement.nodes_per_cell.len() > 1,
+                        cells: end_cells.clone(),
+                        remaining: job.run_seconds,
+                        slowdown,
+                        scale,
+                        updated: now,
+                        end,
+                        gen,
+                    },
+                );
+            }
             out.push(ScheduledEvent::at(
                 now,
                 Event::Start {
@@ -845,6 +1201,7 @@ impl<'a> JobEngine<'a> {
                     job: job.id,
                     booster,
                     cells: end_cells,
+                    gen,
                 },
             ));
             self.records.insert(
@@ -855,6 +1212,7 @@ impl<'a> JobEngine<'a> {
                     end_time: end,
                     placement,
                     dvfs_scale: scale,
+                    min_dvfs_scale: scale,
                 },
             );
             self.running.insert(
@@ -917,9 +1275,12 @@ impl Component for JobEngine<'_> {
             }
             // Releases happen in the quiescent completion sweep so
             // equal-time Ends and Submits see one consistent pass.
-            Event::End { .. } => {
+            Event::End { booster, cells, .. } => {
                 self.dirty = true;
                 self.scan_from = 0; // free nodes change: full rescan
+                if self.coupling.enabled() && self.cross_update(*booster, cells, -1) {
+                    self.recouple = true;
+                }
             }
             Event::CapChange { cap_mw } => {
                 match *cap_mw {
@@ -927,12 +1288,20 @@ impl Component for JobEngine<'_> {
                         self.sched.power_cap = None;
                         self.dirty = true;
                         self.scan_from = 0;
+                        if self.coupling.cap {
+                            self.recouple = true;
+                            self.rescale = true;
+                        }
                     }
                     Some(mw) => match self.sched.power_cap.as_mut() {
                         Some(cap) => {
                             cap.cap_mw = mw;
                             self.dirty = true;
                             self.scan_from = 0;
+                            if self.coupling.cap {
+                                self.recouple = true;
+                                self.rescale = true;
+                            }
                         }
                         // No watt model configured: the scheduler cannot
                         // invent one for an arbitrary machine, so a level
@@ -943,17 +1312,50 @@ impl Component for JobEngine<'_> {
                     },
                 }
             }
-            Event::Start { .. } => {} // self-emitted
+            // Self-emitted. In coupled mode the Start dispatch is where
+            // the job's cross-traffic joins the congestion view, so
+            // every running job (itself included, self-excluded at
+            // query time) re-times against it at the next quiescent.
+            Event::Start { booster, cells, .. } => {
+                if self.coupling.enabled() && self.cross_update(*booster, cells, 1) {
+                    self.recouple = true;
+                }
+            }
+            // Informational for observers; the engine produced it.
+            Event::Retime { .. } => {}
         }
     }
 
     fn on_quiescent(&mut self, now: f64, out: &mut Vec<ScheduledEvent>) {
         self.complete_due(now);
-        if !self.dirty {
-            return;
+        if self.dirty {
+            self.dirty = false;
+            self.pass(now, out);
         }
-        self.dirty = false;
-        self.pass(now, out);
+        // Re-time after the pass: the pass's own starts dispatch at this
+        // same timestamp and set `recouple` again, so the state they
+        // change is folded in before the clock moves.
+        if self.coupling.enabled() && self.recouple {
+            self.recouple = false;
+            self.retime(now, out);
+        }
+    }
+
+    fn accept_event(&mut self, _now: f64, ev: &Event) -> bool {
+        if !self.coupling.enabled() {
+            return true;
+        }
+        match ev {
+            // Only the current generation of a coupled job's End is
+            // real; re-timed-away generations are stale. A job absent
+            // from the coupled map already completed (its current End
+            // fired), so any stamped End left for it is stale too.
+            Event::End { job, gen, .. } => match self.coupled.get(job) {
+                Some(cj) => *gen == cj.gen,
+                None => *gen == 0,
+            },
+            _ => true,
+        }
     }
 }
 
@@ -976,6 +1378,7 @@ mod tests {
             run_seconds: secs,
             submit_time: submit,
             boundness: 1.0,
+            comm_fraction: 0.0,
         }
     }
 
@@ -1188,6 +1591,7 @@ mod tests {
                     run_seconds: rng.range_f64(1.0, 500.0),
                     submit_time: rng.range_f64(0.0, 100.0),
                     boundness: rng.f64(),
+                    comm_fraction: rng.f64() * 0.5,
                 }
             })
             .collect()
@@ -1280,6 +1684,106 @@ mod tests {
         // No watt model to build a cap from: the job runs at nominal.
         assert_eq!(rec[&1].dvfs_scale, 1.0);
         assert!(s.power_cap.is_none());
+    }
+
+    /// Cap coupling without any cap movement is a no-op: the retimer
+    /// runs (every Start/End perturbs it) but recomputes the same
+    /// slowdowns, so records stay bit-for-bit the uncoupled engine's.
+    #[test]
+    fn cap_coupling_without_cap_events_is_identity() {
+        let cfg = MachineConfig::leonardo();
+        for seed in 0..3u64 {
+            let jobs = random_stream(seed, 60);
+            let plain = sched().run(jobs.clone());
+            let mut coupled = Scheduler::with_coupling(
+                &cfg,
+                Coupling {
+                    congestion: false,
+                    cap: true,
+                },
+            );
+            let recs = coupled.run(jobs);
+            assert_eq!(plain.len(), recs.len(), "seed {seed}");
+            for (id, r) in &recs {
+                let p = &plain[id];
+                assert_eq!(r.start_time, p.start_time, "seed {seed} job {id}");
+                assert_eq!(r.end_time, p.end_time, "seed {seed} job {id}");
+                assert_eq!(r.dvfs_scale, p.dvfs_scale, "seed {seed} job {id}");
+            }
+        }
+    }
+
+    /// Congestion coupling leaves single-cell (and zero-comm) jobs at
+    /// their nominal runtime.
+    #[test]
+    fn congestion_coupling_spares_compute_bound_jobs() {
+        let cfg = MachineConfig::leonardo();
+        let mut s = Scheduler::with_coupling(&cfg, Coupling::full());
+        // Single-cell jobs: below the global links, no stretch.
+        let mut a = job(1, 150, 100.0, 0.0);
+        a.comm_fraction = 0.9;
+        // Multi-cell but pure compute: no comm to stretch.
+        let mut b = job(2, 400, 100.0, 0.0);
+        b.comm_fraction = 0.0;
+        let rec = s.run(vec![a, b]);
+        assert!((rec[&1].end_time - rec[&1].start_time - 100.0).abs() < 1e-9);
+        assert!((rec[&2].end_time - rec[&2].start_time - 100.0).abs() < 1e-9);
+        assert!(rec[&2].placement.cells_used() > 1);
+    }
+
+    /// Congestion coupling stretches a comm-bound multi-cell job even on
+    /// an otherwise idle machine (its own spread is the first congestion
+    /// source), and the record's provisional end reflects it.
+    #[test]
+    fn congestion_coupling_stretches_comm_bound_multi_cell_job() {
+        let cfg = MachineConfig::leonardo();
+        let mut s = Scheduler::with_coupling(&cfg, Coupling::full());
+        let mut a = job(1, 400, 100.0, 0.0);
+        a.comm_fraction = 0.6;
+        let rec = s.run(vec![a]);
+        let dur = rec[&1].end_time - rec[&1].start_time;
+        assert!(rec[&1].placement.cells_used() > 1);
+        assert!(dur > 100.0, "no stretch: {dur}");
+        // Bounded: the comm share can stretch, the compute share can't.
+        assert!(dur < 100.0 * (0.4 + 0.6 * 10.0), "runaway stretch: {dur}");
+    }
+
+    /// A CapChange mid-job re-times the running job's End when cap
+    /// coupling is on (and leaves it frozen when off).
+    #[test]
+    fn cap_change_retimes_running_job_when_coupled() {
+        let cfg = MachineConfig::leonardo();
+        let cap = PowerCap {
+            cap_mw: 99.0,
+            node_watts: 2238.0,
+            idle_watts: 365.0,
+        };
+        let events = || vec![ScheduledEvent::at(50.0, Event::CapChange { cap_mw: Some(4.0) })];
+        // Frozen end without coupling.
+        let mut plain = sched();
+        plain.power_cap = Some(cap);
+        let rec = plain.run_with(vec![job(1, 3000, 100.0, 0.0)], events(), &mut []);
+        assert_eq!(rec[&1].end_time, 100.0);
+        // Coupled: 50 s at nominal, the remaining 50 s stretched by the
+        // exact DVFS factor of the 4 MW cap on 3000 busy nodes.
+        let mut coupled = Scheduler::with_coupling(
+            &cfg,
+            Coupling {
+                congestion: false,
+                cap: true,
+            },
+        );
+        coupled.power_cap = Some(cap);
+        let rec = coupled.run_with(vec![job(1, 3000, 100.0, 0.0)], events(), &mut []);
+        let draw_mw = (3000.0 * 2238.0 + 456.0 * 365.0) / 1e6;
+        let scale = (4.0 / draw_mw).sqrt().clamp(0.5, 1.0);
+        let expected = 50.0 + 50.0 * (1.0 / scale);
+        assert!(
+            (rec[&1].end_time - expected).abs() < 1e-9,
+            "{} vs {expected}",
+            rec[&1].end_time
+        );
+        assert_eq!(rec[&1].dvfs_scale, scale, "record carries the final scale");
     }
 
     /// Observers receive the full lifecycle stream.

@@ -29,6 +29,18 @@
 //! `Submit`s inside that window do *not* join — the legacy loop admitted
 //! arrivals only at `submit_time <= now`.
 //!
+//! ## Provisional events
+//!
+//! A scheduled [`Event::End`] is *provisional*: the scheduler's coupled
+//! mode may re-time it when the machine state around the job changes
+//! (congestion, a power-cap move). Invalidation is generation-stamped
+//! and lazy — the owner bumps the job's generation, enqueues a fresh
+//! `End`, and vetoes the stale one at pop time through
+//! [`Component::accept_event`], so the queue itself never needs a
+//! decrease-key and the `(time, seq)` FIFO tie-break stays intact.
+//! [`Event::Retime`] notifies observers of the rate change so they can
+//! close a piecewise-constant segment (energy integration).
+//!
 //! ## Hot-path discipline
 //!
 //! The dispatch loop is allocation-free in steady state: components
@@ -92,13 +104,30 @@ pub enum Event {
         cells: Cells,
     },
     /// A job finished and released `cells`.
+    ///
+    /// `gen` is the generation stamp of this completion: the scheduler's
+    /// coupled mode re-times provisional `End`s by bumping the job's
+    /// generation and enqueueing a fresh `End`, leaving the stale one in
+    /// the queue to be skipped at pop time (see
+    /// [`Component::accept_event`]). Uncoupled paths always emit gen 0.
     End {
         job: JobId,
         booster: bool,
         cells: Cells,
+        gen: u64,
     },
     /// The facility power cap changed (`None` lifts the cap).
     CapChange { cap_mw: Option<f64> },
+    /// A running job's provisional completion moved (coupled mode): it
+    /// now runs at `dvfs_scale` and its current `End` is scheduled at
+    /// `end`. Observers use this to close a piecewise-constant rate
+    /// segment (the power monitor re-weights dynamic power and samples,
+    /// so capped intervals show up in joules, not just watts).
+    Retime {
+        job: JobId,
+        dvfs_scale: f64,
+        end: f64,
+    },
 }
 
 impl Event {
@@ -109,9 +138,10 @@ impl Event {
     /// The job this event concerns, if any.
     pub fn job(&self) -> Option<JobId> {
         match self {
-            Event::Submit { job } | Event::Start { job, .. } | Event::End { job, .. } => {
-                Some(*job)
-            }
+            Event::Submit { job }
+            | Event::Start { job, .. }
+            | Event::End { job, .. }
+            | Event::Retime { job, .. } => Some(*job),
             Event::CapChange { .. } => None,
         }
     }
@@ -155,6 +185,16 @@ pub trait Component {
     fn on_event(&mut self, now: f64, ev: &Event, out: &mut Vec<ScheduledEvent>);
 
     fn on_quiescent(&mut self, _now: f64, _out: &mut Vec<ScheduledEvent>) {}
+
+    /// Pre-dispatch validity check: return `false` to drop the popped
+    /// event before *any* component sees it. The scheduler's coupled
+    /// mode uses this to skip stale generation-stamped `End`s that were
+    /// re-timed after they were enqueued — the skip happens at pop
+    /// time, so queue order (and the FIFO tie-break) is untouched.
+    /// Default accepts everything.
+    fn accept_event(&mut self, _now: f64, _ev: &Event) -> bool {
+        true
+    }
 }
 
 /// Monotone virtual clock, seconds.
@@ -253,6 +293,7 @@ pub struct Simulation {
     pub clock: Clock,
     pub queue: EventQueue,
     events_processed: u64,
+    events_skipped: u64,
 }
 
 impl Simulation {
@@ -286,6 +327,14 @@ impl Simulation {
                     break;
                 }
                 let (_, ev) = self.queue.pop().expect("peeked");
+                // Stale-pop filter: a component may invalidate an event
+                // it scheduled earlier (re-timed provisional Ends). The
+                // veto runs before any dispatch, so observers never see
+                // a stale event.
+                if !components.iter_mut().all(|c| c.accept_event(t, &ev)) {
+                    self.events_skipped += 1;
+                    continue;
+                }
                 self.events_processed += 1;
                 for c in components.iter_mut() {
                     c.on_event(t, &ev, &mut out);
@@ -313,6 +362,11 @@ impl Simulation {
 
     pub fn events_processed(&self) -> u64 {
         self.events_processed
+    }
+
+    /// Events dropped by the stale-pop filter ([`Component::accept_event`]).
+    pub fn events_skipped(&self) -> u64 {
+        self.events_skipped
     }
 }
 
@@ -346,6 +400,7 @@ mod tests {
             job,
             booster: true,
             cells: vec![(0, 1)].into(),
+            gen: 0,
         }
     }
 
@@ -427,6 +482,7 @@ mod tests {
                         job: *job,
                         booster: true,
                         cells,
+                        gen: 0,
                     },
                 ));
             }
@@ -493,6 +549,71 @@ mod tests {
             })
             .unwrap();
         assert!(Arc::ptr_eq(&start_cells, &end_cells), "placement copied");
+    }
+
+    /// A component that treats any `End` whose generation is below its
+    /// floor as stale — the scheduler's coupled-retiming shape.
+    struct GenGate {
+        floor: u64,
+    }
+
+    impl Component for GenGate {
+        fn on_event(&mut self, _now: f64, _ev: &Event, _out: &mut Vec<ScheduledEvent>) {}
+
+        fn accept_event(&mut self, _now: f64, ev: &Event) -> bool {
+            match ev {
+                Event::End { gen, .. } => *gen >= self.floor,
+                _ => true,
+            }
+        }
+    }
+
+    fn end_gen(job: JobId, gen: u64) -> Event {
+        Event::End {
+            job,
+            booster: true,
+            cells: vec![(0, 1)].into(),
+            gen,
+        }
+    }
+
+    /// Stale generation-stamped Ends are skipped at pop time: no
+    /// component (observers included) ever sees them, while current
+    /// ones flow through; FIFO ordering of the survivors is untouched.
+    #[test]
+    fn stale_ends_are_filtered_before_dispatch() {
+        let mut sim = Simulation::new();
+        sim.schedule(1.0, end_gen(1, 0)); // stale (re-timed away)
+        sim.schedule(2.0, end_gen(2, 1)); // current
+        sim.schedule(2.0, end_gen(3, 0)); // stale, same instant
+        sim.schedule(3.0, end_gen(4, 2)); // current
+        let mut gate = GenGate { floor: 1 };
+        let mut p = Probe::default();
+        let n = sim.run(&mut [&mut gate, &mut p]);
+        assert_eq!(n, 2, "two current events dispatched");
+        assert_eq!(sim.events_skipped(), 2, "two stale events skipped");
+        let seen: Vec<JobId> = p.log.iter().map(|(_, e)| e.job().unwrap()).collect();
+        assert_eq!(seen, vec![2, 4]);
+    }
+
+    /// Retime events reach observers like any other event and carry the
+    /// job they concern.
+    #[test]
+    fn retime_events_flow_to_observers() {
+        let mut sim = Simulation::new();
+        sim.schedule(
+            1.0,
+            Event::Retime {
+                job: 9,
+                dvfs_scale: 0.8,
+                end: 42.0,
+            },
+        );
+        let mut p = Probe::default();
+        sim.run(&mut [&mut p]);
+        assert_eq!(p.log.len(), 1);
+        assert_eq!(p.log[0].1.job(), Some(9));
+        assert_eq!(p.log[0].1.nodes(), 0);
     }
 
     #[test]

@@ -52,6 +52,11 @@ impl Series {
         self.samples.last().copied()
     }
 
+    /// The raw sample sequence, time-ordered.
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
     pub fn max(&self) -> f64 {
         self.samples.iter().fold(f64::NEG_INFINITY, |m, s| m.max(s.value))
     }
@@ -68,6 +73,17 @@ impl Series {
         self.samples
             .windows(2)
             .map(|w| 0.5 * (w[0].value + w[1].value) * (w[1].t - w[0].t))
+            .sum()
+    }
+
+    /// Left-constant step integral over time — exact for event-sampled
+    /// gauges that hold their value until the next sample (the power
+    /// monitor's piecewise-constant facility draw: each sample opens a
+    /// rate segment that lasts until the next Start/End/Retime).
+    pub fn step_integral(&self) -> f64 {
+        self.samples
+            .windows(2)
+            .map(|w| w[0].value * (w[1].t - w[0].t))
             .sum()
     }
 }
@@ -94,6 +110,13 @@ impl MetricStore {
     /// Energy (kWh) of a power series logged in watts.
     pub fn energy_kwh(&self, name: &str) -> f64 {
         self.get(name).map_or(0.0, |s| s.integral() / 3.6e6)
+    }
+
+    /// Energy (kWh) of a piecewise-constant power series logged in
+    /// watts: the step integral, exact for event-sampled draws that
+    /// hold their level between samples.
+    pub fn step_energy_kwh(&self, name: &str) -> f64 {
+        self.get(name).map_or(0.0, |s| s.step_integral() / 3.6e6)
     }
 
     /// The Bull Energy Optimizer report: per-series mean/max/integral.
@@ -247,7 +270,9 @@ impl Component for EventCounter {
             Event::Submit { .. } => self.submitted += 1,
             Event::Start { .. } => self.started += 1,
             Event::End { .. } => self.ended += 1,
-            Event::CapChange { .. } => return,
+            // Not job lifecycle: cap moves and provisional-End re-times
+            // change rates, not job counts.
+            Event::CapChange { .. } | Event::Retime { .. } => return,
         }
         self.sample(now);
     }
@@ -283,6 +308,22 @@ mod tests {
         assert!((s.integral() - 1000.0).abs() < 1e-9);
         s.push(20.0, 0.0); // ramp down
         assert!((s.integral() - 1500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_step_integral_is_left_constant() {
+        let mut s = Series::default();
+        s.push(0.0, 100.0);
+        s.push(10.0, 100.0);
+        assert!((s.step_integral() - 1000.0).abs() < 1e-9);
+        // A step down at t=10 contributes nothing over (10, 20] at the
+        // old level — unlike the trapezoid, which would average.
+        s.push(20.0, 0.0);
+        assert!((s.step_integral() - 2000.0).abs() < 1e-9);
+        let mut store = MetricStore::default();
+        store.record("p", 0.0, 3.6e6);
+        store.record("p", 1.0, 0.0);
+        assert!((store.step_energy_kwh("p") - 1.0).abs() < 1e-9);
     }
 
     #[test]
@@ -356,6 +397,7 @@ mod tests {
                 job: 1,
                 booster: true,
                 cells: vec![(0, 8)].into(),
+                gen: 0,
             },
             &mut out,
         );

@@ -219,6 +219,24 @@ impl AppClass {
             AppClass::AiInference => rng.range_f64(0.10, 0.40),
         }
     }
+
+    /// Fraction of runtime spent communicating — the per-class lever
+    /// the runtime-coupling model pulls: comm-bound classes stretch
+    /// under fabric contention, compute-bound ones don't. Constant per
+    /// class (no RNG draw) so traces generated before this field
+    /// existed are byte-identical.
+    pub fn comm_fraction(&self) -> f64 {
+        match self {
+            // Wide halo/collective-heavy MPI heroes.
+            AppClass::HpcCapability => 0.25,
+            // Bread-and-butter MPI, mostly node-local.
+            AppClass::HpcCapacity => 0.15,
+            // Data-parallel training: allreduce every step.
+            AppClass::AiTraining => 0.35,
+            // Tiny batches, nearly no fabric traffic.
+            AppClass::AiInference => 0.05,
+        }
+    }
 }
 
 /// Deterministic generator of mixed HPC+AI arrival traces.
@@ -340,6 +358,7 @@ impl TraceGen {
                     run_seconds,
                     submit_time: t,
                     boundness: class.boundness(&mut rng),
+                    comm_fraction: class.comm_fraction(),
                 }
             })
             .collect()
@@ -449,9 +468,18 @@ mod tests {
             assert!(j.run_seconds > 0.0);
             assert!(j.est_seconds >= j.run_seconds, "EASY needs est >= run");
             assert!((0.0..=1.0).contains(&j.boundness));
+            assert!((0.0..=1.0).contains(&j.comm_fraction));
             assert!(j.submit_time >= last, "arrivals must be ordered");
             last = j.submit_time;
         }
+        // Per-class comm fractions show up in the mix: AI-burst days are
+        // comm-heavier than HPC-classic days on average.
+        let comm = |js: &[Job]| {
+            js.iter().map(|j| j.comm_fraction).sum::<f64>() / js.len() as f64
+        };
+        let ai = TraceGen::booster_ai_day(2000, 5).generate();
+        let hpc = TraceGen::booster_hpc_day(2000, 5).generate();
+        assert!(comm(&ai) > comm(&hpc), "{} vs {}", comm(&ai), comm(&hpc));
     }
 
     #[test]

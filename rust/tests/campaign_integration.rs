@@ -82,6 +82,7 @@ fn scheduler_campaign_under_power_cap_completes_and_throttles() {
             run_seconds: 90.0,
             submit_time: (i as f64) * 5.0,
             boundness: 0.7,
+            comm_fraction: 0.2,
         })
         .collect();
     let recs = sched.run(jobs.clone());

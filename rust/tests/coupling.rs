@@ -1,0 +1,269 @@
+//! Acceptance suite for runtime coupling (ISSUE 3): with `Coupling`
+//! off, behavior is bit-for-bit the oracle engines (pinned by the
+//! `sim_scheduler` suites); with it on,
+//!
+//! * (a) a comm-bound multi-cell job is measurably stretched by a
+//!   co-scheduled multi-cell neighbour — and un-stretches (its `End`
+//!   re-timed earlier) when the neighbour leaves mid-flight;
+//! * (b) a `CapChange` mid-job shifts a running job's `End`;
+//! * (c) coupled sweep reports are identical for 1, 2 and 8 worker
+//!   threads.
+
+use leonardo_twin::campaign::{run_sweep, SweepGrid};
+use leonardo_twin::config::MachineConfig;
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::scheduler::{Coupling, Job, Partition, PowerCap, Scheduler};
+use leonardo_twin::sim::{Component, Event, ScheduledEvent};
+
+fn job(id: u64, nodes: u32, secs: f64, submit: f64, comm: f64) -> Job {
+    Job {
+        id,
+        partition: Partition::Booster,
+        nodes,
+        est_seconds: secs,
+        run_seconds: secs,
+        submit_time: submit,
+        boundness: 1.0,
+        comm_fraction: comm,
+    }
+}
+
+fn coupled_sched() -> Scheduler {
+    Scheduler::with_coupling(&MachineConfig::leonardo(), Coupling::full())
+}
+
+/// Counts Retime events on the shared stream.
+#[derive(Default)]
+struct RetimeProbe {
+    retimes: u32,
+}
+
+impl Component for RetimeProbe {
+    fn on_event(&mut self, _now: f64, ev: &Event, _out: &mut Vec<ScheduledEvent>) {
+        if let Event::Retime { .. } = ev {
+            self.retimes += 1;
+        }
+    }
+}
+
+/// The neighbour: fills all but 360 Booster nodes, so the probe job is
+/// forced into the leftover cells and shares at least one cell with it.
+fn neighbour(secs: f64) -> Job {
+    job(1, 3456 - 360, secs, 0.0, 0.0)
+}
+
+/// (a) A comm-bound multi-cell job stretches under a co-scheduled
+/// multi-cell neighbour; a compute-bound twin in the same spot does
+/// not.
+#[test]
+fn comm_bound_job_stretches_under_multi_cell_neighbour() {
+    // Comm-bound probe job next to a long-lived neighbour.
+    let probe = job(2, 360, 600.0, 1.0, 0.9);
+    let rec = coupled_sched().run(vec![neighbour(5_000.0), probe.clone()]);
+    assert!(
+        rec[&2].placement.cells_used() > 1,
+        "probe not multi-cell: {:?}",
+        rec[&2].placement.nodes_per_cell
+    );
+    let stretched = rec[&2].end_time - rec[&2].start_time;
+    assert!(stretched > 600.0 + 1.0, "no stretch: {stretched}");
+
+    // The same probe alone (no neighbour): still multi-cell-coupled to
+    // its own spread at most, but without the neighbour's cross load.
+    let alone = coupled_sched().run(vec![probe.clone()]);
+    let alone_dur = alone[&2].end_time - alone[&2].start_time;
+    assert!(
+        stretched > alone_dur,
+        "neighbour added no stretch: {stretched} vs {alone_dur}"
+    );
+
+    // A compute-bound twin in exactly the same spot is untouched.
+    let mut compute = probe;
+    compute.comm_fraction = 0.0;
+    let rec = coupled_sched().run(vec![neighbour(5_000.0), compute]);
+    let dur = rec[&2].end_time - rec[&2].start_time;
+    assert!((dur - 600.0).abs() < 1e-9, "compute-bound stretched: {dur}");
+}
+
+/// (a, dynamic) When the neighbour ends mid-flight, the running job's
+/// provisional End is re-timed *earlier* — congestion relief shortens
+/// it relative to a neighbour that stays — and Retime events appear on
+/// the shared stream for observers.
+#[test]
+fn neighbour_departure_retimes_end_earlier() {
+    let probe = || job(2, 360, 3_000.0, 1.0, 0.9);
+    // Neighbour outlives the probe entirely.
+    let full = coupled_sched().run(vec![neighbour(10_000.0), probe()]);
+    // Neighbour leaves while the probe is still running.
+    let mut probe_events = RetimeProbe::default();
+    let mid = coupled_sched().run_with(
+        vec![neighbour(1_000.0), probe()],
+        Vec::new(),
+        &mut [&mut probe_events],
+    );
+    assert_eq!(
+        full[&2].start_time, mid[&2].start_time,
+        "same placement instant in both scenarios"
+    );
+    let full_dur = full[&2].end_time - full[&2].start_time;
+    let mid_dur = mid[&2].end_time - mid[&2].start_time;
+    assert!(
+        mid_dur < full_dur - 1e-3,
+        "departure did not pull the End earlier: {mid_dur} vs {full_dur}"
+    );
+    assert!(mid_dur > 3_000.0, "still stretched vs nominal: {mid_dur}");
+    assert!(
+        probe_events.retimes > 0,
+        "no Retime event reached the observers"
+    );
+}
+
+/// (b) A CapChange mid-job shifts the running job's End (cap coupling);
+/// without coupling the End stays frozen at its start-time value.
+#[test]
+fn cap_change_mid_job_shifts_end() {
+    let cap = PowerCap {
+        cap_mw: 99.0,
+        node_watts: 2238.0,
+        idle_watts: 365.0,
+    };
+    let events = || vec![ScheduledEvent::at(50.0, Event::CapChange { cap_mw: Some(4.0) })];
+    let run = |coupling: Coupling| {
+        let mut s = Scheduler::with_coupling(&MachineConfig::leonardo(), coupling);
+        s.power_cap = Some(cap);
+        s.run_with(vec![job(1, 3000, 100.0, 0.0, 0.0)], events(), &mut [])
+    };
+    let frozen = run(Coupling::default());
+    assert_eq!(frozen[&1].end_time, 100.0, "uncoupled End moved");
+    let coupled = run(Coupling::full());
+    assert!(
+        coupled[&1].end_time > 100.0,
+        "cap change did not stretch the running job: {}",
+        coupled[&1].end_time
+    );
+    // 50 s at nominal, the rest at the 4 MW DVFS workpoint.
+    let draw_mw = (3000.0 * 2238.0 + 456.0 * 365.0) / 1e6;
+    let scale = (4.0 / draw_mw).sqrt().clamp(0.5, 1.0);
+    let expected = 50.0 + 50.0 * (1.0 / scale);
+    assert!(
+        (coupled[&1].end_time - expected).abs() < 1e-9,
+        "{} vs {expected}",
+        coupled[&1].end_time
+    );
+    // Lifting the cap mid-stretch pulls the End back in.
+    let mut s = Scheduler::with_coupling(&MachineConfig::leonardo(), Coupling::full());
+    s.power_cap = Some(PowerCap { cap_mw: 4.0, ..cap });
+    let relieved = s.run_with(
+        vec![job(1, 3000, 100.0, 0.0, 0.0)],
+        vec![ScheduledEvent::at(50.0, Event::CapChange { cap_mw: None })],
+        &mut [],
+    );
+    let throttled_end = 100.0 / scale; // fully capped baseline
+    assert!(
+        relieved[&1].end_time < throttled_end,
+        "cap lift did not shorten the job: {} vs {throttled_end}",
+        relieved[&1].end_time
+    );
+    assert!(relieved[&1].end_time > 100.0, "ran faster than nominal");
+    // The job finished at nominal clocks, but the throttled interval
+    // stays on the books.
+    assert_eq!(relieved[&1].dvfs_scale, 1.0, "final workpoint is nominal");
+    assert!(
+        relieved[&1].min_dvfs_scale < 1.0,
+        "capped interval lost from the record"
+    );
+}
+
+/// A cap move on fully memory-bound work changes *power*, not runtime:
+/// the End stays put (time factor is 1 at any scale) but a Retime still
+/// reaches observers so the energy books see the capped interval, and
+/// the record carries the new workpoint.
+#[test]
+fn cap_change_on_memory_bound_job_retimes_power_not_end() {
+    let mut s = Scheduler::with_coupling(
+        &MachineConfig::leonardo(),
+        Coupling {
+            congestion: false,
+            cap: true,
+        },
+    );
+    s.power_cap = Some(PowerCap {
+        cap_mw: 99.0,
+        node_watts: 2238.0,
+        idle_watts: 365.0,
+    });
+    let mut j = job(1, 3000, 100.0, 0.0, 0.0);
+    j.boundness = 0.0;
+    let mut probe = RetimeProbe::default();
+    let rec = s.run_with(
+        vec![j],
+        vec![ScheduledEvent::at(50.0, Event::CapChange { cap_mw: Some(4.0) })],
+        &mut [&mut probe],
+    );
+    assert_eq!(rec[&1].end_time, 100.0, "memory-bound runtime unaffected");
+    assert!(rec[&1].dvfs_scale < 1.0, "record missing the capped workpoint");
+    assert!(probe.retimes > 0, "observers never heard the power change");
+}
+
+/// (c) Coupled sweep reports are bit-for-bit identical for 1, 2 and 8
+/// worker threads — retiming is deterministic per scenario, and the
+/// merge is thread-count independent.
+#[test]
+fn coupled_sweep_identical_across_thread_counts() {
+    let twin = Twin::leonardo();
+    let grid = SweepGrid::new(
+        vec![1, 2, 3, 4],
+        vec![None, Some(7.5), Some(6.0)],
+        vec!["day".into(), "ai".into()],
+        100,
+    )
+    .unwrap()
+    .with_coupling(Coupling::full());
+    assert_eq!(grid.len(), 24);
+    let r1 = run_sweep(&twin, &grid, 1);
+    let r2 = run_sweep(&twin, &grid, 2);
+    let r8 = run_sweep(&twin, &grid, 8);
+    assert_eq!(r1, r2, "coupled 1-thread vs 2-thread reports differ");
+    assert_eq!(r1, r8, "coupled 1-thread vs 8-thread reports differ");
+    assert_eq!(r1.stats.len(), 24);
+    assert_eq!(
+        r1.scenario_table().to_markdown(),
+        r8.scenario_table().to_markdown()
+    );
+    assert_eq!(r1.cap_table().to_markdown(), r8.cap_table().to_markdown());
+    assert_eq!(
+        r1.summary_table().to_markdown(),
+        r8.summary_table().to_markdown()
+    );
+}
+
+/// Coupled accounting stays safe: all jobs complete, the machine drains
+/// back to fully free, and no instant oversubscribes the partition even
+/// though End times move around.
+#[test]
+fn coupled_replay_keeps_accounting_invariants() {
+    use leonardo_twin::workloads::TraceGen;
+    let jobs = TraceGen::booster_hpc_day(800, 23).generate();
+    let mut s = coupled_sched();
+    s.power_cap = Some(PowerCap {
+        cap_mw: 6.5,
+        node_watts: 2238.0,
+        idle_watts: 365.0,
+    });
+    let recs = s.run(jobs.clone());
+    assert_eq!(recs.len(), jobs.len());
+    assert_eq!(s.free_nodes(Partition::Booster), 3456);
+    let mut events: Vec<(f64, i64)> = Vec::new();
+    for j in &jobs {
+        let r = &recs[&j.id];
+        assert!(r.end_time > r.start_time, "job {} ran backwards", j.id);
+        events.push((r.start_time, j.nodes as i64));
+        events.push((r.end_time, -(j.nodes as i64)));
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut load = 0i64;
+    for (_, delta) in events {
+        load += delta;
+        assert!(load <= 3456, "booster oversubscribed: {load}");
+    }
+}

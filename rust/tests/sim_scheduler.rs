@@ -27,6 +27,7 @@ fn job(id: u64, nodes: u32, secs: f64, submit: f64) -> Job {
         run_seconds: secs,
         submit_time: submit,
         boundness: 1.0,
+        comm_fraction: 0.0,
     }
 }
 
@@ -66,6 +67,7 @@ fn event_engine_equals_rescan_on_random_streams() {
                     run_seconds: rng.range_f64(1.0, 500.0),
                     submit_time: rng.range_f64(0.0, 100.0),
                     boundness: rng.f64(),
+                    comm_fraction: rng.f64() * 0.5,
                 }
             })
             .collect();
@@ -172,7 +174,7 @@ fn no_double_release_and_no_oversubscription() {
         events.push((r.start_time, j.nodes as i64));
         events.push((r.end_time, -(j.nodes as i64)));
     }
-    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     let mut load = 0i64;
     for (_, delta) in events {
         load += delta;
