@@ -1,74 +1,120 @@
-//! Campaign sweep throughput: scenarios/sec on the coupled 24-scenario
-//! acceptance grid (4 seeds x 3 caps x 2 mixes), fanned across all
-//! available cores.
+//! Campaign sweep throughput: scenarios/sec on a 24-scenario acceptance
+//! grid (4 seeds x 3 caps x 2 mixes), fanned across all available
+//! cores, in three tiers:
 //!
-//! This is the perf trajectory of the *campaign* layer — the scheduler
-//! bench (`BENCH_scheduler.json`) tracks the per-event hot path, this
-//! one tracks the end-to-end scenario engine with runtime coupling on
-//! (provisional-End retiming, congestion + cap feedback), which is the
-//! configuration operators actually sweep. Results are written to
+//! 1. **uncoupled / streaming** — the feedback-free ceiling;
+//! 2. **coupled / incremental streaming** — the production engine:
+//!    cell-indexed incremental retiming + per-worker scenario arenas +
+//!    mpsc merge-as-they-finish;
+//! 3. **coupled / retime-all join-then-merge** — the PR 3 baseline:
+//!    every perturbation re-derives every running coupled job, every
+//!    scenario pays a fresh rig, results merge after the join.
+//!
+//! Gates: the incremental engine must run the coupled grid at >= 2x the
+//! PR 3 baseline, and coupled throughput must land within 3x of
+//! uncoupled — "coupled sweeps as cheap as uncoupled ones" is the ISSUE
+//! 4 acceptance bar (smoke mode gates with noise headroom, 1.5x/4x —
+//! shared-runner wall-clock ratios at small scale jitter). Reports are
+//! asserted byte-identical between tiers 2 and 3 (same numbers,
+//! different cost), and the trajectory is written to
 //! `BENCH_campaign.json`.
 //!
 //! `cargo bench --bench campaign_throughput -- --smoke` shrinks the
 //! per-scenario day and runs one rep — the CI smoke that both gates the
-//! coupled sweep end-to-end and emits the JSON artifact.
+//! coupled engines end-to-end and emits the JSON artifact.
 
 use std::time::Instant;
 
-use leonardo_twin::campaign::{run_sweep, SweepGrid};
+use leonardo_twin::campaign::{run_sweep, run_sweep_streaming, CampaignReport, SweepGrid};
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::scheduler::Coupling;
 
-fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
-    let jobs = if smoke { 200 } else { 1_000 };
-    let reps = if smoke { 1 } else { 3 };
-    let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
-
-    let twin = Twin::leonardo();
-    let grid = SweepGrid::new(
-        vec![1, 2, 3, 4],
-        vec![None, Some(7.5), Some(6.0)],
-        vec!["day".into(), "ai".into()],
-        jobs,
-    )
-    .expect("static grid")
-    .with_coupling(Coupling::full());
-    assert_eq!(grid.len(), 24, "the acceptance grid is 24 scenarios");
-
+fn best_of<F: FnMut() -> CampaignReport>(reps: usize, mut f: F) -> (f64, CampaignReport) {
     let mut best = f64::INFINITY;
     let mut report = None;
     for _ in 0..reps {
         let t0 = Instant::now();
-        let r = run_sweep(&twin, &grid, threads);
+        let r = f();
         best = best.min(t0.elapsed().as_secs_f64());
         report = Some(r);
     }
-    let report = report.expect("at least one rep");
+    (best, report.expect("at least one rep"))
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // Smoke still runs best-of-2 on a 300-job day: the gates below are
+    // ratios of wall-clock timings, and a single one-shot rep of a tiny
+    // grid (where thread-spawn and rig-build fixed costs rival the
+    // retiming work being measured) would make the required CI step
+    // timing-flaky on shared runners.
+    let jobs = if smoke { 300 } else { 1_000 };
+    let reps = if smoke { 2 } else { 3 };
+    let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+
+    let twin = Twin::leonardo();
+    // hpc first: capability heroes span cells and communicate, so the
+    // retimer — not the trace — is what the coupled tiers measure.
+    let grid = SweepGrid::new(
+        vec![1, 2, 3, 4],
+        vec![None, Some(7.5), Some(6.0)],
+        vec!["hpc".into(), "day".into()],
+        jobs,
+    )
+    .expect("static grid");
+    assert_eq!(grid.len(), 24, "the acceptance grid is 24 scenarios");
+    let coupled_grid = grid.clone().with_coupling(Coupling::full());
+    let oracle_grid = coupled_grid.clone().with_retime_all(true);
+
+    let (uncoupled_s, _) = best_of(reps, || run_sweep_streaming(&twin, &grid, threads));
+    let (coupled_s, coupled) = best_of(reps, || run_sweep_streaming(&twin, &coupled_grid, threads));
+    let (oracle_s, oracle) = best_of(reps, || run_sweep(&twin, &oracle_grid, threads));
 
     // The coupled sweep must be a real sweep: every scenario completed,
-    // capped scenarios throttled, and the coupled stretch shows up.
-    assert_eq!(report.stats.len(), 24);
-    assert!(report.stats.iter().all(|s| s.jobs == jobs));
-    let throttled: usize = report
+    // capped scenarios throttled, the coupled stretch shows up, and the
+    // incremental engine actually elided re-time work.
+    assert_eq!(coupled.stats.len(), 24);
+    assert!(coupled.stats.iter().all(|s| s.jobs == jobs));
+    let throttled: usize = coupled
         .stats
         .iter()
         .filter(|s| s.cap_mw.is_some())
         .map(|s| s.throttled)
         .sum();
     assert!(throttled > 0, "capped scenarios did not throttle");
-    let max_stretch = report
+    let max_stretch = coupled
         .stats
         .iter()
         .map(|s| s.p95_stretch)
         .fold(0.0f64, f64::max);
     assert!(max_stretch > 1.0, "coupling produced no stretch");
+    let elided: u64 = coupled.stats.iter().map(|s| s.retimes_elided).sum();
+    assert!(elided > 0, "the cell index elided no re-times");
 
-    let scenarios_per_s = 24.0 / best;
-    let jobs_per_s = (24 * jobs) as f64 / best;
+    // Same numbers, different cost: the incremental streaming engine
+    // and the retime-all join-then-merge baseline may only differ in
+    // the elision counter.
+    for (a, b) in coupled.stats.iter().zip(&oracle.stats) {
+        assert_eq!(a.makespan_h, b.makespan_h, "engines diverged");
+        assert_eq!(a.energy_mwh, b.energy_mwh, "engines diverged");
+        assert_eq!(a.p95_stretch, b.p95_stretch, "engines diverged");
+        assert_eq!(a.events_skipped, b.events_skipped, "engines diverged");
+    }
+
+    let per_s = |secs: f64| 24.0 / secs;
+    let speedup_vs_oracle = oracle_s / coupled_s;
+    let coupled_penalty = coupled_s / uncoupled_s;
     println!(
-        "campaign sweep: 24 coupled scenarios x {jobs} jobs on {threads} threads \
-         in {best:.2} s = {scenarios_per_s:.2} scenarios/s ({jobs_per_s:.0} jobs/s)"
+        "campaign sweep: 24 scenarios x {jobs} jobs on {threads} threads\n\
+         \x20 uncoupled streaming            {uncoupled_s:.2} s = {:.2} scenarios/s\n\
+         \x20 coupled incremental streaming  {coupled_s:.2} s = {:.2} scenarios/s\n\
+         \x20 coupled retime-all join-merge  {oracle_s:.2} s = {:.2} scenarios/s\n\
+         \x20 incremental vs PR 3 baseline   {speedup_vs_oracle:.2}x\n\
+         \x20 coupled vs uncoupled           {coupled_penalty:.2}x\n\
+         \x20 re-times elided                {elided}",
+        per_s(uncoupled_s),
+        per_s(coupled_s),
+        per_s(oracle_s),
     );
     println!("max p95 stretch across the grid: {max_stretch:.3}x nominal");
 
@@ -76,19 +122,54 @@ fn main() {
         concat!(
             "{{\n",
             "  \"bench\": \"campaign_throughput\",\n",
-            "  \"grid\": \"4 seeds x 3 caps x 2 mixes (coupled)\",\n",
+            "  \"grid\": \"4 seeds x 3 caps x 2 mixes (hpc+day)\",\n",
             "  \"smoke\": {},\n",
             "  \"jobs_per_scenario\": {},\n",
             "  \"threads\": {},\n",
-            "  \"seconds\": {:.3},\n",
-            "  \"scenarios_per_s\": {:.3},\n",
-            "  \"jobs_per_s\": {:.1}\n",
+            "  \"uncoupled_seconds\": {:.3},\n",
+            "  \"uncoupled_scenarios_per_s\": {:.3},\n",
+            "  \"coupled_seconds\": {:.3},\n",
+            "  \"coupled_scenarios_per_s\": {:.3},\n",
+            "  \"retime_all_seconds\": {:.3},\n",
+            "  \"retime_all_scenarios_per_s\": {:.3},\n",
+            "  \"incremental_speedup_vs_retime_all\": {:.3},\n",
+            "  \"coupled_over_uncoupled\": {:.3},\n",
+            "  \"retimes_elided\": {}\n",
             "}}\n"
         ),
-        smoke, jobs, threads, best, scenarios_per_s, jobs_per_s
+        smoke,
+        jobs,
+        threads,
+        uncoupled_s,
+        per_s(uncoupled_s),
+        coupled_s,
+        per_s(coupled_s),
+        oracle_s,
+        per_s(oracle_s),
+        speedup_vs_oracle,
+        coupled_penalty,
+        elided,
     );
     match std::fs::write("BENCH_campaign.json", &json) {
         Ok(()) => println!("wrote BENCH_campaign.json"),
         Err(e) => eprintln!("warning: could not write BENCH_campaign.json: {e}"),
     }
+
+    // Acceptance gates (ISSUE 4): incremental >= 2x the PR 3 retime-all
+    // baseline on the coupled grid, and coupled within 3x of uncoupled.
+    // The smoke tier gates with headroom: its ratios come from two
+    // independently timed ~seconds-long runs on a shared CI runner, so
+    // a stall in either tier alone moves the ratio — the strict numbers
+    // are enforced at full scale, where the retiming volume dominates.
+    let (min_speedup, max_penalty) = if smoke { (1.5, 4.0) } else { (2.0, 3.0) };
+    assert!(
+        speedup_vs_oracle >= min_speedup,
+        "incremental coupled engine only {speedup_vs_oracle:.2}x the retime-all baseline \
+         (gate: >= {min_speedup}x)"
+    );
+    assert!(
+        coupled_penalty <= max_penalty,
+        "coupled sweep {coupled_penalty:.2}x slower than uncoupled \
+         (gate: within {max_penalty}x)"
+    );
 }

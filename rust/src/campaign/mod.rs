@@ -28,6 +28,16 @@
 //! time/energy trade-off. Coupling changes nothing about the engine's
 //! determinism, so coupled reports are still bit-for-bit identical for
 //! any worker-thread count.
+//!
+//! Two fan-out engines share every scenario-level brick:
+//! [`run_sweep_streaming`] (the production path — each worker keeps a
+//! persistent [`ReplayRig`] *arena* it [`ReplayRig::reset`]s per
+//! scenario, and streams `(grid index, stats)` over an `mpsc` channel
+//! so the merged report builds as workers finish) and [`run_sweep`]
+//! (the retained join-then-merge baseline: fresh rig per scenario,
+//! merge after the join). Both produce byte-identical
+//! [`CampaignReport`]s — the streaming merge fills a pre-sized slot
+//! table by grid index, so completion order is invisible.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -52,6 +62,10 @@ pub struct Scenario {
     pub seed: u64,
     pub cap_mw: Option<f64>,
     pub coupling: Coupling,
+    /// Replay on the PR 3 retime-all walk instead of the incremental
+    /// cell-indexed retimer (see [`crate::scheduler::Scheduler::retime_all`]) —
+    /// the bench baseline; records are bit-identical either way.
+    pub retime_all: bool,
     pub trace: TraceGen,
 }
 
@@ -80,6 +94,10 @@ pub struct SweepGrid {
     /// Runtime coupling applied to every scenario (default off — the
     /// replay is then bit-for-bit the uncoupled oracle engines).
     pub coupling: Coupling,
+    /// Replay every scenario on the PR 3 retime-all walk (default off:
+    /// incremental cell-indexed retiming). Identical records; kept as
+    /// the throughput-bench baseline and identity-test oracle.
+    pub retime_all: bool,
 }
 
 impl SweepGrid {
@@ -118,12 +136,19 @@ impl SweepGrid {
             mixes,
             jobs,
             coupling: Coupling::default(),
+            retime_all: false,
         })
     }
 
     /// Same grid with runtime coupling applied to every scenario.
     pub fn with_coupling(mut self, coupling: Coupling) -> Self {
         self.coupling = coupling;
+        self
+    }
+
+    /// Same grid replayed on the PR 3 retime-all walk (bench baseline).
+    pub fn with_retime_all(mut self, retime_all: bool) -> Self {
+        self.retime_all = retime_all;
         self
     }
 
@@ -150,6 +175,7 @@ impl SweepGrid {
                         seed,
                         cap_mw,
                         coupling: self.coupling,
+                        retime_all: self.retime_all,
                         trace,
                     });
                 }
@@ -187,6 +213,13 @@ pub struct ScenarioStats {
     pub mean_stretch: f64,
     /// 95th-percentile runtime stretch.
     pub p95_stretch: f64,
+    /// Stale re-timed `End`s skipped at pop time (0 when uncoupled).
+    pub events_skipped: u64,
+    /// Re-time evaluations elided by the cell index / rate-unchanged
+    /// check (0 when uncoupled or on the retime-all baseline's
+    /// untouched-job skips). Pure observability — never feeds back into
+    /// any scheduling number.
+    pub retimes_elided: u64,
 }
 
 /// Index-percentile over an ascending-sorted slice (the same
@@ -253,6 +286,8 @@ impl ScenarioStats {
             peak_congestion: congestion.peak_load(),
             mean_stretch,
             p95_stretch: percentile(&stretches, 0.95),
+            events_skipped: 0,
+            retimes_elided: 0,
         }
     }
 }
@@ -301,14 +336,40 @@ impl ReplayRig {
             total_nodes,
         }
     }
+
+    /// Re-arm the rig for another scenario, reusing every long-lived
+    /// allocation — scheduler pools and order buffers, the monitor's
+    /// metric series, the tracker's cell map — instead of rebuilding
+    /// from the `Twin`. This is the per-worker *scenario arena* of the
+    /// streaming sweep; a reset rig replays bit-identically to a fresh
+    /// [`ReplayRig::new`] (pinned by the arena identity test).
+    pub fn reset(
+        &mut self,
+        twin: &Twin,
+        partition: Partition,
+        cap_mw: Option<f64>,
+        coupling: Coupling,
+    ) {
+        self.sched.reset();
+        self.sched.coupling = coupling;
+        if coupling.congestion && self.sched.net.is_none() {
+            self.sched.net = Some(twin.net.clone());
+        }
+        if let Some(mw) = cap_mw {
+            self.sched.power_cap = Some(PowerCap::for_model(&twin.power, mw));
+        }
+        self.total_nodes = self.sched.total_nodes(partition);
+        self.monitor.reset(self.total_nodes, partition == Partition::Booster);
+        self.congestion.reset();
+    }
 }
 
-/// Replay one scenario on a private scheduler + observer set. Pure in
-/// `(twin, scenario)` — the unit of work the sweep fans out.
-pub fn run_scenario(twin: &Twin, sc: &Scenario) -> ScenarioStats {
+/// Replay one scenario on an already-armed rig — the core the fresh-rig
+/// path and the arena path share, so they cannot diverge.
+fn replay(rig: &mut ReplayRig, sc: &Scenario) -> ScenarioStats {
     let jobs = sc.trace.generate();
     assert!(!jobs.is_empty(), "empty scenario trace");
-    let mut rig = ReplayRig::new(twin, sc.trace.partition, sc.cap_mw, sc.coupling);
+    rig.sched.retime_all = sc.retime_all;
     let records = {
         let mut observers: [&mut dyn Component; 2] =
             [&mut rig.monitor, &mut rig.congestion];
@@ -319,7 +380,34 @@ pub fn run_scenario(twin: &Twin, sc: &Scenario) -> ScenarioStats {
     stats.mix = sc.mix.clone();
     stats.seed = sc.seed;
     stats.cap_mw = sc.cap_mw;
+    stats.events_skipped = rig.sched.last_run.events_skipped;
+    stats.retimes_elided = rig.sched.last_run.retimes_elided;
     stats
+}
+
+/// Replay one scenario on a private scheduler + observer set. Pure in
+/// `(twin, scenario)` — the unit of work [`run_sweep`] fans out, paying
+/// a fresh rig per scenario (the PR 3 cost shape the streaming arena is
+/// benched against).
+pub fn run_scenario(twin: &Twin, sc: &Scenario) -> ScenarioStats {
+    let mut rig = ReplayRig::new(twin, sc.trace.partition, sc.cap_mw, sc.coupling);
+    replay(&mut rig, sc)
+}
+
+/// Replay one scenario on a worker's persistent arena: the first call
+/// builds the rig, every later call [`ReplayRig::reset`]s it — no Twin
+/// cloning, no pool/series reallocation. Bit-identical to
+/// [`run_scenario`].
+pub fn run_scenario_arena(
+    arena: &mut Option<ReplayRig>,
+    twin: &Twin,
+    sc: &Scenario,
+) -> ScenarioStats {
+    match arena {
+        Some(rig) => rig.reset(twin, sc.trace.partition, sc.cap_mw, sc.coupling),
+        None => *arena = Some(ReplayRig::new(twin, sc.trace.partition, sc.cap_mw, sc.coupling)),
+    }
+    replay(arena.as_mut().expect("arena armed above"), sc)
 }
 
 /// Merged outcome of a sweep: per-scenario stats in grid order plus
@@ -347,6 +435,8 @@ impl CampaignReport {
                 "Energy [MWh]",
                 "Throttled",
                 "p95 stretch",
+                "Skipped",
+                "Elided",
             ],
         );
         for s in &self.stats {
@@ -363,6 +453,8 @@ impl CampaignReport {
                 f2(s.energy_mwh),
                 s.throttled.to_string(),
                 f2(s.p95_stretch),
+                s.events_skipped.to_string(),
+                s.retimes_elided.to_string(),
             ]);
         }
         t
@@ -397,6 +489,8 @@ impl CampaignReport {
         metric("peak congestion", "link load", &|s| s.peak_congestion);
         metric("mean stretch", "x nominal", &|s| s.mean_stretch);
         metric("p95 stretch", "x nominal", &|s| s.p95_stretch);
+        metric("stale events skipped", "re-timed Ends", &|s| s.events_skipped as f64);
+        metric("re-times elided", "walks avoided", &|s| s.retimes_elided as f64);
         t
     }
 
@@ -514,7 +608,12 @@ pub fn parse_routing(name: &str) -> Result<crate::topology::Routing> {
     }
 }
 
-/// Fan the grid across `threads` workers with `std::thread::scope`.
+/// Fan the grid across `threads` workers with `std::thread::scope`,
+/// joining all workers before merging (the PR 2/3 shape: each worker
+/// buffers its results and the merge happens after the join, and every
+/// scenario pays a fresh [`ReplayRig`]). Retained as the cost-faithful
+/// baseline and identity oracle for [`run_sweep_streaming`] — both
+/// produce byte-identical reports.
 ///
 /// Work distribution is an atomic cursor (cheap work stealing — long
 /// scenarios don't convoy short ones); each worker owns its scheduler
@@ -550,6 +649,56 @@ pub fn run_sweep(twin: &Twin, grid: &SweepGrid, threads: usize) -> CampaignRepor
     indexed.sort_by_key(|&(i, _)| i);
     CampaignReport {
         stats: indexed.into_iter().map(|(_, s)| s).collect(),
+    }
+}
+
+/// Streaming sweep: the production engine. Workers own a persistent
+/// scenario arena ([`run_scenario_arena`] — one [`ReplayRig`] reset per
+/// scenario instead of rebuilt) and send `(grid index, stats)` over an
+/// `std::sync::mpsc` channel the moment each scenario finishes, so the
+/// merged report fills in while slower scenarios are still running —
+/// no join barrier, no per-worker result buffers.
+///
+/// The merge is by grid index into a pre-sized slot table, so the
+/// report is byte-identical to [`run_sweep`]'s for any thread count and
+/// any completion order (pinned by `rust/tests/campaign_sweep.rs`).
+pub fn run_sweep_streaming(twin: &Twin, grid: &SweepGrid, threads: usize) -> CampaignReport {
+    let scenarios = grid.scenarios();
+    let workers = threads.clamp(1, scenarios.len().max(1));
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<ScenarioStats>> = vec![None; scenarios.len()];
+    std::thread::scope(|s| {
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, ScenarioStats)>();
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let scenarios = &scenarios;
+            s.spawn(move || {
+                let mut arena: Option<ReplayRig> = None;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= scenarios.len() {
+                        break;
+                    }
+                    let stats = run_scenario_arena(&mut arena, twin, &scenarios[i]);
+                    if tx.send((i, stats)).is_err() {
+                        break; // receiver gone: the scope is unwinding
+                    }
+                }
+            });
+        }
+        // The workers hold the only remaining senders: the receive loop
+        // ends exactly when the last worker finishes its last scenario.
+        drop(tx);
+        for (i, stats) in rx {
+            slots[i] = Some(stats);
+        }
+    });
+    CampaignReport {
+        stats: slots
+            .into_iter()
+            .map(|s| s.expect("worker died before streaming its scenario"))
+            .collect(),
     }
 }
 
@@ -663,7 +812,7 @@ mod tests {
         let caps = report.cap_table();
         assert_eq!(caps.rows.len(), 2);
         let summary = report.summary_table();
-        assert_eq!(summary.rows.len(), 8);
+        assert_eq!(summary.rows.len(), 10);
         // Sub-idle-floor capping forces every job onto the 0.5 DVFS
         // floor: clock-bound work stretches, and the stretch percentiles
         // surface it.
@@ -698,6 +847,104 @@ mod tests {
             coupled.stats[0].mean_stretch,
             plain.stats[0].mean_stretch
         );
+    }
+
+    /// The streaming engine (arena rigs + mpsc merge) is byte-identical
+    /// to the retained join-then-merge path for any thread count.
+    #[test]
+    fn streaming_sweep_matches_join_then_merge() {
+        let twin = Twin::leonardo();
+        for coupling in [Coupling::default(), Coupling::full()] {
+            let grid = small_grid().with_coupling(coupling);
+            let joined = run_sweep(&twin, &grid, 2);
+            for threads in [1, 2, 8] {
+                let streamed = run_sweep_streaming(&twin, &grid, threads);
+                assert_eq!(
+                    joined, streamed,
+                    "streaming vs join-then-merge diverged (coupled={}, {threads} threads)",
+                    coupling.enabled()
+                );
+            }
+        }
+    }
+
+    /// A reset arena rig replays bit-identically to a fresh rig, across
+    /// partition/cap/coupling changes between scenarios.
+    #[test]
+    fn arena_reset_matches_fresh_rig() {
+        let twin = Twin::leonardo();
+        let grid = SweepGrid::new(
+            vec![5, 6],
+            vec![None, Some(6.0)],
+            vec!["day".into(), "hpc".into()],
+            60,
+        )
+        .unwrap()
+        .with_coupling(Coupling::full());
+        let mut arena: Option<ReplayRig> = None;
+        for sc in &grid.scenarios() {
+            let fresh = run_scenario(&twin, sc);
+            let reused = run_scenario_arena(&mut arena, &twin, sc);
+            assert_eq!(fresh, reused, "arena drift on {}", sc.label());
+        }
+    }
+
+    /// The counters surface in the report tables: per-scenario columns
+    /// and aggregate rows, formatted as plain integers.
+    #[test]
+    fn counter_columns_render_in_tables() {
+        let mut s = ScenarioStats::collect(
+            &[crate::scheduler::Job {
+                id: 1,
+                partition: Partition::Booster,
+                nodes: 10,
+                est_seconds: 10.0,
+                run_seconds: 10.0,
+                submit_time: 0.0,
+                boundness: 1.0,
+                comm_fraction: 0.0,
+            }],
+            &{
+                let mut m = BTreeMap::new();
+                m.insert(
+                    1,
+                    JobRecord {
+                        id: 1,
+                        start_time: 0.0,
+                        end_time: 10.0,
+                        placement: crate::network::Placement {
+                            nodes_per_cell: vec![(0, 10)],
+                        },
+                        dvfs_scale: 1.0,
+                        min_dvfs_scale: 1.0,
+                    },
+                );
+                m
+            },
+            3456,
+            &PowerMonitor::new(
+                crate::power::PowerModel::new(crate::hardware::NodeSpec::davinci(), 1.1),
+                Utilization::hpl(),
+                3456,
+            ),
+            &CongestionTracker::new([(0, 180)]),
+        );
+        s.mix = "day".into();
+        s.events_skipped = 42;
+        s.retimes_elided = 1337;
+        let report = CampaignReport { stats: vec![s] };
+        let t = report.scenario_table();
+        assert_eq!(t.headers[t.headers.len() - 2], "Skipped");
+        assert_eq!(t.headers[t.headers.len() - 1], "Elided");
+        let row = &t.rows[0];
+        assert_eq!(row[row.len() - 2], "42");
+        assert_eq!(row[row.len() - 1], "1337");
+        let summary = report.summary_table();
+        let md = summary.to_markdown();
+        assert!(md.contains("stale events skipped"), "{md}");
+        assert!(md.contains("re-times elided"), "{md}");
+        assert!(md.contains("42"), "{md}");
+        assert!(md.contains("1337"), "{md}");
     }
 
     #[test]

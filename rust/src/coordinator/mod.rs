@@ -484,13 +484,15 @@ impl Twin {
                 [&mut rig.monitor, &mut rig.congestion, &mut counter];
             rig.sched.run_with(jobs.clone(), Vec::new(), &mut observers)
         };
-        let stats = crate::campaign::ScenarioStats::collect(
+        let mut stats = crate::campaign::ScenarioStats::collect(
             &jobs,
             &records,
             rig.total_nodes,
             &rig.monitor,
             &rig.congestion,
         );
+        stats.events_skipped = rig.sched.last_run.events_skipped;
+        stats.retimes_elided = rig.sched.last_run.retimes_elided;
 
         let mut summary = Table::new(
             "Operations replay — event-driven day on the Booster partition",
@@ -533,6 +535,18 @@ impl Twin {
             format!("{submitted}/{started}/{ended}"),
             "submit/start/end",
         );
+        row(
+            &mut summary,
+            "stale events skipped",
+            stats.events_skipped.to_string(),
+            "re-timed Ends",
+        );
+        row(
+            &mut summary,
+            "re-times elided",
+            stats.retimes_elided.to_string(),
+            "cell index + rate-unchanged",
+        );
 
         let power = rig.monitor.store.energy_report();
         let store = rig.monitor.store.clone();
@@ -546,15 +560,16 @@ impl Twin {
     }
 
     /// Fan a `seeds x caps x mixes` scenario grid across `threads`
-    /// workers and merge the outcomes into a deterministic,
-    /// thread-count-independent campaign report (see [`crate::campaign`];
-    /// CLI: `leonardo-twin sweep`).
+    /// workers on the streaming engine — persistent per-worker scenario
+    /// arenas, results merged over an mpsc channel as they finish — and
+    /// return the deterministic, thread-count-independent campaign
+    /// report (see [`crate::campaign`]; CLI: `leonardo-twin sweep`).
     pub fn sweep(
         &self,
         grid: &crate::campaign::SweepGrid,
         threads: usize,
     ) -> crate::campaign::CampaignReport {
-        crate::campaign::run_sweep(self, grid, threads)
+        crate::campaign::run_sweep_streaming(self, grid, threads)
     }
 
     /// §2.2 latency budget table.
@@ -816,6 +831,21 @@ mod tests {
             .count();
         assert!(moved > 0, "coupling changed no completion");
         assert!(coupled.summary.rows.len() >= 12);
+        // The coupled summary surfaces the hot-path counters, as plain
+        // integers (`--coupled` CLI output prints this table).
+        let cell = |name: &str| -> String {
+            coupled
+                .summary
+                .rows
+                .iter()
+                .find(|r| r[0] == name)
+                .unwrap_or_else(|| panic!("missing '{name}' row"))[1]
+                .clone()
+        };
+        let skipped: u64 = cell("stale events skipped").parse().unwrap();
+        let elided: u64 = cell("re-times elided").parse().unwrap();
+        assert!(skipped > 0, "a coupled hpc day must re-time some Ends");
+        assert!(elided > 0, "the cell index elided nothing");
     }
 
     #[test]

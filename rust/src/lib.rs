@@ -50,9 +50,11 @@
 //!   operations-day replay ([`coordinator::Twin::operations_replay`]);
 //! * [`campaign`] — the multi-threaded scenario-sweep engine: a
 //!   `seeds x power caps x mixes` grid fanned across cores with
-//!   `std::thread::scope`, merged into a deterministic,
-//!   thread-count-independent report ([`campaign::run_sweep`], CLI
-//!   `sweep`);
+//!   `std::thread::scope`, workers replaying on persistent scenario
+//!   arenas and streaming results over an mpsc channel into a
+//!   deterministic, thread-count-independent report
+//!   ([`campaign::run_sweep_streaming`], with [`campaign::run_sweep`]
+//!   kept as the join-then-merge baseline; CLI `sweep`);
 //! * [`metrics`] — table/CSV/markdown emitters used by the CLI and benches.
 //!
 //! Compute is real: the LBM/GEMM/CG kernels are JAX + Pallas programs

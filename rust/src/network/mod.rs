@@ -24,6 +24,9 @@ use crate::config::MachineConfig;
 use crate::sim::{Component, Event, ScheduledEvent};
 use crate::topology::{Routing, Topology, HDR_GBPS, HDR100_GBPS};
 
+/// Loads below this are treated as zero (and their cells as unloaded).
+const LOAD_EPS: f64 = 1e-12;
+
 /// Message-rate ceilings (§2.2).
 pub const NIC_MSGS_PER_S: f64 = 200e6;
 pub const SWITCH_PORT_MSGS_PER_S: f64 = 390e6;
@@ -65,40 +68,61 @@ pub struct Network {
     /// Per-cell background load on the global links (fraction 0..=1),
     /// maintained by a [`CongestionTracker`] from job start/end events.
     /// Added to `background_global_load` for the cells a placement
-    /// touches.
-    pub cell_background: BTreeMap<u32, f64>,
+    /// touches. Dense (indexed by cell id, grown on demand) so the
+    /// retime-path queries and the tracker's updates are allocation-free
+    /// in steady state — no tree walks, no node churn.
+    cell_background: Vec<f64>,
+    /// Cells currently carrying a non-negligible background load (keeps
+    /// the all-idle fast path an O(1) check).
+    loaded_cells: usize,
 }
 
 impl Network {
     pub fn new(topo: Topology, injection_gbps: f64) -> Self {
+        let cells = topo.cells.len();
         Network {
             topo,
             injection_gbps,
             routing: Routing::Minimal,
             oversubscription: 1.0,
             background_global_load: 0.0,
-            cell_background: BTreeMap::new(),
+            cell_background: vec![0.0; cells],
+            loaded_cells: 0,
         }
     }
 
     /// Set the background global-link load of one cell (clamped 0..=1;
-    /// ~zero entries are dropped).
+    /// ~zero loads are treated as idle). Allocation-free once the cell
+    /// has been seen (the dense table is sized to the topology).
     pub fn set_cell_background_load(&mut self, cell: u32, load: f64) {
         let load = load.clamp(0.0, 1.0);
-        if load < 1e-12 {
-            self.cell_background.remove(&cell);
-        } else {
-            self.cell_background.insert(cell, load);
+        let idx = cell as usize;
+        if idx >= self.cell_background.len() {
+            if load < LOAD_EPS {
+                return; // out-of-table idle cell: nothing to record
+            }
+            self.cell_background.resize(idx + 1, 0.0);
+        }
+        let was_loaded = self.cell_background[idx] >= LOAD_EPS;
+        let is_loaded = load >= LOAD_EPS;
+        self.cell_background[idx] = if is_loaded { load } else { 0.0 };
+        match (was_loaded, is_loaded) {
+            (false, true) => self.loaded_cells += 1,
+            (true, false) => self.loaded_cells -= 1,
+            _ => {}
         }
     }
 
     pub fn cell_background_load(&self, cell: u32) -> f64 {
-        self.cell_background.get(&cell).copied().unwrap_or(0.0)
+        self.cell_background
+            .get(cell as usize)
+            .copied()
+            .unwrap_or(0.0)
     }
 
     /// Mean per-cell background load over the cells a placement spans.
     fn placement_background(&self, placement: &Placement) -> f64 {
-        if self.cell_background.is_empty() || placement.nodes_per_cell.is_empty() {
+        if self.loaded_cells == 0 || placement.nodes_per_cell.is_empty() {
             return 0.0;
         }
         let sum: f64 = placement
@@ -340,6 +364,16 @@ impl CongestionTracker {
         }));
         t.booster_only = true;
         t
+    }
+
+    /// Zero every cell's cross load, the peak and the series, keeping
+    /// the cell map and sample buffers allocated (arena reuse).
+    pub fn reset(&mut self) {
+        for c in self.cells.values_mut() {
+            c.cross_nodes = 0;
+        }
+        self.peak = 0.0;
+        self.series.clear();
     }
 
     /// Cross-traffic load fraction of one cell (0 when untracked).

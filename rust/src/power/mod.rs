@@ -217,6 +217,20 @@ impl PowerMonitor {
         }
     }
 
+    /// Clear all run state (busy/dynamic-power accounting, tracked jobs,
+    /// metric samples) while keeping the model and every series buffer
+    /// allocated — the campaign arena reuses one monitor across
+    /// scenarios. `total_nodes`/`booster_only` are re-armed because the
+    /// next scenario may replay a different partition.
+    pub fn reset(&mut self, total_nodes: u32, booster_only: bool) {
+        self.total_nodes = total_nodes;
+        self.booster_only = booster_only;
+        self.busy_nodes = 0;
+        self.dyn_weight = 0.0;
+        self.running.clear();
+        self.store.reset();
+    }
+
     pub fn busy_nodes(&self) -> u32 {
         self.busy_nodes
     }

@@ -64,6 +64,27 @@
 //! backfill sees the feedback too. With coupling off (default) none of
 //! this machinery runs and every engine stays bit-for-bit the seed
 //! loop.
+//!
+//! ### Incremental cell-indexed retiming
+//!
+//! The optimized engine does not walk every running coupled job per
+//! perturbation (the PR 3 shape, retained behind
+//! [`Scheduler::retime_all`] as the cost-faithful oracle). Instead it
+//! keeps a *cell → running-coupled-job index* over the
+//! congestion-sensitive jobs (multi-cell Booster jobs that
+//! communicate): a `Start`/`End` dirties only the cells of its
+//! placement, and the re-time pass visits only the jobs indexed under a
+//! dirty cell — every other job's background inputs are provably
+//! unchanged, so skipping them is bit-identical (each skip counts into
+//! [`RunCounters::retimes_elided`]). A `CapChange` re-scales every
+//! running job through one cached DVFS workpoint while *reusing* each
+//! job's cached congestion factor (`CoupledJob::comm`), so cap-only
+//! sweep deltas warm-start without touching the network model.
+//! Remaining work is derived from the provisional end
+//! (`(end - now) / slowdown`) rather than accumulated through
+//! settlements, so elided re-times leave no floating-point residue and
+//! the incremental walk stays bit-for-bit the retime-all walk (pinned
+//! by `rust/tests/coupling.rs`).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -170,10 +191,33 @@ pub struct Scheduler {
     /// Runtime feedback coupling (default off: job end times are frozen
     /// at `Start` and every engine is bit-for-bit the seed loop).
     pub coupling: Coupling,
+    /// Force the PR 3 retime-all walk even on the optimized engine: every
+    /// re-time perturbation re-derives every running coupled job's rate.
+    /// Kept cost-faithful as the oracle (and bench baseline) the
+    /// incremental cell-indexed retimer is pinned bit-for-bit against.
+    /// Default off — the optimized engine re-times incrementally.
+    pub retime_all: bool,
+    /// Counters of the most recent `run*` call (see [`RunCounters`]).
+    pub last_run: RunCounters,
     /// Network model congestion coupling derives comm slowdowns from.
     /// Required when `coupling.congestion` is on (see
     /// [`Scheduler::with_coupling`]).
     pub net: Option<Network>,
+}
+
+/// Bookkeeping counters of one scheduler run — pure observability: the
+/// numbers never feed back into any scheduling or retiming decision
+/// (pinned by the `retimes_elided` neutrality test in
+/// `rust/tests/coupling.rs`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RunCounters {
+    /// Stale generation-stamped `End`s dropped at pop time
+    /// ([`crate::sim::Simulation::events_skipped`]).
+    pub events_skipped: u64,
+    /// Running-coupled-job re-time evaluations elided: the cell index
+    /// proved the job untouched, or the recomputed rate was
+    /// bit-identical so no event was emitted.
+    pub retimes_elided: u64,
 }
 
 /// Which feedback loops retime a *running* job's provisional `End`.
@@ -271,6 +315,8 @@ impl Scheduler {
             total: free,
             power_cap: None,
             coupling: Coupling::default(),
+            retime_all: false,
+            last_run: RunCounters::default(),
             net: None,
         }
     }
@@ -417,6 +463,20 @@ impl Scheduler {
         self.free[pi] += released;
     }
 
+    /// Restore the state [`Scheduler::new`] builds — every pool fully
+    /// free, no power cap, counters cleared — without reallocating any
+    /// buffer. The campaign arena ([`crate::campaign::ReplayRig::reset`])
+    /// reuses one scheduler across scenarios through this; `coupling`,
+    /// `retime_all` and `net` are per-scenario inputs the caller re-arms.
+    pub fn reset(&mut self) {
+        for pool in self.booster.iter_mut().chain(self.dc.iter_mut()) {
+            pool.free = pool.total;
+        }
+        self.free = self.total;
+        self.power_cap = None;
+        self.last_run = RunCounters::default();
+    }
+
     /// Run a workload to completion with FIFO + EASY backfill on the
     /// optimized event engine. Returns per-job records. Virtual time;
     /// deterministic.
@@ -467,26 +527,33 @@ impl Scheduler {
         for se in extra_events {
             sim.schedule(se.time, se.event);
         }
-        let mut engine = JobEngine::new(self, jobs, optimized);
-        {
-            let mut comps: Vec<&mut dyn Component> = Vec::with_capacity(1 + observers.len());
-            comps.push(&mut engine);
-            for o in observers.iter_mut() {
-                comps.push(&mut **o);
+        let (records, retimes_elided) = {
+            let mut engine = JobEngine::new(self, jobs, optimized);
+            {
+                let mut comps: Vec<&mut dyn Component> = Vec::with_capacity(1 + observers.len());
+                comps.push(&mut engine);
+                for o in observers.iter_mut() {
+                    comps.push(&mut **o);
+                }
+                sim.run(&mut comps);
             }
-            sim.run(&mut comps);
-        }
-        assert!(
-            engine.queue.is_empty(),
-            "scheduler stuck: {} jobs can never be placed",
-            engine.queue.len()
-        );
-        debug_assert!(
-            engine.coupled.is_empty(),
-            "coupled jobs left running: {}",
-            engine.coupled.len()
-        );
-        engine.records
+            assert!(
+                engine.queue.is_empty(),
+                "scheduler stuck: {} jobs can never be placed",
+                engine.queue.len()
+            );
+            debug_assert!(
+                engine.coupled.is_empty(),
+                "coupled jobs left running: {}",
+                engine.coupled.len()
+            );
+            (std::mem::take(&mut engine.records), engine.retimes_elided)
+        };
+        self.last_run = RunCounters {
+            events_skipped: sim.events_skipped(),
+            retimes_elided,
+        };
+        records
     }
 
     /// The legacy scan-and-rescan loop (the seed implementation):
@@ -497,10 +564,17 @@ impl Scheduler {
     /// semantic oracle the event engine is tested against — use
     /// [`Scheduler::run`].
     pub fn run_rescan(&mut self, mut jobs: Vec<Job>) -> BTreeMap<u64, JobRecord> {
+        self.last_run = RunCounters::default();
         jobs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time).then(a.id.cmp(&b.id)));
         let mut records: BTreeMap<u64, JobRecord> = BTreeMap::new();
         // (end_time, job idx) of running jobs.
         let mut running: Vec<(f64, usize)> = Vec::new();
+        // Running-node counter for the per-start DVFS cap check — the
+        // one O(R) re-sum the rescan baseline does *not* keep: it is
+        // pure cost (`Σ nodes` over the running vector per start), not
+        // a semantic of the seed loop, and the counter is arithmetic-
+        // identical (the oracle equivalence suites stay green).
+        let mut running_nodes: u32 = 0;
         let mut queue: Vec<usize> = Vec::new();
         let mut next_submit = 0usize;
         let mut now = 0.0f64;
@@ -533,7 +607,11 @@ impl Scheduler {
                         }
                     }
                 }
-                let scale = self.dvfs_scale_for(&jobs, &running, job.nodes);
+                let scale = if self.power_cap.is_none() {
+                    1.0
+                } else {
+                    self.dvfs_scale_at(running_nodes + job.nodes)
+                };
                 let placement = self
                     .place_scan(job.partition, job.nodes)
                     .expect("checked free_nodes");
@@ -551,6 +629,7 @@ impl Scheduler {
                     },
                 );
                 running.push((end, ji));
+                running_nodes += job.nodes;
                 started.push(qpos);
             }
             for &qpos in started.iter().rev() {
@@ -588,6 +667,7 @@ impl Scheduler {
                     let job = &jobs[ji];
                     let placement = records.get(&job.id).unwrap().placement.clone();
                     self.release(job.partition, &placement);
+                    running_nodes -= job.nodes;
                 } else {
                     i += 1;
                 }
@@ -624,17 +704,6 @@ impl Scheduler {
             }
         }
         None
-    }
-
-    /// DVFS scale for a job about to start (`new_nodes`) under the
-    /// facility power cap, if any. Legacy-loop helper.
-    fn dvfs_scale_for(&self, jobs: &[Job], running: &[(f64, usize)], new_nodes: u32) -> f64 {
-        if self.power_cap.is_none() {
-            return 1.0;
-        }
-        let busy: u32 =
-            running.iter().map(|(_, ji)| jobs[*ji].nodes).sum::<u32>() + new_nodes;
-        self.dvfs_scale_at(busy)
     }
 
     /// DVFS scale when `busy` nodes (including the one about to start)
@@ -689,6 +758,122 @@ fn cross_background(
     sum / cells.len() as f64
 }
 
+/// Outcome of re-timing one coupled job (see [`retime_job`]).
+enum Retimed {
+    /// Rate and workpoint unchanged bit-for-bit: no event emitted, no
+    /// state touched — the elision the incremental walk counts.
+    Unchanged,
+    /// The provisional `End` moved: a fresh generation was enqueued.
+    Moved,
+    /// The workpoint moved but the rate didn't (fully memory-bound work
+    /// under a cap move): power-only `Retime`, the `End` stays put.
+    Power,
+}
+
+/// Where a re-time visit gets its congestion factor from.
+enum CommSource<'a> {
+    /// Re-query the network model over the current cross loads — jobs
+    /// whose cells were perturbed (and every sensitive job in the
+    /// retime-all oracle).
+    Fresh(&'a Network),
+    /// Reuse the cached [`CoupledJob::comm`] — untouched jobs on a
+    /// cap-only re-scale (bit-identical to a fresh query by the cache
+    /// invariant).
+    Cached,
+    /// Congestion cannot apply (insensitive job in the oracle walk).
+    Unit,
+}
+
+/// Re-time one coupled job against a (possibly re-scaled) DVFS
+/// workpoint and the congestion factor `source` selects. The one
+/// arithmetic both the incremental walk and the retime-all oracle
+/// share, so they cannot diverge. Takes the engine's state as split
+/// borrows because callers iterate the coupled map while calling it.
+#[allow(clippy::too_many_arguments)]
+fn retime_job(
+    cj: &mut CoupledJob,
+    job: &Job,
+    now: f64,
+    rescale: bool,
+    new_scale: f64,
+    source: CommSource<'_>,
+    cell_cross: &[u32],
+    cell_total: &[u32],
+    running: &mut BTreeMap<(SimTime, u64), RunEntry>,
+    records: &mut BTreeMap<u64, JobRecord>,
+    out: &mut Vec<ScheduledEvent>,
+) -> Retimed {
+    let comm = match source {
+        CommSource::Fresh(net) => {
+            let bg = cross_background(cell_cross, cell_total, &cj.cells, true);
+            net.comm_slowdown(&cj.cells, job.comm_fraction, bg)
+        }
+        CommSource::Cached => cj.comm,
+        CommSource::Unit => 1.0,
+    };
+    let old_scale = cj.scale;
+    if rescale {
+        cj.scale = new_scale;
+    }
+    let dvfs = crate::power::DvfsPoint { scale: cj.scale }.time_factor(job.boundness);
+    let slowdown = dvfs * comm;
+    // Refresh the cache on *every* visit, elided or not: the invariant
+    // the cap-only warm start relies on is "`cj.comm` equals what a
+    // fresh recompute would return right now", and `dvfs * a == dvfs
+    // * b` does not imply `a == b` bitwise.
+    cj.comm = comm;
+    // A scale move that leaves the rate untouched (fully memory-bound
+    // work: time_factor == 1 for any scale) still changes the job's
+    // *power*, so observers must hear about it even though the End
+    // stays put.
+    if slowdown == cj.slowdown && cj.scale == old_scale {
+        return Retimed::Unchanged;
+    }
+    let mut moved = false;
+    if slowdown != cj.slowdown {
+        // Work left at nominal rate, derived from the provisional end
+        // (exact at any instant while the rate is constant — no settle
+        // residue, see the CoupledJob docs).
+        let remaining = ((cj.end - now) / cj.slowdown).max(0.0);
+        cj.slowdown = slowdown;
+        let new_end = now + remaining * slowdown;
+        let entry = running
+            .remove(&(SimTime(cj.end), cj.seq))
+            .expect("running entry of coupled job");
+        running.insert((SimTime(new_end), cj.seq), entry);
+        cj.end = new_end;
+        cj.gen += 1;
+        out.push(ScheduledEvent::at(
+            new_end,
+            Event::End {
+                job: job.id,
+                booster: cj.booster,
+                cells: cj.cells.clone(),
+                gen: cj.gen,
+            },
+        ));
+        moved = true;
+    }
+    if let Some(rec) = records.get_mut(&job.id) {
+        rec.end_time = cj.end;
+        rec.dvfs_scale = cj.scale;
+        rec.min_dvfs_scale = rec.min_dvfs_scale.min(cj.scale);
+    }
+    out.push(ScheduledEvent::at(
+        now,
+        Event::Retime {
+            job: job.id,
+            dvfs_scale: cj.scale,
+            end: cj.end,
+        },
+    ));
+    if moved {
+        Retimed::Moved
+    } else {
+        Retimed::Power
+    }
+}
+
 /// A queued job, compact (12 bytes) so the optimized pass streams a
 /// dense array instead of dereferencing into the 56-byte [`Job`] table
 /// per entry — the scan over can't-fit entries is the hottest loop in a
@@ -712,9 +897,16 @@ struct RunEntry {
 }
 
 /// Coupled-progress state of one running job (coupled mode only): the
-/// job's completion is provisional — instead of a frozen `end_time`,
-/// the engine keeps remaining work and the progress rate in effect, and
-/// re-times the generation-stamped `End` when either changes.
+/// job's completion is provisional — the engine keeps the progress rate
+/// in effect and re-times the generation-stamped `End` when it changes.
+///
+/// Remaining work is *derived* from the provisional end —
+/// `(end - now) / slowdown`, seconds at nominal rate — never settled
+/// into a field. At a constant rate the derivation is exact at any
+/// instant, so a re-time that visits a job whose rate is unchanged
+/// leaves zero floating-point residue; that is what lets the
+/// incremental cell-indexed walk skip untouched jobs bit-for-bit
+/// against the retime-all oracle.
 #[derive(Debug, Clone)]
 struct CoupledJob {
     ji: u32,
@@ -724,20 +916,32 @@ struct CoupledJob {
     multi_cell: bool,
     /// Interned placement (shared with the Start/End events).
     cells: Cells,
-    /// Work left, seconds at nominal rate.
-    remaining: f64,
     /// Runtime multiplier in effect (DVFS x congestion), >= 1.
     slowdown: f64,
     /// DVFS workpoint in effect (re-scaled on `CapChange` when cap
     /// coupling is on).
     scale: f64,
-    /// Instant `remaining` was last settled at.
-    updated: f64,
+    /// Cached congestion factor last folded into `slowdown` — the warm
+    /// start for cap-only re-times: a `CapChange` re-scales the DVFS
+    /// term and reuses this instead of re-querying the network model
+    /// (bit-identical: nothing congestion-relevant changed).
+    comm: f64,
     /// Currently scheduled provisional end (the running-map key time).
     end: f64,
     /// Generation of the current `End` event; stale generations are
     /// skipped at pop time.
     gen: u64,
+}
+
+impl CoupledJob {
+    /// Can the congestion axis change this job's rate? The single
+    /// predicate the cell index registration (job start), the index
+    /// de-registration (completion) and both re-time walks must agree
+    /// on — drift between call sites would desynchronize `cell_jobs`
+    /// from the coupled map.
+    fn congestion_sensitive(&self, coupling: Coupling, job: &Job) -> bool {
+        coupling.congestion && self.booster && self.multi_cell && job.comm_fraction > 0.0
+    }
 }
 
 /// The event-driven job lifecycle: a [`Component`] translating
@@ -810,6 +1014,26 @@ struct JobEngine<'a> {
     /// A `CapChange` moved the cap level: re-derive every running job's
     /// DVFS workpoint during the next re-time.
     rescale: bool,
+    /// Incremental cell-indexed retiming on (optimized engine without
+    /// [`Scheduler::retime_all`]); off = the PR 3 retime-all oracle.
+    incremental: bool,
+    /// Cell → ids of running congestion-sensitive coupled jobs
+    /// (multi-cell Booster, `comm_fraction > 0`) — the index a
+    /// `Start`/`End` perturbation resolves to the jobs it can actually
+    /// re-time. Maintained only in incremental mode.
+    cell_jobs: Vec<Vec<u64>>,
+    /// Cells whose cross load changed since the last re-time pass
+    /// (membership flags + dense list, both persistent scratch).
+    cell_dirty: Vec<bool>,
+    dirty_cells: Vec<u32>,
+    /// Scratch: candidate job ids of the current re-time walk, sorted
+    /// ascending so events are emitted in the oracle's (job-id) order.
+    retime_ids: Vec<u64>,
+    /// Running congestion-sensitive coupled jobs (sizes the elision
+    /// count: sensitive jobs minus walked jobs were proven untouched).
+    sensitive: usize,
+    /// Re-time evaluations elided this run (see [`RunCounters`]).
+    retimes_elided: u64,
 }
 
 impl<'a> JobEngine<'a> {
@@ -820,6 +1044,7 @@ impl<'a> JobEngine<'a> {
             assert!(prev.is_none(), "duplicate job id {}", job.id);
         }
         let coupling = sched.coupling;
+        let incremental = optimized && !sched.retime_all;
         let mut cell_total = Vec::new();
         if coupling.congestion {
             cell_total = vec![0u32; sched.booster_by_cell.len()];
@@ -828,6 +1053,8 @@ impl<'a> JobEngine<'a> {
             }
         }
         let cell_cross = vec![0u32; cell_total.len()];
+        let cell_jobs = vec![Vec::new(); cell_total.len()];
+        let cell_dirty = vec![false; cell_total.len()];
         JobEngine {
             sched,
             jobs,
@@ -849,6 +1076,13 @@ impl<'a> JobEngine<'a> {
             cell_total,
             recouple: false,
             rescale: false,
+            incremental,
+            cell_jobs,
+            cell_dirty,
+            dirty_cells: Vec::new(),
+            retime_ids: Vec::new(),
+            sensitive: 0,
+            retimes_elided: 0,
         }
     }
 
@@ -910,6 +1144,12 @@ impl<'a> JobEngine<'a> {
                 let total = self.cell_total[cell as usize] as i64;
                 let next = *c as i64 + sign * nodes as i64;
                 *c = next.clamp(0, total) as u32;
+                // Incremental retiming: remember which cells moved so
+                // the next re-time pass visits only jobs indexed there.
+                if self.incremental && !self.cell_dirty[cell as usize] {
+                    self.cell_dirty[cell as usize] = true;
+                    self.dirty_cells.push(cell);
+                }
             }
         }
         true
@@ -954,100 +1194,154 @@ impl<'a> JobEngine<'a> {
             }
             self.running_nodes -= r.nodes;
             if self.coupling.enabled() {
-                self.coupled.remove(&id);
+                if let Some(cj) = self.coupled.remove(&id) {
+                    if cj.congestion_sensitive(self.coupling, &self.jobs[cj.ji as usize]) {
+                        self.sensitive -= 1;
+                        if self.incremental {
+                            // Drop the job from the cell index (order
+                            // within a cell list is irrelevant: walks
+                            // sort candidate ids).
+                            for &(cell, _) in cj.cells.iter() {
+                                if let Some(list) = self.cell_jobs.get_mut(cell as usize)
+                                {
+                                    if let Some(p) = list.iter().position(|&j| j == id) {
+                                        list.swap_remove(p);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
             }
             self.dirty = true;
         }
     }
 
-    /// Re-time every running job's provisional `End` from the current
-    /// machine state (coupled mode): settle the work done so far at the
-    /// old rate, derive the new slowdown (DVFS x congestion), and when
-    /// the completion moved, bump the job's generation, re-key the
-    /// running map and enqueue a fresh `End` (plus a `Retime` so
-    /// observers close their rate segments). The stale `End` stays in
-    /// the queue and is skipped at pop time.
+    /// Re-time running jobs' provisional `End`s from the current machine
+    /// state (coupled mode): derive each affected job's new slowdown
+    /// (DVFS x congestion) and, when the completion moved, bump the
+    /// job's generation, re-key the running map and enqueue a fresh
+    /// `End` (plus a `Retime` so observers close their rate segments).
+    /// The stale `End` stays in the queue and is skipped at pop time.
+    ///
+    /// In incremental mode only the jobs the cell index resolves from
+    /// the dirty cells are visited (all jobs on a cap re-scale, which
+    /// reuses each job's cached congestion factor); in retime-all mode
+    /// (the baseline engine, or [`Scheduler::retime_all`]) every coupled
+    /// job is re-derived — the PR 3 cost shape. Both walks funnel into
+    /// [`retime_job`], and emit in ascending job-id order, so they are
+    /// bit-for-bit identical.
     fn retime(&mut self, now: f64, out: &mut Vec<ScheduledEvent>) {
         let rescale = std::mem::take(&mut self.rescale) && self.coupling.cap;
+        // One cached DVFS workpoint for the whole pass: the cap moved
+        // once, so every running job re-scales through this single
+        // factor (the cap-only warm start).
         let new_scale = if rescale {
             self.sched.dvfs_scale_at(self.running_nodes)
         } else {
             1.0
         };
         let mut moved = false;
-        for (&job_id, cj) in self.coupled.iter_mut() {
-            let job = &self.jobs[cj.ji as usize];
-            let congestion_sensitive = self.coupling.congestion
-                && cj.booster
-                && cj.multi_cell
-                && job.comm_fraction > 0.0;
-            if !rescale && !congestion_sensitive {
-                // Neither axis can change this job's rate: skip without
-                // settling (remaining stays derivable from `updated`
-                // because the rate is constant across the gap).
-                continue;
-            }
-            // Settle progress at the rate that was in effect.
-            let elapsed = now - cj.updated;
-            if elapsed > 0.0 {
-                cj.remaining = (cj.remaining - elapsed / cj.slowdown).max(0.0);
-            }
-            cj.updated = now;
-            let old_scale = cj.scale;
+        if self.incremental {
+            // Candidate set: every coupled job on a cap re-scale, else
+            // exactly the jobs indexed under a perturbed cell. Sorted
+            // ascending so the emission order matches the oracle's
+            // coupled-map (job-id) walk.
+            self.retime_ids.clear();
             if rescale {
-                cj.scale = new_scale;
-            }
-            let dvfs = crate::power::DvfsPoint { scale: cj.scale }.time_factor(job.boundness);
-            let comm = if congestion_sensitive {
-                let net = self.sched.net.as_ref().expect("checked in run_mode");
-                let bg = cross_background(&self.cell_cross, &self.cell_total, &cj.cells, true);
-                net.comm_slowdown(&cj.cells, job.comm_fraction, bg)
+                self.retime_ids.extend(self.coupled.keys().copied());
             } else {
-                1.0
-            };
-            let slowdown = dvfs * comm;
-            // A scale move that leaves the rate untouched (fully
-            // memory-bound work: time_factor == 1 for any scale) still
-            // changes the job's *power*, so observers must hear about
-            // it even though the End stays put.
-            if slowdown == cj.slowdown && cj.scale == old_scale {
-                continue;
+                for &cell in &self.dirty_cells {
+                    self.retime_ids.extend_from_slice(&self.cell_jobs[cell as usize]);
+                }
+                self.retime_ids.sort_unstable();
+                self.retime_ids.dedup();
+                // Everything the index proved untouched is an elided
+                // re-time the oracle would have recomputed for nothing.
+                self.retimes_elided += (self.sensitive - self.retime_ids.len()) as u64;
             }
-            if slowdown != cj.slowdown {
-                cj.slowdown = slowdown;
-                let new_end = now + cj.remaining * slowdown;
-                let entry = self
-                    .running
-                    .remove(&(SimTime(cj.end), cj.seq))
-                    .expect("running entry of coupled job");
-                self.running.insert((SimTime(new_end), cj.seq), entry);
-                cj.end = new_end;
-                cj.gen += 1;
-                out.push(ScheduledEvent::at(
-                    new_end,
-                    Event::End {
-                        job: job_id,
-                        booster: cj.booster,
-                        cells: cj.cells.clone(),
-                        gen: cj.gen,
-                    },
-                ));
-                moved = true;
+            for &job_id in &self.retime_ids {
+                let cj = self
+                    .coupled
+                    .get_mut(&job_id)
+                    .expect("indexed job missing from coupled map");
+                let job = &self.jobs[cj.ji as usize];
+                let congestion_sensitive = cj.congestion_sensitive(self.coupling, job);
+                if !rescale && !congestion_sensitive {
+                    continue; // index holds only sensitive jobs; guard anyway
+                }
+                // Re-query the network model only when one of this
+                // job's cells actually moved; cap-only re-times reuse
+                // the cached factor (bit-identical by construction).
+                let touched = congestion_sensitive
+                    && cj
+                        .cells
+                        .iter()
+                        .any(|&(c, _)| self.cell_dirty.get(c as usize).copied().unwrap_or(false));
+                let source = if touched {
+                    CommSource::Fresh(self.sched.net.as_ref().expect("checked in run_mode"))
+                } else {
+                    CommSource::Cached
+                };
+                match retime_job(
+                    cj,
+                    job,
+                    now,
+                    rescale,
+                    new_scale,
+                    source,
+                    &self.cell_cross,
+                    &self.cell_total,
+                    &mut self.running,
+                    &mut self.records,
+                    out,
+                ) {
+                    Retimed::Unchanged => self.retimes_elided += 1,
+                    Retimed::Moved => moved = true,
+                    Retimed::Power => {}
+                }
             }
-            if let Some(rec) = self.records.get_mut(&job_id) {
-                rec.end_time = cj.end;
-                rec.dvfs_scale = cj.scale;
-                rec.min_dvfs_scale = rec.min_dvfs_scale.min(cj.scale);
+        } else {
+            // The retained PR 3 retime-all oracle: walk every coupled
+            // job (ascending id — the map order) and re-derive its rate
+            // from scratch.
+            for cj in self.coupled.values_mut() {
+                let job = &self.jobs[cj.ji as usize];
+                let congestion_sensitive = cj.congestion_sensitive(self.coupling, job);
+                if !rescale && !congestion_sensitive {
+                    // Neither axis can change this job's rate.
+                    continue;
+                }
+                let source = if congestion_sensitive {
+                    CommSource::Fresh(self.sched.net.as_ref().expect("checked in run_mode"))
+                } else {
+                    CommSource::Unit
+                };
+                match retime_job(
+                    cj,
+                    job,
+                    now,
+                    rescale,
+                    new_scale,
+                    source,
+                    &self.cell_cross,
+                    &self.cell_total,
+                    &mut self.running,
+                    &mut self.records,
+                    out,
+                ) {
+                    Retimed::Unchanged => self.retimes_elided += 1,
+                    Retimed::Moved => moved = true,
+                    Retimed::Power => {}
+                }
             }
-            out.push(ScheduledEvent::at(
-                now,
-                Event::Retime {
-                    job: job_id,
-                    dvfs_scale: cj.scale,
-                    end: cj.end,
-                },
-            ));
         }
+        // The perturbations are consumed either way (the oracle never
+        // reads them, but they must not leak into the next pass).
+        for &cell in &self.dirty_cells {
+            self.cell_dirty[cell as usize] = false;
+        }
+        self.dirty_cells.clear();
         if moved {
             // Provisional ends moved: head reservations (and with them
             // the EASY backfill window) changed, so the settled-prefix
@@ -1142,19 +1436,23 @@ impl<'a> JobEngine<'a> {
             .expect("checked free counter");
             let booster = partition == Partition::Booster;
             let coupled = self.coupling.enabled();
-            let mut slowdown = crate::power::DvfsPoint { scale }.time_factor(job.boundness);
-            if coupled {
-                // Initial provisional rate: the congestion term joins
-                // the DVFS term. Loads from starts earlier in this same
-                // batch are folded in by the re-time pass that follows
-                // the Start dispatches at this same timestamp.
-                slowdown *= self.comm_slowdown_for(
+            let dvfs = crate::power::DvfsPoint { scale }.time_factor(job.boundness);
+            // Initial provisional rate: the congestion term joins the
+            // DVFS term. Loads from starts earlier in this same batch
+            // are folded in by the re-time pass that follows the Start
+            // dispatches at this same timestamp (which also refreshes
+            // the cached factor to its self-excluded form).
+            let comm = if coupled {
+                self.comm_slowdown_for(
                     booster,
                     &placement.nodes_per_cell,
                     job.comm_fraction,
                     false,
-                );
-            }
+                )
+            } else {
+                1.0
+            };
+            let slowdown = dvfs * comm;
             let end = now + job.run_seconds * slowdown;
             let gen = u64::from(coupled);
             let (start_cells, end_cells): (Cells, Cells) = if self.optimized {
@@ -1169,22 +1467,43 @@ impl<'a> JobEngine<'a> {
                 )
             };
             if coupled {
-                self.coupled.insert(
-                    job.id,
-                    CoupledJob {
-                        ji: entry.ji,
-                        seq: self.start_seq,
-                        booster,
-                        multi_cell: placement.nodes_per_cell.len() > 1,
-                        cells: end_cells.clone(),
-                        remaining: job.run_seconds,
-                        slowdown,
-                        scale,
-                        updated: now,
-                        end,
-                        gen,
-                    },
-                );
+                let cj = CoupledJob {
+                    ji: entry.ji,
+                    seq: self.start_seq,
+                    booster,
+                    multi_cell: placement.nodes_per_cell.len() > 1,
+                    cells: end_cells.clone(),
+                    slowdown,
+                    scale,
+                    comm,
+                    end,
+                    gen,
+                };
+                if cj.congestion_sensitive(self.coupling, job) {
+                    self.sensitive += 1;
+                    if self.incremental {
+                        // Register the job under every cell it spans so
+                        // perturbations there resolve straight to it —
+                        // and mark those cells dirty: a re-time in THIS
+                        // quiescent (triggered by an earlier event in
+                        // the batch, before the job's own Start has
+                        // dispatched) walks every coupled job in the
+                        // oracle, so the index must resolve the newborn
+                        // too.
+                        for &(cell, _) in placement.nodes_per_cell.iter() {
+                            if let Some(list) = self.cell_jobs.get_mut(cell as usize) {
+                                list.push(job.id);
+                            }
+                            if let Some(flag) = self.cell_dirty.get_mut(cell as usize) {
+                                if !*flag {
+                                    *flag = true;
+                                    self.dirty_cells.push(cell);
+                                }
+                            }
+                        }
+                    }
+                }
+                self.coupled.insert(job.id, cj);
             }
             out.push(ScheduledEvent::at(
                 now,

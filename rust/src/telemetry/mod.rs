@@ -40,6 +40,11 @@ impl Series {
         self.samples.push(Sample { t, value });
     }
 
+    /// Drop all samples, keeping the buffer allocated (arena reuse).
+    pub fn clear(&mut self) {
+        self.samples.clear();
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -97,6 +102,14 @@ pub struct MetricStore {
 impl MetricStore {
     pub fn record(&mut self, name: &str, t: f64, value: f64) {
         self.series.entry(name.to_string()).or_default().push(t, value);
+    }
+
+    /// Clear every series' samples, keeping names and buffers allocated
+    /// (arena reuse across campaign scenarios).
+    pub fn reset(&mut self) {
+        for s in self.series.values_mut() {
+            s.clear();
+        }
     }
 
     pub fn get(&self, name: &str) -> Option<&Series> {

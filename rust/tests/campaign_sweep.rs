@@ -3,7 +3,7 @@
 //! an atomic cursor, merge is by grid index), and the grid axes behave
 //! (caps throttle, mixes change the load shape, seeds vary arrivals).
 
-use leonardo_twin::campaign::{run_sweep, SweepGrid};
+use leonardo_twin::campaign::{run_sweep, run_sweep_streaming, SweepGrid};
 use leonardo_twin::coordinator::Twin;
 
 /// The acceptance-criteria grid: 4 seeds x 3 caps x 2 mixes = 24
@@ -34,6 +34,32 @@ fn merged_report_is_identical_across_thread_counts() {
     assert_eq!(
         r1.summary_table().to_markdown(),
         r8.summary_table().to_markdown()
+    );
+}
+
+/// The streaming engine (per-worker scenario arenas, mpsc merge-as-they-
+/// finish) is byte-identical to the join-then-merge path for 1, 2 and 8
+/// workers — completion order and rig reuse are invisible in the report.
+#[test]
+fn streaming_merge_is_identical_to_join_then_merge() {
+    let twin = Twin::leonardo();
+    let grid = SweepGrid::new(
+        vec![1, 2, 3, 4],
+        vec![None, Some(7.5), Some(6.0)],
+        vec!["day".into(), "ai".into()],
+        100,
+    )
+    .unwrap();
+    let joined = run_sweep(&twin, &grid, 4);
+    let s1 = run_sweep_streaming(&twin, &grid, 1);
+    let s2 = run_sweep_streaming(&twin, &grid, 2);
+    let s8 = run_sweep_streaming(&twin, &grid, 8);
+    assert_eq!(joined, s1, "1-worker streaming diverged");
+    assert_eq!(joined, s2, "2-worker streaming diverged");
+    assert_eq!(joined, s8, "8-worker streaming diverged");
+    assert_eq!(
+        joined.scenario_table().to_markdown(),
+        s8.scenario_table().to_markdown()
     );
 }
 

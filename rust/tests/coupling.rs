@@ -9,11 +9,13 @@
 //! * (c) coupled sweep reports are identical for 1, 2 and 8 worker
 //!   threads.
 
-use leonardo_twin::campaign::{run_sweep, SweepGrid};
+use leonardo_twin::campaign::{run_sweep, run_sweep_streaming, SweepGrid};
 use leonardo_twin::config::MachineConfig;
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::scheduler::{Coupling, Job, Partition, PowerCap, Scheduler};
 use leonardo_twin::sim::{Component, Event, ScheduledEvent};
+use leonardo_twin::topology::Routing;
+use leonardo_twin::workloads::TraceGen;
 
 fn job(id: u64, nodes: u32, secs: f64, submit: f64, comm: f64) -> Job {
     Job {
@@ -237,12 +239,112 @@ fn coupled_sweep_identical_across_thread_counts() {
     );
 }
 
+/// ISSUE 4 tentpole identity: the incremental cell-indexed retimer is
+/// bit-for-bit the retained retime-all oracle
+/// ([`Scheduler::retime_all`]) across a coupled HPC day — both routing
+/// policies, with and without a mid-day `CapChange` — and, absent
+/// injected events, also bit-for-bit the PR 1-cost baseline engine
+/// (which always re-times all).
+#[test]
+fn incremental_retiming_matches_retime_all_oracle() {
+    let jobs = TraceGen::booster_hpc_day(500, 7).generate();
+    let cap = PowerCap {
+        cap_mw: 99.0,
+        node_watts: 2238.0,
+        idle_watts: 365.0,
+    };
+    for routing in [Routing::Minimal, Routing::Valiant] {
+        for mid_day_cap in [false, true] {
+            let events = || {
+                if mid_day_cap {
+                    vec![ScheduledEvent::at(20_000.0, Event::CapChange { cap_mw: Some(5.5) })]
+                } else {
+                    Vec::new()
+                }
+            };
+            let build = |retime_all: bool| {
+                let mut s = Scheduler::with_coupling(&MachineConfig::leonardo(), Coupling::full());
+                if let Some(net) = s.net.as_mut() {
+                    net.routing = routing;
+                }
+                s.power_cap = Some(cap);
+                s.retime_all = retime_all;
+                s
+            };
+            let mut fast_sched = build(false);
+            let fast = fast_sched.run_with(jobs.clone(), events(), &mut []);
+            let oracle = build(true).run_with(jobs.clone(), events(), &mut []);
+            assert_eq!(fast.len(), oracle.len());
+            for (id, f) in &fast {
+                let o = &oracle[id];
+                let ctx = format!("routing {routing:?} cap {mid_day_cap} job {id}");
+                assert_eq!(f.start_time, o.start_time, "{ctx}");
+                assert_eq!(f.end_time, o.end_time, "{ctx}");
+                assert_eq!(f.dvfs_scale, o.dvfs_scale, "{ctx}");
+                assert_eq!(f.min_dvfs_scale, o.min_dvfs_scale, "{ctx}");
+                assert_eq!(f.placement.nodes_per_cell, o.placement.nodes_per_cell, "{ctx}");
+            }
+            if !mid_day_cap {
+                // The PR 1 baseline engine (always retime-all) agrees too.
+                let base = build(false).run_event_baseline(jobs.clone());
+                for (id, f) in &fast {
+                    let b = &base[id];
+                    assert_eq!(f.end_time, b.end_time, "baseline job {id}");
+                    assert_eq!(f.start_time, b.start_time, "baseline job {id}");
+                }
+            }
+            // The index must actually elide work on an HPC day, or the
+            // whole exercise is a no-op.
+            assert!(
+                fast_sched.last_run.retimes_elided > 0,
+                "incremental engine elided nothing (routing {routing:?})"
+            );
+        }
+    }
+}
+
+/// Elision is pure bookkeeping: every report number of a coupled sweep
+/// is identical between the incremental engine and the retime-all
+/// baseline — `retimes_elided` (and the machinery behind it) never
+/// changes anything it reports next to.
+#[test]
+fn retimes_elided_is_report_neutral() {
+    let twin = Twin::leonardo();
+    for seed in [1u64, 9] {
+        let grid = SweepGrid::new(
+            vec![seed, seed + 1],
+            vec![None, Some(6.5)],
+            vec!["hpc".into()],
+            120,
+        )
+        .unwrap()
+        .with_coupling(Coupling::full());
+        let fast = run_sweep_streaming(&twin, &grid, 2);
+        let oracle = run_sweep_streaming(&twin, &grid.clone().with_retime_all(true), 2);
+        assert_eq!(fast.stats.len(), oracle.stats.len());
+        for (a, b) in fast.stats.iter().zip(&oracle.stats) {
+            let ctx = format!("seed {} cap {:?}", a.seed, a.cap_mw);
+            assert_eq!(a.makespan_h, b.makespan_h, "{ctx}");
+            assert_eq!(a.mean_wait_min, b.mean_wait_min, "{ctx}");
+            assert_eq!(a.p95_wait_min, b.p95_wait_min, "{ctx}");
+            assert_eq!(a.max_wait_min, b.max_wait_min, "{ctx}");
+            assert_eq!(a.utilization, b.utilization, "{ctx}");
+            assert_eq!(a.peak_mw, b.peak_mw, "{ctx}");
+            assert_eq!(a.energy_mwh, b.energy_mwh, "{ctx}");
+            assert_eq!(a.throttled, b.throttled, "{ctx}");
+            assert_eq!(a.peak_congestion, b.peak_congestion, "{ctx}");
+            assert_eq!(a.mean_stretch, b.mean_stretch, "{ctx}");
+            assert_eq!(a.p95_stretch, b.p95_stretch, "{ctx}");
+            assert_eq!(a.events_skipped, b.events_skipped, "{ctx}");
+        }
+    }
+}
+
 /// Coupled accounting stays safe: all jobs complete, the machine drains
 /// back to fully free, and no instant oversubscribes the partition even
 /// though End times move around.
 #[test]
 fn coupled_replay_keeps_accounting_invariants() {
-    use leonardo_twin::workloads::TraceGen;
     let jobs = TraceGen::booster_hpc_day(800, 23).generate();
     let mut s = coupled_sched();
     s.power_cap = Some(PowerCap {
