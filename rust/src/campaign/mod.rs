@@ -49,19 +49,22 @@ use crate::coordinator::Twin;
 use crate::metrics::{f1, f2, Table};
 use crate::network::CongestionTracker;
 use crate::power::{PowerMonitor, Utilization};
-use crate::scheduler::{Coupling, Job, JobRecord, Partition, PowerCap, Scheduler};
+use crate::scheduler::{Coupling, Job, JobRecord, Partition, PolicyKind, PowerCap, Scheduler};
 use crate::sim::Component;
 use crate::workloads::TraceGen;
 use crate::Result;
 
 /// One cell of the scenario grid: a trace (mix + seed) under an
-/// optional facility power cap, with or without runtime coupling.
+/// optional facility power cap, a placement policy, with or without
+/// runtime coupling.
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub mix: String,
     pub seed: u64,
     pub cap_mw: Option<f64>,
     pub coupling: Coupling,
+    /// Placement policy the scheduler replays under.
+    pub policy: PolicyKind,
     /// Replay on the PR 3 retime-all walk instead of the incremental
     /// cell-indexed retimer (see [`crate::scheduler::Scheduler::retime_all`]) —
     /// the bench baseline; records are bit-identical either way.
@@ -71,7 +74,8 @@ pub struct Scenario {
 
 impl Scenario {
     pub fn label(&self) -> String {
-        format!("{} seed={} {}", self.mix, self.seed, cap_label(self.cap_mw))
+        let policy = self.policy.name();
+        format!("{} seed={} {} {policy}", self.mix, self.seed, cap_label(self.cap_mw))
     }
 }
 
@@ -83,12 +87,16 @@ fn cap_label(cap_mw: Option<f64>) -> String {
 }
 
 /// The sweep grid: arrival seeds x facility power-cap levels x workload
-/// mixes (by [`TraceGen::named`] name), each scenario a `jobs`-job day.
+/// mixes (by [`TraceGen::named`] name) x placement policies, each
+/// scenario a `jobs`-job day.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     pub seeds: Vec<u64>,
     pub caps: Vec<Option<f64>>,
     pub mixes: Vec<String>,
+    /// Placement-policy axis (default `[PackFirst]` — the seed order,
+    /// so a policy-less grid is exactly the pre-policy grid).
+    pub policies: Vec<PolicyKind>,
     /// Jobs per scenario trace.
     pub jobs: usize,
     /// Runtime coupling applied to every scenario (default off — the
@@ -134,6 +142,7 @@ impl SweepGrid {
             seeds,
             caps,
             mixes,
+            policies: vec![PolicyKind::PackFirst],
             jobs,
             coupling: Coupling::default(),
             retime_all: false,
@@ -146,6 +155,15 @@ impl SweepGrid {
         self
     }
 
+    /// Same grid swept over a placement-policy axis (scored against
+    /// each other in the report's policy table). Panics on an empty
+    /// axis — the CLI boundary ([`parse_policies`]) rejects it first.
+    pub fn with_policies(mut self, policies: Vec<PolicyKind>) -> Self {
+        assert!(!policies.is_empty(), "policy axis needs at least one policy");
+        self.policies = policies;
+        self
+    }
+
     /// Same grid replayed on the PR 3 retime-all walk (bench baseline).
     pub fn with_retime_all(mut self, retime_all: bool) -> Self {
         self.retime_all = retime_all;
@@ -153,31 +171,36 @@ impl SweepGrid {
     }
 
     pub fn len(&self) -> usize {
-        self.seeds.len() * self.caps.len() * self.mixes.len()
+        self.seeds.len() * self.caps.len() * self.mixes.len() * self.policies.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Expand the grid in deterministic mix-major, then cap, then seed
-    /// order — the order scenarios are numbered, reported and merged
-    /// in, regardless of which worker ran which.
+    /// Expand the grid in deterministic policy-major, then mix, then
+    /// cap, then seed order — the order scenarios are numbered,
+    /// reported and merged in, regardless of which worker ran which.
+    /// (With the default single-policy axis this is exactly the
+    /// pre-policy expansion.)
     pub fn scenarios(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
-        for mix in &self.mixes {
-            for &cap_mw in &self.caps {
-                for &seed in &self.seeds {
-                    let trace = TraceGen::named(mix, self.jobs, seed)
-                        .expect("mix names validated at grid construction");
-                    out.push(Scenario {
-                        mix: mix.clone(),
-                        seed,
-                        cap_mw,
-                        coupling: self.coupling,
-                        retime_all: self.retime_all,
-                        trace,
-                    });
+        for &policy in &self.policies {
+            for mix in &self.mixes {
+                for &cap_mw in &self.caps {
+                    for &seed in &self.seeds {
+                        let trace = TraceGen::named(mix, self.jobs, seed)
+                            .expect("mix names validated at grid construction");
+                        out.push(Scenario {
+                            mix: mix.clone(),
+                            seed,
+                            cap_mw,
+                            coupling: self.coupling,
+                            policy,
+                            retime_all: self.retime_all,
+                            trace,
+                        });
+                    }
                 }
             }
         }
@@ -192,6 +215,8 @@ pub struct ScenarioStats {
     pub mix: String,
     pub seed: u64,
     pub cap_mw: Option<f64>,
+    /// Placement policy the scenario replayed under.
+    pub policy: PolicyKind,
     pub jobs: usize,
     pub makespan_h: f64,
     pub mean_wait_min: f64,
@@ -207,6 +232,11 @@ pub struct ScenarioStats {
     pub throttled: usize,
     /// Highest mean global-link load observed.
     pub peak_congestion: f64,
+    /// Highest single link-bundle utilization observed (the hottest
+    /// global link of the day).
+    pub peak_link_util: f64,
+    /// Mean over events of the mean link-bundle utilization.
+    pub mean_link_util: f64,
     /// Mean runtime stretch (actual / nominal runtime; 1.0 = no
     /// slowdown). Above 1 only when DVFS capping or runtime coupling
     /// extended jobs.
@@ -274,6 +304,7 @@ impl ScenarioStats {
             mix: String::new(),
             seed: 0,
             cap_mw: None,
+            policy: PolicyKind::default(),
             jobs: records.len(),
             makespan_h: makespan / 3600.0,
             mean_wait_min: mean_wait / 60.0,
@@ -284,6 +315,8 @@ impl ScenarioStats {
             energy_mwh: monitor.energy_kwh() / 1e3,
             throttled,
             peak_congestion: congestion.peak_load(),
+            peak_link_util: congestion.peak_link_load(),
+            mean_link_util: congestion.link_series.mean(),
             mean_stretch,
             p95_stretch: percentile(&stretches, 0.95),
             events_skipped: 0,
@@ -309,9 +342,11 @@ impl ReplayRig {
         partition: Partition,
         cap_mw: Option<f64>,
         coupling: Coupling,
+        policy: PolicyKind,
     ) -> Self {
         let mut sched = Scheduler::new(&twin.cfg);
         sched.coupling = coupling;
+        sched.set_policy(policy);
         if coupling.congestion {
             // The coupled engine derives comm slowdowns from the twin's
             // network model (routing policy included).
@@ -349,9 +384,11 @@ impl ReplayRig {
         partition: Partition,
         cap_mw: Option<f64>,
         coupling: Coupling,
+        policy: PolicyKind,
     ) {
         self.sched.reset();
         self.sched.coupling = coupling;
+        self.sched.set_policy(policy);
         if coupling.congestion && self.sched.net.is_none() {
             self.sched.net = Some(twin.net.clone());
         }
@@ -380,6 +417,7 @@ fn replay(rig: &mut ReplayRig, sc: &Scenario) -> ScenarioStats {
     stats.mix = sc.mix.clone();
     stats.seed = sc.seed;
     stats.cap_mw = sc.cap_mw;
+    stats.policy = sc.policy;
     stats.events_skipped = rig.sched.last_run.events_skipped;
     stats.retimes_elided = rig.sched.last_run.retimes_elided;
     stats
@@ -390,7 +428,7 @@ fn replay(rig: &mut ReplayRig, sc: &Scenario) -> ScenarioStats {
 /// a fresh rig per scenario (the PR 3 cost shape the streaming arena is
 /// benched against).
 pub fn run_scenario(twin: &Twin, sc: &Scenario) -> ScenarioStats {
-    let mut rig = ReplayRig::new(twin, sc.trace.partition, sc.cap_mw, sc.coupling);
+    let mut rig = ReplayRig::new(twin, sc.trace.partition, sc.cap_mw, sc.coupling, sc.policy);
     replay(&mut rig, sc)
 }
 
@@ -404,8 +442,16 @@ pub fn run_scenario_arena(
     sc: &Scenario,
 ) -> ScenarioStats {
     match arena {
-        Some(rig) => rig.reset(twin, sc.trace.partition, sc.cap_mw, sc.coupling),
-        None => *arena = Some(ReplayRig::new(twin, sc.trace.partition, sc.cap_mw, sc.coupling)),
+        Some(rig) => rig.reset(twin, sc.trace.partition, sc.cap_mw, sc.coupling, sc.policy),
+        None => {
+            *arena = Some(ReplayRig::new(
+                twin,
+                sc.trace.partition,
+                sc.cap_mw,
+                sc.coupling,
+                sc.policy,
+            ))
+        }
     }
     replay(arena.as_mut().expect("arena armed above"), sc)
 }
@@ -426,6 +472,7 @@ impl CampaignReport {
                 "Mix",
                 "Seed",
                 "Cap",
+                "Policy",
                 "Jobs",
                 "Makespan [h]",
                 "Mean wait [min]",
@@ -444,6 +491,7 @@ impl CampaignReport {
                 s.mix.clone(),
                 s.seed.to_string(),
                 cap_label(s.cap_mw),
+                s.policy.name().to_string(),
                 s.jobs.to_string(),
                 f2(s.makespan_h),
                 f1(s.mean_wait_min),
@@ -487,6 +535,8 @@ impl CampaignReport {
         metric("facility energy", "MWh", &|s| s.energy_mwh);
         metric("peak facility power", "MW", &|s| s.peak_mw);
         metric("peak congestion", "link load", &|s| s.peak_congestion);
+        metric("peak link util", "bundle load", &|s| s.peak_link_util);
+        metric("mean link util", "bundle load", &|s| s.mean_link_util);
         metric("mean stretch", "x nominal", &|s| s.mean_stretch);
         metric("p95 stretch", "x nominal", &|s| s.p95_stretch);
         metric("stale events skipped", "re-timed Ends", &|s| s.events_skipped as f64);
@@ -536,6 +586,53 @@ impl CampaignReport {
         }
         t
     }
+
+    /// Policy comparison: metrics averaged over seeds, caps and mixes
+    /// per placement policy, in first-appearance (grid) order — the row
+    /// pair that scores [`crate::scheduler::SpreadLinks`] against
+    /// [`crate::scheduler::PackFirst`] on the same scenarios.
+    pub fn policy_table(&self) -> Table {
+        let mut t = Table::new(
+            "Placement policies — means over seeds, caps and mixes per policy",
+            &[
+                "Policy",
+                "Scenarios",
+                "Mean wait [min]",
+                "p95 wait [min]",
+                "Util",
+                "Mean stretch",
+                "p95 stretch",
+                "Peak link util",
+                "Mean link util",
+            ],
+        );
+        let mut policies: Vec<PolicyKind> = Vec::new();
+        for s in &self.stats {
+            if !policies.contains(&s.policy) {
+                policies.push(s.policy);
+            }
+        }
+        for policy in policies {
+            let group: Vec<&ScenarioStats> =
+                self.stats.iter().filter(|s| s.policy == policy).collect();
+            let n = group.len() as f64;
+            let mean = |pick: &dyn Fn(&ScenarioStats) -> f64| {
+                group.iter().copied().map(pick).sum::<f64>() / n
+            };
+            t.row(vec![
+                policy.name().to_string(),
+                group.len().to_string(),
+                f1(mean(&|s| s.mean_wait_min)),
+                f1(mean(&|s| s.p95_wait_min)),
+                f2(mean(&|s| s.utilization)),
+                f2(mean(&|s| s.mean_stretch)),
+                f2(mean(&|s| s.p95_stretch)),
+                f2(mean(&|s| s.peak_link_util)),
+                f2(mean(&|s| s.mean_link_util)),
+            ]);
+        }
+        t
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -544,10 +641,24 @@ impl CampaignReport {
 // panic inside a worker.
 // ---------------------------------------------------------------------
 
+/// First-appearance dedup shared by the grid-axis parsers: a repeated
+/// `--caps`/`--mixes`/`--policy` value cannot silently multiply the
+/// grid with identical scenarios.
+fn dedup_first<T: PartialEq>(items: Vec<T>) -> Vec<T> {
+    let mut out: Vec<T> = Vec::new();
+    for item in items {
+        if !out.contains(&item) {
+            out.push(item);
+        }
+    }
+    out
+}
+
 /// Parse a `--caps` list: comma-separated MW levels, with
 /// `none`/`off`/`uncapped` lifting the cap for that grid level.
+/// Duplicate levels are collapsed (first appearance wins).
 pub fn parse_caps(list: &str) -> Result<Vec<Option<f64>>> {
-    let caps: Vec<Option<f64>> = list
+    let parsed: Vec<Option<f64>> = list
         .split(',')
         .map(|s| s.trim())
         .filter(|s| !s.is_empty())
@@ -559,6 +670,7 @@ pub fn parse_caps(list: &str) -> Result<Vec<Option<f64>>> {
                 .map_err(|e| anyhow!("--caps '{s}': {e}")),
         })
         .collect::<Result<_>>()?;
+    let caps = dedup_first(parsed);
     ensure!(!caps.is_empty(), "--caps needs at least one level");
     // Non-finite or non-positive levels are rejected again by
     // `SweepGrid::new`; catching them here gives the flag-shaped error.
@@ -572,12 +684,14 @@ pub fn parse_caps(list: &str) -> Result<Vec<Option<f64>>> {
 }
 
 /// Parse a `--mixes` list: comma-separated [`TraceGen::named`] names.
+/// Duplicates are collapsed (first appearance wins).
 pub fn parse_mixes(list: &str) -> Result<Vec<String>> {
-    let mixes: Vec<String> = list
+    let parsed: Vec<String> = list
         .split(',')
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
         .collect();
+    let mixes = dedup_first(parsed);
     ensure!(!mixes.is_empty(), "--mixes needs at least one mix");
     for mix in &mixes {
         ensure!(
@@ -604,8 +718,31 @@ pub fn parse_routing(name: &str) -> Result<crate::topology::Routing> {
     match name.to_ascii_lowercase().as_str() {
         "minimal" => Ok(crate::topology::Routing::Minimal),
         "valiant" => Ok(crate::topology::Routing::Valiant),
-        other => Err(anyhow!("--routing '{other}': expected minimal or valiant")),
+        "adaptive" => Ok(crate::topology::Routing::Adaptive),
+        other => Err(anyhow!(
+            "--routing '{other}': expected minimal, valiant or adaptive"
+        )),
     }
+}
+
+/// Parse a `--policy` list: comma-separated placement policies
+/// (`pack` = the seed's fullest-first packing, `spread` = link-aware
+/// anti-fragmentation). More than one value turns the sweep's policy
+/// axis on; duplicates are collapsed (first appearance wins).
+pub fn parse_policies(list: &str) -> Result<Vec<PolicyKind>> {
+    let parsed: Vec<PolicyKind> = list
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| match s.to_ascii_lowercase().as_str() {
+            "pack" | "packfirst" => Ok(PolicyKind::PackFirst),
+            "spread" | "spreadlinks" => Ok(PolicyKind::SpreadLinks),
+            other => Err(anyhow!("--policy '{other}': expected pack or spread")),
+        })
+        .collect::<Result<_>>()?;
+    let policies = dedup_first(parsed);
+    ensure!(!policies.is_empty(), "--policy needs at least one policy");
+    Ok(policies)
 }
 
 /// Fan the grid across `threads` workers with `std::thread::scope`,
@@ -732,7 +869,7 @@ mod tests {
         assert_eq!((sc[1].mix.as_str(), sc[1].cap_mw, sc[1].seed), ("day", None, 8));
         assert_eq!(sc[2].cap_mw, Some(6.0));
         assert_eq!(sc[4].mix, "ai");
-        assert_eq!(sc[7].label(), "ai seed=8 cap 6.0 MW");
+        assert_eq!(sc[7].label(), "ai seed=8 cap 6.0 MW pack");
     }
 
     #[test]
@@ -812,7 +949,7 @@ mod tests {
         let caps = report.cap_table();
         assert_eq!(caps.rows.len(), 2);
         let summary = report.summary_table();
-        assert_eq!(summary.rows.len(), 10);
+        assert_eq!(summary.rows.len(), 12);
         // Sub-idle-floor capping forces every job onto the 0.5 DVFS
         // floor: clock-bound work stretches, and the stretch percentiles
         // surface it.
@@ -949,14 +1086,18 @@ mod tests {
 
     #[test]
     fn cli_parsers_reject_malformed_input() {
-        // Caps: floats with none/off/uncapped sentinels.
+        // Caps: floats with none/off/uncapped sentinels; duplicates
+        // collapse.
         assert_eq!(parse_caps("none,7.5").unwrap(), vec![None, Some(7.5)]);
+        assert_eq!(parse_caps("7.5,7.5,none").unwrap(), vec![Some(7.5), None]);
         assert!(parse_caps("7.5,oops").is_err());
         assert!(parse_caps("").is_err());
         assert!(parse_caps("-3.0").is_err());
         assert!(parse_caps("nan").is_err());
-        // Mixes: validated against TraceGen's registry.
+        // Mixes: validated against TraceGen's registry; duplicates
+        // collapse.
         assert_eq!(parse_mixes(" day , ai ").unwrap(), vec!["day", "ai"]);
+        assert_eq!(parse_mixes("day,day,ai").unwrap(), vec!["day", "ai"]);
         assert!(parse_mixes("day,bogus").is_err());
         assert!(parse_mixes(",").is_err());
         // Threads: 0 is an error, None resolves to the core count.
@@ -966,6 +1107,54 @@ mod tests {
         // Routing policies.
         assert!(matches!(parse_routing("valiant"), Ok(crate::topology::Routing::Valiant)));
         assert!(matches!(parse_routing("MINIMAL"), Ok(crate::topology::Routing::Minimal)));
-        assert!(parse_routing("adaptive").is_err());
+        assert!(matches!(
+            parse_routing("adaptive"),
+            Ok(crate::topology::Routing::Adaptive)
+        ));
+        assert!(parse_routing("random").is_err());
+        // Placement policies.
+        assert_eq!(
+            parse_policies("pack,spread").unwrap(),
+            vec![PolicyKind::PackFirst, PolicyKind::SpreadLinks]
+        );
+        assert_eq!(parse_policies(" SPREAD ").unwrap(), vec![PolicyKind::SpreadLinks]);
+        assert_eq!(
+            parse_policies("pack,pack,spread").unwrap(),
+            vec![PolicyKind::PackFirst, PolicyKind::SpreadLinks],
+            "duplicates must collapse"
+        );
+        assert!(parse_policies("pack,bogus").is_err());
+        assert!(parse_policies("").is_err());
+    }
+
+    /// The policy axis expands the grid, shows up in the report tables,
+    /// and PackFirst rows are bit-identical to a policy-less grid.
+    #[test]
+    fn policy_axis_expands_and_reports() {
+        let twin = Twin::leonardo();
+        let base = SweepGrid::new(vec![1, 2], vec![None], vec!["day".into()], 60).unwrap();
+        let both = base
+            .clone()
+            .with_policies(vec![PolicyKind::PackFirst, PolicyKind::SpreadLinks]);
+        assert_eq!(both.len(), 2 * base.len());
+        let sc = both.scenarios();
+        assert_eq!(sc.len(), 4);
+        assert!(sc[..2].iter().all(|s| s.policy == PolicyKind::PackFirst));
+        assert!(sc[2..].iter().all(|s| s.policy == PolicyKind::SpreadLinks));
+        let report = run_sweep_streaming(&twin, &both, 2);
+        let plain = run_sweep_streaming(&twin, &base, 2);
+        assert_eq!(report.stats.len(), 4);
+        // Policy-major expansion: the PackFirst half IS the plain grid.
+        assert_eq!(&report.stats[..2], &plain.stats[..]);
+        // Tables carry the policy column and the comparison rows.
+        let t = report.scenario_table();
+        assert_eq!(t.headers[3], "Policy");
+        assert_eq!(t.rows[0][3], "pack");
+        assert_eq!(t.rows[3][3], "spread");
+        let pt = report.policy_table();
+        assert_eq!(pt.rows.len(), 2);
+        assert_eq!(pt.rows[0][0], "pack");
+        assert_eq!(pt.rows[1][0], "spread");
+        assert_eq!(pt.rows[0][1], "2");
     }
 }

@@ -471,13 +471,31 @@ impl Twin {
         cap_mw: Option<f64>,
         coupling: crate::scheduler::Coupling,
     ) -> Result<OpsReport> {
+        self.operations_replay_policy(
+            trace,
+            cap_mw,
+            coupling,
+            crate::scheduler::PolicyKind::PackFirst,
+        )
+    }
+
+    /// [`Twin::operations_replay_with`] under a named placement policy
+    /// (CLI: `operations --policy pack|spread`).
+    pub fn operations_replay_policy(
+        &self,
+        trace: &TraceGen,
+        cap_mw: Option<f64>,
+        coupling: crate::scheduler::Coupling,
+        policy: crate::scheduler::PolicyKind,
+    ) -> Result<OpsReport> {
         let jobs = trace.generate();
         anyhow::ensure!(!jobs.is_empty(), "empty trace");
 
         // Shared replay wiring + arithmetic: the same rig and the same
         // stats code path the campaign sweep uses, so `operations` and
         // `sweep` can never model or report differently.
-        let mut rig = crate::campaign::ReplayRig::new(self, trace.partition, cap_mw, coupling);
+        let mut rig =
+            crate::campaign::ReplayRig::new(self, trace.partition, cap_mw, coupling, policy);
         let mut counter = EventCounter::default();
         let records = {
             let mut observers: [&mut dyn Component; 3] =
@@ -491,6 +509,7 @@ impl Twin {
             &rig.monitor,
             &rig.congestion,
         );
+        stats.policy = policy;
         stats.events_skipped = rig.sched.last_run.events_skipped;
         stats.retimes_elided = rig.sched.last_run.retimes_elided;
 
@@ -516,6 +535,19 @@ impl Twin {
             f2(stats.peak_congestion),
             "global-link load",
         );
+        row(
+            &mut summary,
+            "peak link utilization",
+            f2(stats.peak_link_util),
+            "bundle load",
+        );
+        row(
+            &mut summary,
+            "mean link utilization",
+            f2(stats.mean_link_util),
+            "bundle load",
+        );
+        row(&mut summary, "placement policy", policy.name().to_string(), "");
         row(
             &mut summary,
             "mean runtime stretch",
@@ -846,6 +878,34 @@ mod tests {
         let elided: u64 = cell("re-times elided").parse().unwrap();
         assert!(skipped > 0, "a coupled hpc day must re-time some Ends");
         assert!(elided > 0, "the cell index elided nothing");
+    }
+
+    #[test]
+    fn operations_summary_reports_link_utilization_and_policy() {
+        let twin = Twin::leonardo();
+        let trace = crate::workloads::TraceGen::booster_hpc_day(400, 3);
+        let r = twin
+            .operations_replay_policy(
+                &trace,
+                None,
+                crate::scheduler::Coupling::full(),
+                crate::scheduler::PolicyKind::SpreadLinks,
+            )
+            .unwrap();
+        let cell = |name: &str| -> String {
+            r.summary
+                .rows
+                .iter()
+                .find(|row| row[0] == name)
+                .unwrap_or_else(|| panic!("missing '{name}' row"))[1]
+                .clone()
+        };
+        assert_eq!(cell("placement policy"), "spread");
+        let peak: f64 = cell("peak link utilization").parse().unwrap();
+        let mean: f64 = cell("mean link utilization").parse().unwrap();
+        assert!(peak > 0.0, "an hpc day must load some bundle");
+        assert!(peak <= 1.0 + 1e-9);
+        assert!(mean <= peak + 1e-9, "mean over bundles exceeds the peak");
     }
 
     #[test]

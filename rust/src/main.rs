@@ -13,11 +13,13 @@
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
-use leonardo_twin::campaign::{parse_caps, parse_mixes, parse_routing, parse_threads, SweepGrid};
+use leonardo_twin::campaign::{
+    parse_caps, parse_mixes, parse_policies, parse_routing, parse_threads, SweepGrid,
+};
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::metrics::Table;
 use leonardo_twin::runtime::Engine;
-use leonardo_twin::scheduler::Coupling;
+use leonardo_twin::scheduler::{Coupling, PolicyKind};
 use leonardo_twin::topology::Routing;
 use leonardo_twin::workloads::TraceGen;
 
@@ -41,12 +43,15 @@ COMMANDS:
   operations  Replay a mixed HPC+AI day on the Booster partition
               through the event-driven scheduler      [--jobs N] [--seed S] [--cap MW]
                                                       [--coupled] [--routing P]
+                                                      [--policy pack|spread]
   sweep       Multi-threaded scenario-sweep campaign: replay a
-              seeds x power-caps x mixes grid of operational days and
-              merge the outcomes (per-scenario, cap-sensitivity and
-              aggregate-percentile tables — identical for any thread
-              count)   [--jobs N] [--seed S] [--seeds K] [--caps LIST]
+              seeds x power-caps x mixes x policies grid of operational
+              days and merge the outcomes (per-scenario, cap-sensitivity,
+              policy-comparison and aggregate-percentile tables —
+              identical for any thread count)
+                       [--jobs N] [--seed S] [--seeds K] [--caps LIST]
                        [--mixes LIST] [--threads T] [--coupled] [--routing P]
+                       [--policy LIST]
   calibrate   Measure the AOT kernels through PJRT
   all         Every table in paper order              [--calibrated]
 
@@ -67,11 +72,16 @@ OPTIONS:
   --coupled         operations/sweep: runtime coupling on — running jobs'
                     provisional end times re-time under fabric contention
                     and cap moves (default: off, end times frozen at Start)
-  --routing P       operations/sweep: fabric routing policy, minimal or
-                    valiant (default minimal; valiant is the adaptive-
-                    routing worst case — detours halve global supply;
-                    requires --coupled, the uncoupled replay never
-                    consults the network model)
+  --routing P       operations/sweep: fabric routing policy — minimal,
+                    valiant or adaptive (default minimal; valiant is the
+                    adaptive-routing worst case, detours halve global
+                    supply; adaptive decides minimal-vs-valiant per flow
+                    from the measured per-link imbalance; both require
+                    --coupled, the uncoupled replay never consults the
+                    network model)
+  --policy LIST     operations: one placement policy; sweep: comma-
+                    separated policy axis (pack = fullest-first packing,
+                    spread = link-aware anti-fragmentation; default pack)
 ";
 
 struct Args {
@@ -89,6 +99,7 @@ struct Args {
     threads: Option<usize>,
     coupled: bool,
     routing: String,
+    policy: String,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -109,6 +120,7 @@ fn parse_args() -> Result<Args, String> {
         threads: None,
         coupled: false,
         routing: "minimal".to_string(),
+        policy: "pack".to_string(),
     };
     while let Some(a) = argv.next() {
         match a.as_str() {
@@ -117,6 +129,7 @@ fn parse_args() -> Result<Args, String> {
             "--dot" => args.dot = true,
             "--coupled" => args.coupled = true,
             "--routing" => args.routing = argv.next().ok_or("--routing needs a value")?,
+            "--policy" => args.policy = argv.next().ok_or("--policy needs a value")?,
             "--artifacts" => {
                 args.artifacts = Some(argv.next().ok_or("--artifacts needs a value")?)
             }
@@ -181,18 +194,29 @@ fn routing_and_coupling(args: &Args) -> anyhow::Result<(Routing, Coupling)> {
     };
     anyhow::ensure!(
         routing == Routing::Minimal || coupling.enabled(),
-        "--routing valiant requires --coupled: the uncoupled replay freezes \
-         end times at Start and never consults the network model, so the \
-         routing policy would silently change nothing"
+        "--routing valiant/adaptive requires --coupled: the uncoupled replay \
+         freezes end times at Start and never consults the network model, so \
+         the routing policy would silently change nothing"
     );
     Ok((routing, coupling))
+}
+
+/// Resolve the single placement policy an `operations` replay uses.
+fn operations_policy(args: &Args) -> anyhow::Result<PolicyKind> {
+    let policies = parse_policies(&args.policy)?;
+    anyhow::ensure!(
+        policies.len() == 1,
+        "operations replays one day under one policy: pass a single --policy \
+         (the policy axis belongs to sweep)"
+    );
+    Ok(policies[0])
 }
 
 /// Validate and assemble every `sweep` input (grid, worker threads,
 /// routing policy, coupling) from the raw flags. Malformed input —
 /// unparsable `--caps`, an unknown mix, `--threads 0`, a bogus
-/// `--routing` — comes back as an `anyhow` error for the CLI to print,
-/// never a panic inside a worker.
+/// `--routing` or `--policy` — comes back as an `anyhow` error for the
+/// CLI to print, never a panic inside a worker.
 fn sweep_inputs(args: &Args) -> anyhow::Result<(SweepGrid, usize, Routing, Coupling)> {
     anyhow::ensure!(
         args.cap_mw.is_none(),
@@ -201,12 +225,14 @@ fn sweep_inputs(args: &Args) -> anyhow::Result<(SweepGrid, usize, Routing, Coupl
     );
     let caps = parse_caps(&args.caps)?;
     let mixes = parse_mixes(&args.mixes)?;
+    let policies = parse_policies(&args.policy)?;
     let threads = parse_threads(args.threads)?;
     let (routing, coupling) = routing_and_coupling(args)?;
     anyhow::ensure!(args.seeds > 0, "--seeds must be at least 1");
     let seeds: Vec<u64> = (0..args.seeds).map(|k| args.seed + k).collect();
     let grid = SweepGrid::new(seeds, caps, mixes, args.jobs.unwrap_or(2_000))?
-        .with_coupling(coupling);
+        .with_coupling(coupling)
+        .with_policies(policies);
     Ok((grid, threads, routing, coupling))
 }
 
@@ -271,7 +297,10 @@ fn main() -> anyhow::Result<()> {
         }
         "overview" => overview(&twin),
         "operations" => {
-            let (routing, coupling) = match routing_and_coupling(&args) {
+            let inputs = routing_and_coupling(&args).and_then(|(routing, coupling)| {
+                operations_policy(&args).map(|policy| (routing, coupling, policy))
+            });
+            let (routing, coupling, policy) = match inputs {
                 Ok(v) => v,
                 Err(e) => {
                     eprintln!("{e}");
@@ -280,7 +309,7 @@ fn main() -> anyhow::Result<()> {
             };
             twin.net.routing = routing;
             let trace = TraceGen::booster_day(args.jobs.unwrap_or(10_000), args.seed);
-            let report = twin.operations_replay_with(&trace, args.cap_mw, coupling)?;
+            let report = twin.operations_replay_policy(&trace, args.cap_mw, coupling, policy)?;
             print(&report.summary, md);
             print(&report.power, md);
         }
@@ -294,24 +323,28 @@ fn main() -> anyhow::Result<()> {
             };
             twin.net.routing = routing;
             eprintln!(
-                "sweep: {} scenarios ({} seeds x {} caps x {} mixes, {} jobs each) \
-                 on {} threads{}{}",
+                "sweep: {} scenarios ({} seeds x {} caps x {} mixes x {} policies, \
+                 {} jobs each) on {} threads{}{}",
                 grid.len(),
                 grid.seeds.len(),
                 grid.caps.len(),
                 grid.mixes.len(),
+                grid.policies.len(),
                 grid.jobs,
                 threads,
                 if coupling.enabled() { ", coupled" } else { "" },
-                if routing == Routing::Valiant {
-                    ", valiant routing"
-                } else {
-                    ""
+                match routing {
+                    Routing::Minimal => "",
+                    Routing::Valiant => ", valiant routing",
+                    Routing::Adaptive => ", adaptive routing",
                 },
             );
             let report = twin.sweep(&grid, threads);
             print(&report.scenario_table(), md);
             print(&report.cap_table(), md);
+            if grid.policies.len() > 1 {
+                print(&report.policy_table(), md);
+            }
             print(&report.summary_table(), md);
         }
         "calibrate" => {
@@ -411,6 +444,7 @@ mod tests {
             threads: None,
             coupled: false,
             routing: "minimal".to_string(),
+            policy: "pack".to_string(),
         }
     }
 
@@ -442,12 +476,22 @@ mod tests {
         assert!(sweep_inputs(&a).is_err(), "--threads 0 accepted");
 
         let mut a = args();
-        a.routing = "adaptive".into();
+        a.routing = "random".into();
         assert!(sweep_inputs(&a).is_err(), "unknown routing accepted");
 
-        // Valiant without coupling would silently change nothing: error.
+        let mut a = args();
+        a.policy = "pack,bogus".into();
+        assert!(sweep_inputs(&a).is_err(), "unknown policy accepted");
+
+        // Valiant/adaptive without coupling would silently change
+        // nothing: error.
         let mut a = args();
         a.routing = "valiant".into();
+        let err = sweep_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("requires --coupled"), "{err}");
+
+        let mut a = args();
+        a.routing = "adaptive".into();
         let err = sweep_inputs(&a).unwrap_err();
         assert!(format!("{err}").contains("requires --coupled"), "{err}");
 
@@ -487,6 +531,31 @@ mod tests {
         assert_eq!(coupling, Coupling::full());
         assert_eq!(grid.coupling, Coupling::full());
         assert_eq!(grid.jobs, 10);
+        assert_eq!(grid.policies, vec![PolicyKind::PackFirst]);
+    }
+
+    #[test]
+    fn sweep_inputs_wires_policy_axis_and_adaptive_routing() {
+        let mut a = args();
+        a.coupled = true;
+        a.routing = "adaptive".into();
+        a.policy = "pack,spread".into();
+        a.jobs = Some(10);
+        let (grid, _, routing, coupling) = sweep_inputs(&a).unwrap();
+        assert_eq!(routing, Routing::Adaptive);
+        assert!(coupling.enabled());
+        assert_eq!(grid.policies, vec![PolicyKind::PackFirst, PolicyKind::SpreadLinks]);
+        assert_eq!(grid.len(), 4 * 3 * 2 * 2);
+    }
+
+    #[test]
+    fn operations_accepts_one_policy_only() {
+        let mut a = args();
+        a.policy = "spread".into();
+        assert_eq!(operations_policy(&a).unwrap(), PolicyKind::SpreadLinks);
+        a.policy = "pack,spread".into();
+        let err = operations_policy(&a).unwrap_err();
+        assert!(format!("{err}").contains("single --policy"), "{err}");
     }
 }
 

@@ -14,15 +14,100 @@
 //!
 //! Congestion is event-driven: [`CongestionTracker`] subscribes to the
 //! shared [`crate::sim`] stream, and every multi-cell job `Start`/`End`
-//! updates per-cell background load that [`Network::effective_node_bw`]
-//! folds into the global-link capacity — so a job's achievable bandwidth
-//! depends on what else the scheduler is running, not just its own shape.
+//! updates *per-global-link* background load (one entry per unordered
+//! cell pair, see [`crate::topology::Topology::link_bundle_id`]) plus
+//! the per-cell spine-stage load, which [`Network::effective_node_bw`]
+//! folds into the global-link capacity — so a job's achievable
+//! bandwidth depends on what else the scheduler is running, not just
+//! its own shape.
+//!
+//! A route's bottleneck utilization is
+//! `max(pair-bundle load, endpoint cell loads)`: traffic between cells
+//! `a` and `b` crosses `a`'s shared leaf→spine stage, the dedicated
+//! `(a, b)` bundle, and `b`'s spine stage. [`Network::link_bw_for_cells`]
+//! prices minimal routing against the **max-loaded link** on the
+//! placement's routes (all routes are driven concurrently, the worst
+//! one gates completion) and Valiant against the **detour** background
+//! ([`route_backgrounds`]: detours dodge the hottest bundle and spread
+//! over the wider population, but the endpoint spine stages stay at
+//! their max — no detour routes around them) — which is what turns
+//! minimal-vs-Valiant into a *per-flow* decision under
+//! [`Routing::Adaptive`]: a flow detours exactly when the measured
+//! imbalance makes the Valiant expression the better deal.
 
 use std::collections::BTreeMap;
 
 use crate::config::MachineConfig;
 use crate::sim::{Component, Event, ScheduledEvent};
 use crate::topology::{Routing, Topology, HDR_GBPS, HDR100_GBPS};
+
+/// Per-route global-link contributions of a placement under minimal
+/// routing: every unordered cell pair of a multi-cell placement feeds
+/// its link bundle with the nodes on both ends (`n_a + n_b` — the
+/// endpoints that inject surface traffic into that bundle). The one
+/// definition the scheduler engine's link table, the observing
+/// [`CongestionTracker`] and the link-load conservation property test
+/// all share, so the three accountings cannot drift.
+pub fn link_contributions(cells: &[(u32, u32)]) -> impl Iterator<Item = ((u32, u32), u32)> + '_ {
+    cells.iter().enumerate().flat_map(move |(i, &(a, na))| {
+        cells[i + 1..].iter().map(move |&(b, nb)| {
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            ((lo, hi), na + nb)
+        })
+    })
+}
+
+/// Combine a placement's load aggregates into the `(direct, detour)`
+/// backgrounds the bandwidth model prices. The direct (minimal) path
+/// is gated by the hottest pair bundle and the worst endpoint spine
+/// stage. A Valiant detour re-rolls the *bundles*: it avoids the hot
+/// direct bundle and rides hops drawn from the wider population,
+/// priced by `bundle_rest_mean` — the placement's bundles with the
+/// hottest excluded (0 for a single-pair placement, whose detours ride
+/// entirely off-placement bundles) — but still crosses both endpoints'
+/// spine stages, which no detour can route around, so the cell-stage
+/// max applies to both expressions. Every input is local to the
+/// placement's own cells and bundles, which is what keeps the
+/// incremental retimer's dirty-cell walk exact under every routing
+/// policy. The one formula the Network-side placement path and the
+/// scheduler engine's cross tables both feed, so the two accountings
+/// cannot drift.
+pub fn route_backgrounds(cell_max: f64, bundle_max: f64, bundle_rest_mean: f64) -> (f64, f64) {
+    (cell_max.max(bundle_max), cell_max.max(bundle_rest_mean))
+}
+
+/// Aggregate a placement's per-route loads into the `(direct, detour)`
+/// backgrounds: worst endpoint spine stage, hottest pair bundle and
+/// the rest-mean of its bundles, combined by [`route_backgrounds`].
+/// `cell_load(cell, own_nodes)` and `bundle_load(a, b, own)` supply
+/// the (possibly self-excluded) loads: the scheduler engine feeds its
+/// dense cross tables through this, the [`Network`] placement path its
+/// background tables — one aggregation, so the two sides cannot
+/// drift. `(0, 0)` for single-cell placements.
+pub fn placement_backgrounds(
+    cells: &[(u32, u32)],
+    cell_load: impl Fn(u32, u32) -> f64,
+    bundle_load: impl Fn(u32, u32, u32) -> f64,
+) -> (f64, f64) {
+    if cells.len() <= 1 {
+        return (0.0, 0.0);
+    }
+    let mut cell_max = 0.0f64;
+    let mut bundle_max = 0.0f64;
+    let mut bundle_sum = 0.0f64;
+    let mut bundles = 0usize;
+    for (i, &(a, na)) in cells.iter().enumerate() {
+        cell_max = cell_max.max(cell_load(a, na));
+        for &(b, nb) in &cells[i + 1..] {
+            let load = bundle_load(a, b, na + nb);
+            bundle_max = bundle_max.max(load);
+            bundle_sum += load;
+            bundles += 1;
+        }
+    }
+    let rest_mean = (bundle_sum - bundle_max) / (bundles - 1).max(1) as f64;
+    route_backgrounds(cell_max, bundle_max, rest_mean)
+}
 
 /// Loads below this are treated as zero (and their cells as unloaded).
 const LOAD_EPS: f64 = 1e-12;
@@ -65,21 +150,30 @@ pub struct Network {
     /// (0 = idle machine). Drives the locality-vs-spread trade-off the
     /// scheduler's packed placement exists for.
     pub background_global_load: f64,
-    /// Per-cell background load on the global links (fraction 0..=1),
-    /// maintained by a [`CongestionTracker`] from job start/end events.
-    /// Added to `background_global_load` for the cells a placement
-    /// touches. Dense (indexed by cell id, grown on demand) so the
-    /// retime-path queries and the tracker's updates are allocation-free
-    /// in steady state — no tree walks, no node churn.
+    /// Per-cell background load on the shared leaf→spine stage
+    /// (fraction 0..=1), maintained by a [`CongestionTracker`] from job
+    /// start/end events. Added to `background_global_load` for the
+    /// cells a placement touches. Dense (indexed by cell id, grown on
+    /// demand) so the retime-path queries and the tracker's updates are
+    /// allocation-free in steady state — no tree walks, no node churn.
     cell_background: Vec<f64>,
     /// Cells currently carrying a non-negligible background load (keeps
     /// the all-idle fast path an O(1) check).
     loaded_cells: usize,
+    /// Per-global-link background load (fraction 0..=1), one entry per
+    /// unordered cell pair, indexed by
+    /// [`crate::topology::Topology::link_bundle_id`]. Dense and sized
+    /// to the topology at construction, so link queries and tracker
+    /// updates are allocation-free.
+    link_background: Vec<f64>,
+    /// Link bundles currently carrying a non-negligible load.
+    loaded_links: usize,
 }
 
 impl Network {
     pub fn new(topo: Topology, injection_gbps: f64) -> Self {
         let cells = topo.cells.len();
+        let links = topo.num_link_bundles();
         Network {
             topo,
             injection_gbps,
@@ -88,6 +182,8 @@ impl Network {
             background_global_load: 0.0,
             cell_background: vec![0.0; cells],
             loaded_cells: 0,
+            link_background: vec![0.0; links],
+            loaded_links: 0,
         }
     }
 
@@ -120,17 +216,47 @@ impl Network {
             .unwrap_or(0.0)
     }
 
-    /// Mean per-cell background load over the cells a placement spans.
-    fn placement_background(&self, placement: &Placement) -> f64 {
-        if self.loaded_cells == 0 || placement.nodes_per_cell.is_empty() {
-            return 0.0;
+    /// Set the background load of the global link bundle joining cells
+    /// `a` and `b` (clamped 0..=1; ~zero loads are treated as idle).
+    /// No-op for `a == b` or out-of-fabric cells.
+    pub fn set_link_background_load(&mut self, a: u32, b: u32, load: f64) {
+        let Some(idx) = self.topo.link_bundle_id(a, b) else {
+            return;
+        };
+        let load = load.clamp(0.0, 1.0);
+        let was_loaded = self.link_background[idx] >= LOAD_EPS;
+        let is_loaded = load >= LOAD_EPS;
+        self.link_background[idx] = if is_loaded { load } else { 0.0 };
+        match (was_loaded, is_loaded) {
+            (false, true) => self.loaded_links += 1,
+            (true, false) => self.loaded_links -= 1,
+            _ => {}
         }
-        let sum: f64 = placement
-            .nodes_per_cell
-            .iter()
-            .map(|&(c, _)| self.cell_background_load(c))
-            .sum();
-        sum / placement.nodes_per_cell.len() as f64
+    }
+
+    /// Background load of the `(a, b)` link bundle (0 when unset or
+    /// unaddressable).
+    pub fn link_background_load(&self, a: u32, b: u32) -> f64 {
+        self.topo
+            .link_bundle_id(a, b)
+            .map_or(0.0, |idx| self.link_background[idx])
+    }
+
+    /// `(direct, detour)` background load over the inter-cell routes a
+    /// placement drives — the two backgrounds
+    /// [`Network::link_bw_for_cells`] prices (direct gates minimal
+    /// routing, detour gates Valiant), aggregated by the shared
+    /// [`placement_backgrounds`]. `(0, 0)` for single-cell placements
+    /// or an idle fabric.
+    fn placement_link_backgrounds(&self, cells: &[(u32, u32)]) -> (f64, f64) {
+        if self.loaded_cells == 0 && self.loaded_links == 0 {
+            return (0.0, 0.0);
+        }
+        placement_backgrounds(
+            cells,
+            |cell, _own| self.cell_background_load(cell),
+            |a, b, _own| self.link_background_load(a, b),
+        )
     }
 
     /// Effective node injection bandwidth, GB/s.
@@ -208,22 +334,15 @@ impl Network {
     /// full rate. `oversubscription` models fat-tree-style pruning above
     /// the leaf level (1.0 on LEONARDO's dragonfly+).
     pub fn effective_node_bw(&self, placement: &Placement) -> f64 {
-        self.node_bw_for_cells(
-            &placement.nodes_per_cell,
-            self.placement_background(placement),
-        )
+        let (max_bg, mean_bg) = self.placement_link_backgrounds(&placement.nodes_per_cell);
+        self.link_bw_for_cells(&placement.nodes_per_cell, max_bg, mean_bg)
     }
 
-    /// Core of [`Network::effective_node_bw`] over a raw cell list, with
-    /// the per-cell background load supplied by the caller instead of
-    /// read from [`Network::cell_background`] — the entry point the
-    /// scheduler's congestion coupling uses (its engine tracks cross
-    /// loads itself, self-excluded per job).
-    ///
-    /// Valiant routing detours every global flow through an intermediate
-    /// cell, doubling the load its traffic puts on the global links —
-    /// the adaptive-routing worst case of §2.2.
-    pub fn node_bw_for_cells(&self, cells: &[(u32, u32)], cell_background: f64) -> f64 {
+    /// The bandwidth-share core: effective per-node bandwidth of a
+    /// placement whose routes carry `background` load, with the flow's
+    /// global traffic multiplied by `route_factor` (1 = minimal paths,
+    /// 2 = Valiant detours — every byte crosses two global bundles).
+    fn bw_for(&self, cells: &[(u32, u32)], background: f64, route_factor: f64) -> f64 {
         let inj = self.injection_gbs();
         let k = cells.iter().filter(|(_, n)| *n > 0).count();
         let total_nodes: u32 = cells.iter().map(|(_, n)| n).sum();
@@ -233,11 +352,7 @@ impl Network {
         let total = total_nodes as f64;
         let avg_cell = total / k as f64;
         let cross_fraction = (1.0 / avg_cell.cbrt()).min(1.0);
-        let background = (self.background_global_load + cell_background).clamp(0.0, 0.95);
-        let route_factor = match self.routing {
-            Routing::Minimal => 1.0,
-            Routing::Valiant => 2.0,
-        };
+        let background = (self.background_global_load + background).clamp(0.0, 0.95);
         let global_gbs =
             self.topo.cell_pair_bw_gbps() / 8.0 * WIRE_EFFICIENCY * (1.0 - background);
         let supply_per_node =
@@ -250,6 +365,47 @@ impl Network {
                 + cross_fraction * (supply_per_node / demand_per_node)
         };
         inj * scale
+    }
+
+    /// [`Network::effective_node_bw`] over a raw cell list with one
+    /// *uniform* background load supplied by the caller — the
+    /// scalar-view entry point retained for callers without a per-link
+    /// picture. Under a uniform background the minimal path is never
+    /// worse than a detour, so [`Routing::Adaptive`] prices like
+    /// minimal here; the per-flow decision needs the per-link loads of
+    /// [`Network::link_bw_for_cells`].
+    pub fn node_bw_for_cells(&self, cells: &[(u32, u32)], background: f64) -> f64 {
+        match self.routing {
+            Routing::Minimal | Routing::Adaptive => self.bw_for(cells, background, 1.0),
+            Routing::Valiant => self.bw_for(cells, background, 2.0),
+        }
+    }
+
+    /// Effective per-node bandwidth of a flow under the
+    /// `(direct, detour)` backgrounds of [`route_backgrounds`] — the
+    /// per-link entry point the scheduler's congestion coupling uses
+    /// (its engine tracks per-link cross loads itself, self-excluded
+    /// per job).
+    ///
+    /// * **Minimal** drives every route concurrently: the max-loaded
+    ///   link on the placement's routes gates completion (`direct_bg`).
+    /// * **Valiant** detours every byte over two bundles drawn from the
+    ///   whole population: it pays `route_factor` 2 against `detour_bg`
+    ///   (mean bundle load, endpoint spine stages still included — no
+    ///   detour routes around them) — the §2.2 adaptive-routing worst
+    ///   case.
+    /// * **Adaptive** decides per flow from the measured imbalance:
+    ///   the flow detours exactly when the Valiant expression beats the
+    ///   minimal one (a hot direct bundle next to an idle fabric), so
+    ///   the result is the max of the two.
+    pub fn link_bw_for_cells(&self, cells: &[(u32, u32)], direct_bg: f64, detour_bg: f64) -> f64 {
+        match self.routing {
+            Routing::Minimal => self.bw_for(cells, direct_bg, 1.0),
+            Routing::Valiant => self.bw_for(cells, detour_bg, 2.0),
+            Routing::Adaptive => self
+                .bw_for(cells, direct_bg, 1.0)
+                .max(self.bw_for(cells, detour_bg, 2.0)),
+        }
     }
 
     /// Per-placement runtime slowdown factor (>= 1) for a job that
@@ -271,6 +427,28 @@ impl Network {
         }
         let bw = self.node_bw_for_cells(cells, cell_background).max(1e-9);
         (1.0 - cf) + cf * (self.injection_gbs() / bw)
+    }
+
+    /// [`Network::comm_slowdown`] over the per-link picture: the
+    /// communication share stretches by the ratio of idle-fabric
+    /// injection to what [`Network::link_bw_for_cells`] says the
+    /// placement's routes can actually move under the
+    /// `(direct, detour)` backgrounds — the coupling lever of the
+    /// per-global-link model (and, under [`Routing::Adaptive`], where
+    /// the per-flow detour decision lands in runtimes).
+    pub fn comm_slowdown_links(
+        &self,
+        cells: &[(u32, u32)],
+        comm_fraction: f64,
+        direct_bg: f64,
+        detour_bg: f64,
+    ) -> f64 {
+        let cf = comm_fraction.clamp(0.0, 1.0);
+        if cf <= 0.0 {
+            return 1.0;
+        }
+        let bw = self.link_bw_for_cells(cells, direct_bg, detour_bg);
+        (1.0 - cf) + cf * (self.injection_gbs() / bw.max(1e-9))
     }
 
     /// Worst small-message latency inside the placement, seconds.
@@ -314,15 +492,30 @@ struct CellLoad {
     total: u32,
 }
 
+/// Per-link load state of one global link bundle tracked by
+/// [`CongestionTracker`].
+#[derive(Debug, Clone, Copy)]
+struct LinkLoad {
+    /// Sum over running multi-cell jobs of their per-route contribution
+    /// to this bundle ([`link_contributions`]: `n_a + n_b` per job
+    /// spanning both endpoints).
+    cross_nodes: u32,
+    /// Capacity proxy: the endpoint cells' node totals.
+    total: u32,
+}
+
 /// Event-driven congestion accounting: a [`Component`] that watches job
-/// `Start`/`End` events and maintains, per cell, the fraction of nodes
-/// busy with multi-cell jobs — the surface traffic that loads the
-/// dragonfly global links. Apply the result to a [`Network`] (or query
-/// the load directly) to couple application performance to what the
-/// scheduler is concurrently running.
+/// `Start`/`End` events and maintains, per cell *and per global link
+/// bundle*, the traffic of running multi-cell jobs — the surface
+/// traffic that loads the dragonfly global links. Apply the result to a
+/// [`Network`] (or query the loads directly) to couple application
+/// performance to what the scheduler is concurrently running.
 #[derive(Debug, Clone)]
 pub struct CongestionTracker {
     cells: BTreeMap<u32, CellLoad>,
+    /// Global link bundles among the tracked cells, keyed by the
+    /// `(low, high)` cell pair.
+    links: BTreeMap<(u32, u32), LinkLoad>,
     /// Count only Booster-partition jobs (set by [`Self::for_booster`]).
     /// Cell totals are partition-scoped, so a tracker built over GPU
     /// cells must not charge DataCentric traffic to them — the Hybrid
@@ -330,28 +523,51 @@ pub struct CongestionTracker {
     pub booster_only: bool,
     /// Mean cross-traffic load over all tracked cells, sampled per event.
     pub series: crate::telemetry::Series,
+    /// Mean per-link utilization over all tracked bundles, sampled per
+    /// event.
+    pub link_series: crate::telemetry::Series,
     peak: f64,
+    peak_link: f64,
 }
 
 impl CongestionTracker {
     /// Track the given `(cell id, node total)` set, counting every job.
     pub fn new(cells: impl IntoIterator<Item = (u32, u32)>) -> Self {
+        let cells: BTreeMap<u32, CellLoad> = cells
+            .into_iter()
+            .map(|(id, total)| {
+                (
+                    id,
+                    CellLoad {
+                        cross_nodes: 0,
+                        total: total.max(1),
+                    },
+                )
+            })
+            .collect();
+        // Every bundle among the tracked cells, pre-built so event
+        // updates never allocate.
+        let ids: Vec<u32> = cells.keys().copied().collect();
+        let mut links = BTreeMap::new();
+        for (i, &a) in ids.iter().enumerate() {
+            for &b in &ids[i + 1..] {
+                links.insert(
+                    (a, b),
+                    LinkLoad {
+                        cross_nodes: 0,
+                        total: cells[&a].total + cells[&b].total,
+                    },
+                );
+            }
+        }
         CongestionTracker {
-            cells: cells
-                .into_iter()
-                .map(|(id, total)| {
-                    (
-                        id,
-                        CellLoad {
-                            cross_nodes: 0,
-                            total: total.max(1),
-                        },
-                    )
-                })
-                .collect(),
+            cells,
+            links,
             booster_only: false,
             series: crate::telemetry::Series::default(),
+            link_series: crate::telemetry::Series::default(),
             peak: 0.0,
+            peak_link: 0.0,
         }
     }
 
@@ -366,14 +582,20 @@ impl CongestionTracker {
         t
     }
 
-    /// Zero every cell's cross load, the peak and the series, keeping
-    /// the cell map and sample buffers allocated (arena reuse).
+    /// Zero every cell's and link's cross load, the peaks and the
+    /// series, keeping the cell/link maps and sample buffers allocated
+    /// (arena reuse).
     pub fn reset(&mut self) {
         for c in self.cells.values_mut() {
             c.cross_nodes = 0;
         }
+        for l in self.links.values_mut() {
+            l.cross_nodes = 0;
+        }
         self.peak = 0.0;
+        self.peak_link = 0.0;
         self.series.clear();
+        self.link_series.clear();
     }
 
     /// Cross-traffic load fraction of one cell (0 when untracked).
@@ -382,6 +604,55 @@ impl CongestionTracker {
             .get(&cell)
             .map(|c| c.cross_nodes as f64 / c.total as f64)
             .unwrap_or(0.0)
+    }
+
+    /// Utilization fraction of the `(a, b)` link bundle (0 when
+    /// untracked).
+    pub fn link_load(&self, a: u32, b: u32) -> f64 {
+        let key = if a < b { (a, b) } else { (b, a) };
+        self.links
+            .get(&key)
+            .map(|l| l.cross_nodes as f64 / l.total as f64)
+            .unwrap_or(0.0)
+    }
+
+    /// Raw cross-node count charged to the `(a, b)` bundle — the
+    /// quantity the link-load conservation property test re-derives
+    /// from the running job set.
+    pub fn link_cross_nodes(&self, a: u32, b: u32) -> u32 {
+        let key = if a < b { (a, b) } else { (b, a) };
+        self.links.get(&key).map(|l| l.cross_nodes).unwrap_or(0)
+    }
+
+    /// Sum of raw cross-node counts over every tracked bundle.
+    pub fn total_link_cross_nodes(&self) -> u64 {
+        self.links.values().map(|l| l.cross_nodes as u64).sum()
+    }
+
+    /// Mean utilization over all tracked link bundles.
+    pub fn mean_link_load(&self) -> f64 {
+        if self.links.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .links
+            .values()
+            .map(|l| l.cross_nodes as f64 / l.total as f64)
+            .sum();
+        sum / self.links.len() as f64
+    }
+
+    /// Utilization of the most-loaded tracked bundle right now.
+    pub fn max_link_load(&self) -> f64 {
+        self.links
+            .values()
+            .map(|l| l.cross_nodes as f64 / l.total as f64)
+            .fold(0.0, f64::max)
+    }
+
+    /// Highest single-bundle utilization observed over the run.
+    pub fn peak_link_load(&self) -> f64 {
+        self.peak_link
     }
 
     /// Mean load over all tracked cells.
@@ -402,11 +673,14 @@ impl CongestionTracker {
         self.peak
     }
 
-    /// Write the current per-cell loads into `net` so
+    /// Write the current per-cell and per-link loads into `net` so
     /// [`Network::effective_node_bw`] sees them.
     pub fn apply_to(&self, net: &mut Network) {
         for (&cell, load) in &self.cells {
             net.set_cell_background_load(cell, load.cross_nodes as f64 / load.total as f64);
+        }
+        for (&(a, b), load) in &self.links {
+            net.set_link_background_load(a, b, load.cross_nodes as f64 / load.total as f64);
         }
     }
 
@@ -419,6 +693,15 @@ impl CongestionTracker {
             if let Some(c) = self.cells.get_mut(&cell) {
                 let next = c.cross_nodes as i64 + sign * nodes as i64;
                 c.cross_nodes = next.clamp(0, c.total as i64) as u32;
+            }
+        }
+        // Per-route bundle contributions: one shared definition
+        // (`link_contributions`) with the engine's table and the
+        // conservation property test.
+        for ((a, b), nodes) in link_contributions(cells) {
+            if let Some(l) = self.links.get_mut(&(a, b)) {
+                let next = l.cross_nodes as i64 + sign * nodes as i64;
+                l.cross_nodes = next.clamp(0, l.total as i64) as u32;
             }
         }
     }
@@ -438,6 +721,23 @@ impl Component for CongestionTracker {
         let mean = self.mean_load();
         self.peak = self.peak.max(mean);
         self.series.push(now, mean);
+        // One pass over the bundles feeds both the peak fold and the
+        // mean sample; the loads derive from integer counts, so
+        // recomputing per event is exact (no accumulated residue).
+        let mut link_max = 0.0f64;
+        let mut link_sum = 0.0f64;
+        for l in self.links.values() {
+            let load = l.cross_nodes as f64 / l.total as f64;
+            link_max = link_max.max(load);
+            link_sum += load;
+        }
+        self.peak_link = self.peak_link.max(link_max);
+        let link_mean = if self.links.is_empty() {
+            0.0
+        } else {
+            link_sum / self.links.len() as f64
+        };
+        self.link_series.push(now, link_mean);
     }
 }
 
@@ -631,9 +931,109 @@ mod tests {
         n.set_cell_background_load(1, 0.3);
         let p = placement(&[(0, 120), (1, 120), (2, 120)]);
         let via_placement = n.effective_node_bw(&p);
-        let bg = (0.3 + 0.3 + 0.0) / 3.0;
-        let via_cells = n.node_bw_for_cells(&p.nodes_per_cell, bg);
+        // Route bottlenecks: every pair touching cell 0 or 1 sees 0.3,
+        // so the placement's max route load is 0.3 — the background the
+        // scalar-view API must be handed to agree.
+        let via_cells = n.node_bw_for_cells(&p.nodes_per_cell, 0.3);
         assert!((via_placement - via_cells).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_background_throttles_only_routes_crossing_it() {
+        let mut n = net();
+        let crossing = placement(&[(0, 120), (1, 120)]);
+        let elsewhere = placement(&[(2, 120), (3, 120)]);
+        let base = n.effective_node_bw(&crossing);
+        n.set_link_background_load(0, 1, 0.8);
+        assert!(n.effective_node_bw(&crossing) < base, "loaded bundle ignored");
+        assert!((n.effective_node_bw(&elsewhere) - base).abs() < 1e-9);
+        assert!((n.link_background_load(1, 0) - 0.8).abs() < 1e-12, "unordered");
+        n.set_link_background_load(1, 0, 0.0);
+        assert!((n.effective_node_bw(&crossing) - base).abs() < 1e-9);
+        // Self-pairs and out-of-fabric cells are unaddressable no-ops.
+        n.set_link_background_load(5, 5, 0.9);
+        n.set_link_background_load(0, 999, 0.9);
+        assert_eq!(n.link_background_load(5, 5), 0.0);
+    }
+
+    #[test]
+    fn adaptive_flows_detour_around_a_hot_bundle() {
+        let mut n = net();
+        let p = placement(&[(0, 180), (1, 180)]);
+        let idle = n.effective_node_bw(&p);
+        // One hot direct bundle, idle fabric elsewhere: minimal is
+        // gated by the hot link; the detour dodges it (a single-pair
+        // placement's detours ride entirely off-placement bundles), so
+        // the adaptive flow strictly wins even at two cells.
+        n.set_link_background_load(0, 1, 0.9);
+        n.routing = Routing::Minimal;
+        let minimal = n.effective_node_bw(&p);
+        n.routing = Routing::Adaptive;
+        let adaptive = n.effective_node_bw(&p);
+        assert!(minimal < idle);
+        assert!(adaptive > minimal, "{adaptive} vs {minimal}");
+        // A wider placement with only one hot link out of three leaves
+        // the mean low: the detour wins and adaptive strictly beats
+        // minimal.
+        let wide = placement(&[(0, 120), (1, 120), (2, 120)]);
+        n.routing = Routing::Minimal;
+        let min_wide = n.effective_node_bw(&wide);
+        n.routing = Routing::Adaptive;
+        let ad_wide = n.effective_node_bw(&wide);
+        assert!(
+            ad_wide > min_wide,
+            "imbalanced load must trigger the detour: {ad_wide} vs {min_wide}"
+        );
+        // And adaptive never beats an idle fabric's minimal path.
+        n.set_link_background_load(0, 1, 0.0);
+        let uniform = n.node_bw_for_cells(&wide.nodes_per_cell, 0.0);
+        assert!((n.effective_node_bw(&wide) - uniform).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_contributions_cover_every_pair_once() {
+        let cells = [(3u32, 10u32), (1, 20), (7, 5)];
+        let got: Vec<((u32, u32), u32)> = link_contributions(&cells).collect();
+        assert_eq!(got, vec![((1, 3), 30), ((3, 7), 15), ((1, 7), 25)]);
+        assert!(link_contributions(&cells[..1]).next().is_none());
+    }
+
+    #[test]
+    fn tracker_maintains_link_loads() {
+        use crate::sim::{Component, Event};
+        let mut out = Vec::new();
+        let mut t = CongestionTracker::new([(0, 180), (1, 180), (2, 180)]);
+        t.on_event(
+            0.0,
+            &Event::Start {
+                job: 1,
+                booster: true,
+                dvfs_scale: 1.0,
+                cells: vec![(0, 90), (1, 90)].into(),
+            },
+            &mut out,
+        );
+        assert!((t.link_load(0, 1) - 0.5).abs() < 1e-12, "{}", t.link_load(0, 1));
+        assert_eq!(t.link_cross_nodes(0, 1), 180);
+        assert_eq!(t.link_load(0, 2), 0.0);
+        assert!(t.max_link_load() > t.mean_link_load());
+        t.on_event(
+            1.0,
+            &Event::End {
+                job: 1,
+                booster: true,
+                cells: vec![(0, 90), (1, 90)].into(),
+                gen: 0,
+            },
+            &mut out,
+        );
+        assert_eq!(t.max_link_load(), 0.0, "links drain with the job");
+        assert_eq!(t.total_link_cross_nodes(), 0);
+        assert!(t.peak_link_load() > 0.0, "peak survives the drain");
+        assert_eq!(t.link_series.len(), 2, "one sample per event");
+        t.reset();
+        assert_eq!(t.peak_link_load(), 0.0);
+        assert!(t.link_series.is_empty());
     }
 
     #[test]

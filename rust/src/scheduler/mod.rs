@@ -3,10 +3,12 @@
 //!
 //! Event-driven simulation of partitions on the shared [`crate::sim`]
 //! kernel: a FIFO queue with EASY backfill, topology-aware placement
-//! (pack a job into as few dragonfly cells as possible — locality is
-//! what keeps the Table 7 efficiencies flat), and an optional facility
-//! power cap that DVFS-throttles jobs (extending their runtime) instead
-//! of starving the queue.
+//! behind a pluggable [`PlacementPolicy`] ([`PackFirst`] — pack a job
+//! into as few dragonfly cells as possible, locality is what keeps the
+//! Table 7 efficiencies flat — or [`SpreadLinks`] — trade packing
+//! against predicted per-global-link interference), and an optional
+//! facility power cap that DVFS-throttles jobs (extending their
+//! runtime) instead of starving the queue.
 //!
 //! [`Scheduler::run`] drives the job lifecycle purely from
 //! `Submit`/`End`/`CapChange` events — running jobs live in an
@@ -56,8 +58,11 @@
 //! progress rate (DVFS x congestion) instead of a frozen end time, and
 //! re-times the generation-stamped `End` whenever the machine state
 //! around the job changes — a multi-cell neighbour starting or ending
-//! in shared cells (congestion axis), or a `CapChange` moving the DVFS
-//! workpoint of every running job (cap axis). Stale `End`s are skipped
+//! on shared cells or link bundles (congestion axis: the engine keeps
+//! a dense per-global-link load table next to the per-cell one, and
+//! [`Network::comm_slowdown_links`] prices the max-loaded link on a
+//! placement's routes), or a `CapChange` moving the DVFS workpoint of
+//! every running job (cap axis). Stale `End`s are skipped
 //! at pop time ([`Component::accept_event`]), `Retime` events let the
 //! power monitor integrate energy over the piecewise-constant rate
 //! segments, and head reservations read the re-timed map, so EASY
@@ -90,10 +95,10 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::config::{CellKind, MachineConfig};
-use crate::network::{Network, Placement};
+use crate::network::{link_contributions, placement_backgrounds, Network, Placement};
 use crate::power::{PowerModel, Utilization};
 use crate::sim::{Cells, Component, Event, ScheduledEvent, SimTime, Simulation, TIME_EPS};
-use crate::topology::Topology;
+use crate::topology::{cell_pair_count, cell_pair_index, Topology};
 
 /// Target partition of a job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,6 +111,128 @@ fn pidx(p: Partition) -> usize {
     match p {
         Partition::Booster => 0,
         Partition::DataCentric => 1,
+    }
+}
+
+/// Read-only view of one candidate cell during a placement decision —
+/// what a [`PlacementPolicy`] is allowed to see.
+#[derive(Debug, Clone, Copy)]
+pub struct CellView {
+    pub cell_id: u32,
+    pub free: u32,
+    pub total: u32,
+    /// Nodes of currently placed multi-cell Booster jobs in the cell —
+    /// the endpoint load that drives per-global-link congestion (see
+    /// [`crate::network::Network::link_bw_for_cells`]).
+    pub cross_nodes: u32,
+}
+
+/// A pluggable placement-order policy: given the candidate cells of a
+/// partition, produce the greedy fill order [`Scheduler::place`]
+/// consumes. Implementations must be deterministic pure functions of
+/// the views — the oracle suites replay the same placements through
+/// every engine (`run` / `run_event_baseline` / `run_rescan`), so a
+/// policy that read hidden state would silently diverge them. Stable
+/// sorts keep ties in pool (= cell-id) order.
+pub trait PlacementPolicy: std::fmt::Debug + Send + Sync {
+    /// Short CLI/report name.
+    fn name(&self) -> &'static str;
+
+    /// Reorder `order` (arriving as the identity permutation over
+    /// `cells`) into the greedy fill order for a `nodes`-node request.
+    fn order(&self, nodes: u32, cells: &[CellView], order: &mut [u32]);
+}
+
+/// The seed's fullest-first packing: a stable sort by descending free
+/// count — bit-for-bit the order every engine used before policies
+/// were pluggable (pinned by the oracle identity suites).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PackFirst;
+
+impl PlacementPolicy for PackFirst {
+    fn name(&self) -> &'static str {
+        "pack"
+    }
+
+    fn order(&self, _nodes: u32, cells: &[CellView], order: &mut [u32]) {
+        order.sort_by_key(|&i| std::cmp::Reverse(cells[i as usize].free));
+    }
+}
+
+/// Anti-fragmentation placement that minimizes predicted per-link
+/// congestion:
+///
+/// * a request that fits in one cell is *parked* on the most
+///   link-loaded cell it fits in — single-cell jobs are immune to link
+///   congestion and add no cross traffic, so they should consume the
+///   capacity next to existing multi-cell jobs and preserve link-clean
+///   cells for jobs that must span;
+/// * a request that must span takes the least link-loaded cells first
+///   (minimizing the predicted max route load the coupled retimer will
+///   charge it), fullest-first among equals to keep the span short.
+///
+/// With no multi-cell job placed every `cross_nodes` is 0 and both
+/// branches order fitting capacity fullest-first — an idle machine
+/// places exactly like [`PackFirst`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpreadLinks;
+
+impl PlacementPolicy for SpreadLinks {
+    fn name(&self) -> &'static str {
+        "spread"
+    }
+
+    fn order(&self, nodes: u32, cells: &[CellView], order: &mut [u32]) {
+        if cells.iter().any(|c| c.free >= nodes) {
+            order.sort_by_key(|&i| {
+                let c = &cells[i as usize];
+                (
+                    c.free < nodes,
+                    std::cmp::Reverse(c.cross_nodes),
+                    std::cmp::Reverse(c.free),
+                )
+            });
+        } else {
+            order.sort_by_key(|&i| {
+                let c = &cells[i as usize];
+                (c.cross_nodes, std::cmp::Reverse(c.free))
+            });
+        }
+    }
+}
+
+/// Named, data-plumbable placement policies — the `--policy` flag and
+/// the policy axis of the campaign sweep grid. [`PolicyKind::build`]
+/// resolves the [`PlacementPolicy`] object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    /// The seed's fullest-first packing ([`PackFirst`]).
+    #[default]
+    PackFirst,
+    /// Link-aware anti-fragmentation ([`SpreadLinks`]).
+    SpreadLinks,
+}
+
+impl PolicyKind {
+    /// CLI/report name (`pack` / `spread`).
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::PackFirst => "pack",
+            PolicyKind::SpreadLinks => "spread",
+        }
+    }
+
+    /// Resolve the policy object.
+    pub fn build(self) -> Arc<dyn PlacementPolicy> {
+        match self {
+            PolicyKind::PackFirst => Arc::new(PackFirst),
+            PolicyKind::SpreadLinks => Arc::new(SpreadLinks),
+        }
+    }
+
+    /// Every named policy, in report order.
+    pub fn all() -> [PolicyKind; 2] {
+        [PolicyKind::PackFirst, PolicyKind::SpreadLinks]
     }
 }
 
@@ -177,12 +304,27 @@ pub struct Scheduler {
     /// cell has no nodes of that partition).
     booster_by_cell: Vec<u32>,
     dc_by_cell: Vec<u32>,
-    /// Persistent placement-order buffers: pool positions, fullest cell
-    /// first with pool order (= cell-id order) breaking ties — exactly
-    /// the stable sort the seed performed per call, but rebuilt in
-    /// place instead of allocated fresh.
+    /// Persistent placement-order buffers: pool positions in the order
+    /// the placement policy produced (PackFirst = fullest cell first
+    /// with pool order breaking ties — exactly the stable sort the seed
+    /// performed per call), rebuilt in place instead of allocated
+    /// fresh.
     booster_order: Vec<u32>,
     dc_order: Vec<u32>,
+    /// Persistent [`CellView`] scratch per partition ([`pidx`]-indexed)
+    /// the policy orders over — rebuilt in place per placement.
+    views: [Vec<CellView>; 2],
+    /// Per-cell nodes of currently *placed* multi-cell Booster
+    /// placements, indexed by cell id — the policy-facing congestion
+    /// view. Maintained at place/release time, so every engine
+    /// (including the rescan baseline) shows a policy the same
+    /// predicted link loads; mirrors what the coupled engine's
+    /// event-driven cross counts see.
+    placed_cross: Vec<u32>,
+    /// The placement policy ([`PackFirst`] by default — the seed
+    /// order).
+    policy: Arc<dyn PlacementPolicy>,
+    policy_kind: PolicyKind,
     /// O(1) free/total node counters per partition, indexed by [`pidx`].
     free: [u32; 2],
     total: [u32; 2],
@@ -311,6 +453,10 @@ impl Scheduler {
             dc_by_cell,
             booster_order: Vec::new(),
             dc_order: Vec::new(),
+            views: [Vec::new(), Vec::new()],
+            placed_cross: vec![0; cfg.cells.len()],
+            policy: PolicyKind::PackFirst.build(),
+            policy_kind: PolicyKind::PackFirst,
             free,
             total: free,
             power_cap: None,
@@ -332,6 +478,27 @@ impl Scheduler {
             s.net = Some(Network::new(Topology::build(cfg), inj));
         }
         s
+    }
+
+    /// A scheduler with a named placement policy installed
+    /// ([`PolicyKind::PackFirst`] is the default — the seed's
+    /// fullest-first order, bit-for-bit).
+    pub fn with_policy(cfg: &MachineConfig, policy: PolicyKind) -> Self {
+        let mut s = Self::new(cfg);
+        s.set_policy(policy);
+        s
+    }
+
+    /// Install a named placement policy (a per-scenario input like
+    /// `coupling`: the campaign arena re-arms it on every reset).
+    pub fn set_policy(&mut self, policy: PolicyKind) {
+        self.policy_kind = policy;
+        self.policy = policy.build();
+    }
+
+    /// The named policy currently installed.
+    pub fn policy_kind(&self) -> PolicyKind {
+        self.policy_kind
     }
 
     /// Free nodes in partition `p` — an O(1) counter read.
@@ -357,32 +524,62 @@ impl Scheduler {
         pools.iter().map(|c| c.free).sum()
     }
 
-    /// Re-sort the persistent placement-order buffer of partition `p`
-    /// in place: identity permutation, then a stable sort by descending
-    /// free count — bit-for-bit the order the seed's per-call sort
-    /// produced, with no allocation.
-    fn rebuild_order(&mut self, p: Partition) {
+    /// Rebuild the persistent placement-order buffer of partition `p`
+    /// in place: refresh the [`CellView`] scratch, reset the identity
+    /// permutation, then let the installed [`PlacementPolicy`] sort it.
+    /// With [`PackFirst`] this is bit-for-bit the stable
+    /// descending-free sort the seed performed per call, with no
+    /// allocation.
+    fn rebuild_order(&mut self, p: Partition, nodes: u32) {
         let (pools, order) = match p {
             Partition::Booster => (&self.booster, &mut self.booster_order),
             Partition::DataCentric => (&self.dc, &mut self.dc_order),
         };
+        let views = &mut self.views[pidx(p)];
+        views.clear();
+        for pool in pools {
+            views.push(CellView {
+                cell_id: pool.cell_id,
+                free: pool.free,
+                total: pool.total,
+                cross_nodes: self.placed_cross[pool.cell_id as usize],
+            });
+        }
         order.clear();
         order.extend(0..pools.len() as u32);
-        order.sort_by_key(|&i| std::cmp::Reverse(pools[i as usize].free));
+        self.policy.order(nodes, views.as_slice(), order);
     }
 
-    /// Topology-aware placement: greedily fill the cells with the most
-    /// free nodes, minimising the number of cells the job spans.
+    /// Fold a placement into (+1) or out of (-1) the policy-facing
+    /// per-cell cross view. Only multi-cell Booster placements load
+    /// the global links — the same traffic-class rule the coupled
+    /// engine's event-driven accounting applies.
+    fn note_placed(&mut self, p: Partition, placement: &Placement, sign: i64) {
+        if p != Partition::Booster || placement.nodes_per_cell.len() <= 1 {
+            return;
+        }
+        for &(cell, n) in &placement.nodes_per_cell {
+            if let Some(c) = self.placed_cross.get_mut(cell as usize) {
+                let next = *c as i64 + sign * n as i64;
+                *c = next.max(0) as u32;
+            }
+        }
+    }
+
+    /// Topology-aware placement: greedily fill cells in the installed
+    /// policy's order ([`PackFirst`]: most free nodes first, minimising
+    /// the number of cells the job spans; [`SpreadLinks`]: minimising
+    /// predicted per-link congestion).
     ///
     /// Allocation-free: the capacity check is an O(1) counter read (no
-    /// pool re-sum) and the fullest-first order is re-sorted into a
-    /// persistent buffer (no per-call `Vec`).
+    /// pool re-sum) and the policy order is re-sorted into a persistent
+    /// buffer (no per-call `Vec`).
     pub fn place(&mut self, p: Partition, nodes: u32) -> Option<Placement> {
         let pi = pidx(p);
         if self.free[pi] < nodes {
             return None;
         }
-        self.rebuild_order(p);
+        self.rebuild_order(p, nodes);
         let (pools, order) = match p {
             Partition::Booster => (&mut self.booster, &self.booster_order),
             Partition::DataCentric => (&mut self.dc, &self.dc_order),
@@ -403,39 +600,60 @@ impl Scheduler {
         }
         debug_assert_eq!(left, 0);
         self.free[pi] -= nodes;
+        self.note_placed(p, &placement, 1);
         Some(placement)
     }
 
-    /// The seed's placement path, kept verbatim for the throughput
-    /// bench and the oracle suites: re-sums free nodes, allocates an
-    /// index `Vec` and re-sorts the pools on every call. Produces
-    /// exactly the same placements as [`Scheduler::place`].
+    /// The seed's placement path, kept cost-faithful for the throughput
+    /// bench and the oracle suites: re-sums free nodes, allocates view
+    /// and index `Vec`s and re-sorts the pools on every call. Routed
+    /// through the *same* policy object as [`Scheduler::place`], so the
+    /// rescan and event-baseline engines make identical placement
+    /// decisions per policy (no silent divergence between optimized and
+    /// baseline paths).
     pub fn place_scan(&mut self, p: Partition, nodes: u32) -> Option<Placement> {
         let pi = pidx(p);
         if self.free_nodes_scan(p) < nodes {
             return None;
         }
+        let views: Vec<CellView> = {
+            let pools = match p {
+                Partition::Booster => &self.booster,
+                Partition::DataCentric => &self.dc,
+            };
+            pools
+                .iter()
+                .map(|pool| CellView {
+                    cell_id: pool.cell_id,
+                    free: pool.free,
+                    total: pool.total,
+                    cross_nodes: self.placed_cross[pool.cell_id as usize],
+                })
+                .collect()
+        };
+        let mut order: Vec<u32> = (0..views.len() as u32).collect();
+        self.policy.order(nodes, &views, &mut order);
         let pools = match p {
             Partition::Booster => &mut self.booster,
             Partition::DataCentric => &mut self.dc,
         };
-        let mut order: Vec<usize> = (0..pools.len()).collect();
-        order.sort_by_key(|&i| std::cmp::Reverse(pools[i].free));
         let mut left = nodes;
         let mut placement = Placement::default();
-        for i in order {
+        for &i in &order {
             if left == 0 {
                 break;
             }
-            let take = pools[i].free.min(left);
+            let pool = &mut pools[i as usize];
+            let take = pool.free.min(left);
             if take > 0 {
-                pools[i].free -= take;
-                placement.nodes_per_cell.push((pools[i].cell_id, take));
+                pool.free -= take;
+                placement.nodes_per_cell.push((pool.cell_id, take));
                 left -= take;
             }
         }
         debug_assert_eq!(left, 0);
         self.free[pi] -= nodes;
+        self.note_placed(p, &placement, 1);
         Some(placement)
     }
 
@@ -461,17 +679,21 @@ impl Scheduler {
         }
         let pi = pidx(p);
         self.free[pi] += released;
+        self.note_placed(p, placement, -1);
     }
 
     /// Restore the state [`Scheduler::new`] builds — every pool fully
-    /// free, no power cap, counters cleared — without reallocating any
-    /// buffer. The campaign arena ([`crate::campaign::ReplayRig::reset`])
-    /// reuses one scheduler across scenarios through this; `coupling`,
-    /// `retime_all` and `net` are per-scenario inputs the caller re-arms.
+    /// free, no power cap, counters cleared, cross view drained —
+    /// without reallocating any buffer. The campaign arena
+    /// ([`crate::campaign::ReplayRig::reset`]) reuses one scheduler
+    /// across scenarios through this; `coupling`, `retime_all`, `net`
+    /// and the placement policy are per-scenario inputs the caller
+    /// re-arms.
     pub fn reset(&mut self) {
         for pool in self.booster.iter_mut().chain(self.dc.iter_mut()) {
             pool.free = pool.total;
         }
+        self.placed_cross.fill(0);
         self.free = self.total;
         self.power_cap = None;
         self.last_run = RunCounters::default();
@@ -727,35 +949,54 @@ impl Scheduler {
     }
 }
 
-/// Mean cross-traffic load on `cells` given the engine's per-cell cross
-/// counts: the one formula both the start-time slowdown and the re-time
-/// pass use, kept as a free function so the re-timer (which holds a
-/// mutable borrow of the coupled map) shares it with
-/// `JobEngine::background_for` instead of diverging.
-fn cross_background(
+/// `(direct, detour)` background load on `cells` given the engine's
+/// per-cell and per-link cross counts, aggregated by the shared
+/// [`placement_backgrounds`] (the same aggregation
+/// [`Network::effective_node_bw`] feeds from its own tables, so the
+/// engine-side and observer-side accountings cannot drift). The one
+/// entry point both the start-time slowdown and the re-time pass use,
+/// kept as a free function so the re-timer (which holds a mutable
+/// borrow of the coupled map) shares it with
+/// `JobEngine::background_for` instead of diverging. `exclude_own`
+/// subtracts this job's own per-cell and per-pair contributions.
+fn link_backgrounds(
     cell_cross: &[u32],
     cell_total: &[u32],
+    link_cross: &[u32],
     cells: &[(u32, u32)],
     exclude_own: bool,
-) -> f64 {
-    if cells.is_empty() {
-        return 0.0;
-    }
-    let mut sum = 0.0;
-    for &(cell, nodes) in cells {
-        let Some(&total) = cell_total.get(cell as usize) else {
-            continue;
-        };
-        if total == 0 {
-            continue;
-        }
-        let mut cross = cell_cross[cell as usize];
-        if exclude_own {
-            cross = cross.saturating_sub(nodes);
-        }
-        sum += cross as f64 / total as f64;
-    }
-    sum / cells.len() as f64
+) -> (f64, f64) {
+    let n = cell_total.len();
+    placement_backgrounds(
+        cells,
+        |cell, own| {
+            let Some(&total) = cell_total.get(cell as usize) else {
+                return 0.0;
+            };
+            if total == 0 {
+                return 0.0;
+            }
+            let mut cross = cell_cross[cell as usize];
+            if exclude_own {
+                cross = cross.saturating_sub(own);
+            }
+            cross as f64 / total as f64
+        },
+        |a, b, own| {
+            if a as usize >= n || b as usize >= n {
+                return 0.0;
+            }
+            let cap = cell_total[a as usize] + cell_total[b as usize];
+            if cap == 0 {
+                return 0.0;
+            }
+            let mut cross = link_cross[cell_pair_index(n, a, b)];
+            if exclude_own {
+                cross = cross.saturating_sub(own);
+            }
+            cross as f64 / cap as f64
+        },
+    )
 }
 
 /// Outcome of re-timing one coupled job (see [`retime_job`]).
@@ -772,13 +1013,14 @@ enum Retimed {
 
 /// Where a re-time visit gets its congestion factor from.
 enum CommSource<'a> {
-    /// Re-query the network model over the current cross loads — jobs
-    /// whose cells were perturbed (and every sensitive job in the
-    /// retime-all oracle).
+    /// Re-query the network model over the current per-link cross
+    /// loads — jobs whose cells (and with them every link they ride)
+    /// were perturbed, and every sensitive job in the retime-all
+    /// oracle.
     Fresh(&'a Network),
     /// Reuse the cached [`CoupledJob::comm`] — untouched jobs on a
     /// cap-only re-scale (bit-identical to a fresh query by the cache
-    /// invariant).
+    /// invariant: cap moves change no link load).
     Cached,
     /// Congestion cannot apply (insensitive job in the oracle walk).
     Unit,
@@ -799,14 +1041,16 @@ fn retime_job(
     source: CommSource<'_>,
     cell_cross: &[u32],
     cell_total: &[u32],
+    link_cross: &[u32],
     running: &mut BTreeMap<(SimTime, u64), RunEntry>,
     records: &mut BTreeMap<u64, JobRecord>,
     out: &mut Vec<ScheduledEvent>,
 ) -> Retimed {
     let comm = match source {
         CommSource::Fresh(net) => {
-            let bg = cross_background(cell_cross, cell_total, &cj.cells, true);
-            net.comm_slowdown(&cj.cells, job.comm_fraction, bg)
+            let (direct_bg, detour_bg) =
+                link_backgrounds(cell_cross, cell_total, link_cross, &cj.cells, true);
+            net.comm_slowdown_links(&cj.cells, job.comm_fraction, direct_bg, detour_bg)
         }
         CommSource::Cached => cj.comm,
         CommSource::Unit => 1.0,
@@ -1006,6 +1250,12 @@ struct JobEngine<'a> {
     /// [`crate::network::CongestionTracker`] observes, but queryable
     /// mid-pass and self-excludable per job.
     cell_cross: Vec<u32>,
+    /// Per-global-link cross nodes, indexed by
+    /// [`cell_pair_index`] over the `cell_total` id space: the sum over
+    /// running multi-cell Booster jobs of their per-route bundle
+    /// contributions ([`link_contributions`]). The engine-side dense
+    /// per-link load table the re-time pass prices.
+    link_cross: Vec<u32>,
     /// Booster node total per cell id (0 = cell not in the partition).
     cell_total: Vec<u32>,
     /// A `Start`/`End`/`CapChange` changed the machine state: re-time
@@ -1053,6 +1303,7 @@ impl<'a> JobEngine<'a> {
             }
         }
         let cell_cross = vec![0u32; cell_total.len()];
+        let link_cross = vec![0u32; cell_pair_count(cell_total.len())];
         let cell_jobs = vec![Vec::new(); cell_total.len()];
         let cell_dirty = vec![false; cell_total.len()];
         JobEngine {
@@ -1073,6 +1324,7 @@ impl<'a> JobEngine<'a> {
             coupling,
             coupled: BTreeMap::new(),
             cell_cross,
+            link_cross,
             cell_total,
             recouple: false,
             rescale: false,
@@ -1119,22 +1371,30 @@ impl<'a> JobEngine<'a> {
         self.sched.dvfs_scale_at(self.running_nodes + new_nodes)
     }
 
-    /// Mean cross-traffic load on `cells` from *other* running
-    /// multi-cell Booster jobs. `exclude_own` subtracts this job's own
-    /// per-cell nodes — set once the job's `Start` has been folded into
-    /// the counts (a job's own surface traffic is already modelled by
-    /// the cross-fraction term of the bandwidth model, not background).
-    fn background_for(&self, cells: &[(u32, u32)], exclude_own: bool) -> f64 {
-        cross_background(&self.cell_cross, &self.cell_total, cells, exclude_own)
+    /// `(direct, detour)` background on `cells` from *other* running
+    /// multi-cell Booster jobs — the per-link picture
+    /// [`Network::link_bw_for_cells`] prices. `exclude_own` subtracts
+    /// this job's own per-cell and per-pair contributions — set once
+    /// the job's `Start` has been folded into the counts (a job's own
+    /// surface traffic is already modelled by the cross-fraction term
+    /// of the bandwidth model, not background).
+    fn background_for(&self, cells: &[(u32, u32)], exclude_own: bool) -> (f64, f64) {
+        link_backgrounds(
+            &self.cell_cross,
+            &self.cell_total,
+            &self.link_cross,
+            cells,
+            exclude_own,
+        )
     }
 
     /// Fold a multi-cell Booster job's placement into (sign > 0) or out
-    /// of (sign < 0) the per-cell cross-traffic counts. Single-cell
-    /// jobs never touch the global links; DataCentric traffic does not
-    /// ride the GPU fabric's global link budget. Returns whether the
-    /// congestion picture changed — the caller's re-time trigger, so
-    /// the (dominant) single-cell traffic never provokes a no-op
-    /// re-time walk.
+    /// of (sign < 0) the per-cell and per-link cross-traffic counts.
+    /// Single-cell jobs never touch the global links; DataCentric
+    /// traffic does not ride the GPU fabric's global link budget.
+    /// Returns whether the congestion picture changed — the caller's
+    /// re-time trigger, so the (dominant) single-cell traffic never
+    /// provokes a no-op re-time walk.
     fn cross_update(&mut self, booster: bool, cells: &[(u32, u32)], sign: i64) -> bool {
         if !self.coupling.congestion || !booster || cells.len() <= 1 {
             return false;
@@ -1146,18 +1406,34 @@ impl<'a> JobEngine<'a> {
                 *c = next.clamp(0, total) as u32;
                 // Incremental retiming: remember which cells moved so
                 // the next re-time pass visits only jobs indexed there.
+                // A link bundle is dirty exactly when both its endpoint
+                // cells are, so the dirty-cell set already covers the
+                // dirty-link walk (link-sharing implies cell-sharing).
                 if self.incremental && !self.cell_dirty[cell as usize] {
                     self.cell_dirty[cell as usize] = true;
                     self.dirty_cells.push(cell);
                 }
             }
         }
+        // Per-route bundle loads: the same contribution definition the
+        // observing tracker and the conservation property test use.
+        let n = self.cell_total.len();
+        for ((a, b), nodes) in link_contributions(cells) {
+            let (ai, bi) = (a as usize, b as usize);
+            if ai >= n || bi >= n {
+                continue;
+            }
+            let cap = (self.cell_total[ai] + self.cell_total[bi]) as i64;
+            let idx = cell_pair_index(n, a, b);
+            let next = self.link_cross[idx] as i64 + sign * nodes as i64;
+            self.link_cross[idx] = next.clamp(0, cap) as u32;
+        }
         true
     }
 
-    /// Congestion slowdown for a job under the current cross loads.
-    /// 1.0 when the axis is off, the job is DataCentric or single-cell,
-    /// or it does not communicate.
+    /// Congestion slowdown for a job under the current per-link cross
+    /// loads. 1.0 when the axis is off, the job is DataCentric or
+    /// single-cell, or it does not communicate.
     fn comm_slowdown_for(
         &self,
         booster: bool,
@@ -1169,8 +1445,8 @@ impl<'a> JobEngine<'a> {
             return 1.0;
         }
         let net = self.sched.net.as_ref().expect("checked in run_mode");
-        let bg = self.background_for(cells, exclude_own);
-        net.comm_slowdown(cells, comm_fraction, bg)
+        let (direct_bg, detour_bg) = self.background_for(cells, exclude_own);
+        net.comm_slowdown_links(cells, comm_fraction, direct_bg, detour_bg)
     }
 
     /// Complete every running job whose end falls within `TIME_EPS` of
@@ -1292,6 +1568,7 @@ impl<'a> JobEngine<'a> {
                     source,
                     &self.cell_cross,
                     &self.cell_total,
+                    &self.link_cross,
                     &mut self.running,
                     &mut self.records,
                     out,
@@ -1326,6 +1603,7 @@ impl<'a> JobEngine<'a> {
                     source,
                     &self.cell_cross,
                     &self.cell_total,
+                    &self.link_cross,
                     &mut self.running,
                     &mut self.records,
                     out,
@@ -2132,5 +2410,105 @@ mod tests {
         let rec = sched().run_with(jobs, Vec::new(), &mut [&mut c]);
         assert_eq!(rec.len(), 20);
         assert_eq!((c.submits, c.starts, c.ends), (20, 20, 20));
+    }
+
+    #[test]
+    fn policy_kind_registry_is_consistent() {
+        assert_eq!(PolicyKind::default(), PolicyKind::PackFirst);
+        assert_eq!(PolicyKind::PackFirst.name(), "pack");
+        assert_eq!(PolicyKind::SpreadLinks.name(), "spread");
+        for kind in PolicyKind::all() {
+            assert_eq!(kind.build().name(), kind.name());
+            let s = Scheduler::with_policy(&MachineConfig::leonardo(), kind);
+            assert_eq!(s.policy_kind(), kind);
+        }
+    }
+
+    /// An explicitly installed PackFirst is bit-for-bit the default
+    /// scheduler — the pluggable-policy seam changes nothing.
+    #[test]
+    fn explicit_pack_first_is_bit_for_bit_the_default() {
+        let cfg = MachineConfig::leonardo();
+        for seed in 0..3u64 {
+            let jobs = random_stream(seed, 60);
+            let default_recs = sched().run(jobs.clone());
+            let explicit = Scheduler::with_policy(&cfg, PolicyKind::PackFirst).run(jobs);
+            assert_eq!(default_recs.len(), explicit.len(), "seed {seed}");
+            for (id, r) in &explicit {
+                let d = &default_recs[id];
+                assert_eq!(r.start_time, d.start_time, "seed {seed} job {id}");
+                assert_eq!(r.end_time, d.end_time, "seed {seed} job {id}");
+                assert_eq!(
+                    r.placement.nodes_per_cell, d.placement.nodes_per_cell,
+                    "seed {seed} job {id}"
+                );
+            }
+        }
+    }
+
+    /// SpreadLinks: spanning requests avoid cells hosting multi-cell
+    /// placements, single-cell requests park next to them, and release
+    /// drains the policy view back to PackFirst-equivalent behavior.
+    #[test]
+    fn spread_links_places_around_multi_cell_neighbours() {
+        let cfg = MachineConfig::leonardo();
+        let mut s = Scheduler::with_policy(&cfg, PolicyKind::SpreadLinks);
+        // First spanning job: idle machine, places like PackFirst.
+        let a = s.place(Partition::Booster, 270).unwrap();
+        assert_eq!(a.nodes_per_cell, vec![(0, 180), (1, 90)]);
+        // Second spanning job: link-clean cells come first, so it
+        // avoids `a`'s cells entirely (PackFirst would reuse cell 1's
+        // free nodes once the clean 180s ran out).
+        let b = s.place(Partition::Booster, 270).unwrap();
+        let a_cells: Vec<u32> = a.nodes_per_cell.iter().map(|&(c, _)| c).collect();
+        assert!(
+            b.nodes_per_cell.iter().all(|&(c, _)| !a_cells.contains(&c)),
+            "spread placement overlapped a loaded cell: {:?} vs {:?}",
+            b.nodes_per_cell,
+            a.nodes_per_cell
+        );
+        // A single-cell request parks on a loaded cell (cell 1 and the
+        // cells of `b` have 90 free and cross traffic; clean cells have
+        // more free but stay reserved for spanners).
+        let c = s.place(Partition::Booster, 60).unwrap();
+        assert_eq!(c.nodes_per_cell.len(), 1);
+        assert_eq!(c.nodes_per_cell[0].0, 1, "{:?}", c.nodes_per_cell);
+        // Draining everything restores fresh-machine behavior.
+        s.release(Partition::Booster, &a);
+        s.release(Partition::Booster, &b);
+        s.release(Partition::Booster, &c);
+        let again = s.place(Partition::Booster, 270).unwrap();
+        assert_eq!(again.nodes_per_cell, vec![(0, 180), (1, 90)]);
+    }
+
+    /// Both engines and the rescan loop stay bit-for-bit identical
+    /// under every named policy — the policy object is shared, so the
+    /// oracle suites cover each policy on each engine.
+    #[test]
+    fn engines_agree_under_every_policy() {
+        let cfg = MachineConfig::leonardo();
+        for kind in PolicyKind::all() {
+            for seed in 0..3u64 {
+                let jobs = random_stream(seed, 60);
+                let make = || Scheduler::with_policy(&cfg, kind);
+                let ev = make().run(jobs.clone());
+                let baseline = make().run_event_baseline(jobs.clone());
+                let legacy = make().run_rescan(jobs);
+                assert_eq!(ev.len(), legacy.len(), "{kind:?} seed {seed}");
+                for (id, r) in &ev {
+                    let l = &legacy[id];
+                    let b = &baseline[id];
+                    let ctx = format!("{kind:?} seed {seed} job {id}");
+                    assert_eq!(r.start_time, l.start_time, "{ctx}");
+                    assert_eq!(r.end_time, l.end_time, "{ctx}");
+                    assert_eq!(r.placement.nodes_per_cell, l.placement.nodes_per_cell, "{ctx}");
+                    assert_eq!(r.start_time, b.start_time, "{ctx} (base)");
+                    assert_eq!(
+                        r.placement.nodes_per_cell, b.placement.nodes_per_cell,
+                        "{ctx} (base)"
+                    );
+                }
+            }
+        }
     }
 }

@@ -54,6 +54,33 @@ pub enum Routing {
     /// Valiant load balancing through a random intermediate cell —
     /// the adaptive-routing worst case that bounds latency (§2.2).
     Valiant,
+    /// Per-flow adaptive routing: each flow takes the minimal path
+    /// unless the measured load imbalance on its direct link bundle
+    /// makes the Valiant detour (two hops over less-loaded bundles)
+    /// the better deal — the decision
+    /// [`crate::network::Network::link_bw_for_cells`] makes from the
+    /// per-link load table. Latency-wise an adaptive flow on an idle
+    /// fabric is a minimal flow.
+    Adaptive,
+}
+
+/// Dense index of the global link bundle joining the unordered cell
+/// pair `(a, b)` on an `n_cells`-cell fabric: pairs are numbered
+/// row-major over the strict upper triangle, so ids are `0..n(n-1)/2`.
+/// Shared by [`Topology::link_bundle_id`] and the scheduler's
+/// engine-side link table so both sides agree on addressing without
+/// holding a `Topology`.
+pub fn cell_pair_index(n_cells: usize, a: u32, b: u32) -> usize {
+    debug_assert!(a != b, "a cell has no global link to itself");
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    let (lo, hi, n) = (lo as usize, hi as usize, n_cells);
+    debug_assert!(hi < n, "cell {hi} outside the {n}-cell fabric");
+    lo * n - lo * (lo + 1) / 2 + (hi - lo - 1)
+}
+
+/// Number of link bundles (unordered cell pairs) on an `n_cells` fabric.
+pub fn cell_pair_count(n_cells: usize) -> usize {
+    n_cells * n_cells.saturating_sub(1) / 2
 }
 
 /// Where a node sits in the fabric.
@@ -223,7 +250,10 @@ impl Topology {
             };
         }
         match policy {
-            Routing::Minimal => Route {
+            // An adaptive flow on an idle fabric takes the minimal
+            // path; the load-dependent detour decision lives in the
+            // bandwidth model, which has the per-link loads.
+            Routing::Minimal | Routing::Adaptive => Route {
                 // leaf -> spine -> (global) -> spine -> leaf
                 switch_hops: 4,
                 fiber_m: 2.0 * NODE_LEAF_M + 2.0 * LEAF_SPINE_M + SPINE_SPINE_M,
@@ -252,6 +282,43 @@ impl Topology {
     /// Aggregate bandwidth between two distinct cells, Gbps.
     pub fn cell_pair_bw_gbps(&self) -> f64 {
         self.links_per_cell_pair as f64 * HDR_GBPS
+    }
+
+    /// Number of addressable global link bundles (one per unordered
+    /// cell pair — each bundle is `links_per_cell_pair` physical HDR
+    /// links).
+    pub fn num_link_bundles(&self) -> usize {
+        cell_pair_count(self.cells.len())
+    }
+
+    /// Dense id of the link bundle joining cells `a` and `b` (`None`
+    /// for `a == b` or an out-of-fabric cell).
+    pub fn link_bundle_id(&self, a: u32, b: u32) -> Option<usize> {
+        let n = self.cells.len();
+        if a == b || a as usize >= n || b as usize >= n {
+            return None;
+        }
+        Some(cell_pair_index(n, a, b))
+    }
+
+    /// Inverse of [`Topology::link_bundle_id`]: the `(low, high)` cell
+    /// pair a bundle id addresses.
+    pub fn link_bundle_cells(&self, id: usize) -> (u32, u32) {
+        let n = self.cells.len();
+        assert!(id < cell_pair_count(n), "bundle {id} out of range");
+        let mut lo = 0usize;
+        let mut base = 0usize;
+        while base + (n - lo - 1) <= id {
+            base += n - lo - 1;
+            lo += 1;
+        }
+        (lo as u32, (lo + 1 + (id - base)) as u32)
+    }
+
+    /// Capacity of one link bundle, Gbps (every pair gets the same
+    /// `links_per_cell_pair` budget on the fully connected top level).
+    pub fn link_bundle_capacity_gbps(&self) -> f64 {
+        self.cell_pair_bw_gbps()
     }
 }
 
@@ -386,6 +453,42 @@ mod tests {
         let r = t.route(42, 42, Routing::Minimal);
         assert_eq!(r.switch_hops, 0);
         assert_eq!(r.latency_ns(), 2.0 * latency::NIC_NS);
+    }
+
+    #[test]
+    fn link_bundle_ids_are_a_dense_bijection() {
+        let t = leo();
+        let n = t.cells.len();
+        assert_eq!(t.num_link_bundles(), n * (n - 1) / 2);
+        let mut seen = vec![false; t.num_link_bundles()];
+        for a in 0..n as u32 {
+            for b in (a + 1)..n as u32 {
+                let id = t.link_bundle_id(a, b).unwrap();
+                assert_eq!(t.link_bundle_id(b, a), Some(id), "unordered");
+                assert!(!seen[id], "bundle {id} assigned twice");
+                seen[id] = true;
+                assert_eq!(t.link_bundle_cells(id), (a, b), "inverse");
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "ids not dense");
+        assert_eq!(t.link_bundle_id(3, 3), None);
+        assert_eq!(t.link_bundle_id(0, 999), None);
+    }
+
+    #[test]
+    fn link_bundle_capacity_matches_pair_bandwidth() {
+        let t = leo();
+        assert_eq!(t.link_bundle_capacity_gbps(), 3600.0);
+        // The bundle space covers every physical global link.
+        assert_eq!(t.num_link_bundles() as u32 * t.links_per_cell_pair, t.total_global_links());
+    }
+
+    #[test]
+    fn adaptive_routing_is_minimal_on_an_idle_fabric() {
+        let t = leo();
+        let a = t.route(0, 2000, Routing::Adaptive);
+        let m = t.route(0, 2000, Routing::Minimal);
+        assert_eq!(a, m, "idle adaptive flow must take the minimal path");
     }
 
     #[test]

@@ -10,9 +10,10 @@
 //!   threads.
 
 use leonardo_twin::campaign::{run_sweep, run_sweep_streaming, SweepGrid};
-use leonardo_twin::config::MachineConfig;
+use leonardo_twin::config::{CellConfig, CellKind, MachineConfig, RackGroup};
 use leonardo_twin::coordinator::Twin;
-use leonardo_twin::scheduler::{Coupling, Job, Partition, PowerCap, Scheduler};
+use leonardo_twin::hardware::NodeSpec;
+use leonardo_twin::scheduler::{Coupling, Job, Partition, PolicyKind, PowerCap, Scheduler};
 use leonardo_twin::sim::{Component, Event, ScheduledEvent};
 use leonardo_twin::topology::Routing;
 use leonardo_twin::workloads::TraceGen;
@@ -209,7 +210,8 @@ fn cap_change_on_memory_bound_job_retimes_power_not_end() {
 
 /// (c) Coupled sweep reports are bit-for-bit identical for 1, 2 and 8
 /// worker threads — retiming is deterministic per scenario, and the
-/// merge is thread-count independent.
+/// merge is thread-count independent. The grid carries the policy axis,
+/// so the identity covers both placement policies per scenario.
 #[test]
 fn coupled_sweep_identical_across_thread_counts() {
     let twin = Twin::leonardo();
@@ -220,14 +222,15 @@ fn coupled_sweep_identical_across_thread_counts() {
         100,
     )
     .unwrap()
-    .with_coupling(Coupling::full());
-    assert_eq!(grid.len(), 24);
+    .with_coupling(Coupling::full())
+    .with_policies(vec![PolicyKind::PackFirst, PolicyKind::SpreadLinks]);
+    assert_eq!(grid.len(), 48);
     let r1 = run_sweep(&twin, &grid, 1);
     let r2 = run_sweep(&twin, &grid, 2);
     let r8 = run_sweep(&twin, &grid, 8);
     assert_eq!(r1, r2, "coupled 1-thread vs 2-thread reports differ");
     assert_eq!(r1, r8, "coupled 1-thread vs 8-thread reports differ");
-    assert_eq!(r1.stats.len(), 24);
+    assert_eq!(r1.stats.len(), 48);
     assert_eq!(
         r1.scenario_table().to_markdown(),
         r8.scenario_table().to_markdown()
@@ -253,7 +256,7 @@ fn incremental_retiming_matches_retime_all_oracle() {
         node_watts: 2238.0,
         idle_watts: 365.0,
     };
-    for routing in [Routing::Minimal, Routing::Valiant] {
+    for routing in [Routing::Minimal, Routing::Valiant, Routing::Adaptive] {
         for mid_day_cap in [false, true] {
             let events = || {
                 if mid_day_cap {
@@ -338,6 +341,130 @@ fn retimes_elided_is_report_neutral() {
             assert_eq!(a.events_skipped, b.events_skipped, "{ctx}");
         }
     }
+}
+
+/// ISSUE 5: an explicitly installed PackFirst policy is bit-for-bit
+/// the pre-policy scheduler with coupling on — placement pluggability
+/// cannot move a single coupled number.
+#[test]
+fn pack_first_policy_is_identity_under_coupling() {
+    let jobs = TraceGen::booster_hpc_day(400, 5).generate();
+    let plain = coupled_sched().run(jobs.clone());
+    let mut s = coupled_sched();
+    s.set_policy(PolicyKind::PackFirst);
+    let explicit = s.run(jobs);
+    assert_eq!(plain.len(), explicit.len());
+    for (id, r) in &explicit {
+        let p = &plain[id];
+        assert_eq!(r.start_time, p.start_time, "job {id}");
+        assert_eq!(r.end_time, p.end_time, "job {id}");
+        assert_eq!(r.placement.nodes_per_cell, p.placement.nodes_per_cell, "job {id}");
+    }
+}
+
+/// A 4-cell Booster-only machine — small enough that the contended
+/// two-cell trace below is fully hand-analyzable.
+fn mini_booster() -> MachineConfig {
+    let mut cfg = MachineConfig::leonardo();
+    cfg.name = "MiniBooster".into();
+    cfg.cells = (0..4)
+        .map(|_| CellConfig {
+            kind: CellKind::Booster,
+            groups: vec![RackGroup {
+                racks: 6,
+                blades_per_rack: 30,
+                nodes_per_blade: 1,
+                node: NodeSpec::davinci(),
+            }],
+        })
+        .collect();
+    cfg
+}
+
+/// ISSUE 5 acceptance: on a contended two-cell trace the neighbour's
+/// stretch is strictly lower under SpreadLinks than under PackFirst.
+/// The layout is fully determined: X (240 nodes, comm-bound) spans
+/// cells {0, 1}; a 120-node single-cell filler arrives, then a
+/// comm-bound 240-node probe P. PackFirst packs the filler into clean
+/// cell 2 and P into {3, 1} — overlapping X on cell 1, so X and P
+/// stretch each other. SpreadLinks parks the (link-immune) filler on
+/// X's cell 1 and routes P through clean {2, 3} — X never sees P's
+/// traffic.
+#[test]
+fn spread_links_lowers_neighbour_stretch_on_contended_two_cell_trace() {
+    let cfg = mini_booster();
+    let jobs = || {
+        vec![
+            job(1, 240, 4_000.0, 0.0, 0.9),  // X: the two-cell neighbour
+            job(2, 120, 10_000.0, 1.0, 0.0), // filler: single-cell, immune
+            job(3, 240, 600.0, 2.0, 0.9),    // P: the contending probe
+        ]
+    };
+    let run = |policy: PolicyKind| {
+        let mut s = Scheduler::with_coupling(&cfg, Coupling::full());
+        s.set_policy(policy);
+        s.run(jobs())
+    };
+    let pack = run(PolicyKind::PackFirst);
+    let spread = run(PolicyKind::SpreadLinks);
+    // Exact placements: the probe overlaps X under PackFirst and avoids
+    // it (via the parked filler) under SpreadLinks.
+    assert_eq!(pack[&1].placement.nodes_per_cell, vec![(0, 180), (1, 60)]);
+    assert_eq!(pack[&2].placement.nodes_per_cell, vec![(2, 120)]);
+    assert_eq!(pack[&3].placement.nodes_per_cell, vec![(3, 180), (1, 60)]);
+    assert_eq!(spread[&1].placement.nodes_per_cell, vec![(0, 180), (1, 60)]);
+    assert_eq!(spread[&2].placement.nodes_per_cell, vec![(1, 120)]);
+    assert_eq!(spread[&3].placement.nodes_per_cell, vec![(2, 180), (3, 60)]);
+    // Same start instants, strictly less neighbour (and probe) stretch.
+    assert_eq!(pack[&1].start_time, spread[&1].start_time);
+    assert_eq!(pack[&3].start_time, spread[&3].start_time);
+    let pack_x = pack[&1].end_time - pack[&1].start_time;
+    let spread_x = spread[&1].end_time - spread[&1].start_time;
+    assert!(spread_x < pack_x - 1.0, "neighbour stretch not reduced: {spread_x} vs {pack_x}");
+    let pack_p = pack[&3].end_time - pack[&3].start_time;
+    let spread_p = spread[&3].end_time - spread[&3].start_time;
+    assert!(spread_p < pack_p - 1.0, "probe stretch not reduced: {spread_p} vs {pack_p}");
+    // Both worlds still stretch X beyond nominal: its own two-cell
+    // spread is the first congestion source.
+    assert!(spread_x > 4_000.0, "{spread_x}");
+}
+
+/// ISSUE 5 acceptance: on a contended `day` mix, a coupled policy-axis
+/// sweep scores SpreadLinks strictly better than PackFirst on mean p95
+/// runtime stretch, and the report's policy table surfaces the
+/// comparison.
+#[test]
+fn spread_links_reduces_p95_stretch_on_contended_day_sweep() {
+    let twin = Twin::leonardo();
+    // 8000 jobs saturate the Booster day: queues form, free space
+    // fragments, and comm-bound jobs land in multi-cell placements
+    // next to each other — the regime placement policy exists for.
+    // One seed keeps the (debug-profile) suite affordable; the same
+    // claim is gated at bench scale in campaign_throughput.
+    let grid = SweepGrid::new(vec![1], vec![None], vec!["day".into()], 8_000)
+        .unwrap()
+        .with_coupling(Coupling::full())
+        .with_policies(vec![PolicyKind::PackFirst, PolicyKind::SpreadLinks]);
+    assert_eq!(grid.len(), 2);
+    let report = run_sweep_streaming(&twin, &grid, 2);
+    let mean_p95 = |policy: PolicyKind| {
+        let vals: Vec<f64> = report
+            .stats
+            .iter()
+            .filter(|s| s.policy == policy)
+            .map(|s| s.p95_stretch)
+            .collect();
+        assert_eq!(vals.len(), 1);
+        vals.iter().sum::<f64>() / vals.len() as f64
+    };
+    let pack = mean_p95(PolicyKind::PackFirst);
+    let spread = mean_p95(PolicyKind::SpreadLinks);
+    assert!(pack > 1.0, "day mix not contended: pack p95 stretch {pack}");
+    assert!(spread < pack, "SpreadLinks did not reduce mean p95 stretch: {spread} vs {pack}");
+    let pt = report.policy_table();
+    assert_eq!(pt.rows.len(), 2, "policy comparison rows missing");
+    assert_eq!(pt.rows[0][0], "pack");
+    assert_eq!(pt.rows[1][0], "spread");
 }
 
 /// Coupled accounting stays safe: all jobs complete, the machine drains

@@ -293,6 +293,105 @@ fn prop_energy_equals_power_series_integral() {
     }
 }
 
+/// Link-load conservation: at every event on the stream, the per-link
+/// cross counts a [`CongestionTracker`] maintains equal the sum over
+/// running multi-cell jobs of their per-route contributions
+/// ([`link_contributions`]) — per bundle and in total — under both
+/// routings, with and without a mid-day `CapChange`, and the table
+/// drains to zero when the day ends.
+#[test]
+fn prop_link_load_conservation() {
+    use leonardo_twin::network::{link_contributions, CongestionTracker};
+    use leonardo_twin::scheduler::{Coupling, PowerCap};
+    use leonardo_twin::sim::{Component, Event, ScheduledEvent};
+    use leonardo_twin::workloads::TraceGen;
+    use std::collections::BTreeMap;
+
+    /// Forwards events to an inner tracker, re-derives the expected
+    /// link table from its own running-job set, and asserts equality
+    /// after every event.
+    struct Checker {
+        tracker: CongestionTracker,
+        running: BTreeMap<u64, Vec<(u32, u32)>>,
+        events_checked: u64,
+    }
+
+    impl Component for Checker {
+        fn on_event(&mut self, now: f64, ev: &Event, out: &mut Vec<ScheduledEvent>) {
+            self.tracker.on_event(now, ev, out);
+            match ev {
+                Event::Start { job, booster: true, cells, .. } if cells.len() > 1 => {
+                    self.running.insert(*job, cells.to_vec());
+                }
+                Event::End { job, booster: true, cells, .. } if cells.len() > 1 => {
+                    self.running.remove(job);
+                }
+                _ => return,
+            }
+            let mut expected: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+            for cells in self.running.values() {
+                for ((a, b), nodes) in link_contributions(cells) {
+                    *expected.entry((a, b)).or_insert(0) += nodes as u64;
+                }
+            }
+            let expected_total: u64 = expected.values().sum();
+            assert_eq!(
+                self.tracker.total_link_cross_nodes(),
+                expected_total,
+                "link-load sum diverged at t={now}"
+            );
+            for (&(a, b), &nodes) in &expected {
+                assert_eq!(
+                    self.tracker.link_cross_nodes(a, b) as u64,
+                    nodes,
+                    "bundle ({a}, {b}) diverged at t={now}"
+                );
+            }
+            self.events_checked += 1;
+        }
+    }
+
+    let cfg = MachineConfig::leonardo();
+    for routing in [Routing::Minimal, Routing::Valiant, Routing::Adaptive] {
+        for mid_day_cap in [false, true] {
+            let jobs = TraceGen::booster_hpc_day(300, 11).generate();
+            let mut sched = Scheduler::with_coupling(&cfg, Coupling::full());
+            if let Some(net) = sched.net.as_mut() {
+                net.routing = routing;
+            }
+            sched.power_cap = Some(PowerCap {
+                cap_mw: 99.0,
+                node_watts: 2238.0,
+                idle_watts: 365.0,
+            });
+            let extra = if mid_day_cap {
+                vec![ScheduledEvent::at(20_000.0, Event::CapChange { cap_mw: Some(5.5) })]
+            } else {
+                Vec::new()
+            };
+            let mut checker = Checker {
+                tracker: CongestionTracker::for_booster(&cfg),
+                running: BTreeMap::new(),
+                events_checked: 0,
+            };
+            let recs = {
+                let mut observers: [&mut dyn Component; 1] = [&mut checker];
+                sched.run_with(jobs, extra, &mut observers)
+            };
+            let ctx = format!("routing {routing:?} cap {mid_day_cap}");
+            assert_eq!(recs.len(), 300, "{ctx}");
+            assert!(checker.events_checked > 0, "{ctx}: no multi-cell lifecycle event checked");
+            assert!(checker.running.is_empty(), "{ctx}: jobs left running");
+            assert_eq!(
+                checker.tracker.total_link_cross_nodes(),
+                0,
+                "{ctx}: link table did not drain"
+            );
+            assert!(checker.tracker.peak_link_load() > 0.0, "{ctx}: no load seen");
+        }
+    }
+}
+
 /// DVFS time factor: slowing clocks never speeds a job up; memory-bound
 /// jobs suffer less.
 #[test]

@@ -123,6 +123,23 @@ fn optimized_path_equals_baseline_under_cap_on_mixed_trace() {
     assert_identical(&ev, &legacy, "capped trace (legacy)");
 }
 
+/// The three engines stay bit-for-bit identical under the SpreadLinks
+/// policy too: `place` and `place_scan` route through the same policy
+/// object, so the oracle suites cover both engines per policy (no
+/// silent divergence between optimized and baseline paths).
+#[test]
+fn engines_agree_on_mixed_trace_under_spread_links() {
+    use leonardo_twin::scheduler::PolicyKind;
+    let cfg = MachineConfig::leonardo();
+    let jobs = TraceGen::booster_day(800, 13).generate();
+    let spread = || Scheduler::with_policy(&cfg, PolicyKind::SpreadLinks);
+    let ev = spread().run(jobs.clone());
+    let baseline = spread().run_event_baseline(jobs.clone());
+    let legacy = spread().run_rescan(jobs);
+    assert_identical(&ev, &legacy, "spread mixed trace");
+    assert_identical(&ev, &baseline, "spread mixed trace (event baseline)");
+}
+
 /// EASY backfill must never delay the queue head: injecting a stream of
 /// backfill candidates leaves the head's start time exactly where it was
 /// without them.
