@@ -49,8 +49,10 @@ use crate::coordinator::Twin;
 use crate::metrics::{f1, f2, Table};
 use crate::network::CongestionTracker;
 use crate::power::{PowerMonitor, Utilization};
-use crate::scheduler::{Coupling, Job, JobRecord, Partition, PolicyKind, PowerCap, Scheduler};
-use crate::sim::Component;
+use crate::scheduler::{
+    Coupling, Job, JobRecord, Partition, PolicyKind, PowerCap, ReplaySession, Scheduler,
+};
+use crate::sim::{Component, Event, ScheduledEvent, Simulation};
 use crate::workloads::TraceGen;
 use crate::Result;
 
@@ -69,6 +71,12 @@ pub struct Scenario {
     /// cell-indexed retimer (see [`crate::scheduler::Scheduler::retime_all`]) —
     /// the bench baseline; records are bit-identical either way.
     pub retime_all: bool,
+    /// Seconds into the day at which the cap level arrives. 0 (default)
+    /// = the cap applies from t=0 like the pre-fork grids. Positive =
+    /// the scheduler starts uncapped-equivalent (an armed infinite cap)
+    /// and a `CapChange` event lands at this time — the late-divergence
+    /// shape the divergence-tree sweep shares prefixes across.
+    pub cap_time: f64,
     pub trace: TraceGen,
 }
 
@@ -76,6 +84,36 @@ impl Scenario {
     pub fn label(&self) -> String {
         let policy = self.policy.name();
         format!("{} seed={} {} {policy}", self.mix, self.seed, cap_label(self.cap_mw))
+    }
+
+    /// The cap level the rig is armed with at t=0. With a deferred cap
+    /// (`cap_time > 0`) every scenario of a fork group — capped or not —
+    /// arms an *infinite* cap: `dvfs_scale_at` returns exactly 1.0 below
+    /// any finite draw, so the armed-but-infinite prefix is bit-identical
+    /// to capless, and the divergent `CapChange` only has to move the
+    /// level ([`crate::sim::Event::CapChange`] on a capless scheduler is
+    /// a no-op by design).
+    pub fn armed_cap(&self) -> Option<f64> {
+        if self.cap_time > 0.0 {
+            Some(f64::INFINITY)
+        } else {
+            self.cap_mw
+        }
+    }
+
+    /// The scenario's injected event stream: the deferred `CapChange`,
+    /// when it has one. Shared by the streaming path (scheduled upfront)
+    /// and the forked path (injected after restore) — both enter the
+    /// kernel's divergent sequence band at the same rank, which is what
+    /// keeps the two engines byte-identical.
+    pub fn extra_events(&self) -> Vec<ScheduledEvent> {
+        match (self.cap_time > 0.0, self.cap_mw) {
+            (true, Some(mw)) => vec![ScheduledEvent::at(
+                self.cap_time,
+                Event::CapChange { cap_mw: Some(mw) },
+            )],
+            _ => Vec::new(),
+        }
     }
 }
 
@@ -106,6 +144,10 @@ pub struct SweepGrid {
     /// incremental cell-indexed retiming). Identical records; kept as
     /// the throughput-bench baseline and identity-test oracle.
     pub retime_all: bool,
+    /// Seconds into the day at which each scenario's cap level arrives
+    /// (see [`Scenario::cap_time`]). 0 (default) = caps apply from t=0
+    /// and the grid has no shared prefixes to fork.
+    pub cap_time: f64,
 }
 
 impl SweepGrid {
@@ -146,6 +188,7 @@ impl SweepGrid {
             jobs,
             coupling: Coupling::default(),
             retime_all: false,
+            cap_time: 0.0,
         })
     }
 
@@ -167,6 +210,19 @@ impl SweepGrid {
     /// Same grid replayed on the PR 3 retime-all walk (bench baseline).
     pub fn with_retime_all(mut self, retime_all: bool) -> Self {
         self.retime_all = retime_all;
+        self
+    }
+
+    /// Same grid with every cap level arriving `cap_time` seconds into
+    /// the day instead of at t=0 — the late-divergence grid shape the
+    /// forked sweep shares prefixes across. Panics on a non-finite or
+    /// negative time; the CLI boundary (`--cap-time`) rejects it first.
+    pub fn with_cap_time(mut self, cap_time: f64) -> Self {
+        assert!(
+            cap_time.is_finite() && cap_time >= 0.0,
+            "cap_time must be finite and >= 0, got {cap_time}"
+        );
+        self.cap_time = cap_time;
         self
     }
 
@@ -198,9 +254,49 @@ impl SweepGrid {
                             coupling: self.coupling,
                             policy,
                             retime_all: self.retime_all,
+                            cap_time: self.cap_time,
                             trace,
                         });
                     }
+                }
+            }
+        }
+        out
+    }
+
+    /// Partition the grid's scenario indices into *divergence-tree fork
+    /// groups*: scenarios in one group share every event before the
+    /// deferred cap move (same policy, mix and seed — the axes that
+    /// shape the whole day) and differ only in the cap level arriving at
+    /// [`SweepGrid::cap_time`], so a worker can simulate the shared
+    /// prefix once, snapshot, and replay only the suffix per member.
+    ///
+    /// The grouping is pinned to the canonical [`SweepGrid::scenarios`]
+    /// expansion (policy-major, then mix, then cap, then seed): member
+    /// `c` of group `(p, m, s)` is grid index
+    /// `((p * mixes + m) * caps + c) * seeds + s`. Groups are emitted in
+    /// `(policy, mix, seed)` order, each with its members in cap order —
+    /// re-ordering an axis re-numbers scenarios but never changes which
+    /// scenarios share a prefix.
+    ///
+    /// A grid without a deferred cap (`cap_time == 0`) is all-divergent:
+    /// every scenario is its own singleton group and the forked sweep
+    /// degenerates to plain streaming with zero forks. A single-cap grid
+    /// degenerates the same way (groups of one).
+    pub fn fork_groups(&self) -> Vec<Vec<usize>> {
+        if self.cap_time <= 0.0 {
+            return (0..self.len()).map(|i| vec![i]).collect();
+        }
+        let (n_caps, n_seeds) = (self.caps.len(), self.seeds.len());
+        let mut out = Vec::with_capacity(self.policies.len() * self.mixes.len() * n_seeds);
+        for p in 0..self.policies.len() {
+            for m in 0..self.mixes.len() {
+                for s in 0..n_seeds {
+                    out.push(
+                        (0..n_caps)
+                            .map(|c| ((p * self.mixes.len() + m) * n_caps + c) * n_seeds + s)
+                            .collect(),
+                    );
                 }
             }
         }
@@ -250,6 +346,15 @@ pub struct ScenarioStats {
     /// untouched-job skips). Pure observability — never feeds back into
     /// any scheduling number.
     pub retimes_elided: u64,
+    /// Shared-prefix forks this scenario benefited from (1 when it ran
+    /// as a member of a multi-scenario divergence-tree group, 0 on the
+    /// streaming path). Pure bookkeeping — zeroed by
+    /// [`CampaignReport::with_fork_counters_zeroed`] for the
+    /// forked-vs-streaming identity oracle.
+    pub forks: u64,
+    /// Snapshot restores paid to replay this scenario's suffix (0 for
+    /// the group's first member, which rides the live prefix).
+    pub restores: u64,
 }
 
 /// Index-percentile over an ascending-sorted slice (the same
@@ -321,6 +426,8 @@ impl ScenarioStats {
             p95_stretch: percentile(&stretches, 0.95),
             events_skipped: 0,
             retimes_elided: 0,
+            forks: 0,
+            restores: 0,
         }
     }
 }
@@ -334,6 +441,10 @@ pub struct ReplayRig {
     pub monitor: PowerMonitor,
     pub congestion: CongestionTracker,
     pub total_nodes: u32,
+    /// The rig's event-kernel arena: one [`Simulation`] reused across
+    /// scenarios (and across fork-group snapshots), so replays retain
+    /// the event heap and snapshot buffers instead of reallocating.
+    pub sim: Simulation,
 }
 
 impl ReplayRig {
@@ -369,6 +480,7 @@ impl ReplayRig {
             monitor,
             congestion,
             total_nodes,
+            sim: Simulation::new(),
         }
     }
 
@@ -402,24 +514,34 @@ impl ReplayRig {
 }
 
 /// Replay one scenario on an already-armed rig — the core the fresh-rig
-/// path and the arena path share, so they cannot diverge.
+/// path and the arena path share, so they cannot diverge. Runs as a
+/// [`ReplaySession`] over the rig's kernel arena: a deferred cap
+/// ([`Scenario::extra_events`]) is scheduled upfront in the divergent
+/// band, exactly where the forked path injects it after a restore.
 fn replay(rig: &mut ReplayRig, sc: &Scenario) -> ScenarioStats {
     let jobs = sc.trace.generate();
     assert!(!jobs.is_empty(), "empty scenario trace");
     rig.sched.retime_all = sc.retime_all;
+    let ReplayRig {
+        sched,
+        monitor,
+        congestion,
+        total_nodes,
+        sim,
+    } = rig;
     let records = {
-        let mut observers: [&mut dyn Component; 2] =
-            [&mut rig.monitor, &mut rig.congestion];
-        rig.sched.run_with(jobs.clone(), Vec::new(), &mut observers)
+        let mut session = ReplaySession::new(sim, sched, jobs.clone(), sc.extra_events());
+        let mut observers: [&mut dyn Component; 2] = [&mut *monitor, &mut *congestion];
+        session.run_to_end(&mut observers);
+        session.finish()
     };
-    let mut stats =
-        ScenarioStats::collect(&jobs, &records, rig.total_nodes, &rig.monitor, &rig.congestion);
+    let mut stats = ScenarioStats::collect(&jobs, &records, *total_nodes, monitor, congestion);
     stats.mix = sc.mix.clone();
     stats.seed = sc.seed;
     stats.cap_mw = sc.cap_mw;
     stats.policy = sc.policy;
-    stats.events_skipped = rig.sched.last_run.events_skipped;
-    stats.retimes_elided = rig.sched.last_run.retimes_elided;
+    stats.events_skipped = sched.last_run.events_skipped;
+    stats.retimes_elided = sched.last_run.retimes_elided;
     stats
 }
 
@@ -428,32 +550,120 @@ fn replay(rig: &mut ReplayRig, sc: &Scenario) -> ScenarioStats {
 /// a fresh rig per scenario (the PR 3 cost shape the streaming arena is
 /// benched against).
 pub fn run_scenario(twin: &Twin, sc: &Scenario) -> ScenarioStats {
-    let mut rig = ReplayRig::new(twin, sc.trace.partition, sc.cap_mw, sc.coupling, sc.policy);
+    let mut rig =
+        ReplayRig::new(twin, sc.trace.partition, sc.armed_cap(), sc.coupling, sc.policy);
     replay(&mut rig, sc)
 }
 
-/// Replay one scenario on a worker's persistent arena: the first call
-/// builds the rig, every later call [`ReplayRig::reset`]s it — no Twin
-/// cloning, no pool/series reallocation. Bit-identical to
-/// [`run_scenario`].
-pub fn run_scenario_arena(
-    arena: &mut Option<ReplayRig>,
+/// Arm a worker's persistent arena for `sc`: the first call builds the
+/// rig, every later call [`ReplayRig::reset`]s it — no Twin cloning, no
+/// pool/series reallocation.
+fn arm_arena<'a>(
+    arena: &'a mut Option<ReplayRig>,
     twin: &Twin,
     sc: &Scenario,
-) -> ScenarioStats {
+) -> &'a mut ReplayRig {
     match arena {
-        Some(rig) => rig.reset(twin, sc.trace.partition, sc.cap_mw, sc.coupling, sc.policy),
+        Some(rig) => {
+            rig.reset(twin, sc.trace.partition, sc.armed_cap(), sc.coupling, sc.policy)
+        }
         None => {
             *arena = Some(ReplayRig::new(
                 twin,
                 sc.trace.partition,
-                sc.cap_mw,
+                sc.armed_cap(),
                 sc.coupling,
                 sc.policy,
             ))
         }
     }
-    replay(arena.as_mut().expect("arena armed above"), sc)
+    arena.as_mut().expect("arena armed above")
+}
+
+/// Replay one scenario on a worker's persistent arena. Bit-identical to
+/// [`run_scenario`] (pinned by the arena identity test).
+pub fn run_scenario_arena(
+    arena: &mut Option<ReplayRig>,
+    twin: &Twin,
+    sc: &Scenario,
+) -> ScenarioStats {
+    replay(arm_arena(arena, twin, sc), sc)
+}
+
+/// Replay one divergence-tree fork group on a worker's arena: simulate
+/// the shared prefix once up to the deferred cap move, snapshot every
+/// layer, then per member restore + inject that member's `CapChange` +
+/// replay only the suffix. Returns `(grid index, stats)` per member.
+///
+/// Byte-identity with the streaming path rests on three invariants:
+/// the armed infinite cap makes the prefix bit-identical to every
+/// member's own full replay ([`Scenario::armed_cap`]); restore rewinds
+/// kernel counters and generation stamps exactly, so stale-End skips
+/// re-count identically; and the injected cap move enters the divergent
+/// sequence band at the same rank the streaming path schedules it at.
+/// Only the `forks`/`restores` bookkeeping differs.
+fn replay_group(
+    arena: &mut Option<ReplayRig>,
+    twin: &Twin,
+    scenarios: &[Scenario],
+    group: &[usize],
+) -> Vec<(usize, ScenarioStats)> {
+    if group.len() == 1 {
+        // Singleton (degenerate grid or single-cap axis): plain
+        // streaming replay, zero forks.
+        let i = group[0];
+        return vec![(i, run_scenario_arena(arena, twin, &scenarios[i]))];
+    }
+    let sc0 = &scenarios[group[0]];
+    let rig = arm_arena(arena, twin, sc0);
+    rig.sched.retime_all = sc0.retime_all;
+    // Group members share policy/mix/seed, so one generated trace
+    // serves every member.
+    let jobs = sc0.trace.generate();
+    assert!(!jobs.is_empty(), "empty scenario trace");
+    let ReplayRig {
+        sched,
+        monitor,
+        congestion,
+        total_nodes,
+        sim,
+    } = rig;
+    let mut session = ReplaySession::new(sim, sched, jobs.clone(), Vec::new());
+    {
+        let mut observers: [&mut dyn Component; 2] = [&mut *monitor, &mut *congestion];
+        session.run_until(sc0.cap_time, &mut observers);
+        session.snapshot(&mut observers);
+    }
+    let mut out = Vec::with_capacity(group.len());
+    for (k, &i) in group.iter().enumerate() {
+        let sc = &scenarios[i];
+        {
+            let mut observers: [&mut dyn Component; 2] = [&mut *monitor, &mut *congestion];
+            if k > 0 {
+                session.restore(&mut observers);
+            }
+            if let Some(mw) = sc.cap_mw {
+                // Rank 0: the same divergent-band slot the streaming
+                // path's upfront schedule uses.
+                session.schedule_ranked(sc.cap_time, Event::CapChange { cap_mw: Some(mw) }, 0);
+            }
+            session.run_to_end(&mut observers);
+            session.assert_complete();
+        }
+        let mut stats =
+            ScenarioStats::collect(&jobs, session.records(), *total_nodes, monitor, congestion);
+        stats.mix = sc.mix.clone();
+        stats.seed = sc.seed;
+        stats.cap_mw = sc.cap_mw;
+        stats.policy = sc.policy;
+        let counters = session.counters();
+        stats.events_skipped = counters.events_skipped;
+        stats.retimes_elided = counters.retimes_elided;
+        stats.forks = 1;
+        stats.restores = u64::from(k > 0);
+        out.push((i, stats));
+    }
+    out
 }
 
 /// Merged outcome of a sweep: per-scenario stats in grid order plus
@@ -464,6 +674,19 @@ pub struct CampaignReport {
 }
 
 impl CampaignReport {
+    /// The report with the `forks`/`restores` bookkeeping zeroed — what
+    /// the forked-vs-streaming identity oracle compares, since the two
+    /// engines agree on every simulated number and differ only in how
+    /// much replay work they shared.
+    pub fn with_fork_counters_zeroed(&self) -> CampaignReport {
+        let mut r = self.clone();
+        for s in &mut r.stats {
+            s.forks = 0;
+            s.restores = 0;
+        }
+        r
+    }
+
     /// One row per scenario, in grid order.
     pub fn scenario_table(&self) -> Table {
         let mut t = Table::new(
@@ -484,6 +707,8 @@ impl CampaignReport {
                 "p95 stretch",
                 "Skipped",
                 "Elided",
+                "Forks",
+                "Restores",
             ],
         );
         for s in &self.stats {
@@ -503,6 +728,8 @@ impl CampaignReport {
                 f2(s.p95_stretch),
                 s.events_skipped.to_string(),
                 s.retimes_elided.to_string(),
+                s.forks.to_string(),
+                s.restores.to_string(),
             ]);
         }
         t
@@ -541,6 +768,8 @@ impl CampaignReport {
         metric("p95 stretch", "x nominal", &|s| s.p95_stretch);
         metric("stale events skipped", "re-timed Ends", &|s| s.events_skipped as f64);
         metric("re-times elided", "walks avoided", &|s| s.retimes_elided as f64);
+        metric("prefix forks", "shared prefixes", &|s| s.forks as f64);
+        metric("snapshot restores", "suffix replays", &|s| s.restores as f64);
         t
     }
 
@@ -839,6 +1068,60 @@ pub fn run_sweep_streaming(twin: &Twin, grid: &SweepGrid, threads: usize) -> Cam
     }
 }
 
+/// Divergence-tree sweep: the streaming engine's fan-out with fork
+/// groups as the unit of work. Each worker pulls a [`SweepGrid::fork_groups`]
+/// group off the atomic cursor, simulates the shared prefix once on its
+/// arena, and streams each member's `(grid index, stats)` as its suffix
+/// finishes — the same pre-sized slot merge as [`run_sweep_streaming`],
+/// so completion order and thread count stay invisible.
+///
+/// Reports are byte-identical to [`run_sweep_streaming`]'s for any
+/// thread count, modulo the `forks`/`restores` bookkeeping (zeroed by
+/// [`CampaignReport::with_fork_counters_zeroed`], which is how the
+/// identity test compares them). On an all-divergent grid
+/// (`cap_time == 0` or a single cap level) every group is a singleton
+/// and this *is* plain streaming, zero forks paid.
+pub fn run_sweep_forked(twin: &Twin, grid: &SweepGrid, threads: usize) -> CampaignReport {
+    let scenarios = grid.scenarios();
+    let groups = grid.fork_groups();
+    let workers = threads.clamp(1, groups.len().max(1));
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<ScenarioStats>> = vec![None; scenarios.len()];
+    std::thread::scope(|s| {
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, ScenarioStats)>();
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let scenarios = &scenarios;
+            let groups = &groups;
+            s.spawn(move || {
+                let mut arena: Option<ReplayRig> = None;
+                loop {
+                    let g = next.fetch_add(1, Ordering::Relaxed);
+                    if g >= groups.len() {
+                        break;
+                    }
+                    for (i, stats) in replay_group(&mut arena, twin, scenarios, &groups[g]) {
+                        if tx.send((i, stats)).is_err() {
+                            return; // receiver gone: the scope is unwinding
+                        }
+                    }
+                }
+            });
+        }
+        drop(tx);
+        for (i, stats) in rx {
+            slots[i] = Some(stats);
+        }
+    });
+    CampaignReport {
+        stats: slots
+            .into_iter()
+            .map(|s| s.expect("worker died before streaming its scenario"))
+            .collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -949,7 +1232,7 @@ mod tests {
         let caps = report.cap_table();
         assert_eq!(caps.rows.len(), 2);
         let summary = report.summary_table();
-        assert_eq!(summary.rows.len(), 12);
+        assert_eq!(summary.rows.len(), 14);
         // Sub-idle-floor capping forces every job onto the 0.5 DVFS
         // floor: clock-bound work stretches, and the stretch percentiles
         // surface it.
@@ -1006,7 +1289,9 @@ mod tests {
     }
 
     /// A reset arena rig replays bit-identically to a fresh rig, across
-    /// partition/cap/coupling changes between scenarios.
+    /// partition/cap/coupling changes between scenarios — and the
+    /// arena's event queue keeps its heap allocation across resets
+    /// (reuse means no per-scenario reallocation ramp).
     #[test]
     fn arena_reset_matches_fresh_rig() {
         let twin = Twin::leonardo();
@@ -1019,10 +1304,21 @@ mod tests {
         .unwrap()
         .with_coupling(Coupling::full());
         let mut arena: Option<ReplayRig> = None;
-        for sc in &grid.scenarios() {
+        let mut cap_after_first = 0;
+        for (k, sc) in grid.scenarios().iter().enumerate() {
             let fresh = run_scenario(&twin, sc);
             let reused = run_scenario_arena(&mut arena, &twin, sc);
             assert_eq!(fresh, reused, "arena drift on {}", sc.label());
+            let cap = arena.as_ref().unwrap().sim.queue.capacity();
+            if k == 0 {
+                cap_after_first = cap;
+                assert!(cap > 0, "first replay left no queue allocation");
+            } else {
+                assert!(
+                    cap >= cap_after_first,
+                    "arena reset shed the queue allocation ({cap} < {cap_after_first})"
+                );
+            }
         }
     }
 
@@ -1069,19 +1365,131 @@ mod tests {
         s.mix = "day".into();
         s.events_skipped = 42;
         s.retimes_elided = 1337;
+        s.forks = 7;
+        s.restores = 3;
         let report = CampaignReport { stats: vec![s] };
         let t = report.scenario_table();
-        assert_eq!(t.headers[t.headers.len() - 2], "Skipped");
-        assert_eq!(t.headers[t.headers.len() - 1], "Elided");
+        assert_eq!(t.headers[t.headers.len() - 4], "Skipped");
+        assert_eq!(t.headers[t.headers.len() - 3], "Elided");
+        assert_eq!(t.headers[t.headers.len() - 2], "Forks");
+        assert_eq!(t.headers[t.headers.len() - 1], "Restores");
         let row = &t.rows[0];
-        assert_eq!(row[row.len() - 2], "42");
-        assert_eq!(row[row.len() - 1], "1337");
+        assert_eq!(row[row.len() - 4], "42");
+        assert_eq!(row[row.len() - 3], "1337");
+        assert_eq!(row[row.len() - 2], "7");
+        assert_eq!(row[row.len() - 1], "3");
         let summary = report.summary_table();
         let md = summary.to_markdown();
         assert!(md.contains("stale events skipped"), "{md}");
         assert!(md.contains("re-times elided"), "{md}");
+        assert!(md.contains("prefix forks"), "{md}");
+        assert!(md.contains("snapshot restores"), "{md}");
         assert!(md.contains("42"), "{md}");
         assert!(md.contains("1337"), "{md}");
+        // Zeroing the fork bookkeeping touches nothing else.
+        let zeroed = report.with_fork_counters_zeroed();
+        assert_eq!(zeroed.stats[0].forks, 0);
+        assert_eq!(zeroed.stats[0].restores, 0);
+        assert_eq!(zeroed.stats[0].events_skipped, 42);
+    }
+
+    /// Satellite: fork grouping is pinned to the canonical expansion —
+    /// members of a group differ only in cap, groups cover the grid
+    /// exactly once, and degenerate grids fall back to all-singletons.
+    #[test]
+    fn fork_groups_are_canonical_and_degenerate_grids_fall_back() {
+        let g = SweepGrid::new(
+            vec![7, 8],
+            vec![None, Some(6.0), Some(5.0)],
+            vec!["day".into(), "ai".into()],
+            10,
+        )
+        .unwrap()
+        .with_cap_time(3600.0);
+        let groups = g.fork_groups();
+        let sc = g.scenarios();
+        // One group per (policy, mix, seed); members in cap order.
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups[0], vec![0, 2, 4]);
+        assert_eq!(groups[1], vec![1, 3, 5]);
+        assert_eq!(groups[2], vec![6, 8, 10]);
+        let mut seen: Vec<usize> = groups.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..g.len()).collect::<Vec<_>>(), "exact cover");
+        for group in &groups {
+            let first = &sc[group[0]];
+            let caps: Vec<Option<f64>> = group.iter().map(|&i| sc[i].cap_mw).collect();
+            assert_eq!(caps, g.caps, "members walk the cap axis in order");
+            for &i in group {
+                assert_eq!(sc[i].mix, first.mix, "mix shared within a group");
+                assert_eq!(sc[i].seed, first.seed, "seed shared within a group");
+                assert_eq!(sc[i].policy, first.policy, "policy shared within a group");
+            }
+        }
+        // Degenerate: no deferred cap → every scenario is its own group.
+        let plain = g.clone().with_cap_time(0.0);
+        assert!(plain.fork_groups().iter().all(|grp| grp.len() == 1));
+        assert_eq!(plain.fork_groups().len(), plain.len());
+        // Degenerate: a single-cap (e.g. seed-axis) grid groups to
+        // singletons even with a deferred cap.
+        let seed_axis = SweepGrid::new(vec![1, 2, 3], vec![Some(6.0)], vec!["day".into()], 10)
+            .unwrap()
+            .with_cap_time(3600.0);
+        assert!(seed_axis.fork_groups().iter().all(|grp| grp.len() == 1));
+    }
+
+    /// A deferred cap changes scenario semantics (the day starts
+    /// uncapped), and the armed-infinite-cap prefix is bit-identical to
+    /// a genuinely capless day.
+    #[test]
+    fn deferred_cap_arms_infinite_and_injects_cap_change() {
+        let g = small_grid().with_cap_time(7200.0);
+        let sc = g.scenarios();
+        assert!(sc.iter().all(|s| s.armed_cap() == Some(f64::INFINITY)));
+        let uncapped = &sc[0];
+        assert!(uncapped.cap_mw.is_none() && uncapped.extra_events().is_empty());
+        let capped = sc.iter().find(|s| s.cap_mw.is_some()).unwrap();
+        let evs = capped.extra_events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].time, 7200.0);
+        // An armed-but-infinite cap day is bit-identical to a capless
+        // day: the cap-free scenario of a deferred grid replays exactly
+        // like the same scenario of a plain grid.
+        let twin = Twin::leonardo();
+        let plain = run_scenario(&twin, &small_grid().scenarios()[0]);
+        let deferred = run_scenario(&twin, uncapped);
+        assert_eq!(plain, deferred);
+    }
+
+    /// The divergence-tree engine is byte-identical to streaming for
+    /// any thread count, modulo the fork bookkeeping — uncoupled and
+    /// fully coupled, with the deferred cap landing mid-day.
+    #[test]
+    fn forked_sweep_matches_streaming_modulo_fork_counters() {
+        let twin = Twin::leonardo();
+        for coupling in [Coupling::default(), Coupling::full()] {
+            let grid = small_grid().with_coupling(coupling).with_cap_time(7200.0);
+            let streamed = run_sweep_streaming(&twin, &grid, 2);
+            for threads in [1, 2, 8] {
+                let forked = run_sweep_forked(&twin, &grid, threads);
+                assert_eq!(
+                    streamed,
+                    forked.with_fork_counters_zeroed(),
+                    "forked vs streaming diverged (coupled={}, {threads} threads)",
+                    coupling.enabled()
+                );
+                // Two caps per (seed): every scenario rode a fork, and
+                // exactly the non-first group members paid a restore.
+                assert!(forked.stats.iter().all(|s| s.forks == 1));
+                let restores: u64 = forked.stats.iter().map(|s| s.restores).sum();
+                assert_eq!(restores, grid.len() as u64 / grid.caps.len() as u64);
+            }
+        }
+        // All-divergent grid: forked IS streaming, fork counters zero.
+        let plain = small_grid();
+        let forked = run_sweep_forked(&twin, &plain, 2);
+        assert_eq!(forked, run_sweep_streaming(&twin, &plain, 2));
+        assert!(forked.stats.iter().all(|s| s.forks == 0 && s.restores == 0));
     }
 
     #[test]

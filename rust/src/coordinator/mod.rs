@@ -604,6 +604,19 @@ impl Twin {
         crate::campaign::run_sweep_streaming(self, grid, threads)
     }
 
+    /// The same grid on the divergence-tree engine: scenarios sharing a
+    /// prefix up to the grid's deferred cap move are forked from one
+    /// snapshot instead of each replaying the whole day (CLI:
+    /// `leonardo-twin sweep --fork`). Byte-identical to [`Twin::sweep`]
+    /// modulo the fork bookkeeping columns.
+    pub fn sweep_forked(
+        &self,
+        grid: &crate::campaign::SweepGrid,
+        threads: usize,
+    ) -> crate::campaign::CampaignReport {
+        crate::campaign::run_sweep_forked(self, grid, threads)
+    }
+
     /// §2.2 latency budget table.
     pub fn latency_table(&self) -> Table {
         let mut t = Table::new(

@@ -51,7 +51,7 @@ COMMANDS:
               identical for any thread count)
                        [--jobs N] [--seed S] [--seeds K] [--caps LIST]
                        [--mixes LIST] [--threads T] [--coupled] [--routing P]
-                       [--policy LIST]
+                       [--policy LIST] [--cap-time SEC] [--fork]
   calibrate   Measure the AOT kernels through PJRT
   all         Every table in paper order              [--calibrated]
 
@@ -82,6 +82,15 @@ OPTIONS:
   --policy LIST     operations: one placement policy; sweep: comma-
                     separated policy axis (pack = fullest-first packing,
                     spread = link-aware anti-fragmentation; default pack)
+  --cap-time SEC    sweep: defer every cap level to arrive SEC seconds
+                    into the day as a CapChange event instead of at t=0
+                    (default 0 = caps apply from the start); required
+                    > 0 for --fork to have prefixes to share
+  --fork            sweep: divergence-tree engine — scenarios differing
+                    only in the (deferred) cap level share one simulated
+                    prefix per worker and fork at the cap move; report
+                    byte-identical to the streaming engine apart from
+                    the Forks/Restores bookkeeping columns
 ";
 
 struct Args {
@@ -100,6 +109,8 @@ struct Args {
     coupled: bool,
     routing: String,
     policy: String,
+    cap_time: f64,
+    fork: bool,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -121,6 +132,8 @@ fn parse_args() -> Result<Args, String> {
         coupled: false,
         routing: "minimal".to_string(),
         policy: "pack".to_string(),
+        cap_time: 0.0,
+        fork: false,
     };
     while let Some(a) = argv.next() {
         match a.as_str() {
@@ -128,6 +141,14 @@ fn parse_args() -> Result<Args, String> {
             "--calibrated" => args.calibrated = true,
             "--dot" => args.dot = true,
             "--coupled" => args.coupled = true,
+            "--fork" => args.fork = true,
+            "--cap-time" => {
+                args.cap_time = argv
+                    .next()
+                    .ok_or("--cap-time needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--cap-time: {e}"))?
+            }
             "--routing" => args.routing = argv.next().ok_or("--routing needs a value")?,
             "--policy" => args.policy = argv.next().ok_or("--policy needs a value")?,
             "--artifacts" => {
@@ -229,10 +250,16 @@ fn sweep_inputs(args: &Args) -> anyhow::Result<(SweepGrid, usize, Routing, Coupl
     let threads = parse_threads(args.threads)?;
     let (routing, coupling) = routing_and_coupling(args)?;
     anyhow::ensure!(args.seeds > 0, "--seeds must be at least 1");
+    anyhow::ensure!(
+        args.cap_time.is_finite() && args.cap_time >= 0.0,
+        "--cap-time {} must be a finite number of seconds >= 0",
+        args.cap_time
+    );
     let seeds: Vec<u64> = (0..args.seeds).map(|k| args.seed + k).collect();
     let grid = SweepGrid::new(seeds, caps, mixes, args.jobs.unwrap_or(2_000))?
         .with_coupling(coupling)
-        .with_policies(policies);
+        .with_policies(policies)
+        .with_cap_time(args.cap_time);
     Ok((grid, threads, routing, coupling))
 }
 
@@ -339,7 +366,11 @@ fn main() -> anyhow::Result<()> {
                     Routing::Adaptive => ", adaptive routing",
                 },
             );
-            let report = twin.sweep(&grid, threads);
+            let report = if args.fork {
+                twin.sweep_forked(&grid, threads)
+            } else {
+                twin.sweep(&grid, threads)
+            };
             print(&report.scenario_table(), md);
             print(&report.cap_table(), md);
             if grid.policies.len() > 1 {
@@ -445,6 +476,8 @@ mod tests {
             coupled: false,
             routing: "minimal".to_string(),
             policy: "pack".to_string(),
+            cap_time: 0.0,
+            fork: false,
         }
     }
 
@@ -502,6 +535,28 @@ mod tests {
         let mut a = args();
         a.cap_mw = Some(6.0);
         assert!(sweep_inputs(&a).is_err(), "--cap accepted by sweep");
+
+        let mut a = args();
+        a.cap_time = -5.0;
+        assert!(sweep_inputs(&a).is_err(), "negative --cap-time accepted");
+
+        let mut a = args();
+        a.cap_time = f64::NAN;
+        assert!(sweep_inputs(&a).is_err(), "NaN --cap-time accepted");
+    }
+
+    /// `--cap-time` flows into the grid; `--fork` is a pure engine
+    /// selector that changes no grid input.
+    #[test]
+    fn sweep_inputs_wires_cap_time() {
+        let mut a = args();
+        a.cap_time = 7200.0;
+        a.fork = true;
+        let (grid, _, _, _) = sweep_inputs(&a).unwrap();
+        assert_eq!(grid.cap_time, 7200.0);
+        assert!(grid.scenarios().iter().all(|s| s.cap_time == 7200.0));
+        let (plain, _, _, _) = sweep_inputs(&args()).unwrap();
+        assert_eq!(plain.cap_time, 0.0);
     }
 
     /// The shared operations/sweep flag resolution enforces the

@@ -528,6 +528,23 @@ pub struct CongestionTracker {
     pub link_series: crate::telemetry::Series,
     peak: f64,
     peak_link: f64,
+    /// Internal snapshot slot ([`Component::snapshot`]). The cell/link
+    /// key sets never change after construction, so the snapshot only
+    /// carries values (in map iteration order) and series length marks.
+    snap: Option<Box<TrackerSnapshot>>,
+}
+
+/// Saved [`CongestionTracker`] run state: per-cell and per-link cross
+/// counts in `BTreeMap` iteration order, the run peaks, and how long
+/// each sample series was (restore truncates, never reallocates).
+#[derive(Debug, Clone, Default)]
+struct TrackerSnapshot {
+    cells: Vec<u32>,
+    links: Vec<u32>,
+    peak: f64,
+    peak_link: f64,
+    series_len: usize,
+    link_series_len: usize,
 }
 
 impl CongestionTracker {
@@ -568,6 +585,7 @@ impl CongestionTracker {
             link_series: crate::telemetry::Series::default(),
             peak: 0.0,
             peak_link: 0.0,
+            snap: None,
         }
     }
 
@@ -738,6 +756,37 @@ impl Component for CongestionTracker {
             link_sum / self.links.len() as f64
         };
         self.link_series.push(now, link_mean);
+    }
+
+    fn snapshot(&mut self) {
+        let mut snap = self.snap.take().unwrap_or_default();
+        snap.cells.clear();
+        snap.cells.extend(self.cells.values().map(|c| c.cross_nodes));
+        snap.links.clear();
+        snap.links.extend(self.links.values().map(|l| l.cross_nodes));
+        snap.peak = self.peak;
+        snap.peak_link = self.peak_link;
+        snap.series_len = self.series.len();
+        snap.link_series_len = self.link_series.len();
+        self.snap = Some(snap);
+    }
+
+    fn restore(&mut self) {
+        let snap = self
+            .snap
+            .take()
+            .expect("CongestionTracker::restore without a prior snapshot");
+        for (c, &cross) in self.cells.values_mut().zip(&snap.cells) {
+            c.cross_nodes = cross;
+        }
+        for (l, &cross) in self.links.values_mut().zip(&snap.links) {
+            l.cross_nodes = cross;
+        }
+        self.peak = snap.peak;
+        self.peak_link = snap.peak_link;
+        self.series.truncate(snap.series_len);
+        self.link_series.truncate(snap.link_series_len);
+        self.snap = Some(snap);
     }
 }
 
@@ -1034,6 +1083,34 @@ mod tests {
         t.reset();
         assert_eq!(t.peak_link_load(), 0.0);
         assert!(t.link_series.is_empty());
+    }
+
+    /// snapshot → perturb → restore rewinds loads, peaks and both sample
+    /// series to the snapshot point so a replayed suffix matches the
+    /// unperturbed run exactly.
+    #[test]
+    fn tracker_snapshot_restore_round_trips() {
+        use crate::sim::{Component, Event};
+        let mut out = Vec::new();
+        let mut t = CongestionTracker::new([(0, 180), (1, 180), (2, 180)]);
+        let start = |job, cells: Vec<(u32, u32)>| Event::Start {
+            job,
+            booster: true,
+            dvfs_scale: 1.0,
+            cells: cells.into(),
+        };
+        t.on_event(0.0, &start(1, vec![(0, 90), (1, 90)]), &mut out);
+        t.snapshot();
+        t.on_event(1.0, &start(2, vec![(1, 90), (2, 90)]), &mut out);
+        t.restore();
+        assert!((t.link_load(0, 1) - 0.5).abs() < 1e-12);
+        assert_eq!(t.link_cross_nodes(1, 2), 0);
+        assert_eq!(t.series.len(), 1);
+        assert_eq!(t.link_series.len(), 1);
+        // Replaying the same suffix reproduces the perturbed state.
+        t.on_event(1.0, &start(2, vec![(1, 90), (2, 90)]), &mut out);
+        assert_eq!(t.link_cross_nodes(1, 2), 180);
+        assert_eq!(t.series.len(), 2);
     }
 
     #[test]

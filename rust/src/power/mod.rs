@@ -201,6 +201,21 @@ pub struct PowerMonitor {
     dyn_weight: f64,
     running: BTreeMap<u64, (u32, f64)>,
     pub store: MetricStore,
+    /// Internal snapshot slot ([`Component::snapshot`]): accounting
+    /// state plus per-series length marks, buffers reused.
+    snap: Option<Box<MonitorSnapshot>>,
+}
+
+/// Saved [`PowerMonitor`] run state: busy/dynamic-power accounting, the
+/// tracked-job table as a sorted pair list (the `BTreeMap`'s node
+/// allocations can't be retained, the flat buffer can), and a length
+/// mark per metric series.
+#[derive(Debug, Clone, Default)]
+struct MonitorSnapshot {
+    busy_nodes: u32,
+    dyn_weight: f64,
+    running: Vec<(u64, (u32, f64))>,
+    marks: Vec<(String, usize)>,
 }
 
 impl PowerMonitor {
@@ -214,6 +229,7 @@ impl PowerMonitor {
             dyn_weight: 0.0,
             running: BTreeMap::new(),
             store: MetricStore::default(),
+            snap: None,
         }
     }
 
@@ -311,6 +327,30 @@ impl Component for PowerMonitor {
             }
             _ => {}
         }
+    }
+
+    fn snapshot(&mut self) {
+        let mut snap = self.snap.take().unwrap_or_default();
+        snap.busy_nodes = self.busy_nodes;
+        snap.dyn_weight = self.dyn_weight;
+        snap.running.clear();
+        snap.running
+            .extend(self.running.iter().map(|(&k, &v)| (k, v)));
+        self.store.save_marks(&mut snap.marks);
+        self.snap = Some(snap);
+    }
+
+    fn restore(&mut self) {
+        let snap = self
+            .snap
+            .take()
+            .expect("PowerMonitor::restore without a prior snapshot");
+        self.busy_nodes = snap.busy_nodes;
+        self.dyn_weight = snap.dyn_weight;
+        self.running.clear();
+        self.running.extend(snap.running.iter().copied());
+        self.store.restore_marks(&snap.marks);
+        self.snap = Some(snap);
     }
 }
 
@@ -531,6 +571,28 @@ mod tests {
             &mut out,
         );
         assert_eq!(mon.store.get("facility_power_w").unwrap().len(), before);
+    }
+
+    /// snapshot → perturb → restore leaves accounting and series exactly
+    /// where the snapshot was taken, so a replayed suffix reproduces the
+    /// unperturbed run sample-for-sample.
+    #[test]
+    fn monitor_snapshot_restore_round_trips() {
+        let mut out = Vec::new();
+        let mut mon = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
+        mon.on_event(0.0, &start_ev(1, 1000, 1.0), &mut out);
+        mon.snapshot();
+        let w_at_snap = mon.facility_w();
+        mon.on_event(50.0, &start_ev(2, 500, 0.8), &mut out);
+        mon.on_event(80.0, &end_ev(1, 1000), &mut out);
+        mon.restore();
+        assert_eq!(mon.busy_nodes(), 1000);
+        assert!((mon.facility_w() - w_at_snap).abs() < 1e-9);
+        assert_eq!(mon.store.get("facility_power_w").unwrap().len(), 1);
+        // Replaying the same suffix lands in the same state.
+        mon.on_event(50.0, &start_ev(2, 500, 0.8), &mut out);
+        assert_eq!(mon.busy_nodes(), 1500);
+        assert_eq!(mon.store.get("facility_power_w").unwrap().len(), 2);
     }
 
     #[test]

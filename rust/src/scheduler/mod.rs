@@ -97,7 +97,9 @@ use std::sync::Arc;
 use crate::config::{CellKind, MachineConfig};
 use crate::network::{link_contributions, placement_backgrounds, Network, Placement};
 use crate::power::{PowerModel, Utilization};
-use crate::sim::{Cells, Component, Event, ScheduledEvent, SimTime, Simulation, TIME_EPS};
+use crate::sim::{
+    Cells, Component, Event, ScheduledEvent, SimSnapshot, SimTime, Simulation, TIME_EPS,
+};
 use crate::topology::{cell_pair_count, cell_pair_index, Topology};
 
 /// Target partition of a job.
@@ -729,53 +731,15 @@ impl Scheduler {
 
     fn run_mode(
         &mut self,
-        mut jobs: Vec<Job>,
+        jobs: Vec<Job>,
         extra_events: Vec<ScheduledEvent>,
         observers: &mut [&mut dyn Component],
         optimized: bool,
     ) -> BTreeMap<u64, JobRecord> {
-        assert!(
-            !(self.coupling.congestion && self.net.is_none()),
-            "congestion coupling needs a network model: use Scheduler::with_coupling \
-             or set Scheduler::net"
-        );
-        jobs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time).then(a.id.cmp(&b.id)));
         let mut sim = Simulation::new();
-        for job in &jobs {
-            // Virtual time starts at 0: the legacy loop admitted any
-            // earlier submit at t=0, so clamp to keep that behaviour.
-            sim.schedule(job.submit_time.max(0.0), Event::Submit { job: job.id });
-        }
-        for se in extra_events {
-            sim.schedule(se.time, se.event);
-        }
-        let (records, retimes_elided) = {
-            let mut engine = JobEngine::new(self, jobs, optimized);
-            {
-                let mut comps: Vec<&mut dyn Component> = Vec::with_capacity(1 + observers.len());
-                comps.push(&mut engine);
-                for o in observers.iter_mut() {
-                    comps.push(&mut **o);
-                }
-                sim.run(&mut comps);
-            }
-            assert!(
-                engine.queue.is_empty(),
-                "scheduler stuck: {} jobs can never be placed",
-                engine.queue.len()
-            );
-            debug_assert!(
-                engine.coupled.is_empty(),
-                "coupled jobs left running: {}",
-                engine.coupled.len()
-            );
-            (std::mem::take(&mut engine.records), engine.retimes_elided)
-        };
-        self.last_run = RunCounters {
-            events_skipped: sim.events_skipped(),
-            retimes_elided,
-        };
-        records
+        let mut session = ReplaySession::with_mode(&mut sim, self, jobs, extra_events, optimized);
+        session.run_to_end(observers);
+        session.finish()
     }
 
     /// The legacy scan-and-rescan loop (the seed implementation):
@@ -1284,6 +1248,44 @@ struct JobEngine<'a> {
     sensitive: usize,
     /// Re-time evaluations elided this run (see [`RunCounters`]).
     retimes_elided: u64,
+    /// Internal snapshot slot ([`Component::snapshot`]): boxed so an
+    /// engine that never snapshots pays one pointer, and repeated
+    /// snapshots reuse every buffer inside.
+    snap: Option<Box<EngineSnapshot>>,
+}
+
+/// Point-in-time image of a [`JobEngine`] *and* the scheduler-side
+/// state it drives (pool free counts, policy-facing cross view, O(1)
+/// counters, power cap). Run-constant state (job table, id index, cell
+/// totals, coupling/policy config) is not captured — a snapshot is only
+/// valid for the session that took it. Maps are saved as sorted pair
+/// vectors so the save side is a buffer reuse, not a tree clone.
+#[derive(Debug, Clone, Default)]
+struct EngineSnapshot {
+    booster_free: Vec<u32>,
+    dc_free: Vec<u32>,
+    placed_cross: Vec<u32>,
+    free: [u32; 2],
+    power_cap: Option<PowerCap>,
+    queue: Vec<QEntry>,
+    running: Vec<((SimTime, u64), RunEntry)>,
+    start_seq: u64,
+    running_nodes: u32,
+    records: Vec<(u64, JobRecord)>,
+    dirty: bool,
+    min_queued_lb: [u32; 2],
+    queued: [u32; 2],
+    scan_from: usize,
+    coupled: Vec<(u64, CoupledJob)>,
+    cell_cross: Vec<u32>,
+    link_cross: Vec<u32>,
+    recouple: bool,
+    rescale: bool,
+    cell_jobs: Vec<Vec<u64>>,
+    cell_dirty: Vec<bool>,
+    dirty_cells: Vec<u32>,
+    sensitive: usize,
+    retimes_elided: u64,
 }
 
 impl<'a> JobEngine<'a> {
@@ -1335,7 +1337,87 @@ impl<'a> JobEngine<'a> {
             retime_ids: Vec::new(),
             sensitive: 0,
             retimes_elided: 0,
+            snap: None,
         }
+    }
+
+    /// Fill `snap` with the engine's (and its scheduler's) mutable run
+    /// state. Every buffer in `snap` is reused — clear+extend or
+    /// `clone_from`, never a fresh collection.
+    fn save_state_into(&self, snap: &mut EngineSnapshot) {
+        snap.booster_free.clear();
+        snap.booster_free
+            .extend(self.sched.booster.iter().map(|p| p.free));
+        snap.dc_free.clear();
+        snap.dc_free.extend(self.sched.dc.iter().map(|p| p.free));
+        snap.placed_cross.clone_from(&self.sched.placed_cross);
+        snap.free = self.sched.free;
+        snap.power_cap = self.sched.power_cap;
+        snap.queue.clone_from(&self.queue);
+        snap.running.clear();
+        snap.running.extend(self.running.iter().map(|(&k, &v)| (k, v)));
+        snap.start_seq = self.start_seq;
+        snap.running_nodes = self.running_nodes;
+        snap.records.clear();
+        snap.records
+            .extend(self.records.iter().map(|(&k, v)| (k, v.clone())));
+        snap.dirty = self.dirty;
+        snap.min_queued_lb = self.min_queued_lb;
+        snap.queued = self.queued;
+        snap.scan_from = self.scan_from;
+        snap.coupled.clear();
+        snap.coupled
+            .extend(self.coupled.iter().map(|(&k, v)| (k, v.clone())));
+        snap.cell_cross.clone_from(&self.cell_cross);
+        snap.link_cross.clone_from(&self.link_cross);
+        snap.recouple = self.recouple;
+        snap.rescale = self.rescale;
+        snap.cell_jobs.clone_from(&self.cell_jobs);
+        snap.cell_dirty.clone_from(&self.cell_dirty);
+        snap.dirty_cells.clone_from(&self.dirty_cells);
+        snap.sensitive = self.sensitive;
+        snap.retimes_elided = self.retimes_elided;
+    }
+
+    /// Rewind the engine (and its scheduler) to the state `snap` holds.
+    /// The generation stamps inside `coupled` come back exactly as
+    /// saved, so any stale `End` restored into the kernel queue is
+    /// re-skipped at pop time with the same accounting as the original
+    /// run — `events_skipped` stays report-neutral across a fork.
+    fn load_state_from(&mut self, snap: &EngineSnapshot) {
+        for (pool, &free) in self.sched.booster.iter_mut().zip(&snap.booster_free) {
+            pool.free = free;
+        }
+        for (pool, &free) in self.sched.dc.iter_mut().zip(&snap.dc_free) {
+            pool.free = free;
+        }
+        self.sched.placed_cross.clone_from(&snap.placed_cross);
+        self.sched.free = snap.free;
+        self.sched.power_cap = snap.power_cap;
+        self.queue.clone_from(&snap.queue);
+        self.running.clear();
+        self.running.extend(snap.running.iter().copied());
+        self.start_seq = snap.start_seq;
+        self.running_nodes = snap.running_nodes;
+        self.records.clear();
+        self.records
+            .extend(snap.records.iter().map(|(k, v)| (*k, v.clone())));
+        self.dirty = snap.dirty;
+        self.min_queued_lb = snap.min_queued_lb;
+        self.queued = snap.queued;
+        self.scan_from = snap.scan_from;
+        self.coupled.clear();
+        self.coupled
+            .extend(snap.coupled.iter().map(|(k, v)| (*k, v.clone())));
+        self.cell_cross.clone_from(&snap.cell_cross);
+        self.link_cross.clone_from(&snap.link_cross);
+        self.recouple = snap.recouple;
+        self.rescale = snap.rescale;
+        self.cell_jobs.clone_from(&snap.cell_jobs);
+        self.cell_dirty.clone_from(&snap.cell_dirty);
+        self.dirty_cells.clone_from(&snap.dirty_cells);
+        self.sensitive = snap.sensitive;
+        self.retimes_elided = snap.retimes_elided;
     }
 
     /// True unless the free-vs-lower-bound prune proves no queued job
@@ -1953,6 +2035,173 @@ impl Component for JobEngine<'_> {
             },
             _ => true,
         }
+    }
+
+    fn snapshot(&mut self) {
+        let mut snap = self.snap.take().unwrap_or_default();
+        self.save_state_into(&mut snap);
+        self.snap = Some(snap);
+    }
+
+    fn restore(&mut self) {
+        let snap = self
+            .snap
+            .take()
+            .expect("JobEngine::restore without a prior snapshot");
+        self.load_state_from(&snap);
+        self.snap = Some(snap);
+    }
+}
+
+/// A resumable replay over a caller-owned [`Simulation`] arena — the
+/// in-flight form of [`Scheduler::run_with`] (which is now a thin
+/// wrapper over it). Where `run_with` drives a private kernel to
+/// exhaustion, a session exposes the run as first-class state: run to a
+/// time limit, [`ReplaySession::snapshot`] every layer, keep going,
+/// [`ReplaySession::restore`], and replay a different suffix. That
+/// snapshot/fork/replay cycle is what the campaign's divergence-tree
+/// sweeps use to simulate a shared scenario prefix once.
+///
+/// Injected `extra_events` are scheduled in the *divergent sequence
+/// band* ([`crate::sim::DIVERGENT_SEQ_BASE`], ranked by list position),
+/// so they tie-break after every runtime-emitted event at the same
+/// timestamp whether they were queued upfront (streaming sweep) or
+/// pushed after a fork ([`ReplaySession::schedule_ranked`]) — the
+/// invariant that keeps forked suffixes byte-identical to full replays.
+pub struct ReplaySession<'a> {
+    sim: &'a mut Simulation,
+    engine: JobEngine<'a>,
+    sim_snap: SimSnapshot,
+}
+
+impl<'a> ReplaySession<'a> {
+    /// Open a session on the optimized engine. `sim` is reset (queue
+    /// cleared allocation-retained, clock and counters rewound) and
+    /// seeded with the jobs' `Submit`s plus `extra_events` in the
+    /// divergent band.
+    pub fn new(
+        sim: &'a mut Simulation,
+        sched: &'a mut Scheduler,
+        jobs: Vec<Job>,
+        extra_events: Vec<ScheduledEvent>,
+    ) -> Self {
+        Self::with_mode(sim, sched, jobs, extra_events, true)
+    }
+
+    fn with_mode(
+        sim: &'a mut Simulation,
+        sched: &'a mut Scheduler,
+        mut jobs: Vec<Job>,
+        extra_events: Vec<ScheduledEvent>,
+        optimized: bool,
+    ) -> Self {
+        assert!(
+            !(sched.coupling.congestion && sched.net.is_none()),
+            "congestion coupling needs a network model: use Scheduler::with_coupling \
+             or set Scheduler::net"
+        );
+        jobs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time).then(a.id.cmp(&b.id)));
+        sim.reset();
+        for job in &jobs {
+            // Virtual time starts at 0: the legacy loop admitted any
+            // earlier submit at t=0, so clamp to keep that behaviour.
+            sim.schedule(job.submit_time.max(0.0), Event::Submit { job: job.id });
+        }
+        for (rank, se) in extra_events.into_iter().enumerate() {
+            sim.schedule_ranked(se.time, se.event, rank as u64);
+        }
+        let engine = JobEngine::new(sched, jobs, optimized);
+        ReplaySession {
+            sim,
+            engine,
+            sim_snap: SimSnapshot::default(),
+        }
+    }
+
+    /// Inject one event into the divergent band mid-session — the fork
+    /// path pushes a scenario's cap move here after restoring. Ranks
+    /// must not collide with still-pending injected events at the same
+    /// timestamp.
+    pub fn schedule_ranked(&mut self, time: f64, event: Event, rank: u64) {
+        self.sim.schedule_ranked(time, event, rank);
+    }
+
+    /// Advance until the queue is exhausted or the next batch would
+    /// start at `t_limit` or later.
+    pub fn run_until(&mut self, t_limit: f64, observers: &mut [&mut dyn Component]) {
+        let mut comps: Vec<&mut dyn Component> = Vec::with_capacity(1 + observers.len());
+        comps.push(&mut self.engine);
+        for o in observers.iter_mut() {
+            comps.push(&mut **o);
+        }
+        self.sim.run_until(t_limit, &mut comps);
+    }
+
+    /// Run to queue exhaustion.
+    pub fn run_to_end(&mut self, observers: &mut [&mut dyn Component]) {
+        self.run_until(f64::INFINITY, observers);
+    }
+
+    /// Capture every layer — kernel (queue, clock, counters), engine +
+    /// scheduler-side state, and each observer's internal slot. Repeat
+    /// snapshots reuse every buffer.
+    pub fn snapshot(&mut self, observers: &mut [&mut dyn Component]) {
+        self.sim.save_into(&mut self.sim_snap);
+        self.engine.snapshot();
+        for o in observers.iter_mut() {
+            o.snapshot();
+        }
+    }
+
+    /// Rewind every layer to the last [`ReplaySession::snapshot`]. The
+    /// observer list must match the one the snapshot saw.
+    pub fn restore(&mut self, observers: &mut [&mut dyn Component]) {
+        self.sim.restore_from(&self.sim_snap);
+        self.engine.restore();
+        for o in observers.iter_mut() {
+            o.restore();
+        }
+    }
+
+    /// Per-job records completed (or provisionally running) so far.
+    pub fn records(&self) -> &BTreeMap<u64, JobRecord> {
+        &self.engine.records
+    }
+
+    /// The session's job table (sorted by `(submit_time, id)`).
+    pub fn jobs(&self) -> &[Job] {
+        &self.engine.jobs
+    }
+
+    /// Kernel skip counter + retime elisions of the session so far.
+    pub fn counters(&self) -> RunCounters {
+        RunCounters {
+            events_skipped: self.sim.events_skipped(),
+            retimes_elided: self.engine.retimes_elided,
+        }
+    }
+
+    /// Assert the workload fully drained (every job placed and done).
+    pub fn assert_complete(&self) {
+        assert!(
+            self.engine.queue.is_empty(),
+            "scheduler stuck: {} jobs can never be placed",
+            self.engine.queue.len()
+        );
+        debug_assert!(
+            self.engine.coupled.is_empty(),
+            "coupled jobs left running: {}",
+            self.engine.coupled.len()
+        );
+    }
+
+    /// Close the session: assert completion, publish the counters into
+    /// [`Scheduler::last_run`] and hand back the records.
+    pub fn finish(mut self) -> BTreeMap<u64, JobRecord> {
+        self.assert_complete();
+        let counters = self.counters();
+        self.engine.sched.last_run = counters;
+        std::mem::take(&mut self.engine.records)
     }
 }
 

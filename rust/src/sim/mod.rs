@@ -68,6 +68,16 @@ pub type Cells = Arc<[(u32, u32)]>;
 /// processed with the batch (inherited from the legacy scheduler loop).
 pub const TIME_EPS: f64 = 1e-9;
 
+/// Sequence-number floor for *divergent* events: injected scenario
+/// events (cap moves scheduled upfront by a streaming sweep, or pushed
+/// at fork time by a divergence-tree sweep) are stamped
+/// `DIVERGENT_SEQ_BASE + rank` instead of the running FIFO counter, so
+/// they tie-break after every runtime-emitted event at the same
+/// timestamp *no matter when they were pushed*. That is what keeps a
+/// forked suffix byte-identical to an uninterrupted replay that had the
+/// same event sitting in the queue from t=0.
+pub const DIVERGENT_SEQ_BASE: u64 = 1 << 63;
+
 /// Totally ordered wrapper over `f64` seconds (orders by `total_cmp`;
 /// pushes assert finiteness so NaN never enters the queue).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -195,6 +205,16 @@ pub trait Component {
     fn accept_event(&mut self, _now: f64, _ev: &Event) -> bool {
         true
     }
+
+    /// Capture the component's run state into an internal snapshot slot
+    /// (the component owns its buffer so repeated snapshots reuse the
+    /// allocation). Default: stateless component, nothing to save.
+    fn snapshot(&mut self) {}
+
+    /// Restore the state captured by the last [`Component::snapshot`].
+    /// Calling it without a prior snapshot is a contract violation;
+    /// implementations may panic. Default: stateless, nothing to do.
+    fn restore(&mut self) {}
 }
 
 /// Monotone virtual clock, seconds.
@@ -261,8 +281,36 @@ impl EventQueue {
         self.seq += 1;
     }
 
+    /// Push with an explicit sequence number in the divergent band
+    /// (`DIVERGENT_SEQ_BASE + rank`) instead of the FIFO counter. The
+    /// counter is *not* advanced, so the ordering of normal pushes is
+    /// unaffected. Callers must use distinct ranks per timestamp —
+    /// duplicate `(time, seq)` keys would leave the tie order at the
+    /// heap's mercy.
+    pub fn push_ranked(&mut self, time: f64, event: Event, rank: u64) {
+        assert!(time.is_finite(), "non-finite event time {time}");
+        self.heap.push(Reverse(Entry {
+            time: SimTime(time),
+            seq: DIVERGENT_SEQ_BASE + rank,
+            event,
+        }));
+    }
+
     pub fn pop(&mut self) -> Option<(f64, Event)> {
         self.heap.pop().map(|Reverse(e)| (e.time.0, e.event))
+    }
+
+    /// Drop every pending event and rewind the FIFO counter, keeping the
+    /// heap's backing allocation (arena reuse across scenarios).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+    }
+
+    /// Capacity of the backing heap allocation — asserted stable by the
+    /// arena identity test so snapshot churn never reallocates.
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
     }
 
     /// Timestamp of the earliest pending event.
@@ -287,6 +335,19 @@ impl EventQueue {
     }
 }
 
+/// A saved point-in-time image of a [`Simulation`]: clock, pending
+/// events (with their `(time, seq)` stamps intact) and dispatch
+/// counters. Produced by [`Simulation::save_into`] into a caller-owned
+/// buffer so repeated snapshots reuse the entry allocation.
+#[derive(Debug, Clone, Default)]
+pub struct SimSnapshot {
+    now: f64,
+    entries: Vec<Entry>,
+    seq: u64,
+    events_processed: u64,
+    events_skipped: u64,
+}
+
 /// The driver: clock + queue + dispatch loop.
 #[derive(Debug, Clone, Default)]
 pub struct Simulation {
@@ -305,6 +366,52 @@ impl Simulation {
         self.queue.push(time, event);
     }
 
+    /// Schedule in the divergent sequence band (see
+    /// [`EventQueue::push_ranked`]).
+    pub fn schedule_ranked(&mut self, time: f64, event: Event, rank: u64) {
+        self.queue.push_ranked(time, event, rank);
+    }
+
+    /// Clear every pending event and rewind clock and counters to zero,
+    /// keeping the queue's heap allocation (arena reuse).
+    pub fn reset(&mut self) {
+        self.queue.clear();
+        self.clock = Clock::default();
+        self.events_processed = 0;
+        self.events_skipped = 0;
+    }
+
+    /// Capture the current state into `snap`, reusing its entry buffer.
+    /// The heap is walked in internal order — arbitrary but paired with
+    /// [`Simulation::restore_from`], which rebuilds a heap whose pop
+    /// order is fully determined by the unique `(time, seq)` keys, so
+    /// restored runs are bit-for-bit identical regardless of internal
+    /// arrangement.
+    pub fn save_into(&self, snap: &mut SimSnapshot) {
+        snap.now = self.clock.now();
+        snap.entries.clear();
+        snap.entries
+            .extend(self.queue.heap.iter().map(|Reverse(e)| e.clone()));
+        snap.seq = self.queue.seq;
+        snap.events_processed = self.events_processed;
+        snap.events_skipped = self.events_skipped;
+    }
+
+    /// Restore the state captured by [`Simulation::save_into`]. The
+    /// clock is rebuilt from zero, so restoring *backwards* (the fork
+    /// case: run a suffix, rewind, run another) is allowed.
+    pub fn restore_from(&mut self, snap: &SimSnapshot) {
+        self.queue.heap.clear();
+        self.queue
+            .heap
+            .extend(snap.entries.iter().cloned().map(Reverse));
+        self.queue.seq = snap.seq;
+        self.clock = Clock::default();
+        self.clock.advance_to(snap.now);
+        self.events_processed = snap.events_processed;
+        self.events_skipped = snap.events_skipped;
+    }
+
     /// Run to queue exhaustion. Returns the number of events dispatched.
     ///
     /// One scratch buffer is reused for every `on_event`/`on_quiescent`
@@ -312,8 +419,19 @@ impl Simulation {
     /// drains it into the queue, so steady-state dispatch allocates
     /// nothing.
     pub fn run(&mut self, components: &mut [&mut dyn Component]) -> u64 {
+        self.run_until(f64::INFINITY, components)
+    }
+
+    /// Run until the queue is exhausted or the next batch would start at
+    /// `t_limit` or later, leaving that batch (and everything after it)
+    /// queued. Returns the number of events dispatched so far. With
+    /// `t_limit = f64::INFINITY` this is exactly [`Simulation::run`].
+    pub fn run_until(&mut self, t_limit: f64, components: &mut [&mut dyn Component]) -> u64 {
         let mut out: Vec<ScheduledEvent> = Vec::new();
         while let Some(t) = self.queue.next_time() {
+            if t >= t_limit {
+                break;
+            }
             self.clock.advance_to(t);
             // Drain the batch: everything at exactly t, plus Ends within
             // TIME_EPS of it. Events scheduled during the batch at <= t
@@ -614,6 +732,145 @@ mod tests {
         assert_eq!(p.log.len(), 1);
         assert_eq!(p.log[0].1.job(), Some(9));
         assert_eq!(p.log[0].1.nodes(), 0);
+    }
+
+    /// A ranked (divergent-band) event at a shared timestamp pops after
+    /// every normally-pushed event at that time, whether it was pushed
+    /// first or last — the invariant that makes fork-time injection
+    /// byte-identical to upfront scheduling.
+    #[test]
+    fn ranked_events_sort_after_equal_time_normal_pushes() {
+        let run = |ranked_first: bool| {
+            let mut q = EventQueue::default();
+            if ranked_first {
+                q.push_ranked(5.0, Event::CapChange { cap_mw: Some(7.0) }, 0);
+            }
+            q.push(5.0, submit(1));
+            q.push(5.0, submit(2));
+            if !ranked_first {
+                q.push_ranked(5.0, Event::CapChange { cap_mw: Some(7.0) }, 0);
+            }
+            std::iter::from_fn(|| q.pop())
+                .map(|(_, e)| e.job())
+                .collect::<Vec<Option<JobId>>>()
+        };
+        let expected = vec![Some(1), Some(2), None];
+        assert_eq!(run(true), expected);
+        assert_eq!(run(false), expected);
+    }
+
+    /// Two ranked events at one timestamp pop in rank order.
+    #[test]
+    fn ranked_events_pop_in_rank_order() {
+        let mut q = EventQueue::default();
+        q.push_ranked(1.0, submit(2), 1);
+        q.push_ranked(1.0, submit(1), 0);
+        let order: Vec<JobId> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| e.job().unwrap())
+            .collect();
+        assert_eq!(order, vec![1, 2]);
+    }
+
+    /// `run_until` stops before the limit batch and leaves it queued;
+    /// resuming with `run` finishes identically to an uninterrupted run.
+    #[test]
+    fn run_until_stops_before_limit_and_resumes() {
+        let build = || {
+            let mut sim = Simulation::new();
+            for i in 0..6u64 {
+                sim.schedule(i as f64, submit(i));
+            }
+            sim
+        };
+        let mut whole = Probe::default();
+        build().run(&mut [&mut whole]);
+
+        let mut split = Probe::default();
+        let mut sim = build();
+        let n = sim.run_until(3.0, &mut [&mut split]);
+        assert_eq!(n, 3, "events at t=0,1,2 dispatched");
+        assert_eq!(sim.queue.len(), 3, "t=3,4,5 still queued");
+        assert_eq!(sim.queue.next_time(), Some(3.0));
+        sim.run(&mut [&mut split]);
+        assert_eq!(split.log, whole.log);
+    }
+
+    /// save_into / restore_from round-trips: run a prefix, snapshot,
+    /// run the suffix, restore, re-run the suffix — both suffixes match
+    /// the uninterrupted run bit-for-bit and counters rewind exactly.
+    #[test]
+    fn snapshot_restore_replays_suffix_identically() {
+        let build = |p: &mut Probe| {
+            let mut sim = Simulation::new();
+            for i in 0..8u64 {
+                sim.schedule((i % 4) as f64, submit(i));
+            }
+            sim.schedule(1.0, end_gen(90, 0)); // skipped by the gate
+            sim.schedule(3.0, end_gen(91, 1));
+            let mut gate = GenGate { floor: 1 };
+            sim.run_until(2.0, &mut [&mut gate, p]);
+            sim
+        };
+        let mut whole = Probe::default();
+        let mut sim_whole = build(&mut whole);
+        {
+            let mut gate = GenGate { floor: 1 };
+            sim_whole.run(&mut [&mut gate, &mut whole]);
+        }
+
+        let mut split = Probe::default();
+        let mut sim = build(&mut split);
+        let mut snap = SimSnapshot::default();
+        sim.save_into(&mut snap);
+        let processed_at_snap = sim.events_processed();
+        let skipped_at_snap = sim.events_skipped();
+        let prefix_len = split.log.len();
+        {
+            let mut gate = GenGate { floor: 1 };
+            sim.run(&mut [&mut gate, &mut split]);
+        }
+        let first_suffix: Vec<(f64, Event)> = split.log[prefix_len..].to_vec();
+        sim.restore_from(&snap);
+        assert_eq!(sim.events_processed(), processed_at_snap);
+        assert_eq!(sim.events_skipped(), skipped_at_snap);
+        // Clock restored to the last dispatched batch time (t=1), not
+        // the run_until limit.
+        assert!((sim.clock.now() - 1.0).abs() < 1e-12);
+        split.log.truncate(prefix_len);
+        {
+            let mut gate = GenGate { floor: 1 };
+            sim.run(&mut [&mut gate, &mut split]);
+        }
+        assert_eq!(split.log[prefix_len..], first_suffix[..]);
+        assert_eq!(split.log, whole.log);
+        assert_eq!(sim.events_processed(), sim_whole.events_processed());
+        assert_eq!(sim.events_skipped(), sim_whole.events_skipped());
+    }
+
+    /// `reset` and `restore_from` keep the queue's heap allocation.
+    #[test]
+    fn reset_and_restore_retain_queue_capacity() {
+        let mut sim = Simulation::new();
+        for i in 0..100u64 {
+            sim.schedule(i as f64, submit(i));
+        }
+        let cap = sim.queue.capacity();
+        assert!(cap >= 100);
+        let mut snap = SimSnapshot::default();
+        sim.save_into(&mut snap);
+        sim.reset();
+        assert_eq!(sim.queue.len(), 0);
+        assert_eq!(sim.queue.capacity(), cap, "reset reallocated the heap");
+        assert_eq!(sim.clock.now(), 0.0);
+        sim.restore_from(&snap);
+        assert_eq!(sim.queue.len(), 100);
+        assert_eq!(sim.queue.capacity(), cap, "restore reallocated the heap");
+        // Restored pops honour the saved (time, seq) order exactly.
+        let order: Vec<JobId> = std::iter::from_fn(|| sim.queue.pop())
+            .map(|(_, e)| e.job().unwrap())
+            .collect();
+        let expected: Vec<JobId> = (0..100).collect();
+        assert_eq!(order, expected);
     }
 
     #[test]

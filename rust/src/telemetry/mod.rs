@@ -45,6 +45,12 @@ impl Series {
         self.samples.clear();
     }
 
+    /// Rewind the series to its first `len` samples, keeping the buffer
+    /// allocated — the restore half of a snapshot mark.
+    pub fn truncate(&mut self, len: usize) {
+        self.samples.truncate(len);
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -110,6 +116,42 @@ impl MetricStore {
         for s in self.series.values_mut() {
             s.clear();
         }
+    }
+
+    /// Save a snapshot mark: the current length of every series, in key
+    /// order, into a caller-retained buffer (cleared and reused — no
+    /// fresh allocation once the name strings are warm).
+    pub fn save_marks(&self, marks: &mut Vec<(String, usize)>) {
+        // Reuse the existing String allocations where possible by
+        // overwriting in place before truncating/extending.
+        for (i, (name, s)) in self.series.iter().enumerate() {
+            if let Some(slot) = marks.get_mut(i) {
+                slot.0.clear();
+                slot.0.push_str(name);
+                slot.1 = s.len();
+            } else {
+                marks.push((name.clone(), s.len()));
+            }
+        }
+        marks.truncate(self.series.len());
+    }
+
+    /// Rewind every series to a mark saved by
+    /// [`MetricStore::save_marks`]. Series created after the mark (no
+    /// entry) are cleared; both mark list and store iterate in key
+    /// order, so one parallel walk suffices.
+    pub fn restore_marks(&mut self, marks: &[(String, usize)]) {
+        let mut it = marks.iter().peekable();
+        for (name, s) in &mut self.series {
+            match it.peek() {
+                Some((mark_name, len)) if mark_name == name => {
+                    s.truncate(*len);
+                    it.next();
+                }
+                _ => s.clear(),
+            }
+        }
+        debug_assert!(it.peek().is_none(), "snapshot mark for a vanished series");
     }
 
     pub fn get(&self, name: &str) -> Option<&Series> {
@@ -256,6 +298,19 @@ pub struct EventCounter {
     submitted: u64,
     started: u64,
     ended: u64,
+    /// Internal snapshot slot ([`Component::snapshot`]): counter values
+    /// plus per-series length marks, buffers reused across snapshots.
+    snap: Option<Box<CounterSnapshot>>,
+}
+
+/// Saved [`EventCounter`] state: the lifecycle totals and a length mark
+/// per store series (restore truncates rather than copies samples).
+#[derive(Debug, Clone, Default)]
+struct CounterSnapshot {
+    submitted: u64,
+    started: u64,
+    ended: u64,
+    marks: Vec<(String, usize)>,
 }
 
 impl EventCounter {
@@ -288,6 +343,27 @@ impl Component for EventCounter {
             Event::CapChange { .. } | Event::Retime { .. } => return,
         }
         self.sample(now);
+    }
+
+    fn snapshot(&mut self) {
+        let mut snap = self.snap.take().unwrap_or_default();
+        snap.submitted = self.submitted;
+        snap.started = self.started;
+        snap.ended = self.ended;
+        self.store.save_marks(&mut snap.marks);
+        self.snap = Some(snap);
+    }
+
+    fn restore(&mut self) {
+        let snap = self
+            .snap
+            .take()
+            .expect("EventCounter::restore without a prior snapshot");
+        self.submitted = snap.submitted;
+        self.started = snap.started;
+        self.ended = snap.ended;
+        self.store.restore_marks(&snap.marks);
+        self.snap = Some(snap);
     }
 }
 
@@ -386,6 +462,59 @@ mod tests {
         let t = store.energy_report();
         assert_eq!(t.rows.len(), 2);
         assert_eq!(store.names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn store_marks_rewind_series_and_clear_latecomers() {
+        let mut store = MetricStore::default();
+        store.record("a", 0.0, 1.0);
+        store.record("b", 0.0, 2.0);
+        store.record("b", 1.0, 3.0);
+        let mut marks = Vec::new();
+        store.save_marks(&mut marks);
+        assert_eq!(marks, vec![("a".into(), 1), ("b".into(), 2)]);
+        // Perturb: extend both, create a series unseen at mark time.
+        store.record("a", 5.0, 9.0);
+        store.record("b", 5.0, 9.0);
+        store.record("zz_new", 5.0, 9.0);
+        store.restore_marks(&marks);
+        assert_eq!(store.get("a").unwrap().len(), 1);
+        assert_eq!(store.get("b").unwrap().len(), 2);
+        assert_eq!(store.get("b").unwrap().last().unwrap().value, 3.0);
+        assert!(store.get("zz_new").unwrap().is_empty());
+        // Saving again reuses the mark buffer and sees the cleared
+        // latecomer at length zero.
+        store.save_marks(&mut marks);
+        assert_eq!(
+            marks,
+            vec![("a".into(), 1), ("b".into(), 2), ("zz_new".into(), 0)]
+        );
+    }
+
+    #[test]
+    fn event_counter_snapshot_restores_totals_and_gauges() {
+        let mut out = Vec::new();
+        let mut c = EventCounter::default();
+        c.on_event(0.0, &Event::Submit { job: 1 }, &mut out);
+        c.snapshot();
+        c.on_event(1.0, &Event::Submit { job: 2 }, &mut out);
+        c.on_event(
+            1.0,
+            &Event::Start {
+                job: 1,
+                booster: true,
+                dvfs_scale: 1.0,
+                cells: vec![(0, 8)].into(),
+            },
+            &mut out,
+        );
+        c.restore();
+        assert_eq!(c.totals(), (1, 0, 0));
+        assert_eq!(c.store.get("queue_depth").unwrap().len(), 1);
+        // The replayed suffix matches what the snapshot saw.
+        c.on_event(1.0, &Event::Submit { job: 2 }, &mut out);
+        assert_eq!(c.totals(), (2, 0, 0));
+        assert_eq!(c.store.get("queue_depth").unwrap().last().unwrap().value, 2.0);
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Campaign-sweep acceptance: the same scenario grid merged from 1, 2
 //! and 8 worker threads is bit-for-bit identical (work distribution is
-//! an atomic cursor, merge is by grid index), and the grid axes behave
-//! (caps throttle, mixes change the load shape, seeds vary arrivals).
+//! an atomic cursor, merge is by grid index), the divergence-tree
+//! forked engine reproduces streaming byte-for-byte modulo its fork
+//! counters, and the grid axes behave (caps throttle, mixes change the
+//! load shape, seeds vary arrivals).
 
 use leonardo_twin::campaign::{run_sweep, run_sweep_streaming, SweepGrid};
 use leonardo_twin::coordinator::Twin;
@@ -61,6 +63,53 @@ fn streaming_merge_is_identical_to_join_then_merge() {
         joined.scenario_table().to_markdown(),
         s8.scenario_table().to_markdown()
     );
+}
+
+/// The acceptance criterion for the divergence-tree engine: on the
+/// 24-scenario cap-axis grid with the cap deferred mid-day, the forked
+/// sweep report is byte-identical to `run_sweep_streaming` on the same
+/// grid for 1, 2 and 8 workers — modulo the `Forks`/`Restores`
+/// bookkeeping, which streaming leaves at zero — and the rendered
+/// tables agree after zeroing.
+#[test]
+fn forked_sweep_is_identical_to_streaming_across_thread_counts() {
+    use leonardo_twin::campaign::run_sweep_forked;
+    use leonardo_twin::scheduler::Coupling;
+
+    let twin = Twin::leonardo();
+    let grid = SweepGrid::new(
+        vec![1, 2, 3, 4],
+        vec![None, Some(7.5), Some(6.0)],
+        vec!["day".into(), "ai".into()],
+        100,
+    )
+    .unwrap()
+    .with_coupling(Coupling::full())
+    .with_cap_time(20_000.0);
+    assert_eq!(grid.len(), 24);
+    let streamed = run_sweep_streaming(&twin, &grid, 2);
+    for threads in [1, 2, 8] {
+        let forked = run_sweep_forked(&twin, &grid, threads);
+        let zeroed = forked.with_fork_counters_zeroed();
+        assert_eq!(streamed, zeroed, "{threads}-worker forked sweep diverged");
+        assert_eq!(
+            streamed.scenario_table().to_markdown(),
+            zeroed.scenario_table().to_markdown()
+        );
+        // 8 groups of 3 caps: every scenario rode a shared prefix,
+        // and exactly the non-first members paid a restore.
+        assert!(forked.stats.iter().all(|s| s.forks == 1), "{threads} workers");
+        let restores: u64 = forked.stats.iter().map(|s| s.restores).sum();
+        assert_eq!(restores, 16, "{threads} workers");
+    }
+    // Deferred caps still throttle once they land.
+    let throttled: usize = streamed
+        .stats
+        .iter()
+        .filter(|s| s.cap_mw.is_some())
+        .map(|s| s.throttled)
+        .sum();
+    assert!(throttled > 0, "deferred caps never throttled");
 }
 
 /// Every scenario of the merged report is internally sane and the grid

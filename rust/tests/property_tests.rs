@@ -392,6 +392,151 @@ fn prop_link_load_conservation() {
     }
 }
 
+/// Snapshot round trip: open a session, run to a mid-day fork point,
+/// snapshot, *perturb* (inject a divergent cap move and keep
+/// simulating), restore, replay the real suffix — and land bit-for-bit
+/// on a fresh replay of the same scenario. Exercised across both
+/// engines (incremental and retime-all), both routings, coupling on
+/// and off, with and without a mid-day `CapChange` (injected into the
+/// ranked divergent band after the restore, exactly as the forked
+/// sweep does). The counter equality pins that restoring the
+/// generation stamps keeps stale-`End` skips — `events_skipped` —
+/// report-neutral.
+#[test]
+fn prop_snapshot_restore_replay_is_bit_identical() {
+    use leonardo_twin::hardware::NodeSpec;
+    use leonardo_twin::network::CongestionTracker;
+    use leonardo_twin::power::PowerMonitor;
+    use leonardo_twin::scheduler::{Coupling, JobRecord, PowerCap, ReplaySession};
+    use leonardo_twin::sim::{Component, Event, ScheduledEvent, Simulation};
+    use leonardo_twin::workloads::TraceGen;
+    use std::collections::BTreeMap;
+
+    const T_FORK: f64 = 20_000.0;
+    let cfg = MachineConfig::leonardo();
+    let model = PowerModel::new(NodeSpec::davinci(), 1.1);
+
+    let assert_records = |a: &BTreeMap<u64, JobRecord>, b: &BTreeMap<u64, JobRecord>, tag: &str| {
+        assert_eq!(a.len(), b.len(), "{tag}: record counts differ");
+        for (id, ra) in a {
+            let rb = &b[id];
+            assert_eq!(ra.start_time, rb.start_time, "{tag}: job {id} start");
+            assert_eq!(ra.end_time, rb.end_time, "{tag}: job {id} end");
+            assert_eq!(ra.dvfs_scale, rb.dvfs_scale, "{tag}: job {id} scale");
+            assert_eq!(
+                ra.placement.nodes_per_cell, rb.placement.nodes_per_cell,
+                "{tag}: job {id} placement"
+            );
+        }
+    };
+
+    for coupling in [Coupling::default(), Coupling::full()] {
+        for routing in [Routing::Minimal, Routing::Valiant] {
+            for retime_all in [false, true] {
+                for mid_cap in [false, true] {
+                    let tag = format!(
+                        "coupled={} routing={routing:?} retime_all={retime_all} mid_cap={mid_cap}",
+                        coupling.enabled()
+                    );
+                    let jobs = TraceGen::booster_hpc_day(200, 13).generate();
+                    let mk_sched = || {
+                        let mut s = Scheduler::with_coupling(&cfg, coupling);
+                        s.retime_all = retime_all;
+                        if let Some(net) = s.net.as_mut() {
+                            net.routing = routing;
+                        }
+                        if mid_cap {
+                            // Armed but infinite: bit-identical to
+                            // capless until the mid-day move lands.
+                            s.power_cap = Some(PowerCap::for_model(&model, f64::INFINITY));
+                        }
+                        s
+                    };
+                    let mk_monitor = || {
+                        let mut m =
+                            PowerMonitor::new(model.clone(), Utilization::hpl(), 3456);
+                        m.booster_only = true;
+                        m
+                    };
+                    let cap_move = Event::CapChange { cap_mw: Some(5.5) };
+
+                    // Fresh replay: the oracle. The cap move rides the
+                    // divergent band from t=0 (rank 0).
+                    let mut sim_b = Simulation::new();
+                    let mut sched_b = mk_sched();
+                    let mut monitor_b = mk_monitor();
+                    let mut tracker_b = CongestionTracker::for_booster(&cfg);
+                    let extra = if mid_cap {
+                        vec![ScheduledEvent::at(T_FORK, cap_move.clone())]
+                    } else {
+                        Vec::new()
+                    };
+                    let mut session =
+                        ReplaySession::new(&mut sim_b, &mut sched_b, jobs.clone(), extra);
+                    {
+                        let mut obs: [&mut dyn Component; 2] =
+                            [&mut monitor_b, &mut tracker_b];
+                        session.run_to_end(&mut obs);
+                    }
+                    let recs_b = session.finish();
+
+                    // Forked replay: prefix, snapshot, perturb (a cap
+                    // move the real scenario never sees, plus more
+                    // simulated day), restore, inject the real cap
+                    // move at the same rank the fresh path used.
+                    let mut sim_f = Simulation::new();
+                    let mut sched_f = mk_sched();
+                    let mut monitor_f = mk_monitor();
+                    let mut tracker_f = CongestionTracker::for_booster(&cfg);
+                    let mut session =
+                        ReplaySession::new(&mut sim_f, &mut sched_f, jobs.clone(), Vec::new());
+                    {
+                        let mut obs: [&mut dyn Component; 2] =
+                            [&mut monitor_f, &mut tracker_f];
+                        session.run_until(T_FORK, &mut obs);
+                        session.snapshot(&mut obs);
+                        session.schedule_ranked(
+                            T_FORK + 1_000.0,
+                            Event::CapChange { cap_mw: Some(4.0) },
+                            7,
+                        );
+                        session.run_until(2.0 * T_FORK, &mut obs);
+                        session.restore(&mut obs);
+                        if mid_cap {
+                            session.schedule_ranked(T_FORK, cap_move, 0);
+                        }
+                        session.run_to_end(&mut obs);
+                    }
+                    let recs_f = session.finish();
+
+                    assert_records(&recs_b, &recs_f, &tag);
+                    assert_eq!(
+                        sched_b.last_run, sched_f.last_run,
+                        "{tag}: skip/elision counters diverged"
+                    );
+                    assert_eq!(
+                        monitor_b.energy_kwh(),
+                        monitor_f.energy_kwh(),
+                        "{tag}: energy diverged"
+                    );
+                    let sb = monitor_b.store.get("facility_power_w").unwrap();
+                    let sf = monitor_f.store.get("facility_power_w").unwrap();
+                    assert_eq!(sb.samples().len(), sf.samples().len(), "{tag}: series len");
+                    for (x, y) in sb.samples().iter().zip(sf.samples()) {
+                        assert_eq!((x.t, x.value), (y.t, y.value), "{tag}: series sample");
+                    }
+                    assert_eq!(
+                        tracker_b.peak_link_load(),
+                        tracker_f.peak_link_load(),
+                        "{tag}: peak link load diverged"
+                    );
+                    assert_eq!(tracker_f.total_link_cross_nodes(), 0, "{tag}: did not drain");
+                }
+            }
+        }
+    }
+}
+
 /// DVFS time factor: slowing clocks never speeds a job up; memory-bound
 /// jobs suffer less.
 #[test]
