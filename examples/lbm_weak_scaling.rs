@@ -20,7 +20,7 @@ use leonardo_twin::lbm::{LbmConfig, LbmDriver, TABLE7_NODES};
 use leonardo_twin::metrics::{f1, f2, sig3, Table};
 use leonardo_twin::power::Utilization;
 use leonardo_twin::runtime::Engine;
-use leonardo_twin::scheduler::{Job, Partition, Scheduler};
+use leonardo_twin::scheduler::{CheckpointPolicy, Job, Partition, Scheduler};
 
 fn main() -> anyhow::Result<()> {
     let twin = Twin::leonardo();
@@ -90,6 +90,7 @@ fn main() -> anyhow::Result<()> {
                 submit_time: 0.0,
                 boundness: 0.3,
                 comm_fraction: 0.15,
+                checkpoint: CheckpointPolicy::None,
             }]);
             assert_eq!(rec.len(), 1);
         }

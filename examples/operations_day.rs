@@ -18,7 +18,7 @@ use leonardo_twin::allocation::{run_round, CallKind, Proposal};
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::frontend::{fleet_table, leonardo_service_fleet, LoginBalancer};
 use leonardo_twin::power::{PowerModel, Utilization};
-use leonardo_twin::scheduler::{Job, Partition, PowerCap, Scheduler};
+use leonardo_twin::scheduler::{CheckpointPolicy, Job, Partition, PowerCap, Scheduler};
 use leonardo_twin::telemetry::{health_summary, log_job_power, MetricStore};
 use leonardo_twin::util::rng::Rng;
 
@@ -67,6 +67,7 @@ fn main() {
             submit_time: rng.range_f64(0.0, 14_400.0), // over four hours
             boundness: rng.f64(),
             comm_fraction: rng.f64() * 0.4,
+            checkpoint: CheckpointPolicy::None,
         };
         if round.admit(project, &job) {
             owners.push((i, project));

@@ -170,6 +170,7 @@ mod tests {
             submit_time: 0.0,
             boundness: 1.0,
             comm_fraction: 0.0,
+            checkpoint: crate::scheduler::CheckpointPolicy::None,
         }
     }
 

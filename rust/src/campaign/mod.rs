@@ -45,15 +45,17 @@ use anyhow::{anyhow, ensure};
 
 use std::collections::BTreeMap;
 
+use crate::config::MachineConfig;
 use crate::coordinator::Twin;
 use crate::metrics::{f1, f2, Table};
 use crate::network::CongestionTracker;
 use crate::power::{PowerMonitor, Utilization};
 use crate::scheduler::{
-    Coupling, Job, JobRecord, Partition, PolicyKind, PowerCap, ReplaySession, Scheduler,
+    CheckpointPolicy, Coupling, Job, JobRecord, Partition, PolicyKind, PowerCap, ReplaySession,
+    RunCounters, Scheduler,
 };
 use crate::sim::{Component, Event, ScheduledEvent, Simulation};
-use crate::workloads::TraceGen;
+use crate::workloads::{FaultTrace, TraceGen};
 use crate::Result;
 
 /// One cell of the scenario grid: a trace (mix + seed) under an
@@ -77,13 +79,24 @@ pub struct Scenario {
     /// and a `CapChange` event lands at this time — the late-divergence
     /// shape the divergence-tree sweep shares prefixes across.
     pub cap_time: f64,
+    /// Failure processes injected into the replay
+    /// ([`FaultTrace::none`] — the default axis value — renders no
+    /// events and leaves the scenario byte-identical to a fault-free
+    /// one).
+    pub faults: FaultTrace,
     pub trace: TraceGen,
 }
 
 impl Scenario {
     pub fn label(&self) -> String {
         let policy = self.policy.name();
-        format!("{} seed={} {} {policy}", self.mix, self.seed, cap_label(self.cap_mw))
+        let mut label =
+            format!("{} seed={} {} {policy}", self.mix, self.seed, cap_label(self.cap_mw));
+        if !self.faults.is_none() {
+            label.push(' ');
+            label.push_str(&self.faults.label());
+        }
+        label
     }
 
     /// The cap level the rig is armed with at t=0. With a deferred cap
@@ -101,19 +114,24 @@ impl Scenario {
         }
     }
 
-    /// The scenario's injected event stream: the deferred `CapChange`,
-    /// when it has one. Shared by the streaming path (scheduled upfront)
-    /// and the forked path (injected after restore) — both enter the
-    /// kernel's divergent sequence band at the same rank, which is what
-    /// keeps the two engines byte-identical.
-    pub fn extra_events(&self) -> Vec<ScheduledEvent> {
-        match (self.cap_time > 0.0, self.cap_mw) {
-            (true, Some(mw)) => vec![ScheduledEvent::at(
-                self.cap_time,
-                Event::CapChange { cap_mw: Some(mw) },
-            )],
-            _ => Vec::new(),
+    /// The scenario's injected event stream: the fault trace rendered
+    /// against the machine, then the deferred `CapChange` when it has
+    /// one. Shared by the streaming path (scheduled upfront) and the
+    /// forked path (faults at session creation, the member cap injected
+    /// after restore) — both enter the kernel's divergent sequence band
+    /// at the same ranks (faults at `0..F`, the cap at `F`), which is
+    /// what keeps the two engines byte-identical.
+    pub fn extra_events(&self, cfg: &MachineConfig) -> Vec<ScheduledEvent> {
+        let mut out = self.faults.events(cfg);
+        if self.cap_time > 0.0 {
+            if let Some(mw) = self.cap_mw {
+                out.push(ScheduledEvent::at(
+                    self.cap_time,
+                    Event::CapChange { cap_mw: Some(mw) },
+                ));
+            }
         }
+        out
     }
 }
 
@@ -148,6 +166,14 @@ pub struct SweepGrid {
     /// (see [`Scenario::cap_time`]). 0 (default) = caps apply from t=0
     /// and the grid has no shared prefixes to fork.
     pub cap_time: f64,
+    /// Failure-trace axis (default `[FaultTrace::none()]` — a single
+    /// fault-free entry, so a fault-less grid expands exactly like the
+    /// pre-fault grids).
+    pub faults: Vec<FaultTrace>,
+    /// Checkpoint policy forced on every generated job (`None`, the
+    /// default, keeps each [`crate::workloads::AppClass`]'s own
+    /// [`crate::workloads::AppClass::checkpoint_policy`]).
+    pub checkpoint: Option<CheckpointPolicy>,
 }
 
 impl SweepGrid {
@@ -189,6 +215,8 @@ impl SweepGrid {
             coupling: Coupling::default(),
             retime_all: false,
             cap_time: 0.0,
+            faults: vec![FaultTrace::none()],
+            checkpoint: None,
         })
     }
 
@@ -226,37 +254,62 @@ impl SweepGrid {
         self
     }
 
+    /// Same grid swept over a failure-trace axis (an extra outer grid
+    /// dimension, like the policy axis). Panics on an empty axis — the
+    /// CLI boundary ([`parse_faults`]) always yields one trace.
+    pub fn with_fault_traces(mut self, faults: Vec<FaultTrace>) -> Self {
+        assert!(!faults.is_empty(), "fault axis needs at least one trace");
+        self.faults = faults;
+        self
+    }
+
+    /// Same grid with one checkpoint policy forced on every generated
+    /// job (`None` restores the per-[`crate::workloads::AppClass`]
+    /// defaults).
+    pub fn with_checkpoint(mut self, checkpoint: Option<CheckpointPolicy>) -> Self {
+        self.checkpoint = checkpoint;
+        self
+    }
+
     pub fn len(&self) -> usize {
-        self.seeds.len() * self.caps.len() * self.mixes.len() * self.policies.len()
+        self.seeds.len()
+            * self.caps.len()
+            * self.mixes.len()
+            * self.policies.len()
+            * self.faults.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Expand the grid in deterministic policy-major, then mix, then
-    /// cap, then seed order — the order scenarios are numbered,
-    /// reported and merged in, regardless of which worker ran which.
-    /// (With the default single-policy axis this is exactly the
-    /// pre-policy expansion.)
+    /// Expand the grid in deterministic policy-major, then fault-trace,
+    /// then mix, then cap, then seed order — the order scenarios are
+    /// numbered, reported and merged in, regardless of which worker ran
+    /// which. (With the default single-policy, single-fault axes this
+    /// is exactly the pre-policy expansion.)
     pub fn scenarios(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         for &policy in &self.policies {
-            for mix in &self.mixes {
-                for &cap_mw in &self.caps {
-                    for &seed in &self.seeds {
-                        let trace = TraceGen::named(mix, self.jobs, seed)
-                            .expect("mix names validated at grid construction");
-                        out.push(Scenario {
-                            mix: mix.clone(),
-                            seed,
-                            cap_mw,
-                            coupling: self.coupling,
-                            policy,
-                            retime_all: self.retime_all,
-                            cap_time: self.cap_time,
-                            trace,
-                        });
+            for faults in &self.faults {
+                for mix in &self.mixes {
+                    for &cap_mw in &self.caps {
+                        for &seed in &self.seeds {
+                            let mut trace = TraceGen::named(mix, self.jobs, seed)
+                                .expect("mix names validated at grid construction");
+                            trace.checkpoint = self.checkpoint;
+                            out.push(Scenario {
+                                mix: mix.clone(),
+                                seed,
+                                cap_mw,
+                                coupling: self.coupling,
+                                policy,
+                                retime_all: self.retime_all,
+                                cap_time: self.cap_time,
+                                faults: faults.clone(),
+                                trace,
+                            });
+                        }
                     }
                 }
             }
@@ -272,12 +325,14 @@ impl SweepGrid {
     /// prefix once, snapshot, and replay only the suffix per member.
     ///
     /// The grouping is pinned to the canonical [`SweepGrid::scenarios`]
-    /// expansion (policy-major, then mix, then cap, then seed): member
-    /// `c` of group `(p, m, s)` is grid index
-    /// `((p * mixes + m) * caps + c) * seeds + s`. Groups are emitted in
-    /// `(policy, mix, seed)` order, each with its members in cap order —
-    /// re-ordering an axis re-numbers scenarios but never changes which
-    /// scenarios share a prefix.
+    /// expansion (policy-major, then fault trace, then mix, then cap,
+    /// then seed): member `c` of group `(p, f, m, s)` is grid index
+    /// `(((p * faults + f) * mixes + m) * caps + c) * seeds + s`. Groups
+    /// are emitted in `(policy, fault, mix, seed)` order, each with its
+    /// members in cap order — re-ordering an axis re-numbers scenarios
+    /// but never changes which scenarios share a prefix. Fault traces
+    /// differ *across* groups only: every member of a group replays the
+    /// identical failure stream, so the shared prefix stays shared.
     ///
     /// A grid without a deferred cap (`cap_time == 0`) is all-divergent:
     /// every scenario is its own singleton group and the forked sweep
@@ -288,15 +343,22 @@ impl SweepGrid {
             return (0..self.len()).map(|i| vec![i]).collect();
         }
         let (n_caps, n_seeds) = (self.caps.len(), self.seeds.len());
-        let mut out = Vec::with_capacity(self.policies.len() * self.mixes.len() * n_seeds);
+        let (n_mixes, n_faults) = (self.mixes.len(), self.faults.len());
+        let mut out =
+            Vec::with_capacity(self.policies.len() * n_faults * n_mixes * n_seeds);
         for p in 0..self.policies.len() {
-            for m in 0..self.mixes.len() {
-                for s in 0..n_seeds {
-                    out.push(
-                        (0..n_caps)
-                            .map(|c| ((p * self.mixes.len() + m) * n_caps + c) * n_seeds + s)
-                            .collect(),
-                    );
+            for f in 0..n_faults {
+                for m in 0..n_mixes {
+                    for s in 0..n_seeds {
+                        out.push(
+                            (0..n_caps)
+                                .map(|c| {
+                                    (((p * n_faults + f) * n_mixes + m) * n_caps + c) * n_seeds
+                                        + s
+                                })
+                                .collect(),
+                        );
+                    }
                 }
             }
         }
@@ -313,6 +375,9 @@ pub struct ScenarioStats {
     pub cap_mw: Option<f64>,
     /// Placement policy the scenario replayed under.
     pub policy: PolicyKind,
+    /// Fault-trace label ([`FaultTrace::label`]) the scenario replayed
+    /// under ("none" on the fault-free axis value).
+    pub faults: String,
     pub jobs: usize,
     pub makespan_h: f64,
     pub mean_wait_min: f64,
@@ -355,6 +420,23 @@ pub struct ScenarioStats {
     /// Snapshot restores paid to replay this scenario's suffix (0 for
     /// the group's first member, which rides the live prefix).
     pub restores: u64,
+    /// Jobs fault-killed during the replay (one job killed twice counts
+    /// twice).
+    pub killed: u64,
+    /// Fault kills whose job held a [`CheckpointPolicy::Periodic`]
+    /// policy and re-queued with checkpoint-truncated rework (the rest
+    /// repeat everything).
+    pub requeued: u64,
+    /// Node-hours of work destroyed by fault kills (wall-clock time no
+    /// checkpoint covered, weighted by the job's nodes).
+    pub wasted_node_h: f64,
+    /// Useful node-time fraction: committed node-seconds over committed
+    /// plus destroyed. Exactly 1.0 on a fault-free replay.
+    pub goodput: f64,
+    /// p95 over fault-killed jobs of total recovery stretch (first
+    /// start to final completion, over nominal runtime; 0 when nothing
+    /// was killed).
+    pub p95_recovery_stretch: f64,
 }
 
 /// Index-percentile over an ascending-sorted slice (the same
@@ -410,6 +492,7 @@ impl ScenarioStats {
             seed: 0,
             cap_mw: None,
             policy: PolicyKind::default(),
+            faults: String::new(),
             jobs: records.len(),
             makespan_h: makespan / 3600.0,
             mean_wait_min: mean_wait / 60.0,
@@ -428,8 +511,39 @@ impl ScenarioStats {
             retimes_elided: 0,
             forks: 0,
             restores: 0,
+            killed: 0,
+            requeued: 0,
+            wasted_node_h: 0.0,
+            goodput: 1.0,
+            p95_recovery_stretch: 0.0,
         }
     }
+}
+
+/// Fold one replay's [`RunCounters`] into its stats: the fault
+/// bookkeeping plus the goodput fraction (committed node-seconds over
+/// committed + destroyed). On a fault-free replay the destroyed term is
+/// exactly 0.0 and the fraction is exactly 1.0 — `x / x` is IEEE-exact
+/// — so fault-free stats stay bit-identical to pre-fault reports.
+pub(crate) fn apply_fault_counters(
+    stats: &mut ScenarioStats,
+    counters: &RunCounters,
+    jobs: &[Job],
+    records: &BTreeMap<u64, JobRecord>,
+) {
+    stats.killed = counters.killed;
+    stats.requeued = counters.requeued;
+    stats.wasted_node_h = counters.wasted_node_seconds / 3600.0;
+    stats.p95_recovery_stretch = counters.recovery_p95;
+    let useful: f64 = jobs
+        .iter()
+        .map(|j| {
+            let r = &records[&j.id];
+            j.nodes as f64 * (r.end_time - r.start_time)
+        })
+        .sum();
+    let committed = useful + counters.wasted_node_seconds;
+    stats.goodput = if committed > 0.0 { useful / committed } else { 1.0 };
 }
 
 /// One replay's scheduler + observer set, wired identically for every
@@ -515,10 +629,10 @@ impl ReplayRig {
 
 /// Replay one scenario on an already-armed rig — the core the fresh-rig
 /// path and the arena path share, so they cannot diverge. Runs as a
-/// [`ReplaySession`] over the rig's kernel arena: a deferred cap
-/// ([`Scenario::extra_events`]) is scheduled upfront in the divergent
-/// band, exactly where the forked path injects it after a restore.
-fn replay(rig: &mut ReplayRig, sc: &Scenario) -> ScenarioStats {
+/// [`ReplaySession`] over the rig's kernel arena: the fault trace and a
+/// deferred cap ([`Scenario::extra_events`]) are scheduled upfront in
+/// the divergent band, exactly where the forked path injects them.
+fn replay(rig: &mut ReplayRig, sc: &Scenario, cfg: &MachineConfig) -> ScenarioStats {
     let jobs = sc.trace.generate();
     assert!(!jobs.is_empty(), "empty scenario trace");
     rig.sched.retime_all = sc.retime_all;
@@ -530,7 +644,7 @@ fn replay(rig: &mut ReplayRig, sc: &Scenario) -> ScenarioStats {
         sim,
     } = rig;
     let records = {
-        let mut session = ReplaySession::new(sim, sched, jobs.clone(), sc.extra_events());
+        let mut session = ReplaySession::new(sim, sched, jobs.clone(), sc.extra_events(cfg));
         let mut observers: [&mut dyn Component; 2] = [&mut *monitor, &mut *congestion];
         session.run_to_end(&mut observers);
         session.finish()
@@ -540,8 +654,10 @@ fn replay(rig: &mut ReplayRig, sc: &Scenario) -> ScenarioStats {
     stats.seed = sc.seed;
     stats.cap_mw = sc.cap_mw;
     stats.policy = sc.policy;
+    stats.faults = sc.faults.label();
     stats.events_skipped = sched.last_run.events_skipped;
     stats.retimes_elided = sched.last_run.retimes_elided;
+    apply_fault_counters(&mut stats, &sched.last_run, &jobs, &records);
     stats
 }
 
@@ -552,7 +668,7 @@ fn replay(rig: &mut ReplayRig, sc: &Scenario) -> ScenarioStats {
 pub fn run_scenario(twin: &Twin, sc: &Scenario) -> ScenarioStats {
     let mut rig =
         ReplayRig::new(twin, sc.trace.partition, sc.armed_cap(), sc.coupling, sc.policy);
-    replay(&mut rig, sc)
+    replay(&mut rig, sc, &twin.cfg)
 }
 
 /// Arm a worker's persistent arena for `sc`: the first call builds the
@@ -587,7 +703,7 @@ pub fn run_scenario_arena(
     twin: &Twin,
     sc: &Scenario,
 ) -> ScenarioStats {
-    replay(arm_arena(arena, twin, sc), sc)
+    replay(arm_arena(arena, twin, sc), sc, &twin.cfg)
 }
 
 /// Replay one divergence-tree fork group on a worker's arena: simulate
@@ -617,10 +733,15 @@ fn replay_group(
     let sc0 = &scenarios[group[0]];
     let rig = arm_arena(arena, twin, sc0);
     rig.sched.retime_all = sc0.retime_all;
-    // Group members share policy/mix/seed, so one generated trace
-    // serves every member.
+    // Group members share policy/fault trace/mix/seed, so one generated
+    // trace and one rendered fault stream serve every member.
     let jobs = sc0.trace.generate();
     assert!(!jobs.is_empty(), "empty scenario trace");
+    let fault_events = sc0.faults.events(&twin.cfg);
+    // The member cap diverges at the rank just past the fault events —
+    // the same divergent-band slot the streaming path's upfront
+    // `extra_events` schedule gives it.
+    let cap_rank = fault_events.len() as u64;
     let ReplayRig {
         sched,
         monitor,
@@ -628,7 +749,7 @@ fn replay_group(
         total_nodes,
         sim,
     } = rig;
-    let mut session = ReplaySession::new(sim, sched, jobs.clone(), Vec::new());
+    let mut session = ReplaySession::new(sim, sched, jobs.clone(), fault_events);
     {
         let mut observers: [&mut dyn Component; 2] = [&mut *monitor, &mut *congestion];
         session.run_until(sc0.cap_time, &mut observers);
@@ -643,9 +764,11 @@ fn replay_group(
                 session.restore(&mut observers);
             }
             if let Some(mw) = sc.cap_mw {
-                // Rank 0: the same divergent-band slot the streaming
-                // path's upfront schedule uses.
-                session.schedule_ranked(sc.cap_time, Event::CapChange { cap_mw: Some(mw) }, 0);
+                session.schedule_ranked(
+                    sc.cap_time,
+                    Event::CapChange { cap_mw: Some(mw) },
+                    cap_rank,
+                );
             }
             session.run_to_end(&mut observers);
             session.assert_complete();
@@ -656,9 +779,11 @@ fn replay_group(
         stats.seed = sc.seed;
         stats.cap_mw = sc.cap_mw;
         stats.policy = sc.policy;
+        stats.faults = sc.faults.label();
         let counters = session.counters();
         stats.events_skipped = counters.events_skipped;
         stats.retimes_elided = counters.retimes_elided;
+        apply_fault_counters(&mut stats, &counters, &jobs, session.records());
         stats.forks = 1;
         stats.restores = u64::from(k > 0);
         out.push((i, stats));
@@ -687,6 +812,22 @@ impl CampaignReport {
         r
     }
 
+    /// The report with every fault-robustness metric reset to its
+    /// fault-free value (no kills, no waste, goodput exactly 1.0) — the
+    /// comparator for "an empty [`FaultTrace`] axis is byte-identical
+    /// to a pre-fault report": on a fault-free report this is a no-op.
+    pub fn with_fault_counters_zeroed(&self) -> CampaignReport {
+        let mut r = self.clone();
+        for s in &mut r.stats {
+            s.killed = 0;
+            s.requeued = 0;
+            s.wasted_node_h = 0.0;
+            s.goodput = 1.0;
+            s.p95_recovery_stretch = 0.0;
+        }
+        r
+    }
+
     /// One row per scenario, in grid order.
     pub fn scenario_table(&self) -> Table {
         let mut t = Table::new(
@@ -696,6 +837,7 @@ impl CampaignReport {
                 "Seed",
                 "Cap",
                 "Policy",
+                "Faults",
                 "Jobs",
                 "Makespan [h]",
                 "Mean wait [min]",
@@ -705,6 +847,10 @@ impl CampaignReport {
                 "Energy [MWh]",
                 "Throttled",
                 "p95 stretch",
+                "Killed",
+                "Requeued",
+                "Wasted [nh]",
+                "Goodput",
                 "Skipped",
                 "Elided",
                 "Forks",
@@ -717,6 +863,7 @@ impl CampaignReport {
                 s.seed.to_string(),
                 cap_label(s.cap_mw),
                 s.policy.name().to_string(),
+                s.faults.clone(),
                 s.jobs.to_string(),
                 f2(s.makespan_h),
                 f1(s.mean_wait_min),
@@ -726,6 +873,10 @@ impl CampaignReport {
                 f2(s.energy_mwh),
                 s.throttled.to_string(),
                 f2(s.p95_stretch),
+                s.killed.to_string(),
+                s.requeued.to_string(),
+                f2(s.wasted_node_h),
+                f2(s.goodput),
                 s.events_skipped.to_string(),
                 s.retimes_elided.to_string(),
                 s.forks.to_string(),
@@ -766,6 +917,11 @@ impl CampaignReport {
         metric("mean link util", "bundle load", &|s| s.mean_link_util);
         metric("mean stretch", "x nominal", &|s| s.mean_stretch);
         metric("p95 stretch", "x nominal", &|s| s.p95_stretch);
+        metric("jobs killed", "fault kills", &|s| s.killed as f64);
+        metric("jobs requeued", "checkpointed kills", &|s| s.requeued as f64);
+        metric("wasted node-hours", "node-h destroyed", &|s| s.wasted_node_h);
+        metric("goodput", "useful fraction", &|s| s.goodput);
+        metric("p95 recovery stretch", "x nominal", &|s| s.p95_recovery_stretch);
         metric("stale events skipped", "re-timed Ends", &|s| s.events_skipped as f64);
         metric("re-times elided", "walks avoided", &|s| s.retimes_elided as f64);
         metric("prefix forks", "shared prefixes", &|s| s.forks as f64);
@@ -833,6 +989,8 @@ impl CampaignReport {
                 "p95 stretch",
                 "Peak link util",
                 "Mean link util",
+                "Goodput",
+                "Wasted [nh]",
             ],
         );
         let mut policies: Vec<PolicyKind> = Vec::new();
@@ -858,6 +1016,8 @@ impl CampaignReport {
                 f2(mean(&|s| s.p95_stretch)),
                 f2(mean(&|s| s.peak_link_util)),
                 f2(mean(&|s| s.mean_link_util)),
+                f2(mean(&|s| s.goodput)),
+                f2(mean(&|s| s.wasted_node_h)),
             ]);
         }
         t
@@ -972,6 +1132,105 @@ pub fn parse_policies(list: &str) -> Result<Vec<PolicyKind>> {
     let policies = dedup_first(parsed);
     ensure!(!policies.is_empty(), "--policy needs at least one policy");
     Ok(policies)
+}
+
+/// Parse a `--faults` spec into a [`FaultTrace`]: `none` (the
+/// fault-free trace), or comma-separated `key:value` pairs —
+/// `mtbf:SECS` (per-node MTBF; arms node failures), `repair:SECS`
+/// (mean node-group repair time, default 7200), `group:N` (nodes
+/// downed per failure, default 18), `linkmtbf:SECS` (per-bundle MTBF;
+/// arms link degradations), `linkrepair:SECS` (mean episode length,
+/// default 3600), `factor:F` (degraded capacity factor in (0, 1],
+/// default 0.5), `dur:SECS` (failure-arrival window, default 86400)
+/// and `seed:N` (default 1). At least one of `mtbf`/`linkmtbf` must be
+/// given — a spec that arms no failure process is a typo, not a quiet
+/// no-op.
+pub fn parse_faults(spec: &str) -> Result<FaultTrace> {
+    if spec.trim().eq_ignore_ascii_case("none") {
+        return Ok(FaultTrace::none());
+    }
+    let mut ft = FaultTrace {
+        seed: 1,
+        duration_s: 86_400.0,
+        node_mtbf_s: 0.0,
+        repair_mean_s: 7_200.0,
+        group: 18,
+        link_mtbf_s: 0.0,
+        link_repair_mean_s: 3_600.0,
+        degraded_factor: 0.5,
+    };
+    for pair in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (key, value) = pair
+            .split_once(':')
+            .ok_or_else(|| anyhow!("--faults '{pair}': expected key:value"))?;
+        let key = key.trim().to_ascii_lowercase();
+        let value = value.trim();
+        let secs = |name: &str| -> Result<f64> {
+            let v: f64 = value
+                .parse()
+                .map_err(|e| anyhow!("--faults {name}:'{value}': {e}"))?;
+            ensure!(
+                v.is_finite() && v > 0.0,
+                "--faults {name}:{value}: must be finite and positive"
+            );
+            Ok(v)
+        };
+        match key.as_str() {
+            "mtbf" => ft.node_mtbf_s = secs("mtbf")?,
+            "repair" => ft.repair_mean_s = secs("repair")?,
+            "group" => {
+                let v: u32 = value
+                    .parse()
+                    .map_err(|e| anyhow!("--faults group:'{value}': {e}"))?;
+                ensure!(v >= 1, "--faults group:{value}: need at least one node");
+                ft.group = v;
+            }
+            "linkmtbf" => ft.link_mtbf_s = secs("linkmtbf")?,
+            "linkrepair" => ft.link_repair_mean_s = secs("linkrepair")?,
+            "factor" => {
+                let v = secs("factor")?;
+                ensure!(v <= 1.0, "--faults factor:{value}: must be in (0, 1]");
+                ft.degraded_factor = v;
+            }
+            "dur" => ft.duration_s = secs("dur")?,
+            "seed" => {
+                ft.seed = value
+                    .parse()
+                    .map_err(|e| anyhow!("--faults seed:'{value}': {e}"))?;
+            }
+            other => {
+                return Err(anyhow!(
+                    "--faults: unknown key '{other}' (known: mtbf, repair, group, \
+                     linkmtbf, linkrepair, factor, dur, seed)"
+                ))
+            }
+        }
+    }
+    ensure!(
+        !ft.is_none(),
+        "--faults '{spec}': arms no failure process (set mtbf: and/or linkmtbf:, or use 'none')"
+    );
+    Ok(ft)
+}
+
+/// Parse a `--checkpoint` flag into the [`CheckpointPolicy`] forced on
+/// every generated job: `none` disables checkpointing (a fault kill
+/// repeats everything), a positive interval in seconds checkpoints
+/// periodically (a kill repeats at most one interval of work). The
+/// flag's absence — not this parser — keeps the per-app-class defaults.
+pub fn parse_checkpoint(spec: &str) -> Result<CheckpointPolicy> {
+    if spec.trim().eq_ignore_ascii_case("none") {
+        return Ok(CheckpointPolicy::None);
+    }
+    let secs: f64 = spec
+        .trim()
+        .parse()
+        .map_err(|e| anyhow!("--checkpoint '{spec}': {e}"))?;
+    ensure!(
+        secs.is_finite() && secs > 0.0,
+        "--checkpoint {spec}: interval must be finite and positive seconds"
+    );
+    Ok(CheckpointPolicy::Periodic(secs))
 }
 
 /// Fan the grid across `threads` workers with `std::thread::scope`,
@@ -1232,7 +1491,7 @@ mod tests {
         let caps = report.cap_table();
         assert_eq!(caps.rows.len(), 2);
         let summary = report.summary_table();
-        assert_eq!(summary.rows.len(), 14);
+        assert_eq!(summary.rows.len(), 19);
         // Sub-idle-floor capping forces every job onto the 0.5 DVFS
         // floor: clock-bound work stretches, and the stretch percentiles
         // surface it.
@@ -1336,6 +1595,7 @@ mod tests {
                 submit_time: 0.0,
                 boundness: 1.0,
                 comm_fraction: 0.0,
+                checkpoint: crate::scheduler::CheckpointPolicy::None,
             }],
             &{
                 let mut m = BTreeMap::new();
@@ -1363,27 +1623,48 @@ mod tests {
             &CongestionTracker::new([(0, 180)]),
         );
         s.mix = "day".into();
+        s.faults = "mtbf250k".into();
         s.events_skipped = 42;
         s.retimes_elided = 1337;
         s.forks = 7;
         s.restores = 3;
+        s.killed = 11;
+        s.requeued = 9;
+        s.wasted_node_h = 4.25;
+        s.goodput = 0.97;
+        s.p95_recovery_stretch = 2.5;
         let report = CampaignReport { stats: vec![s] };
         let t = report.scenario_table();
         assert_eq!(t.headers[t.headers.len() - 4], "Skipped");
         assert_eq!(t.headers[t.headers.len() - 3], "Elided");
         assert_eq!(t.headers[t.headers.len() - 2], "Forks");
         assert_eq!(t.headers[t.headers.len() - 1], "Restores");
+        assert_eq!(t.headers[t.headers.len() - 8], "Killed");
+        assert_eq!(t.headers[t.headers.len() - 7], "Requeued");
+        assert_eq!(t.headers[t.headers.len() - 6], "Wasted [nh]");
+        assert_eq!(t.headers[t.headers.len() - 5], "Goodput");
+        assert_eq!(t.headers[4], "Faults");
         let row = &t.rows[0];
+        assert_eq!(row[4], "mtbf250k");
         assert_eq!(row[row.len() - 4], "42");
         assert_eq!(row[row.len() - 3], "1337");
         assert_eq!(row[row.len() - 2], "7");
         assert_eq!(row[row.len() - 1], "3");
+        assert_eq!(row[row.len() - 8], "11");
+        assert_eq!(row[row.len() - 7], "9");
+        assert_eq!(row[row.len() - 6], "4.25");
+        assert_eq!(row[row.len() - 5], "0.97");
         let summary = report.summary_table();
         let md = summary.to_markdown();
         assert!(md.contains("stale events skipped"), "{md}");
         assert!(md.contains("re-times elided"), "{md}");
         assert!(md.contains("prefix forks"), "{md}");
         assert!(md.contains("snapshot restores"), "{md}");
+        assert!(md.contains("jobs killed"), "{md}");
+        assert!(md.contains("jobs requeued"), "{md}");
+        assert!(md.contains("wasted node-hours"), "{md}");
+        assert!(md.contains("goodput"), "{md}");
+        assert!(md.contains("p95 recovery stretch"), "{md}");
         assert!(md.contains("42"), "{md}");
         assert!(md.contains("1337"), "{md}");
         // Zeroing the fork bookkeeping touches nothing else.
@@ -1391,6 +1672,16 @@ mod tests {
         assert_eq!(zeroed.stats[0].forks, 0);
         assert_eq!(zeroed.stats[0].restores, 0);
         assert_eq!(zeroed.stats[0].events_skipped, 42);
+        assert_eq!(zeroed.stats[0].killed, 11, "fork zeroing keeps fault counters");
+        // Zeroing the fault counters resets the robustness metrics to
+        // their fault-free values and touches nothing else.
+        let fz = report.with_fault_counters_zeroed();
+        assert_eq!(fz.stats[0].killed, 0);
+        assert_eq!(fz.stats[0].requeued, 0);
+        assert_eq!(fz.stats[0].wasted_node_h, 0.0);
+        assert_eq!(fz.stats[0].goodput, 1.0);
+        assert_eq!(fz.stats[0].p95_recovery_stretch, 0.0);
+        assert_eq!(fz.stats[0].forks, 7, "fault zeroing keeps fork counters");
     }
 
     /// Satellite: fork grouping is pinned to the canonical expansion —
@@ -1443,19 +1734,19 @@ mod tests {
     /// a genuinely capless day.
     #[test]
     fn deferred_cap_arms_infinite_and_injects_cap_change() {
+        let twin = Twin::leonardo();
         let g = small_grid().with_cap_time(7200.0);
         let sc = g.scenarios();
         assert!(sc.iter().all(|s| s.armed_cap() == Some(f64::INFINITY)));
         let uncapped = &sc[0];
-        assert!(uncapped.cap_mw.is_none() && uncapped.extra_events().is_empty());
+        assert!(uncapped.cap_mw.is_none() && uncapped.extra_events(&twin.cfg).is_empty());
         let capped = sc.iter().find(|s| s.cap_mw.is_some()).unwrap();
-        let evs = capped.extra_events();
+        let evs = capped.extra_events(&twin.cfg);
         assert_eq!(evs.len(), 1);
         assert_eq!(evs[0].time, 7200.0);
         // An armed-but-infinite cap day is bit-identical to a capless
         // day: the cap-free scenario of a deferred grid replays exactly
         // like the same scenario of a plain grid.
-        let twin = Twin::leonardo();
         let plain = run_scenario(&twin, &small_grid().scenarios()[0]);
         let deferred = run_scenario(&twin, uncapped);
         assert_eq!(plain, deferred);
@@ -1564,5 +1855,166 @@ mod tests {
         assert_eq!(pt.rows[0][0], "pack");
         assert_eq!(pt.rows[1][0], "spread");
         assert_eq!(pt.rows[0][1], "2");
+    }
+
+    /// Satellite: the fault/checkpoint CLI boundary — malformed specs
+    /// come back as flag-shaped errors, never worker panics.
+    #[test]
+    fn fault_parsers_reject_malformed_specs() {
+        assert_eq!(parse_faults("none").unwrap(), FaultTrace::none());
+        assert_eq!(parse_faults(" NONE ").unwrap(), FaultTrace::none());
+        let ft = parse_faults("mtbf:250000,repair:3600,group:36,seed:9").unwrap();
+        assert_eq!(ft.node_mtbf_s, 250_000.0);
+        assert_eq!(ft.repair_mean_s, 3_600.0);
+        assert_eq!(ft.group, 36);
+        assert_eq!(ft.seed, 9);
+        assert_eq!(ft.duration_s, 86_400.0, "default window");
+        assert_eq!(ft.link_mtbf_s, 0.0, "links unarmed unless asked");
+        let link = parse_faults("linkmtbf:90000,factor:0.25,dur:43200").unwrap();
+        assert_eq!(link.link_mtbf_s, 90_000.0);
+        assert_eq!(link.degraded_factor, 0.25);
+        assert_eq!(link.duration_s, 43_200.0);
+        assert_eq!(link.node_mtbf_s, 0.0);
+        // Zero/negative/non-finite rates, out-of-range factors, unknown
+        // keys, bare words and no-op specs all error cleanly.
+        assert!(parse_faults("mtbf:0").is_err());
+        assert!(parse_faults("mtbf:-100").is_err());
+        assert!(parse_faults("mtbf:nan").is_err());
+        assert!(parse_faults("mtbf:250000,repair:0").is_err());
+        assert!(parse_faults("mtbf:250000,factor:1.5").is_err());
+        assert!(parse_faults("mtbf:250000,factor:-0.5").is_err());
+        assert!(parse_faults("mtbf:250000,group:0").is_err());
+        assert!(parse_faults("mtbf:250000,bogus:1").is_err());
+        assert!(parse_faults("mtbf").is_err(), "missing value");
+        assert!(parse_faults("").is_err(), "arms nothing");
+        assert!(parse_faults("repair:3600").is_err(), "arms nothing");
+        // Checkpoint: none or a positive interval.
+        assert_eq!(parse_checkpoint("none").unwrap(), CheckpointPolicy::None);
+        assert_eq!(
+            parse_checkpoint("1800").unwrap(),
+            CheckpointPolicy::Periodic(1800.0)
+        );
+        assert!(parse_checkpoint("0").is_err());
+        assert!(parse_checkpoint("-5").is_err());
+        assert!(parse_checkpoint("inf").is_err());
+        assert!(parse_checkpoint("soon").is_err());
+    }
+
+    /// Satellite: the fault-free axis value is invisible — a grid swept
+    /// over `[FaultTrace::none()]` produces a report byte-identical to
+    /// the same grid without a fault axis, the robustness metrics sit
+    /// at their exact fault-free values (goodput is IEEE-exactly 1.0),
+    /// and the fault-counter comparator is a no-op on it.
+    #[test]
+    fn fault_free_axis_is_byte_identical() {
+        let twin = Twin::leonardo();
+        let grid = small_grid();
+        let with_axis = grid.clone().with_fault_traces(vec![FaultTrace::none()]);
+        assert_eq!(with_axis.len(), grid.len());
+        let plain = run_sweep_streaming(&twin, &grid, 2);
+        let axis = run_sweep_streaming(&twin, &with_axis, 2);
+        assert_eq!(plain, axis);
+        assert!(plain.stats.iter().all(|s| {
+            s.killed == 0
+                && s.requeued == 0
+                && s.wasted_node_h == 0.0
+                && s.goodput == 1.0
+                && s.p95_recovery_stretch == 0.0
+                && s.faults == "none"
+        }));
+        assert_eq!(plain.with_fault_counters_zeroed(), plain);
+    }
+
+    /// Tentpole: a faulted, checkpointed sweep kills and requeues jobs,
+    /// burns node-hours, drops goodput below 1 — and the report stays
+    /// bit-identical for any worker-thread count, faults included.
+    #[test]
+    fn faulted_sweep_kills_requeues_and_stays_thread_independent() {
+        let twin = Twin::leonardo();
+        // Per-node MTBF of 1e6 s over a day on ~3.5k nodes ≈ 300
+        // failure events of 32 nodes: enough that packed cells are hit
+        // many times over, so kills are statistically certain.
+        let faults = FaultTrace {
+            seed: 9,
+            duration_s: 86_400.0,
+            node_mtbf_s: 1_000_000.0,
+            repair_mean_s: 7_200.0,
+            group: 32,
+            link_mtbf_s: 0.0,
+            link_repair_mean_s: 0.0,
+            degraded_factor: 1.0,
+        };
+        let grid = SweepGrid::new(vec![1, 2], vec![None], vec!["day".into()], 300)
+            .unwrap()
+            .with_fault_traces(vec![FaultTrace::none(), faults])
+            .with_checkpoint(Some(CheckpointPolicy::Periodic(1800.0)));
+        assert_eq!(grid.len(), 4, "fault axis multiplies the grid");
+        let one = run_sweep_streaming(&twin, &grid, 1);
+        let many = run_sweep_streaming(&twin, &grid, 8);
+        assert_eq!(one, many, "fault columns must be thread-count independent");
+        assert_eq!(one, run_sweep(&twin, &grid, 2), "and engine independent");
+        // Fault-axis-major expansion: the first half is the fault-free
+        // sub-grid, the second half replayed under the failure stream.
+        let (clean, faulted) = one.stats.split_at(2);
+        assert!(clean.iter().all(|s| s.killed == 0 && s.goodput == 1.0));
+        let killed: u64 = faulted.iter().map(|s| s.killed).sum();
+        let requeued: u64 = faulted.iter().map(|s| s.requeued).sum();
+        assert!(killed > 0, "an aggressive fault trace must kill something");
+        assert_eq!(requeued, killed, "a forced Periodic policy requeues every kill");
+        assert!(faulted.iter().any(|s| s.wasted_node_h > 0.0));
+        assert!(faulted.iter().all(|s| s.goodput <= 1.0));
+        assert!(faulted.iter().any(|s| s.goodput < 1.0));
+        assert!(faulted.iter().any(|s| s.p95_recovery_stretch >= 1.0));
+        assert!(faulted.iter().all(|s| s.faults == "mtbf1000k"));
+        // Every job still completes: record counts match the trace.
+        assert!(one.stats.iter().all(|s| s.jobs == 300));
+    }
+
+    /// Tentpole: the divergence-tree engine composes with the fault
+    /// axis — fault events ride the shared prefix (rendered once per
+    /// group) and the member cap diverges at the rank just past them,
+    /// so forked reports stay byte-identical to streaming, faults and
+    /// checkpoints included.
+    #[test]
+    fn forked_sweep_matches_streaming_over_fault_axis() {
+        let twin = Twin::leonardo();
+        let faults = FaultTrace {
+            seed: 5,
+            duration_s: 86_400.0,
+            node_mtbf_s: 2_000_000.0,
+            repair_mean_s: 5_400.0,
+            group: 32,
+            link_mtbf_s: 0.0,
+            link_repair_mean_s: 0.0,
+            degraded_factor: 1.0,
+        };
+        let grid = small_grid()
+            .with_cap_time(7200.0)
+            .with_fault_traces(vec![FaultTrace::none(), faults])
+            .with_checkpoint(Some(CheckpointPolicy::Periodic(3600.0)));
+        // Groups share (policy, fault, mix, seed) and walk the cap axis.
+        let sc = grid.scenarios();
+        for group in grid.fork_groups() {
+            let first = &sc[group[0]];
+            for &i in &group {
+                assert_eq!(sc[i].faults, first.faults, "fault trace shared in-group");
+            }
+        }
+        let streamed = run_sweep_streaming(&twin, &grid, 2);
+        for threads in [1, 2] {
+            let forked = run_sweep_forked(&twin, &grid, threads);
+            assert_eq!(
+                streamed,
+                forked.with_fork_counters_zeroed(),
+                "forked vs streaming diverged over the fault axis ({threads} threads)"
+            );
+        }
+        let faulted_killed: u64 = streamed
+            .stats
+            .iter()
+            .filter(|s| s.faults != "none")
+            .map(|s| s.killed)
+            .sum();
+        assert!(faulted_killed > 0, "the faulted half must exercise kills");
     }
 }

@@ -488,6 +488,28 @@ impl Twin {
         coupling: crate::scheduler::Coupling,
         policy: crate::scheduler::PolicyKind,
     ) -> Result<OpsReport> {
+        self.operations_replay_faulted(
+            trace,
+            cap_mw,
+            coupling,
+            policy,
+            &crate::workloads::FaultTrace::none(),
+        )
+    }
+
+    /// [`Twin::operations_replay_policy`] with a failure trace injected
+    /// into the day (CLI: `operations --faults ...`). The fault-free
+    /// trace ([`crate::workloads::FaultTrace::none`]) renders zero
+    /// events, so the un-faulted surfaces above replay byte-identically
+    /// to their pre-fault selves.
+    pub fn operations_replay_faulted(
+        &self,
+        trace: &TraceGen,
+        cap_mw: Option<f64>,
+        coupling: crate::scheduler::Coupling,
+        policy: crate::scheduler::PolicyKind,
+        faults: &crate::workloads::FaultTrace,
+    ) -> Result<OpsReport> {
         let jobs = trace.generate();
         anyhow::ensure!(!jobs.is_empty(), "empty trace");
 
@@ -500,7 +522,8 @@ impl Twin {
         let records = {
             let mut observers: [&mut dyn Component; 3] =
                 [&mut rig.monitor, &mut rig.congestion, &mut counter];
-            rig.sched.run_with(jobs.clone(), Vec::new(), &mut observers)
+            rig.sched
+                .run_with(jobs.clone(), faults.events(&self.cfg), &mut observers)
         };
         let mut stats = crate::campaign::ScenarioStats::collect(
             &jobs,
@@ -510,8 +533,10 @@ impl Twin {
             &rig.congestion,
         );
         stats.policy = policy;
+        stats.faults = faults.label();
         stats.events_skipped = rig.sched.last_run.events_skipped;
         stats.retimes_elided = rig.sched.last_run.retimes_elided;
+        crate::campaign::apply_fault_counters(&mut stats, &rig.sched.last_run, &jobs, &records);
 
         let mut summary = Table::new(
             "Operations replay — event-driven day on the Booster partition",
@@ -579,6 +604,34 @@ impl Twin {
             stats.retimes_elided.to_string(),
             "cell index + rate-unchanged",
         );
+        row(&mut summary, "jobs fault-killed", stats.killed.to_string(), "");
+        row(
+            &mut summary,
+            "jobs checkpoint-requeued",
+            stats.requeued.to_string(),
+            "",
+        );
+        row(
+            &mut summary,
+            "wasted node-hours",
+            f2(stats.wasted_node_h),
+            "node-h destroyed",
+        );
+        row(
+            &mut summary,
+            "wasted energy",
+            f2(rig.monitor.wasted_kwh() / 1e3),
+            "MWh (PUE-incl)",
+        );
+        row(&mut summary, "goodput", f2(stats.goodput), "useful fraction");
+        row(
+            &mut summary,
+            "p95 recovery stretch",
+            f2(stats.p95_recovery_stretch),
+            "x nominal",
+        );
+        let (_, nodes_down) = counter.fault_totals();
+        row(&mut summary, "nodes down at day end", nodes_down.to_string(), "");
 
         let power = rig.monitor.store.energy_report();
         let store = rig.monitor.store.clone();

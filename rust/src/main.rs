@@ -14,14 +14,15 @@
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
 use leonardo_twin::campaign::{
-    parse_caps, parse_mixes, parse_policies, parse_routing, parse_threads, SweepGrid,
+    parse_caps, parse_checkpoint, parse_faults, parse_mixes, parse_policies, parse_routing,
+    parse_threads, SweepGrid,
 };
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::metrics::Table;
 use leonardo_twin::runtime::Engine;
-use leonardo_twin::scheduler::{Coupling, PolicyKind};
+use leonardo_twin::scheduler::{CheckpointPolicy, Coupling, PolicyKind};
 use leonardo_twin::topology::Routing;
-use leonardo_twin::workloads::TraceGen;
+use leonardo_twin::workloads::{FaultTrace, TraceGen};
 
 const USAGE: &str = "\
 leonardo-twin — digital twin of the LEONARDO pre-exascale supercomputer
@@ -44,14 +45,16 @@ COMMANDS:
               through the event-driven scheduler      [--jobs N] [--seed S] [--cap MW]
                                                       [--coupled] [--routing P]
                                                       [--policy pack|spread]
+                                                      [--faults SPEC] [--checkpoint CP]
   sweep       Multi-threaded scenario-sweep campaign: replay a
-              seeds x power-caps x mixes x policies grid of operational
-              days and merge the outcomes (per-scenario, cap-sensitivity,
-              policy-comparison and aggregate-percentile tables —
-              identical for any thread count)
+              seeds x power-caps x mixes x policies x fault-traces grid
+              of operational days and merge the outcomes (per-scenario,
+              cap-sensitivity, policy-comparison and aggregate-percentile
+              tables — identical for any thread count)
                        [--jobs N] [--seed S] [--seeds K] [--caps LIST]
                        [--mixes LIST] [--threads T] [--coupled] [--routing P]
                        [--policy LIST] [--cap-time SEC] [--fork]
+                       [--faults SPEC] [--checkpoint CP]
   calibrate   Measure the AOT kernels through PJRT
   all         Every table in paper order              [--calibrated]
 
@@ -91,6 +94,19 @@ OPTIONS:
                     prefix per worker and fork at the cap move; report
                     byte-identical to the streaming engine apart from
                     the Forks/Restores bookkeeping columns
+  --faults SPEC     operations: inject a failure trace into the day;
+                    sweep: add it as a grid axis (fault-free vs faulted).
+                    SPEC is 'none' or comma-separated key:value pairs —
+                    mtbf:SECS (per-node MTBF, arms node failures),
+                    repair:SECS, group:N (nodes per failure),
+                    linkmtbf:SECS (per-bundle MTBF, arms degradations;
+                    requires --coupled), linkrepair:SECS, factor:F in
+                    (0,1], dur:SECS (arrival window), seed:N
+                    (e.g. --faults mtbf:250000,repair:7200,group:18)
+  --checkpoint CP   operations/sweep: checkpoint policy forced on every
+                    job — 'none' (a fault kill repeats everything) or an
+                    interval in seconds (a kill repeats at most one
+                    interval); default: per-app-class policies
 ";
 
 struct Args {
@@ -111,6 +127,8 @@ struct Args {
     policy: String,
     cap_time: f64,
     fork: bool,
+    faults: Option<String>,
+    checkpoint: Option<String>,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -134,6 +152,8 @@ fn parse_args() -> Result<Args, String> {
         policy: "pack".to_string(),
         cap_time: 0.0,
         fork: false,
+        faults: None,
+        checkpoint: None,
     };
     while let Some(a) = argv.next() {
         match a.as_str() {
@@ -151,6 +171,12 @@ fn parse_args() -> Result<Args, String> {
             }
             "--routing" => args.routing = argv.next().ok_or("--routing needs a value")?,
             "--policy" => args.policy = argv.next().ok_or("--policy needs a value")?,
+            "--faults" => {
+                args.faults = Some(argv.next().ok_or("--faults needs a value")?)
+            }
+            "--checkpoint" => {
+                args.checkpoint = Some(argv.next().ok_or("--checkpoint needs a value")?)
+            }
             "--artifacts" => {
                 args.artifacts = Some(argv.next().ok_or("--artifacts needs a value")?)
             }
@@ -222,6 +248,28 @@ fn routing_and_coupling(args: &Args) -> anyhow::Result<(Routing, Coupling)> {
     Ok((routing, coupling))
 }
 
+/// Resolve the `--faults`/`--checkpoint` flags shared by `operations`
+/// and `sweep`, enforcing that link-degradation episodes have coupling
+/// to act on (the uncoupled replay never consults the network model, so
+/// a degraded bundle would silently change nothing).
+fn fault_inputs(
+    args: &Args,
+    coupling: Coupling,
+) -> anyhow::Result<(FaultTrace, Option<CheckpointPolicy>)> {
+    let faults = match &args.faults {
+        Some(spec) => parse_faults(spec)?,
+        None => FaultTrace::none(),
+    };
+    anyhow::ensure!(
+        faults.link_mtbf_s <= 0.0 || coupling.congestion,
+        "--faults linkmtbf requires --coupled: the uncoupled replay freezes end \
+         times at Start and never consults the network model, so a degraded \
+         link bundle would silently change nothing"
+    );
+    let checkpoint = args.checkpoint.as_deref().map(parse_checkpoint).transpose()?;
+    Ok((faults, checkpoint))
+}
+
 /// Resolve the single placement policy an `operations` replay uses.
 fn operations_policy(args: &Args) -> anyhow::Result<PolicyKind> {
     let policies = parse_policies(&args.policy)?;
@@ -255,11 +303,19 @@ fn sweep_inputs(args: &Args) -> anyhow::Result<(SweepGrid, usize, Routing, Coupl
         "--cap-time {} must be a finite number of seconds >= 0",
         args.cap_time
     );
+    let (faults, checkpoint) = fault_inputs(args, coupling)?;
     let seeds: Vec<u64> = (0..args.seeds).map(|k| args.seed + k).collect();
-    let grid = SweepGrid::new(seeds, caps, mixes, args.jobs.unwrap_or(2_000))?
+    let mut grid = SweepGrid::new(seeds, caps, mixes, args.jobs.unwrap_or(2_000))?
         .with_coupling(coupling)
         .with_policies(policies)
-        .with_cap_time(args.cap_time);
+        .with_cap_time(args.cap_time)
+        .with_checkpoint(checkpoint);
+    if !faults.is_none() {
+        // `--faults` turns the grid's fault axis on: every scenario
+        // replayed fault-free AND under the failure trace, so the
+        // report's robustness columns have their clean baseline.
+        grid = grid.with_fault_traces(vec![FaultTrace::none(), faults]);
+    }
     Ok((grid, threads, routing, coupling))
 }
 
@@ -325,9 +381,11 @@ fn main() -> anyhow::Result<()> {
         "overview" => overview(&twin),
         "operations" => {
             let inputs = routing_and_coupling(&args).and_then(|(routing, coupling)| {
-                operations_policy(&args).map(|policy| (routing, coupling, policy))
+                let policy = operations_policy(&args)?;
+                let (faults, checkpoint) = fault_inputs(&args, coupling)?;
+                Ok((routing, coupling, policy, faults, checkpoint))
             });
-            let (routing, coupling, policy) = match inputs {
+            let (routing, coupling, policy, faults, checkpoint) = match inputs {
                 Ok(v) => v,
                 Err(e) => {
                     eprintln!("{e}");
@@ -335,8 +393,10 @@ fn main() -> anyhow::Result<()> {
                 }
             };
             twin.net.routing = routing;
-            let trace = TraceGen::booster_day(args.jobs.unwrap_or(10_000), args.seed);
-            let report = twin.operations_replay_policy(&trace, args.cap_mw, coupling, policy)?;
+            let mut trace = TraceGen::booster_day(args.jobs.unwrap_or(10_000), args.seed);
+            trace.checkpoint = checkpoint;
+            let report =
+                twin.operations_replay_faulted(&trace, args.cap_mw, coupling, policy, &faults)?;
             print(&report.summary, md);
             print(&report.power, md);
         }
@@ -350,13 +410,14 @@ fn main() -> anyhow::Result<()> {
             };
             twin.net.routing = routing;
             eprintln!(
-                "sweep: {} scenarios ({} seeds x {} caps x {} mixes x {} policies, \
-                 {} jobs each) on {} threads{}{}",
+                "sweep: {} scenarios ({} seeds x {} caps x {} mixes x {} policies \
+                 x {} fault traces, {} jobs each) on {} threads{}{}",
                 grid.len(),
                 grid.seeds.len(),
                 grid.caps.len(),
                 grid.mixes.len(),
                 grid.policies.len(),
+                grid.faults.len(),
                 grid.jobs,
                 threads,
                 if coupling.enabled() { ", coupled" } else { "" },
@@ -478,6 +539,8 @@ mod tests {
             policy: "pack".to_string(),
             cap_time: 0.0,
             fork: false,
+            faults: None,
+            checkpoint: None,
         }
     }
 
@@ -611,6 +674,51 @@ mod tests {
         a.policy = "pack,spread".into();
         let err = operations_policy(&a).unwrap_err();
         assert!(format!("{err}").contains("single --policy"), "{err}");
+    }
+
+    /// Satellite: malformed `--faults`/`--checkpoint` specs error
+    /// cleanly, and link-degradation episodes without `--coupled` are
+    /// rejected before any worker runs.
+    #[test]
+    fn fault_flags_validate_and_wire_into_the_grid() {
+        // No flags: the fault axis stays the single fault-free entry
+        // and the per-app-class checkpoint defaults are kept.
+        let (grid, _, _, _) = sweep_inputs(&args()).unwrap();
+        assert_eq!(grid.faults, vec![FaultTrace::none()]);
+        assert_eq!(grid.checkpoint, None);
+
+        // A fault spec doubles the grid: fault-free baseline + faulted.
+        let mut a = args();
+        a.faults = Some("mtbf:250000,repair:7200,group:18".into());
+        a.checkpoint = Some("1800".into());
+        let (grid, _, _, _) = sweep_inputs(&a).unwrap();
+        assert_eq!(grid.faults.len(), 2);
+        assert!(grid.faults[0].is_none() && !grid.faults[1].is_none());
+        assert_eq!(grid.faults[1].node_mtbf_s, 250_000.0);
+        assert_eq!(grid.checkpoint, Some(CheckpointPolicy::Periodic(1800.0)));
+        assert_eq!(grid.len(), 2 * 4 * 3 * 2);
+
+        // Malformed specs come back as flag-shaped errors.
+        let mut a = args();
+        a.faults = Some("mtbf:0".into());
+        assert!(sweep_inputs(&a).is_err(), "zero MTBF accepted");
+
+        let mut a = args();
+        a.faults = Some("mtbf:250000,factor:-0.5".into());
+        assert!(sweep_inputs(&a).is_err(), "negative factor accepted");
+
+        let mut a = args();
+        a.checkpoint = Some("oops".into());
+        assert!(sweep_inputs(&a).is_err(), "bogus checkpoint accepted");
+
+        // Link episodes without coupling would silently change nothing:
+        // error, and --coupled fixes it.
+        let mut a = args();
+        a.faults = Some("linkmtbf:90000,factor:0.5".into());
+        let err = sweep_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("requires --coupled"), "{err}");
+        a.coupled = true;
+        assert!(sweep_inputs(&a).is_ok());
     }
 }
 

@@ -168,6 +168,13 @@ pub struct Network {
     link_background: Vec<f64>,
     /// Link bundles currently carrying a non-negligible load.
     loaded_links: usize,
+    /// Per-bundle health factor (0 < h <= 1): the fraction of the
+    /// bundle's capacity a `LinkDegraded` fault leaves usable. 1.0
+    /// everywhere on a healthy fabric.
+    link_health: Vec<f64>,
+    /// Bundles currently below full health (keeps the healthy-fabric
+    /// capacity query an O(1) constant read).
+    degraded_links: usize,
 }
 
 impl Network {
@@ -184,6 +191,82 @@ impl Network {
             loaded_cells: 0,
             link_background: vec![0.0; links],
             loaded_links: 0,
+            link_health: vec![1.0; links],
+            degraded_links: 0,
+        }
+    }
+
+    /// Set the health factor of link bundle `bundle` (clamped to
+    /// `(0, 1]`; out-of-range bundle ids are ignored). A `LinkDegraded`
+    /// fault lands here; `LinkRestored` passes 1.0.
+    pub fn set_link_health(&mut self, bundle: usize, factor: f64) {
+        let Some(h) = self.link_health.get_mut(bundle) else {
+            return;
+        };
+        let factor = if factor.is_finite() {
+            factor.clamp(f64::MIN_POSITIVE, 1.0)
+        } else {
+            1.0
+        };
+        let was_degraded = *h < 1.0;
+        let is_degraded = factor < 1.0;
+        *h = factor;
+        match (was_degraded, is_degraded) {
+            (false, true) => self.degraded_links += 1,
+            (true, false) => self.degraded_links -= 1,
+            _ => {}
+        }
+    }
+
+    /// Health factor of bundle `bundle` (1.0 when unaddressable).
+    pub fn link_health(&self, bundle: usize) -> f64 {
+        self.link_health.get(bundle).copied().unwrap_or(1.0)
+    }
+
+    /// Restore every bundle to full health (arena reuse across
+    /// scenarios: the campaign rig resets fault state between replays).
+    pub fn reset_link_health(&mut self) {
+        if self.degraded_links > 0 {
+            self.link_health.fill(1.0);
+            self.degraded_links = 0;
+        }
+    }
+
+    /// Copy of the per-bundle health table (snapshot support: the fork
+    /// path must rewind `LinkDegraded` state with everything else).
+    pub fn save_link_health(&self, into: &mut Vec<f64>) {
+        into.clone_from(&self.link_health);
+    }
+
+    /// Restore a health table saved by [`Network::save_link_health`].
+    pub fn restore_link_health(&mut self, saved: &[f64]) {
+        self.link_health.copy_from_slice(saved);
+        self.degraded_links = self.link_health.iter().filter(|&&h| h < 1.0).count();
+    }
+
+    /// Capacity of the narrowest (effective) bundle among a placement's
+    /// unordered cell pairs, Gbps — the bottleneck a max-min share
+    /// prices. On a uniform healthy fabric (the LEONARDO default) this
+    /// is an O(1) constant read, bit-for-bit the uniform
+    /// `cell_pair_bw_gbps` the model used before heterogeneous bundles
+    /// existed.
+    fn pair_capacity_gbps(&self, cells: &[(u32, u32)]) -> f64 {
+        if self.topo.uniform_bundles() && self.degraded_links == 0 {
+            return self.topo.cell_pair_bw_gbps();
+        }
+        let mut min_cap = f64::INFINITY;
+        for (i, &(a, _)) in cells.iter().enumerate() {
+            for &(b, _) in &cells[i + 1..] {
+                if let Some(id) = self.topo.link_bundle_id(a, b) {
+                    let cap = self.topo.link_bundle_capacity_gbps(id) * self.link_health[id];
+                    min_cap = min_cap.min(cap);
+                }
+            }
+        }
+        if min_cap.is_finite() {
+            min_cap
+        } else {
+            self.topo.cell_pair_bw_gbps()
         }
     }
 
@@ -354,7 +437,7 @@ impl Network {
         let cross_fraction = (1.0 / avg_cell.cbrt()).min(1.0);
         let background = (self.background_global_load + background).clamp(0.0, 0.95);
         let global_gbs =
-            self.topo.cell_pair_bw_gbps() / 8.0 * WIRE_EFFICIENCY * (1.0 - background);
+            self.pair_capacity_gbps(cells) / 8.0 * WIRE_EFFICIENCY * (1.0 - background);
         let supply_per_node =
             global_gbs * (k as f64 - 1.0) / total / self.oversubscription / route_factor;
         let demand_per_node = inj * cross_fraction;
@@ -734,6 +817,12 @@ impl Component for CongestionTracker {
             Event::End { booster, cells, .. } if *booster || !self.booster_only => {
                 self.update(cells, -1)
             }
+            // A killed job's traffic leaves the fabric like a completed
+            // one's — the same unwind as End, so the load tables stay
+            // conserved under faults.
+            Event::Kill { booster, cells, .. } if *booster || !self.booster_only => {
+                self.update(cells, -1)
+            }
             _ => return,
         }
         let mean = self.mean_load();
@@ -1037,6 +1126,68 @@ mod tests {
         n.set_link_background_load(0, 1, 0.0);
         let uniform = n.node_bw_for_cells(&wide.nodes_per_cell, 0.0);
         assert!((n.effective_node_bw(&wide) - uniform).abs() < 1e-9);
+    }
+
+    /// Satellite: a heterogeneous capacity table actually prices the
+    /// narrow bundle — a placement crossing it gets less bandwidth (and
+    /// a bigger comm slowdown) than one crossing full-width bundles.
+    #[test]
+    fn link_bw_for_cells_prices_the_narrow_bundle() {
+        let cfg = MachineConfig::leonardo();
+        let inj = cfg.gpu_node_spec().unwrap().injection_gbps();
+        let topo = Topology::build(&cfg);
+        let narrow = topo.link_bundle_id(0, 1).unwrap();
+        let mut caps = vec![topo.cell_pair_bw_gbps(); topo.num_link_bundles()];
+        caps[narrow] = 360.0; // a tenth of the nominal 3600 Gbps
+        let n = Network::new(topo.with_bundle_capacities(caps), inj);
+        let over_narrow = [(0u32, 180u32), (1, 180)];
+        let over_wide = [(2u32, 180u32), (3, 180)];
+        let bw_narrow = n.link_bw_for_cells(&over_narrow, 0.0, 0.0);
+        let bw_wide = n.link_bw_for_cells(&over_wide, 0.0, 0.0);
+        assert!(bw_narrow < bw_wide, "{bw_narrow} vs {bw_wide}");
+        // The slowdown model sees it too.
+        let slow_narrow = n.comm_slowdown_links(&over_narrow, 0.5, 0.0, 0.0);
+        let slow_wide = n.comm_slowdown_links(&over_wide, 0.5, 0.0, 0.0);
+        assert!(slow_narrow > slow_wide, "{slow_narrow} vs {slow_wide}");
+        // A wider placement is gated by its narrowest bundle.
+        let spanning = [(0u32, 120u32), (1, 120), (2, 120)];
+        let clean = [(2u32, 120u32), (3, 120), (4, 120)];
+        assert!(
+            n.link_bw_for_cells(&spanning, 0.0, 0.0) < n.link_bw_for_cells(&clean, 0.0, 0.0)
+        );
+    }
+
+    /// `LinkDegraded` semantics: health scales the effective bundle
+    /// capacity, restore brings back the exact healthy bandwidth, and a
+    /// uniform healthy fabric stays bit-for-bit the constant-capacity
+    /// fast path.
+    #[test]
+    fn link_health_degrades_and_restores_capacity() {
+        let mut n = net();
+        let p = [(0u32, 180u32), (1, 180)];
+        let healthy = n.link_bw_for_cells(&p, 0.0, 0.0);
+        let bundle = n.topo.link_bundle_id(0, 1).unwrap();
+        n.set_link_health(bundle, 0.25);
+        assert_eq!(n.link_health(bundle), 0.25);
+        let degraded = n.link_bw_for_cells(&p, 0.0, 0.0);
+        assert!(degraded < healthy, "{degraded} vs {healthy}");
+        // Placements elsewhere are untouched.
+        let elsewhere = [(2u32, 180u32), (3, 180)];
+        assert_eq!(n.link_bw_for_cells(&elsewhere, 0.0, 0.0), healthy);
+        n.set_link_health(bundle, 1.0);
+        assert_eq!(n.link_bw_for_cells(&p, 0.0, 0.0), healthy);
+        // Save/restore round-trips the health table.
+        n.set_link_health(bundle, 0.5);
+        let mut saved = Vec::new();
+        n.save_link_health(&mut saved);
+        n.reset_link_health();
+        assert_eq!(n.link_health(bundle), 1.0);
+        n.restore_link_health(&saved);
+        assert_eq!(n.link_health(bundle), 0.5);
+        // Out-of-range ids are ignored, non-finite factors are healthy.
+        n.set_link_health(usize::MAX, 0.1);
+        n.set_link_health(bundle, f64::NAN);
+        assert_eq!(n.link_health(bundle), 1.0);
     }
 
     #[test]

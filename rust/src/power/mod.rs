@@ -199,6 +199,10 @@ pub struct PowerMonitor {
     busy_nodes: u32,
     /// Σ nodes x scale^2 over running jobs (dynamic-power weight).
     dyn_weight: f64,
+    /// PUE-inclusive energy charged to work a fault destroyed, kWh:
+    /// each `Kill` adds its nodes' facility draw over the unrecoverable
+    /// window (`wasted_s` — elapsed minus checkpointed progress).
+    wasted_kwh: f64,
     running: BTreeMap<u64, (u32, f64)>,
     pub store: MetricStore,
     /// Internal snapshot slot ([`Component::snapshot`]): accounting
@@ -214,6 +218,7 @@ pub struct PowerMonitor {
 struct MonitorSnapshot {
     busy_nodes: u32,
     dyn_weight: f64,
+    wasted_kwh: f64,
     running: Vec<(u64, (u32, f64))>,
     marks: Vec<(String, usize)>,
 }
@@ -227,6 +232,7 @@ impl PowerMonitor {
             booster_only: false,
             busy_nodes: 0,
             dyn_weight: 0.0,
+            wasted_kwh: 0.0,
             running: BTreeMap::new(),
             store: MetricStore::default(),
             snap: None,
@@ -243,8 +249,14 @@ impl PowerMonitor {
         self.booster_only = booster_only;
         self.busy_nodes = 0;
         self.dyn_weight = 0.0;
+        self.wasted_kwh = 0.0;
         self.running.clear();
         self.store.reset();
+    }
+
+    /// PUE-inclusive facility energy destroyed by faults so far, kWh.
+    pub fn wasted_kwh(&self) -> f64 {
+        self.wasted_kwh
     }
 
     pub fn busy_nodes(&self) -> u32 {
@@ -310,6 +322,26 @@ impl Component for PowerMonitor {
                     self.sample(now);
                 }
             }
+            Event::Kill { job, wasted_s, .. } => {
+                // A fault destroyed the incarnation: release its power
+                // accounting like an End, and charge the facility draw
+                // its nodes held over the unrecoverable window as wasted
+                // energy (at the scale the job was killed at — a
+                // piecewise-exact split across retimes isn't worth the
+                // bookkeeping for an attribution metric).
+                if let Some((nodes, scale)) = self.running.remove(job) {
+                    self.busy_nodes -= nodes;
+                    self.dyn_weight -= nodes as f64 * scale * scale;
+                    let idle = self.model.node_power_w(Utilization::idle());
+                    let dynamic = self.model.node_power_w(self.util) - idle;
+                    self.wasted_kwh += nodes as f64
+                        * (idle + scale * scale * dynamic)
+                        * self.model.pue
+                        * wasted_s
+                        / 3.6e6;
+                    self.sample(now);
+                }
+            }
             Event::Retime {
                 job, dvfs_scale, ..
             } => {
@@ -333,6 +365,7 @@ impl Component for PowerMonitor {
         let mut snap = self.snap.take().unwrap_or_default();
         snap.busy_nodes = self.busy_nodes;
         snap.dyn_weight = self.dyn_weight;
+        snap.wasted_kwh = self.wasted_kwh;
         snap.running.clear();
         snap.running
             .extend(self.running.iter().map(|(&k, &v)| (k, v)));
@@ -347,6 +380,7 @@ impl Component for PowerMonitor {
             .expect("PowerMonitor::restore without a prior snapshot");
         self.busy_nodes = snap.busy_nodes;
         self.dyn_weight = snap.dyn_weight;
+        self.wasted_kwh = snap.wasted_kwh;
         self.running.clear();
         self.running.extend(snap.running.iter().copied());
         self.store.restore_marks(&snap.marks);
@@ -593,6 +627,76 @@ mod tests {
         mon.on_event(50.0, &start_ev(2, 500, 0.8), &mut out);
         assert_eq!(mon.busy_nodes(), 1500);
         assert_eq!(mon.store.get("facility_power_w").unwrap().len(), 2);
+    }
+
+    /// A Kill releases the job's power accounting like an End and books
+    /// the facility draw its nodes held over the wasted window.
+    #[test]
+    fn monitor_kill_releases_power_and_books_wasted_energy() {
+        let mut out = Vec::new();
+        let mut mon = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
+        let idle_w = mon.facility_w();
+        mon.on_event(0.0, &start_ev(1, 1000, 1.0), &mut out);
+        mon.on_event(
+            60.0,
+            &Event::Kill {
+                job: 1,
+                booster: true,
+                cells: vec![(0, 1000)].into(),
+                wasted_s: 60.0,
+                requeued: false,
+            },
+            &mut out,
+        );
+        assert_eq!(mon.busy_nodes(), 0);
+        assert!((mon.facility_w() - idle_w).abs() < 1e-6);
+        // Wasted energy = the killed nodes' full facility draw (idle
+        // floor included — those nodes burned it on discarded work) at
+        // scale 1.0 over the 60 s window.
+        let active = leo_model().node_power_w(Utilization::hpl());
+        let expected = 1000.0 * active * 1.1 * 60.0 / 3.6e6;
+        assert!(
+            (mon.wasted_kwh() - expected).abs() < 1e-9,
+            "{} vs {expected}",
+            mon.wasted_kwh()
+        );
+        // A kill of an untracked job books nothing.
+        mon.on_event(
+            61.0,
+            &Event::Kill {
+                job: 99,
+                booster: true,
+                cells: vec![(0, 10)].into(),
+                wasted_s: 10.0,
+                requeued: true,
+            },
+            &mut out,
+        );
+        assert!((mon.wasted_kwh() - expected).abs() < 1e-9);
+    }
+
+    /// Wasted energy is part of the snapshot/restore round trip.
+    #[test]
+    fn monitor_snapshot_covers_wasted_energy() {
+        let mut out = Vec::new();
+        let mut mon = PowerMonitor::new(leo_model(), Utilization::hpl(), 3456);
+        mon.on_event(0.0, &start_ev(1, 500, 1.0), &mut out);
+        mon.snapshot();
+        mon.on_event(
+            30.0,
+            &Event::Kill {
+                job: 1,
+                booster: true,
+                cells: vec![(0, 500)].into(),
+                wasted_s: 30.0,
+                requeued: true,
+            },
+            &mut out,
+        );
+        assert!(mon.wasted_kwh() > 0.0);
+        mon.restore();
+        assert_eq!(mon.wasted_kwh(), 0.0);
+        assert_eq!(mon.busy_nodes(), 500);
     }
 
     #[test]

@@ -90,6 +90,26 @@
 //! settlements, so elided re-times leave no floating-point residue and
 //! the incremental walk stays bit-for-bit the retime-all walk (pinned
 //! by `rust/tests/coupling.rs`).
+//!
+//! ## Faults & resilience
+//!
+//! Fault events ride the same stream: `NodeDown` carves failed nodes
+//! out of a cell's free pool — killing the lowest-id running jobs on
+//! the cell when free capacity doesn't cover the loss — `NodeUp`
+//! restores them (clamped to the downed count, so a stray repair can
+//! never double-free), and `LinkDegraded`/`LinkRestored` scale a
+//! bundle's capacity in the scheduler's network model. A killed job is
+//! requeued at the kill instant with its remaining work truncated by
+//! its [`CheckpointPolicy`] (`None` repeats everything, `Periodic`
+//! resumes from the last completed checkpoint boundary); its pending
+//! `End` is invalidated through a per-job generation base, a `Kill`
+//! event notifies observers (the power monitor charges the wasted
+//! joules), and survivors sharing the perturbed cells re-time through
+//! the incremental coupled retimer — a downed node is just another
+//! dirty-cell perturbation. Kill/requeue counts, wasted node-seconds
+//! and the p95 recovery stretch land in [`RunCounters`]; with no fault
+//! events in the stream none of this machinery runs and every engine
+//! stays bit-for-bit its fault-free self.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -238,6 +258,21 @@ impl PolicyKind {
     }
 }
 
+/// How a running job recovers when a fault kills it mid-run
+/// ([`crate::sim::Event::NodeDown`]) — the per-job lever the fault
+/// campaign sweeps. Modeled as remaining-work truncation on requeue: a
+/// checkpointed job resumes from its last completed checkpoint
+/// boundary, an uncheckpointed one repeats everything.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum CheckpointPolicy {
+    /// No checkpoints: a kill discards every second of progress.
+    #[default]
+    None,
+    /// A checkpoint every `interval` seconds of nominal work: a kill
+    /// rolls back to the last completed multiple of the interval.
+    Periodic(f64),
+}
+
 /// A batch job.
 #[derive(Debug, Clone)]
 pub struct Job {
@@ -255,6 +290,9 @@ pub struct Job {
     /// Drives congestion coupling — comm-bound multi-cell jobs stretch
     /// under fabric contention; inert when [`Coupling`] is off.
     pub comm_fraction: f64,
+    /// Recovery behaviour when a fault kills the job (inert unless
+    /// fault events are injected into the stream).
+    pub checkpoint: CheckpointPolicy,
 }
 
 /// Outcome of a completed job.
@@ -287,6 +325,10 @@ struct CellPool {
     cell_id: u32,
     free: u32,
     total: u32,
+    /// Nodes currently failed (`NodeDown`) — carved out of `free` until
+    /// the matching `NodeUp` restores them. `free + down + allocated ==
+    /// total` at every event (the fault conservation invariant).
+    down: u32,
 }
 
 /// `cell id -> pool position` sentinel for cells outside a partition.
@@ -353,7 +395,7 @@ pub struct Scheduler {
 /// numbers never feed back into any scheduling or retiming decision
 /// (pinned by the `retimes_elided` neutrality test in
 /// `rust/tests/coupling.rs`).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct RunCounters {
     /// Stale generation-stamped `End`s dropped at pop time
     /// ([`crate::sim::Simulation::events_skipped`]).
@@ -362,6 +404,18 @@ pub struct RunCounters {
     /// proved the job untouched, or the recomputed rate was
     /// bit-identical so no event was emitted.
     pub retimes_elided: u64,
+    /// Running jobs killed by fault events.
+    pub killed: u64,
+    /// Killed jobs whose [`CheckpointPolicy`] let them requeue with
+    /// checkpoint-truncated rework (the rest repeat everything).
+    pub requeued: u64,
+    /// Wall-clock node-seconds of progress lost to kills (time spent
+    /// past the last checkpoint a requeue could resume from).
+    pub wasted_node_seconds: f64,
+    /// p95 over killed jobs of `(final completion - first start) /
+    /// nominal runtime` — the recovery stretch. 0 when nothing was
+    /// killed (or no killed job completed).
+    pub recovery_p95: f64,
 }
 
 /// Which feedback loops retime a *running* job's provisional `End`.
@@ -433,6 +487,7 @@ impl Scheduler {
                     cell_id: cell_id as u32,
                     free: gpu,
                     total: gpu,
+                    down: 0,
                 });
             }
             if cpu > 0 && cell.kind != CellKind::Io {
@@ -441,6 +496,7 @@ impl Scheduler {
                     cell_id: cell_id as u32,
                     free: cpu,
                     total: cpu,
+                    down: 0,
                 });
             }
         }
@@ -694,11 +750,15 @@ impl Scheduler {
     pub fn reset(&mut self) {
         for pool in self.booster.iter_mut().chain(self.dc.iter_mut()) {
             pool.free = pool.total;
+            pool.down = 0;
         }
         self.placed_cross.fill(0);
         self.free = self.total;
         self.power_cap = None;
         self.last_run = RunCounters::default();
+        if let Some(net) = self.net.as_mut() {
+            net.reset_link_health();
+        }
     }
 
     /// Run a workload to completion with FIFO + EASY backfill on the
@@ -961,6 +1021,17 @@ fn link_backgrounds(
             cross as f64 / cap as f64
         },
     )
+}
+
+/// Nearest-rank p95 of `samples`; 0 when empty.
+fn p95(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((v.len() as f64 * 0.95).ceil() as usize).clamp(1, v.len());
+    v[rank - 1]
 }
 
 /// Outcome of re-timing one coupled job (see [`retime_job`]).
@@ -1248,6 +1319,25 @@ struct JobEngine<'a> {
     sensitive: usize,
     /// Re-time evaluations elided this run (see [`RunCounters`]).
     retimes_elided: u64,
+    /// Remaining nominal work per fault-killed job id, seconds at
+    /// nominal clocks (the checkpoint-truncated rework a requeue runs).
+    /// Populated only by kills — empty in fault-free runs, so the
+    /// pass's run-seconds lookup is byte-neutral.
+    rework: BTreeMap<u64, f64>,
+    /// `End`-generation base per fault-killed job id: only generations
+    /// derived from the base after the latest kill are real, which is
+    /// what invalidates a killed job's pending `End` at pop time even
+    /// in uncoupled runs. Monotone per job; empty in fault-free runs.
+    gen_base: BTreeMap<u64, u64>,
+    /// First start time per job killed at least once (the recovery-
+    /// stretch anchor).
+    fault_first_start: BTreeMap<u64, f64>,
+    /// Recovery-stretch samples of killed jobs that finally completed.
+    recovery_stretch: Vec<f64>,
+    /// Fault counters (see [`RunCounters`]).
+    killed: u64,
+    requeued: u64,
+    wasted_node_seconds: f64,
     /// Internal snapshot slot ([`Component::snapshot`]): boxed so an
     /// engine that never snapshots pays one pointer, and repeated
     /// snapshots reuse every buffer inside.
@@ -1286,6 +1376,16 @@ struct EngineSnapshot {
     dirty_cells: Vec<u32>,
     sensitive: usize,
     retimes_elided: u64,
+    booster_down: Vec<u32>,
+    dc_down: Vec<u32>,
+    link_health: Vec<f64>,
+    rework: Vec<(u64, f64)>,
+    gen_base: Vec<(u64, u64)>,
+    fault_first_start: Vec<(u64, f64)>,
+    recovery_stretch: Vec<f64>,
+    killed: u64,
+    requeued: u64,
+    wasted_node_seconds: f64,
 }
 
 impl<'a> JobEngine<'a> {
@@ -1337,6 +1437,13 @@ impl<'a> JobEngine<'a> {
             retime_ids: Vec::new(),
             sensitive: 0,
             retimes_elided: 0,
+            rework: BTreeMap::new(),
+            gen_base: BTreeMap::new(),
+            fault_first_start: BTreeMap::new(),
+            recovery_stretch: Vec::new(),
+            killed: 0,
+            requeued: 0,
+            wasted_node_seconds: 0.0,
             snap: None,
         }
     }
@@ -1377,6 +1484,27 @@ impl<'a> JobEngine<'a> {
         snap.dirty_cells.clone_from(&self.dirty_cells);
         snap.sensitive = self.sensitive;
         snap.retimes_elided = self.retimes_elided;
+        snap.booster_down.clear();
+        snap.booster_down
+            .extend(self.sched.booster.iter().map(|p| p.down));
+        snap.dc_down.clear();
+        snap.dc_down.extend(self.sched.dc.iter().map(|p| p.down));
+        match self.sched.net.as_ref() {
+            Some(net) => net.save_link_health(&mut snap.link_health),
+            None => snap.link_health.clear(),
+        }
+        snap.rework.clear();
+        snap.rework.extend(self.rework.iter().map(|(&k, &v)| (k, v)));
+        snap.gen_base.clear();
+        snap.gen_base
+            .extend(self.gen_base.iter().map(|(&k, &v)| (k, v)));
+        snap.fault_first_start.clear();
+        snap.fault_first_start
+            .extend(self.fault_first_start.iter().map(|(&k, &v)| (k, v)));
+        snap.recovery_stretch.clone_from(&self.recovery_stretch);
+        snap.killed = self.killed;
+        snap.requeued = self.requeued;
+        snap.wasted_node_seconds = self.wasted_node_seconds;
     }
 
     /// Rewind the engine (and its scheduler) to the state `snap` holds.
@@ -1418,6 +1546,28 @@ impl<'a> JobEngine<'a> {
         self.dirty_cells.clone_from(&snap.dirty_cells);
         self.sensitive = snap.sensitive;
         self.retimes_elided = snap.retimes_elided;
+        for (pool, &down) in self.sched.booster.iter_mut().zip(&snap.booster_down) {
+            pool.down = down;
+        }
+        for (pool, &down) in self.sched.dc.iter_mut().zip(&snap.dc_down) {
+            pool.down = down;
+        }
+        if let Some(net) = self.sched.net.as_mut() {
+            if !snap.link_health.is_empty() {
+                net.restore_link_health(&snap.link_health);
+            }
+        }
+        self.rework.clear();
+        self.rework.extend(snap.rework.iter().copied());
+        self.gen_base.clear();
+        self.gen_base.extend(snap.gen_base.iter().copied());
+        self.fault_first_start.clear();
+        self.fault_first_start
+            .extend(snap.fault_first_start.iter().copied());
+        self.recovery_stretch.clone_from(&snap.recovery_stretch);
+        self.killed = snap.killed;
+        self.requeued = snap.requeued;
+        self.wasted_node_seconds = snap.wasted_node_seconds;
     }
 
     /// True unless the free-vs-lower-bound prune proves no queued job
@@ -1568,6 +1718,17 @@ impl<'a> JobEngine<'a> {
                                 }
                             }
                         }
+                    }
+                }
+            }
+            // A previously killed job finally made it: close its rework
+            // entry and sample the recovery stretch. No-op (one empty-
+            // map lookup) in fault-free runs.
+            if self.rework.remove(&id).is_some() {
+                if let Some(&first) = self.fault_first_start.get(&id) {
+                    let run_s = self.jobs[r.ji as usize].run_seconds;
+                    if run_s > 0.0 {
+                        self.recovery_stretch.push((t.0 - first) / run_s);
                     }
                 }
             }
@@ -1813,8 +1974,13 @@ impl<'a> JobEngine<'a> {
                 1.0
             };
             let slowdown = dvfs * comm;
-            let end = now + job.run_seconds * slowdown;
-            let gen = u64::from(coupled);
+            // A requeued job runs only its checkpoint-truncated rework;
+            // its generations restart above the post-kill base so the
+            // dead attempt's pending End stays stale. Both lookups hit
+            // empty maps in fault-free runs.
+            let run_s = self.rework.get(&job.id).copied().unwrap_or(job.run_seconds);
+            let end = now + run_s * slowdown;
+            let gen = self.gen_base.get(&job.id).copied().unwrap_or(0) + u64::from(coupled);
             let (start_cells, end_cells): (Cells, Cells) = if self.optimized {
                 // One interned copy per job, shared by Start and End.
                 let cells: Cells = Arc::from(placement.nodes_per_cell.as_slice());
@@ -1931,10 +2097,263 @@ impl<'a> JobEngine<'a> {
             0
         };
     }
+
+    /// Resolve a cell id to `(partition, pool position)` — Booster
+    /// first (GPU cells), then DataCentric; `None` for a cell with no
+    /// schedulable nodes.
+    fn pool_of_cell(&self, cell: u32) -> Option<(Partition, usize)> {
+        if let Some(&pos) = self.sched.booster_by_cell.get(cell as usize) {
+            if pos != NO_POOL {
+                return Some((Partition::Booster, pos as usize));
+            }
+        }
+        if let Some(&pos) = self.sched.dc_by_cell.get(cell as usize) {
+            if pos != NO_POOL {
+                return Some((Partition::DataCentric, pos as usize));
+            }
+        }
+        None
+    }
+
+    /// A `NodeDown` fault: kill running jobs on the cell (lowest id
+    /// first — deterministic victim order) until the downed capacity
+    /// can be carved out of the free pool, then move it from `free` to
+    /// `down`. Kills release their placements, requeue through fresh
+    /// `Submit`s in this same batch, and charge wasted work; survivors
+    /// sharing perturbed cells re-time at the next quiescent point.
+    fn node_down(&mut self, now: f64, cell: u32, nodes: u32, out: &mut Vec<ScheduledEvent>) {
+        let Some((partition, pos)) = self.pool_of_cell(cell) else {
+            return;
+        };
+        let pool = match partition {
+            Partition::Booster => &self.sched.booster[pos],
+            Partition::DataCentric => &self.sched.dc[pos],
+        };
+        let want = nodes.min(pool.total - pool.down);
+        if want == 0 {
+            return;
+        }
+        loop {
+            let free = match partition {
+                Partition::Booster => self.sched.booster[pos].free,
+                Partition::DataCentric => self.sched.dc[pos].free,
+            };
+            if free >= want {
+                break;
+            }
+            let mut victim: Option<u64> = None;
+            for r in self.running.values() {
+                if r.partition != partition {
+                    continue;
+                }
+                let id = self.jobs[r.ji as usize].id;
+                let rec = &self.records[&id];
+                if rec.placement.nodes_per_cell.iter().any(|&(c, _)| c == cell) {
+                    victim = Some(victim.map_or(id, |v| v.min(id)));
+                }
+            }
+            let Some(id) = victim else { break };
+            self.kill_job(now, id, out);
+        }
+        let pi = pidx(partition);
+        let pool = match partition {
+            Partition::Booster => &mut self.sched.booster[pos],
+            Partition::DataCentric => &mut self.sched.dc[pos],
+        };
+        let take = want.min(pool.free);
+        pool.free -= take;
+        pool.down += take;
+        self.sched.free[pi] -= take;
+        self.dirty = true;
+        self.scan_from = 0;
+    }
+
+    /// A `NodeUp` repair: return downed nodes to the free pool, clamped
+    /// to the downed count so a stray (or oversized) repair can never
+    /// double-free capacity.
+    fn node_up(&mut self, cell: u32, nodes: u32) {
+        let Some((partition, pos)) = self.pool_of_cell(cell) else {
+            return;
+        };
+        let pool = match partition {
+            Partition::Booster => &mut self.sched.booster[pos],
+            Partition::DataCentric => &mut self.sched.dc[pos],
+        };
+        let restore = nodes.min(pool.down);
+        if restore == 0 {
+            return;
+        }
+        pool.down -= restore;
+        pool.free += restore;
+        self.sched.free[pidx(partition)] += restore;
+        self.dirty = true;
+        self.scan_from = 0;
+    }
+
+    /// A link fault: scale the bundle's capacity (`factor < 1`) or
+    /// restore it (`1.0`) in the scheduler's network model, and mark
+    /// both endpoint cells dirty so every sensitive job priced over the
+    /// bundle re-times at the next quiescent point.
+    fn link_health_change(&mut self, bundle: u32, factor: f64) {
+        let Some(net) = self.sched.net.as_mut() else {
+            return;
+        };
+        net.set_link_health(bundle as usize, factor);
+        if !self.coupling.congestion {
+            return;
+        }
+        let n = self.cell_total.len();
+        'pairs: for a in 0..n as u32 {
+            for b in (a + 1)..n as u32 {
+                if cell_pair_index(n, a, b) != bundle as usize {
+                    continue;
+                }
+                for cell in [a, b] {
+                    if self.incremental && !self.cell_dirty[cell as usize] {
+                        self.cell_dirty[cell as usize] = true;
+                        self.dirty_cells.push(cell);
+                    }
+                }
+                self.recouple = true;
+                break 'pairs;
+            }
+        }
+    }
+
+    /// Kill one running job at `now`: release its placement, invalidate
+    /// its pending `End` (generation-base bump), charge the wall-clock
+    /// node time its [`CheckpointPolicy`] cannot recover, and requeue
+    /// it with the remaining (possibly truncated) rework. Emits a
+    /// `Kill` notification for observers plus the requeueing `Submit`.
+    fn kill_job(&mut self, now: f64, id: u64, out: &mut Vec<ScheduledEvent>) {
+        let key = self
+            .running
+            .iter()
+            .find(|(_, r)| self.jobs[r.ji as usize].id == id)
+            .map(|(&k, _)| k)
+            .expect("kill of a job that is not running");
+        let entry = self.running.remove(&key).expect("running entry");
+        let rec = self.records.remove(&id).expect("record of running job");
+        self.sched.release(entry.partition, &rec.placement);
+        self.running_nodes -= entry.nodes;
+        let job = &self.jobs[entry.ji as usize];
+        let run_seconds = job.run_seconds;
+        let checkpoint = job.checkpoint;
+        let booster = entry.partition == Partition::Booster;
+        let nominal_total = self.rework.get(&id).copied().unwrap_or(run_seconds);
+        let planned = (rec.end_time - rec.start_time).max(0.0);
+        let elapsed = (now - rec.start_time).clamp(0.0, planned);
+        let cj = self.coupled.remove(&id);
+        // Remaining nominal work: exact from the coupled provisional
+        // end (the rate is piecewise-constant and the end tracks every
+        // move); proportional for the frozen uncoupled end.
+        let remaining_nominal = match &cj {
+            Some(cj) => ((cj.end - now) / cj.slowdown).max(0.0),
+            None if planned > 0.0 => ((rec.end_time - now).max(0.0) / planned) * nominal_total,
+            None => 0.0,
+        };
+        let done = (nominal_total - remaining_nominal).max(0.0);
+        let gen = match &cj {
+            Some(cj) => cj.gen,
+            None => self.gen_base.get(&id).copied().unwrap_or(0),
+        };
+        self.gen_base.insert(id, gen + 1);
+        let kill_cells: Cells = match &cj {
+            Some(cj) => cj.cells.clone(),
+            None => Arc::from(rec.placement.nodes_per_cell.as_slice()),
+        };
+        if let Some(cj) = cj {
+            if cj.congestion_sensitive(self.coupling, &self.jobs[cj.ji as usize]) {
+                self.sensitive -= 1;
+                if self.incremental {
+                    for &(c, _) in cj.cells.iter() {
+                        if let Some(list) = self.cell_jobs.get_mut(c as usize) {
+                            if let Some(p) = list.iter().position(|&j| j == id) {
+                                list.swap_remove(p);
+                            }
+                        }
+                    }
+                }
+            }
+            if self.cross_update(cj.booster, &cj.cells, -1) {
+                self.recouple = true;
+            }
+        }
+        let retained = match checkpoint {
+            CheckpointPolicy::None => 0.0,
+            CheckpointPolicy::Periodic(interval) if interval > 0.0 => {
+                ((done / interval).floor() * interval).min(done)
+            }
+            CheckpointPolicy::Periodic(_) => done,
+        };
+        let requeued = matches!(checkpoint, CheckpointPolicy::Periodic(_));
+        // Wall-clock share of the elapsed time whose progress no
+        // checkpoint covers — the node time actually thrown away.
+        let wasted_s = if done > 0.0 {
+            elapsed * (1.0 - retained / done)
+        } else {
+            0.0
+        };
+        self.rework.insert(id, (nominal_total - retained).max(0.0));
+        self.fault_first_start.entry(id).or_insert(rec.start_time);
+        self.killed += 1;
+        if requeued {
+            self.requeued += 1;
+        }
+        self.wasted_node_seconds += entry.nodes as f64 * wasted_s;
+        out.push(ScheduledEvent::at(
+            now,
+            Event::Kill {
+                job: id,
+                booster,
+                cells: kill_cells,
+                wasted_s,
+                requeued,
+            },
+        ));
+        out.push(ScheduledEvent::at(now, Event::Submit { job: id }));
+        self.dirty = true;
+        self.scan_from = 0;
+    }
+
+    /// The fault conservation invariant: per partition, pool free
+    /// counts sum to the O(1) counter and `free + down + running ==
+    /// total`; per cell, `free + down <= total`.
+    fn assert_conserved(&self) {
+        let mut running = [0u64; 2];
+        for r in self.running.values() {
+            running[pidx(r.partition)] += r.nodes as u64;
+        }
+        for (pi, pools) in [&self.sched.booster, &self.sched.dc].into_iter().enumerate() {
+            let mut free = 0u64;
+            let mut down = 0u64;
+            let mut total = 0u64;
+            for pool in pools.iter() {
+                assert!(
+                    pool.free + pool.down <= pool.total,
+                    "cell {}: free {} + down {} exceeds total {}",
+                    pool.cell_id,
+                    pool.free,
+                    pool.down,
+                    pool.total
+                );
+                free += pool.free as u64;
+                down += pool.down as u64;
+                total += pool.total as u64;
+            }
+            assert_eq!(free, self.sched.free[pi] as u64, "free counter drift");
+            assert_eq!(
+                free + down + running[pi],
+                total,
+                "partition {pi}: free {free} + down {down} + running {} != total",
+                running[pi]
+            );
+        }
+    }
 }
 
 impl Component for JobEngine<'_> {
-    fn on_event(&mut self, _now: f64, ev: &Event, _out: &mut Vec<ScheduledEvent>) {
+    fn on_event(&mut self, now: f64, ev: &Event, out: &mut Vec<ScheduledEvent>) {
         match ev {
             Event::Submit { job } => {
                 if let Some(&ji) = self.idx_of.get(job) {
@@ -2002,6 +2421,15 @@ impl Component for JobEngine<'_> {
             }
             // Informational for observers; the engine produced it.
             Event::Retime { .. } => {}
+            // Fault events: kills (and their requeueing Submits) are
+            // processed synchronously here, so the pools are settled
+            // before this batch's quiescent scheduling pass runs.
+            Event::NodeDown { cell, nodes } => self.node_down(now, *cell, *nodes, out),
+            Event::NodeUp { cell, nodes } => self.node_up(*cell, *nodes),
+            Event::LinkDegraded { bundle, factor } => self.link_health_change(*bundle, *factor),
+            Event::LinkRestored { bundle } => self.link_health_change(*bundle, 1.0),
+            // Self-emitted notification for observers.
+            Event::Kill { .. } => {}
         }
     }
 
@@ -2021,20 +2449,32 @@ impl Component for JobEngine<'_> {
     }
 
     fn accept_event(&mut self, _now: f64, ev: &Event) -> bool {
-        if !self.coupling.enabled() {
-            return true;
-        }
-        match ev {
+        if let Event::End { job, gen, .. } = ev {
+            // A fault-killed job's pending End is stale the moment the
+            // kill bumps its generation base: only the live coupled
+            // generation (or, uncoupled, the base itself — what the
+            // requeued start stamps) is real. Checked before the
+            // coupling gate so kills invalidate Ends in uncoupled runs
+            // too; the map is empty in fault-free runs.
+            if let Some(&base) = self.gen_base.get(job) {
+                return match self.coupled.get(job) {
+                    Some(cj) => *gen == cj.gen,
+                    None => *gen == base,
+                };
+            }
+            if !self.coupling.enabled() {
+                return true;
+            }
             // Only the current generation of a coupled job's End is
             // real; re-timed-away generations are stale. A job absent
             // from the coupled map already completed (its current End
             // fired), so any stamped End left for it is stale too.
-            Event::End { job, gen, .. } => match self.coupled.get(job) {
+            return match self.coupled.get(job) {
                 Some(cj) => *gen == cj.gen,
                 None => *gen == 0,
-            },
-            _ => true,
+            };
         }
+        true
     }
 
     fn snapshot(&mut self) {
@@ -2173,12 +2613,24 @@ impl<'a> ReplaySession<'a> {
         &self.engine.jobs
     }
 
-    /// Kernel skip counter + retime elisions of the session so far.
+    /// Kernel skip counter, retime elisions and fault-robustness
+    /// counters of the session so far.
     pub fn counters(&self) -> RunCounters {
         RunCounters {
             events_skipped: self.sim.events_skipped(),
             retimes_elided: self.engine.retimes_elided,
+            killed: self.engine.killed,
+            requeued: self.engine.requeued,
+            wasted_node_seconds: self.engine.wasted_node_seconds,
+            recovery_p95: p95(&self.engine.recovery_stretch),
         }
+    }
+
+    /// Assert the fault conservation invariant: per partition,
+    /// `free + down + running == total` and the O(1) free counter
+    /// matches the pool sum. Cheap enough to call per step in tests.
+    pub fn assert_conserved(&self) {
+        self.engine.assert_conserved();
     }
 
     /// Assert the workload fully drained (every job placed and done).
@@ -2225,6 +2677,7 @@ mod tests {
             submit_time: submit,
             boundness: 1.0,
             comm_fraction: 0.0,
+            checkpoint: CheckpointPolicy::None,
         }
     }
 
@@ -2438,6 +2891,7 @@ mod tests {
                     submit_time: rng.range_f64(0.0, 100.0),
                     boundness: rng.f64(),
                     comm_fraction: rng.f64() * 0.5,
+                    checkpoint: CheckpointPolicy::None,
                 }
             })
             .collect()
@@ -2728,6 +3182,97 @@ mod tests {
         s.release(Partition::Booster, &c);
         let again = s.place(Partition::Booster, 270).unwrap();
         assert_eq!(again.nodes_per_cell, vec![(0, 180), (1, 90)]);
+    }
+
+    /// A NodeDown that doesn't fit in the free pool kills the running
+    /// job; with no checkpoints the requeue repeats everything.
+    #[test]
+    fn node_down_kills_and_requeues_with_full_rework() {
+        let mut s = sched();
+        let events = vec![ScheduledEvent::at(60.0, Event::NodeDown { cell: 0, nodes: 10 })];
+        let rec = s.run_with(vec![job(1, 180, 100.0, 0.0)], events, &mut []);
+        // Killed at 60 on cell 0, restarted from scratch on surviving
+        // capacity: completes a full 100 s later.
+        assert_eq!(rec[&1].start_time, 60.0);
+        assert_eq!(rec[&1].end_time, 160.0);
+        assert_eq!(s.last_run.killed, 1);
+        assert_eq!(s.last_run.requeued, 0);
+        // All 60 elapsed seconds on 180 nodes were wasted.
+        assert!((s.last_run.wasted_node_seconds - 60.0 * 180.0).abs() < 1e-6);
+        // Recovery stretch: first start 0, final end 160, nominal 100.
+        assert!((s.last_run.recovery_p95 - 1.6).abs() < 1e-9);
+    }
+
+    /// Periodic checkpoints truncate the rework to the last completed
+    /// boundary and charge only the overshoot as waste.
+    #[test]
+    fn periodic_checkpoint_truncates_rework() {
+        let mut s = sched();
+        let mut j = job(1, 180, 100.0, 0.0);
+        j.checkpoint = CheckpointPolicy::Periodic(45.0);
+        let events = vec![ScheduledEvent::at(60.0, Event::NodeDown { cell: 0, nodes: 10 })];
+        let rec = s.run_with(vec![j], events, &mut []);
+        // 60 s done, last checkpoint at 45: requeue with 55 s rework.
+        assert!((rec[&1].end_time - 115.0).abs() < 1e-9);
+        assert_eq!(s.last_run.killed, 1);
+        assert_eq!(s.last_run.requeued, 1);
+        // Only the 15 s past the checkpoint were thrown away.
+        assert!((s.last_run.wasted_node_seconds - 15.0 * 180.0).abs() < 1e-6);
+    }
+
+    /// NodeUp restores exactly the downed capacity: oversized and
+    /// repeated repairs are clamped, never double-freeing nodes.
+    #[test]
+    fn node_up_restores_without_double_free() {
+        let mut s = sched();
+        let events = vec![
+            ScheduledEvent::at(10.0, Event::NodeDown { cell: 0, nodes: 50 }),
+            ScheduledEvent::at(20.0, Event::NodeUp { cell: 0, nodes: 500 }),
+            ScheduledEvent::at(30.0, Event::NodeUp { cell: 0, nodes: 50 }),
+        ];
+        let jobs = vec![job(1, 10, 5.0, 0.0), job(2, 3456, 1.0, 25.0)];
+        let rec = s.run_with(jobs, events, &mut []);
+        // Free capacity is back to the full machine at 25, so the
+        // whole-partition job starts on submit — and the late stray
+        // NodeUp must not push free past total.
+        assert_eq!(rec[&2].start_time, 25.0);
+        assert_eq!(s.free_nodes(Partition::Booster), 3456);
+        assert_eq!(s.last_run.killed, 0);
+    }
+
+    /// Fault events on a cell outside every partition are ignored.
+    #[test]
+    fn fault_on_unknown_cell_is_ignored() {
+        let mut s = sched();
+        let events = vec![
+            ScheduledEvent::at(1.0, Event::NodeDown { cell: 9999, nodes: 10 }),
+            ScheduledEvent::at(2.0, Event::NodeUp { cell: 9999, nodes: 10 }),
+        ];
+        let rec = s.run_with(vec![job(1, 100, 10.0, 0.0)], events, &mut []);
+        assert_eq!(rec[&1].end_time, 10.0);
+        assert_eq!(s.free_nodes(Partition::Booster), 3456);
+    }
+
+    /// Faults compose with runtime coupling: the killed job's stale
+    /// coupled End is skipped, survivors re-time, and the requeued
+    /// attempt completes with truncated rework.
+    #[test]
+    fn faults_compose_with_coupling() {
+        let cfg = MachineConfig::leonardo();
+        let mut s = Scheduler::with_coupling(&cfg, Coupling::full());
+        let mut a = job(1, 400, 100.0, 0.0);
+        a.comm_fraction = 0.5;
+        a.checkpoint = CheckpointPolicy::Periodic(10.0);
+        let mut b = job(2, 150, 400.0, 0.0);
+        b.comm_fraction = 0.2;
+        let events = vec![ScheduledEvent::at(50.0, Event::NodeDown { cell: 0, nodes: 30 })];
+        let rec = s.run_with(vec![a, b], events, &mut []);
+        assert_eq!(s.last_run.killed, 1, "the multi-cell job on cell 0 dies");
+        assert_eq!(s.last_run.requeued, 1);
+        assert!(rec[&1].start_time >= 50.0, "job 1 requeued after the fault");
+        assert!(rec[&1].end_time > rec[&1].start_time);
+        assert!(s.last_run.wasted_node_seconds > 0.0);
+        assert_eq!(s.free_nodes(Partition::Booster), 3456 - 30);
     }
 
     /// Both engines and the rescan loop stay bit-for-bit identical

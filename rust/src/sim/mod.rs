@@ -138,6 +138,33 @@ pub enum Event {
         dvfs_scale: f64,
         end: f64,
     },
+    /// `nodes` nodes of `cell` failed. The scheduler shrinks the cell's
+    /// free pool (killing or checkpoint-requeueing running jobs if the
+    /// free capacity doesn't cover the loss) and re-times survivors.
+    NodeDown { cell: u32, nodes: u32 },
+    /// `nodes` previously failed nodes of `cell` were repaired and
+    /// rejoin the free pool (clamped to what is actually down — a
+    /// repair can never double-free).
+    NodeUp { cell: u32, nodes: u32 },
+    /// Global-link bundle `bundle` degraded to `factor` (0 < factor
+    /// <= 1) of its nominal capacity. Priced by the congestion-coupled
+    /// retimer through [`crate::network::Network::set_link_health`].
+    LinkDegraded { bundle: u32, factor: f64 },
+    /// Bundle `bundle` restored to nominal capacity.
+    LinkRestored { bundle: u32 },
+    /// A running job was killed by a fault. Emitted by the scheduler so
+    /// observers unwind their `Start` bookkeeping; `wasted_s` is the
+    /// wall-clock work lost (elapsed minus checkpointed progress) the
+    /// power monitor attributes as wasted joules. `requeued` tells
+    /// telemetry whether the job resubmits (checkpointed) or reworks
+    /// from scratch.
+    Kill {
+        job: JobId,
+        booster: bool,
+        cells: Cells,
+        wasted_s: f64,
+        requeued: bool,
+    },
 }
 
 impl Event {
@@ -151,17 +178,23 @@ impl Event {
             Event::Submit { job }
             | Event::Start { job, .. }
             | Event::End { job, .. }
-            | Event::Retime { job, .. } => Some(*job),
-            Event::CapChange { .. } => None,
+            | Event::Retime { job, .. }
+            | Event::Kill { job, .. } => Some(*job),
+            Event::CapChange { .. }
+            | Event::NodeDown { .. }
+            | Event::NodeUp { .. }
+            | Event::LinkDegraded { .. }
+            | Event::LinkRestored { .. } => None,
         }
     }
 
-    /// Total node count of a `Start`/`End` placement (0 otherwise).
+    /// Total node count of a `Start`/`End`/`Kill` placement (0
+    /// otherwise).
     pub fn nodes(&self) -> u32 {
         match self {
-            Event::Start { cells, .. } | Event::End { cells, .. } => {
-                cells.iter().map(|&(_, n)| n).sum()
-            }
+            Event::Start { cells, .. }
+            | Event::End { cells, .. }
+            | Event::Kill { cells, .. } => cells.iter().map(|&(_, n)| n).sum(),
             _ => 0,
         }
     }

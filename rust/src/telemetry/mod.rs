@@ -298,6 +298,11 @@ pub struct EventCounter {
     submitted: u64,
     started: u64,
     ended: u64,
+    killed: u64,
+    /// Nodes currently failed (gauge): NodeDown raises it, NodeUp lowers
+    /// it. Fault traces always pair the two with equal counts, so the
+    /// saturating arithmetic only matters for hand-crafted streams.
+    nodes_down: u64,
     /// Internal snapshot slot ([`Component::snapshot`]): counter values
     /// plus per-series length marks, buffers reused across snapshots.
     snap: Option<Box<CounterSnapshot>>,
@@ -310,6 +315,8 @@ struct CounterSnapshot {
     submitted: u64,
     started: u64,
     ended: u64,
+    killed: u64,
+    nodes_down: u64,
     marks: Vec<(String, usize)>,
 }
 
@@ -317,6 +324,11 @@ impl EventCounter {
     /// (submitted, started, ended) totals so far.
     pub fn totals(&self) -> (u64, u64, u64) {
         (self.submitted, self.started, self.ended)
+    }
+
+    /// (jobs killed by faults, nodes currently down) so far.
+    pub fn fault_totals(&self) -> (u64, u64) {
+        (self.killed, self.nodes_down)
     }
 
     fn sample(&mut self, now: f64) {
@@ -327,8 +339,15 @@ impl EventCounter {
             now,
             (self.submitted - self.started) as f64,
         );
-        self.store
-            .record("running_jobs", now, (self.started - self.ended) as f64);
+        // A killed incarnation left the machine without an End; stale
+        // Ends of killed generations are vetoed at pop time, so every
+        // dispatched End is a real completion and the subtraction never
+        // underflows. Fault-free runs have killed == 0: byte-identical.
+        self.store.record(
+            "running_jobs",
+            now,
+            (self.started - self.ended - self.killed) as f64,
+        );
     }
 }
 
@@ -338,9 +357,33 @@ impl Component for EventCounter {
             Event::Submit { .. } => self.submitted += 1,
             Event::Start { .. } => self.started += 1,
             Event::End { .. } => self.ended += 1,
-            // Not job lifecycle: cap moves and provisional-End re-times
-            // change rates, not job counts.
-            Event::CapChange { .. } | Event::Retime { .. } => return,
+            // A fault killed a running incarnation: the running gauge
+            // drops, and the kill total gets its own series. The series
+            // is only created on the first kill, so fault-free reports
+            // list exactly the series they always did.
+            Event::Kill { .. } => {
+                self.killed += 1;
+                self.store
+                    .record("jobs_killed_total", now, self.killed as f64);
+            }
+            // Failed-capacity gauge, sampled on the fault events
+            // themselves (which only exist in faulted runs).
+            Event::NodeDown { nodes, .. } => {
+                self.nodes_down = self.nodes_down.saturating_add(u64::from(*nodes));
+                self.store.record("nodes_down", now, self.nodes_down as f64);
+                return;
+            }
+            Event::NodeUp { nodes, .. } => {
+                self.nodes_down = self.nodes_down.saturating_sub(u64::from(*nodes));
+                self.store.record("nodes_down", now, self.nodes_down as f64);
+                return;
+            }
+            // Not job lifecycle: cap moves, provisional-End re-times and
+            // link-health episodes change rates, not job counts.
+            Event::CapChange { .. }
+            | Event::Retime { .. }
+            | Event::LinkDegraded { .. }
+            | Event::LinkRestored { .. } => return,
         }
         self.sample(now);
     }
@@ -350,6 +393,8 @@ impl Component for EventCounter {
         snap.submitted = self.submitted;
         snap.started = self.started;
         snap.ended = self.ended;
+        snap.killed = self.killed;
+        snap.nodes_down = self.nodes_down;
         self.store.save_marks(&mut snap.marks);
         self.snap = Some(snap);
     }
@@ -362,6 +407,8 @@ impl Component for EventCounter {
         self.submitted = snap.submitted;
         self.started = snap.started;
         self.ended = snap.ended;
+        self.killed = snap.killed;
+        self.nodes_down = snap.nodes_down;
         self.store.restore_marks(&snap.marks);
         self.snap = Some(snap);
     }
@@ -552,6 +599,64 @@ mod tests {
         let before = depth.len();
         c.on_event(6.0, &Event::CapChange { cap_mw: None }, &mut out);
         assert_eq!(c.store.get("queue_depth").unwrap().len(), before);
+        assert!(out.is_empty(), "observer pushed no events");
+    }
+
+    #[test]
+    fn fault_events_move_kill_and_down_gauges() {
+        let mut out = Vec::new();
+        let mut c = EventCounter::default();
+        let cells: crate::sim::Cells = vec![(0u32, 8u32)].into();
+        c.on_event(0.0, &Event::Submit { job: 1 }, &mut out);
+        c.on_event(
+            0.0,
+            &Event::Start {
+                job: 1,
+                booster: true,
+                dvfs_scale: 1.0,
+                cells: cells.clone(),
+            },
+            &mut out,
+        );
+        // Fault-free so far: no fault series exist yet.
+        assert!(c.store.get("jobs_killed_total").is_none());
+        assert!(c.store.get("nodes_down").is_none());
+        c.on_event(1.0, &Event::NodeDown { cell: 0, nodes: 8 }, &mut out);
+        c.on_event(
+            1.0,
+            &Event::Kill {
+                job: 1,
+                booster: true,
+                cells,
+                wasted_s: 1.0,
+                requeued: false,
+            },
+            &mut out,
+        );
+        assert_eq!(c.fault_totals(), (1, 8));
+        assert_eq!(
+            c.store.get("running_jobs").unwrap().last().unwrap().value,
+            0.0,
+            "kill drains the running gauge"
+        );
+        assert_eq!(
+            c.store.get("nodes_down").unwrap().last().unwrap().value,
+            8.0
+        );
+        c.on_event(2.0, &Event::NodeUp { cell: 0, nodes: 8 }, &mut out);
+        assert_eq!(c.fault_totals().1, 0);
+        // Link episodes touch no counters.
+        let samples = c.store.get("nodes_down").unwrap().len();
+        c.on_event(
+            3.0,
+            &Event::LinkDegraded {
+                bundle: 0,
+                factor: 0.5,
+            },
+            &mut out,
+        );
+        c.on_event(3.0, &Event::LinkRestored { bundle: 0 }, &mut out);
+        assert_eq!(c.store.get("nodes_down").unwrap().len(), samples);
         assert!(out.is_empty(), "observer pushed no events");
     }
 }

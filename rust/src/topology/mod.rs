@@ -132,6 +132,13 @@ pub struct Topology {
     pub links_per_cell_pair: u32,
     /// Cumulative node counts for address lookup.
     starts: Vec<u32>,
+    /// Optional per-bundle capacity overrides, Gbps, indexed by
+    /// [`cell_pair_index`]. `None` — the LEONARDO default — means every
+    /// bundle carries the uniform [`Topology::cell_pair_bw_gbps`]
+    /// budget; [`Topology::with_bundle_capacities`] installs a
+    /// heterogeneous table (e.g. a cabling defect or a thin long-reach
+    /// pair).
+    bundle_caps: Option<Vec<f64>>,
 }
 
 impl Topology {
@@ -179,7 +186,26 @@ impl Topology {
             cells,
             links_per_cell_pair,
             starts,
+            bundle_caps: None,
         }
+    }
+
+    /// Install a heterogeneous per-bundle capacity table (Gbps, one
+    /// entry per unordered cell pair in [`cell_pair_index`] order).
+    /// Every entry must be positive and finite; the length must cover
+    /// every bundle.
+    pub fn with_bundle_capacities(mut self, caps: Vec<f64>) -> Self {
+        assert_eq!(
+            caps.len(),
+            self.num_link_bundles(),
+            "bundle capacity table must cover every unordered cell pair"
+        );
+        assert!(
+            caps.iter().all(|&c| c.is_finite() && c > 0.0),
+            "bundle capacities must be positive and finite"
+        );
+        self.bundle_caps = Some(caps);
+        self
     }
 
     pub fn total_nodes(&self) -> u32 {
@@ -315,10 +341,23 @@ impl Topology {
         (lo as u32, (lo + 1 + (id - base)) as u32)
     }
 
-    /// Capacity of one link bundle, Gbps (every pair gets the same
-    /// `links_per_cell_pair` budget on the fully connected top level).
-    pub fn link_bundle_capacity_gbps(&self) -> f64 {
-        self.cell_pair_bw_gbps()
+    /// Capacity of link bundle `id`, Gbps. Uniform
+    /// ([`Topology::cell_pair_bw_gbps`] — every pair gets the same
+    /// `links_per_cell_pair` budget on the fully connected top level)
+    /// unless a heterogeneous table was installed with
+    /// [`Topology::with_bundle_capacities`].
+    pub fn link_bundle_capacity_gbps(&self, id: usize) -> f64 {
+        match &self.bundle_caps {
+            Some(caps) => caps[id],
+            None => self.cell_pair_bw_gbps(),
+        }
+    }
+
+    /// Whether every bundle carries the uniform budget (no heterogeneous
+    /// table installed) — the fast path the bandwidth model keeps
+    /// allocation- and scan-free.
+    pub fn uniform_bundles(&self) -> bool {
+        self.bundle_caps.is_none()
     }
 }
 
@@ -478,9 +517,32 @@ mod tests {
     #[test]
     fn link_bundle_capacity_matches_pair_bandwidth() {
         let t = leo();
-        assert_eq!(t.link_bundle_capacity_gbps(), 3600.0);
+        assert!(t.uniform_bundles());
+        for id in 0..t.num_link_bundles() {
+            assert_eq!(t.link_bundle_capacity_gbps(id), 3600.0);
+        }
         // The bundle space covers every physical global link.
         assert_eq!(t.num_link_bundles() as u32 * t.links_per_cell_pair, t.total_global_links());
+    }
+
+    #[test]
+    fn heterogeneous_bundle_capacities_override_the_uniform_budget() {
+        let t = leo();
+        let narrow = t.link_bundle_id(0, 1).unwrap();
+        let mut caps = vec![3600.0; t.num_link_bundles()];
+        caps[narrow] = 400.0;
+        let t = t.with_bundle_capacities(caps);
+        assert!(!t.uniform_bundles());
+        assert_eq!(t.link_bundle_capacity_gbps(narrow), 400.0);
+        let other = t.link_bundle_id(2, 3).unwrap();
+        assert_eq!(t.link_bundle_capacity_gbps(other), 3600.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover every unordered cell pair")]
+    fn short_bundle_capacity_table_is_rejected() {
+        let t = leo();
+        let _ = t.with_bundle_capacities(vec![3600.0; 3]);
     }
 
     #[test]

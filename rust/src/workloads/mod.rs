@@ -16,9 +16,12 @@
 //! (McIntosh-Smith et al., 2024) operations reports describe — for the
 //! coordinator's day-replay and the scheduler throughput bench.
 
+use crate::config::MachineConfig;
 use crate::network::{Network, Placement};
 use crate::power::{PowerModel, Utilization};
-use crate::scheduler::{Job, Partition};
+use crate::scheduler::{CheckpointPolicy, Job, Partition};
+use crate::sim::{Event, ScheduledEvent};
+use crate::topology::cell_pair_index;
 use crate::util::rng::Rng;
 
 /// One application benchmark.
@@ -237,6 +240,21 @@ impl AppClass {
             AppClass::AiInference => 0.05,
         }
     }
+
+    /// Checkpoint/restart behaviour under fault kills — constant per
+    /// class (no RNG draw, like [`AppClass::comm_fraction`]) so traces
+    /// generated before this field existed are byte-identical. Hero
+    /// runs and training jobs checkpoint (the operational practice the
+    /// JUWELS Booster and Isambard-AI reports describe); short capacity
+    /// and inference work just reruns.
+    pub fn checkpoint_policy(&self) -> CheckpointPolicy {
+        match self {
+            AppClass::HpcCapability => CheckpointPolicy::Periodic(3600.0),
+            AppClass::HpcCapacity => CheckpointPolicy::None,
+            AppClass::AiTraining => CheckpointPolicy::Periodic(1800.0),
+            AppClass::AiInference => CheckpointPolicy::None,
+        }
+    }
 }
 
 /// Deterministic generator of mixed HPC+AI arrival traces.
@@ -252,6 +270,10 @@ pub struct TraceGen {
     pub max_nodes: u32,
     /// Class mixture `(class, weight)`; weights need not sum to 1.
     pub mix: Vec<(AppClass, f64)>,
+    /// Checkpoint policy override: `None` uses each class's own
+    /// [`AppClass::checkpoint_policy`]; `Some` forces one policy on
+    /// every job (the campaign's `--checkpoint` axis).
+    pub checkpoint: Option<CheckpointPolicy>,
 }
 
 impl TraceGen {
@@ -271,6 +293,7 @@ impl TraceGen {
                 (AppClass::AiTraining, 0.20),
                 (AppClass::AiInference, 0.30),
             ],
+            checkpoint: None,
         }
     }
 
@@ -359,9 +382,175 @@ impl TraceGen {
                     submit_time: t,
                     boundness: class.boundness(&mut rng),
                     comm_fraction: class.comm_fraction(),
+                    // No RNG draw: byte-neutral for older traces.
+                    checkpoint: self.checkpoint.unwrap_or_else(|| class.checkpoint_policy()),
                 }
             })
             .collect()
+    }
+}
+
+/// A seeded fault-injection trace: node-failure events (a per-node
+/// MTBF with exponentially distributed repair times, failing `group`
+/// nodes at a time — a blade/switch granularity) and link-degradation
+/// episodes over the Booster partition's cell-pair bundles. Rendered as
+/// [`crate::sim`] fault events (`NodeDown`/`NodeUp`,
+/// `LinkDegraded`/`LinkRestored`) the scheduler consumes; every
+/// failure emits its matching repair, even past `duration_s`, so
+/// capacity always returns and no workload can strand.
+/// [`FaultTrace::none`] renders no events at all, keeping fault-free
+/// campaigns byte-identical to runs that predate fault injection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultTrace {
+    pub seed: u64,
+    /// Window failures arrive in, seconds (repairs may land later).
+    pub duration_s: f64,
+    /// Mean time between failures per node, seconds (0 = no node
+    /// faults).
+    pub node_mtbf_s: f64,
+    /// Mean repair time of a failed node group, seconds.
+    pub repair_mean_s: f64,
+    /// Nodes taken down per failure event.
+    pub group: u32,
+    /// Mean time between degradation episodes per link bundle, seconds
+    /// (0 = no link faults).
+    pub link_mtbf_s: f64,
+    /// Mean duration of a degradation episode, seconds.
+    pub link_repair_mean_s: f64,
+    /// Capacity factor of a degraded bundle, in (0, 1].
+    pub degraded_factor: f64,
+}
+
+impl Default for FaultTrace {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl FaultTrace {
+    /// The empty trace: no failure processes, no events — the
+    /// fault-free axis value.
+    pub fn none() -> Self {
+        FaultTrace {
+            seed: 0,
+            duration_s: 0.0,
+            node_mtbf_s: 0.0,
+            repair_mean_s: 0.0,
+            group: 0,
+            link_mtbf_s: 0.0,
+            link_repair_mean_s: 0.0,
+            degraded_factor: 1.0,
+        }
+    }
+
+    /// No failure process is armed (renders zero events).
+    pub fn is_none(&self) -> bool {
+        self.node_mtbf_s <= 0.0 && self.link_mtbf_s <= 0.0
+    }
+
+    /// Short report label for the campaign's fault axis.
+    pub fn label(&self) -> String {
+        if self.is_none() {
+            return "none".to_string();
+        }
+        let mut s = String::new();
+        if self.node_mtbf_s > 0.0 {
+            s.push_str(&format!("mtbf{:.0}k", self.node_mtbf_s / 1000.0));
+        }
+        if self.link_mtbf_s > 0.0 {
+            if !s.is_empty() {
+                s.push('+');
+            }
+            s.push_str(&format!("link{:.0}k", self.link_mtbf_s / 1000.0));
+        }
+        s
+    }
+
+    /// Render the trace against a machine: Poisson failure arrivals at
+    /// the partition-aggregate rate (`booster nodes / node_mtbf_s`),
+    /// each picking a uniform Booster cell and downing `group` nodes,
+    /// plus link episodes over the Booster cell pairs. Deterministic in
+    /// `seed`; events are emitted in arrival order (paired repairs
+    /// directly after their failures), which fixes the rank order the
+    /// campaign's divergent-band scheduling relies on.
+    pub fn events(&self, cfg: &MachineConfig) -> Vec<ScheduledEvent> {
+        let mut out = Vec::new();
+        if self.is_none() || self.duration_s <= 0.0 {
+            return out;
+        }
+        let booster: Vec<u32> = cfg
+            .cells
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.groups.iter().map(|g| g.gpu_nodes()).sum::<u32>() > 0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        if booster.is_empty() {
+            return out;
+        }
+        let total_nodes: u32 = cfg
+            .cells
+            .iter()
+            .flat_map(|c| c.groups.iter())
+            .map(|g| g.gpu_nodes())
+            .sum();
+        let mut rng = Rng::new(self.seed);
+        if self.node_mtbf_s > 0.0 && self.group > 0 && total_nodes > 0 {
+            let rate = total_nodes as f64 / self.node_mtbf_s;
+            let mut t = 0.0f64;
+            loop {
+                t += -(1.0 - rng.f64()).ln() / rate;
+                if t >= self.duration_s {
+                    break;
+                }
+                let cell = *rng.choose(&booster);
+                let repair = -(1.0 - rng.f64()).ln() * self.repair_mean_s.max(0.0);
+                out.push(ScheduledEvent::at(
+                    t,
+                    Event::NodeDown {
+                        cell,
+                        nodes: self.group,
+                    },
+                ));
+                out.push(ScheduledEvent::at(
+                    t + repair,
+                    Event::NodeUp {
+                        cell,
+                        nodes: self.group,
+                    },
+                ));
+            }
+        }
+        if self.link_mtbf_s > 0.0 && booster.len() > 1 {
+            let pairs = booster.len() * (booster.len() - 1) / 2;
+            let rate = pairs as f64 / self.link_mtbf_s;
+            let n = cfg.cells.len();
+            let mut t = 0.0f64;
+            loop {
+                t += -(1.0 - rng.f64()).ln() / rate;
+                if t >= self.duration_s {
+                    break;
+                }
+                let a = *rng.choose(&booster);
+                let b = loop {
+                    let b = *rng.choose(&booster);
+                    if b != a {
+                        break b;
+                    }
+                };
+                let bundle = cell_pair_index(n, a, b) as u32;
+                let repair = -(1.0 - rng.f64()).ln() * self.link_repair_mean_s.max(0.0);
+                out.push(ScheduledEvent::at(
+                    t,
+                    Event::LinkDegraded {
+                        bundle,
+                        factor: self.degraded_factor,
+                    },
+                ));
+                out.push(ScheduledEvent::at(t + repair, Event::LinkRestored { bundle }));
+            }
+        }
+        out
     }
 }
 
@@ -509,6 +698,84 @@ mod tests {
         let a = TraceGen::booster_day(100, 1).generate();
         let b = TraceGen::booster_day(100, 2).generate();
         assert!(a.iter().zip(&b).any(|(x, y)| x.nodes != y.nodes));
+    }
+
+    #[test]
+    fn per_class_checkpoint_policies_flow_into_traces() {
+        let jobs = TraceGen::booster_day(500, 42).generate();
+        assert!(jobs
+            .iter()
+            .any(|j| matches!(j.checkpoint, CheckpointPolicy::Periodic(_))));
+        assert!(jobs.iter().any(|j| j.checkpoint == CheckpointPolicy::None));
+        // The override forces one policy on every job without touching
+        // any other sampled field (no RNG draw).
+        let mut tg = TraceGen::booster_day(500, 42);
+        tg.checkpoint = Some(CheckpointPolicy::Periodic(600.0));
+        let forced = tg.generate();
+        for (a, b) in jobs.iter().zip(&forced) {
+            assert_eq!(b.checkpoint, CheckpointPolicy::Periodic(600.0));
+            assert_eq!(a.nodes, b.nodes);
+            assert_eq!(a.submit_time, b.submit_time);
+            assert_eq!(a.run_seconds, b.run_seconds);
+            assert_eq!(a.boundness, b.boundness);
+        }
+    }
+
+    #[test]
+    fn fault_trace_none_renders_no_events() {
+        let cfg = MachineConfig::leonardo();
+        assert!(FaultTrace::none().is_none());
+        assert!(FaultTrace::none().events(&cfg).is_empty());
+        assert_eq!(FaultTrace::none().label(), "none");
+    }
+
+    #[test]
+    fn fault_trace_is_deterministic_and_paired() {
+        let cfg = MachineConfig::leonardo();
+        let ft = FaultTrace {
+            seed: 7,
+            duration_s: 86_400.0,
+            node_mtbf_s: 2.0e7,
+            repair_mean_s: 3600.0,
+            group: 30,
+            link_mtbf_s: 5.0e6,
+            link_repair_mean_s: 1800.0,
+            degraded_factor: 0.5,
+        };
+        let a = ft.events(&cfg);
+        let b = ft.events(&cfg);
+        assert_eq!(a.len(), b.len());
+        assert!(!a.is_empty(), "expected some failures in a day");
+        let mut downs = 0i64;
+        let mut degrades = 0i64;
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.time, y.time);
+            match &x.event {
+                Event::NodeDown { cell, nodes } => {
+                    assert!(*nodes == 30, "group size respected");
+                    assert!((*cell as usize) < cfg.cells.len());
+                    assert!(x.time < ft.duration_s, "failures inside the window");
+                    downs += 1;
+                }
+                Event::NodeUp { .. } => downs -= 1,
+                Event::LinkDegraded { factor, .. } => {
+                    assert_eq!(*factor, 0.5);
+                    degrades += 1;
+                }
+                Event::LinkRestored { .. } => degrades -= 1,
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert_eq!(downs, 0, "every NodeDown has its NodeUp");
+        assert_eq!(degrades, 0, "every LinkDegraded has its LinkRestored");
+        assert!(!ft.label().is_empty());
+        // Different seeds give different traces.
+        let c = FaultTrace { seed: 8, ..ft.clone() };
+        let c = c.events(&cfg);
+        assert!(
+            a.len() != c.len() || a.iter().zip(&c).any(|(x, y)| x.time != y.time),
+            "seed must matter"
+        );
     }
 
     #[test]

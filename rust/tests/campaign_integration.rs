@@ -5,7 +5,7 @@
 
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::power::Utilization;
-use leonardo_twin::scheduler::{Job, Partition, PowerCap, Scheduler};
+use leonardo_twin::scheduler::{CheckpointPolicy, Job, Partition, PowerCap, Scheduler};
 use leonardo_twin::workloads::AppBenchmark;
 
 fn cell(t: &leonardo_twin::metrics::Table, row: usize, col: usize) -> f64 {
@@ -83,6 +83,7 @@ fn scheduler_campaign_under_power_cap_completes_and_throttles() {
             submit_time: (i as f64) * 5.0,
             boundness: 0.7,
             comm_fraction: 0.2,
+            checkpoint: CheckpointPolicy::None,
         })
         .collect();
     let recs = sched.run(jobs.clone());

@@ -13,7 +13,7 @@ use leonardo_twin::campaign::{run_sweep, run_sweep_streaming, SweepGrid};
 use leonardo_twin::config::{CellConfig, CellKind, MachineConfig, RackGroup};
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::hardware::NodeSpec;
-use leonardo_twin::scheduler::{Coupling, Job, Partition, PolicyKind, PowerCap, Scheduler};
+use leonardo_twin::scheduler::{CheckpointPolicy, Coupling, Job, Partition, PolicyKind, PowerCap, Scheduler};
 use leonardo_twin::sim::{Component, Event, ScheduledEvent};
 use leonardo_twin::topology::Routing;
 use leonardo_twin::workloads::TraceGen;
@@ -28,6 +28,7 @@ fn job(id: u64, nodes: u32, secs: f64, submit: f64, comm: f64) -> Job {
         submit_time: submit,
         boundness: 1.0,
         comm_fraction: comm,
+        checkpoint: CheckpointPolicy::None,
     }
 }
 

@@ -6,7 +6,7 @@ use leonardo_twin::config::MachineConfig;
 use leonardo_twin::lbm::decompose_3d;
 use leonardo_twin::network::{Network, Placement};
 use leonardo_twin::power::{cap_scale, DvfsPoint, PowerModel, Utilization};
-use leonardo_twin::scheduler::{Job, Partition, Scheduler};
+use leonardo_twin::scheduler::{CheckpointPolicy, Job, Partition, Scheduler};
 use leonardo_twin::storage::{StorageSystem, Stripe};
 use leonardo_twin::topology::{Routing, Topology};
 use leonardo_twin::util::json::Json;
@@ -40,6 +40,7 @@ fn prop_scheduler_random_streams() {
                     submit_time: rng.range_f64(0.0, 100.0),
                     boundness: rng.f64(),
                     comm_fraction: rng.f64() * 0.5,
+                    checkpoint: CheckpointPolicy::None,
                 }
             })
             .collect();

@@ -6,7 +6,7 @@
 use leonardo_twin::config::MachineConfig;
 use leonardo_twin::network::CongestionTracker;
 use leonardo_twin::power::{PowerModel, PowerMonitor, Utilization};
-use leonardo_twin::scheduler::{Job, JobRecord, Partition, Scheduler};
+use leonardo_twin::scheduler::{CheckpointPolicy, Job, JobRecord, Partition, Scheduler};
 use leonardo_twin::sim::Component;
 use leonardo_twin::telemetry::EventCounter;
 use leonardo_twin::util::rng::Rng;
@@ -28,6 +28,7 @@ fn job(id: u64, nodes: u32, secs: f64, submit: f64) -> Job {
         submit_time: submit,
         boundness: 1.0,
         comm_fraction: 0.0,
+        checkpoint: CheckpointPolicy::None,
     }
 }
 
@@ -68,6 +69,7 @@ fn event_engine_equals_rescan_on_random_streams() {
                     submit_time: rng.range_f64(0.0, 100.0),
                     boundness: rng.f64(),
                     comm_fraction: rng.f64() * 0.5,
+                    checkpoint: CheckpointPolicy::None,
                 }
             })
             .collect();
@@ -210,6 +212,62 @@ fn trace_10k_deterministic_across_runs() {
     let rec_b = sched().run(jobs_b);
     assert_identical(&rec_a, &rec_b, "10k trace");
     assert_eq!(rec_a.len(), 10_000);
+}
+
+/// Conservation under faults: stepping a faulted session in fixed
+/// increments keeps `free + down + running == total` at every pause
+/// point, checkpoint-requeued jobs all complete, and after the last
+/// repair the machine drains back to fully free.
+#[test]
+fn faulted_session_conserves_nodes_at_every_step() {
+    use leonardo_twin::scheduler::ReplaySession;
+    use leonardo_twin::sim::Simulation;
+    use leonardo_twin::workloads::FaultTrace;
+
+    let cfg = MachineConfig::leonardo();
+    let mut trace = TraceGen::booster_day(800, 7);
+    trace.checkpoint = Some(CheckpointPolicy::Periodic(1800.0));
+    let jobs = trace.generate();
+    let faults = FaultTrace {
+        seed: 11,
+        duration_s: 86_400.0,
+        node_mtbf_s: 5.0e5,
+        repair_mean_s: 7_200.0,
+        group: 32,
+        ..FaultTrace::none()
+    };
+    let extra = faults.events(&cfg);
+    assert!(!extra.is_empty(), "fault trace armed no failure process");
+
+    let mut s = sched();
+    let mut sim = Simulation::new();
+    let mut session = ReplaySession::new(&mut sim, &mut s, jobs.clone(), extra);
+    let mut obs: [&mut dyn Component; 0] = [];
+    let mut t = 0.0;
+    while t < 2.0 * 86_400.0 {
+        t += 900.0;
+        session.run_until(t, &mut obs);
+        session.assert_conserved();
+    }
+    session.run_to_end(&mut obs);
+    session.assert_conserved();
+    session.assert_complete();
+
+    let counters = session.counters();
+    assert!(counters.killed > 0, "no job overlapped a node failure");
+    assert_eq!(
+        counters.requeued, counters.killed,
+        "every job carries a periodic checkpoint, so every kill requeues"
+    );
+    assert!(counters.wasted_node_seconds > 0.0, "kills wasted no work");
+    assert!(counters.recovery_p95 >= 1.0, "recovery cannot beat nominal");
+
+    let recs = session.finish();
+    assert_eq!(recs.len(), jobs.len(), "a killed job never completed");
+    // Every NodeUp is paired with its NodeDown inside the trace, so
+    // once the queue drains the machine is whole again.
+    assert_eq!(s.free_nodes(Partition::Booster), 3456);
+    assert_eq!(s.free_nodes(Partition::DataCentric), 1536);
 }
 
 /// Observers on the shared event stream stay consistent with the job
