@@ -1,6 +1,6 @@
 //! Campaign sweep throughput: scenarios/sec on a 24-scenario acceptance
 //! grid (4 seeds x 3 caps x 2 mixes), fanned across all available
-//! cores, in four tiers:
+//! cores, in seven tiers:
 //!
 //! 1. **uncoupled / streaming** — the feedback-free ceiling;
 //! 2. **coupled / incremental streaming** — the production engine:
@@ -22,6 +22,14 @@
 //!    node-failure trace (MTBF-driven group outages, exponential
 //!    repair) with periodic checkpoints, so every kill requeues the
 //!    victim with truncated rework and the survivors re-time.
+//! 7. **distributed fleet** — ISSUE 8: the coordinator + worker-fleet
+//!    service running tier 6's coupled faulted grid with 1, 2 and 4
+//!    in-process workers over real loopback TCP — consistent-hash
+//!    sharding, the length-prefixed JSON wire, and the grid-index slot
+//!    merge all on the timed path. Reports are asserted byte-identical
+//!    to tier 6 in both modes; the 2-worker fleet must reach >= 1.6x
+//!    the 1-worker fleet's scenario throughput at full scale (the ring
+//!    splits the 24 groups exactly 12/12).
 //!
 //! Gates: the incremental engine must run the coupled grid at >= 2x the
 //! PR 3 baseline, coupled throughput must land within 3x of uncoupled —
@@ -136,6 +144,30 @@ fn main() {
     let (faulted_s, faulted) =
         best_of(reps, || run_sweep_streaming(&twin, &faulted_grid, threads));
 
+    // Tier 7 (ISSUE 8): the distributed service on the same coupled
+    // faulted grid. Each fleet size pays the whole service — TCP
+    // accept, spec push, ring dispatch, JSON rows, slot merge — so the
+    // 2-vs-1 ratio measures how well consistent-hash sharding scales
+    // real sweep work, not an idealized kernel.
+    let (dist1_s, dist1) = best_of(reps, || {
+        twin.sweep_distributed(&faulted_grid, false, 1)
+            .expect("1-worker distributed sweep")
+    });
+    let (dist2_s, dist2) = best_of(reps, || {
+        twin.sweep_distributed(&faulted_grid, false, 2)
+            .expect("2-worker distributed sweep")
+    });
+    let (dist4_s, dist4) = best_of(reps, || {
+        twin.sweep_distributed(&faulted_grid, false, 4)
+            .expect("4-worker distributed sweep")
+    });
+
+    // Byte-identity is the service's contract and is asserted in both
+    // modes: sharding, the wire format and merge order are invisible.
+    assert_eq!(faulted, dist1, "1-worker distributed sweep diverged");
+    assert_eq!(faulted, dist2, "2-worker distributed sweep diverged");
+    assert_eq!(faulted, dist4, "4-worker distributed sweep diverged");
+
     // The faulted sweep must be a real failure campaign: kills landed,
     // every kill requeued (all jobs carry the periodic checkpoint), and
     // destroyed node-hours show up as goodput < 1.
@@ -211,6 +243,8 @@ fn main() {
     let spread_penalty = spread_s / coupled_s;
     let fork_speedup = fork_base_s / forked_s;
     let fault_penalty = faulted_s / coupled_s;
+    let fleet2_speedup = dist1_s / dist2_s;
+    let fleet4_speedup = dist1_s / dist4_s;
     println!(
         "campaign sweep: 24 scenarios x {jobs} jobs on {threads} threads\n\
          \x20 uncoupled streaming            {uncoupled_s:.2} s = {:.2} scenarios/s\n\
@@ -220,11 +254,15 @@ fn main() {
          \x20 deferred-cap streaming         {fork_base_s:.2} s = {:.2} scenarios/s\n\
          \x20 deferred-cap forked            {forked_s:.2} s = {:.2} scenarios/s\n\
          \x20 coupled faulted streaming      {faulted_s:.2} s = {:.2} scenarios/s\n\
+         \x20 distributed fleet x1           {dist1_s:.2} s = {:.2} scenarios/s\n\
+         \x20 distributed fleet x2           {dist2_s:.2} s = {:.2} scenarios/s\n\
+         \x20 distributed fleet x4           {dist4_s:.2} s = {:.2} scenarios/s\n\
          \x20 incremental vs PR 3 baseline   {speedup_vs_oracle:.2}x\n\
          \x20 coupled vs uncoupled           {coupled_penalty:.2}x\n\
          \x20 SpreadLinks vs PackFirst       {spread_penalty:.2}x\n\
          \x20 forked vs streaming            {fork_speedup:.2}x\n\
          \x20 faulted vs fault-free          {fault_penalty:.2}x\n\
+         \x20 fleet x2 / x4 vs x1            {fleet2_speedup:.2}x / {fleet4_speedup:.2}x\n\
          \x20 re-times elided                {elided}\n\
          \x20 prefix forks / restores        {forks} / {restores}\n\
          \x20 kills / requeues / wasted nh   {killed} / {requeued} / {wasted_nh:.1}",
@@ -235,6 +273,9 @@ fn main() {
         per_s(fork_base_s),
         per_s(forked_s),
         per_s(faulted_s),
+        per_s(dist1_s),
+        per_s(dist2_s),
+        per_s(dist4_s),
     );
     println!("max p95 stretch across the grid: {max_stretch:.3}x nominal");
 
@@ -307,6 +348,43 @@ fn main() {
         Err(e) => eprintln!("warning: could not write BENCH_campaign.json: {e}"),
     }
 
+    // The distributed-service trajectory rides in its own artifact so
+    // the fleet-scaling history is diffable independently of the
+    // single-process tiers.
+    let dist_json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"campaign_distributed\",\n",
+            "  \"grid\": \"4 seeds x 3 caps x 2 mixes (hpc+day), coupled + faulted\",\n",
+            "  \"smoke\": {},\n",
+            "  \"jobs_per_scenario\": {},\n",
+            "  \"fleet1_seconds\": {:.3},\n",
+            "  \"fleet1_scenarios_per_s\": {:.3},\n",
+            "  \"fleet2_seconds\": {:.3},\n",
+            "  \"fleet2_scenarios_per_s\": {:.3},\n",
+            "  \"fleet4_seconds\": {:.3},\n",
+            "  \"fleet4_scenarios_per_s\": {:.3},\n",
+            "  \"fleet2_speedup_vs_fleet1\": {:.3},\n",
+            "  \"fleet4_speedup_vs_fleet1\": {:.3},\n",
+            "  \"reports_identical_to_streaming\": true\n",
+            "}}\n"
+        ),
+        smoke,
+        jobs,
+        dist1_s,
+        per_s(dist1_s),
+        dist2_s,
+        per_s(dist2_s),
+        dist4_s,
+        per_s(dist4_s),
+        fleet2_speedup,
+        fleet4_speedup,
+    );
+    match std::fs::write("BENCH_distributed.json", &dist_json) {
+        Ok(()) => println!("wrote BENCH_distributed.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_distributed.json: {e}"),
+    }
+
     // Acceptance gates (ISSUE 4): incremental >= 2x the PR 3 retime-all
     // baseline on the coupled grid, and coupled within 3x of uncoupled.
     // ISSUE 5 adds the policy tier: SpreadLinks placement overhead
@@ -350,4 +428,19 @@ fn main() {
         "faulted sweep {fault_penalty:.2}x slower than the fault-free streaming \
          tier (gate: within {max_fault}x)"
     );
+
+    // ISSUE 8 gate, full scale only: the 2-worker fleet must reach
+    // >= 1.6x the 1-worker fleet's throughput. The ring splits the 24
+    // groups exactly 12/12, so the shortfall from 2.0x is pure service
+    // overhead (connection setup, JSON rows, merge). The smoke grid is
+    // too small to gate — a 1-second run is dominated by the fixed
+    // per-fleet costs the full-scale run amortizes — but its reports
+    // were still asserted byte-identical above.
+    if !smoke {
+        assert!(
+            fleet2_speedup >= 1.6,
+            "2-worker fleet only {fleet2_speedup:.2}x the 1-worker fleet \
+             (gate: >= 1.6x)"
+        );
+    }
 }

@@ -145,7 +145,7 @@ fn cap_label(cap_mw: Option<f64>) -> String {
 /// The sweep grid: arrival seeds x facility power-cap levels x workload
 /// mixes (by [`TraceGen::named`] name) x placement policies, each
 /// scenario a `jobs`-job day.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepGrid {
     pub seeds: Vec<u64>,
     pub caps: Vec<Option<f64>>,
@@ -363,6 +363,21 @@ impl SweepGrid {
             }
         }
         out
+    }
+
+    /// The grid's canonical work units for a given engine mode: fork
+    /// groups when `fork` is on, one singleton group per scenario
+    /// otherwise. This is the unit the distributed service assigns to
+    /// workers, and pinning it here (rather than letting coordinator
+    /// and worker each decide) is what lets both sides number groups
+    /// identically from the grid alone — the wire only ever carries
+    /// group *ids*.
+    pub fn work_groups(&self, fork: bool) -> Vec<Vec<usize>> {
+        if fork {
+            self.fork_groups()
+        } else {
+            (0..self.len()).map(|i| vec![i]).collect()
+        }
     }
 }
 
@@ -718,7 +733,12 @@ pub fn run_scenario_arena(
 /// re-count identically; and the injected cap move enters the divergent
 /// sequence band at the same rank the streaming path schedules it at.
 /// Only the `forks`/`restores` bookkeeping differs.
-fn replay_group(
+///
+/// Public because it is the unit of work the distributed sweep service
+/// dispatches: a [`crate::service`] worker replays assigned groups on
+/// its own persistent arena with exactly this function, which is how
+/// the distributed merge stays byte-identical to the local engines.
+pub fn replay_group(
     arena: &mut Option<ReplayRig>,
     twin: &Twin,
     scenarios: &[Scenario],
@@ -1102,6 +1122,16 @@ pub fn parse_threads(threads: Option<usize>) -> Result<usize> {
     }
 }
 
+/// Resolve a distributed-service worker-count flag (`--workers`,
+/// `--expect`): an explicit 0 is an error rather than a silent clamp,
+/// an absent flag stays absent for the caller's default to apply.
+pub fn parse_workers(flag: &str, value: Option<usize>) -> Result<Option<usize>> {
+    match value {
+        Some(0) => Err(anyhow!("{flag} 0: need at least one worker")),
+        other => Ok(other),
+    }
+}
+
 /// Parse a `--routing` flag into a [`crate::topology::Routing`] policy.
 pub fn parse_routing(name: &str) -> Result<crate::topology::Routing> {
     match name.to_ascii_lowercase().as_str() {
@@ -1124,9 +1154,10 @@ pub fn parse_policies(list: &str) -> Result<Vec<PolicyKind>> {
         .map(|s| s.trim())
         .filter(|s| !s.is_empty())
         .map(|s| match s.to_ascii_lowercase().as_str() {
-            "pack" | "packfirst" => Ok(PolicyKind::PackFirst),
-            "spread" | "spreadlinks" => Ok(PolicyKind::SpreadLinks),
-            other => Err(anyhow!("--policy '{other}': expected pack or spread")),
+            "packfirst" => Ok(PolicyKind::PackFirst),
+            "spreadlinks" => Ok(PolicyKind::SpreadLinks),
+            other => PolicyKind::from_name(other)
+                .map_err(|_| anyhow!("--policy '{other}': expected pack or spread")),
         })
         .collect::<Result<_>>()?;
     let policies = dedup_first(parsed);
@@ -1803,6 +1834,12 @@ mod tests {
         assert!(parse_threads(Some(0)).is_err());
         assert_eq!(parse_threads(Some(3)).unwrap(), 3);
         assert!(parse_threads(None).unwrap() >= 1);
+        // Distributed worker counts: 0 is an error, absent stays
+        // absent so the caller's default applies.
+        let err = parse_workers("--workers", Some(0)).unwrap_err();
+        assert!(err.to_string().contains("--workers 0"));
+        assert_eq!(parse_workers("--expect", Some(2)).unwrap(), Some(2));
+        assert_eq!(parse_workers("--workers", None).unwrap(), None);
         // Routing policies.
         assert!(matches!(parse_routing("valiant"), Ok(crate::topology::Routing::Valiant)));
         assert!(matches!(parse_routing("MINIMAL"), Ok(crate::topology::Routing::Minimal)));

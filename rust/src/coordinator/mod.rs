@@ -34,7 +34,9 @@ use crate::Result;
 pub const HOST_BW_GBS: f64 = 20.0;
 pub const HOST_GFLOPS: f64 = 50.0;
 
-/// The assembled twin of one machine.
+/// The assembled twin of one machine. `Clone` so the distributed sweep
+/// service can hand each in-process worker its own instance.
+#[derive(Clone)]
 pub struct Twin {
     pub cfg: MachineConfig,
     pub topo: Topology,
@@ -668,6 +670,28 @@ impl Twin {
         threads: usize,
     ) -> crate::campaign::CampaignReport {
         crate::campaign::run_sweep_forked(self, grid, threads)
+    }
+
+    /// The same grid on the distributed sweep service's in-process
+    /// fleet: a coordinator on an ephemeral loopback port plus
+    /// `workers` worker threads, each replaying consistent-hash-
+    /// assigned groups on its own cloned twin and streaming rows back
+    /// over the TCP protocol (CLI: `leonardo-twin serve --workers N`).
+    /// Byte-identical to [`Twin::sweep`] (`fork = false`) or
+    /// [`Twin::sweep_forked`] (`fork = true`) for any worker count.
+    pub fn sweep_distributed(
+        &self,
+        grid: &crate::campaign::SweepGrid,
+        fork: bool,
+        workers: usize,
+    ) -> Result<crate::campaign::CampaignReport> {
+        let spec = crate::service::SweepSpec {
+            grid: grid.clone(),
+            routing: self.net.routing,
+            fork,
+        };
+        let (report, _service) = crate::service::run_distributed(self, &spec, workers, &[])?;
+        Ok(report)
     }
 
     /// §2.2 latency budget table.

@@ -55,6 +55,11 @@
 //!   deterministic, thread-count-independent report
 //!   ([`campaign::run_sweep_streaming`], with [`campaign::run_sweep`]
 //!   kept as the join-then-merge baseline; CLI `sweep`);
+//! * [`service`] — the distributed sweep service: a coordinator +
+//!   worker fleet sharding scenario groups over a consistent-hash ring
+//!   and streaming rows back over length-prefixed JSON on TCP, with
+//!   reports byte-identical to the single-process engines (CLI
+//!   `serve` / `work`);
 //! * [`metrics`] — table/CSV/markdown emitters used by the CLI and benches.
 //!
 //! Compute is real: the LBM/GEMM/CG kernels are JAX + Pallas programs
@@ -76,6 +81,7 @@ pub mod perfmodel;
 pub mod power;
 pub mod runtime;
 pub mod scheduler;
+pub mod service;
 pub mod sim;
 pub mod software;
 pub mod storage;

@@ -13,14 +13,17 @@
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
+use std::net::SocketAddr;
+
 use leonardo_twin::campaign::{
     parse_caps, parse_checkpoint, parse_faults, parse_mixes, parse_policies, parse_routing,
-    parse_threads, SweepGrid,
+    parse_threads, parse_workers, SweepGrid,
 };
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::metrics::Table;
 use leonardo_twin::runtime::Engine;
 use leonardo_twin::scheduler::{CheckpointPolicy, Coupling, PolicyKind};
+use leonardo_twin::service::{self, parse_addr, CoordinatorConfig, SweepSpec};
 use leonardo_twin::topology::Routing;
 use leonardo_twin::workloads::{FaultTrace, TraceGen};
 
@@ -55,6 +58,23 @@ COMMANDS:
                        [--mixes LIST] [--threads T] [--coupled] [--routing P]
                        [--policy LIST] [--cap-time SEC] [--fork]
                        [--faults SPEC] [--checkpoint CP]
+  serve       Distributed sweep service coordinator: accept a sweep
+              grid submission, shard its scenario groups across a
+              worker fleet over a consistent-hash ring, and merge the
+              streamed rows into the same report `sweep` prints —
+              byte-identical for any worker count. Fleet is either
+              in-process (--workers N) or TCP (--listen ADDR, serving
+              `work` processes). Takes every sweep grid flag; a grid
+              must be given explicitly (no defaults)
+                       [--workers N | --listen ADDR [--expect N]]
+                       [--jobs N] [--seed S] [--seeds K] [--caps LIST]
+                       [--mixes LIST] [--coupled] [--routing P]
+                       [--policy LIST] [--cap-time SEC] [--fork]
+                       [--faults SPEC] [--checkpoint CP]
+  work        Distributed sweep worker: connect to a `serve`
+              coordinator, replay assigned scenario groups on a
+              persistent arena, stream rows back, exit on shutdown
+                       --connect HOST:PORT
   calibrate   Measure the AOT kernels through PJRT
   all         Every table in paper order              [--calibrated]
 
@@ -107,6 +127,15 @@ OPTIONS:
                     job — 'none' (a fault kill repeats everything) or an
                     interval in seconds (a kill repeats at most one
                     interval); default: per-app-class policies
+  --workers N       serve: run an in-process fleet of N workers on an
+                    ephemeral loopback port (tests/CI; mutually
+                    exclusive with --listen)
+  --listen ADDR     serve: listen for `work` processes on ADDR
+                    (host:port)
+  --expect N        serve: wait for N workers before the first dispatch
+                    (default 1; --listen mode only)
+  --connect ADDR    work: coordinator address (host:port); retries for
+                    up to 30s while the coordinator starts
 ";
 
 struct Args {
@@ -129,6 +158,14 @@ struct Args {
     fork: bool,
     faults: Option<String>,
     checkpoint: Option<String>,
+    workers: Option<usize>,
+    listen: Option<String>,
+    expect: Option<usize>,
+    connect: Option<String>,
+    /// Whether any grid-shaping flag (`--seeds`/`--caps`/`--mixes`/
+    /// `--jobs`) was given explicitly — `serve` refuses to fall back to
+    /// the `sweep` defaults, a service replays *submitted* grids.
+    grid_given: bool,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -154,6 +191,11 @@ fn parse_args() -> Result<Args, String> {
         fork: false,
         faults: None,
         checkpoint: None,
+        workers: None,
+        listen: None,
+        expect: None,
+        connect: None,
+        grid_given: false,
     };
     while let Some(a) = argv.next() {
         match a.as_str() {
@@ -186,8 +228,27 @@ fn parse_args() -> Result<Args, String> {
                         .ok_or("--jobs needs a value")?
                         .parse()
                         .map_err(|e| format!("--jobs: {e}"))?,
+                );
+                args.grid_given = true;
+            }
+            "--workers" => {
+                args.workers = Some(
+                    argv.next()
+                        .ok_or("--workers needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--workers: {e}"))?,
                 )
             }
+            "--expect" => {
+                args.expect = Some(
+                    argv.next()
+                        .ok_or("--expect needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--expect: {e}"))?,
+                )
+            }
+            "--listen" => args.listen = Some(argv.next().ok_or("--listen needs a value")?),
+            "--connect" => args.connect = Some(argv.next().ok_or("--connect needs a value")?),
             "--seed" => {
                 args.seed = argv
                     .next()
@@ -208,10 +269,17 @@ fn parse_args() -> Result<Args, String> {
                     .next()
                     .ok_or("--seeds needs a value")?
                     .parse()
-                    .map_err(|e| format!("--seeds: {e}"))?
+                    .map_err(|e| format!("--seeds: {e}"))?;
+                args.grid_given = true;
             }
-            "--caps" => args.caps = argv.next().ok_or("--caps needs a value")?,
-            "--mixes" => args.mixes = argv.next().ok_or("--mixes needs a value")?,
+            "--caps" => {
+                args.caps = argv.next().ok_or("--caps needs a value")?;
+                args.grid_given = true;
+            }
+            "--mixes" => {
+                args.mixes = argv.next().ok_or("--mixes needs a value")?;
+                args.grid_given = true;
+            }
             "--threads" => {
                 args.threads = Some(
                     argv.next()
@@ -317,6 +385,55 @@ fn sweep_inputs(args: &Args) -> anyhow::Result<(SweepGrid, usize, Routing, Coupl
         grid = grid.with_fault_traces(vec![FaultTrace::none(), faults]);
     }
     Ok((grid, threads, routing, coupling))
+}
+
+/// How `serve` runs its fleet.
+#[derive(Debug)]
+enum ServeMode {
+    /// `--workers N`: coordinator + N worker threads on an ephemeral
+    /// loopback port, all in this process.
+    InProcess(usize),
+    /// `--listen ADDR [--expect N]`: TCP fleet of `work` processes.
+    Listen { addr: SocketAddr, expect: usize },
+}
+
+/// Validate and assemble every `serve` input. On top of the shared
+/// sweep grid validation: the grid must be explicit (a service replays
+/// *submitted* grids, there is no default sweep), `--workers 0` and
+/// `--expect 0` are errors, `--listen` must parse as host:port, and
+/// the two fleet modes are mutually exclusive.
+fn serve_inputs(args: &Args) -> anyhow::Result<(SweepGrid, Routing, ServeMode)> {
+    anyhow::ensure!(
+        args.grid_given,
+        "serve replays a submitted sweep grid and has no default grid: pass at \
+         least one of --seeds/--caps/--mixes/--jobs"
+    );
+    let (grid, _threads, routing, _coupling) = sweep_inputs(args)?;
+    let workers = parse_workers("--workers", args.workers)?;
+    let expect = parse_workers("--expect", args.expect)?;
+    let mode = match (workers, &args.listen) {
+        (Some(_), Some(_)) => anyhow::bail!(
+            "--workers (in-process fleet) and --listen (TCP fleet) are mutually \
+             exclusive: pick one"
+        ),
+        (Some(n), None) => {
+            anyhow::ensure!(
+                expect.is_none(),
+                "--expect applies to --listen mode: an in-process fleet always \
+                 has exactly --workers workers"
+            );
+            ServeMode::InProcess(n)
+        }
+        (None, Some(listen)) => ServeMode::Listen {
+            addr: parse_addr(listen)?,
+            expect: expect.unwrap_or(1),
+        },
+        (None, None) => anyhow::bail!(
+            "serve needs a fleet: --listen ADDR (TCP `work` processes) or \
+             --workers N (in-process)"
+        ),
+    };
+    Ok((grid, routing, mode))
 }
 
 fn print(t: &Table, markdown: bool) {
@@ -439,6 +556,70 @@ fn main() -> anyhow::Result<()> {
             }
             print(&report.summary_table(), md);
         }
+        "serve" => {
+            let (grid, routing, mode) = match serve_inputs(&args) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            };
+            twin.net.routing = routing;
+            let spec = SweepSpec {
+                grid: grid.clone(),
+                routing,
+                fork: args.fork,
+            };
+            let (report, fleet) = match mode {
+                ServeMode::InProcess(n) => {
+                    eprintln!(
+                        "serve: {} scenarios ({} groups) on an in-process fleet of {n} worker(s)",
+                        grid.len(),
+                        grid.work_groups(args.fork).len(),
+                    );
+                    service::run_distributed(&twin, &spec, n, &[])?
+                }
+                ServeMode::Listen { addr, expect } => {
+                    eprintln!(
+                        "serve: {} scenarios ({} groups), listening on {addr}, \
+                         dispatching at {expect} worker(s)",
+                        grid.len(),
+                        grid.work_groups(args.fork).len(),
+                    );
+                    let cfg = CoordinatorConfig {
+                        listen: addr,
+                        expect,
+                        replicas: service::DEFAULT_REPLICAS,
+                    };
+                    service::serve(&spec, &cfg)?
+                }
+            };
+            eprintln!(
+                "serve: fleet joined={} lost={} groups reassigned={} duplicate rows={}",
+                fleet.workers_joined,
+                fleet.workers_lost,
+                fleet.groups_reassigned,
+                fleet.duplicate_rows,
+            );
+            // Same stdout as `sweep`, so reports diff byte-for-byte.
+            print(&report.scenario_table(), md);
+            print(&report.cap_table(), md);
+            if grid.policies.len() > 1 {
+                print(&report.policy_table(), md);
+            }
+            print(&report.summary_table(), md);
+        }
+        "work" => {
+            let out = args
+                .connect
+                .as_deref()
+                .ok_or_else(|| anyhow::anyhow!("work needs --connect HOST:PORT"))
+                .and_then(service::work);
+            if let Err(e) = out {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
         "calibrate" => {
             let eng = engine(&args.artifacts)?;
             println!("platform: {}", eng.platform());
@@ -541,6 +722,11 @@ mod tests {
             fork: false,
             faults: None,
             checkpoint: None,
+            workers: None,
+            listen: None,
+            expect: None,
+            connect: None,
+            grid_given: false,
         }
     }
 
@@ -664,6 +850,89 @@ mod tests {
         assert!(coupling.enabled());
         assert_eq!(grid.policies, vec![PolicyKind::PackFirst, PolicyKind::SpreadLinks]);
         assert_eq!(grid.len(), 4 * 3 * 2 * 2);
+    }
+
+    /// Satellite: the `serve` flag-validation gaps — `--workers 0`,
+    /// bad `--listen` addresses and a grid-less `serve` all come back
+    /// as anyhow errors, never panics or silent defaults.
+    #[test]
+    fn serve_inputs_validates_fleet_flags() {
+        // A well-formed in-process submission.
+        let mut a = args();
+        a.grid_given = true;
+        a.workers = Some(2);
+        let (grid, routing, mode) = serve_inputs(&a).unwrap();
+        assert_eq!(grid.len(), 4 * 3 * 2);
+        assert_eq!(routing, Routing::Minimal);
+        assert!(matches!(mode, ServeMode::InProcess(2)));
+
+        // A well-formed TCP submission, --expect defaulting to 1.
+        let mut a = args();
+        a.grid_given = true;
+        a.listen = Some("127.0.0.1:7723".into());
+        let (_, _, mode) = serve_inputs(&a).unwrap();
+        match mode {
+            ServeMode::Listen { addr, expect } => {
+                assert_eq!(addr, "127.0.0.1:7723".parse::<SocketAddr>().unwrap());
+                assert_eq!(expect, 1);
+            }
+            other => panic!("expected listen mode, got {other:?}"),
+        }
+
+        // serve without any explicit grid flag: refused, a service
+        // replays submitted grids.
+        let mut a = args();
+        a.workers = Some(2);
+        let err = serve_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("no default grid"), "{err}");
+
+        // --workers 0 / --expect 0: errors, not silent clamps.
+        let mut a = args();
+        a.grid_given = true;
+        a.workers = Some(0);
+        let err = serve_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("--workers 0"), "{err}");
+
+        let mut a = args();
+        a.grid_given = true;
+        a.listen = Some("127.0.0.1:7723".into());
+        a.expect = Some(0);
+        let err = serve_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("--expect 0"), "{err}");
+
+        // Bad --listen addresses error cleanly through parse_addr.
+        for bad in ["nonsense", "127.0.0.1", "127.0.0.1:notaport", ""] {
+            let mut a = args();
+            a.grid_given = true;
+            a.listen = Some(bad.into());
+            assert!(serve_inputs(&a).is_err(), "--listen '{bad}' accepted");
+        }
+
+        // Mode conflicts and the fleet-less serve.
+        let mut a = args();
+        a.grid_given = true;
+        a.workers = Some(2);
+        a.listen = Some("127.0.0.1:7723".into());
+        let err = serve_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("mutually"), "{err}");
+
+        let mut a = args();
+        a.grid_given = true;
+        a.workers = Some(2);
+        a.expect = Some(2);
+        assert!(serve_inputs(&a).is_err(), "--expect with --workers accepted");
+
+        let mut a = args();
+        a.grid_given = true;
+        let err = serve_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("needs a fleet"), "{err}");
+
+        // Grid validation still applies underneath.
+        let mut a = args();
+        a.grid_given = true;
+        a.workers = Some(2);
+        a.mixes = "day,bogus".into();
+        assert!(serve_inputs(&a).is_err(), "bad grid accepted by serve");
     }
 
     #[test]

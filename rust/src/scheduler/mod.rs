@@ -244,6 +244,19 @@ impl PolicyKind {
         }
     }
 
+    /// Inverse of [`PolicyKind::name`] — the one place CLI flags and
+    /// the wire decode policy names, so a new policy that gets a
+    /// `name` arm without one here is caught by the round-trip tests.
+    pub fn from_name(name: &str) -> anyhow::Result<PolicyKind> {
+        match name {
+            "pack" => Ok(PolicyKind::PackFirst),
+            "spread" => Ok(PolicyKind::SpreadLinks),
+            other => anyhow::bail!(
+                "unknown placement policy '{other}' (known: pack, spread)"
+            ),
+        }
+    }
+
     /// Resolve the policy object.
     pub fn build(self) -> Arc<dyn PlacementPolicy> {
         match self {

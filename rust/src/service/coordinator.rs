@@ -1,0 +1,407 @@
+//! Coordinator side of the distributed sweep service.
+//!
+//! One listener, one reader thread per worker connection, and a single
+//! merge loop that owns all fleet state — the consistent-hash ring,
+//! the group-ownership table, and the same pre-sized slot table the
+//! mpsc streaming engine merges into. Workers stream `(grid index,
+//! stats)` rows; the merge loop drops each row into `slots[index]` and
+//! the final [`CampaignReport`] reads the slots out in grid order, so
+//! the report is byte-identical to `run_sweep_streaming` /
+//! `run_sweep_forked` for any worker count, join order, or timing.
+//!
+//! Fault tolerance is ownership-based: a group belongs to a worker
+//! from `Assign` until its `GroupDone` ack. When a connection dies,
+//! the worker leaves the ring and exactly its unacknowledged groups
+//! are re-dispatched over the survivors (consistent hashing keeps
+//! every surviving worker's assignment intact — see
+//! [`super::shard`]). A worker joining after dispatch (the rejoin
+//! path) enters the ring and picks up any groups orphaned while the
+//! ring was empty; duplicate rows from replay overlap merge
+//! idempotently into already-filled slots.
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::campaign::{CampaignReport, ScenarioStats};
+use crate::coordinator::Twin;
+
+use super::messages::{read_msg, write_msg, Msg, SweepSpec};
+use super::shard::{HashRing, DEFAULT_REPLICAS};
+use super::worker::{connect_retry, run_worker, WorkerOptions};
+
+/// Where and how the coordinator runs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Listen address (`--listen`).
+    pub listen: SocketAddr,
+    /// Workers to wait for before the first dispatch (`--expect`).
+    /// Late joiners beyond this are welcome — they enter the ring and
+    /// serve the rejoin path.
+    pub expect: usize,
+    /// Virtual ring points per worker.
+    pub replicas: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            listen: SocketAddr::from((Ipv4Addr::LOCALHOST, 7723)),
+            expect: 1,
+            replicas: DEFAULT_REPLICAS,
+        }
+    }
+}
+
+/// Fleet-side observability for one served sweep (the simulated
+/// numbers live in the [`CampaignReport`]; these are about the service
+/// itself).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Connections that completed the `Hello` handshake.
+    pub workers_joined: usize,
+    /// Connections lost before shutdown (includes crashed workers).
+    pub workers_lost: usize,
+    /// Group assignments re-dispatched after a loss (or to a rejoiner
+    /// after the fleet was empty).
+    pub groups_reassigned: usize,
+    /// Rows that arrived for an already-filled slot (replay overlap
+    /// after a re-dispatch); merged idempotently, never into the
+    /// report twice.
+    pub duplicate_rows: usize,
+}
+
+/// What a reader thread distils each worker connection into.
+enum CoEvent {
+    Joined { name: String, stream: TcpStream },
+    Row { index: u64, stats: ScenarioStats },
+    Done { worker: String, group: u64 },
+    Lost { name: String },
+}
+
+/// Pump one worker connection into the event channel. The write half
+/// is handed to the merge loop at `Hello`; any read error or protocol
+/// violation afterwards is a `Lost`.
+fn reader_loop(stream: TcpStream, tx: mpsc::Sender<CoEvent>) {
+    stream.set_nodelay(true).ok();
+    let write_half = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let name = match read_msg(&mut reader) {
+        Ok(Msg::Hello { worker }) => worker,
+        _ => return,
+    };
+    let joined = CoEvent::Joined {
+        name: name.clone(),
+        stream: write_half,
+    };
+    if tx.send(joined).is_err() {
+        return;
+    }
+    loop {
+        let ev = match read_msg(&mut reader) {
+            Ok(Msg::Row { index, stats }) => CoEvent::Row { index, stats },
+            Ok(Msg::GroupDone { group }) => CoEvent::Done {
+                worker: name.clone(),
+                group,
+            },
+            _ => break,
+        };
+        if tx.send(ev).is_err() {
+            return;
+        }
+    }
+    let _ = tx.send(CoEvent::Lost { name });
+}
+
+/// Assign `group_ids` across the ring and send each owner one `Assign`
+/// frame. Workers whose send fails are queued on `pending_lost` for
+/// the merge loop to process as a loss. Returns how many groups got an
+/// owner (0 on an empty ring — they stay orphaned for a rejoiner).
+fn dispatch(
+    group_ids: &[usize],
+    ring: &HashRing,
+    writers: &mut BTreeMap<String, TcpStream>,
+    owner: &mut [Option<String>],
+    pending_lost: &mut Vec<String>,
+) -> usize {
+    let mut per: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+    for &g in group_ids {
+        if let Some(w) = ring.assign_group(g) {
+            owner[g] = Some(w.to_string());
+            per.entry(w.to_string()).or_default().push(g as u64);
+        }
+    }
+    let mut assigned = 0;
+    for (name, groups) in per {
+        assigned += groups.len();
+        if let Some(stream) = writers.get_mut(&name) {
+            if write_msg(stream, &Msg::Assign { groups }).is_err()
+                && !pending_lost.contains(&name)
+            {
+                pending_lost.push(name);
+            }
+        }
+    }
+    assigned
+}
+
+/// Serve one sweep on an already-bound listener. Blocks until the
+/// report is fully merged (or the whole fleet is lost mid-sweep).
+fn serve_on(
+    listener: TcpListener,
+    spec: &SweepSpec,
+    expect: usize,
+    replicas: usize,
+) -> Result<(CampaignReport, ServiceStats)> {
+    ensure!(expect >= 1, "coordinator needs --expect >= 1 workers");
+    ensure!(!spec.grid.is_empty(), "refusing to serve an empty sweep grid");
+    let local = listener.local_addr().context("coordinator local address")?;
+    let stop = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<CoEvent>();
+    thread::scope(|s| {
+        let accept_tx = tx.clone();
+        let listener_ref = &listener;
+        let stop_ref = &stop;
+        s.spawn(move || {
+            for conn in listener_ref.incoming() {
+                if stop_ref.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { break };
+                let reader_tx = accept_tx.clone();
+                s.spawn(move || reader_loop(stream, reader_tx));
+            }
+        });
+        let out = merge_loop(spec, expect, replicas, &rx);
+        // Wind down: stop accepting (the self-connect unblocks the
+        // accept thread), then shut down any worker that joined too
+        // late for the merge loop to have seen it, so its reader
+        // thread unblocks before this scope joins.
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(local);
+        while let Ok(ev) = rx.recv_timeout(Duration::from_millis(200)) {
+            if let CoEvent::Joined { stream, .. } = ev {
+                let mut late = stream;
+                let _ = write_msg(&mut late, &Msg::Shutdown);
+            }
+        }
+        out
+    })
+}
+
+/// The single-threaded heart of the coordinator: consumes reader
+/// events, owns every piece of fleet state, merges rows by grid index.
+fn merge_loop(
+    spec: &SweepSpec,
+    expect: usize,
+    replicas: usize,
+    rx: &mpsc::Receiver<CoEvent>,
+) -> Result<(CampaignReport, ServiceStats)> {
+    let groups = spec.grid.work_groups(spec.fork);
+    let n = spec.grid.len();
+    let mut ring = HashRing::new(replicas);
+    let mut writers: BTreeMap<String, TcpStream> = BTreeMap::new();
+    // Ownership table: who a group is assigned to until its ack. An
+    // orphan (`None` after dispatch) is waiting for a (re)joiner.
+    let mut owner: Vec<Option<String>> = vec![None; groups.len()];
+    let mut done = vec![false; groups.len()];
+    // The same merge the mpsc streaming path does: a pre-sized slot
+    // per scenario, filled in any arrival order, read out in grid
+    // order.
+    let mut slots: Vec<Option<ScenarioStats>> = vec![None; n];
+    let mut filled = 0usize;
+    let mut stats = ServiceStats::default();
+    let mut dispatched = false;
+    let mut pending_lost: Vec<String> = Vec::new();
+
+    let outcome: Result<()> = 'merge: {
+        while filled < n {
+            // Losses discovered while writing (a send into a dead
+            // socket) are processed exactly like reader-detected ones.
+            let ev = if let Some(name) = pending_lost.pop() {
+                CoEvent::Lost { name }
+            } else {
+                match rx.recv_timeout(Duration::from_millis(500)) {
+                    Ok(ev) => ev,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if dispatched && writers.is_empty() {
+                            break 'merge Err(anyhow!(
+                                "entire worker fleet lost with {} of {n} rows outstanding",
+                                n - filled
+                            ));
+                        }
+                        // Pre-dispatch: still waiting for the fleet.
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        break 'merge Err(anyhow!("coordinator event stream ended"))
+                    }
+                }
+            };
+            match ev {
+                CoEvent::Joined { name, stream } => {
+                    if writers.contains_key(&name) {
+                        // Duplicate identity: refuse the newcomer by
+                        // dropping its write half.
+                        continue;
+                    }
+                    let mut stream = stream;
+                    if write_msg(&mut stream, &Msg::Spec { spec: spec.clone() }).is_err() {
+                        continue; // died during the handshake
+                    }
+                    ring.add(&name);
+                    writers.insert(name.clone(), stream);
+                    stats.workers_joined += 1;
+                    if !dispatched {
+                        if writers.len() >= expect {
+                            dispatched = true;
+                            let all: Vec<usize> = (0..groups.len()).collect();
+                            dispatch(&all, &ring, &mut writers, &mut owner, &mut pending_lost);
+                        }
+                    } else {
+                        // Rejoin path: in-flight groups stay with
+                        // their owners (stealing them would waste
+                        // replay), but anything orphaned while the
+                        // fleet was short goes to the ring now.
+                        let orphans: Vec<usize> = (0..groups.len())
+                            .filter(|&g| !done[g] && owner[g].is_none())
+                            .collect();
+                        if !orphans.is_empty() {
+                            stats.groups_reassigned += dispatch(
+                                &orphans,
+                                &ring,
+                                &mut writers,
+                                &mut owner,
+                                &mut pending_lost,
+                            );
+                        }
+                    }
+                }
+                CoEvent::Row { index, stats: row } => {
+                    let i = index as usize;
+                    if i >= n {
+                        continue; // corrupt row; the group re-acks or re-dispatches
+                    }
+                    if slots[i].is_none() {
+                        slots[i] = Some(row);
+                        filled += 1;
+                    } else {
+                        stats.duplicate_rows += 1;
+                    }
+                }
+                CoEvent::Done { worker, group } => {
+                    let g = group as usize;
+                    if g < groups.len() && !done[g] {
+                        done[g] = true;
+                        if owner[g].as_deref() == Some(worker.as_str()) {
+                            owner[g] = None;
+                        }
+                    }
+                }
+                CoEvent::Lost { name } => {
+                    if writers.remove(&name).is_none() {
+                        continue; // already processed (or never joined)
+                    }
+                    ring.remove(&name);
+                    stats.workers_lost += 1;
+                    let orphaned: Vec<usize> = (0..groups.len())
+                        .filter(|&g| !done[g] && owner[g].as_deref() == Some(name.as_str()))
+                        .collect();
+                    for &g in &orphaned {
+                        owner[g] = None;
+                    }
+                    if dispatched && !orphaned.is_empty() && !ring.is_empty() {
+                        stats.groups_reassigned += dispatch(
+                            &orphaned,
+                            &ring,
+                            &mut writers,
+                            &mut owner,
+                            &mut pending_lost,
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    };
+    // Shut the fleet down on every exit path so workers (and their
+    // reader threads) unblock.
+    for stream in writers.values_mut() {
+        let _ = write_msg(stream, &Msg::Shutdown);
+    }
+    outcome?;
+    let rows = slots
+        .into_iter()
+        .map(|s| s.expect("merge loop exited with every slot filled"))
+        .collect();
+    Ok((CampaignReport { stats: rows }, stats))
+}
+
+/// Run the coordinator for one sweep (`leonardo-twin serve`): bind,
+/// wait for `cfg.expect` workers, dispatch, merge, shut the fleet
+/// down.
+pub fn serve(spec: &SweepSpec, cfg: &CoordinatorConfig) -> Result<(CampaignReport, ServiceStats)> {
+    let listener = TcpListener::bind(cfg.listen)
+        .with_context(|| format!("bind coordinator listener on {}", cfg.listen))?;
+    serve_on(listener, spec, cfg.expect, cfg.replicas)
+}
+
+/// One-call in-process fleet: a coordinator on an ephemeral loopback
+/// port plus `workers` worker threads, each with its own cloned twin
+/// and persistent arena — the distributed path the tests, benches and
+/// `sweep --workers N` run. `die_after` is the churn hook: worker `k`
+/// drops its connection after acknowledging `n` groups for each
+/// `(k, n)` entry.
+pub fn run_distributed(
+    twin: &Twin,
+    spec: &SweepSpec,
+    workers: usize,
+    die_after: &[(usize, usize)],
+) -> Result<(CampaignReport, ServiceStats)> {
+    ensure!(workers >= 1, "in-process fleet needs at least one worker");
+    let listener = TcpListener::bind((Ipv4Addr::LOCALHOST, 0))
+        .context("bind in-process fleet listener")?;
+    let addr = listener.local_addr().context("in-process fleet address")?;
+    thread::scope(|s| {
+        let mut fleet = Vec::new();
+        for k in 0..workers {
+            let die = die_after
+                .iter()
+                .find(|&&(w, _)| w == k)
+                .map(|&(_, n)| n);
+            let mut worker_twin = twin.clone();
+            fleet.push(s.spawn(move || -> Result<usize> {
+                let stream = connect_retry(addr, Duration::from_secs(10))?;
+                let opts = WorkerOptions {
+                    id: format!("w{k}"),
+                    die_after_groups: die,
+                };
+                run_worker(&mut worker_twin, stream, &opts)
+            }));
+        }
+        // All `workers` threads join before dispatch, so the ring
+        // membership — and therefore the assignment — is deterministic.
+        let out = serve_on(listener, spec, workers, DEFAULT_REPLICAS);
+        for handle in fleet {
+            match handle.join() {
+                Ok(Ok(_acked)) => {}
+                Ok(Err(e)) => {
+                    if out.is_ok() {
+                        return Err(e.context("in-process worker failed"));
+                    }
+                }
+                Err(panic) => std::panic::resume_unwind(panic),
+            }
+        }
+        out
+    })
+}

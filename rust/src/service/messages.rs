@@ -1,0 +1,506 @@
+//! Wire protocol of the distributed sweep service.
+//!
+//! Hand-rolled length-prefixed JSON over a `std::net` TCP stream — no
+//! serde, no tokio, the build stays offline-hermetic. A frame is a
+//! 4-byte big-endian body length followed by that many bytes of
+//! compact JSON ([`crate::util::json::Json::render`]); the body is a
+//! tagged object (`{"type": "row", ...}`) decoded by [`msg_from_json`].
+//!
+//! Everything that crosses the wire round-trips exactly: f64 through
+//! shortest-`Display` text, u64 as decimal strings, and
+//! [`ScenarioStats`] rows through the one canonical codec in
+//! [`crate::util::json`] — which is what lets the coordinator's merged
+//! report be byte-identical to the single-process engines.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::campaign::{ScenarioStats, SweepGrid};
+use crate::scheduler::{CheckpointPolicy, Coupling, PolicyKind};
+use crate::topology::Routing;
+use crate::util::json::{
+    f64_from_json, f64_to_json, stats_from_json, stats_to_json, u64_from_json,
+    u64_to_json, Json,
+};
+use crate::workloads::FaultTrace;
+
+/// Upper bound on one frame body. The largest real message is a `spec`
+/// (a few KiB); 64 MiB is a garbage-detection guard, not a capacity
+/// plan — a corrupt length prefix should fail fast, not allocate.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Everything a worker needs to expand the identical scenario and
+/// group numbering the coordinator uses: the grid, the fabric routing
+/// the twin replays under, and the engine mode (forked vs streaming).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub grid: SweepGrid,
+    pub routing: Routing,
+    /// Replay fork groups on the divergence-tree engine (the CLI's
+    /// `--fork`); off = one singleton group per scenario, exactly the
+    /// streaming engine's work units.
+    pub fork: bool,
+}
+
+/// Protocol messages. Worker → coordinator: `Hello`, `Row`,
+/// `GroupDone`. Coordinator → worker: `Spec`, `Assign`, `Shutdown`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// First frame on a connection: the worker names itself. The name
+    /// is the worker's identity on the consistent-hash ring.
+    Hello { worker: String },
+    /// The sweep to replay. Sent once per connection, before any
+    /// `Assign`.
+    Spec { spec: SweepSpec },
+    /// Group ids (into [`SweepGrid::work_groups`]) this worker now
+    /// owns. May arrive more than once (initial dispatch, then
+    /// re-dispatch after a peer is lost).
+    Assign { groups: Vec<u64> },
+    /// One merged-report row: the scenario's grid index and its stats.
+    Row { index: u64, stats: ScenarioStats },
+    /// Acknowledges every `Row` of one group was sent. Until this
+    /// frame arrives the coordinator considers the group unfinished
+    /// and will re-dispatch it if the worker is lost.
+    GroupDone { group: u64 },
+    /// The sweep is merged; the worker should exit cleanly.
+    Shutdown,
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+// ---------------------------------------------------------------------------
+// Spec encoding (grid + fault traces + checkpoint policy)
+// ---------------------------------------------------------------------------
+
+fn fault_to_json(f: &FaultTrace) -> Json {
+    let FaultTrace {
+        seed,
+        duration_s,
+        node_mtbf_s,
+        repair_mean_s,
+        group,
+        link_mtbf_s,
+        link_repair_mean_s,
+        degraded_factor,
+    } = f;
+    obj(vec![
+        ("seed", u64_to_json(*seed)),
+        ("duration_s", f64_to_json(*duration_s)),
+        ("node_mtbf_s", f64_to_json(*node_mtbf_s)),
+        ("repair_mean_s", f64_to_json(*repair_mean_s)),
+        ("group", u64_to_json(*group as u64)),
+        ("link_mtbf_s", f64_to_json(*link_mtbf_s)),
+        ("link_repair_mean_s", f64_to_json(*link_repair_mean_s)),
+        ("degraded_factor", f64_to_json(*degraded_factor)),
+    ])
+}
+
+fn fault_from_json(j: &Json) -> Result<FaultTrace> {
+    Ok(FaultTrace {
+        seed: u64_from_json(j.get("seed")?)?,
+        duration_s: f64_from_json(j.get("duration_s")?)?,
+        node_mtbf_s: f64_from_json(j.get("node_mtbf_s")?)?,
+        repair_mean_s: f64_from_json(j.get("repair_mean_s")?)?,
+        group: u64_from_json(j.get("group")?)? as u32,
+        link_mtbf_s: f64_from_json(j.get("link_mtbf_s")?)?,
+        link_repair_mean_s: f64_from_json(j.get("link_repair_mean_s")?)?,
+        degraded_factor: f64_from_json(j.get("degraded_factor")?)?,
+    })
+}
+
+fn checkpoint_to_json(c: &Option<CheckpointPolicy>) -> Json {
+    match c {
+        None => Json::Null,
+        Some(CheckpointPolicy::None) => Json::Str("none".into()),
+        Some(CheckpointPolicy::Periodic(interval)) => f64_to_json(*interval),
+    }
+}
+
+fn checkpoint_from_json(j: &Json) -> Result<Option<CheckpointPolicy>> {
+    match j {
+        Json::Null => Ok(None),
+        Json::Str(s) if s == "none" => Ok(Some(CheckpointPolicy::None)),
+        other => Ok(Some(CheckpointPolicy::Periodic(f64_from_json(other)?))),
+    }
+}
+
+fn grid_to_json(g: &SweepGrid) -> Json {
+    // Exhaustive destructuring, like the stats codec: a new grid axis
+    // must get a wire column before this compiles again.
+    let SweepGrid {
+        seeds,
+        caps,
+        mixes,
+        policies,
+        jobs,
+        coupling,
+        retime_all,
+        cap_time,
+        faults,
+        checkpoint,
+    } = g;
+    obj(vec![
+        (
+            "seeds",
+            Json::Arr(seeds.iter().map(|&s| u64_to_json(s)).collect()),
+        ),
+        (
+            "caps",
+            Json::Arr(
+                caps.iter()
+                    .map(|c| match c {
+                        None => Json::Null,
+                        Some(v) => f64_to_json(*v),
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "mixes",
+            Json::Arr(mixes.iter().map(|m| Json::Str(m.clone())).collect()),
+        ),
+        (
+            "policies",
+            Json::Arr(
+                policies
+                    .iter()
+                    .map(|p| Json::Str(p.name().to_string()))
+                    .collect(),
+            ),
+        ),
+        ("jobs", u64_to_json(*jobs as u64)),
+        (
+            "coupling",
+            obj(vec![
+                ("congestion", Json::Bool(coupling.congestion)),
+                ("cap", Json::Bool(coupling.cap)),
+            ]),
+        ),
+        ("retime_all", Json::Bool(*retime_all)),
+        ("cap_time", f64_to_json(*cap_time)),
+        ("faults", Json::Arr(faults.iter().map(fault_to_json).collect())),
+        ("checkpoint", checkpoint_to_json(checkpoint)),
+    ])
+}
+
+fn grid_from_json(j: &Json) -> Result<SweepGrid> {
+    let seeds = j
+        .get("seeds")?
+        .as_arr()?
+        .iter()
+        .map(u64_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let caps = j
+        .get("caps")?
+        .as_arr()?
+        .iter()
+        .map(|c| match c {
+            Json::Null => Ok(None),
+            other => Ok(Some(f64_from_json(other)?)),
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mixes = j
+        .get("mixes")?
+        .as_arr()?
+        .iter()
+        .map(|m| Ok(m.as_str()?.to_string()))
+        .collect::<Result<Vec<_>>>()?;
+    let policies = j
+        .get("policies")?
+        .as_arr()?
+        .iter()
+        .map(|p| PolicyKind::from_name(p.as_str()?))
+        .collect::<Result<Vec<_>>>()?;
+    ensure!(!policies.is_empty(), "sweep spec has an empty policy axis");
+    let faults = j
+        .get("faults")?
+        .as_arr()?
+        .iter()
+        .map(fault_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    ensure!(!faults.is_empty(), "sweep spec has an empty fault axis");
+    let cap_time = f64_from_json(j.get("cap_time")?)?;
+    ensure!(
+        cap_time.is_finite() && cap_time >= 0.0,
+        "sweep spec has a bad cap_time {cap_time}"
+    );
+    let coupling = j.get("coupling")?;
+    let congestion = matches!(coupling.get("congestion")?, Json::Bool(true));
+    let cap = matches!(coupling.get("cap")?, Json::Bool(true));
+    let jobs = u64_from_json(j.get("jobs")?)? as usize;
+    // `SweepGrid::new` revalidates axis shapes, cap levels and mix
+    // names, so a corrupt spec errors here instead of panicking a
+    // worker mid-replay.
+    let grid = SweepGrid::new(seeds, caps, mixes, jobs)
+        .context("sweep spec failed grid validation")?
+        .with_policies(policies)
+        .with_coupling(Coupling { congestion, cap })
+        .with_retime_all(matches!(j.get("retime_all")?, Json::Bool(true)))
+        .with_cap_time(cap_time)
+        .with_fault_traces(faults)
+        .with_checkpoint(checkpoint_from_json(j.get("checkpoint")?)?);
+    Ok(grid)
+}
+
+fn spec_to_json(spec: &SweepSpec) -> Json {
+    obj(vec![
+        ("grid", grid_to_json(&spec.grid)),
+        ("routing", Json::Str(spec.routing.name().to_string())),
+        ("fork", Json::Bool(spec.fork)),
+    ])
+}
+
+fn spec_from_json(j: &Json) -> Result<SweepSpec> {
+    Ok(SweepSpec {
+        grid: grid_from_json(j.get("grid")?)?,
+        routing: Routing::from_name(j.get("routing")?.as_str()?)?,
+        fork: matches!(j.get("fork")?, Json::Bool(true)),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Message encoding
+// ---------------------------------------------------------------------------
+
+pub fn msg_to_json(msg: &Msg) -> Json {
+    match msg {
+        Msg::Hello { worker } => obj(vec![
+            ("type", Json::Str("hello".into())),
+            ("worker", Json::Str(worker.clone())),
+        ]),
+        Msg::Spec { spec } => obj(vec![
+            ("type", Json::Str("spec".into())),
+            ("spec", spec_to_json(spec)),
+        ]),
+        Msg::Assign { groups } => obj(vec![
+            ("type", Json::Str("assign".into())),
+            (
+                "groups",
+                Json::Arr(groups.iter().map(|&g| u64_to_json(g)).collect()),
+            ),
+        ]),
+        Msg::Row { index, stats } => obj(vec![
+            ("type", Json::Str("row".into())),
+            ("index", u64_to_json(*index)),
+            ("stats", stats_to_json(stats)),
+        ]),
+        Msg::GroupDone { group } => obj(vec![
+            ("type", Json::Str("group_done".into())),
+            ("group", u64_to_json(*group)),
+        ]),
+        Msg::Shutdown => obj(vec![("type", Json::Str("shutdown".into()))]),
+    }
+}
+
+pub fn msg_from_json(j: &Json) -> Result<Msg> {
+    match j.get("type")?.as_str()? {
+        "hello" => Ok(Msg::Hello {
+            worker: j.get("worker")?.as_str()?.to_string(),
+        }),
+        "spec" => Ok(Msg::Spec {
+            spec: spec_from_json(j.get("spec")?)?,
+        }),
+        "assign" => Ok(Msg::Assign {
+            groups: j
+                .get("groups")?
+                .as_arr()?
+                .iter()
+                .map(u64_from_json)
+                .collect::<Result<Vec<_>>>()?,
+        }),
+        "row" => Ok(Msg::Row {
+            index: u64_from_json(j.get("index")?)?,
+            stats: stats_from_json(j.get("stats")?)?,
+        }),
+        "group_done" => Ok(Msg::GroupDone {
+            group: u64_from_json(j.get("group")?)?,
+        }),
+        "shutdown" => Ok(Msg::Shutdown),
+        other => bail!("unknown message type '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write one frame (length prefix + JSON body) and flush, so a row is
+/// mergeable on the coordinator the moment this returns.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    let body = msg_to_json(msg).render();
+    let bytes = body.as_bytes();
+    ensure!(bytes.len() <= MAX_FRAME, "frame of {} bytes too large", bytes.len());
+    w.write_all(&(bytes.len() as u32).to_be_bytes())
+        .context("write frame length")?;
+    w.write_all(bytes).context("write frame body")?;
+    w.flush().context("flush frame")?;
+    Ok(())
+}
+
+/// Read one frame. An error means the peer is gone or spoke garbage;
+/// the caller treats both as a lost connection.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf).context("read frame length")?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    ensure!(len <= MAX_FRAME, "frame of {len} bytes too large");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("read frame body")?;
+    let text = std::str::from_utf8(&body).context("frame body is not UTF-8")?;
+    msg_from_json(&Json::parse(text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_spec() -> SweepSpec {
+        let grid = SweepGrid::new(
+            vec![1, u64::MAX],
+            vec![None, Some(6.5)],
+            vec!["day".into(), "hpc".into()],
+            50,
+        )
+        .unwrap()
+        .with_policies(vec![PolicyKind::PackFirst, PolicyKind::SpreadLinks])
+        .with_coupling(Coupling::full())
+        .with_cap_time(3600.0)
+        .with_fault_traces(vec![
+            FaultTrace::none(),
+            FaultTrace {
+                seed: 7,
+                duration_s: 86400.0,
+                node_mtbf_s: 250_000.0,
+                repair_mean_s: 7200.0,
+                group: 18,
+                link_mtbf_s: 500_000.0,
+                link_repair_mean_s: 3600.0,
+                degraded_factor: 0.5,
+            },
+        ])
+        .with_checkpoint(Some(CheckpointPolicy::Periodic(1800.0)));
+        SweepSpec {
+            grid,
+            routing: Routing::Adaptive,
+            fork: true,
+        }
+    }
+
+    #[test]
+    fn every_message_round_trips_through_a_byte_stream() {
+        let row_stats = crate::util::json::stats_from_json(
+            &crate::util::json::stats_to_json(&sample_row()),
+        )
+        .unwrap();
+        let msgs = vec![
+            Msg::Hello {
+                worker: "w0".into(),
+            },
+            Msg::Spec {
+                spec: sample_spec(),
+            },
+            Msg::Assign {
+                groups: vec![0, 5, u64::from(u32::MAX)],
+            },
+            Msg::Row {
+                index: 3,
+                stats: row_stats,
+            },
+            Msg::GroupDone { group: 5 },
+            Msg::Shutdown,
+        ];
+        let mut buf: Vec<u8> = Vec::new();
+        for m in &msgs {
+            write_msg(&mut buf, m).unwrap();
+        }
+        let mut cursor = &buf[..];
+        for m in &msgs {
+            assert_eq!(&read_msg(&mut cursor).unwrap(), m);
+        }
+        // Stream fully consumed, no partial frame left over.
+        assert!(cursor.is_empty());
+    }
+
+    fn sample_row() -> ScenarioStats {
+        ScenarioStats {
+            mix: "day".into(),
+            seed: 3,
+            cap_mw: Some(6.0),
+            policy: PolicyKind::SpreadLinks,
+            faults: "none".into(),
+            jobs: 50,
+            makespan_h: 10.5,
+            mean_wait_min: 1.0,
+            p95_wait_min: 2.0,
+            max_wait_min: 3.0,
+            utilization: 0.9,
+            peak_mw: 6.0,
+            energy_mwh: 60.0,
+            throttled: 1,
+            peak_congestion: 1.1,
+            peak_link_util: 0.8,
+            mean_link_util: 0.4,
+            mean_stretch: 1.01,
+            p95_stretch: 1.05,
+            events_skipped: 10,
+            retimes_elided: 20,
+            forks: 1,
+            restores: 1,
+            killed: 0,
+            requeued: 0,
+            wasted_node_h: 0.0,
+            goodput: 1.0,
+            p95_recovery_stretch: 0.0,
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_error_instead_of_hanging() {
+        // Oversized length prefix.
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_be_bytes());
+        assert!(read_msg(&mut &buf[..]).is_err());
+        // Truncated body.
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(&10u32.to_be_bytes());
+        buf.extend_from_slice(b"abc");
+        assert!(read_msg(&mut &buf[..]).is_err());
+        // Valid JSON, unknown message type.
+        let body = br#"{"type":"bogus"}"#;
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(&(body.len() as u32).to_be_bytes());
+        buf.extend_from_slice(body);
+        assert!(read_msg(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn spec_round_trip_preserves_every_grid_axis() {
+        let spec = sample_spec();
+        let back = spec_from_json(&spec_to_json(&spec)).unwrap();
+        assert_eq!(spec, back);
+        // The reconstructed grid numbers scenarios and groups
+        // identically — the invariant the whole service rests on.
+        assert_eq!(spec.grid.len(), back.grid.len());
+        assert_eq!(spec.grid.work_groups(true), back.grid.work_groups(true));
+        assert_eq!(spec.grid.work_groups(false), back.grid.work_groups(false));
+    }
+
+    #[test]
+    fn corrupt_spec_errors_cleanly() {
+        let mut j = spec_to_json(&sample_spec());
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(g)) = m.get_mut("grid") {
+                g.insert("mixes".into(), Json::Arr(vec![Json::Str("bogus".into())]));
+            }
+        }
+        assert!(spec_from_json(&j).is_err(), "unknown mix must not panic");
+    }
+}

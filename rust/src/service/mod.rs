@@ -1,0 +1,33 @@
+//! Distributed sweep service: a coordinator + worker fleet that scales
+//! the campaign engine past one process.
+//!
+//! LEONARDO itself is operated as a shared service — login/management
+//! nodes front a fleet that work is dispatched to (§2) — and this
+//! module reproduces that operations model at the campaign layer:
+//!
+//! * [`shard`] — the consistent-hash ring giving every scenario group
+//!   a stable owner that survives worker join/leave with minimal
+//!   reassignment;
+//! * [`messages`] — the hand-rolled length-prefixed JSON protocol on
+//!   `std::net` TCP (offline-hermetic: no serde, no async runtime);
+//! * [`worker`] — one connection replaying assigned groups on a
+//!   persistent [`crate::campaign::ReplayRig`] arena (CLI `work`);
+//! * [`coordinator`] — listener, ring, ownership table and the
+//!   grid-index slot merge (CLI `serve`), byte-identical to the
+//!   single-process engines for any worker count.
+//!
+//! The high-level entry points are [`Twin::sweep_distributed`]
+//! (in-process fleet) and [`coordinator::serve`] /
+//! [`worker::work`] (multi-process fleet over TCP).
+//!
+//! [`Twin::sweep_distributed`]: crate::coordinator::Twin::sweep_distributed
+
+pub mod coordinator;
+pub mod messages;
+pub mod shard;
+pub mod worker;
+
+pub use coordinator::{run_distributed, serve, CoordinatorConfig, ServiceStats};
+pub use messages::{Msg, SweepSpec};
+pub use shard::{HashRing, DEFAULT_REPLICAS};
+pub use worker::{parse_addr, run_worker, work, WorkerOptions};

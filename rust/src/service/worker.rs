@@ -1,0 +1,190 @@
+//! Worker side of the distributed sweep service.
+//!
+//! A worker is one long-lived connection: it sends `Hello`, receives
+//! the [`SweepSpec`], and then replays whatever groups the coordinator
+//! assigns on a single persistent [`ReplayRig`] arena — exactly the
+//! per-thread arena the local streaming/forked engines keep, so the
+//! rows it streams back are byte-identical to the rows a local worker
+//! thread would have merged. Every finished group is acknowledged with
+//! `GroupDone`; an unacknowledged group is the coordinator's to
+//! re-dispatch if this connection dies.
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::campaign::{replay_group, ReplayRig, Scenario};
+use crate::coordinator::Twin;
+
+use super::messages::{read_msg, write_msg, Msg};
+
+/// How a worker identifies itself, plus the test-only churn hook.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Name on the coordinator's consistent-hash ring. Must be unique
+    /// per fleet; the in-process fleet uses `w0..wN-1`, the CLI uses
+    /// `w{pid}`.
+    pub id: String,
+    /// Drop the connection (without a goodbye, like a real crash)
+    /// after acknowledging this many groups — the worker-churn tests'
+    /// way of killing one of three workers mid-sweep. `None` in
+    /// production.
+    pub die_after_groups: Option<usize>,
+}
+
+impl WorkerOptions {
+    pub fn named(id: &str) -> Self {
+        WorkerOptions {
+            id: id.to_string(),
+            die_after_groups: None,
+        }
+    }
+}
+
+/// Resolve a `--listen`/`--connect` address, erroring cleanly on
+/// garbage instead of panicking deep in the socket stack.
+pub fn parse_addr(s: &str) -> Result<SocketAddr> {
+    let mut addrs = s
+        .to_socket_addrs()
+        .with_context(|| format!("bad address '{s}' (want host:port)"))?;
+    addrs
+        .next()
+        .ok_or_else(|| anyhow!("address '{s}' resolved to nothing"))
+}
+
+/// Connect with retries over `patience` — CLI workers routinely start
+/// before the coordinator's listener is up (the CI step launches all
+/// three processes at once).
+pub fn connect_retry(addr: SocketAddr, patience: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + patience;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!("no coordinator at {addr}: {e}");
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Run one worker over an established connection until the coordinator
+/// shuts it down (or hangs up). Returns the number of groups this
+/// worker acknowledged.
+pub fn run_worker(twin: &mut Twin, stream: TcpStream, opts: &WorkerOptions) -> Result<usize> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("clone worker stream")?);
+    let mut writer = stream;
+    write_msg(
+        &mut writer,
+        &Msg::Hello {
+            worker: opts.id.clone(),
+        },
+    )?;
+    // The expanded sweep: scenarios plus the canonical group numbering,
+    // both derived from the spec exactly as the coordinator derives
+    // them — the wire only carries group ids.
+    let mut job: Option<(Vec<Scenario>, Vec<Vec<usize>>)> = None;
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    // One persistent arena across every group, like a local worker
+    // thread's (armed lazily by `replay_group`, reset between
+    // scenarios).
+    let mut arena: Option<ReplayRig> = None;
+    let mut acked = 0usize;
+    loop {
+        // A dead coordinator is a normal way for a worker's life to
+        // end (the CLI fleet outlives the sweep it served).
+        let msg = match read_msg(&mut reader) {
+            Ok(m) => m,
+            Err(_) => return Ok(acked),
+        };
+        match msg {
+            Msg::Spec { spec } => {
+                // The routing policy shapes coupled comm slowdowns, so
+                // it must match the submitting twin's fabric.
+                twin.net.routing = spec.routing;
+                let scenarios = spec.grid.scenarios();
+                let groups = spec.grid.work_groups(spec.fork);
+                job = Some((scenarios, groups));
+                queue.clear();
+            }
+            Msg::Assign { groups } => {
+                for g in groups {
+                    queue.push_back(g as usize);
+                }
+            }
+            Msg::Shutdown => return Ok(acked),
+            other => bail!("worker {}: unexpected {other:?}", opts.id),
+        }
+        while let Some(g) = queue.pop_front() {
+            let (scenarios, groups) = job
+                .as_ref()
+                .ok_or_else(|| anyhow!("worker {}: assignment before spec", opts.id))?;
+            ensure!(
+                g < groups.len(),
+                "worker {}: group {g} out of range (grid has {})",
+                opts.id,
+                groups.len()
+            );
+            for (index, stats) in replay_group(&mut arena, twin, scenarios, &groups[g]) {
+                write_msg(
+                    &mut writer,
+                    &Msg::Row {
+                        index: index as u64,
+                        stats,
+                    },
+                )?;
+            }
+            write_msg(&mut writer, &Msg::GroupDone { group: g as u64 })?;
+            acked += 1;
+            if opts.die_after_groups.is_some_and(|n| acked >= n) {
+                // Simulated crash: drop the socket with groups still
+                // assigned and unacknowledged.
+                return Ok(acked);
+            }
+        }
+    }
+}
+
+/// CLI entry point (`leonardo-twin work --connect HOST:PORT`): build a
+/// LEONARDO twin, join the fleet, replay until shut down.
+pub fn work(connect: &str) -> Result<()> {
+    let addr = parse_addr(connect)?;
+    let stream = connect_retry(addr, Duration::from_secs(30))?;
+    let mut twin = Twin::leonardo();
+    let opts = WorkerOptions::named(&format!("w{}", std::process::id()));
+    let acked = run_worker(&mut twin, stream, &opts)?;
+    eprintln!("worker {}: replayed {acked} group(s)", opts.id);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_addr_accepts_host_port_and_rejects_garbage() {
+        assert_eq!(
+            parse_addr("127.0.0.1:7723").unwrap(),
+            "127.0.0.1:7723".parse::<SocketAddr>().unwrap()
+        );
+        assert!(parse_addr("127.0.0.1").is_err(), "missing port");
+        assert!(parse_addr("not an address").is_err());
+        assert!(parse_addr("127.0.0.1:notaport").is_err());
+        assert!(parse_addr("").is_err());
+    }
+
+    #[test]
+    fn connect_retry_gives_up_with_context() {
+        // Loopback port 1 refuses immediately (nothing may listen
+        // there); patience zero turns that refusal into the error.
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let err = connect_retry(addr, Duration::from_millis(0)).unwrap_err();
+        assert!(err.to_string().contains("no coordinator"));
+    }
+}

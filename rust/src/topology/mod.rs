@@ -64,6 +64,29 @@ pub enum Routing {
     Adaptive,
 }
 
+impl Routing {
+    /// CLI/wire name (`minimal` / `valiant` / `adaptive`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Routing::Minimal => "minimal",
+            Routing::Valiant => "valiant",
+            Routing::Adaptive => "adaptive",
+        }
+    }
+
+    /// Inverse of [`Routing::name`], used by the sweep-spec wire codec.
+    pub fn from_name(name: &str) -> anyhow::Result<Routing> {
+        match name {
+            "minimal" => Ok(Routing::Minimal),
+            "valiant" => Ok(Routing::Valiant),
+            "adaptive" => Ok(Routing::Adaptive),
+            other => anyhow::bail!(
+                "unknown routing '{other}' (known: minimal, valiant, adaptive)"
+            ),
+        }
+    }
+}
+
 /// Dense index of the global link bundle joining the unordered cell
 /// pair `(a, b)` on an `n_cells`-cell fabric: pairs are numbered
 /// row-major over the strict upper triangle, so ids are `0..n(n-1)/2`.

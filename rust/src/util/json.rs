@@ -1,12 +1,22 @@
-//! Minimal JSON parser — just enough for `artifacts/manifest.json`.
+//! Minimal JSON parser and serializer.
 //!
 //! The build environment is fully offline (no serde_json), so the twin
 //! carries its own ~150-line recursive-descent parser. Supports objects,
 //! arrays, strings (with escapes), numbers, booleans and null.
+//!
+//! [`Json::render`] is the inverse used by the distributed sweep
+//! service's wire protocol ([`crate::service`]), and the
+//! [`stats_to_json`]/[`stats_from_json`] pair below defines the one
+//! canonical encoding of [`ScenarioStats`] rows so a worker-serialized
+//! row merges back byte-identical on the coordinator.
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::campaign::{CampaignReport, ScenarioStats};
+use crate::scheduler::PolicyKind;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -72,6 +82,270 @@ impl Json {
             .get(key)
             .ok_or_else(|| anyhow!("missing key '{key}'"))
     }
+
+    /// Serialize to compact JSON text. `Json::parse(v.render())` is the
+    /// identity: numbers go through Rust's shortest-round-trip `f64`
+    /// `Display`, object keys come out in `BTreeMap` order, and strings
+    /// are escaped with the same set of escapes the parser accepts.
+    ///
+    /// Non-finite numbers have no JSON literal; [`f64_to_json`] tags
+    /// them as strings before they ever reach a `Json::Num`, so a
+    /// non-finite `Num` here is a constructor bug and panics rather
+    /// than emitting unparseable text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                assert!(n.is_finite(), "Json::Num({n}) is not renderable; use f64_to_json");
+                let _ = write!(out, "{n}");
+            }
+            Json::Str(s) => escape_into(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (key, val)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(key, out);
+                    out.push(':');
+                    val.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+// ---------------------------------------------------------------------------
+// Wire encoding of campaign stats
+// ---------------------------------------------------------------------------
+//
+// Byte-identity across the distributed service hinges on three encoding
+// rules, all enforced here and nowhere else:
+//
+//  * finite f64 uses `Display` (shortest text that parses back to the
+//    same bits); non-finite f64 becomes the tagged strings "inf" /
+//    "-inf" / "nan" since JSON has no literal for them;
+//  * u64 travels as a decimal *string*: `Json::Num` is an f64 and would
+//    silently round seeds and counters above 2^53;
+//  * `stats_to_json` destructures `ScenarioStats` exhaustively (no `..`)
+//    and `stats_from_json` builds it with a struct literal, so adding a
+//    field without teaching the wire about it is a compile error — a
+//    column can never silently drop.
+
+/// Encode an `f64`, tagging non-finite values as strings.
+pub fn f64_to_json(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("nan".into())
+    } else if v > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+/// Decode an `f64` encoded by [`f64_to_json`].
+pub fn f64_from_json(j: &Json) -> Result<f64> {
+    match j {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => bail!("expected a number or inf/-inf/nan tag, got \"{other}\""),
+        },
+        other => bail!("expected number, got {other:?}"),
+    }
+}
+
+/// Encode a `u64` as a decimal string (`Json::Num` is an f64 and loses
+/// integer precision above 2^53).
+pub fn u64_to_json(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Decode a `u64` encoded by [`u64_to_json`].
+pub fn u64_from_json(j: &Json) -> Result<u64> {
+    let s = j.as_str().context("u64 travels as a decimal string")?;
+    s.parse::<u64>().with_context(|| format!("bad u64 \"{s}\""))
+}
+
+fn opt_f64_to_json(v: Option<f64>) -> Json {
+    match v {
+        None => Json::Null,
+        Some(x) => f64_to_json(x),
+    }
+}
+
+fn opt_f64_from_json(j: &Json) -> Result<Option<f64>> {
+    match j {
+        Json::Null => Ok(None),
+        other => Ok(Some(f64_from_json(other)?)),
+    }
+}
+
+/// Encode one [`ScenarioStats`] row for the wire. Exhaustive by
+/// construction: a new field breaks this destructuring pattern at
+/// compile time until it gets a column here and in
+/// [`stats_from_json`].
+pub fn stats_to_json(s: &ScenarioStats) -> Json {
+    let ScenarioStats {
+        mix,
+        seed,
+        cap_mw,
+        policy,
+        faults,
+        jobs,
+        makespan_h,
+        mean_wait_min,
+        p95_wait_min,
+        max_wait_min,
+        utilization,
+        peak_mw,
+        energy_mwh,
+        throttled,
+        peak_congestion,
+        peak_link_util,
+        mean_link_util,
+        mean_stretch,
+        p95_stretch,
+        events_skipped,
+        retimes_elided,
+        forks,
+        restores,
+        killed,
+        requeued,
+        wasted_node_h,
+        goodput,
+        p95_recovery_stretch,
+    } = s;
+    let mut m = BTreeMap::new();
+    m.insert("mix".to_string(), Json::Str(mix.clone()));
+    m.insert("seed".to_string(), u64_to_json(*seed));
+    m.insert("cap_mw".to_string(), opt_f64_to_json(*cap_mw));
+    m.insert("policy".to_string(), Json::Str(policy.name().to_string()));
+    m.insert("faults".to_string(), Json::Str(faults.clone()));
+    m.insert("jobs".to_string(), u64_to_json(*jobs as u64));
+    m.insert("makespan_h".to_string(), f64_to_json(*makespan_h));
+    m.insert("mean_wait_min".to_string(), f64_to_json(*mean_wait_min));
+    m.insert("p95_wait_min".to_string(), f64_to_json(*p95_wait_min));
+    m.insert("max_wait_min".to_string(), f64_to_json(*max_wait_min));
+    m.insert("utilization".to_string(), f64_to_json(*utilization));
+    m.insert("peak_mw".to_string(), f64_to_json(*peak_mw));
+    m.insert("energy_mwh".to_string(), f64_to_json(*energy_mwh));
+    m.insert("throttled".to_string(), u64_to_json(*throttled as u64));
+    m.insert("peak_congestion".to_string(), f64_to_json(*peak_congestion));
+    m.insert("peak_link_util".to_string(), f64_to_json(*peak_link_util));
+    m.insert("mean_link_util".to_string(), f64_to_json(*mean_link_util));
+    m.insert("mean_stretch".to_string(), f64_to_json(*mean_stretch));
+    m.insert("p95_stretch".to_string(), f64_to_json(*p95_stretch));
+    m.insert("events_skipped".to_string(), u64_to_json(*events_skipped));
+    m.insert("retimes_elided".to_string(), u64_to_json(*retimes_elided));
+    m.insert("forks".to_string(), u64_to_json(*forks));
+    m.insert("restores".to_string(), u64_to_json(*restores));
+    m.insert("killed".to_string(), u64_to_json(*killed));
+    m.insert("requeued".to_string(), u64_to_json(*requeued));
+    m.insert("wasted_node_h".to_string(), f64_to_json(*wasted_node_h));
+    m.insert("goodput".to_string(), f64_to_json(*goodput));
+    m.insert(
+        "p95_recovery_stretch".to_string(),
+        f64_to_json(*p95_recovery_stretch),
+    );
+    Json::Obj(m)
+}
+
+/// Decode one [`ScenarioStats`] row encoded by [`stats_to_json`].
+pub fn stats_from_json(j: &Json) -> Result<ScenarioStats> {
+    Ok(ScenarioStats {
+        mix: j.get("mix")?.as_str()?.to_string(),
+        seed: u64_from_json(j.get("seed")?)?,
+        cap_mw: opt_f64_from_json(j.get("cap_mw")?)?,
+        policy: PolicyKind::from_name(j.get("policy")?.as_str()?)?,
+        faults: j.get("faults")?.as_str()?.to_string(),
+        jobs: u64_from_json(j.get("jobs")?)? as usize,
+        makespan_h: f64_from_json(j.get("makespan_h")?)?,
+        mean_wait_min: f64_from_json(j.get("mean_wait_min")?)?,
+        p95_wait_min: f64_from_json(j.get("p95_wait_min")?)?,
+        max_wait_min: f64_from_json(j.get("max_wait_min")?)?,
+        utilization: f64_from_json(j.get("utilization")?)?,
+        peak_mw: f64_from_json(j.get("peak_mw")?)?,
+        energy_mwh: f64_from_json(j.get("energy_mwh")?)?,
+        throttled: u64_from_json(j.get("throttled")?)? as usize,
+        peak_congestion: f64_from_json(j.get("peak_congestion")?)?,
+        peak_link_util: f64_from_json(j.get("peak_link_util")?)?,
+        mean_link_util: f64_from_json(j.get("mean_link_util")?)?,
+        mean_stretch: f64_from_json(j.get("mean_stretch")?)?,
+        p95_stretch: f64_from_json(j.get("p95_stretch")?)?,
+        events_skipped: u64_from_json(j.get("events_skipped")?)?,
+        retimes_elided: u64_from_json(j.get("retimes_elided")?)?,
+        forks: u64_from_json(j.get("forks")?)?,
+        restores: u64_from_json(j.get("restores")?)?,
+        killed: u64_from_json(j.get("killed")?)?,
+        requeued: u64_from_json(j.get("requeued")?)?,
+        wasted_node_h: f64_from_json(j.get("wasted_node_h")?)?,
+        goodput: f64_from_json(j.get("goodput")?)?,
+        p95_recovery_stretch: f64_from_json(j.get("p95_recovery_stretch")?)?,
+    })
+}
+
+/// Encode a whole [`CampaignReport`] (per-scenario rows in grid order).
+pub fn report_to_json(r: &CampaignReport) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "stats".to_string(),
+        Json::Arr(r.stats.iter().map(stats_to_json).collect()),
+    );
+    Json::Obj(m)
+}
+
+/// Decode a [`CampaignReport`] encoded by [`report_to_json`].
+pub fn report_from_json(j: &Json) -> Result<CampaignReport> {
+    let stats = j
+        .get("stats")?
+        .as_arr()?
+        .iter()
+        .map(stats_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(CampaignReport { stats })
 }
 
 struct Parser<'a> {
@@ -308,5 +582,136 @@ mod tests {
         let outer = v.as_arr().unwrap();
         assert_eq!(outer[0].as_arr().unwrap().len(), 2);
         assert_eq!(outer[1].as_arr().unwrap()[0].as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn render_round_trips_nested_values() {
+        let text = r#"{"a":[1,2.5,-3e-2],"b":{"x":null,"y":true},"s":"q\"\\\n\tz"}"#;
+        let v = Json::parse(text).unwrap();
+        let rendered = v.render();
+        assert_eq!(Json::parse(&rendered).unwrap(), v);
+        // Rendering is deterministic (BTreeMap key order).
+        assert_eq!(v.render(), rendered);
+    }
+
+    #[test]
+    fn render_escapes_control_characters() {
+        let v = Json::Str("a\u{1}b\u{c}c".into());
+        let rendered = v.render();
+        assert_eq!(rendered, "\"a\\u0001b\\fc\"");
+        assert_eq!(Json::parse(&rendered).unwrap(), v);
+    }
+
+    #[test]
+    fn f64_codec_is_exact_and_tags_non_finite() {
+        for v in [
+            0.0,
+            -0.0,
+            1.5,
+            f64::MIN_POSITIVE,
+            5e-324,
+            f64::MAX,
+            -123456789.000001,
+        ] {
+            let j = f64_to_json(v);
+            let text = j.render();
+            let back = f64_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "f64 {v} did not round-trip");
+        }
+        assert_eq!(f64_to_json(f64::INFINITY), Json::Str("inf".into()));
+        assert_eq!(f64_to_json(f64::NEG_INFINITY), Json::Str("-inf".into()));
+        assert_eq!(f64_to_json(f64::NAN), Json::Str("nan".into()));
+        assert!(f64_from_json(&Json::Str("nan".into())).unwrap().is_nan());
+        assert!(f64_from_json(&Json::Str("bogus".into())).is_err());
+    }
+
+    #[test]
+    fn u64_codec_survives_beyond_f64_precision() {
+        for v in [0u64, 1, (1 << 53) + 1, u64::MAX] {
+            let j = u64_to_json(v);
+            let back = u64_from_json(&Json::parse(&j.render()).unwrap()).unwrap();
+            assert_eq!(v, back);
+        }
+        assert!(u64_from_json(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn stats_round_trip_preserves_every_field() {
+        let s = ScenarioStats {
+            mix: "hpc \"quoted\"\n".into(),
+            seed: u64::MAX,
+            cap_mw: Some(7.123456789012345),
+            policy: PolicyKind::SpreadLinks,
+            faults: "mtbf86400/grp4".into(),
+            jobs: 1000,
+            makespan_h: 23.000000000000004,
+            mean_wait_min: 1.5,
+            p95_wait_min: 0.1 + 0.2,
+            max_wait_min: 99.0,
+            utilization: 0.9999999999999999,
+            peak_mw: 7.5,
+            energy_mwh: 151.25,
+            throttled: 42,
+            peak_congestion: 1.75,
+            peak_link_util: 0.875,
+            mean_link_util: 0.3333333333333333,
+            mean_stretch: 1.0625,
+            p95_stretch: f64::INFINITY,
+            events_skipped: (1 << 53) + 1,
+            retimes_elided: 7,
+            forks: 3,
+            restores: 2,
+            killed: 5,
+            requeued: 4,
+            wasted_node_h: 12.000000000000002,
+            goodput: 0.95,
+            p95_recovery_stretch: 1.5,
+        };
+        let text = stats_to_json(&s).render();
+        let back = stats_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn report_round_trip() {
+        let row = ScenarioStats {
+            mix: "day".into(),
+            seed: 1,
+            cap_mw: None,
+            policy: PolicyKind::PackFirst,
+            faults: "none".into(),
+            jobs: 10,
+            makespan_h: 1.0,
+            mean_wait_min: 0.0,
+            p95_wait_min: 0.0,
+            max_wait_min: 0.0,
+            utilization: 0.5,
+            peak_mw: 2.0,
+            energy_mwh: 2.0,
+            throttled: 0,
+            peak_congestion: 0.0,
+            peak_link_util: 0.0,
+            mean_link_util: 0.0,
+            mean_stretch: 1.0,
+            p95_stretch: 1.0,
+            events_skipped: 0,
+            retimes_elided: 0,
+            forks: 0,
+            restores: 0,
+            killed: 0,
+            requeued: 0,
+            wasted_node_h: 0.0,
+            goodput: 1.0,
+            p95_recovery_stretch: 0.0,
+        };
+        let mut second = row.clone();
+        second.seed = 2;
+        second.cap_mw = Some(6.0);
+        let report = CampaignReport {
+            stats: vec![row, second],
+        };
+        let text = report_to_json(&report).render();
+        let back = report_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(report, back);
     }
 }

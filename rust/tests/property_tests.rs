@@ -601,3 +601,121 @@ fn prop_json_random_manifests() {
         assert_eq!(v.as_obj().unwrap().len(), entries as usize);
     }
 }
+
+// ---------------------------------------------------------------------
+// wire codec invariants (the distributed sweep service's substrate)
+// ---------------------------------------------------------------------
+
+/// Randomized `ScenarioStats` survive the wire codec bit-for-bit: every
+/// field — u64s past 2^53, subnormal/extreme floats, strings needing
+/// escapes, both policies, present and absent caps — round-trips
+/// through render → parse → decode exactly. This is the property the
+/// distributed service's byte-identity guarantee stands on.
+#[test]
+fn prop_scenario_stats_round_trip_bit_exact() {
+    use leonardo_twin::campaign::{CampaignReport, ScenarioStats};
+    use leonardo_twin::scheduler::PolicyKind;
+    use leonardo_twin::util::json::{
+        report_from_json, report_to_json, stats_from_json, stats_to_json,
+    };
+
+    // Any finite bit pattern (NaN payloads can't round-trip through a
+    // tagged "nan" string; the codec collapses them, checked below).
+    fn finite(rng: &mut Rng) -> f64 {
+        loop {
+            let v = f64::from_bits(rng.next_u64());
+            if v.is_finite() {
+                return v;
+            }
+        }
+    }
+    // Finite, ±infinity, or exact extremes — everything the tagged
+    // codec claims to preserve.
+    fn wild(rng: &mut Rng) -> f64 {
+        let random_bits = finite(rng);
+        *rng.choose(&[
+            random_bits,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            5e-324, // smallest subnormal
+            -0.0,
+            0.0,
+        ])
+    }
+    fn wild_u64(rng: &mut Rng) -> u64 {
+        let random = rng.next_u64();
+        *rng.choose(&[
+            random,
+            0,
+            u64::MAX,
+            (1 << 53) + 1, // first integer f64 cannot hold
+        ])
+    }
+    let mixes = ["day", "ai", "hpc", "a \"quoted\"\n\tmix", "", "日"];
+    let faults = ["none", "mtbf200k+link400k", "\u{1}\u{1f}ctrl"];
+
+    let mut rng = Rng::new(2307);
+    let mut batch = Vec::new();
+    for case in 0..64 {
+        let s = ScenarioStats {
+            mix: rng.choose(&mixes).to_string(),
+            seed: wild_u64(&mut rng),
+            cap_mw: if rng.f64() < 0.5 { None } else { Some(wild(&mut rng)) },
+            policy: *rng.choose(&[PolicyKind::PackFirst, PolicyKind::SpreadLinks]),
+            faults: rng.choose(&faults).to_string(),
+            jobs: wild_u64(&mut rng) as usize,
+            makespan_h: wild(&mut rng),
+            mean_wait_min: wild(&mut rng),
+            p95_wait_min: wild(&mut rng),
+            max_wait_min: wild(&mut rng),
+            utilization: wild(&mut rng),
+            peak_mw: wild(&mut rng),
+            energy_mwh: wild(&mut rng),
+            throttled: wild_u64(&mut rng) as usize,
+            peak_congestion: wild(&mut rng),
+            peak_link_util: wild(&mut rng),
+            mean_link_util: wild(&mut rng),
+            mean_stretch: wild(&mut rng),
+            p95_stretch: wild(&mut rng),
+            events_skipped: wild_u64(&mut rng),
+            retimes_elided: wild_u64(&mut rng),
+            forks: wild_u64(&mut rng),
+            restores: wild_u64(&mut rng),
+            killed: wild_u64(&mut rng),
+            requeued: wild_u64(&mut rng),
+            wasted_node_h: wild(&mut rng),
+            goodput: wild(&mut rng),
+            p95_recovery_stretch: wild(&mut rng),
+        };
+        let text = stats_to_json(&s).render();
+        let back = stats_from_json(&Json::parse(&text).unwrap()).unwrap();
+        // PartialEq would pass -0.0 == 0.0; compare the bits too.
+        assert_eq!(s, back, "case {case}: decoded stats differ");
+        assert_eq!(
+            s.makespan_h.to_bits(),
+            back.makespan_h.to_bits(),
+            "case {case}: float bits changed (signed zero?)"
+        );
+        assert_eq!(
+            s.cap_mw.map(f64::to_bits),
+            back.cap_mw.map(f64::to_bits),
+            "case {case}: cap bits changed"
+        );
+        batch.push(s);
+    }
+    // Whole-report codec: order and length preserved.
+    let report = CampaignReport { stats: batch };
+    let text = report_to_json(&report).render();
+    let back = report_from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(report, back, "report codec reordered or dropped rows");
+
+    // NaN is tagged, not silently mangled: it decodes back to NaN
+    // (payload collapsed to the canonical quiet NaN).
+    let mut s = report.stats[0].clone();
+    s.goodput = f64::NAN;
+    let text = stats_to_json(&s).render();
+    let back = stats_from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert!(back.goodput.is_nan(), "NaN lost its tag through the wire");
+}

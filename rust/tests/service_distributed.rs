@@ -1,0 +1,206 @@
+//! Distributed-sweep acceptance: the coordinator + worker-fleet service
+//! produces reports byte-identical to the single-process engines for
+//! any fleet size — including the policy, fault and fork axes — and
+//! worker churn mid-sweep reassigns exactly the lost worker's
+//! unacknowledged groups without perturbing the report.
+//!
+//! Every test here runs the real service: a TCP listener on an
+//! ephemeral loopback port, worker threads speaking the length-prefixed
+//! JSON protocol, the consistent-hash ring and the grid-index slot
+//! merge. Nothing is mocked.
+
+use leonardo_twin::campaign::{run_sweep_forked, run_sweep_streaming, SweepGrid};
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::scheduler::{Coupling, PolicyKind};
+use leonardo_twin::service::{run_distributed, HashRing, ServiceStats, SweepSpec, DEFAULT_REPLICAS};
+use leonardo_twin::workloads::FaultTrace;
+
+/// The canonical 24-scenario grid the benches and CI gate run.
+fn canonical_grid() -> SweepGrid {
+    SweepGrid::new(
+        vec![1, 2, 3, 4],
+        vec![None, Some(7.5), Some(6.0)],
+        vec!["day".into(), "ai".into()],
+        100,
+    )
+    .unwrap()
+}
+
+fn spec(twin: &Twin, grid: &SweepGrid, fork: bool) -> SweepSpec {
+    SweepSpec {
+        grid: grid.clone(),
+        routing: twin.net.routing,
+        fork,
+    }
+}
+
+/// Acceptance criterion: 1-, 2- and 4-worker fleets all emit the exact
+/// report the in-process streaming engine does — sharding, the wire
+/// format and the slot merge are invisible in the output.
+#[test]
+fn distributed_report_is_identical_for_any_fleet_size() {
+    let twin = Twin::leonardo();
+    let grid = canonical_grid();
+    assert_eq!(grid.len(), 24);
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    for workers in [1, 2, 4] {
+        let report = twin.sweep_distributed(&grid, false, workers).unwrap();
+        assert_eq!(oracle, report, "{workers}-worker distributed sweep diverged");
+        assert_eq!(
+            oracle.scenario_table().to_markdown(),
+            report.scenario_table().to_markdown(),
+            "{workers}-worker rendered table diverged"
+        );
+    }
+}
+
+/// A quiet fleet reports clean service stats: everyone joined, nobody
+/// lost, nothing reassigned, no duplicate rows merged.
+#[test]
+fn healthy_fleet_reports_clean_service_stats() {
+    let twin = Twin::leonardo();
+    let grid = SweepGrid::new(vec![1, 2], vec![None], vec!["day".into()], 60).unwrap();
+    let sp = spec(&twin, &grid, false);
+    let (_, stats) = run_distributed(&twin, &sp, 3, &[]).unwrap();
+    assert_eq!(
+        stats,
+        ServiceStats {
+            workers_joined: 3,
+            workers_lost: 0,
+            groups_reassigned: 0,
+            duplicate_rows: 0,
+        }
+    );
+}
+
+/// The policy and fault axes ride through the wire untouched: a
+/// coupled grid crossing two placement policies with two fault traces
+/// merges byte-identically to the streaming oracle.
+#[test]
+fn distributed_matches_streaming_on_policy_and_fault_axes() {
+    let twin = Twin::leonardo();
+    let faulted = FaultTrace {
+        seed: 7,
+        duration_s: 86_400.0,
+        node_mtbf_s: 200_000.0,
+        repair_mean_s: 7_200.0,
+        group: 4,
+        link_mtbf_s: 400_000.0,
+        link_repair_mean_s: 3_600.0,
+        degraded_factor: 0.5,
+    };
+    let grid = SweepGrid::new(vec![1, 2], vec![None, Some(7.0)], vec!["day".into()], 80)
+        .unwrap()
+        .with_coupling(Coupling::full())
+        .with_policies(vec![PolicyKind::PackFirst, PolicyKind::SpreadLinks])
+        .with_fault_traces(vec![FaultTrace::none(), faulted]);
+    assert_eq!(grid.len(), 2 * 2 * 2 * 2);
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    for workers in [2, 3] {
+        let report = twin.sweep_distributed(&grid, false, workers).unwrap();
+        assert_eq!(oracle, report, "{workers}-worker policy/fault sweep diverged");
+    }
+}
+
+/// Fork mode: workers replay divergence-tree groups on their arenas
+/// (snapshot at the cap fork point, restore per sibling) and the
+/// merged report — fork/restore counters included — is byte-identical
+/// to `run_sweep_forked` at every fleet size.
+#[test]
+fn distributed_fork_mode_matches_the_forked_oracle() {
+    let twin = Twin::leonardo();
+    let grid = canonical_grid()
+        .with_coupling(Coupling::full())
+        .with_cap_time(20_000.0);
+    let oracle = run_sweep_forked(&twin, &grid, 2);
+    for workers in [1, 2, 4] {
+        let report = twin.sweep_distributed(&grid, true, workers).unwrap();
+        assert_eq!(oracle, report, "{workers}-worker forked sweep diverged");
+    }
+    // The fork actually happened on the workers' side of the wire.
+    assert!(oracle.stats.iter().all(|s| s.forks == 1));
+}
+
+/// Churn: one of three workers dies mid-sweep. The ring hands exactly
+/// its unacknowledged groups to the survivors, the merge backfills
+/// them, and the final report is still byte-identical to the
+/// single-process oracle.
+#[test]
+fn worker_churn_reassigns_only_the_lost_workers_groups() {
+    let twin = Twin::leonardo();
+    // 12 scenarios, fork off → 12 singleton groups g0..g11.
+    let grid = SweepGrid::new(
+        vec![1, 2, 3],
+        vec![None, Some(7.0)],
+        vec!["day".into(), "ai".into()],
+        60,
+    )
+    .unwrap();
+    assert_eq!(grid.len(), 12);
+
+    // Reproduce the dispatch ring locally so the die-after arithmetic
+    // below is visible: w0 owns exactly groups {5, 6} of this grid.
+    let mut ring = HashRing::new(DEFAULT_REPLICAS);
+    for w in ["w0", "w1", "w2"] {
+        ring.add(w);
+    }
+    let w0_groups: Vec<usize> = (0..grid.len())
+        .filter(|&g| ring.assign_group(g).unwrap() == "w0")
+        .collect();
+    assert_eq!(w0_groups, vec![5, 6], "pinned ring layout moved");
+
+    // w0 acknowledges one group then drops its connection, orphaning
+    // the other. Only that one group may move.
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    let sp = spec(&twin, &grid, false);
+    let (report, stats) = run_distributed(&twin, &sp, 3, &[(0, 1)]).unwrap();
+    assert_eq!(oracle, report, "churned sweep diverged from the oracle");
+    assert_eq!(stats.workers_joined, 3);
+    assert_eq!(stats.workers_lost, 1);
+    assert_eq!(
+        stats.groups_reassigned,
+        w0_groups.len() - 1,
+        "re-dispatch touched groups the lost worker had already acked"
+    );
+    assert_eq!(stats.duplicate_rows, 0);
+
+    // Ring-level guarantee behind the service behavior: dropping w0
+    // moves only w0's groups; every survivor keeps its assignment.
+    let mut after = ring.clone();
+    after.remove("w0");
+    for g in 0..grid.len() {
+        let owner = ring.assign_group(g).unwrap();
+        if owner != "w0" {
+            assert_eq!(
+                after.assign_group(g).unwrap(),
+                owner,
+                "group {g} moved although its owner survived"
+            );
+        } else {
+            assert_ne!(after.assign_group(g), Some("w0"));
+        }
+    }
+}
+
+/// Losing every worker must not hang the coordinator: with the whole
+/// fleet gone mid-sweep and rows outstanding, the merge loop bails
+/// with a diagnostic instead of waiting forever.
+#[test]
+fn losing_the_entire_fleet_errors_instead_of_hanging() {
+    let twin = Twin::leonardo();
+    let grid = SweepGrid::new(
+        vec![1, 2, 3],
+        vec![None, Some(7.0)],
+        vec!["day".into(), "ai".into()],
+        60,
+    )
+    .unwrap();
+    let sp = spec(&twin, &grid, false);
+    // The single worker dies after one of its twelve groups.
+    let err = run_distributed(&twin, &sp, 1, &[(0, 1)]).unwrap_err();
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("fleet lost"),
+        "unexpected fleet-loss diagnostic: {msg}"
+    );
+}
