@@ -29,7 +29,12 @@
 //!    merge all on the timed path. Reports are asserted byte-identical
 //!    to tier 6 in both modes; the 2-worker fleet must reach >= 1.6x
 //!    the 1-worker fleet's scenario throughput at full scale (the ring
-//!    splits the 24 groups exactly 12/12).
+//!    splits the 24 groups exactly 12/12). ISSUE 9 extends the tier
+//!    with a multi-job probe (a persistent coordinator serving three
+//!    concurrently submitted copies of the grid through one fleet —
+//!    queue makespan and jobs/s) and a churn probe (one worker crashes
+//!    mid-sweep — reassignment latency from the service stats); both
+//!    ride into `BENCH_distributed.json`.
 //!
 //! Gates: the incremental engine must run the coupled grid at >= 2x the
 //! PR 3 baseline, coupled throughput must land within 3x of uncoupled —
@@ -50,13 +55,19 @@
 //! per-scenario day and runs one rep — the CI smoke that both gates the
 //! coupled engines end-to-end and emits the JSON artifact.
 
-use std::time::Instant;
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
 
 use leonardo_twin::campaign::{
     run_sweep, run_sweep_forked, run_sweep_streaming, CampaignReport, SweepGrid,
 };
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::scheduler::{CheckpointPolicy, Coupling, PolicyKind};
+use leonardo_twin::service::{
+    drain, run_distributed, run_worker, serve_listener, submit, CoordinatorConfig, SweepSpec,
+    WorkerOptions,
+};
 use leonardo_twin::workloads::FaultTrace;
 
 fn best_of<F: FnMut() -> CampaignReport>(reps: usize, mut f: F) -> (f64, CampaignReport) {
@@ -168,6 +179,58 @@ fn main() {
     assert_eq!(faulted, dist2, "2-worker distributed sweep diverged");
     assert_eq!(faulted, dist4, "4-worker distributed sweep diverged");
 
+    // ISSUE 9 multi-job probe: one persistent coordinator, one
+    // 2-worker fleet, three copies of the grid submitted concurrently.
+    // The elapsed time is the whole queue's makespan — accept, FIFO
+    // dispatch, per-job merge and report delivery all on the clock.
+    let sp = SweepSpec {
+        grid: faulted_grid.clone(),
+        routing: twin.net.routing,
+        fork: false,
+    };
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind bench listener");
+    let addr = listener.local_addr().expect("bench listener addr");
+    let cfg = CoordinatorConfig {
+        expect: 2,
+        persist: true,
+        queue_cap: 8,
+        ..CoordinatorConfig::default()
+    };
+    let t0 = Instant::now();
+    let (multi_reports, queue_stats) = thread::scope(|s| {
+        let serve = s.spawn(|| serve_listener(listener, None, &cfg));
+        for k in 0..2 {
+            let mut wt = twin.clone();
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).expect("bench worker connect");
+                run_worker(&mut wt, sock, &WorkerOptions::named(&format!("w{k}")))
+                    .expect("bench worker")
+            });
+        }
+        let subs: Vec<_> = (0..3)
+            .map(|_| s.spawn(|| submit(addr, &sp, Duration::from_secs(60)).expect("bench submit")))
+            .collect();
+        let reports: Vec<CampaignReport> = subs.into_iter().map(|h| h.join().unwrap()).collect();
+        drain(addr, Duration::from_secs(30)).expect("bench drain");
+        let (_, stats) = serve.join().unwrap().expect("bench coordinator");
+        (reports, stats)
+    });
+    let multi_s = t0.elapsed().as_secs_f64();
+    for r in &multi_reports {
+        assert_eq!(&faulted, r, "multi-job distributed sweep diverged");
+    }
+    assert_eq!(queue_stats.jobs_served, 3, "the queue did not serve all jobs");
+    assert_eq!(queue_stats.workers_lost, 0, "a bench worker was convicted");
+    let multi_jobs_per_s = 3.0 / multi_s;
+
+    // ISSUE 9 churn probe: a 3-worker fleet where one member crashes
+    // after its first ack. The service stats expose how long the loss
+    // held its groups hostage (assignment → re-dispatch latency).
+    let (churn_report, churn_stats) =
+        run_distributed(&twin, &sp, 3, &[(0, 1)]).expect("churned distributed sweep");
+    assert_eq!(faulted, churn_report, "churned distributed sweep diverged");
+    assert_eq!(churn_stats.workers_lost, 1, "the scripted crash went unnoticed");
+
     // The faulted sweep must be a real failure campaign: kills landed,
     // every kill requeued (all jobs carry the periodic checkpoint), and
     // destroyed node-hours show up as goodput < 1.
@@ -263,6 +326,8 @@ fn main() {
          \x20 forked vs streaming            {fork_speedup:.2}x\n\
          \x20 faulted vs fault-free          {fault_penalty:.2}x\n\
          \x20 fleet x2 / x4 vs x1            {fleet2_speedup:.2}x / {fleet4_speedup:.2}x\n\
+         \x20 3-job queue makespan           {multi_s:.2} s = {multi_jobs_per_s:.2} jobs/s\n\
+         \x20 churn reassign latency         {:.3} s mean / {:.3} s max ({} groups)\n\
          \x20 re-times elided                {elided}\n\
          \x20 prefix forks / restores        {forks} / {restores}\n\
          \x20 kills / requeues / wasted nh   {killed} / {requeued} / {wasted_nh:.1}",
@@ -276,6 +341,9 @@ fn main() {
         per_s(dist1_s),
         per_s(dist2_s),
         per_s(dist4_s),
+        churn_stats.reassign_latency_mean_s,
+        churn_stats.reassign_latency_max_s,
+        churn_stats.groups_reassigned,
     );
     println!("max p95 stretch across the grid: {max_stretch:.3}x nominal");
 
@@ -366,6 +434,13 @@ fn main() {
             "  \"fleet4_scenarios_per_s\": {:.3},\n",
             "  \"fleet2_speedup_vs_fleet1\": {:.3},\n",
             "  \"fleet4_speedup_vs_fleet1\": {:.3},\n",
+            "  \"multi_job_jobs\": {},\n",
+            "  \"multi_job_seconds\": {:.3},\n",
+            "  \"multi_job_jobs_per_s\": {:.3},\n",
+            "  \"reassign_latency_mean_s\": {:.4},\n",
+            "  \"reassign_latency_max_s\": {:.4},\n",
+            "  \"churn_workers_lost\": {},\n",
+            "  \"churn_groups_reassigned\": {},\n",
             "  \"reports_identical_to_streaming\": true\n",
             "}}\n"
         ),
@@ -379,6 +454,13 @@ fn main() {
         per_s(dist4_s),
         fleet2_speedup,
         fleet4_speedup,
+        3,
+        multi_s,
+        multi_jobs_per_s,
+        churn_stats.reassign_latency_mean_s,
+        churn_stats.reassign_latency_max_s,
+        churn_stats.workers_lost,
+        churn_stats.groups_reassigned,
     );
     match std::fs::write("BENCH_distributed.json", &dist_json) {
         Ok(()) => println!("wrote BENCH_distributed.json"),

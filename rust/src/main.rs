@@ -14,10 +14,11 @@
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
 use std::net::SocketAddr;
+use std::time::Duration;
 
 use leonardo_twin::campaign::{
     parse_caps, parse_checkpoint, parse_faults, parse_mixes, parse_policies, parse_routing,
-    parse_threads, parse_workers, SweepGrid,
+    parse_threads, parse_workers, CampaignReport, SweepGrid,
 };
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::metrics::Table;
@@ -58,23 +59,35 @@ COMMANDS:
                        [--mixes LIST] [--threads T] [--coupled] [--routing P]
                        [--policy LIST] [--cap-time SEC] [--fork]
                        [--faults SPEC] [--checkpoint CP]
-  serve       Distributed sweep service coordinator: accept a sweep
-              grid submission, shard its scenario groups across a
-              worker fleet over a consistent-hash ring, and merge the
-              streamed rows into the same report `sweep` prints —
-              byte-identical for any worker count. Fleet is either
-              in-process (--workers N) or TCP (--listen ADDR, serving
-              `work` processes). Takes every sweep grid flag; a grid
-              must be given explicitly (no defaults)
-                       [--workers N | --listen ADDR [--expect N]]
+  serve       Distributed sweep service coordinator: shard a sweep
+              grid's scenario groups across a worker fleet over a
+              consistent-hash ring and merge the streamed rows into
+              the same report `sweep` prints — byte-identical for any
+              worker count, join order, or worker failure. Fleet is
+              either in-process (--workers N) or TCP (--listen ADDR,
+              serving `work` processes). Takes every sweep grid flag;
+              a grid must be given explicitly unless --persist (then
+              clients `submit` grids). With --persist the coordinator
+              outlives its grids: jobs queue FIFO (bounded by
+              --queue) until a `submit --drain`
+                       [--workers N | --listen ADDR [--expect N]
+                        [--persist] [--queue N]]
                        [--jobs N] [--seed S] [--seeds K] [--caps LIST]
                        [--mixes LIST] [--coupled] [--routing P]
                        [--policy LIST] [--cap-time SEC] [--fork]
                        [--faults SPEC] [--checkpoint CP]
+  submit      Distributed sweep client: send an explicit sweep grid
+              to a running `serve` coordinator, wait for the fleet's
+              byte-identical report, print it like `sweep` would; or
+              ask the service to finish its queue and exit (--drain)
+                       --connect HOST:PORT [--drain]
+                       [sweep grid flags as above]
   work        Distributed sweep worker: connect to a `serve`
               coordinator, replay assigned scenario groups on a
-              persistent arena, stream rows back, exit on shutdown
-                       --connect HOST:PORT
+              persistent arena, stream rows back, answer heartbeats,
+              rejoin across coordinator restarts, exit on shutdown
+                       --connect HOST:PORT [--die-after N]
+                       [--chaos SEED]
   calibrate   Measure the AOT kernels through PJRT
   all         Every table in paper order              [--calibrated]
 
@@ -134,8 +147,23 @@ OPTIONS:
                     (host:port)
   --expect N        serve: wait for N workers before the first dispatch
                     (default 1; --listen mode only)
-  --connect ADDR    work: coordinator address (host:port); retries for
-                    up to 30s while the coordinator starts
+  --persist         serve: keep serving after the initial grid (if any),
+                    accepting `submit` jobs until a `submit --drain`
+                    (--listen mode only)
+  --queue N         serve: queued jobs beyond the active one before a
+                    submission is rejected (default 8; --listen mode
+                    only)
+  --connect ADDR    submit/work: coordinator address (host:port);
+                    retries for up to 30s while the coordinator starts
+  --drain           submit: ask the coordinator to finish its active and
+                    queued jobs, then exit; blocks until it has
+  --die-after N     work: crash (drop the connection) after
+                    acknowledging N groups — fault-drill hook for the
+                    chaos harness and CI
+  --chaos SEED      work: run this worker over a seeded fault-injecting
+                    transport (deterministic drop/delay/truncate/corrupt
+                    schedule) — it will misbehave mid-protocol and the
+                    coordinator must survive it
 ";
 
 struct Args {
@@ -162,9 +190,15 @@ struct Args {
     listen: Option<String>,
     expect: Option<usize>,
     connect: Option<String>,
+    persist: bool,
+    queue: Option<usize>,
+    drain: bool,
+    die_after: Option<usize>,
+    chaos: Option<u64>,
     /// Whether any grid-shaping flag (`--seeds`/`--caps`/`--mixes`/
-    /// `--jobs`) was given explicitly — `serve` refuses to fall back to
-    /// the `sweep` defaults, a service replays *submitted* grids.
+    /// `--jobs`) was given explicitly — `serve` and `submit` refuse to
+    /// fall back to the `sweep` defaults, a service replays
+    /// *submitted* grids.
     grid_given: bool,
 }
 
@@ -195,6 +229,11 @@ fn parse_args() -> Result<Args, String> {
         listen: None,
         expect: None,
         connect: None,
+        persist: false,
+        queue: None,
+        drain: false,
+        die_after: None,
+        chaos: None,
         grid_given: false,
     };
     while let Some(a) = argv.next() {
@@ -249,6 +288,32 @@ fn parse_args() -> Result<Args, String> {
             }
             "--listen" => args.listen = Some(argv.next().ok_or("--listen needs a value")?),
             "--connect" => args.connect = Some(argv.next().ok_or("--connect needs a value")?),
+            "--persist" => args.persist = true,
+            "--drain" => args.drain = true,
+            "--queue" => {
+                args.queue = Some(
+                    argv.next()
+                        .ok_or("--queue needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--queue: {e}"))?,
+                )
+            }
+            "--die-after" => {
+                args.die_after = Some(
+                    argv.next()
+                        .ok_or("--die-after needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--die-after: {e}"))?,
+                )
+            }
+            "--chaos" => {
+                args.chaos = Some(
+                    argv.next()
+                        .ok_or("--chaos needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--chaos: {e}"))?,
+                )
+            }
             "--seed" => {
                 args.seed = argv
                     .next()
@@ -399,18 +464,17 @@ enum ServeMode {
 
 /// Validate and assemble every `serve` input. On top of the shared
 /// sweep grid validation: the grid must be explicit (a service replays
-/// *submitted* grids, there is no default sweep), `--workers 0` and
-/// `--expect 0` are errors, `--listen` must parse as host:port, and
-/// the two fleet modes are mutually exclusive.
-fn serve_inputs(args: &Args) -> anyhow::Result<(SweepGrid, Routing, ServeMode)> {
-    anyhow::ensure!(
-        args.grid_given,
-        "serve replays a submitted sweep grid and has no default grid: pass at \
-         least one of --seeds/--caps/--mixes/--jobs"
-    );
-    let (grid, _threads, routing, _coupling) = sweep_inputs(args)?;
+/// *submitted* grids, there is no default sweep) unless the
+/// coordinator is a persistent listener fed by `submit` clients;
+/// `--workers 0`, `--expect 0` and `--queue 0` are errors, `--listen`
+/// must parse as host:port, the two fleet modes are mutually
+/// exclusive, and `--persist`/`--queue` belong to the listener.
+fn serve_inputs(args: &Args) -> anyhow::Result<(Option<SweepGrid>, Routing, ServeMode)> {
     let workers = parse_workers("--workers", args.workers)?;
     let expect = parse_workers("--expect", args.expect)?;
+    if args.queue == Some(0) {
+        anyhow::bail!("--queue 0 would reject every submission: pass at least 1");
+    }
     let mode = match (workers, &args.listen) {
         (Some(_), Some(_)) => anyhow::bail!(
             "--workers (in-process fleet) and --listen (TCP fleet) are mutually \
@@ -421,6 +485,11 @@ fn serve_inputs(args: &Args) -> anyhow::Result<(SweepGrid, Routing, ServeMode)> 
                 expect.is_none(),
                 "--expect applies to --listen mode: an in-process fleet always \
                  has exactly --workers workers"
+            );
+            anyhow::ensure!(
+                !args.persist && args.queue.is_none(),
+                "--persist/--queue apply to --listen mode: an in-process fleet \
+                 serves exactly one grid"
             );
             ServeMode::InProcess(n)
         }
@@ -433,7 +502,78 @@ fn serve_inputs(args: &Args) -> anyhow::Result<(SweepGrid, Routing, ServeMode)> 
              --workers N (in-process)"
         ),
     };
-    Ok((grid, routing, mode))
+    if args.grid_given {
+        let (grid, _threads, routing, _coupling) = sweep_inputs(args)?;
+        Ok((Some(grid), routing, mode))
+    } else {
+        anyhow::ensure!(
+            args.persist,
+            "serve replays a submitted sweep grid and has no default grid: pass at \
+             least one of --seeds/--caps/--mixes/--jobs (or --listen --persist and \
+             let `submit` clients bring the grids)"
+        );
+        let (routing, _coupling) = routing_and_coupling(args)?;
+        Ok((None, routing, mode))
+    }
+}
+
+/// Validate `submit` inputs: `--connect` is required; `--drain` takes
+/// no grid flags (it stops the service, it doesn't run one); a
+/// submission needs an explicit grid, same rule as `serve`.
+fn submit_inputs(args: &Args) -> anyhow::Result<(SocketAddr, Option<(SweepGrid, Routing)>)> {
+    let connect = args
+        .connect
+        .as_deref()
+        .ok_or_else(|| anyhow::anyhow!("submit needs --connect HOST:PORT"))?;
+    let addr = parse_addr(connect)?;
+    if args.drain {
+        anyhow::ensure!(
+            !args.grid_given,
+            "--drain asks the coordinator to finish its queue and exit: it takes \
+             no grid flags"
+        );
+        return Ok((addr, None));
+    }
+    anyhow::ensure!(
+        args.grid_given,
+        "submit sends an explicit sweep grid: pass at least one of \
+         --seeds/--caps/--mixes/--jobs (or --drain to stop the coordinator)"
+    );
+    let (grid, _threads, routing, _coupling) = sweep_inputs(args)?;
+    Ok((addr, Some((grid, routing))))
+}
+
+/// The `sweep`-identical stdout block every report-producing command
+/// ends with — `sweep`, `serve` and `submit` all print through here so
+/// their outputs diff byte-for-byte.
+fn print_sweep_report(report: &CampaignReport, grid: &SweepGrid, md: bool) {
+    print(&report.scenario_table(), md);
+    print(&report.cap_table(), md);
+    if grid.policies.len() > 1 {
+        print(&report.policy_table(), md);
+    }
+    print(&report.summary_table(), md);
+}
+
+/// Fleet observability line (stderr, never in the diffable report).
+fn print_fleet(fleet: &service::ServiceStats) {
+    eprintln!(
+        "serve: fleet joined={} lost={} groups reassigned={} duplicate rows={} \
+         stale rows={} jobs served={} rejected={}",
+        fleet.workers_joined,
+        fleet.workers_lost,
+        fleet.groups_reassigned,
+        fleet.duplicate_rows,
+        fleet.stale_rows,
+        fleet.jobs_served,
+        fleet.jobs_rejected,
+    );
+    if fleet.workers_lost > 0 {
+        eprintln!(
+            "serve: reassignment latency mean={:.3}s max={:.3}s",
+            fleet.reassign_latency_mean_s, fleet.reassign_latency_max_s,
+        );
+    }
 }
 
 fn print(t: &Table, markdown: bool) {
@@ -565,56 +705,96 @@ fn main() -> anyhow::Result<()> {
                 }
             };
             twin.net.routing = routing;
-            let spec = SweepSpec {
-                grid: grid.clone(),
+            let spec = grid.as_ref().map(|g| SweepSpec {
+                grid: g.clone(),
                 routing,
                 fork: args.fork,
-            };
-            let (report, fleet) = match mode {
+            });
+            match mode {
                 ServeMode::InProcess(n) => {
+                    let spec = spec.expect("in-process serve always has a grid");
                     eprintln!(
                         "serve: {} scenarios ({} groups) on an in-process fleet of {n} worker(s)",
-                        grid.len(),
-                        grid.work_groups(args.fork).len(),
+                        spec.grid.len(),
+                        spec.grid.work_groups(args.fork).len(),
                     );
-                    service::run_distributed(&twin, &spec, n, &[])?
+                    let (report, fleet) = service::run_distributed(&twin, &spec, n, &[])?;
+                    print_fleet(&fleet);
+                    // Same stdout as `sweep`, so reports diff
+                    // byte-for-byte.
+                    print_sweep_report(&report, &spec.grid, md);
                 }
                 ServeMode::Listen { addr, expect } => {
-                    eprintln!(
-                        "serve: {} scenarios ({} groups), listening on {addr}, \
-                         dispatching at {expect} worker(s)",
-                        grid.len(),
-                        grid.work_groups(args.fork).len(),
-                    );
+                    match &spec {
+                        Some(spec) => eprintln!(
+                            "serve: {} scenarios ({} groups), listening on {addr}, \
+                             dispatching at {expect} worker(s){}",
+                            spec.grid.len(),
+                            spec.grid.work_groups(args.fork).len(),
+                            if args.persist {
+                                ", persistent (submit --drain to stop)"
+                            } else {
+                                ""
+                            },
+                        ),
+                        None => eprintln!(
+                            "serve: listening on {addr}, dispatching at {expect} worker(s), \
+                             persistent (grids arrive by submit; submit --drain to stop)",
+                        ),
+                    }
                     let cfg = CoordinatorConfig {
                         listen: addr,
                         expect,
-                        replicas: service::DEFAULT_REPLICAS,
+                        queue_cap: args.queue.unwrap_or(8),
+                        persist: args.persist,
+                        ..CoordinatorConfig::default()
                     };
-                    service::serve(&spec, &cfg)?
+                    let (report, fleet) = service::serve_service(spec.as_ref(), &cfg)?;
+                    print_fleet(&fleet);
+                    if let (Some(report), Some(spec)) = (report, &spec) {
+                        print_sweep_report(&report, &spec.grid, md);
+                    }
+                }
+            }
+        }
+        "submit" => {
+            let (addr, job) = match submit_inputs(&args) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
                 }
             };
-            eprintln!(
-                "serve: fleet joined={} lost={} groups reassigned={} duplicate rows={}",
-                fleet.workers_joined,
-                fleet.workers_lost,
-                fleet.groups_reassigned,
-                fleet.duplicate_rows,
-            );
-            // Same stdout as `sweep`, so reports diff byte-for-byte.
-            print(&report.scenario_table(), md);
-            print(&report.cap_table(), md);
-            if grid.policies.len() > 1 {
-                print(&report.policy_table(), md);
+            match job {
+                None => {
+                    let pending = service::drain(addr, Duration::from_secs(30))?;
+                    eprintln!(
+                        "drain: coordinator at {addr} finished {pending} pending job(s) and exited"
+                    );
+                }
+                Some((grid, routing)) => {
+                    let spec = SweepSpec {
+                        grid: grid.clone(),
+                        routing,
+                        fork: args.fork,
+                    };
+                    eprintln!(
+                        "submit: {} scenarios ({} groups) to {addr}",
+                        grid.len(),
+                        grid.work_groups(args.fork).len(),
+                    );
+                    let report = service::submit(addr, &spec, Duration::from_secs(30))?;
+                    // Same stdout as `sweep`, so reports diff
+                    // byte-for-byte.
+                    print_sweep_report(&report, &grid, md);
+                }
             }
-            print(&report.summary_table(), md);
         }
         "work" => {
-            let out = args
-                .connect
-                .as_deref()
-                .ok_or_else(|| anyhow::anyhow!("work needs --connect HOST:PORT"))
-                .and_then(service::work);
+            let out = match args.connect.as_deref() {
+                Some(connect) => service::work(connect, args.die_after, args.chaos),
+                None => Err(anyhow::anyhow!("work needs --connect HOST:PORT")),
+            };
             if let Err(e) = out {
                 eprintln!("{e}");
                 std::process::exit(2);
@@ -726,6 +906,11 @@ mod tests {
             listen: None,
             expect: None,
             connect: None,
+            persist: false,
+            queue: None,
+            drain: false,
+            die_after: None,
+            chaos: None,
             grid_given: false,
         }
     }
@@ -862,7 +1047,7 @@ mod tests {
         a.grid_given = true;
         a.workers = Some(2);
         let (grid, routing, mode) = serve_inputs(&a).unwrap();
-        assert_eq!(grid.len(), 4 * 3 * 2);
+        assert_eq!(grid.expect("explicit grid").len(), 4 * 3 * 2);
         assert_eq!(routing, Routing::Minimal);
         assert!(matches!(mode, ServeMode::InProcess(2)));
 
@@ -933,6 +1118,105 @@ mod tests {
         a.workers = Some(2);
         a.mixes = "day,bogus".into();
         assert!(serve_inputs(&a).is_err(), "bad grid accepted by serve");
+    }
+
+    /// Tentpole: the persistent-service flag surface — a grid-less
+    /// `serve` is legal exactly when it's a persistent listener, the
+    /// queue bound must be positive, and the persistence flags don't
+    /// apply to an in-process fleet.
+    #[test]
+    fn serve_inputs_validates_persistence_flags() {
+        // Persistent listener without a grid: legal, grids arrive by
+        // submit.
+        let mut a = args();
+        a.listen = Some("127.0.0.1:7723".into());
+        a.persist = true;
+        let (grid, _, mode) = serve_inputs(&a).unwrap();
+        assert!(grid.is_none(), "grid invented out of nowhere");
+        assert!(matches!(mode, ServeMode::Listen { expect: 1, .. }));
+
+        // Persistent listener with an initial grid: also legal.
+        let mut a = args();
+        a.listen = Some("127.0.0.1:7723".into());
+        a.persist = true;
+        a.grid_given = true;
+        a.queue = Some(2);
+        let (grid, _, _) = serve_inputs(&a).unwrap();
+        assert!(grid.is_some());
+
+        // --queue 0 would reject everything: error, not a footgun.
+        let mut a = args();
+        a.listen = Some("127.0.0.1:7723".into());
+        a.persist = true;
+        a.queue = Some(0);
+        let err = serve_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("--queue 0"), "{err}");
+
+        // --persist / --queue on an in-process fleet: errors.
+        let mut a = args();
+        a.grid_given = true;
+        a.workers = Some(2);
+        a.persist = true;
+        let err = serve_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("--listen mode"), "{err}");
+
+        let mut a = args();
+        a.grid_given = true;
+        a.workers = Some(2);
+        a.queue = Some(4);
+        assert!(serve_inputs(&a).is_err(), "--queue with --workers accepted");
+    }
+
+    /// Tentpole: `submit` validation — `--connect` required, `--drain`
+    /// excludes grid flags, a submission requires an explicit grid, and
+    /// grid validation applies underneath.
+    #[test]
+    fn submit_inputs_validates_flags() {
+        let mut a = args();
+        a.grid_given = true;
+        let err = submit_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("--connect"), "{err}");
+
+        let mut a = args();
+        a.connect = Some("127.0.0.1:7723".into());
+        a.grid_given = true;
+        let (addr, job) = submit_inputs(&a).unwrap();
+        assert_eq!(addr, "127.0.0.1:7723".parse::<SocketAddr>().unwrap());
+        let (grid, routing) = job.expect("explicit grid");
+        assert_eq!(grid.len(), 4 * 3 * 2);
+        assert_eq!(routing, Routing::Minimal);
+
+        // Drain is grid-less by construction.
+        let mut a = args();
+        a.connect = Some("127.0.0.1:7723".into());
+        a.drain = true;
+        let (_, job) = submit_inputs(&a).unwrap();
+        assert!(job.is_none());
+
+        let mut a = args();
+        a.connect = Some("127.0.0.1:7723".into());
+        a.drain = true;
+        a.grid_given = true;
+        let err = submit_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("no grid flags"), "{err}");
+
+        // No grid, no drain: refused, same rule as serve.
+        let mut a = args();
+        a.connect = Some("127.0.0.1:7723".into());
+        let err = submit_inputs(&a).unwrap_err();
+        assert!(format!("{err}").contains("explicit sweep grid"), "{err}");
+
+        // Bad addresses and bad grids error cleanly.
+        let mut a = args();
+        a.connect = Some("nonsense".into());
+        a.grid_given = true;
+        assert!(submit_inputs(&a).is_err(), "bad --connect accepted");
+
+        let mut a = args();
+        a.connect = Some("127.0.0.1:7723".into());
+        a.grid_given = true;
+        a.mixes = "day,bogus".into();
+        assert!(submit_inputs(&a).is_err(), "bad grid accepted by submit");
     }
 
     #[test]

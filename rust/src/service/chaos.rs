@@ -1,0 +1,265 @@
+//! Seeded wire-fault injection for the distributed sweep service.
+//!
+//! [`FaultyTransport`] wraps one half of a framed connection and
+//! misbehaves on a deterministic schedule: it drops the link, delays,
+//! truncates a write mid-frame, or corrupts a byte. Schedules are
+//! keyed by *operation count*, not wall-clock time, so a given
+//! [`FaultPlan`] misbehaves at the same protocol position on every
+//! run — the chaos suite and the CI chaos step replay identical
+//! failures from a seed.
+//!
+//! Every fault mode funnels into the one recovery path the
+//! coordinator has: the connection is (or becomes) unreadable, the
+//! worker is declared lost, and its unacknowledged groups are
+//! reassigned. Corruption is engineered to be *detectable by
+//! construction* — the injected byte flip sets the top bit of the
+//! first buffer byte, which turns a length prefix into an over-cap
+//! length and a JSON body's leading `{` into invalid UTF-8, so a
+//! corrupted frame can never parse into a plausible-but-wrong row and
+//! poison the merge.
+
+use std::collections::BTreeMap;
+use std::io::{Error, ErrorKind, Read, Result, Write};
+use std::time::Duration;
+
+/// One scheduled misbehavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFault {
+    /// Kill the link: this operation and every later one fail.
+    Drop,
+    /// Stall this operation for the given number of milliseconds,
+    /// then perform it normally (late, not wrong).
+    DelayMs(u64),
+    /// Write only half the buffer, then kill the link — the peer is
+    /// left holding a partial frame that can never complete.
+    TruncateWrite,
+    /// Flip the top bit of the first byte of the buffer (read or
+    /// write), guaranteeing the peer rejects the frame.
+    CorruptByte,
+}
+
+/// xorshift64* — the same tiny deterministic generator the fault
+/// traces use; good enough to scatter fault positions from a seed
+/// (and, in [`super::worker`], retry jitter).
+pub(crate) fn xorshift(mut x: u64) -> u64 {
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+}
+
+/// When to misbehave: a map from the transport's operation counter
+/// (each `read`/`write` call increments it) to the fault injected at
+/// that operation.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: BTreeMap<u64, WireFault>,
+}
+
+impl FaultPlan {
+    /// An explicit schedule, for tests that pin the protocol position
+    /// of a fault.
+    pub fn at(ops: &[(u64, WireFault)]) -> FaultPlan {
+        FaultPlan {
+            faults: ops.iter().copied().collect(),
+        }
+    }
+
+    /// A seeded schedule: one fault, placed pseudo-randomly in
+    /// operations 6..=120 of the wrapped half. The floor of 6 keeps
+    /// the join handshake (`Hello` out, `Spec`/first `Assign` in)
+    /// intact so a chaos worker always *joins* the fleet before it
+    /// starts misbehaving — a worker that faults before `Hello` never
+    /// enters the ring and tests nothing.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        let r0 = xorshift(seed.wrapping_add(0x9e37_79b9_7f4a_7c15));
+        let op = 6 + r0 % 115;
+        let fault = match xorshift(r0) % 4 {
+            0 => WireFault::Drop,
+            1 => WireFault::DelayMs(1 + xorshift(r0 ^ 0xff) % 20),
+            2 => WireFault::TruncateWrite,
+            _ => WireFault::CorruptByte,
+        };
+        FaultPlan::at(&[(op, fault)])
+    }
+
+    /// The scheduled faults, for asserting determinism.
+    pub fn schedule(&self) -> impl Iterator<Item = (u64, WireFault)> + '_ {
+        self.faults.iter().map(|(&op, &f)| (op, f))
+    }
+}
+
+/// A `Read + Write` wrapper that executes a [`FaultPlan`]. Wrap each
+/// half of a split connection separately (reads and writes count on
+/// independent op counters, keeping schedules deterministic per
+/// direction).
+#[derive(Debug)]
+pub struct FaultyTransport<T> {
+    inner: T,
+    plan: FaultPlan,
+    op: u64,
+    dead: bool,
+}
+
+impl<T> FaultyTransport<T> {
+    pub fn new(inner: T, plan: FaultPlan) -> FaultyTransport<T> {
+        FaultyTransport {
+            inner,
+            plan,
+            op: 0,
+            dead: false,
+        }
+    }
+
+    /// Decide this operation's fate and advance the counter. Timeouts
+    /// don't count as operations — schedules stay stable however long
+    /// the peer dawdles.
+    fn next_fault(&mut self) -> std::result::Result<Option<WireFault>, Error> {
+        if self.dead {
+            return Err(Error::new(ErrorKind::BrokenPipe, "chaos: link dropped"));
+        }
+        let fault = self.plan.faults.get(&self.op).copied();
+        self.op += 1;
+        Ok(fault)
+    }
+}
+
+impl<T: Read> Read for FaultyTransport<T> {
+    fn read(&mut self, buf: &mut [u8]) -> Result<usize> {
+        // Peek the fate first, but only commit the op count on a
+        // non-timeout outcome so blocking-read retries don't slide
+        // the schedule.
+        if self.dead {
+            return Err(Error::new(ErrorKind::BrokenPipe, "chaos: link dropped"));
+        }
+        let fault = self.plan.faults.get(&self.op).copied();
+        match fault {
+            Some(WireFault::Drop) | Some(WireFault::TruncateWrite) => {
+                // Truncation is a write-side fault; on the read half
+                // it degenerates to a drop.
+                self.op += 1;
+                self.dead = true;
+                Err(Error::new(ErrorKind::BrokenPipe, "chaos: link dropped"))
+            }
+            Some(WireFault::DelayMs(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.op += 1;
+                self.inner.read(buf)
+            }
+            Some(WireFault::CorruptByte) => {
+                let n = self.inner.read(buf)?;
+                self.op += 1;
+                if n > 0 {
+                    buf[0] ^= 0x80;
+                }
+                Ok(n)
+            }
+            None => {
+                let out = self.inner.read(buf);
+                match &out {
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                        ) => {}
+                    _ => self.op += 1,
+                }
+                out
+            }
+        }
+    }
+}
+
+impl<T: Write> Write for FaultyTransport<T> {
+    fn write(&mut self, buf: &[u8]) -> Result<usize> {
+        match self.next_fault()? {
+            Some(WireFault::Drop) => {
+                self.dead = true;
+                Err(Error::new(ErrorKind::BrokenPipe, "chaos: link dropped"))
+            }
+            Some(WireFault::DelayMs(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.inner.write(buf)
+            }
+            Some(WireFault::TruncateWrite) => {
+                let half = (buf.len() / 2).max(1).min(buf.len());
+                let n = self.inner.write(&buf[..half])?;
+                self.inner.flush().ok();
+                self.dead = true;
+                Ok(n)
+            }
+            Some(WireFault::CorruptByte) => {
+                if buf.is_empty() {
+                    return self.inner.write(buf);
+                }
+                let mut evil = buf.to_vec();
+                evil[0] ^= 0x80;
+                self.inner.write(&evil)
+            }
+            None => self.inner.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if self.dead {
+            return Err(Error::new(ErrorKind::BrokenPipe, "chaos: link dropped"));
+        }
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_spare_the_handshake() {
+        for seed in 0..64 {
+            let a = FaultPlan::seeded(seed);
+            let b = FaultPlan::seeded(seed);
+            assert_eq!(a, b, "seed {seed} not deterministic");
+            for (op, _) in a.schedule() {
+                assert!(
+                    (6..=120).contains(&op),
+                    "seed {seed} schedules a fault at op {op}, inside the handshake"
+                );
+            }
+        }
+        // Different seeds produce different schedules somewhere.
+        assert!(
+            (0..64).any(|s| FaultPlan::seeded(s) != FaultPlan::seeded(s + 64)),
+            "every seed collapsed to one schedule"
+        );
+    }
+
+    #[test]
+    fn corrupt_byte_sets_the_top_bit_of_the_first_byte() {
+        let mut t = FaultyTransport::new(Vec::new(), FaultPlan::at(&[(1, WireFault::CorruptByte)]));
+        t.write(b"ab").unwrap(); // op 0: clean
+        t.write(b"cd").unwrap(); // op 1: corrupted
+        t.write(b"ef").unwrap(); // op 2: clean again
+        assert_eq!(&t.inner, &[b'a', b'b', b'c' ^ 0x80, b'd', b'e', b'f']);
+    }
+
+    #[test]
+    fn truncate_writes_half_then_kills_the_link() {
+        let mut t =
+            FaultyTransport::new(Vec::new(), FaultPlan::at(&[(0, WireFault::TruncateWrite)]));
+        assert_eq!(t.write(b"abcdef").unwrap(), 3);
+        assert_eq!(&t.inner, b"abc");
+        assert!(t.write(b"ghi").is_err(), "link survived truncation");
+        assert!(t.flush().is_err());
+    }
+
+    #[test]
+    fn drop_kills_reads_and_writes_alike() {
+        let mut t = FaultyTransport::new(
+            std::io::Cursor::new(b"hello".to_vec()),
+            FaultPlan::at(&[(1, WireFault::Drop)]),
+        );
+        let mut buf = [0u8; 2];
+        assert_eq!(t.read(&mut buf).unwrap(), 2); // op 0: clean
+        assert!(t.read(&mut buf).is_err(), "op 1 should drop the link");
+        assert!(t.read(&mut buf).is_err(), "a dropped link came back");
+    }
+}

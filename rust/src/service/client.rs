@@ -1,0 +1,102 @@
+//! Client side of the distributed sweep service: submit a grid to a
+//! running coordinator and collect its report, or ask the coordinator
+//! to drain.
+//!
+//! A submission is one connection for its whole life: `Submit` out,
+//! `Accepted {job}` (or `Rejected {reason}`) back, then — once the
+//! fleet has merged every queued grid ahead of it plus this one — the
+//! `Report {job}` on the same socket. The read timeout stays armed
+//! throughout, so a coordinator that *dies* mid-wait surfaces as a
+//! clear connection error; a coordinator that is merely busy keeps
+//! the client patiently idle.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::campaign::CampaignReport;
+
+use super::messages::{read_msg_patient, write_msg, Msg, SweepSpec};
+use super::worker::connect_retry;
+
+/// Poll granularity for client reads; responsiveness only, liveness
+/// comes from the protocol.
+const CLIENT_POLL: Duration = Duration::from_millis(100);
+
+/// Submit `spec` to the coordinator at `addr` and wait for its
+/// report. `patience` bounds connecting and the wait for the
+/// accept/reject verdict; the report itself takes however long the
+/// fleet needs, with connection death (not time) as the failure mode.
+pub fn submit(addr: SocketAddr, spec: &SweepSpec, patience: Duration) -> Result<CampaignReport> {
+    let (mut reader, mut writer) = connect_halves(addr, patience)?;
+    write_msg(&mut writer, &Msg::Submit { spec: spec.clone() })
+        .context("send sweep submission")?;
+    let deadline = Instant::now() + patience;
+    let job = loop {
+        match read_msg_patient(&mut reader, patience).context("await submission verdict")? {
+            Some(Msg::Accepted { job }) => break job,
+            Some(Msg::Rejected { reason }) => bail!("sweep submission rejected: {reason}"),
+            Some(other) => bail!("unexpected {other:?} while awaiting the submission verdict"),
+            None => {
+                if Instant::now() >= deadline {
+                    bail!("no verdict from {addr} within {patience:?}");
+                }
+            }
+        }
+    };
+    loop {
+        match read_msg_patient(&mut reader, patience)
+            .with_context(|| format!("await report for job {job}"))?
+        {
+            Some(Msg::Report { job: id, report }) if id == job => return Ok(report),
+            Some(Msg::Rejected { reason }) => bail!("job {job} died on the coordinator: {reason}"),
+            Some(other) => bail!("unexpected {other:?} while awaiting the report for job {job}"),
+            None => {} // fleet still working; the connection is our liveness
+        }
+    }
+}
+
+/// Ask the coordinator at `addr` to finish its active and queued jobs
+/// and exit. Returns how many jobs stood between the request and the
+/// shutdown (active + queued). Blocks until the coordinator closes
+/// the connection — i.e. until the drain actually completed.
+pub fn drain(addr: SocketAddr, patience: Duration) -> Result<u64> {
+    let (mut reader, mut writer) = connect_halves(addr, patience)?;
+    write_msg(&mut writer, &Msg::Drain).context("send drain request")?;
+    let deadline = Instant::now() + patience;
+    let pending = loop {
+        match read_msg_patient(&mut reader, patience).context("await drain acknowledgement")? {
+            Some(Msg::Draining { pending }) => break pending,
+            Some(other) => bail!("unexpected {other:?} while awaiting the drain acknowledgement"),
+            None => {
+                if Instant::now() >= deadline {
+                    bail!("no drain acknowledgement from {addr} within {patience:?}");
+                }
+            }
+        }
+    };
+    // The coordinator holds this connection open until its service
+    // loop exits; the close (EOF on our side) is the completion
+    // signal.
+    loop {
+        match read_msg_patient(&mut reader, patience) {
+            Ok(Some(_)) | Ok(None) => continue,
+            Err(_) => return Ok(pending),
+        }
+    }
+}
+
+fn connect_halves(
+    addr: SocketAddr,
+    patience: Duration,
+) -> Result<(std::net::TcpStream, std::net::TcpStream)> {
+    let stream = connect_retry(addr, patience)?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(CLIENT_POLL))
+        .context("arm client read timeout")?;
+    stream.set_write_timeout(Some(Duration::from_secs(10))).ok();
+    let reader = stream.try_clone().context("clone client stream")?;
+    Ok((reader, stream))
+}

@@ -1,52 +1,97 @@
 //! Coordinator side of the distributed sweep service.
 //!
-//! One listener, one reader thread per worker connection, and a single
-//! merge loop that owns all fleet state — the consistent-hash ring,
-//! the group-ownership table, and the same pre-sized slot table the
-//! mpsc streaming engine merges into. Workers stream `(grid index,
-//! stats)` rows; the merge loop drops each row into `slots[index]` and
-//! the final [`CampaignReport`] reads the slots out in grid order, so
-//! the report is byte-identical to `run_sweep_streaming` /
+//! One listener, one reader thread per connection, and a single
+//! service loop that owns all fleet state — the consistent-hash ring,
+//! the per-job group-ownership table, the bounded job queue, and the
+//! same pre-sized slot table the mpsc streaming engine merges into.
+//! Workers stream job-tagged `(grid index, stats)` rows; the service
+//! loop drops each row into the active job's `slots[index]` and the
+//! job's [`CampaignReport`] reads the slots out in grid order, so
+//! every report is byte-identical to `run_sweep_streaming` /
 //! `run_sweep_forked` for any worker count, join order, or timing.
 //!
-//! Fault tolerance is ownership-based: a group belongs to a worker
-//! from `Assign` until its `GroupDone` ack. When a connection dies,
-//! the worker leaves the ring and exactly its unacknowledged groups
-//! are re-dispatched over the survivors (consistent hashing keeps
-//! every surviving worker's assignment intact — see
-//! [`super::shard`]). A worker joining after dispatch (the rejoin
-//! path) enters the ring and picks up any groups orphaned while the
-//! ring was empty; duplicate rows from replay overlap merge
-//! idempotently into already-filled slots.
+//! **Job queue.** The coordinator outlives one grid: clients connect,
+//! send `Submit`, and get `Accepted {job}` plus — once the fleet has
+//! merged that grid — `Report {job}` on the same connection. Jobs run
+//! FIFO through the persistent fleet; the queue is bounded
+//! ([`CoordinatorConfig::queue_cap`]) and over-cap submissions are
+//! `Rejected`, never parked. A `Drain` request finishes the active
+//! and queued jobs, then exits; closing the drain connection is the
+//! completion signal.
+//!
+//! **Liveness.** Fault tolerance is ownership-based: a group belongs
+//! to a worker from `Assign` until its `GroupDone` ack, and when a
+//! connection dies the worker leaves the ring and exactly its
+//! unacknowledged groups are re-dispatched over the survivors
+//! (consistent hashing keeps every surviving worker's assignment
+//! intact — see [`super::shard`]). A *stalled* worker — connected but
+//! silent — cannot hide behind an open socket: the coordinator pings
+//! every connection each [`CoordinatorConfig::heartbeat`], declares an
+//! idle worker lost when it stops answering, and declares a busy
+//! worker lost when one of its groups shows no progress past a
+//! deadline derived from observed group service times (never below
+//! [`CoordinatorConfig::deadline_floor`]). Every socket carries a read
+//! timeout, so neither readers nor the service loop can block forever
+//! on a dead peer; the idempotent slot merge makes late rows from a
+//! falsely-declared loss harmless.
+//!
+//! A `GroupDone` is only honored when every row of the group is
+//! already merged — a lying or corrupted worker that acks work it
+//! never streamed is declared lost instead of wedging the sweep.
 
-use std::collections::BTreeMap;
-use std::io::BufReader;
-use std::net::{Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{Ipv4Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::campaign::{CampaignReport, ScenarioStats};
 use crate::coordinator::Twin;
 
-use super::messages::{read_msg, write_msg, Msg, SweepSpec};
+use super::messages::{read_msg_patient, write_msg, Msg, SweepSpec};
 use super::shard::{HashRing, DEFAULT_REPLICAS};
-use super::worker::{connect_retry, run_worker, WorkerOptions};
+use super::worker::{connect_retry_seeded, run_worker, WorkerOptions};
+
+/// Socket-level read poll. Bounds how late a reader notices frame
+/// bytes trickling in; liveness judgements use the config deadlines,
+/// not this.
+const READ_POLL: Duration = Duration::from_millis(25);
+
+/// Socket-level write timeout: a peer that stops draining its receive
+/// buffer fails our writes instead of wedging the service loop.
+const WRITE_PATIENCE: Duration = Duration::from_secs(10);
 
 /// Where and how the coordinator runs.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     /// Listen address (`--listen`).
     pub listen: SocketAddr,
-    /// Workers to wait for before the first dispatch (`--expect`).
-    /// Late joiners beyond this are welcome — they enter the ring and
-    /// serve the rejoin path.
+    /// Workers that must have joined before the first dispatch
+    /// (`--expect`). Cumulative: a worker that joins and dies still
+    /// counts, so a chaos-ridden fleet can't deadlock the gate.
     pub expect: usize,
     /// Virtual ring points per worker.
     pub replicas: usize,
+    /// Queued jobs beyond the active one before `Submit` is
+    /// `Rejected` (`--queue`).
+    pub queue_cap: usize,
+    /// Ping cadence; also the grace before a silent *idle* worker
+    /// (owning no groups) is declared lost is tied to
+    /// `deadline_floor`.
+    pub heartbeat: Duration,
+    /// Minimum per-group progress deadline, and the patience granted
+    /// to a partial frame and a pre-`Hello` connection.
+    pub deadline_floor: Duration,
+    /// Per-group deadline = max(floor, factor × observed mean group
+    /// service time).
+    pub deadline_factor: f64,
+    /// Keep serving after the initial grid: accept `Submit`s until a
+    /// `Drain` (`--persist`). Off, the coordinator exits once its
+    /// initial job and anything queued behind it are merged.
+    pub persist: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -55,18 +100,25 @@ impl Default for CoordinatorConfig {
             listen: SocketAddr::from((Ipv4Addr::LOCALHOST, 7723)),
             expect: 1,
             replicas: DEFAULT_REPLICAS,
+            queue_cap: 8,
+            heartbeat: Duration::from_secs(1),
+            deadline_floor: Duration::from_secs(30),
+            deadline_factor: 4.0,
+            persist: false,
         }
     }
 }
 
-/// Fleet-side observability for one served sweep (the simulated
-/// numbers live in the [`CampaignReport`]; these are about the service
-/// itself).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// Fleet-side observability for one coordinator run (the simulated
+/// numbers live in the [`CampaignReport`]s; these are about the
+/// service itself).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ServiceStats {
     /// Connections that completed the `Hello` handshake.
     pub workers_joined: usize,
-    /// Connections lost before shutdown (includes crashed workers).
+    /// Workers lost before shutdown: crashed connections, stalled
+    /// workers timed out by the progress deadline, and idle workers
+    /// that stopped answering pings.
     pub workers_lost: usize,
     /// Group assignments re-dispatched after a loss (or to a rejoiner
     /// after the fleet was empty).
@@ -75,28 +127,69 @@ pub struct ServiceStats {
     /// after a re-dispatch); merged idempotently, never into the
     /// report twice.
     pub duplicate_rows: usize,
+    /// Jobs merged to completion (initial grid + accepted `Submit`s).
+    pub jobs_served: usize,
+    /// `Submit`s refused: queue full, empty grid, or draining.
+    pub jobs_rejected: usize,
+    /// Rows dropped without merging: stale job id, or a grid index
+    /// out of the active job's range.
+    pub stale_rows: usize,
+    /// Mean seconds from a group's (re)assignment to the loss that
+    /// re-dispatched it — how long a failure held its groups hostage.
+    pub reassign_latency_mean_s: f64,
+    /// Worst-case seconds from assignment to re-dispatch.
+    pub reassign_latency_max_s: f64,
 }
 
-/// What a reader thread distils each worker connection into.
+/// What reader threads distil every connection into.
 enum CoEvent {
     Joined { name: String, stream: TcpStream },
-    Row { index: u64, stats: ScenarioStats },
-    Done { worker: String, group: u64 },
+    Row { job: u64, index: u64, stats: ScenarioStats },
+    Done { worker: String, job: u64, group: u64 },
+    Pong { name: String },
     Lost { name: String },
+    Submitted { spec: SweepSpec, client: TcpStream },
+    DrainRequested { client: TcpStream },
 }
 
-/// Pump one worker connection into the event channel. The write half
-/// is handed to the merge loop at `Hello`; any read error or protocol
-/// violation afterwards is a `Lost`.
-fn reader_loop(stream: TcpStream, tx: mpsc::Sender<CoEvent>) {
+/// Pump one connection into the event channel. The first frame picks
+/// the role: `Hello` makes it a worker connection (write half handed
+/// to the service loop, then rows/acks/pongs until it dies), `Submit`
+/// and `Drain` make it a client connection (write half handed over,
+/// reader exits — clients only listen from then on). Anything else is
+/// a stranger and is dropped.
+fn reader_loop(stream: TcpStream, tx: mpsc::Sender<CoEvent>, patience: Duration) {
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_POLL)).ok();
+    stream.set_write_timeout(Some(WRITE_PATIENCE)).ok();
     let write_half = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let mut reader = BufReader::new(stream);
-    let name = match read_msg(&mut reader) {
-        Ok(Msg::Hello { worker }) => worker,
+    let mut reader = stream;
+    let opened = Instant::now();
+    let first = loop {
+        match read_msg_patient(&mut reader, patience) {
+            Ok(Some(m)) => break m,
+            // A connection that never identifies itself doesn't get to
+            // hold a reader thread forever.
+            Ok(None) if opened.elapsed() <= patience => continue,
+            _ => return,
+        }
+    };
+    let name = match first {
+        Msg::Hello { worker } => worker,
+        Msg::Submit { spec } => {
+            let _ = tx.send(CoEvent::Submitted {
+                spec,
+                client: write_half,
+            });
+            return;
+        }
+        Msg::Drain => {
+            let _ = tx.send(CoEvent::DrainRequested { client: write_half });
+            return;
+        }
         _ => return,
     };
     let joined = CoEvent::Joined {
@@ -107,12 +200,17 @@ fn reader_loop(stream: TcpStream, tx: mpsc::Sender<CoEvent>) {
         return;
     }
     loop {
-        let ev = match read_msg(&mut reader) {
-            Ok(Msg::Row { index, stats }) => CoEvent::Row { index, stats },
-            Ok(Msg::GroupDone { group }) => CoEvent::Done {
+        let ev = match read_msg_patient(&mut reader, patience) {
+            Ok(Some(Msg::Row { job, index, stats })) => CoEvent::Row { job, index, stats },
+            Ok(Some(Msg::GroupDone { job, group })) => CoEvent::Done {
                 worker: name.clone(),
+                job,
                 group,
             },
+            Ok(Some(Msg::Pong)) => CoEvent::Pong { name: name.clone() },
+            // Idle is the service loop's concern (it pings and times
+            // out); the reader just keeps listening.
+            Ok(None) => continue,
             _ => break,
         };
         if tx.send(ev).is_err() {
@@ -122,21 +220,100 @@ fn reader_loop(stream: TcpStream, tx: mpsc::Sender<CoEvent>) {
     let _ = tx.send(CoEvent::Lost { name });
 }
 
+/// One grid mid-merge: the ownership table, progress clocks and slot
+/// merge for the job currently on the fleet.
+struct ActiveJob {
+    id: u64,
+    spec: SweepSpec,
+    groups: Vec<Vec<usize>>,
+    /// Grid index → group id, for refreshing a group's progress clock
+    /// when one of its rows arrives.
+    idx_group: Vec<usize>,
+    /// Who a group is assigned to until its ack. `None` after
+    /// dispatch marks an orphan waiting for a (re)joiner.
+    owner: Vec<Option<String>>,
+    /// When the group was (re)assigned — feeds service-time and
+    /// reassignment-latency measurements.
+    assigned_at: Vec<Option<Instant>>,
+    /// Last evidence the group is moving: its assignment, or the most
+    /// recent row merged for it. The progress deadline measures from
+    /// here.
+    last_progress: Vec<Option<Instant>>,
+    done: Vec<bool>,
+    slots: Vec<Option<ScenarioStats>>,
+    filled: usize,
+    dispatched: bool,
+    /// Write half of the submitting client's connection; `None` for
+    /// the coordinator's own initial grid.
+    client: Option<TcpStream>,
+}
+
+impl ActiveJob {
+    fn new(id: u64, spec: SweepSpec, client: Option<TcpStream>) -> ActiveJob {
+        let groups = spec.grid.work_groups(spec.fork);
+        let n = spec.grid.len();
+        let mut idx_group = vec![0usize; n];
+        for (g, members) in groups.iter().enumerate() {
+            for &i in members {
+                idx_group[i] = g;
+            }
+        }
+        ActiveJob {
+            id,
+            idx_group,
+            owner: vec![None; groups.len()],
+            assigned_at: vec![None; groups.len()],
+            last_progress: vec![None; groups.len()],
+            done: vec![false; groups.len()],
+            slots: vec![None; n],
+            filled: 0,
+            dispatched: false,
+            client,
+            groups,
+            spec,
+        }
+    }
+
+    fn complete(&self) -> bool {
+        self.filled == self.slots.len()
+    }
+
+    fn into_report(self) -> (CampaignReport, Option<TcpStream>) {
+        let rows = self
+            .slots
+            .into_iter()
+            .map(|s| s.expect("job completed with every slot filled"))
+            .collect();
+        (CampaignReport { stats: rows }, self.client)
+    }
+}
+
+/// Queue a worker for loss processing, once, and only while it is
+/// still a fleet member.
+fn mark_lost(name: &str, writers: &BTreeMap<String, TcpStream>, pending_lost: &mut Vec<String>) {
+    if writers.contains_key(name) && !pending_lost.iter().any(|n| n == name) {
+        pending_lost.push(name.to_string());
+    }
+}
+
 /// Assign `group_ids` across the ring and send each owner one `Assign`
 /// frame. Workers whose send fails are queued on `pending_lost` for
-/// the merge loop to process as a loss. Returns how many groups got an
-/// owner (0 on an empty ring — they stay orphaned for a rejoiner).
-fn dispatch(
+/// the service loop to process as a loss. Returns how many groups got
+/// an owner (0 on an empty ring — they stay orphaned for a rejoiner).
+fn dispatch_groups(
+    job: &mut ActiveJob,
     group_ids: &[usize],
     ring: &HashRing,
     writers: &mut BTreeMap<String, TcpStream>,
-    owner: &mut [Option<String>],
     pending_lost: &mut Vec<String>,
 ) -> usize {
+    let now = Instant::now();
     let mut per: BTreeMap<String, Vec<u64>> = BTreeMap::new();
     for &g in group_ids {
         if let Some(w) = ring.assign_group(g) {
-            owner[g] = Some(w.to_string());
+            job.owner[g] = Some(w.to_string());
+            job.assigned_at[g] = Some(now);
+            job.last_progress[g] = Some(now);
             per.entry(w.to_string()).or_default().push(g as u64);
         }
     }
@@ -144,26 +321,33 @@ fn dispatch(
     for (name, groups) in per {
         assigned += groups.len();
         if let Some(stream) = writers.get_mut(&name) {
-            if write_msg(stream, &Msg::Assign { groups }).is_err()
-                && !pending_lost.contains(&name)
-            {
-                pending_lost.push(name);
+            if write_msg(stream, &Msg::Assign { job: job.id, groups }).is_err() {
+                mark_lost(&name, writers, pending_lost);
             }
         }
     }
     assigned
 }
 
-/// Serve one sweep on an already-bound listener. Blocks until the
-/// report is fully merged (or the whole fleet is lost mid-sweep).
-fn serve_on(
+/// Serve on an already-bound listener until the work runs out: the
+/// initial grid (if any) plus every accepted submission, FIFO. With
+/// `cfg.persist` the coordinator instead keeps accepting submissions
+/// until a client sends `Drain`. Returns the initial grid's report
+/// (submitted jobs answer to their own clients) and the service
+/// stats. `cfg.listen` is ignored — the listener is already bound.
+pub fn serve_listener(
     listener: TcpListener,
-    spec: &SweepSpec,
-    expect: usize,
-    replicas: usize,
-) -> Result<(CampaignReport, ServiceStats)> {
-    ensure!(expect >= 1, "coordinator needs --expect >= 1 workers");
-    ensure!(!spec.grid.is_empty(), "refusing to serve an empty sweep grid");
+    initial: Option<&SweepSpec>,
+    cfg: &CoordinatorConfig,
+) -> Result<(Option<CampaignReport>, ServiceStats)> {
+    ensure!(cfg.expect >= 1, "coordinator needs --expect >= 1 workers");
+    ensure!(
+        initial.is_some() || cfg.persist,
+        "a coordinator without an initial grid must be persistent (--persist)"
+    );
+    if let Some(spec) = initial {
+        ensure!(!spec.grid.is_empty(), "refusing to serve an empty sweep grid");
+    }
     let local = listener.local_addr().context("coordinator local address")?;
     let stop = AtomicBool::new(false);
     let (tx, rx) = mpsc::channel::<CoEvent>();
@@ -171,6 +355,7 @@ fn serve_on(
         let accept_tx = tx.clone();
         let listener_ref = &listener;
         let stop_ref = &stop;
+        let patience = cfg.deadline_floor;
         s.spawn(move || {
             for conn in listener_ref.incoming() {
                 if stop_ref.load(Ordering::Relaxed) {
@@ -178,20 +363,32 @@ fn serve_on(
                 }
                 let Ok(stream) = conn else { break };
                 let reader_tx = accept_tx.clone();
-                s.spawn(move || reader_loop(stream, reader_tx));
+                s.spawn(move || reader_loop(stream, reader_tx, patience));
             }
         });
-        let out = merge_loop(spec, expect, replicas, &rx);
+        let out = service_loop(initial, cfg, &rx);
         // Wind down: stop accepting (the self-connect unblocks the
-        // accept thread), then shut down any worker that joined too
-        // late for the merge loop to have seen it, so its reader
-        // thread unblocks before this scope joins.
+        // accept thread), then answer anyone who connected too late
+        // for the service loop to have seen them, so their reader
+        // threads unblock before this scope joins.
         stop.store(true, Ordering::Relaxed);
         let _ = TcpStream::connect(local);
         while let Ok(ev) = rx.recv_timeout(Duration::from_millis(200)) {
-            if let CoEvent::Joined { stream, .. } = ev {
-                let mut late = stream;
-                let _ = write_msg(&mut late, &Msg::Shutdown);
+            match ev {
+                CoEvent::Joined { stream, .. } => {
+                    let mut late = stream;
+                    let _ = write_msg(&mut late, &Msg::Shutdown);
+                }
+                CoEvent::Submitted { client, .. } => {
+                    let mut late = client;
+                    let reason = "coordinator is shutting down".to_string();
+                    let _ = write_msg(&mut late, &Msg::Rejected { reason });
+                }
+                CoEvent::DrainRequested { client } => {
+                    let mut late = client;
+                    let _ = write_msg(&mut late, &Msg::Draining { pending: 0 });
+                }
+                _ => {}
             }
         }
         out
@@ -199,160 +396,384 @@ fn serve_on(
 }
 
 /// The single-threaded heart of the coordinator: consumes reader
-/// events, owns every piece of fleet state, merges rows by grid index.
-fn merge_loop(
-    spec: &SweepSpec,
-    expect: usize,
-    replicas: usize,
+/// events, owns every piece of fleet and queue state, merges rows by
+/// grid index, and runs the heartbeat and progress-deadline clocks.
+fn service_loop(
+    initial: Option<&SweepSpec>,
+    cfg: &CoordinatorConfig,
     rx: &mpsc::Receiver<CoEvent>,
-) -> Result<(CampaignReport, ServiceStats)> {
-    let groups = spec.grid.work_groups(spec.fork);
-    let n = spec.grid.len();
-    let mut ring = HashRing::new(replicas);
+) -> Result<(Option<CampaignReport>, ServiceStats)> {
+    let mut ring = HashRing::new(cfg.replicas);
     let mut writers: BTreeMap<String, TcpStream> = BTreeMap::new();
-    // Ownership table: who a group is assigned to until its ack. An
-    // orphan (`None` after dispatch) is waiting for a (re)joiner.
-    let mut owner: Vec<Option<String>> = vec![None; groups.len()];
-    let mut done = vec![false; groups.len()];
-    // The same merge the mpsc streaming path does: a pre-sized slot
-    // per scenario, filled in any arrival order, read out in grid
-    // order.
-    let mut slots: Vec<Option<ScenarioStats>> = vec![None; n];
-    let mut filled = 0usize;
+    let mut last_seen: BTreeMap<String, Instant> = BTreeMap::new();
     let mut stats = ServiceStats::default();
-    let mut dispatched = false;
     let mut pending_lost: Vec<String> = Vec::new();
+    let mut queue: VecDeque<(u64, SweepSpec, Option<TcpStream>)> = VecDeque::new();
+    let mut active: Option<ActiveJob> = None;
+    let mut initial_report: Option<CampaignReport> = None;
+    let mut next_job: u64 = 1;
+    let mut draining = false;
+    let mut drain_clients: Vec<TcpStream> = Vec::new();
+    // Observed group service times drive the progress deadline; loss
+    // latencies feed the reassignment fields of the service stats.
+    let mut group_secs = 0.0f64;
+    let mut group_count = 0u64;
+    let mut lat_sum = 0.0f64;
+    let mut lat_max = 0.0f64;
+    let mut lat_count = 0u64;
+    let mut last_ping = Instant::now();
+    let tick = cfg.heartbeat.min(Duration::from_millis(50));
 
-    let outcome: Result<()> = 'merge: {
-        while filled < n {
-            // Losses discovered while writing (a send into a dead
-            // socket) are processed exactly like reader-detected ones.
-            let ev = if let Some(name) = pending_lost.pop() {
-                CoEvent::Lost { name }
-            } else {
-                match rx.recv_timeout(Duration::from_millis(500)) {
-                    Ok(ev) => ev,
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if dispatched && writers.is_empty() {
-                            break 'merge Err(anyhow!(
-                                "entire worker fleet lost with {} of {n} rows outstanding",
-                                n - filled
-                            ));
-                        }
-                        // Pre-dispatch: still waiting for the fleet.
-                        continue;
-                    }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        break 'merge Err(anyhow!("coordinator event stream ended"))
+    if let Some(spec) = initial {
+        queue.push_back((next_job, spec.clone(), None));
+        next_job += 1;
+    }
+
+    let outcome: Result<()> = 'service: loop {
+        // Retire a finished job, then activate the next one.
+        if active.as_ref().is_some_and(ActiveJob::complete) {
+            let job = active.take().expect("checked above");
+            stats.jobs_served += 1;
+            let id = job.id;
+            let (report, client) = job.into_report();
+            match client {
+                Some(mut c) => {
+                    // A client that hung up forfeits its report; the
+                    // fleet's work is already merged either way.
+                    let _ = write_msg(&mut c, &Msg::Report { job: id, report });
+                }
+                None => initial_report = Some(report),
+            }
+        }
+        if active.is_none() {
+            if let Some((id, spec, client)) = queue.pop_front() {
+                let mut job = ActiveJob::new(id, spec, client);
+                for (name, stream) in writers.iter_mut() {
+                    let msg = Msg::Spec {
+                        job: id,
+                        spec: job.spec.clone(),
+                    };
+                    if write_msg(stream, &msg).is_err()
+                        && !pending_lost.iter().any(|n| n == name)
+                    {
+                        pending_lost.push(name.clone());
                     }
                 }
-            };
-            match ev {
-                CoEvent::Joined { name, stream } => {
-                    if writers.contains_key(&name) {
-                        // Duplicate identity: refuse the newcomer by
-                        // dropping its write half.
+                if stats.workers_joined >= cfg.expect && !writers.is_empty() {
+                    job.dispatched = true;
+                    let all: Vec<usize> = (0..job.groups.len()).collect();
+                    dispatch_groups(&mut job, &all, &ring, &mut writers, &mut pending_lost);
+                }
+                active = Some(job);
+            } else if draining || !cfg.persist {
+                break 'service Ok(());
+            }
+        }
+
+        // Heartbeats: ping the fleet, and time out idle workers that
+        // have gone silent (busy workers answer to the group progress
+        // deadline instead — they legitimately stop reading the
+        // socket while replaying).
+        if last_ping.elapsed() >= cfg.heartbeat {
+            last_ping = Instant::now();
+            let names: Vec<String> = writers.keys().cloned().collect();
+            for name in names {
+                if let Some(stream) = writers.get_mut(&name) {
+                    if write_msg(stream, &Msg::Ping).is_err() {
+                        mark_lost(&name, &writers, &mut pending_lost);
+                    }
+                }
+            }
+            let now = Instant::now();
+            for (name, seen) in &last_seen {
+                let busy = active.as_ref().is_some_and(|j| {
+                    j.owner.iter().any(|o| o.as_deref() == Some(name.as_str()))
+                });
+                if !busy && now.duration_since(*seen) > cfg.deadline_floor {
+                    mark_lost(name, &writers, &mut pending_lost);
+                }
+            }
+        }
+
+        // Progress deadline: a dispatched group whose clock has run
+        // past max(floor, factor × mean service time) convicts its
+        // owner of stalling.
+        if let Some(job) = active.as_ref() {
+            if job.dispatched {
+                let mean = if group_count > 0 {
+                    group_secs / group_count as f64
+                } else {
+                    0.0
+                };
+                let deadline = cfg
+                    .deadline_floor
+                    .max(Duration::from_secs_f64(cfg.deadline_factor * mean));
+                let now = Instant::now();
+                for g in 0..job.groups.len() {
+                    if job.done[g] {
                         continue;
                     }
-                    let mut stream = stream;
-                    if write_msg(&mut stream, &Msg::Spec { spec: spec.clone() }).is_err() {
+                    if let (Some(owner), Some(t0)) = (&job.owner[g], job.last_progress[g]) {
+                        if now.duration_since(t0) > deadline {
+                            mark_lost(owner, &writers, &mut pending_lost);
+                        }
+                    }
+                }
+            }
+        }
+
+        // A dispatched job with no fleet left and no loss still being
+        // processed can never finish: fail loudly instead of hanging.
+        if pending_lost.is_empty()
+            && writers.is_empty()
+            && active.as_ref().is_some_and(|j| j.dispatched)
+        {
+            let job = active.as_ref().expect("checked above");
+            break 'service Err(anyhow!(
+                "entire worker fleet lost with {} of {} rows outstanding",
+                job.slots.len() - job.filled,
+                job.slots.len()
+            ));
+        }
+
+        // One event: losses discovered while writing first, then the
+        // channel (bounded wait, so the clocks above keep ticking).
+        let ev = if let Some(name) = pending_lost.pop() {
+            CoEvent::Lost { name }
+        } else {
+            match rx.recv_timeout(tick) {
+                Ok(ev) => ev,
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    break 'service Err(anyhow!("coordinator event stream ended"))
+                }
+            }
+        };
+        match ev {
+            CoEvent::Joined { name, stream } => {
+                if writers.contains_key(&name) {
+                    // Duplicate identity: refuse the newcomer by
+                    // dropping its write half.
+                    continue;
+                }
+                let mut stream = stream;
+                if let Some(job) = active.as_ref() {
+                    let msg = Msg::Spec {
+                        job: job.id,
+                        spec: job.spec.clone(),
+                    };
+                    if write_msg(&mut stream, &msg).is_err() {
                         continue; // died during the handshake
                     }
-                    ring.add(&name);
-                    writers.insert(name.clone(), stream);
-                    stats.workers_joined += 1;
-                    if !dispatched {
-                        if writers.len() >= expect {
-                            dispatched = true;
-                            let all: Vec<usize> = (0..groups.len()).collect();
-                            dispatch(&all, &ring, &mut writers, &mut owner, &mut pending_lost);
+                }
+                ring.add(&name);
+                writers.insert(name.clone(), stream);
+                last_seen.insert(name.clone(), Instant::now());
+                stats.workers_joined += 1;
+                if let Some(job) = active.as_mut() {
+                    if !job.dispatched {
+                        if stats.workers_joined >= cfg.expect {
+                            job.dispatched = true;
+                            let all: Vec<usize> = (0..job.groups.len()).collect();
+                            dispatch_groups(job, &all, &ring, &mut writers, &mut pending_lost);
                         }
                     } else {
                         // Rejoin path: in-flight groups stay with
                         // their owners (stealing them would waste
                         // replay), but anything orphaned while the
                         // fleet was short goes to the ring now.
-                        let orphans: Vec<usize> = (0..groups.len())
-                            .filter(|&g| !done[g] && owner[g].is_none())
+                        let orphans: Vec<usize> = (0..job.groups.len())
+                            .filter(|&g| !job.done[g] && job.owner[g].is_none())
                             .collect();
                         if !orphans.is_empty() {
-                            stats.groups_reassigned += dispatch(
+                            stats.groups_reassigned += dispatch_groups(
+                                job,
                                 &orphans,
                                 &ring,
                                 &mut writers,
-                                &mut owner,
                                 &mut pending_lost,
                             );
                         }
                     }
                 }
-                CoEvent::Row { index, stats: row } => {
-                    let i = index as usize;
-                    if i >= n {
-                        continue; // corrupt row; the group re-acks or re-dispatches
-                    }
-                    if slots[i].is_none() {
-                        slots[i] = Some(row);
-                        filled += 1;
-                    } else {
-                        stats.duplicate_rows += 1;
-                    }
+            }
+            CoEvent::Row { job, index, stats: row } => {
+                let Some(j) = active.as_mut() else {
+                    stats.stale_rows += 1;
+                    continue;
+                };
+                let i = index as usize;
+                if job != j.id || i >= j.slots.len() {
+                    stats.stale_rows += 1;
+                    continue;
                 }
-                CoEvent::Done { worker, group } => {
-                    let g = group as usize;
-                    if g < groups.len() && !done[g] {
-                        done[g] = true;
-                        if owner[g].as_deref() == Some(worker.as_str()) {
-                            owner[g] = None;
-                        }
-                    }
+                // Any row is progress for its group — the deadline
+                // clock measures stalls, not long groups.
+                let g = j.idx_group[i];
+                if !j.done[g] {
+                    j.last_progress[g] = Some(Instant::now());
                 }
-                CoEvent::Lost { name } => {
-                    if writers.remove(&name).is_none() {
-                        continue; // already processed (or never joined)
-                    }
-                    ring.remove(&name);
-                    stats.workers_lost += 1;
-                    let orphaned: Vec<usize> = (0..groups.len())
-                        .filter(|&g| !done[g] && owner[g].as_deref() == Some(name.as_str()))
+                if j.slots[i].is_none() {
+                    j.slots[i] = Some(row);
+                    j.filled += 1;
+                } else {
+                    stats.duplicate_rows += 1;
+                }
+            }
+            CoEvent::Done { worker, job, group } => {
+                if let Some(seen) = last_seen.get_mut(&worker) {
+                    *seen = Instant::now();
+                }
+                let Some(j) = active.as_mut() else { continue };
+                if job != j.id {
+                    continue; // stale ack from a previous grid
+                }
+                let g = group as usize;
+                if g >= j.groups.len() {
+                    // An ack for a group that doesn't exist: the
+                    // worker is corrupt, not the merge.
+                    mark_lost(&worker, &writers, &mut pending_lost);
+                    continue;
+                }
+                if j.done[g] {
+                    continue; // duplicate ack: clean no-op
+                }
+                if j.groups[g].iter().any(|&i| j.slots[i].is_none()) {
+                    // Acking a group whose rows never arrived would
+                    // wedge the sweep (nobody left owns the work):
+                    // treat the liar as lost so its groups re-run.
+                    mark_lost(&worker, &writers, &mut pending_lost);
+                    continue;
+                }
+                j.done[g] = true;
+                if let Some(t0) = j.assigned_at[g] {
+                    group_secs += t0.elapsed().as_secs_f64();
+                    group_count += 1;
+                }
+                if j.owner[g].as_deref() == Some(worker.as_str()) {
+                    j.owner[g] = None;
+                }
+            }
+            CoEvent::Pong { name } => {
+                if let Some(seen) = last_seen.get_mut(&name) {
+                    *seen = Instant::now();
+                }
+            }
+            CoEvent::Lost { name } => {
+                let Some(stream) = writers.remove(&name) else {
+                    continue; // already processed (or never joined)
+                };
+                // Sever the socket so a stalled-but-connected worker's
+                // reader thread unblocks (and the worker can't keep
+                // streaming into a merge that moved on).
+                let _ = stream.shutdown(Shutdown::Both);
+                ring.remove(&name);
+                last_seen.remove(&name);
+                stats.workers_lost += 1;
+                if let Some(j) = active.as_mut() {
+                    let orphaned: Vec<usize> = (0..j.groups.len())
+                        .filter(|&g| !j.done[g] && j.owner[g].as_deref() == Some(name.as_str()))
                         .collect();
+                    let now = Instant::now();
                     for &g in &orphaned {
-                        owner[g] = None;
+                        if let Some(t0) = j.assigned_at[g] {
+                            let lat = now.duration_since(t0).as_secs_f64();
+                            lat_sum += lat;
+                            lat_max = lat_max.max(lat);
+                            lat_count += 1;
+                        }
+                        j.owner[g] = None;
+                        j.assigned_at[g] = None;
+                        j.last_progress[g] = None;
                     }
-                    if dispatched && !orphaned.is_empty() && !ring.is_empty() {
-                        stats.groups_reassigned += dispatch(
+                    if j.dispatched && !orphaned.is_empty() && !ring.is_empty() {
+                        stats.groups_reassigned += dispatch_groups(
+                            j,
                             &orphaned,
                             &ring,
                             &mut writers,
-                            &mut owner,
                             &mut pending_lost,
                         );
                     }
                 }
             }
+            CoEvent::Submitted { spec, client } => {
+                let mut client = client;
+                let reject = if draining {
+                    Some("coordinator is draining".to_string())
+                } else if spec.grid.is_empty() {
+                    Some("refusing an empty sweep grid".to_string())
+                } else if queue.len() >= cfg.queue_cap {
+                    Some(format!("queue full ({} jobs pending)", queue.len()))
+                } else {
+                    None
+                };
+                if let Some(reason) = reject {
+                    stats.jobs_rejected += 1;
+                    let _ = write_msg(&mut client, &Msg::Rejected { reason });
+                    continue;
+                }
+                let id = next_job;
+                next_job += 1;
+                if write_msg(&mut client, &Msg::Accepted { job: id }).is_ok() {
+                    queue.push_back((id, spec, Some(client)));
+                }
+                // A client gone before its accept takes its job with
+                // it — nobody is left to want the report.
+            }
+            CoEvent::DrainRequested { client } => {
+                draining = true;
+                let mut client = client;
+                let pending = queue.len() as u64 + u64::from(active.is_some());
+                let _ = write_msg(&mut client, &Msg::Draining { pending });
+                // Held open until the loop exits; the drop (EOF) tells
+                // the drain client the coordinator is done.
+                drain_clients.push(client);
+            }
         }
-        Ok(())
     };
     // Shut the fleet down on every exit path so workers (and their
-    // reader threads) unblock.
+    // reader threads) unblock; queued clients learn their jobs died
+    // with the service.
     for stream in writers.values_mut() {
         let _ = write_msg(stream, &Msg::Shutdown);
     }
+    for (_, _, client) in queue.drain(..) {
+        if let Some(mut c) = client {
+            let reason = "coordinator exited before this job ran".to_string();
+            let _ = write_msg(&mut c, &Msg::Rejected { reason });
+        }
+    }
+    drop(drain_clients);
     outcome?;
-    let rows = slots
-        .into_iter()
-        .map(|s| s.expect("merge loop exited with every slot filled"))
-        .collect();
-    Ok((CampaignReport { stats: rows }, stats))
+    if lat_count > 0 {
+        stats.reassign_latency_mean_s = lat_sum / lat_count as f64;
+        stats.reassign_latency_max_s = lat_max;
+    }
+    Ok((initial_report, stats))
 }
 
-/// Run the coordinator for one sweep (`leonardo-twin serve`): bind,
-/// wait for `cfg.expect` workers, dispatch, merge, shut the fleet
-/// down.
+/// Run the coordinator for one sweep (`leonardo-twin serve` with a
+/// grid and no `--persist`): bind, wait for `cfg.expect` workers,
+/// dispatch, merge, shut the fleet down.
 pub fn serve(spec: &SweepSpec, cfg: &CoordinatorConfig) -> Result<(CampaignReport, ServiceStats)> {
+    let (report, stats) = serve_service(Some(spec), cfg)?;
+    Ok((
+        report.expect("serve with an initial grid always yields its report"),
+        stats,
+    ))
+}
+
+/// Run the coordinator as a service: bind `cfg.listen` and serve the
+/// optional initial grid plus submitted jobs per `cfg.persist` — the
+/// `leonardo-twin serve --persist` entry point.
+pub fn serve_service(
+    initial: Option<&SweepSpec>,
+    cfg: &CoordinatorConfig,
+) -> Result<(Option<CampaignReport>, ServiceStats)> {
     let listener = TcpListener::bind(cfg.listen)
         .with_context(|| format!("bind coordinator listener on {}", cfg.listen))?;
-    serve_on(listener, spec, cfg.expect, cfg.replicas)
+    serve_listener(listener, initial, cfg)
 }
 
 /// One-call in-process fleet: a coordinator on an ephemeral loopback
@@ -367,10 +788,30 @@ pub fn run_distributed(
     workers: usize,
     die_after: &[(usize, usize)],
 ) -> Result<(CampaignReport, ServiceStats)> {
+    let cfg = CoordinatorConfig::default();
+    run_distributed_cfg(twin, spec, workers, die_after, &cfg)
+}
+
+/// [`run_distributed`] with explicit coordinator tuning — the hook the
+/// liveness and chaos tests use to run real heartbeat/deadline clocks
+/// at test-sized settings. `cfg.listen` and `cfg.expect` are ignored:
+/// the fleet runs on an ephemeral loopback port and dispatch waits
+/// for all `workers`.
+pub fn run_distributed_cfg(
+    twin: &Twin,
+    spec: &SweepSpec,
+    workers: usize,
+    die_after: &[(usize, usize)],
+    cfg: &CoordinatorConfig,
+) -> Result<(CampaignReport, ServiceStats)> {
     ensure!(workers >= 1, "in-process fleet needs at least one worker");
     let listener = TcpListener::bind((Ipv4Addr::LOCALHOST, 0))
         .context("bind in-process fleet listener")?;
     let addr = listener.local_addr().context("in-process fleet address")?;
+    let cfg = CoordinatorConfig {
+        expect: workers,
+        ..cfg.clone()
+    };
     thread::scope(|s| {
         let mut fleet = Vec::new();
         for k in 0..workers {
@@ -380,17 +821,22 @@ pub fn run_distributed(
                 .map(|&(_, n)| n);
             let mut worker_twin = twin.clone();
             fleet.push(s.spawn(move || -> Result<usize> {
-                let stream = connect_retry(addr, Duration::from_secs(10))?;
+                let stream = connect_retry_seeded(addr, Duration::from_secs(10), k as u64)?;
                 let opts = WorkerOptions {
-                    id: format!("w{k}"),
                     die_after_groups: die,
+                    ..WorkerOptions::named(&format!("w{k}"))
                 };
                 run_worker(&mut worker_twin, stream, &opts)
             }));
         }
         // All `workers` threads join before dispatch, so the ring
         // membership — and therefore the assignment — is deterministic.
-        let out = serve_on(listener, spec, workers, DEFAULT_REPLICAS);
+        let out = serve_listener(listener, Some(spec), &cfg).map(|(report, stats)| {
+            (
+                report.expect("in-process fleet always yields the initial report"),
+                stats,
+            )
+        });
         for handle in fleet {
             match handle.join() {
                 Ok(Ok(_acked)) => {}

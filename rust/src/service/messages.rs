@@ -14,15 +14,16 @@
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::campaign::{ScenarioStats, SweepGrid};
+use crate::campaign::{CampaignReport, ScenarioStats, SweepGrid};
 use crate::scheduler::{CheckpointPolicy, Coupling, PolicyKind};
 use crate::topology::Routing;
 use crate::util::json::{
-    f64_from_json, f64_to_json, stats_from_json, stats_to_json, u64_from_json,
-    u64_to_json, Json,
+    f64_from_json, f64_to_json, report_from_json, report_to_json, stats_from_json,
+    stats_to_json, u64_from_json, u64_to_json, Json,
 };
 use crate::workloads::FaultTrace;
 
@@ -45,27 +46,58 @@ pub struct SweepSpec {
 }
 
 /// Protocol messages. Worker → coordinator: `Hello`, `Row`,
-/// `GroupDone`. Coordinator → worker: `Spec`, `Assign`, `Shutdown`.
+/// `GroupDone`, `Pong`. Coordinator → worker: `Spec`, `Assign`,
+/// `Ping`, `Shutdown`. Client → coordinator: `Submit`, `Drain`.
+/// Coordinator → client: `Accepted`, `Rejected`, `Report`, `Draining`.
+///
+/// Job-scoped messages carry the coordinator-assigned job id so a row
+/// straggling in from a previous grid is recognisably stale instead of
+/// silently merging into the wrong report.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
-    /// First frame on a connection: the worker names itself. The name
-    /// is the worker's identity on the consistent-hash ring.
+    /// First frame on a worker connection: the worker names itself.
+    /// The name is the worker's identity on the consistent-hash ring.
     Hello { worker: String },
-    /// The sweep to replay. Sent once per connection, before any
-    /// `Assign`.
-    Spec { spec: SweepSpec },
+    /// The sweep one job replays. Sent to every fleet member when the
+    /// job activates (and to late joiners while it runs), before any
+    /// `Assign` for that job.
+    Spec { job: u64, spec: SweepSpec },
     /// Group ids (into [`SweepGrid::work_groups`]) this worker now
     /// owns. May arrive more than once (initial dispatch, then
     /// re-dispatch after a peer is lost).
-    Assign { groups: Vec<u64> },
+    Assign { job: u64, groups: Vec<u64> },
     /// One merged-report row: the scenario's grid index and its stats.
-    Row { index: u64, stats: ScenarioStats },
+    Row { job: u64, index: u64, stats: ScenarioStats },
     /// Acknowledges every `Row` of one group was sent. Until this
     /// frame arrives the coordinator considers the group unfinished
     /// and will re-dispatch it if the worker is lost.
-    GroupDone { group: u64 },
-    /// The sweep is merged; the worker should exit cleanly.
+    GroupDone { job: u64, group: u64 },
+    /// The service is done with this worker; it should exit cleanly.
     Shutdown,
+    /// Heartbeat probe. The coordinator pings every worker connection
+    /// on a fixed cadence; a worker that owns no groups and stays
+    /// silent past the liveness deadline is declared lost.
+    Ping,
+    /// Heartbeat reply (also sent unprompted as a keepalive is fine —
+    /// any frame refreshes the sender's liveness).
+    Pong,
+    /// First frame on a client connection: enqueue a sweep. The
+    /// coordinator replies `Accepted` or `Rejected` immediately and
+    /// `Report` when the job's merge completes.
+    Submit { spec: SweepSpec },
+    /// The submission is queued under this job id.
+    Accepted { job: u64 },
+    /// The submission was refused (queue full, empty grid, draining).
+    Rejected { reason: String },
+    /// The submitted job's merged report, byte-identical to what a
+    /// single-process `sweep` of the same grid prints.
+    Report { job: u64, report: CampaignReport },
+    /// First frame on a client connection: finish in-flight and queued
+    /// jobs, then exit. Acknowledged with `Draining`; the coordinator
+    /// closing the connection afterwards is the completion signal.
+    Drain,
+    /// Drain acknowledged; `pending` jobs (active + queued) remain.
+    Draining { pending: u64 },
 }
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -276,27 +308,55 @@ pub fn msg_to_json(msg: &Msg) -> Json {
             ("type", Json::Str("hello".into())),
             ("worker", Json::Str(worker.clone())),
         ]),
-        Msg::Spec { spec } => obj(vec![
+        Msg::Spec { job, spec } => obj(vec![
             ("type", Json::Str("spec".into())),
+            ("job", u64_to_json(*job)),
             ("spec", spec_to_json(spec)),
         ]),
-        Msg::Assign { groups } => obj(vec![
+        Msg::Assign { job, groups } => obj(vec![
             ("type", Json::Str("assign".into())),
+            ("job", u64_to_json(*job)),
             (
                 "groups",
                 Json::Arr(groups.iter().map(|&g| u64_to_json(g)).collect()),
             ),
         ]),
-        Msg::Row { index, stats } => obj(vec![
+        Msg::Row { job, index, stats } => obj(vec![
             ("type", Json::Str("row".into())),
+            ("job", u64_to_json(*job)),
             ("index", u64_to_json(*index)),
             ("stats", stats_to_json(stats)),
         ]),
-        Msg::GroupDone { group } => obj(vec![
+        Msg::GroupDone { job, group } => obj(vec![
             ("type", Json::Str("group_done".into())),
+            ("job", u64_to_json(*job)),
             ("group", u64_to_json(*group)),
         ]),
         Msg::Shutdown => obj(vec![("type", Json::Str("shutdown".into()))]),
+        Msg::Ping => obj(vec![("type", Json::Str("ping".into()))]),
+        Msg::Pong => obj(vec![("type", Json::Str("pong".into()))]),
+        Msg::Submit { spec } => obj(vec![
+            ("type", Json::Str("submit".into())),
+            ("spec", spec_to_json(spec)),
+        ]),
+        Msg::Accepted { job } => obj(vec![
+            ("type", Json::Str("accepted".into())),
+            ("job", u64_to_json(*job)),
+        ]),
+        Msg::Rejected { reason } => obj(vec![
+            ("type", Json::Str("rejected".into())),
+            ("reason", Json::Str(reason.clone())),
+        ]),
+        Msg::Report { job, report } => obj(vec![
+            ("type", Json::Str("report".into())),
+            ("job", u64_to_json(*job)),
+            ("report", report_to_json(report)),
+        ]),
+        Msg::Drain => obj(vec![("type", Json::Str("drain".into()))]),
+        Msg::Draining { pending } => obj(vec![
+            ("type", Json::Str("draining".into())),
+            ("pending", u64_to_json(*pending)),
+        ]),
     }
 }
 
@@ -306,9 +366,11 @@ pub fn msg_from_json(j: &Json) -> Result<Msg> {
             worker: j.get("worker")?.as_str()?.to_string(),
         }),
         "spec" => Ok(Msg::Spec {
+            job: u64_from_json(j.get("job")?)?,
             spec: spec_from_json(j.get("spec")?)?,
         }),
         "assign" => Ok(Msg::Assign {
+            job: u64_from_json(j.get("job")?)?,
             groups: j
                 .get("groups")?
                 .as_arr()?
@@ -317,13 +379,34 @@ pub fn msg_from_json(j: &Json) -> Result<Msg> {
                 .collect::<Result<Vec<_>>>()?,
         }),
         "row" => Ok(Msg::Row {
+            job: u64_from_json(j.get("job")?)?,
             index: u64_from_json(j.get("index")?)?,
             stats: stats_from_json(j.get("stats")?)?,
         }),
         "group_done" => Ok(Msg::GroupDone {
+            job: u64_from_json(j.get("job")?)?,
             group: u64_from_json(j.get("group")?)?,
         }),
         "shutdown" => Ok(Msg::Shutdown),
+        "ping" => Ok(Msg::Ping),
+        "pong" => Ok(Msg::Pong),
+        "submit" => Ok(Msg::Submit {
+            spec: spec_from_json(j.get("spec")?)?,
+        }),
+        "accepted" => Ok(Msg::Accepted {
+            job: u64_from_json(j.get("job")?)?,
+        }),
+        "rejected" => Ok(Msg::Rejected {
+            reason: j.get("reason")?.as_str()?.to_string(),
+        }),
+        "report" => Ok(Msg::Report {
+            job: u64_from_json(j.get("job")?)?,
+            report: report_from_json(j.get("report")?)?,
+        }),
+        "drain" => Ok(Msg::Drain),
+        "draining" => Ok(Msg::Draining {
+            pending: u64_from_json(j.get("pending")?)?,
+        }),
         other => bail!("unknown message type '{other}'"),
     }
 }
@@ -356,6 +439,76 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
     r.read_exact(&mut body).context("read frame body")?;
     let text = std::str::from_utf8(&body).context("frame body is not UTF-8")?;
     msg_from_json(&Json::parse(text)?)
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read one frame from a stream whose `set_read_timeout` is armed,
+/// without ever blocking forever on a dead-but-connected peer.
+///
+/// A read timeout *between* frames (not a single byte of the next
+/// frame yet) is benign idleness — `Ok(None)` — so the caller can tick
+/// its own heartbeat/liveness bookkeeping and come back. Once a frame
+/// has started, the peer committed to finishing it: a frame still
+/// incomplete `frame_patience` after its first byte is an error (a
+/// stalled or truncating peer), as is EOF, garbage, or an over-cap
+/// length prefix. This is the read path both sides of the service use
+/// on sockets; the blocking [`read_msg`] remains for in-memory streams.
+pub fn read_msg_patient<R: Read>(r: &mut R, frame_patience: Duration) -> Result<Option<Msg>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    let mut frame_start: Option<Instant> = None;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                ensure!(got == 0, "peer closed mid-frame ({got} of 4 length bytes)");
+                bail!("peer closed the connection");
+            }
+            Ok(n) => {
+                got += n;
+                frame_start.get_or_insert_with(Instant::now);
+            }
+            Err(e) if is_timeout(&e) => {
+                let Some(started) = frame_start else {
+                    return Ok(None); // idle between frames
+                };
+                ensure!(
+                    started.elapsed() < frame_patience,
+                    "partial frame stalled ({got} of 4 length bytes after {:.1?})",
+                    started.elapsed()
+                );
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("read frame length"),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    ensure!(len <= MAX_FRAME, "frame of {len} bytes too large");
+    let started = frame_start.unwrap_or_else(Instant::now);
+    let mut body = vec![0u8; len];
+    let mut got = 0usize;
+    while got < len {
+        match r.read(&mut body[got..]) {
+            Ok(0) => bail!("peer closed mid-frame ({got} of {len} body bytes)"),
+            Ok(n) => got += n,
+            Err(e) if is_timeout(&e) => {
+                ensure!(
+                    started.elapsed() < frame_patience,
+                    "partial frame stalled ({got} of {len} body bytes after {:.1?})",
+                    started.elapsed()
+                );
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("read frame body"),
+        }
+    }
+    let text = std::str::from_utf8(&body).context("frame body is not UTF-8")?;
+    msg_from_json(&Json::parse(text)?).map(Some)
 }
 
 #[cfg(test)]
@@ -405,17 +558,37 @@ mod tests {
                 worker: "w0".into(),
             },
             Msg::Spec {
+                job: 1,
                 spec: sample_spec(),
             },
             Msg::Assign {
+                job: 1,
                 groups: vec![0, 5, u64::from(u32::MAX)],
             },
             Msg::Row {
+                job: 1,
                 index: 3,
-                stats: row_stats,
+                stats: row_stats.clone(),
             },
-            Msg::GroupDone { group: 5 },
+            Msg::GroupDone { job: 1, group: 5 },
             Msg::Shutdown,
+            Msg::Ping,
+            Msg::Pong,
+            Msg::Submit {
+                spec: sample_spec(),
+            },
+            Msg::Accepted { job: u64::MAX },
+            Msg::Rejected {
+                reason: "queue full (8 jobs pending)".into(),
+            },
+            Msg::Report {
+                job: 2,
+                report: CampaignReport {
+                    stats: vec![row_stats],
+                },
+            },
+            Msg::Drain,
+            Msg::Draining { pending: 3 },
         ];
         let mut buf: Vec<u8> = Vec::new();
         for m in &msgs {
@@ -502,5 +675,89 @@ mod tests {
             }
         }
         assert!(spec_from_json(&j).is_err(), "unknown mix must not panic");
+    }
+
+    /// Protocol edge: a frame body of exactly `MAX_FRAME` bytes is
+    /// legal and round-trips; one byte past the cap is refused on the
+    /// write side (and an over-cap length prefix on the read side —
+    /// covered above — fails before allocating).
+    #[test]
+    fn frame_exactly_at_the_cap_round_trips_and_one_past_is_refused() {
+        // Measure the fixed JSON overhead of a `Hello`, then pad the
+        // worker name (no escaping needed for 'a') to hit the cap
+        // exactly.
+        let overhead = msg_to_json(&Msg::Hello { worker: String::new() })
+            .render()
+            .len();
+        let at_cap = Msg::Hello {
+            worker: "a".repeat(MAX_FRAME - overhead),
+        };
+        let mut buf: Vec<u8> = Vec::new();
+        write_msg(&mut buf, &at_cap).unwrap();
+        assert_eq!(buf.len(), 4 + MAX_FRAME);
+        let mut cursor = &buf[..];
+        assert_eq!(read_msg(&mut cursor).unwrap(), at_cap);
+        assert!(cursor.is_empty());
+
+        let past_cap = Msg::Hello {
+            worker: "a".repeat(MAX_FRAME - overhead + 1),
+        };
+        let mut buf: Vec<u8> = Vec::new();
+        let err = write_msg(&mut buf, &past_cap).unwrap_err();
+        assert!(format!("{err}").contains("too large"), "{err}");
+        assert!(buf.is_empty(), "oversized frame partially written");
+    }
+
+    /// A connected loopback pair with a short read timeout armed on
+    /// the reading end — the configuration both service sides run.
+    fn timed_pair() -> (std::net::TcpStream, std::net::TcpStream) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::net::TcpStream::connect(addr).unwrap();
+        let (reader, _) = listener.accept().unwrap();
+        reader
+            .set_read_timeout(Some(Duration::from_millis(10)))
+            .unwrap();
+        writer.set_nodelay(true).unwrap();
+        (writer, reader)
+    }
+
+    /// The patient reader's contract: a timeout between frames is
+    /// benign idleness, a complete frame is delivered, and a frame
+    /// that starts but stalls is an error once `frame_patience` runs
+    /// out — never an indefinite block.
+    #[test]
+    fn patient_read_distinguishes_idle_from_a_stalled_partial_frame() {
+        let patience = Duration::from_millis(60);
+        let (mut writer, mut reader) = timed_pair();
+        // Idle: no bytes at all.
+        assert_eq!(read_msg_patient(&mut reader, patience).unwrap(), None);
+        // A whole frame arrives intact.
+        write_msg(&mut writer, &Msg::Ping).unwrap();
+        assert_eq!(
+            read_msg_patient(&mut reader, patience).unwrap(),
+            Some(Msg::Ping)
+        );
+        // A frame that starts (length prefix promising 10 body bytes,
+        // only 3 sent) must stall out, not hang.
+        use std::io::Write as _;
+        writer.write_all(&10u32.to_be_bytes()).unwrap();
+        writer.write_all(b"abc").unwrap();
+        writer.flush().unwrap();
+        let err = read_msg_patient(&mut reader, patience).unwrap_err();
+        assert!(format!("{err}").contains("stalled"), "{err}");
+
+        // A truncated length prefix stalls out the same way.
+        let (mut writer, mut reader) = timed_pair();
+        writer.write_all(&[0u8, 0]).unwrap();
+        writer.flush().unwrap();
+        let err = read_msg_patient(&mut reader, patience).unwrap_err();
+        assert!(format!("{err}").contains("stalled"), "{err}");
+
+        // EOF between frames is a closed peer, not idleness.
+        let (writer, mut reader) = timed_pair();
+        drop(writer);
+        let err = read_msg_patient(&mut reader, patience).unwrap_err();
+        assert!(format!("{err}").contains("closed"), "{err}");
     }
 }

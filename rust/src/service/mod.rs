@@ -2,32 +2,56 @@
 //! the campaign engine past one process.
 //!
 //! LEONARDO itself is operated as a shared service — login/management
-//! nodes front a fleet that work is dispatched to (§2) — and this
-//! module reproduces that operations model at the campaign layer:
+//! nodes front a fleet that work is dispatched to (§2), where
+//! component failure is routine and the machine must stay productive
+//! through it — and this module reproduces that operations model at
+//! the campaign layer:
 //!
 //! * [`shard`] — the consistent-hash ring giving every scenario group
 //!   a stable owner that survives worker join/leave with minimal
 //!   reassignment;
 //! * [`messages`] — the hand-rolled length-prefixed JSON protocol on
-//!   `std::net` TCP (offline-hermetic: no serde, no async runtime);
+//!   `std::net` TCP (offline-hermetic: no serde, no async runtime),
+//!   including the timeout-tolerant patient reader;
 //! * [`worker`] — one connection replaying assigned groups on a
-//!   persistent [`crate::campaign::ReplayRig`] arena (CLI `work`);
-//! * [`coordinator`] — listener, ring, ownership table and the
+//!   persistent [`crate::campaign::ReplayRig`] arena, answering
+//!   heartbeats and rejoining across coordinator restarts (CLI
+//!   `work`);
+//! * [`coordinator`] — listener, ring, ownership table, the bounded
+//!   multi-grid job queue, heartbeat/deadline liveness, and the
 //!   grid-index slot merge (CLI `serve`), byte-identical to the
-//!   single-process engines for any worker count.
+//!   single-process engines for any worker count, join order, or
+//!   failure schedule;
+//! * [`client`] — submit a grid to a running coordinator and collect
+//!   its report, or drain the service (CLI `submit`);
+//! * [`chaos`] — the seeded wire-fault harness
+//!   ([`chaos::FaultyTransport`]) that the robustness suite and the
+//!   CI chaos step drive the service with.
 //!
 //! The high-level entry points are [`Twin::sweep_distributed`]
-//! (in-process fleet) and [`coordinator::serve`] /
-//! [`worker::work`] (multi-process fleet over TCP).
+//! (in-process fleet), [`coordinator::serve`] /
+//! [`coordinator::serve_service`] / [`worker::work`] (multi-process
+//! fleet over TCP), and [`client::submit`] / [`client::drain`]
+//! (jobs against a persistent fleet).
 //!
 //! [`Twin::sweep_distributed`]: crate::coordinator::Twin::sweep_distributed
 
+pub mod chaos;
+pub mod client;
 pub mod coordinator;
 pub mod messages;
 pub mod shard;
 pub mod worker;
 
-pub use coordinator::{run_distributed, serve, CoordinatorConfig, ServiceStats};
+pub use chaos::{FaultPlan, FaultyTransport, WireFault};
+pub use client::{drain, submit};
+pub use coordinator::{
+    run_distributed, run_distributed_cfg, serve, serve_listener, serve_service,
+    CoordinatorConfig, ServiceStats,
+};
 pub use messages::{Msg, SweepSpec};
 pub use shard::{HashRing, DEFAULT_REPLICAS};
-pub use worker::{parse_addr, run_worker, work, WorkerOptions};
+pub use worker::{
+    backoff_delay, connect_retry, connect_retry_seeded, parse_addr, run_worker,
+    run_worker_io, run_worker_resilient, work, WorkerOptions,
+};

@@ -1,16 +1,31 @@
 //! Worker side of the distributed sweep service.
 //!
 //! A worker is one long-lived connection: it sends `Hello`, receives
-//! the [`SweepSpec`], and then replays whatever groups the coordinator
-//! assigns on a single persistent [`ReplayRig`] arena — exactly the
-//! per-thread arena the local streaming/forked engines keep, so the
-//! rows it streams back are byte-identical to the rows a local worker
-//! thread would have merged. Every finished group is acknowledged with
-//! `GroupDone`; an unacknowledged group is the coordinator's to
-//! re-dispatch if this connection dies.
+//! job-tagged [`SweepSpec`]s, and replays whatever groups the
+//! coordinator assigns on a single persistent [`ReplayRig`] arena —
+//! exactly the per-thread arena the local streaming/forked engines
+//! keep, so the rows it streams back are byte-identical to the rows a
+//! local worker thread would have merged. Every finished group is
+//! acknowledged with `GroupDone`; an unacknowledged group is the
+//! coordinator's to re-dispatch if this connection dies.
+//!
+//! Liveness runs both ways. The socket carries a read timeout, the
+//! worker answers every `Ping` with `Pong`, and a coordinator that
+//! goes silent past [`WorkerOptions::patience`] is a clear
+//! "coordinator vanished" error — never a hang on a dead socket. The
+//! CLI worker goes one further: [`run_worker_resilient`] reconnects
+//! with seeded exponential backoff and rejoins the fleet under the
+//! same name after a coordinator restart, so a fleet survives its
+//! coordinator the same way the coordinator survives its fleet.
+//!
+//! [`WorkerOptions::chaos`] arms the wire-fault harness: both halves
+//! of the connection get wrapped in a seeded
+//! [`FaultyTransport`](super::chaos::FaultyTransport), making this
+//! worker deterministically misbehave mid-protocol — the probe the
+//! chaos suite and the CI chaos step point at a live coordinator.
 
 use std::collections::VecDeque;
-use std::io::BufReader;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
@@ -19,9 +34,11 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::campaign::{replay_group, ReplayRig, Scenario};
 use crate::coordinator::Twin;
 
-use super::messages::{read_msg, write_msg, Msg};
+use super::chaos::{xorshift, FaultPlan, FaultyTransport};
+use super::messages::{read_msg_patient, write_msg, Msg};
 
-/// How a worker identifies itself, plus the test-only churn hook.
+/// How a worker identifies itself and how patient it is, plus the
+/// test-only churn and chaos hooks.
 #[derive(Debug, Clone)]
 pub struct WorkerOptions {
     /// Name on the coordinator's consistent-hash ring. Must be unique
@@ -33,6 +50,17 @@ pub struct WorkerOptions {
     /// way of killing one of three workers mid-sweep. `None` in
     /// production.
     pub die_after_groups: Option<usize>,
+    /// Socket read poll: bounds how late the worker notices silence
+    /// or shutdown, not how long it waits overall.
+    pub poll: Duration,
+    /// How long the coordinator may stay completely silent (its
+    /// heartbeat normally arrives far more often) before this worker
+    /// declares it vanished and bails instead of blocking forever.
+    pub patience: Duration,
+    /// Seeded wire-fault injection: wrap both connection halves in a
+    /// [`FaultyTransport`](super::chaos::FaultyTransport) running
+    /// [`FaultPlan::seeded`] schedules derived from this seed.
+    pub chaos: Option<u64>,
 }
 
 impl WorkerOptions {
@@ -40,6 +68,9 @@ impl WorkerOptions {
         WorkerOptions {
             id: id.to_string(),
             die_after_groups: None,
+            poll: Duration::from_millis(100),
+            patience: Duration::from_secs(30),
+            chaos: None,
         }
     }
 }
@@ -55,76 +86,163 @@ pub fn parse_addr(s: &str) -> Result<SocketAddr> {
         .ok_or_else(|| anyhow!("address '{s}' resolved to nothing"))
 }
 
+/// FNV-1a over a name — the seed source for retry jitter, so every
+/// worker (and every address) jitters differently but reproducibly.
+fn fnv_seed(s: &str) -> u64 {
+    s.bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3)
+        })
+}
+
+/// Retry delay for `attempt` (0-based): exponential from 10 ms,
+/// capped at 1 s, with deterministic seeded jitter in the upper half
+/// of the window so a fleet restarting together doesn't reconnect in
+/// lockstep.
+pub fn backoff_delay(attempt: u32, seed: u64) -> Duration {
+    const BASE_MS: u64 = 10;
+    const CAP_MS: u64 = 1_000;
+    let full = BASE_MS.saturating_mul(1u64 << attempt.min(10)).min(CAP_MS);
+    let r = xorshift(seed ^ u64::from(attempt).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let jitter = r % (full / 2 + 1);
+    Duration::from_millis(full / 2 + jitter)
+}
+
 /// Connect with retries over `patience` — CLI workers routinely start
 /// before the coordinator's listener is up (the CI step launches all
-/// three processes at once).
+/// the processes at once). Jitter is seeded from the address; workers
+/// that want per-identity spread use [`connect_retry_seeded`].
 pub fn connect_retry(addr: SocketAddr, patience: Duration) -> Result<TcpStream> {
+    connect_retry_seeded(addr, patience, fnv_seed(&addr.to_string()))
+}
+
+/// [`connect_retry`] with an explicit jitter seed.
+pub fn connect_retry_seeded(
+    addr: SocketAddr,
+    patience: Duration,
+    seed: u64,
+) -> Result<TcpStream> {
     let deadline = Instant::now() + patience;
+    let mut attempt = 0u32;
     loop {
         match TcpStream::connect(addr) {
             Ok(stream) => return Ok(stream),
             Err(e) => {
-                if Instant::now() >= deadline {
+                let now = Instant::now();
+                if now >= deadline {
                     bail!("no coordinator at {addr}: {e}");
                 }
-                std::thread::sleep(Duration::from_millis(100));
+                let delay = backoff_delay(attempt, seed).min(deadline - now);
+                std::thread::sleep(delay);
+                attempt += 1;
             }
         }
     }
 }
 
-/// Run one worker over an established connection until the coordinator
-/// shuts it down (or hangs up). Returns the number of groups this
-/// worker acknowledged.
+/// Run one worker over an established connection until the
+/// coordinator shuts it down. Returns the number of groups this
+/// worker acknowledged. A coordinator that hangs up or goes silent is
+/// an *error* now (the resilient wrapper turns it into a rejoin; a
+/// bare call surfaces it to the operator).
 pub fn run_worker(twin: &mut Twin, stream: TcpStream, opts: &WorkerOptions) -> Result<usize> {
     stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone().context("clone worker stream")?);
-    let mut writer = stream;
+    stream
+        .set_read_timeout(Some(opts.poll))
+        .context("arm worker read timeout")?;
+    stream.set_write_timeout(Some(Duration::from_secs(10))).ok();
+    let reader = stream.try_clone().context("clone worker stream")?;
+    let writer = stream;
+    match opts.chaos {
+        Some(seed) => {
+            // Independent schedules per direction: reads and writes
+            // misbehave at their own deterministic positions.
+            let reader = FaultyTransport::new(reader, FaultPlan::seeded(seed ^ 0x5245_4144));
+            let writer = FaultyTransport::new(writer, FaultPlan::seeded(seed));
+            run_worker_io(twin, reader, writer, opts)
+        }
+        None => run_worker_io(twin, reader, writer, opts),
+    }
+}
+
+/// The transport-generic worker body ([`run_worker`] minus the socket
+/// setup) — the seam where the chaos harness slips its faulty
+/// transports under an otherwise honest worker. Public so the chaos
+/// suite can pin a [`FaultPlan`] at an exact protocol position instead
+/// of deriving one from a seed.
+pub fn run_worker_io<R: Read, W: Write>(
+    twin: &mut Twin,
+    mut reader: R,
+    mut writer: W,
+    opts: &WorkerOptions,
+) -> Result<usize> {
     write_msg(
         &mut writer,
         &Msg::Hello {
             worker: opts.id.clone(),
         },
     )?;
-    // The expanded sweep: scenarios plus the canonical group numbering,
-    // both derived from the spec exactly as the coordinator derives
-    // them — the wire only carries group ids.
-    let mut job: Option<(Vec<Scenario>, Vec<Vec<usize>>)> = None;
+    // The expanded sweep for the current job: scenarios plus the
+    // canonical group numbering, both derived from the spec exactly as
+    // the coordinator derives them — the wire only carries group ids.
+    let mut cur: Option<(u64, Vec<Scenario>, Vec<Vec<usize>>)> = None;
     let mut queue: VecDeque<usize> = VecDeque::new();
-    // One persistent arena across every group, like a local worker
-    // thread's (armed lazily by `replay_group`, reset between
-    // scenarios).
+    // One persistent arena across every group — and across every *job*
+    // on a persistent fleet (armed lazily by `replay_group`, reset
+    // between scenarios).
     let mut arena: Option<ReplayRig> = None;
     let mut acked = 0usize;
+    let mut last_heard = Instant::now();
     loop {
-        // A dead coordinator is a normal way for a worker's life to
-        // end (the CLI fleet outlives the sweep it served).
-        let msg = match read_msg(&mut reader) {
-            Ok(m) => m,
-            Err(_) => return Ok(acked),
+        let msg = match read_msg_patient(&mut reader, opts.patience) {
+            Ok(Some(m)) => {
+                last_heard = Instant::now();
+                m
+            }
+            Ok(None) => {
+                ensure!(
+                    last_heard.elapsed() <= opts.patience,
+                    "worker {}: coordinator vanished ({:.1?} of silence, heartbeats expected)",
+                    opts.id,
+                    last_heard.elapsed()
+                );
+                continue;
+            }
+            Err(e) => {
+                return Err(e.context(format!(
+                    "worker {}: coordinator connection failed",
+                    opts.id
+                )))
+            }
         };
         match msg {
-            Msg::Spec { spec } => {
+            Msg::Ping => write_msg(&mut writer, &Msg::Pong)?,
+            Msg::Spec { job, spec } => {
                 // The routing policy shapes coupled comm slowdowns, so
                 // it must match the submitting twin's fabric.
                 twin.net.routing = spec.routing;
                 let scenarios = spec.grid.scenarios();
                 let groups = spec.grid.work_groups(spec.fork);
-                job = Some((scenarios, groups));
+                cur = Some((job, scenarios, groups));
                 queue.clear();
             }
-            Msg::Assign { groups } => {
-                for g in groups {
-                    queue.push_back(g as usize);
+            Msg::Assign { job, groups } => {
+                // Assignments for any grid but the one we were last
+                // told about are stale — a rejoin or a queue advance
+                // raced this frame. The coordinator will re-dispatch.
+                if cur.as_ref().is_some_and(|&(id, ..)| id == job) {
+                    for g in groups {
+                        queue.push_back(g as usize);
+                    }
                 }
             }
             Msg::Shutdown => return Ok(acked),
             other => bail!("worker {}: unexpected {other:?}", opts.id),
         }
         while let Some(g) = queue.pop_front() {
-            let (scenarios, groups) = job
+            let (job, scenarios, groups) = cur
                 .as_ref()
-                .ok_or_else(|| anyhow!("worker {}: assignment before spec", opts.id))?;
+                .expect("assignments are only queued after their spec");
             ensure!(
                 g < groups.len(),
                 "worker {}: group {g} out of range (grid has {})",
@@ -135,12 +253,19 @@ pub fn run_worker(twin: &mut Twin, stream: TcpStream, opts: &WorkerOptions) -> R
                 write_msg(
                     &mut writer,
                     &Msg::Row {
+                        job: *job,
                         index: index as u64,
                         stats,
                     },
                 )?;
             }
-            write_msg(&mut writer, &Msg::GroupDone { group: g as u64 })?;
+            write_msg(
+                &mut writer,
+                &Msg::GroupDone {
+                    job: *job,
+                    group: g as u64,
+                },
+            )?;
             acked += 1;
             if opts.die_after_groups.is_some_and(|n| acked >= n) {
                 // Simulated crash: drop the socket with groups still
@@ -151,14 +276,77 @@ pub fn run_worker(twin: &mut Twin, stream: TcpStream, opts: &WorkerOptions) -> R
     }
 }
 
+/// Keep a worker on the fleet across coordinator restarts: connect,
+/// serve, and — when the connection dies rather than being shut down
+/// cleanly — back off and rejoin under the same identity until
+/// `patience` runs out. Returns the groups acknowledged on the final
+/// connection (earlier connections' work was re-dispatched anyway).
+pub fn run_worker_resilient(
+    twin: &mut Twin,
+    addr: SocketAddr,
+    opts: &WorkerOptions,
+    patience: Duration,
+) -> Result<usize> {
+    let seed = fnv_seed(&opts.id);
+    let deadline = Instant::now() + patience;
+    let mut attempt = 0u32;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            bail!("worker {}: gave up rejoining {addr}", opts.id);
+        }
+        let stream = connect_retry_seeded(addr, remaining, seed)?;
+        match run_worker(twin, stream, opts) {
+            Ok(acked) => return Ok(acked),
+            Err(e) => {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    return Err(e.context(format!(
+                        "worker {}: gave up rejoining {addr}",
+                        opts.id
+                    )));
+                }
+                eprintln!("worker {}: connection lost, rejoining: {e:#}", opts.id);
+                std::thread::sleep(backoff_delay(attempt, seed).min(remaining));
+                attempt += 1;
+            }
+        }
+    }
+}
+
 /// CLI entry point (`leonardo-twin work --connect HOST:PORT`): build a
-/// LEONARDO twin, join the fleet, replay until shut down.
-pub fn work(connect: &str) -> Result<()> {
+/// LEONARDO twin, join the fleet, replay until shut down — rejoining
+/// across coordinator restarts unless this worker is a chaos probe
+/// (whose deterministic schedule is a one-shot experiment) or a
+/// scripted crash (`--die-after`).
+pub fn work(connect: &str, die_after: Option<usize>, chaos: Option<u64>) -> Result<()> {
     let addr = parse_addr(connect)?;
-    let stream = connect_retry(addr, Duration::from_secs(30))?;
     let mut twin = Twin::leonardo();
-    let opts = WorkerOptions::named(&format!("w{}", std::process::id()));
-    let acked = run_worker(&mut twin, stream, &opts)?;
+    let opts = WorkerOptions {
+        die_after_groups: die_after,
+        chaos,
+        ..WorkerOptions::named(&format!("w{}", std::process::id()))
+    };
+    if let Some(seed) = chaos {
+        let stream = connect_retry(addr, Duration::from_secs(30))?;
+        // A chaos worker is *meant* to die mid-protocol; how it dies is
+        // the experiment, not a failure of this process.
+        match run_worker(&mut twin, stream, &opts) {
+            Ok(acked) => eprintln!(
+                "worker {} (chaos seed {seed}): replayed {acked} group(s)",
+                opts.id
+            ),
+            Err(e) => eprintln!("worker {} (chaos seed {seed}): lost to chaos: {e:#}", opts.id),
+        }
+        return Ok(());
+    }
+    if die_after.is_some() {
+        let stream = connect_retry(addr, Duration::from_secs(30))?;
+        let acked = run_worker(&mut twin, stream, &opts)?;
+        eprintln!("worker {}: crashed on schedule after {acked} group(s)", opts.id);
+        return Ok(());
+    }
+    let acked = run_worker_resilient(&mut twin, addr, &opts, Duration::from_secs(30))?;
     eprintln!("worker {}: replayed {acked} group(s)", opts.id);
     Ok(())
 }
@@ -166,6 +354,7 @@ pub fn work(connect: &str) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::net::TcpListener;
 
     #[test]
     fn parse_addr_accepts_host_port_and_rejects_garbage() {
@@ -186,5 +375,55 @@ mod tests {
         let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
         let err = connect_retry(addr, Duration::from_millis(0)).unwrap_err();
         assert!(err.to_string().contains("no coordinator"));
+    }
+
+    #[test]
+    fn backoff_is_deterministic_grows_and_caps_at_a_second() {
+        for attempt in 0..16 {
+            for seed in 0..8 {
+                let d = backoff_delay(attempt, seed);
+                assert_eq!(d, backoff_delay(attempt, seed), "same inputs, same delay");
+                assert!(d <= Duration::from_millis(1_000), "cap breached: {d:?}");
+                assert!(d >= Duration::from_millis(5), "degenerate delay: {d:?}");
+            }
+        }
+        // Early attempts are short, late attempts saturate the cap's
+        // window rather than growing without bound.
+        assert!(backoff_delay(0, 3) <= Duration::from_millis(10));
+        assert!(backoff_delay(9, 3) >= Duration::from_millis(500));
+        // Jitter actually varies with the seed somewhere.
+        assert!(
+            (0..32).any(|s| backoff_delay(4, s) != backoff_delay(4, s + 32)),
+            "every seed collapsed to one delay"
+        );
+    }
+
+    #[test]
+    fn a_silent_coordinator_is_a_clear_error_not_a_hang() {
+        // A "coordinator" that accepts and then says nothing: the
+        // worker must bail with a vanished error once its patience —
+        // not some unbounded socket wait — is exhausted.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut twin = Twin::leonardo();
+        let opts = WorkerOptions {
+            poll: Duration::from_millis(10),
+            patience: Duration::from_millis(150),
+            ..WorkerOptions::named("w-abandoned")
+        };
+        let t0 = Instant::now();
+        let err = run_worker(&mut twin, stream, &opts).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("vanished"),
+            "unexpected error: {err:#}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "took {:?} to notice a silent coordinator",
+            t0.elapsed()
+        );
+        drop(hold.join().unwrap());
     }
 }

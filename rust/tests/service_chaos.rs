@@ -1,0 +1,301 @@
+//! Chaos harness for the distributed sweep service: seeded wire faults
+//! injected under otherwise honest workers prove that a misbehaving
+//! link costs the fleet one member — never the report, never the
+//! service.
+//!
+//! Two modes. The *pinned* tests place one [`WireFault`] at an exact
+//! protocol position (operation 6 — past the `Hello` handshake, inside
+//! the row stream) on one half of one worker's connection, and assert
+//! the precise failure accounting for every fault kind. The *seeded*
+//! tests run the production probe path ([`WorkerOptions::chaos`], the
+//! CLI's `work --chaos SEED`) whose schedule is derived from the seed —
+//! the same probe the CI chaos step points at a live coordinator.
+//!
+//! Invariants under every fault, in every test: the coordinator never
+//! errors and never hangs, at most the faulted worker is lost, and
+//! every report is byte-identical to the single-process oracle.
+
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use leonardo_twin::campaign::{run_sweep_streaming, SweepGrid};
+use leonardo_twin::coordinator::Twin;
+use leonardo_twin::service::{
+    drain, run_worker, run_worker_io, serve_listener, submit, CoordinatorConfig, FaultPlan,
+    FaultyTransport, HashRing, SweepSpec, WireFault, WorkerOptions, DEFAULT_REPLICAS,
+};
+
+/// 12 scenarios → 12 singleton work groups: enough that every fleet
+/// member owns several, small enough to churn through quickly.
+fn chaos_grid() -> SweepGrid {
+    SweepGrid::new(
+        vec![1, 2, 3],
+        vec![None, Some(7.0)],
+        vec!["day".into(), "ai".into()],
+        60,
+    )
+    .unwrap()
+}
+
+fn spec(twin: &Twin, grid: &SweepGrid) -> SweepSpec {
+    SweepSpec {
+        grid: grid.clone(),
+        routing: twin.net.routing,
+        fork: false,
+    }
+}
+
+fn snappy_cfg(expect: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        expect,
+        heartbeat: Duration::from_millis(50),
+        deadline_floor: Duration::from_millis(700),
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn fleet_opts(id: &str) -> WorkerOptions {
+    WorkerOptions {
+        poll: Duration::from_millis(25),
+        patience: Duration::from_secs(20),
+        ..WorkerOptions::named(id)
+    }
+}
+
+/// An honest worker whose connection is sabotaged on one side by an
+/// explicit fault schedule. Errors are the point: a chaos probe dying
+/// mid-protocol is the experiment, not a test failure.
+fn sabotaged_worker(
+    twin: &Twin,
+    addr: std::net::SocketAddr,
+    id: &str,
+    write_plan: FaultPlan,
+    read_plan: FaultPlan,
+) {
+    let mut wt = twin.clone();
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(25)))
+        .unwrap();
+    let reader = FaultyTransport::new(stream.try_clone().unwrap(), read_plan);
+    let writer = FaultyTransport::new(stream, write_plan);
+    let _ = run_worker_io(&mut wt, reader, writer, &fleet_opts(id));
+}
+
+/// Every write-side fault kind, pinned at operation 6 — inside w1's
+/// row stream (the canary below guarantees w1 owes at least two
+/// groups, so operation 6 always lands before its final ack). Each
+/// kind is detected through a different path — dropped link (EOF),
+/// truncated frame (closed mid-frame), corrupt byte (oversized length
+/// prefix or invalid JSON), long delay (progress deadline) — and every
+/// path converges on the same outcome: exactly one worker lost, the
+/// report byte-identical.
+#[test]
+fn every_write_fault_kind_costs_one_worker_and_zero_report_bytes() {
+    let twin = Twin::leonardo();
+    let grid = chaos_grid();
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    let sp = spec(&twin, &grid);
+
+    // The probe must still owe work when the fault fires: with at
+    // least 2 owned groups, write op 6 (Hello is ops 0–1, each row or
+    // ack is 2) precedes its final ack in any ping interleaving.
+    let mut ring = HashRing::new(DEFAULT_REPLICAS);
+    ring.add("w0");
+    ring.add("w1");
+    let w1_owns = (0..grid.len())
+        .filter(|&g| ring.assign_group(g).unwrap() == "w1")
+        .count();
+    assert!(w1_owns >= 2, "pinned ring layout moved ({w1_owns} groups)");
+
+    for fault in [
+        WireFault::Drop,
+        WireFault::TruncateWrite,
+        WireFault::CorruptByte,
+        WireFault::DelayMs(1_500),
+    ] {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let cfg = snappy_cfg(2);
+        let (report, stats) = thread::scope(|s| {
+            let mut wt = twin.clone();
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).unwrap();
+                run_worker(&mut wt, sock, &fleet_opts("w0")).unwrap()
+            });
+            let twin = &twin;
+            s.spawn(move || {
+                sabotaged_worker(
+                    twin,
+                    addr,
+                    "w1",
+                    FaultPlan::at(&[(6, fault)]),
+                    FaultPlan::at(&[]),
+                )
+            });
+            serve_listener(listener, Some(&sp), &cfg).unwrap()
+        });
+        let report = report.expect("initial grid always yields its report");
+        assert_eq!(oracle, report, "{fault:?} perturbed the report");
+        assert_eq!(stats.workers_joined, 2, "{fault:?}: join accounting");
+        assert_eq!(stats.workers_lost, 1, "{fault:?}: the probe was not convicted");
+        assert_eq!(stats.jobs_served, 1, "{fault:?}: job accounting");
+    }
+}
+
+/// Read-side faults: the probe's incoming half dies or corrupts, the
+/// worker bails with a clear error, and the coordinator sees an
+/// ordinary connection loss. (Whether the loss lands before or after
+/// the probe's last ack depends on ping timing, so the loss count is
+/// bounded, not pinned.)
+#[test]
+fn read_side_faults_never_perturb_the_report() {
+    let twin = Twin::leonardo();
+    let grid = chaos_grid();
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    let sp = spec(&twin, &grid);
+
+    for fault in [WireFault::Drop, WireFault::CorruptByte] {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let cfg = snappy_cfg(2);
+        let (report, stats) = thread::scope(|s| {
+            let mut wt = twin.clone();
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).unwrap();
+                run_worker(&mut wt, sock, &fleet_opts("w0")).unwrap()
+            });
+            let twin = &twin;
+            s.spawn(move || {
+                sabotaged_worker(
+                    twin,
+                    addr,
+                    "w1",
+                    FaultPlan::at(&[]),
+                    FaultPlan::at(&[(6, fault)]),
+                )
+            });
+            serve_listener(listener, Some(&sp), &cfg).unwrap()
+        });
+        let report = report.expect("initial grid always yields its report");
+        assert_eq!(oracle, report, "read-side {fault:?} perturbed the report");
+        assert_eq!(stats.workers_joined, 2);
+        assert!(stats.workers_lost <= 1, "read-side {fault:?} lost the fleet");
+        assert_eq!(stats.jobs_served, 1);
+    }
+}
+
+/// The production probe path: `WorkerOptions::chaos` (CLI `--chaos`)
+/// derives independent read/write fault schedules from the seed. For
+/// several seeds, a three-member fleet with one probe finishes the
+/// sweep byte-identically, losing at most the probe.
+#[test]
+fn seeded_chaos_probes_cost_at_most_themselves() {
+    let twin = Twin::leonardo();
+    let grid = chaos_grid();
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    let sp = spec(&twin, &grid);
+
+    for seed in [1u64, 2, 3] {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let cfg = snappy_cfg(3);
+        let (report, stats) = thread::scope(|s| {
+            for k in 0..2 {
+                let mut wt = twin.clone();
+                s.spawn(move || {
+                    let sock = TcpStream::connect(addr).unwrap();
+                    run_worker(&mut wt, sock, &fleet_opts(&format!("w{k}"))).unwrap()
+                });
+            }
+            let mut wt = twin.clone();
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).unwrap();
+                let opts = WorkerOptions {
+                    chaos: Some(seed),
+                    ..fleet_opts("wc")
+                };
+                // The probe dying mid-protocol is the experiment.
+                let _ = run_worker(&mut wt, sock, &opts);
+            });
+            serve_listener(listener, Some(&sp), &cfg).unwrap()
+        });
+        let report = report.expect("initial grid always yields its report");
+        assert_eq!(oracle, report, "chaos seed {seed} perturbed the report");
+        assert_eq!(stats.workers_joined, 3, "chaos seed {seed}: join accounting");
+        assert!(
+            stats.workers_lost <= 1,
+            "chaos seed {seed} took an honest worker down too"
+        );
+        assert_eq!(stats.jobs_served, 1);
+    }
+}
+
+/// The acceptance-shaped chaos run: a persistent coordinator serves a
+/// three-job queue — initial grid plus two client submissions — while
+/// one fleet member is a seeded chaos probe. Whenever and however the
+/// probe dies (or survives), every report is byte-identical and the
+/// honest workers are never convicted.
+#[test]
+fn a_chaos_probe_cannot_perturb_a_multi_job_queue() {
+    let twin = Twin::leonardo();
+    let grid1 = chaos_grid();
+    let grid2 = SweepGrid::new(vec![1, 2], vec![None], vec!["day".into()], 50).unwrap();
+    let grid3 = SweepGrid::new(vec![3], vec![None, Some(6.5)], vec!["ai".into()], 40).unwrap();
+    let o1 = run_sweep_streaming(&twin, &grid1, 2);
+    let o2 = run_sweep_streaming(&twin, &grid2, 2);
+    let o3 = run_sweep_streaming(&twin, &grid3, 2);
+    let sp1 = spec(&twin, &grid1);
+    let sp2 = spec(&twin, &grid2);
+    let sp3 = spec(&twin, &grid3);
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = CoordinatorConfig {
+        queue_cap: 4,
+        persist: true,
+        ..snappy_cfg(3)
+    };
+
+    let (r1, stats, r2, r3) = thread::scope(|s| {
+        let serve = s.spawn(|| serve_listener(listener, Some(&sp1), &cfg));
+        for k in 0..2 {
+            let mut wt = twin.clone();
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).unwrap();
+                run_worker(&mut wt, sock, &fleet_opts(&format!("w{k}"))).unwrap()
+            });
+        }
+        {
+            let mut wt = twin.clone();
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).unwrap();
+                let opts = WorkerOptions {
+                    chaos: Some(42),
+                    ..fleet_opts("wc")
+                };
+                let _ = run_worker(&mut wt, sock, &opts);
+            });
+        }
+        let c2 = s.spawn(|| submit(addr, &sp2, Duration::from_secs(30)).unwrap());
+        let c3 = s.spawn(|| submit(addr, &sp3, Duration::from_secs(30)).unwrap());
+        let r2 = c2.join().unwrap();
+        let r3 = c3.join().unwrap();
+        assert_eq!(drain(addr, Duration::from_secs(10)).unwrap(), 0);
+        let (r1, stats) = serve.join().unwrap().unwrap();
+        (r1.expect("initial grid always yields its report"), stats, r2, r3)
+    });
+
+    assert_eq!(o1, r1, "chaos perturbed the initial job");
+    assert_eq!(o2, r2, "chaos perturbed queued job 2");
+    assert_eq!(o3, r3, "chaos perturbed queued job 3");
+    assert_eq!(stats.workers_joined, 3);
+    assert_eq!(stats.jobs_served, 3);
+    assert_eq!(stats.jobs_rejected, 0);
+    assert!(
+        stats.workers_lost <= 1,
+        "chaos took an honest worker down too"
+    );
+}

@@ -1,18 +1,32 @@
 //! Distributed-sweep acceptance: the coordinator + worker-fleet service
 //! produces reports byte-identical to the single-process engines for
 //! any fleet size — including the policy, fault and fork axes — and
-//! worker churn mid-sweep reassigns exactly the lost worker's
-//! unacknowledged groups without perturbing the report.
+//! survives real failure: crashed workers, stalled-but-connected
+//! workers timed out by the progress deadline, lying acks, duplicate
+//! acks, bounded-queue overload and coordinator restarts, all without
+//! perturbing a single report byte.
 //!
 //! Every test here runs the real service: a TCP listener on an
 //! ephemeral loopback port, worker threads speaking the length-prefixed
 //! JSON protocol, the consistent-hash ring and the grid-index slot
-//! merge. Nothing is mocked.
+//! merge. Nothing is mocked, and nothing sleeps — misbehaving peers are
+//! convicted by the same heartbeat and deadline clocks production runs.
 
-use leonardo_twin::campaign::{run_sweep_forked, run_sweep_streaming, SweepGrid};
+use std::io::Read as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use leonardo_twin::campaign::{
+    replay_group, run_sweep_forked, run_sweep_streaming, CampaignReport, SweepGrid,
+};
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::scheduler::{Coupling, PolicyKind};
-use leonardo_twin::service::{run_distributed, HashRing, ServiceStats, SweepSpec, DEFAULT_REPLICAS};
+use leonardo_twin::service::messages::{read_msg, read_msg_patient, write_msg};
+use leonardo_twin::service::{
+    drain, run_distributed, run_worker, run_worker_resilient, serve_listener, submit,
+    CoordinatorConfig, HashRing, Msg, ServiceStats, SweepSpec, WorkerOptions, DEFAULT_REPLICAS,
+};
 use leonardo_twin::workloads::FaultTrace;
 
 /// The canonical 24-scenario grid the benches and CI gate run.
@@ -26,11 +40,85 @@ fn canonical_grid() -> SweepGrid {
     .unwrap()
 }
 
+/// A 12-scenario grid whose fork-off work groups are 12 singletons —
+/// small enough to churn quickly, large enough that every fleet member
+/// owns several groups.
+fn churn_grid() -> SweepGrid {
+    SweepGrid::new(
+        vec![1, 2, 3],
+        vec![None, Some(7.0)],
+        vec!["day".into(), "ai".into()],
+        60,
+    )
+    .unwrap()
+}
+
 fn spec(twin: &Twin, grid: &SweepGrid, fork: bool) -> SweepSpec {
     SweepSpec {
         grid: grid.clone(),
         routing: twin.net.routing,
         fork,
+    }
+}
+
+/// Coordinator tuning for liveness tests: real heartbeat and deadline
+/// clocks, just fast enough that convicting a stalled peer takes a
+/// fraction of a second instead of the production half-minute.
+fn snappy_cfg(expect: usize, floor: Duration) -> CoordinatorConfig {
+    CoordinatorConfig {
+        expect,
+        heartbeat: Duration::from_millis(50),
+        deadline_floor: floor,
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// Worker tuning to match [`snappy_cfg`]: poll often, but stay patient
+/// about coordinator silence for the whole test.
+fn fleet_opts(id: &str) -> WorkerOptions {
+    WorkerOptions {
+        poll: Duration::from_millis(25),
+        patience: Duration::from_secs(20),
+        ..WorkerOptions::named(id)
+    }
+}
+
+/// Rebuild the coordinator's ring locally so tests can predict exactly
+/// which groups each fleet member owns.
+fn ring_of(names: &[&str]) -> HashRing {
+    let mut ring = HashRing::new(DEFAULT_REPLICAS);
+    for n in names {
+        ring.add(n);
+    }
+    ring
+}
+
+fn owned_by(ring: &HashRing, n_groups: usize, who: &str) -> Vec<usize> {
+    (0..n_groups)
+        .filter(|&g| ring.assign_group(g).unwrap() == who)
+        .collect()
+}
+
+/// A worker that joins the fleet and then never speaks again: it
+/// swallows every frame the coordinator sends (so the socket stays
+/// healthy from the coordinator's side) but streams no rows, acks no
+/// groups and answers no pings — detectable only by the deadline
+/// clocks. Returns when the coordinator severs the connection.
+fn stalled_peer(addr: SocketAddr, name: &str) {
+    let mut sock = TcpStream::connect(addr).unwrap();
+    write_msg(
+        &mut sock,
+        &Msg::Hello {
+            worker: name.to_string(),
+        },
+    )
+    .unwrap();
+    let mut buf = [0u8; 1024];
+    loop {
+        match sock.read(&mut buf) {
+            Ok(0) | Err(_) => return, // severed: the coordinator gave up on us
+            Ok(_) => {}
+        }
     }
 }
 
@@ -55,7 +143,8 @@ fn distributed_report_is_identical_for_any_fleet_size() {
 }
 
 /// A quiet fleet reports clean service stats: everyone joined, nobody
-/// lost, nothing reassigned, no duplicate rows merged.
+/// lost, nothing reassigned, no duplicate or stale rows, exactly one
+/// job served.
 #[test]
 fn healthy_fleet_reports_clean_service_stats() {
     let twin = Twin::leonardo();
@@ -66,9 +155,8 @@ fn healthy_fleet_reports_clean_service_stats() {
         stats,
         ServiceStats {
             workers_joined: 3,
-            workers_lost: 0,
-            groups_reassigned: 0,
-            duplicate_rows: 0,
+            jobs_served: 1,
+            ..ServiceStats::default()
         }
     );
 }
@@ -128,25 +216,13 @@ fn distributed_fork_mode_matches_the_forked_oracle() {
 #[test]
 fn worker_churn_reassigns_only_the_lost_workers_groups() {
     let twin = Twin::leonardo();
-    // 12 scenarios, fork off → 12 singleton groups g0..g11.
-    let grid = SweepGrid::new(
-        vec![1, 2, 3],
-        vec![None, Some(7.0)],
-        vec!["day".into(), "ai".into()],
-        60,
-    )
-    .unwrap();
+    let grid = churn_grid();
     assert_eq!(grid.len(), 12);
 
     // Reproduce the dispatch ring locally so the die-after arithmetic
     // below is visible: w0 owns exactly groups {5, 6} of this grid.
-    let mut ring = HashRing::new(DEFAULT_REPLICAS);
-    for w in ["w0", "w1", "w2"] {
-        ring.add(w);
-    }
-    let w0_groups: Vec<usize> = (0..grid.len())
-        .filter(|&g| ring.assign_group(g).unwrap() == "w0")
-        .collect();
+    let ring = ring_of(&["w0", "w1", "w2"]);
+    let w0_groups = owned_by(&ring, grid.len(), "w0");
     assert_eq!(w0_groups, vec![5, 6], "pinned ring layout moved");
 
     // w0 acknowledges one group then drops its connection, orphaning
@@ -188,13 +264,7 @@ fn worker_churn_reassigns_only_the_lost_workers_groups() {
 #[test]
 fn losing_the_entire_fleet_errors_instead_of_hanging() {
     let twin = Twin::leonardo();
-    let grid = SweepGrid::new(
-        vec![1, 2, 3],
-        vec![None, Some(7.0)],
-        vec!["day".into(), "ai".into()],
-        60,
-    )
-    .unwrap();
+    let grid = churn_grid();
     let sp = spec(&twin, &grid, false);
     // The single worker dies after one of its twelve groups.
     let err = run_distributed(&twin, &sp, 1, &[(0, 1)]).unwrap_err();
@@ -203,4 +273,429 @@ fn losing_the_entire_fleet_errors_instead_of_hanging() {
         msg.contains("fleet lost"),
         "unexpected fleet-loss diagnostic: {msg}"
     );
+}
+
+/// A stalled worker — connected, joined, silent — cannot hide behind
+/// its open socket: the progress deadline convicts it, its groups are
+/// re-dispatched to the survivors, and the report is byte-identical.
+#[test]
+fn a_stalled_worker_is_timed_out_and_its_groups_reassigned() {
+    let twin = Twin::leonardo();
+    let grid = churn_grid();
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    let sp = spec(&twin, &grid, false);
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = snappy_cfg(3, Duration::from_millis(700));
+
+    let (report, stats) = thread::scope(|s| {
+        for k in 0..2 {
+            let mut wt = twin.clone();
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).unwrap();
+                run_worker(&mut wt, sock, &fleet_opts(&format!("w{k}"))).unwrap()
+            });
+        }
+        s.spawn(move || stalled_peer(addr, "w2"));
+        serve_listener(listener, Some(&sp), &cfg).unwrap()
+    });
+    let report = report.expect("initial grid always yields its report");
+
+    let ring = ring_of(&["w0", "w1", "w2"]);
+    let stalled = owned_by(&ring, grid.len(), "w2");
+    assert!(!stalled.is_empty(), "pinned ring layout moved");
+    assert_eq!(oracle, report, "stalled-worker sweep diverged");
+    assert_eq!(stats.workers_joined, 3);
+    assert_eq!(stats.workers_lost, 1, "the stalled worker was not convicted");
+    assert_eq!(
+        stats.groups_reassigned,
+        stalled.len(),
+        "re-dispatch did not match the stalled worker's unacked groups"
+    );
+    assert_eq!(stats.duplicate_rows, 0);
+    assert_eq!(stats.jobs_served, 1);
+    // Its groups were held from dispatch until the deadline fired.
+    assert!(stats.reassign_latency_mean_s > 0.0);
+    assert!(stats.reassign_latency_max_s >= stats.reassign_latency_mean_s);
+}
+
+/// Protocol-edge robustness: a worker that streams junk rows (unknown
+/// grid index, bygone job id) and then acks a group that does not
+/// exist is expelled — the junk never merges, the lying ack never
+/// wedges the sweep, and the survivor finishes byte-identically.
+#[test]
+fn a_lying_ack_and_junk_rows_expel_the_worker_without_merging() {
+    let twin = Twin::leonardo();
+    let grid = churn_grid();
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    let sp = spec(&twin, &grid, false);
+    let junk = oracle.stats[0].clone();
+
+    let ring = ring_of(&["w0", "w1"]);
+    let liars_groups = owned_by(&ring, grid.len(), "w1");
+    assert!(!liars_groups.is_empty(), "pinned ring layout moved");
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = snappy_cfg(2, Duration::from_millis(700));
+
+    let (report, stats) = thread::scope(|s| {
+        let mut wt = twin.clone();
+        s.spawn(move || {
+            let sock = TcpStream::connect(addr).unwrap();
+            run_worker(&mut wt, sock, &fleet_opts("w0")).unwrap()
+        });
+        let junk = junk.clone();
+        s.spawn(move || {
+            let mut sock = TcpStream::connect(addr).unwrap();
+            sock.set_read_timeout(Some(Duration::from_millis(25))).unwrap();
+            write_msg(&mut sock, &Msg::Hello { worker: "w1".into() }).unwrap();
+            let deadline = Instant::now() + Duration::from_secs(20);
+            let mut lied = false;
+            loop {
+                assert!(Instant::now() < deadline, "liar never got its assignment");
+                match read_msg_patient(&mut sock, Duration::from_secs(5)) {
+                    Ok(Some(Msg::Assign { job, .. })) if !lied => {
+                        // Junk row: an index outside the grid.
+                        write_msg(
+                            &mut sock,
+                            &Msg::Row {
+                                job,
+                                index: 10_000,
+                                stats: junk.clone(),
+                            },
+                        )
+                        .unwrap();
+                        // Stale row: a job id nobody is running.
+                        write_msg(
+                            &mut sock,
+                            &Msg::Row {
+                                job: job + 1,
+                                index: 0,
+                                stats: junk.clone(),
+                            },
+                        )
+                        .unwrap();
+                        // The lie: ack a group that does not exist.
+                        write_msg(&mut sock, &Msg::GroupDone { job, group: 10_000 }).unwrap();
+                        lied = true;
+                    }
+                    Ok(_) => {}
+                    Err(_) => break, // severed: the coordinator expelled us
+                }
+            }
+            assert!(lied, "liar was severed before it could misbehave");
+        });
+        serve_listener(listener, Some(&sp), &cfg).unwrap()
+    });
+    let report = report.expect("initial grid always yields its report");
+
+    assert_eq!(oracle, report, "the junk rows leaked into the report");
+    assert_eq!(stats.workers_joined, 2);
+    assert_eq!(stats.workers_lost, 1, "the liar kept its seat");
+    assert_eq!(stats.stale_rows, 2, "junk rows were not counted as stale");
+    assert_eq!(
+        stats.groups_reassigned,
+        liars_groups.len(),
+        "the liar's groups did not all move to the survivor"
+    );
+    assert_eq!(stats.duplicate_rows, 0);
+}
+
+/// A duplicate `GroupDone` — a worker acking the same group twice — is
+/// a clean no-op: no expulsion, no reassignment, no double-merge.
+#[test]
+fn duplicate_group_acks_are_a_clean_no_op() {
+    let twin = Twin::leonardo();
+    let grid = SweepGrid::new(vec![1, 2], vec![None], vec!["day".into()], 60).unwrap();
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    let sp = spec(&twin, &grid, false);
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = snappy_cfg(1, Duration::from_millis(700));
+
+    let (report, stats) = thread::scope(|s| {
+        let mut wt = twin.clone();
+        s.spawn(move || {
+            // A hand-rolled honest worker that double-acks every group.
+            let mut sock = TcpStream::connect(addr).unwrap();
+            sock.set_read_timeout(Some(Duration::from_millis(25))).unwrap();
+            write_msg(&mut sock, &Msg::Hello { worker: "w0".into() }).unwrap();
+            let mut arena = None;
+            let mut cur = None;
+            loop {
+                match read_msg_patient(&mut sock, Duration::from_secs(10)).unwrap() {
+                    Some(Msg::Spec { job, spec }) => {
+                        wt.net.routing = spec.routing;
+                        cur = Some((job, spec.grid.scenarios(), spec.grid.work_groups(spec.fork)));
+                    }
+                    Some(Msg::Assign { job, groups }) => {
+                        let (id, scenarios, work) =
+                            cur.as_ref().expect("assignment before its spec");
+                        assert_eq!(job, *id);
+                        for g in groups {
+                            let members = &work[g as usize];
+                            for (index, stats) in
+                                replay_group(&mut arena, &wt, scenarios, members)
+                            {
+                                write_msg(
+                                    &mut sock,
+                                    &Msg::Row {
+                                        job: *id,
+                                        index: index as u64,
+                                        stats,
+                                    },
+                                )
+                                .unwrap();
+                            }
+                            write_msg(&mut sock, &Msg::GroupDone { job: *id, group: g }).unwrap();
+                            // The duplicate the coordinator must shrug off.
+                            write_msg(&mut sock, &Msg::GroupDone { job: *id, group: g }).unwrap();
+                        }
+                    }
+                    Some(Msg::Ping) => write_msg(&mut sock, &Msg::Pong).unwrap(),
+                    Some(Msg::Shutdown) => break,
+                    Some(other) => panic!("unexpected {other:?}"),
+                    None => {}
+                }
+            }
+        });
+        serve_listener(listener, Some(&sp), &cfg).unwrap()
+    });
+    let report = report.expect("initial grid always yields its report");
+
+    assert_eq!(oracle, report, "double-acked sweep diverged");
+    assert_eq!(
+        stats,
+        ServiceStats {
+            workers_joined: 1,
+            jobs_served: 1,
+            ..ServiceStats::default()
+        },
+        "a duplicate ack was not a no-op"
+    );
+}
+
+/// The job queue is bounded: with one job active and the queue at
+/// capacity, a further `Submit` is rejected immediately — the client
+/// gets a reason, not a hang — while the accepted jobs still run to
+/// byte-identical reports once the fleet forms.
+#[test]
+fn the_job_queue_is_bounded_and_rejects_rather_than_parks() {
+    let twin = Twin::leonardo();
+    let grid_a = SweepGrid::new(vec![1, 2], vec![None], vec!["day".into()], 50).unwrap();
+    let grid_b = SweepGrid::new(vec![3], vec![None, Some(6.5)], vec!["ai".into()], 40).unwrap();
+    let oracle_a = run_sweep_streaming(&twin, &grid_a, 2);
+    let oracle_b = run_sweep_streaming(&twin, &grid_b, 2);
+    let sp_a = spec(&twin, &grid_a, false);
+    let sp_b = spec(&twin, &grid_b, false);
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = CoordinatorConfig {
+        queue_cap: 1,
+        persist: true,
+        ..snappy_cfg(2, Duration::from_millis(700))
+    };
+
+    fn raw_submit(addr: SocketAddr, sp: &SweepSpec) -> Result<(TcpStream, u64), String> {
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write_msg(&mut sock, &Msg::Submit { spec: sp.clone() }).unwrap();
+        match read_msg(&mut sock).unwrap() {
+            Msg::Accepted { job } => Ok((sock, job)),
+            Msg::Rejected { reason } => Err(reason),
+            other => panic!("unexpected {other:?} as a submission verdict"),
+        }
+    }
+
+    fn await_report(sock: &mut TcpStream, job: u64) -> CampaignReport {
+        match read_msg(sock).unwrap() {
+            Msg::Report { job: id, report } if id == job => report,
+            other => panic!("unexpected {other:?} while awaiting job {job}"),
+        }
+    }
+
+    thread::scope(|s| {
+        let serve = s.spawn(|| serve_listener(listener, None, &cfg));
+
+        // No workers yet: job 1 goes active (undispatched), job 2 fills
+        // the queue, job 3 must bounce.
+        let (mut ca, ja) = raw_submit(addr, &sp_a).expect("first submission fits");
+        let (mut cb, jb) = raw_submit(addr, &sp_b).expect("second submission fits");
+        assert_eq!((ja, jb), (1, 2));
+        let reason = raw_submit(addr, &sp_a).expect_err("third submission must bounce");
+        assert!(reason.contains("queue full"), "wrong rejection: {reason}");
+
+        // Now let the fleet form and the queue drain, FIFO.
+        for k in 0..2 {
+            let mut wt = twin.clone();
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).unwrap();
+                run_worker(&mut wt, sock, &fleet_opts(&format!("w{k}"))).unwrap()
+            });
+        }
+        let ra = await_report(&mut ca, ja);
+        let rb = await_report(&mut cb, jb);
+        assert_eq!(ra, oracle_a, "queued job 1 diverged");
+        assert_eq!(rb, oracle_b, "queued job 2 diverged");
+
+        // Everything is merged; the drain has nothing left to wait on.
+        assert_eq!(drain(addr, Duration::from_secs(10)).unwrap(), 0);
+        let (initial, stats) = serve.join().unwrap().unwrap();
+        assert!(initial.is_none(), "a grid-less coordinator invented a report");
+        assert_eq!(
+            stats,
+            ServiceStats {
+                workers_joined: 2,
+                jobs_served: 2,
+                jobs_rejected: 1,
+                ..ServiceStats::default()
+            }
+        );
+    });
+}
+
+/// Satellite: a resilient worker outlives its coordinator. The first
+/// incarnation of the coordinator dies on accept; the worker backs
+/// off, reconnects under the same identity, and serves the whole
+/// sweep on the second incarnation.
+#[test]
+fn a_resilient_worker_rejoins_after_a_coordinator_restart() {
+    let twin = Twin::leonardo();
+    let grid = SweepGrid::new(vec![1, 2], vec![None], vec!["day".into()], 50).unwrap();
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    let sp = spec(&twin, &grid, false);
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = snappy_cfg(1, Duration::from_millis(700));
+
+    let (report, stats, acked) = thread::scope(|s| {
+        let worker = s.spawn(move || {
+            let mut wt = twin.clone();
+            run_worker_resilient(&mut wt, addr, &fleet_opts("w0"), Duration::from_secs(20))
+                .unwrap()
+        });
+        // First incarnation: accept the worker's connection and die.
+        let (doomed, _) = listener.accept().unwrap();
+        drop(doomed);
+        // Second incarnation: the same listener, now actually serving.
+        let (report, stats) = serve_listener(listener, Some(&sp), &cfg).unwrap();
+        (report, stats, worker.join().unwrap())
+    });
+    let report = report.expect("initial grid always yields its report");
+
+    assert_eq!(oracle, report, "post-restart sweep diverged");
+    assert_eq!(
+        stats,
+        ServiceStats {
+            workers_joined: 1,
+            jobs_served: 1,
+            ..ServiceStats::default()
+        }
+    );
+    assert_eq!(acked, grid.len(), "the rejoined worker did not serve every group");
+}
+
+/// The headline acceptance test: a four-worker fleet where one worker
+/// crashes mid-job and another stalls silently serves a three-job
+/// submission queue — initial grid plus two `Submit`s — to completion.
+/// Both failures are convicted (`workers_lost == 2`), exactly the
+/// unacknowledged groups move, and all three reports are byte-identical
+/// to the single-process engine.
+#[test]
+fn a_churned_fleet_serves_a_three_job_queue_byte_identically() {
+    let twin = Twin::leonardo();
+    let grid1 = churn_grid();
+    let grid2 = SweepGrid::new(vec![1, 2], vec![None], vec!["day".into()], 50).unwrap();
+    let grid3 = SweepGrid::new(vec![3], vec![None, Some(6.5)], vec!["ai".into()], 40).unwrap();
+    let o1 = run_sweep_streaming(&twin, &grid1, 2);
+    let o2 = run_sweep_streaming(&twin, &grid2, 2);
+    let o3 = run_sweep_streaming(&twin, &grid3, 2);
+    let sp1 = spec(&twin, &grid1, false);
+    let sp2 = spec(&twin, &grid2, false);
+    let sp3 = spec(&twin, &grid3, false);
+
+    let n_groups = grid1.work_groups(false).len();
+    let ring0 = ring_of(&["w0", "w1", "w2", "w3"]);
+    let w2g = owned_by(&ring0, n_groups, "w2");
+    let w3g = owned_by(&ring0, n_groups, "w3");
+    assert!(!w2g.is_empty() && !w3g.is_empty(), "pinned ring layout moved");
+    // w2 acks its first (lowest-id) group, then crashes: the rest are
+    // its orphans. They re-dispatch over {w0, w1, w3}; whatever lands
+    // on the stalled w3 is orphaned a second time when the deadline
+    // convicts it, alongside w3's own groups.
+    let w2_orphans = &w2g[1..];
+    let mut ring1 = ring0.clone();
+    ring1.remove("w2");
+    let inherited = w2_orphans
+        .iter()
+        .filter(|&&g| ring1.assign_group(g).unwrap() == "w3")
+        .count();
+    let expected_reassigned = w2_orphans.len() + w3g.len() + inherited;
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = CoordinatorConfig {
+        queue_cap: 4,
+        persist: true,
+        ..snappy_cfg(4, Duration::from_millis(800))
+    };
+
+    let (r1, stats, r2, r3) = thread::scope(|s| {
+        let serve = s.spawn(|| serve_listener(listener, Some(&sp1), &cfg));
+        for k in 0..2 {
+            let mut wt = twin.clone();
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).unwrap();
+                run_worker(&mut wt, sock, &fleet_opts(&format!("w{k}"))).unwrap()
+            });
+        }
+        // w2: a real crash — one acked group, then the socket drops.
+        {
+            let mut wt = twin.clone();
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).unwrap();
+                let opts = WorkerOptions {
+                    die_after_groups: Some(1),
+                    ..fleet_opts("w2")
+                };
+                run_worker(&mut wt, sock, &opts).unwrap()
+            });
+        }
+        // w3: joined but silent for the rest of its life.
+        s.spawn(move || stalled_peer(addr, "w3"));
+
+        // Two client submissions ride the queue behind the initial grid.
+        let c2 = s.spawn(|| submit(addr, &sp2, Duration::from_secs(30)).unwrap());
+        let c3 = s.spawn(|| submit(addr, &sp3, Duration::from_secs(30)).unwrap());
+        let r2 = c2.join().unwrap();
+        let r3 = c3.join().unwrap();
+
+        // All reports are out; drain shuts the service down cleanly.
+        assert_eq!(drain(addr, Duration::from_secs(10)).unwrap(), 0);
+        let (r1, stats) = serve.join().unwrap().unwrap();
+        (r1.expect("initial grid always yields its report"), stats, r2, r3)
+    });
+
+    assert_eq!(o1, r1, "churned job 1 diverged from the oracle");
+    assert_eq!(o2, r2, "queued job 2 diverged from the oracle");
+    assert_eq!(o3, r3, "queued job 3 diverged from the oracle");
+    assert_eq!(stats.workers_joined, 4);
+    assert_eq!(stats.workers_lost, 2, "crash + stall must both be convicted");
+    assert_eq!(stats.jobs_served, 3);
+    assert_eq!(stats.jobs_rejected, 0);
+    assert_eq!(stats.duplicate_rows, 0);
+    assert_eq!(stats.stale_rows, 0);
+    assert_eq!(
+        stats.groups_reassigned, expected_reassigned,
+        "re-dispatch did not match the two losses' unacked groups"
+    );
+    // The stalled worker's groups were hostage until the deadline fired.
+    assert!(stats.reassign_latency_max_s > 0.5);
+    assert!(stats.reassign_latency_mean_s > 0.0);
+    assert!(stats.reassign_latency_max_s >= stats.reassign_latency_mean_s);
 }
