@@ -34,7 +34,12 @@
 //!    concurrently submitted copies of the grid through one fleet —
 //!    queue makespan and jobs/s) and a churn probe (one worker crashes
 //!    mid-sweep — reassignment latency from the service stats); both
-//!    ride into `BENCH_distributed.json`.
+//!    ride into `BENCH_distributed.json`. ISSUE 10 adds the skew
+//!    probe: a deliberately imbalanced forked+faulted grid whose
+//!    static ring layout piles half the groups onto one worker, run
+//!    at 4 workers under both dispatch modes — adaptive pull must cut
+//!    the makespan >= 1.4x vs static sharding (>= 1.2x smoke), with
+//!    both reports byte-identical to the forked oracle.
 //!
 //! Gates: the incremental engine must run the coupled grid at >= 2x the
 //! PR 3 baseline, coupled throughput must land within 3x of uncoupled —
@@ -65,8 +70,8 @@ use leonardo_twin::campaign::{
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::scheduler::{CheckpointPolicy, Coupling, PolicyKind};
 use leonardo_twin::service::{
-    drain, run_distributed, run_worker, serve_listener, submit, CoordinatorConfig, SweepSpec,
-    WorkerOptions,
+    drain, run_distributed, run_fleet, run_worker, serve_listener, submit, CoordinatorConfig,
+    DispatchMode, HashRing, SweepSpec, WorkerOptions, DEFAULT_REPLICAS,
 };
 use leonardo_twin::workloads::FaultTrace;
 
@@ -231,6 +236,88 @@ fn main() {
     assert_eq!(faulted, churn_report, "churned distributed sweep diverged");
     assert_eq!(churn_stats.workers_lost, 1, "the scripted crash went unnoticed");
 
+    // ISSUE 10 skew probe: a deliberately imbalanced forked grid — one
+    // mix, five seeds, a clean and a heavy fault trace, so ten fork
+    // groups of very uneven cost — whose pinned static ring layout
+    // piles half the groups (most of them faulted) onto one worker. A
+    // 4-worker fleet serves it under both dispatch modes: adaptive
+    // pull-based LPT must beat static consistent-hash sharding on
+    // makespan, and both reports must stay byte-identical to the
+    // single-process forked oracle.
+    let skew_faults = FaultTrace {
+        seed: 11,
+        duration_s: 86_400.0,
+        node_mtbf_s: 2.0e5,
+        repair_mean_s: 7_200.0,
+        group: 32,
+        ..FaultTrace::none()
+    };
+    let skew_grid = SweepGrid::new(
+        vec![1, 2, 3, 4, 5],
+        vec![None, Some(7.5), Some(6.0)],
+        vec!["hpc".into()],
+        jobs,
+    )
+    .expect("skew grid")
+    .with_coupling(Coupling::full())
+    .with_cap_time(cap_time)
+    .with_fault_traces(vec![FaultTrace::none(), skew_faults]);
+    let skew_groups = skew_grid.work_groups(true);
+    assert_eq!(skew_groups.len(), 10, "5 seeds x 2 traces = 10 fork groups");
+    // The probe only measures what it claims if the static layout
+    // really is skewed: recompute the ring assignment and demand a hot
+    // shard owning at least four of the ten groups.
+    let mut skew_ring = HashRing::new(DEFAULT_REPLICAS);
+    for k in 0..4 {
+        skew_ring.add(&format!("w{k}"));
+    }
+    let skew_hot = (0..4)
+        .map(|k| {
+            let name = format!("w{k}");
+            (0..skew_groups.len())
+                .filter(|&g| skew_ring.assign_group(g) == Some(name.as_str()))
+                .count()
+        })
+        .max()
+        .unwrap_or(0);
+    assert!(
+        skew_hot >= 4,
+        "static ring layout is too balanced ({skew_hot}/10 on the hottest \
+         worker) for the skew probe to measure anything"
+    );
+    let (skew_oracle_s, skew_oracle) =
+        best_of(reps, || run_sweep_forked(&twin, &skew_grid, threads));
+    let skew_sp = SweepSpec {
+        grid: skew_grid.clone(),
+        routing: twin.net.routing,
+        fork: true,
+    };
+    let time_fleet = |dispatch: DispatchMode| {
+        let cfg = CoordinatorConfig {
+            dispatch,
+            ..CoordinatorConfig::default()
+        };
+        let mut best = f64::INFINITY;
+        let mut out = None;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let pair = run_fleet(&twin, &skew_sp, 4, 1, &[], &cfg).expect("skew fleet");
+            best = best.min(t0.elapsed().as_secs_f64());
+            out = Some(pair);
+        }
+        let (report, stats) = out.expect("at least one rep");
+        (best, report, stats)
+    };
+    let (skew_static_s, skew_static, _) = time_fleet(DispatchMode::Static);
+    let (skew_adaptive_s, skew_adaptive, skew_stats) = time_fleet(DispatchMode::Adaptive);
+    assert_eq!(skew_oracle, skew_static, "static skewed fleet diverged");
+    assert_eq!(skew_oracle, skew_adaptive, "adaptive skewed fleet diverged");
+    assert_eq!(
+        skew_stats.starved_ticks, 0,
+        "a worker idled while groups sat in the adaptive ready queue"
+    );
+    let skew_speedup = skew_static_s / skew_adaptive_s;
+
     // The faulted sweep must be a real failure campaign: kills landed,
     // every kill requeued (all jobs carry the periodic checkpoint), and
     // destroyed node-hours show up as goodput < 1.
@@ -327,6 +414,10 @@ fn main() {
          \x20 faulted vs fault-free          {fault_penalty:.2}x\n\
          \x20 fleet x2 / x4 vs x1            {fleet2_speedup:.2}x / {fleet4_speedup:.2}x\n\
          \x20 3-job queue makespan           {multi_s:.2} s = {multi_jobs_per_s:.2} jobs/s\n\
+         \x20 skew forked oracle             {skew_oracle_s:.2} s ({skew_hot}/10 groups on hot shard)\n\
+         \x20 skew fleet x4 static           {skew_static_s:.2} s\n\
+         \x20 skew fleet x4 adaptive         {skew_adaptive_s:.2} s\n\
+         \x20 skew adaptive vs static        {skew_speedup:.2}x\n\
          \x20 churn reassign latency         {:.3} s mean / {:.3} s max ({} groups)\n\
          \x20 re-times elided                {elided}\n\
          \x20 prefix forks / restores        {forks} / {restores}\n\
@@ -441,6 +532,13 @@ fn main() {
             "  \"reassign_latency_max_s\": {:.4},\n",
             "  \"churn_workers_lost\": {},\n",
             "  \"churn_groups_reassigned\": {},\n",
+            "  \"skew_groups\": {},\n",
+            "  \"skew_hot_static_groups\": {},\n",
+            "  \"skew_oracle_seconds\": {:.3},\n",
+            "  \"skew_static_seconds\": {:.3},\n",
+            "  \"skew_adaptive_seconds\": {:.3},\n",
+            "  \"skew_adaptive_speedup_vs_static\": {:.3},\n",
+            "  \"skew_starved_ticks\": {},\n",
             "  \"reports_identical_to_streaming\": true\n",
             "}}\n"
         ),
@@ -461,6 +559,13 @@ fn main() {
         churn_stats.reassign_latency_max_s,
         churn_stats.workers_lost,
         churn_stats.groups_reassigned,
+        skew_groups.len(),
+        skew_hot,
+        skew_oracle_s,
+        skew_static_s,
+        skew_adaptive_s,
+        skew_speedup,
+        skew_stats.starved_ticks,
     );
     match std::fs::write("BENCH_distributed.json", &dist_json) {
         Ok(()) => println!("wrote BENCH_distributed.json"),
@@ -525,4 +630,17 @@ fn main() {
              (gate: >= 1.6x)"
         );
     }
+
+    // ISSUE 10 gate, both scales: on the skewed grid the adaptive pull
+    // dispatcher must cut the makespan >= 1.4x vs static sharding
+    // (>= 1.2x smoke — small grids leave fixed per-fleet costs on both
+    // sides of the ratio). The hot static shard owns at least 4 of the
+    // 10 groups, so the ideal LPT-vs-static ratio is >= 1.6x; the gate
+    // leaves the rest for wire and merge overhead.
+    let min_skew = if smoke { 1.2 } else { 1.4 };
+    assert!(
+        skew_speedup >= min_skew,
+        "adaptive dispatch only {skew_speedup:.2}x static sharding on the \
+         skewed grid (gate: >= {min_skew}x)"
+    );
 }

@@ -379,6 +379,68 @@ impl SweepGrid {
             (0..self.len()).map(|i| vec![i]).collect()
         }
     }
+
+    /// Structural cost hints for [`SweepGrid::work_groups`], one per
+    /// group in group order — what the distributed coordinator seeds
+    /// its longest-estimated-first ready queue from before it has any
+    /// observed service times. Derived arithmetically from the
+    /// canonical expansion (no scenario generation): every member of a
+    /// group shares the same fault-trace index, so `members[0]` names
+    /// the group's fault axis value.
+    ///
+    /// The hint is a *relative* unit — fork members × jobs, scaled up
+    /// for an armed fault trace and for runtime coupling — refined
+    /// online by the coordinator's per-class service-time rates, so
+    /// only its ordering has to be roughly right, never its scale.
+    pub fn group_cost_hints(&self, fork: bool) -> Vec<GroupCost> {
+        let span = self.seeds.len() * self.caps.len() * self.mixes.len();
+        self.work_groups(fork)
+            .iter()
+            .map(|members| {
+                let f = (members[0] / span) % self.faults.len();
+                let fault_armed = !self.faults[f].is_none();
+                let mut hint = members.len() as f64 * self.jobs as f64;
+                if fault_armed {
+                    hint *= 1.5;
+                }
+                if self.coupling.enabled() {
+                    hint *= 1.25;
+                }
+                GroupCost {
+                    members: members.len(),
+                    fault_armed,
+                    hint,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Structural cost estimate for one work group — the shape the
+/// distributed scheduler reasons about a group with before (and while)
+/// it runs. See [`SweepGrid::group_cost_hints`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupCost {
+    /// Fork-group member count (1 for a streaming singleton).
+    pub members: usize,
+    /// Whether the group's fault-trace axis value renders events.
+    pub fault_armed: bool,
+    /// Relative cost estimate in arbitrary units (ordering is what
+    /// matters; observed service times calibrate the scale online).
+    pub hint: f64,
+}
+
+impl GroupCost {
+    /// Number of cost classes ([`GroupCost::class`] values).
+    pub const CLASSES: usize = 4;
+
+    /// The group's cost class for service-time pooling:
+    /// fork-group-vs-singleton × fault-armed-vs-clean. Progress
+    /// deadlines and cost-rate calibration pool observations per class
+    /// so a 6-member fork group is never judged by singleton acks.
+    pub fn class(&self) -> usize {
+        usize::from(self.members > 1) * 2 + usize::from(self.fault_armed)
+    }
 }
 
 /// Numeric outcome of one scenario replay. Plain data, so merged
@@ -574,6 +636,60 @@ pub struct ReplayRig {
     /// scenarios (and across fork-group snapshots), so replays retain
     /// the event heap and snapshot buffers instead of reallocating.
     pub sim: Simulation,
+    /// Memo of generated traces: scenarios that differ only along the
+    /// cap/policy axes share a `(mix, seed)` trace, and a persistent
+    /// arena replays many of them back to back — clone the cached jobs
+    /// instead of re-running the Poisson generator per scenario.
+    /// Deliberately *not* cleared by [`ReplayRig::reset`]: the cache is
+    /// keyed on the full generator state, so an entry can go unused but
+    /// never stale.
+    pub traces: TraceCache,
+}
+
+/// Bounded memo of [`TraceGen::generate`] outputs, keyed on the full
+/// generator state (every field `generate` reads), so a hit is exactly
+/// the trace a fresh `generate` would have produced — byte-identity of
+/// cached replays falls out of the generator's determinism.
+#[derive(Debug, Clone, Default)]
+pub struct TraceCache {
+    /// `(key, jobs)` in insertion order; evicted FIFO past
+    /// [`TraceCache::CAP`]. Linear scan: the cache holds a handful of
+    /// entries and a lookup amortizes a full trace generation.
+    entries: Vec<(String, Vec<Job>)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl TraceCache {
+    /// Entries kept; a sweep touches `mixes × seeds` distinct traces
+    /// and anything past this bound just regenerates.
+    const CAP: usize = 16;
+
+    /// The jobs `gen.generate()` would produce, cloned from the cache
+    /// when an identical generator was seen before.
+    pub fn jobs_for(&mut self, gen: &TraceGen) -> Vec<Job> {
+        // `TraceGen` derives no `PartialEq` (f64 mix weights); the
+        // `Debug` rendering covers every field and is deterministic,
+        // which is all a memo key needs.
+        let key = format!("{gen:?}");
+        if let Some((_, jobs)) = self.entries.iter().find(|(k, _)| *k == key) {
+            self.hits += 1;
+            return jobs.clone();
+        }
+        self.misses += 1;
+        let jobs = gen.generate();
+        if self.entries.len() >= Self::CAP {
+            self.entries.remove(0);
+        }
+        self.entries.push((key, jobs.clone()));
+        jobs
+    }
+
+    /// `(hits, misses)` since construction — observability for the
+    /// cache-effectiveness test and the worker's exit log.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
 }
 
 impl ReplayRig {
@@ -610,6 +726,7 @@ impl ReplayRig {
             congestion,
             total_nodes,
             sim: Simulation::new(),
+            traces: TraceCache::default(),
         }
     }
 
@@ -648,7 +765,7 @@ impl ReplayRig {
 /// deferred cap ([`Scenario::extra_events`]) are scheduled upfront in
 /// the divergent band, exactly where the forked path injects them.
 fn replay(rig: &mut ReplayRig, sc: &Scenario, cfg: &MachineConfig) -> ScenarioStats {
-    let jobs = sc.trace.generate();
+    let jobs = rig.traces.jobs_for(&sc.trace);
     assert!(!jobs.is_empty(), "empty scenario trace");
     rig.sched.retime_all = sc.retime_all;
     let ReplayRig {
@@ -657,6 +774,7 @@ fn replay(rig: &mut ReplayRig, sc: &Scenario, cfg: &MachineConfig) -> ScenarioSt
         congestion,
         total_nodes,
         sim,
+        traces: _,
     } = rig;
     let records = {
         let mut session = ReplaySession::new(sim, sched, jobs.clone(), sc.extra_events(cfg));
@@ -755,7 +873,7 @@ pub fn replay_group(
     rig.sched.retime_all = sc0.retime_all;
     // Group members share policy/fault trace/mix/seed, so one generated
     // trace and one rendered fault stream serve every member.
-    let jobs = sc0.trace.generate();
+    let jobs = rig.traces.jobs_for(&sc0.trace);
     assert!(!jobs.is_empty(), "empty scenario trace");
     let fault_events = sc0.faults.events(&twin.cfg);
     // The member cap diverges at the rank just past the fault events —
@@ -768,6 +886,7 @@ pub fn replay_group(
         congestion,
         total_nodes,
         sim,
+        traces: _,
     } = rig;
     let mut session = ReplaySession::new(sim, sched, jobs.clone(), fault_events);
     {
@@ -2053,5 +2172,96 @@ mod tests {
             .map(|s| s.killed)
             .sum();
         assert!(faulted_killed > 0, "the faulted half must exercise kills");
+    }
+
+    /// Cost hints line up with the canonical group numbering: singleton
+    /// clean groups sit in class 0 at `jobs` units, and fork members,
+    /// armed fault traces and coupling each scale the hint up — the
+    /// ordering the distributed scheduler's LPT queue is seeded with.
+    #[test]
+    fn group_cost_hints_track_fork_fault_and_coupling_axes() {
+        let plain = small_grid(); // 2 seeds × 2 caps × 1 mix, 60 jobs
+        let hints = plain.group_cost_hints(false);
+        assert_eq!(hints.len(), plain.len());
+        for h in &hints {
+            assert_eq!((h.members, h.fault_armed, h.class()), (1, false, 0));
+            assert_eq!(h.hint, 60.0);
+        }
+
+        let armed = FaultTrace {
+            seed: 5,
+            duration_s: 86_400.0,
+            node_mtbf_s: 2_000_000.0,
+            repair_mean_s: 5_400.0,
+            group: 32,
+            link_mtbf_s: 0.0,
+            link_repair_mean_s: 0.0,
+            degraded_factor: 1.0,
+        };
+        let skew = small_grid()
+            .with_coupling(Coupling::full())
+            .with_cap_time(3600.0)
+            .with_fault_traces(vec![FaultTrace::none(), armed]);
+        let groups = skew.work_groups(true);
+        let hints = skew.group_cost_hints(true);
+        assert_eq!(hints.len(), groups.len());
+        let span = skew.seeds.len() * skew.caps.len() * skew.mixes.len();
+        for (g, h) in hints.iter().enumerate() {
+            assert_eq!(h.members, groups[g].len());
+            assert_eq!(h.members, 2, "cap axis forks in pairs");
+            // The hint's fault flag must match the fault index of the
+            // group's members under the canonical expansion.
+            let f = (groups[g][0] / span) % skew.faults.len();
+            assert_eq!(h.fault_armed, !skew.faults[f].is_none());
+            let expect = 2.0 * 60.0 * if h.fault_armed { 1.5 } else { 1.0 } * 1.25;
+            assert_eq!(h.hint, expect);
+            assert_eq!(h.class(), 2 + usize::from(h.fault_armed));
+        }
+        assert!(hints.iter().any(|h| h.fault_armed));
+        assert!(hints.iter().any(|h| !h.fault_armed));
+    }
+
+    /// The trace memo returns byte-identical jobs on a hit, keys on the
+    /// full generator state (a different seed is a different trace),
+    /// and counts its own effectiveness.
+    #[test]
+    fn trace_cache_hits_clone_the_exact_generated_trace() {
+        let mut cache = TraceCache::default();
+        let gen_a = TraceGen::booster_day(40, 7);
+        let first = cache.jobs_for(&gen_a);
+        let again = cache.jobs_for(&gen_a);
+        assert_eq!(cache.counters(), (1, 1), "one miss then one hit");
+        assert_eq!(
+            format!("{first:?}"),
+            format!("{again:?}"),
+            "cache hit diverged from the generated trace"
+        );
+        assert_eq!(format!("{first:?}"), format!("{:?}", gen_a.generate()));
+
+        let gen_b = TraceGen::booster_day(40, 8);
+        let other = cache.jobs_for(&gen_b);
+        assert_eq!(cache.counters(), (1, 2), "new seed must miss");
+        assert_ne!(format!("{first:?}"), format!("{other:?}"));
+    }
+
+    /// Scenarios that differ only along the cap/policy axes hit the
+    /// cache on a persistent arena — the distributed worker's win — and
+    /// the cached replay is bit-identical to the fresh-rig oracle.
+    #[test]
+    fn arena_replays_share_one_trace_across_cap_and_policy_axes() {
+        let twin = Twin::leonardo();
+        let grid = small_grid().with_policies(PolicyKind::all().to_vec());
+        let scenarios = grid.scenarios();
+        let mut arena: Option<ReplayRig> = None;
+        for (i, sc) in scenarios.iter().enumerate() {
+            let cached = run_scenario_arena(&mut arena, &twin, sc);
+            let fresh = run_scenario(&twin, sc);
+            assert_eq!(cached, fresh, "scenario {i} diverged through the cache");
+        }
+        let (hits, misses) = arena.expect("arena armed").traces.counters();
+        // 2 policies × 2 caps × 2 seeds, but only 2 distinct traces
+        // (one per seed): everything past the first pass per seed hits.
+        assert_eq!(misses, 2, "one generation per (mix, seed)");
+        assert_eq!(hits, scenarios.len() as u64 - 2);
     }
 }

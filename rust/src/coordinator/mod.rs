@@ -674,9 +674,12 @@ impl Twin {
 
     /// The same grid on the distributed sweep service's in-process
     /// fleet: a coordinator on an ephemeral loopback port plus
-    /// `workers` worker threads, each replaying consistent-hash-
-    /// assigned groups on its own cloned twin and streaming rows back
-    /// over the TCP protocol (CLI: `leonardo-twin serve --workers N`).
+    /// `workers` worker threads, each pulling groups off the
+    /// coordinator's cost-ranked ready queue (adaptive LPT dispatch —
+    /// the default; `crate::service::run_fleet` additionally exposes
+    /// per-worker replay threads and static ring sharding) and
+    /// streaming each finished group back as one batched frame over
+    /// the TCP protocol (CLI: `leonardo-twin serve --workers N`).
     /// Byte-identical to [`Twin::sweep`] (`fork = false`) or
     /// [`Twin::sweep_forked`] (`fork = true`) for any worker count.
     pub fn sweep_distributed(

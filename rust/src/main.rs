@@ -59,19 +59,23 @@ COMMANDS:
                        [--mixes LIST] [--threads T] [--coupled] [--routing P]
                        [--policy LIST] [--cap-time SEC] [--fork]
                        [--faults SPEC] [--checkpoint CP]
-  serve       Distributed sweep service coordinator: shard a sweep
-              grid's scenario groups across a worker fleet over a
-              consistent-hash ring and merge the streamed rows into
-              the same report `sweep` prints — byte-identical for any
-              worker count, join order, or worker failure. Fleet is
-              either in-process (--workers N) or TCP (--listen ADDR,
+  serve       Distributed sweep service coordinator: distribute a
+              sweep grid's scenario groups across a worker fleet —
+              adaptive pull dispatch by default (longest-estimated
+              group first to whoever asks), or static consistent-hash
+              sharding (--dispatch static) — and merge the streamed
+              rows into the same report `sweep` prints —
+              byte-identical for any worker count, thread count, join
+              order, or worker failure. Fleet is either in-process
+              (--workers N [--threads T]) or TCP (--listen ADDR,
               serving `work` processes). Takes every sweep grid flag;
               a grid must be given explicitly unless --persist (then
               clients `submit` grids). With --persist the coordinator
               outlives its grids: jobs queue FIFO (bounded by
               --queue) until a `submit --drain`
-                       [--workers N | --listen ADDR [--expect N]
-                        [--persist] [--queue N]]
+                       [--workers N [--threads T] | --listen ADDR
+                        [--expect N] [--persist] [--queue N]]
+                       [--dispatch adaptive|static]
                        [--jobs N] [--seed S] [--seeds K] [--caps LIST]
                        [--mixes LIST] [--coupled] [--routing P]
                        [--policy LIST] [--cap-time SEC] [--fork]
@@ -83,11 +87,13 @@ COMMANDS:
                        --connect HOST:PORT [--drain]
                        [sweep grid flags as above]
   work        Distributed sweep worker: connect to a `serve`
-              coordinator, replay assigned scenario groups on a
-              persistent arena, stream rows back, answer heartbeats,
-              rejoin across coordinator restarts, exit on shutdown
-                       --connect HOST:PORT [--die-after N]
-                       [--chaos SEED]
+              coordinator, pull scenario-group credit, replay granted
+              groups on a pool of persistent arenas (--threads), send
+              each finished group back as one batched frame, answer
+              heartbeats, rejoin across coordinator restarts, exit on
+              shutdown
+                       --connect HOST:PORT [--threads N] [--prefetch N]
+                       [--die-after N] [--chaos SEED]
   calibrate   Measure the AOT kernels through PJRT
   all         Every table in paper order              [--calibrated]
 
@@ -104,7 +110,9 @@ OPTIONS:
                     the cap (default none,7.5,6.5)
   --mixes LIST      sweep: comma-separated TraceGen mixes: day, ai, hpc
                     (default day,ai)
-  --threads T       sweep: worker threads (default: available cores)
+  --threads T       sweep: worker threads (default: available cores);
+                    work / serve --workers: replay threads per worker,
+                    each with its own persistent arena (default 1)
   --coupled         operations/sweep: runtime coupling on — running jobs'
                     provisional end times re-time under fabric contention
                     and cap moves (default: off, end times frozen at Start)
@@ -164,6 +172,15 @@ OPTIONS:
                     transport (deterministic drop/delay/truncate/corrupt
                     schedule) — it will misbehave mid-protocol and the
                     coordinator must survive it
+  --prefetch N      work: group credit window per replay thread — up to
+                    threads x N groups granted-or-running at once so
+                    the pipe never runs dry between a batch and the
+                    next grant (default 2)
+  --dispatch MODE   serve: 'adaptive' (default) pull-based LPT dispatch
+                    seeded from structural group-cost hints and refined
+                    from observed per-class service times, or 'static'
+                    up-front consistent-hash sharding (the PR 8
+                    dispatcher, kept as a baseline)
 ";
 
 struct Args {
@@ -195,6 +212,8 @@ struct Args {
     drain: bool,
     die_after: Option<usize>,
     chaos: Option<u64>,
+    prefetch: Option<usize>,
+    dispatch: Option<String>,
     /// Whether any grid-shaping flag (`--seeds`/`--caps`/`--mixes`/
     /// `--jobs`) was given explicitly — `serve` and `submit` refuse to
     /// fall back to the `sweep` defaults, a service replays
@@ -234,6 +253,8 @@ fn parse_args() -> Result<Args, String> {
         drain: false,
         die_after: None,
         chaos: None,
+        prefetch: None,
+        dispatch: None,
         grid_given: false,
     };
     while let Some(a) = argv.next() {
@@ -313,6 +334,17 @@ fn parse_args() -> Result<Args, String> {
                         .parse()
                         .map_err(|e| format!("--chaos: {e}"))?,
                 )
+            }
+            "--prefetch" => {
+                args.prefetch = Some(
+                    argv.next()
+                        .ok_or("--prefetch needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--prefetch: {e}"))?,
+                )
+            }
+            "--dispatch" => {
+                args.dispatch = Some(argv.next().ok_or("--dispatch needs a value")?)
             }
             "--seed" => {
                 args.seed = argv
@@ -517,6 +549,16 @@ fn serve_inputs(args: &Args) -> anyhow::Result<(Option<SweepGrid>, Routing, Serv
     }
 }
 
+/// Resolve `--dispatch`: adaptive pull (default) or the retained
+/// static consistent-hash sharding.
+fn parse_dispatch(v: Option<&str>) -> anyhow::Result<service::DispatchMode> {
+    match v.unwrap_or("adaptive") {
+        "adaptive" => Ok(service::DispatchMode::Adaptive),
+        "static" => Ok(service::DispatchMode::Static),
+        other => anyhow::bail!("--dispatch must be 'adaptive' or 'static', got '{other}'"),
+    }
+}
+
 /// Validate `submit` inputs: `--connect` is required; `--drain` takes
 /// no grid flags (it stops the service, it doesn't run one); a
 /// submission needs an explicit grid, same rule as `serve`.
@@ -704,6 +746,13 @@ fn main() -> anyhow::Result<()> {
                     std::process::exit(2);
                 }
             };
+            let dispatch = match parse_dispatch(args.dispatch.as_deref()) {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            };
             twin.net.routing = routing;
             let spec = grid.as_ref().map(|g| SweepSpec {
                 grid: g.clone(),
@@ -713,12 +762,18 @@ fn main() -> anyhow::Result<()> {
             match mode {
                 ServeMode::InProcess(n) => {
                     let spec = spec.expect("in-process serve always has a grid");
+                    let threads = args.threads.unwrap_or(1).max(1);
                     eprintln!(
-                        "serve: {} scenarios ({} groups) on an in-process fleet of {n} worker(s)",
+                        "serve: {} scenarios ({} groups) on an in-process fleet of \
+                         {n} worker(s) x {threads} thread(s)",
                         spec.grid.len(),
                         spec.grid.work_groups(args.fork).len(),
                     );
-                    let (report, fleet) = service::run_distributed(&twin, &spec, n, &[])?;
+                    let cfg = CoordinatorConfig {
+                        dispatch,
+                        ..CoordinatorConfig::default()
+                    };
+                    let (report, fleet) = service::run_fleet(&twin, &spec, n, threads, &[], &cfg)?;
                     print_fleet(&fleet);
                     // Same stdout as `sweep`, so reports diff
                     // byte-for-byte.
@@ -747,6 +802,7 @@ fn main() -> anyhow::Result<()> {
                         expect,
                         queue_cap: args.queue.unwrap_or(8),
                         persist: args.persist,
+                        dispatch,
                         ..CoordinatorConfig::default()
                     };
                     let (report, fleet) = service::serve_service(spec.as_ref(), &cfg)?;
@@ -792,7 +848,19 @@ fn main() -> anyhow::Result<()> {
         }
         "work" => {
             let out = match args.connect.as_deref() {
-                Some(connect) => service::work(connect, args.die_after, args.chaos),
+                Some(_) if args.threads == Some(0) => Err(anyhow::anyhow!(
+                    "--threads 0: a worker needs at least one replay thread"
+                )),
+                Some(_) if args.prefetch == Some(0) => Err(anyhow::anyhow!(
+                    "--prefetch 0 would starve the replay pipeline: pass at least 1"
+                )),
+                Some(connect) => service::work(
+                    connect,
+                    args.die_after,
+                    args.chaos,
+                    args.threads.unwrap_or(1),
+                    args.prefetch.unwrap_or(2),
+                ),
                 None => Err(anyhow::anyhow!("work needs --connect HOST:PORT")),
             };
             if let Err(e) = out {
@@ -911,8 +979,29 @@ mod tests {
             drain: false,
             die_after: None,
             chaos: None,
+            prefetch: None,
+            dispatch: None,
             grid_given: false,
         }
+    }
+
+    #[test]
+    fn dispatch_flag_parses_both_modes_and_rejects_garbage() {
+        assert_eq!(
+            parse_dispatch(None).unwrap(),
+            service::DispatchMode::Adaptive,
+            "adaptive is the default"
+        );
+        assert_eq!(
+            parse_dispatch(Some("adaptive")).unwrap(),
+            service::DispatchMode::Adaptive
+        );
+        assert_eq!(
+            parse_dispatch(Some("static")).unwrap(),
+            service::DispatchMode::Static
+        );
+        let err = parse_dispatch(Some("hash")).unwrap_err();
+        assert!(format!("{err}").contains("--dispatch"), "{err}");
     }
 
     /// Malformed sweep flags come back as anyhow errors (the CLI prints

@@ -10,6 +10,24 @@
 //! every report is byte-identical to `run_sweep_streaming` /
 //! `run_sweep_forked` for any worker count, join order, or timing.
 //!
+//! **Dispatch.** Two modes ([`DispatchMode`]). The default,
+//! `Adaptive`, is pull-based: the coordinator keeps every undone
+//! group in a ready-queue ordered longest-estimated-first (LPT),
+//! workers request credit with `Next` as their replay pipelines drain,
+//! and each `Next` is answered by granting the most expensive ready
+//! groups to whoever holds credit. Estimates start from the grid's
+//! structural cost hints ([`crate::campaign::SweepGrid::group_cost_hints`]:
+//! fork member count × scenarios, fault armed, coupling) and are
+//! refined online from per-cost-class service-time samples as acks
+//! arrive, so a skewed grid converges toward mean-cost makespan
+//! instead of max-shard makespan. The consistent-hash ring survives
+//! only as the deterministic tie-break: among the workers currently
+//! holding credit, the ring's clockwise walk picks the owner, so
+//! assignment never depends on map iteration order. `Static` retains
+//! the PR 8 behaviour — all groups sharded up-front by the ring via
+//! unsolicited `Assign` — both as the bench baseline and for tests
+//! that need assignment to be a pure function of membership.
+//!
 //! **Job queue.** The coordinator outlives one grid: clients connect,
 //! send `Submit`, and get `Accepted {job}` plus — once the fleet has
 //! merged that grid — `Report {job}` on the same connection. Jobs run
@@ -20,24 +38,30 @@
 //! completion signal.
 //!
 //! **Liveness.** Fault tolerance is ownership-based: a group belongs
-//! to a worker from `Assign` until its `GroupDone` ack, and when a
-//! connection dies the worker leaves the ring and exactly its
-//! unacknowledged groups are re-dispatched over the survivors
-//! (consistent hashing keeps every surviving worker's assignment
-//! intact — see [`super::shard`]). A *stalled* worker — connected but
+//! to a worker from `Grant`/`Assign` until its `RowBatch` (or legacy
+//! `GroupDone`) ack, and when a connection dies the worker leaves the
+//! ring and exactly its unacknowledged groups go back to the ready
+//! queue (adaptive) or are re-dispatched over the survivors (static —
+//! consistent hashing keeps every surviving worker's assignment
+//! intact, see [`super::shard`]). A *stalled* worker — connected but
 //! silent — cannot hide behind an open socket: the coordinator pings
 //! every connection each [`CoordinatorConfig::heartbeat`], declares an
 //! idle worker lost when it stops answering, and declares a busy
 //! worker lost when one of its groups shows no progress past a
-//! deadline derived from observed group service times (never below
-//! [`CoordinatorConfig::deadline_floor`]). Every socket carries a read
-//! timeout, so neither readers nor the service loop can block forever
-//! on a dead peer; the idempotent slot merge makes late rows from a
-//! falsely-declared loss harmless.
+//! deadline derived from observed service times of the group's own
+//! *cost class* (fork-group vs singleton, faulted vs clean — never
+//! below [`CoordinatorConfig::deadline_floor`]), so a worker
+//! legitimately chewing a six-member fork group is not convicted by
+//! fast singleton acks dragging a global mean down. Every socket
+//! carries a read timeout, so neither readers nor the service loop can
+//! block forever on a dead peer; the idempotent slot merge makes late
+//! rows from a falsely-declared loss harmless.
 //!
-//! A `GroupDone` is only honored when every row of the group is
-//! already merged — a lying or corrupted worker that acks work it
-//! never streamed is declared lost instead of wedging the sweep.
+//! A group ack is only honored when every row of the group is already
+//! merged (`RowBatch` carries its rows, so this holds by construction
+//! unless the batch was truncated) — a lying or corrupted worker that
+//! acks work it never streamed is declared lost instead of wedging the
+//! sweep.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::net::{Ipv4Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -48,7 +72,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::campaign::{CampaignReport, ScenarioStats};
+use crate::campaign::{CampaignReport, GroupCost, ScenarioStats};
 use crate::coordinator::Twin;
 
 use super::messages::{read_msg_patient, write_msg, Msg, SweepSpec};
@@ -63,6 +87,20 @@ const READ_POLL: Duration = Duration::from_millis(25);
 /// Socket-level write timeout: a peer that stops draining its receive
 /// buffer fails our writes instead of wedging the service loop.
 const WRITE_PATIENCE: Duration = Duration::from_secs(10);
+
+/// How the coordinator hands groups to the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Pull-based LPT: workers request credit with `Next`, the
+    /// coordinator grants the longest-estimated ready groups to
+    /// credited workers (ring walk as the deterministic tie-break).
+    /// The default.
+    Adaptive,
+    /// Up-front consistent-hash sharding via unsolicited `Assign` —
+    /// the PR 8 dispatcher, retained as the bench baseline and for
+    /// assignment-predicting tests.
+    Static,
+}
 
 /// Where and how the coordinator runs.
 #[derive(Debug, Clone)]
@@ -92,6 +130,9 @@ pub struct CoordinatorConfig {
     /// `Drain` (`--persist`). Off, the coordinator exits once its
     /// initial job and anything queued behind it are merged.
     pub persist: bool,
+    /// Work-distribution mode (`--dispatch`): adaptive pull (default)
+    /// or static ring sharding.
+    pub dispatch: DispatchMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -105,6 +146,7 @@ impl Default for CoordinatorConfig {
             deadline_floor: Duration::from_secs(30),
             deadline_factor: 4.0,
             persist: false,
+            dispatch: DispatchMode::Adaptive,
         }
     }
 }
@@ -139,6 +181,12 @@ pub struct ServiceStats {
     pub reassign_latency_mean_s: f64,
     /// Worst-case seconds from assignment to re-dispatch.
     pub reassign_latency_max_s: f64,
+    /// Service-loop iterations that observed ≥2 ready groups while
+    /// some live worker held unspent credit — i.e. the adaptive
+    /// dispatcher letting a worker idle with work queued. Stays 0 by
+    /// construction (every credit/ready change re-runs the grant
+    /// pass); the straggler test pins that invariant.
+    pub starved_ticks: usize,
 }
 
 /// What reader threads distil every connection into.
@@ -146,6 +194,8 @@ enum CoEvent {
     Joined { name: String, stream: TcpStream },
     Row { job: u64, index: u64, stats: ScenarioStats },
     Done { worker: String, job: u64, group: u64 },
+    Next { worker: String, job: u64, want: u64 },
+    Batch { worker: String, job: u64, group: u64, rows: Vec<(u64, ScenarioStats)> },
     Pong { name: String },
     Lost { name: String },
     Submitted { spec: SweepSpec, client: TcpStream },
@@ -207,6 +257,17 @@ fn reader_loop(stream: TcpStream, tx: mpsc::Sender<CoEvent>, patience: Duration)
                 job,
                 group,
             },
+            Ok(Some(Msg::Next { job, want })) => CoEvent::Next {
+                worker: name.clone(),
+                job,
+                want,
+            },
+            Ok(Some(Msg::RowBatch { job, group, rows })) => CoEvent::Batch {
+                worker: name.clone(),
+                job,
+                group,
+                rows,
+            },
             Ok(Some(Msg::Pong)) => CoEvent::Pong { name: name.clone() },
             // Idle is the service loop's concern (it pings and times
             // out); the reader just keeps listening.
@@ -243,6 +304,13 @@ struct ActiveJob {
     slots: Vec<Option<ScenarioStats>>,
     filled: usize,
     dispatched: bool,
+    /// Structural cost hints per group — the LPT seed and the
+    /// cost-class key for deadline/estimate refinement.
+    costs: Vec<GroupCost>,
+    /// Adaptive mode's ready queue: undone, unowned groups waiting for
+    /// a credited worker. Re-sorted longest-estimated-first on every
+    /// grant pass; empty in static mode.
+    ready: Vec<usize>,
     /// Write half of the submitting client's connection; `None` for
     /// the coordinator's own initial grid.
     client: Option<TcpStream>,
@@ -251,6 +319,7 @@ struct ActiveJob {
 impl ActiveJob {
     fn new(id: u64, spec: SweepSpec, client: Option<TcpStream>) -> ActiveJob {
         let groups = spec.grid.work_groups(spec.fork);
+        let costs = spec.grid.group_cost_hints(spec.fork);
         let n = spec.grid.len();
         let mut idx_group = vec![0usize; n];
         for (g, members) in groups.iter().enumerate() {
@@ -268,6 +337,8 @@ impl ActiveJob {
             slots: vec![None; n],
             filled: 0,
             dispatched: false,
+            costs,
+            ready: Vec::new(),
             client,
             groups,
             spec,
@@ -327,6 +398,85 @@ fn dispatch_groups(
         }
     }
     assigned
+}
+
+/// Per-cost-class cost rate (observed seconds per unit of structural
+/// hint), with the pooled rate as the fallback for classes not yet
+/// sampled and 1.0 before any sample at all — so LPT ordering is
+/// meaningful from the first grant (hints alone) and sharpens as acks
+/// arrive.
+fn class_rates(
+    class_secs: &[f64; GroupCost::CLASSES],
+    class_hint: &[f64; GroupCost::CLASSES],
+) -> [f64; GroupCost::CLASSES] {
+    let tot_secs: f64 = class_secs.iter().sum();
+    let tot_hint: f64 = class_hint.iter().sum();
+    let pooled = if tot_hint > 0.0 { tot_secs / tot_hint } else { 1.0 };
+    std::array::from_fn(|c| {
+        if class_hint[c] > 0.0 {
+            class_secs[c] / class_hint[c]
+        } else {
+            pooled
+        }
+    })
+}
+
+/// The adaptive grant pass: hand ready groups to credited workers,
+/// longest-estimated-first, one `Grant` frame per worker. A group's
+/// owner is the first *credited* live worker clockwise of its ring
+/// hash — the deterministic tie-break that keeps assignment
+/// reproducible for a fixed event order. Groups nobody has credit for
+/// stay ready; workers whose grant write fails are queued on
+/// `pending_lost` (their groups come back through the loss path).
+fn grant_ready(
+    job: &mut ActiveJob,
+    rates: &[f64; GroupCost::CLASSES],
+    ring: &HashRing,
+    credit: &mut BTreeMap<String, u64>,
+    writers: &mut BTreeMap<String, TcpStream>,
+    pending_lost: &mut Vec<String>,
+) -> usize {
+    if !job.dispatched || job.ready.is_empty() {
+        return 0;
+    }
+    let mut ready = std::mem::take(&mut job.ready);
+    // LPT order; group id breaks estimate ties so the order is total.
+    ready.sort_by(|&a, &b| {
+        let ea = job.costs[a].hint * rates[job.costs[a].class()];
+        let eb = job.costs[b].hint * rates[job.costs[b].class()];
+        eb.total_cmp(&ea).then(a.cmp(&b))
+    });
+    let now = Instant::now();
+    let mut per: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+    let mut still_ready = Vec::new();
+    for g in ready {
+        let owner = ring
+            .assign_group_filtered(g, |w| {
+                credit.get(w).is_some_and(|&c| c > 0) && writers.contains_key(w)
+            })
+            .map(str::to_string);
+        match owner {
+            Some(w) => {
+                *credit.get_mut(&w).expect("filter checked credit") -= 1;
+                job.owner[g] = Some(w.clone());
+                job.assigned_at[g] = Some(now);
+                job.last_progress[g] = Some(now);
+                per.entry(w).or_default().push(g as u64);
+            }
+            None => still_ready.push(g),
+        }
+    }
+    job.ready = still_ready;
+    let mut granted = 0;
+    for (name, groups) in per {
+        granted += groups.len();
+        if let Some(stream) = writers.get_mut(&name) {
+            if write_msg(stream, &Msg::Grant { job: job.id, groups }).is_err() {
+                mark_lost(&name, writers, pending_lost);
+            }
+        }
+    }
+    granted
 }
 
 /// Serve on an already-bound listener until the work runs out: the
@@ -414,10 +564,16 @@ fn service_loop(
     let mut next_job: u64 = 1;
     let mut draining = false;
     let mut drain_clients: Vec<TcpStream> = Vec::new();
-    // Observed group service times drive the progress deadline; loss
-    // latencies feed the reassignment fields of the service stats.
-    let mut group_secs = 0.0f64;
-    let mut group_count = 0u64;
+    // Adaptive credit ledger: groups each worker has asked for and not
+    // yet been granted. Cleared on job activation (workers re-request
+    // against the new spec), dropped with the worker on loss.
+    let mut credit: BTreeMap<String, u64> = BTreeMap::new();
+    // Observed service times bucketed by cost class drive both the
+    // progress deadlines and the LPT estimates; loss latencies feed
+    // the reassignment fields of the service stats.
+    let mut class_secs = [0.0f64; GroupCost::CLASSES];
+    let mut class_hint = [0.0f64; GroupCost::CLASSES];
+    let mut class_n = [0u64; GroupCost::CLASSES];
     let mut lat_sum = 0.0f64;
     let mut lat_max = 0.0f64;
     let mut lat_count = 0u64;
@@ -448,6 +604,9 @@ fn service_loop(
         if active.is_none() {
             if let Some((id, spec, client)) = queue.pop_front() {
                 let mut job = ActiveJob::new(id, spec, client);
+                // Stale credit belongs to the previous job; workers
+                // re-request against the spec they are about to get.
+                credit.clear();
                 for (name, stream) in writers.iter_mut() {
                     let msg = Msg::Spec {
                         job: id,
@@ -461,8 +620,17 @@ fn service_loop(
                 }
                 if stats.workers_joined >= cfg.expect && !writers.is_empty() {
                     job.dispatched = true;
-                    let all: Vec<usize> = (0..job.groups.len()).collect();
-                    dispatch_groups(&mut job, &all, &ring, &mut writers, &mut pending_lost);
+                    match cfg.dispatch {
+                        DispatchMode::Adaptive => {
+                            // Everything is ready; grants flow as
+                            // `Next` requests arrive for this job.
+                            job.ready = (0..job.groups.len()).collect();
+                        }
+                        DispatchMode::Static => {
+                            let all: Vec<usize> = (0..job.groups.len()).collect();
+                            dispatch_groups(&mut job, &all, &ring, &mut writers, &mut pending_lost);
+                        }
+                    }
                 }
                 active = Some(job);
             } else if draining || !cfg.persist {
@@ -496,30 +664,51 @@ fn service_loop(
         }
 
         // Progress deadline: a dispatched group whose clock has run
-        // past max(floor, factor × mean service time) convicts its
-        // owner of stalling.
+        // past max(floor, factor × mean service time *of its own cost
+        // class*) convicts its owner of stalling. The pooled mean
+        // stands in for classes with no sample yet, so a heterogeneous
+        // grid's fork groups are judged against fork-group time, not
+        // against singleton acks.
         if let Some(job) = active.as_ref() {
             if job.dispatched {
-                let mean = if group_count > 0 {
-                    group_secs / group_count as f64
+                let tot_n: u64 = class_n.iter().sum();
+                let pooled_mean = if tot_n > 0 {
+                    class_secs.iter().sum::<f64>() / tot_n as f64
                 } else {
                     0.0
                 };
-                let deadline = cfg
-                    .deadline_floor
-                    .max(Duration::from_secs_f64(cfg.deadline_factor * mean));
                 let now = Instant::now();
                 for g in 0..job.groups.len() {
                     if job.done[g] {
                         continue;
                     }
                     if let (Some(owner), Some(t0)) = (&job.owner[g], job.last_progress[g]) {
+                        let c = job.costs[g].class();
+                        let mean = if class_n[c] > 0 {
+                            class_secs[c] / class_n[c] as f64
+                        } else {
+                            pooled_mean
+                        };
+                        let deadline = cfg
+                            .deadline_floor
+                            .max(Duration::from_secs_f64(cfg.deadline_factor * mean));
                         if now.duration_since(t0) > deadline {
                             mark_lost(owner, &writers, &mut pending_lost);
                         }
                     }
                 }
             }
+        }
+
+        // Starvation probe: a tick that sees queued work while a live
+        // worker holds unspent credit means the grant pass missed an
+        // opportunity. The grant sites below keep this at exactly 0.
+        if active.as_ref().is_some_and(|j| j.dispatched && j.ready.len() >= 2)
+            && credit
+                .iter()
+                .any(|(w, &c)| c > 0 && writers.contains_key(w) && !pending_lost.iter().any(|n| n == w))
+        {
+            stats.starved_ticks += 1;
         }
 
         // A dispatched job with no fleet left and no loss still being
@@ -574,14 +763,43 @@ fn service_loop(
                     if !job.dispatched {
                         if stats.workers_joined >= cfg.expect {
                             job.dispatched = true;
-                            let all: Vec<usize> = (0..job.groups.len()).collect();
-                            dispatch_groups(job, &all, &ring, &mut writers, &mut pending_lost);
+                            match cfg.dispatch {
+                                DispatchMode::Adaptive => {
+                                    job.ready = (0..job.groups.len()).collect();
+                                    // Credit banked before the gate
+                                    // opened is live now; grant it
+                                    // immediately instead of waiting
+                                    // for the next `Next`.
+                                    let rates = class_rates(&class_secs, &class_hint);
+                                    grant_ready(
+                                        job,
+                                        &rates,
+                                        &ring,
+                                        &mut credit,
+                                        &mut writers,
+                                        &mut pending_lost,
+                                    );
+                                }
+                                DispatchMode::Static => {
+                                    let all: Vec<usize> = (0..job.groups.len()).collect();
+                                    dispatch_groups(
+                                        job,
+                                        &all,
+                                        &ring,
+                                        &mut writers,
+                                        &mut pending_lost,
+                                    );
+                                }
+                            }
                         }
-                    } else {
+                    } else if cfg.dispatch == DispatchMode::Static {
                         // Rejoin path: in-flight groups stay with
                         // their owners (stealing them would waste
                         // replay), but anything orphaned while the
-                        // fleet was short goes to the ring now.
+                        // fleet was short goes to the ring now. (In
+                        // adaptive mode orphans already sit in the
+                        // ready queue and the rejoiner's first `Next`
+                        // pulls them.)
                         let orphans: Vec<usize> = (0..job.groups.len())
                             .filter(|&g| !job.done[g] && job.owner[g].is_none())
                             .collect();
@@ -647,8 +865,90 @@ fn service_loop(
                 }
                 j.done[g] = true;
                 if let Some(t0) = j.assigned_at[g] {
-                    group_secs += t0.elapsed().as_secs_f64();
-                    group_count += 1;
+                    let c = j.costs[g].class();
+                    class_secs[c] += t0.elapsed().as_secs_f64();
+                    class_hint[c] += j.costs[g].hint;
+                    class_n[c] += 1;
+                }
+                if j.owner[g].as_deref() == Some(worker.as_str()) {
+                    j.owner[g] = None;
+                }
+            }
+            CoEvent::Next { worker, job, want } => {
+                if let Some(seen) = last_seen.get_mut(&worker) {
+                    *seen = Instant::now();
+                }
+                // In static mode `Next` is liveness only — the shards
+                // were pushed at dispatch. In adaptive mode it is the
+                // pull: bank the credit and run a grant pass.
+                if cfg.dispatch != DispatchMode::Adaptive || !writers.contains_key(&worker) {
+                    continue;
+                }
+                let Some(j) = active.as_mut() else { continue };
+                if job != j.id {
+                    continue; // request against a grid that moved on
+                }
+                *credit.entry(worker).or_insert(0) += want;
+                let rates = class_rates(&class_secs, &class_hint);
+                grant_ready(j, &rates, &ring, &mut credit, &mut writers, &mut pending_lost);
+            }
+            CoEvent::Batch { worker, job, group, rows } => {
+                if let Some(seen) = last_seen.get_mut(&worker) {
+                    *seen = Instant::now();
+                }
+                let Some(j) = active.as_mut() else {
+                    stats.stale_rows += rows.len();
+                    continue;
+                };
+                if job != j.id {
+                    stats.stale_rows += rows.len();
+                    continue; // whole batch from a previous grid
+                }
+                let g = group as usize;
+                if g >= j.groups.len() {
+                    // A batch for a group that doesn't exist: the
+                    // worker is corrupt, not the merge.
+                    mark_lost(&worker, &writers, &mut pending_lost);
+                    continue;
+                }
+                // Merge the member rows exactly as loose `Row` frames
+                // would merge — idempotent by slot, duplicates counted.
+                let now = Instant::now();
+                for (index, row) in rows {
+                    let i = index as usize;
+                    if i >= j.slots.len() {
+                        stats.stale_rows += 1;
+                        continue;
+                    }
+                    let rg = j.idx_group[i];
+                    if !j.done[rg] {
+                        j.last_progress[rg] = Some(now);
+                    }
+                    if j.slots[i].is_none() {
+                        j.slots[i] = Some(row);
+                        j.filled += 1;
+                    } else {
+                        stats.duplicate_rows += 1;
+                    }
+                }
+                if j.done[g] {
+                    continue; // duplicate batch: clean no-op
+                }
+                if j.groups[g].iter().any(|&i| j.slots[i].is_none()) {
+                    // The batch arrived but the group's rows are still
+                    // incomplete — a short or cross-wired batch.
+                    // Honoring the ack would wedge the sweep (nobody
+                    // left owns the work): treat the sender as lost so
+                    // its groups re-run.
+                    mark_lost(&worker, &writers, &mut pending_lost);
+                    continue;
+                }
+                j.done[g] = true;
+                if let Some(t0) = j.assigned_at[g] {
+                    let c = j.costs[g].class();
+                    class_secs[c] += t0.elapsed().as_secs_f64();
+                    class_hint[c] += j.costs[g].hint;
+                    class_n[c] += 1;
                 }
                 if j.owner[g].as_deref() == Some(worker.as_str()) {
                     j.owner[g] = None;
@@ -669,6 +969,7 @@ fn service_loop(
                 let _ = stream.shutdown(Shutdown::Both);
                 ring.remove(&name);
                 last_seen.remove(&name);
+                credit.remove(&name);
                 stats.workers_lost += 1;
                 if let Some(j) = active.as_mut() {
                     let orphaned: Vec<usize> = (0..j.groups.len())
@@ -686,14 +987,36 @@ fn service_loop(
                         j.assigned_at[g] = None;
                         j.last_progress[g] = None;
                     }
-                    if j.dispatched && !orphaned.is_empty() && !ring.is_empty() {
-                        stats.groups_reassigned += dispatch_groups(
-                            j,
-                            &orphaned,
-                            &ring,
-                            &mut writers,
-                            &mut pending_lost,
-                        );
+                    if j.dispatched && !orphaned.is_empty() {
+                        match cfg.dispatch {
+                            DispatchMode::Adaptive => {
+                                // Back to the ready queue; any idle
+                                // survivor still holds credit, so the
+                                // grant pass re-places them now.
+                                stats.groups_reassigned += orphaned.len();
+                                j.ready.extend(orphaned.iter().copied());
+                                let rates = class_rates(&class_secs, &class_hint);
+                                grant_ready(
+                                    j,
+                                    &rates,
+                                    &ring,
+                                    &mut credit,
+                                    &mut writers,
+                                    &mut pending_lost,
+                                );
+                            }
+                            DispatchMode::Static => {
+                                if !ring.is_empty() {
+                                    stats.groups_reassigned += dispatch_groups(
+                                        j,
+                                        &orphaned,
+                                        &ring,
+                                        &mut writers,
+                                        &mut pending_lost,
+                                    );
+                                }
+                            }
+                        }
                     }
                 }
             }
@@ -794,13 +1117,27 @@ pub fn run_distributed(
 
 /// [`run_distributed`] with explicit coordinator tuning — the hook the
 /// liveness and chaos tests use to run real heartbeat/deadline clocks
-/// at test-sized settings. `cfg.listen` and `cfg.expect` are ignored:
-/// the fleet runs on an ephemeral loopback port and dispatch waits
-/// for all `workers`.
+/// at test-sized settings. Single-threaded workers; see [`run_fleet`]
+/// for the full knob set.
 pub fn run_distributed_cfg(
     twin: &Twin,
     spec: &SweepSpec,
     workers: usize,
+    die_after: &[(usize, usize)],
+    cfg: &CoordinatorConfig,
+) -> Result<(CampaignReport, ServiceStats)> {
+    run_fleet(twin, spec, workers, 1, die_after, cfg)
+}
+
+/// The fully-tunable in-process fleet: `workers` connections, each
+/// driving `threads` replay arenas (`serve --workers N --threads T`).
+/// `cfg.listen` and `cfg.expect` are ignored: the fleet runs on an
+/// ephemeral loopback port and dispatch waits for all `workers`.
+pub fn run_fleet(
+    twin: &Twin,
+    spec: &SweepSpec,
+    workers: usize,
+    threads: usize,
     die_after: &[(usize, usize)],
     cfg: &CoordinatorConfig,
 ) -> Result<(CampaignReport, ServiceStats)> {
@@ -824,6 +1161,7 @@ pub fn run_distributed_cfg(
                 let stream = connect_retry_seeded(addr, Duration::from_secs(10), k as u64)?;
                 let opts = WorkerOptions {
                     die_after_groups: die,
+                    threads: threads.max(1),
                     ..WorkerOptions::named(&format!("w{k}"))
                 };
                 run_worker(&mut worker_twin, stream, &opts)

@@ -45,10 +45,11 @@ pub struct SweepSpec {
     pub fork: bool,
 }
 
-/// Protocol messages. Worker → coordinator: `Hello`, `Row`,
-/// `GroupDone`, `Pong`. Coordinator → worker: `Spec`, `Assign`,
-/// `Ping`, `Shutdown`. Client → coordinator: `Submit`, `Drain`.
-/// Coordinator → client: `Accepted`, `Rejected`, `Report`, `Draining`.
+/// Protocol messages. Worker → coordinator: `Hello`, `Next`,
+/// `RowBatch`, `Row`, `GroupDone`, `Pong`. Coordinator → worker:
+/// `Spec`, `Grant`, `Assign`, `Ping`, `Shutdown`. Client →
+/// coordinator: `Submit`, `Drain`. Coordinator → client: `Accepted`,
+/// `Rejected`, `Report`, `Draining`.
 ///
 /// Job-scoped messages carry the coordinator-assigned job id so a row
 /// straggling in from a previous grid is recognisably stale instead of
@@ -64,13 +65,38 @@ pub enum Msg {
     Spec { job: u64, spec: SweepSpec },
     /// Group ids (into [`SweepGrid::work_groups`]) this worker now
     /// owns. May arrive more than once (initial dispatch, then
-    /// re-dispatch after a peer is lost).
+    /// re-dispatch after a peer is lost). Retained as the static-shard
+    /// dispatch mode's push frame; workers treat `Assign` and `Grant`
+    /// identically.
     Assign { job: u64, groups: Vec<u64> },
+    /// Credit request: the worker's replay pipeline has room for up to
+    /// `want` more groups. Credit accumulates on the coordinator until
+    /// ready groups exist to grant against it, so an idle worker is
+    /// never left unserved while work is queued.
+    Next { job: u64, want: u64 },
+    /// Groups granted against outstanding `Next` credit — the adaptive
+    /// pull dispatcher's answer, longest-estimated-first. Ownership
+    /// semantics are exactly `Assign`'s.
+    Grant { job: u64, groups: Vec<u64> },
     /// One merged-report row: the scenario's grid index and its stats.
     Row { job: u64, index: u64, stats: ScenarioStats },
+    /// Every row of one finished group plus its completion ack in a
+    /// single frame (one write + flush per *group* instead of per
+    /// scenario). Merging the rows and honoring the ack are atomic on
+    /// the coordinator: a truncated or corrupted batch never merges
+    /// partially — the frame either parses whole or kills the
+    /// connection.
+    RowBatch {
+        job: u64,
+        group: u64,
+        /// `(grid index, stats)` per member, in member order.
+        rows: Vec<(u64, ScenarioStats)>,
+    },
     /// Acknowledges every `Row` of one group was sent. Until this
     /// frame arrives the coordinator considers the group unfinished
-    /// and will re-dispatch it if the worker is lost.
+    /// and will re-dispatch it if the worker is lost. (Legacy path:
+    /// production workers send `RowBatch`, which carries the ack;
+    /// `Row`/`GroupDone` remain for hand-rolled protocol tests.)
     GroupDone { job: u64, group: u64 },
     /// The service is done with this worker; it should exit cleanly.
     Shutdown,
@@ -321,11 +347,42 @@ pub fn msg_to_json(msg: &Msg) -> Json {
                 Json::Arr(groups.iter().map(|&g| u64_to_json(g)).collect()),
             ),
         ]),
+        Msg::Next { job, want } => obj(vec![
+            ("type", Json::Str("next".into())),
+            ("job", u64_to_json(*job)),
+            ("want", u64_to_json(*want)),
+        ]),
+        Msg::Grant { job, groups } => obj(vec![
+            ("type", Json::Str("grant".into())),
+            ("job", u64_to_json(*job)),
+            (
+                "groups",
+                Json::Arr(groups.iter().map(|&g| u64_to_json(g)).collect()),
+            ),
+        ]),
         Msg::Row { job, index, stats } => obj(vec![
             ("type", Json::Str("row".into())),
             ("job", u64_to_json(*job)),
             ("index", u64_to_json(*index)),
             ("stats", stats_to_json(stats)),
+        ]),
+        Msg::RowBatch { job, group, rows } => obj(vec![
+            ("type", Json::Str("row_batch".into())),
+            ("job", u64_to_json(*job)),
+            ("group", u64_to_json(*group)),
+            (
+                "rows",
+                Json::Arr(
+                    rows.iter()
+                        .map(|(index, stats)| {
+                            obj(vec![
+                                ("index", u64_to_json(*index)),
+                                ("stats", stats_to_json(stats)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ]),
         Msg::GroupDone { job, group } => obj(vec![
             ("type", Json::Str("group_done".into())),
@@ -378,10 +435,38 @@ pub fn msg_from_json(j: &Json) -> Result<Msg> {
                 .map(u64_from_json)
                 .collect::<Result<Vec<_>>>()?,
         }),
+        "next" => Ok(Msg::Next {
+            job: u64_from_json(j.get("job")?)?,
+            want: u64_from_json(j.get("want")?)?,
+        }),
+        "grant" => Ok(Msg::Grant {
+            job: u64_from_json(j.get("job")?)?,
+            groups: j
+                .get("groups")?
+                .as_arr()?
+                .iter()
+                .map(u64_from_json)
+                .collect::<Result<Vec<_>>>()?,
+        }),
         "row" => Ok(Msg::Row {
             job: u64_from_json(j.get("job")?)?,
             index: u64_from_json(j.get("index")?)?,
             stats: stats_from_json(j.get("stats")?)?,
+        }),
+        "row_batch" => Ok(Msg::RowBatch {
+            job: u64_from_json(j.get("job")?)?,
+            group: u64_from_json(j.get("group")?)?,
+            rows: j
+                .get("rows")?
+                .as_arr()?
+                .iter()
+                .map(|r| {
+                    Ok((
+                        u64_from_json(r.get("index")?)?,
+                        stats_from_json(r.get("stats")?)?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?,
         }),
         "group_done" => Ok(Msg::GroupDone {
             job: u64_from_json(j.get("job")?)?,
@@ -565,10 +650,25 @@ mod tests {
                 job: 1,
                 groups: vec![0, 5, u64::from(u32::MAX)],
             },
+            Msg::Next { job: 1, want: 2 },
+            Msg::Grant {
+                job: 1,
+                groups: vec![2, 7],
+            },
             Msg::Row {
                 job: 1,
                 index: 3,
                 stats: row_stats.clone(),
+            },
+            Msg::RowBatch {
+                job: 1,
+                group: 7,
+                rows: vec![(14, row_stats.clone()), (15, row_stats.clone())],
+            },
+            Msg::RowBatch {
+                job: 2,
+                group: 0,
+                rows: vec![],
             },
             Msg::GroupDone { job: 1, group: 5 },
             Msg::Shutdown,

@@ -7,21 +7,25 @@
 //! through it — and this module reproduces that operations model at
 //! the campaign layer:
 //!
-//! * [`shard`] — the consistent-hash ring giving every scenario group
-//!   a stable owner that survives worker join/leave with minimal
-//!   reassignment;
+//! * [`shard`] — the consistent-hash ring: the whole assignment in
+//!   static dispatch mode, the deterministic tie-break among credited
+//!   workers in adaptive mode;
 //! * [`messages`] — the hand-rolled length-prefixed JSON protocol on
 //!   `std::net` TCP (offline-hermetic: no serde, no async runtime),
-//!   including the timeout-tolerant patient reader;
-//! * [`worker`] — one connection replaying assigned groups on a
-//!   persistent [`crate::campaign::ReplayRig`] arena, answering
-//!   heartbeats and rejoining across coordinator restarts (CLI
-//!   `work`);
-//! * [`coordinator`] — listener, ring, ownership table, the bounded
-//!   multi-grid job queue, heartbeat/deadline liveness, and the
-//!   grid-index slot merge (CLI `serve`), byte-identical to the
-//!   single-process engines for any worker count, join order, or
-//!   failure schedule;
+//!   including the timeout-tolerant patient reader and the batched
+//!   `Next`/`Grant`/`RowBatch` credit flow;
+//! * [`worker`] — one connection driving a pool of replay threads
+//!   (`work --threads`), each with a persistent
+//!   [`crate::campaign::ReplayRig`] arena, pulling group credit and
+//!   batching each finished group into a single `RowBatch` frame,
+//!   answering heartbeats and rejoining across coordinator restarts
+//!   (CLI `work`);
+//! * [`coordinator`] — listener, adaptive LPT ready-queue (cost hints
+//!   refined by per-class service times), ownership table, the bounded
+//!   multi-grid job queue, heartbeat/per-class-deadline liveness, and
+//!   the grid-index slot merge (CLI `serve`), byte-identical to the
+//!   single-process engines for any worker count, thread count, join
+//!   order, prefetch depth, or failure schedule;
 //! * [`client`] — submit a grid to a running coordinator and collect
 //!   its report, or drain the service (CLI `submit`);
 //! * [`chaos`] — the seeded wire-fault harness
@@ -46,8 +50,8 @@ pub mod worker;
 pub use chaos::{FaultPlan, FaultyTransport, WireFault};
 pub use client::{drain, submit};
 pub use coordinator::{
-    run_distributed, run_distributed_cfg, serve, serve_listener, serve_service,
-    CoordinatorConfig, ServiceStats,
+    run_distributed, run_distributed_cfg, run_fleet, serve, serve_listener, serve_service,
+    CoordinatorConfig, DispatchMode, ServiceStats,
 };
 pub use messages::{Msg, SweepSpec};
 pub use shard::{HashRing, DEFAULT_REPLICAS};

@@ -136,6 +136,33 @@ impl HashRing {
     pub fn assign_group(&self, g: usize) -> Option<&str> {
         self.assign(&format!("g{g}"))
     }
+
+    /// Owner of group `g` restricted to members passing `pred`: the
+    /// first virtual point at or clockwise of the group's hash whose
+    /// worker qualifies, wrapping the circle. With an always-true
+    /// predicate this is exactly [`HashRing::assign_group`]; the
+    /// adaptive pull dispatcher uses it as its deterministic tie-break
+    /// — among the workers currently holding credit, the ring decides
+    /// which one a group goes to, independent of map iteration order.
+    /// `None` when no member passes.
+    pub fn assign_group_filtered<F>(&self, g: usize, pred: F) -> Option<&str>
+    where
+        F: Fn(&str) -> bool,
+    {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = ring_hash(&format!("g{g}"));
+        let start = self.points.partition_point(|(ph, _)| *ph < h);
+        let n = self.points.len();
+        for k in 0..n {
+            let (_, worker) = &self.points[(start + k) % n];
+            if pred(worker) {
+                return Some(worker);
+            }
+        }
+        None
+    }
 }
 
 #[cfg(test)]
@@ -232,5 +259,34 @@ mod tests {
         let ring = HashRing::new(DEFAULT_REPLICAS);
         assert!(ring.is_empty());
         assert_eq!(ring.assign_group(0), None);
+    }
+
+    #[test]
+    fn filtered_walk_degenerates_to_assign_and_skips_excluded_members() {
+        let mut ring = HashRing::new(DEFAULT_REPLICAS);
+        for w in ["w0", "w1", "w2"] {
+            ring.add(w);
+        }
+        // Always-true predicate: exactly the unfiltered assignment.
+        for g in 0..100 {
+            assert_eq!(
+                ring.assign_group_filtered(g, |_| true),
+                ring.assign_group(g)
+            );
+        }
+        // Excluding one member is the same as removing it from the
+        // ring: surviving assignments stay put, the excluded worker's
+        // keys go to the next qualifying point clockwise.
+        let mut without = ring.clone();
+        without.remove("w1");
+        for g in 0..100 {
+            assert_eq!(
+                ring.assign_group_filtered(g, |w| w != "w1"),
+                without.assign_group(g),
+                "group {g}"
+            );
+        }
+        // Nobody qualifies: no owner, never a spin.
+        assert_eq!(ring.assign_group_filtered(0, |_| false), None);
     }
 }

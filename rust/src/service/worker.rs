@@ -1,13 +1,25 @@
 //! Worker side of the distributed sweep service.
 //!
-//! A worker is one long-lived connection: it sends `Hello`, receives
-//! job-tagged [`SweepSpec`]s, and replays whatever groups the
-//! coordinator assigns on a single persistent [`ReplayRig`] arena —
-//! exactly the per-thread arena the local streaming/forked engines
-//! keep, so the rows it streams back are byte-identical to the rows a
-//! local worker thread would have merged. Every finished group is
-//! acknowledged with `GroupDone`; an unacknowledged group is the
-//! coordinator's to re-dispatch if this connection dies.
+//! A worker is one long-lived connection driving N cores: it sends
+//! `Hello`, receives job-tagged [`SweepSpec`]s, and *pulls* work —
+//! `Next` requests credit for as many groups as its replay pipeline
+//! has room for ([`WorkerOptions::threads`] ×
+//! [`WorkerOptions::prefetch`]), the coordinator answers with `Grant`
+//! (or an unsolicited `Assign` in static dispatch mode — the worker
+//! treats both identically). Granted groups feed an in-process queue
+//! consumed by a pool of replay threads, each owning a persistent
+//! [`ReplayRig`] arena — exactly the per-thread arena
+//! [`crate::campaign::run_sweep_streaming`] keeps, so the rows
+//! streamed back are byte-identical to the rows a local worker thread
+//! would have merged. Every finished group goes back as one `RowBatch`
+//! frame (all member rows + the completion ack in a single write);
+//! an unbatched group is the coordinator's to re-dispatch if this
+//! connection dies.
+//!
+//! The connection's *write half stays on one thread*: replay threads
+//! hand finished groups back over a channel and the protocol loop is
+//! the only writer, which keeps frame order (and the chaos harness's
+//! operation counting) deterministic.
 //!
 //! Liveness runs both ways. The socket carries a read timeout, the
 //! worker answers every `Ping` with `Pong`, and a coordinator that
@@ -27,12 +39,15 @@
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::campaign::{replay_group, ReplayRig, Scenario};
+use crate::campaign::{replay_group, ReplayRig, Scenario, ScenarioStats};
 use crate::coordinator::Twin;
+use crate::topology::Routing;
 
 use super::chaos::{xorshift, FaultPlan, FaultyTransport};
 use super::messages::{read_msg_patient, write_msg, Msg};
@@ -61,6 +76,15 @@ pub struct WorkerOptions {
     /// [`FaultyTransport`](super::chaos::FaultyTransport) running
     /// [`FaultPlan::seeded`] schedules derived from this seed.
     pub chaos: Option<u64>,
+    /// Replay threads (`work --threads`): the worker's pool of
+    /// persistent arenas, all fed through this one connection. 1 (the
+    /// default) replays groups on a single arena like the PR 8 worker.
+    pub threads: usize,
+    /// Prefetch window per replay thread (`work --prefetch`): the
+    /// worker keeps up to `threads × prefetch` groups granted-or-
+    /// running so the pipe never runs dry between a `RowBatch` and the
+    /// next `Grant`. Clamped to at least 1.
+    pub prefetch: usize,
 }
 
 impl WorkerOptions {
@@ -71,6 +95,8 @@ impl WorkerOptions {
             poll: Duration::from_millis(100),
             patience: Duration::from_secs(30),
             chaos: None,
+            threads: 1,
+            prefetch: 2,
         }
     }
 }
@@ -165,115 +191,271 @@ pub fn run_worker(twin: &mut Twin, stream: TcpStream, opts: &WorkerOptions) -> R
     }
 }
 
+/// One job's expanded sweep, shared read-only by every replay thread:
+/// scenarios plus the canonical group numbering, both derived from the
+/// spec exactly as the coordinator derives them — the wire only
+/// carries group ids.
+struct JobCtx {
+    job: u64,
+    /// The routing policy shapes coupled comm slowdowns, so it must
+    /// match the submitting twin's fabric; each replay thread stamps
+    /// it onto its own twin clone.
+    routing: Routing,
+    scenarios: Vec<Scenario>,
+    groups: Vec<Vec<usize>>,
+}
+
+/// What the protocol loop multiplexes: inbound frames, the reader
+/// dying, and finished groups coming back from the replay pool.
+enum WorkerEv {
+    In(Msg),
+    ReadDead(anyhow::Error),
+    Done {
+        job: u64,
+        group: u64,
+        rows: Vec<(u64, ScenarioStats)>,
+    },
+}
+
+/// Top up outstanding credit to the prefetch window: ask for exactly
+/// the room the replay pipeline has left (granted-or-running groups
+/// plus credit already requested count against it).
+fn request_more<W: Write>(
+    writer: &mut W,
+    job: u64,
+    window: usize,
+    inflight: usize,
+    asked: &mut usize,
+) -> Result<()> {
+    let want = window.saturating_sub(inflight + *asked);
+    if want > 0 {
+        write_msg(writer, &Msg::Next { job, want: want as u64 })?;
+        *asked += want;
+    }
+    Ok(())
+}
+
 /// The transport-generic worker body ([`run_worker`] minus the socket
 /// setup) — the seam where the chaos harness slips its faulty
 /// transports under an otherwise honest worker. Public so the chaos
 /// suite can pin a [`FaultPlan`] at an exact protocol position instead
 /// of deriving one from a seed.
-pub fn run_worker_io<R: Read, W: Write>(
+///
+/// Three kinds of thread run under one scope: a reader pumping frames
+/// off `reader`, [`WorkerOptions::threads`] replay threads each with a
+/// twin clone and a persistent arena consuming an in-process group
+/// queue, and the protocol loop here — the *only* writer — which turns
+/// `Grant`/`Assign` into queued tasks and finished groups into
+/// `RowBatch` frames, topping up credit with `Next` as the pipeline
+/// drains. With no pings in flight the write sequence is fully
+/// deterministic (`Hello`, `Next`, then `RowBatch`/`Next` pairs),
+/// which is what the pinned chaos tests aim their faults at.
+pub fn run_worker_io<R, W>(
     twin: &mut Twin,
-    mut reader: R,
+    reader: R,
     mut writer: W,
     opts: &WorkerOptions,
-) -> Result<usize> {
+) -> Result<usize>
+where
+    R: Read + Send,
+    W: Write,
+{
     write_msg(
         &mut writer,
         &Msg::Hello {
             worker: opts.id.clone(),
         },
     )?;
-    // The expanded sweep for the current job: scenarios plus the
-    // canonical group numbering, both derived from the spec exactly as
-    // the coordinator derives them — the wire only carries group ids.
-    let mut cur: Option<(u64, Vec<Scenario>, Vec<Vec<usize>>)> = None;
-    let mut queue: VecDeque<usize> = VecDeque::new();
-    // One persistent arena across every group — and across every *job*
-    // on a persistent fleet (armed lazily by `replay_group`, reset
-    // between scenarios).
-    let mut arena: Option<ReplayRig> = None;
-    let mut acked = 0usize;
-    let mut last_heard = Instant::now();
-    loop {
-        let msg = match read_msg_patient(&mut reader, opts.patience) {
-            Ok(Some(m)) => {
-                last_heard = Instant::now();
-                m
-            }
-            Ok(None) => {
-                ensure!(
-                    last_heard.elapsed() <= opts.patience,
-                    "worker {}: coordinator vanished ({:.1?} of silence, heartbeats expected)",
-                    opts.id,
-                    last_heard.elapsed()
-                );
-                continue;
-            }
-            Err(e) => {
-                return Err(e.context(format!(
-                    "worker {}: coordinator connection failed",
-                    opts.id
-                )))
-            }
-        };
-        match msg {
-            Msg::Ping => write_msg(&mut writer, &Msg::Pong)?,
-            Msg::Spec { job, spec } => {
-                // The routing policy shapes coupled comm slowdowns, so
-                // it must match the submitting twin's fabric.
-                twin.net.routing = spec.routing;
-                let scenarios = spec.grid.scenarios();
-                let groups = spec.grid.work_groups(spec.fork);
-                cur = Some((job, scenarios, groups));
-                queue.clear();
-            }
-            Msg::Assign { job, groups } => {
-                // Assignments for any grid but the one we were last
-                // told about are stale — a rejoin or a queue advance
-                // raced this frame. The coordinator will re-dispatch.
-                if cur.as_ref().is_some_and(|&(id, ..)| id == job) {
-                    for g in groups {
-                        queue.push_back(g as usize);
+    let threads = opts.threads.max(1);
+    let window = threads * opts.prefetch.max(1);
+    // Clone per-thread twins up front so the replay pool owns its
+    // machine models outright.
+    let mut pool_twins: Vec<Twin> = (0..threads).map(|_| twin.clone()).collect();
+    let stop = AtomicBool::new(false);
+    let tasks: Mutex<VecDeque<(Arc<JobCtx>, usize)>> = Mutex::new(VecDeque::new());
+    let task_ready = Condvar::new();
+    let (tx, rx) = mpsc::channel::<WorkerEv>();
+
+    std::thread::scope(|s| {
+        // Reader: every inbound frame becomes an event; a read error
+        // (EOF, garbage, a stalled frame) ends the connection.
+        {
+            let reader_tx = tx.clone();
+            let stop = &stop;
+            let patience = opts.patience;
+            s.spawn(move || {
+                let mut reader = reader;
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    match read_msg_patient(&mut reader, patience) {
+                        Ok(Some(m)) => {
+                            if reader_tx.send(WorkerEv::In(m)).is_err() {
+                                return;
+                            }
+                        }
+                        Ok(None) => continue, // idle poll; stop-check and re-read
+                        Err(e) => {
+                            let _ = reader_tx.send(WorkerEv::ReadDead(e));
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+        // Replay pool: persistent arenas across groups *and* jobs on a
+        // persistent fleet (armed lazily by `replay_group`, reset
+        // between scenarios, trace cache warm throughout).
+        for mut pool_twin in pool_twins.drain(..) {
+            let pool_tx = tx.clone();
+            let (tasks, task_ready, stop) = (&tasks, &task_ready, &stop);
+            s.spawn(move || {
+                let mut arena: Option<ReplayRig> = None;
+                loop {
+                    let (ctx, g) = {
+                        let mut q = tasks.lock().expect("task queue poisoned");
+                        loop {
+                            if stop.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            if let Some(task) = q.pop_front() {
+                                break task;
+                            }
+                            q = task_ready.wait(q).expect("task queue poisoned");
+                        }
+                    };
+                    pool_twin.net.routing = ctx.routing;
+                    let rows: Vec<(u64, ScenarioStats)> =
+                        replay_group(&mut arena, &pool_twin, &ctx.scenarios, &ctx.groups[g])
+                            .into_iter()
+                            .map(|(i, stats)| (i as u64, stats))
+                            .collect();
+                    let done = WorkerEv::Done {
+                        job: ctx.job,
+                        group: g as u64,
+                        rows,
+                    };
+                    if pool_tx.send(done).is_err() {
+                        return;
+                    }
+                }
+            });
+        }
+
+        // The protocol loop: sole owner of the write half.
+        let out = (|| -> Result<usize> {
+            let mut cur: Option<Arc<JobCtx>> = None;
+            // Groups granted but not yet batched back, and credit
+            // requested but not yet granted — their sum never exceeds
+            // the prefetch window.
+            let mut inflight = 0usize;
+            let mut asked = 0usize;
+            let mut acked = 0usize;
+            let mut last_heard = Instant::now();
+            loop {
+                let ev = match rx.recv_timeout(opts.poll) {
+                    Ok(ev) => ev,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        ensure!(
+                            last_heard.elapsed() <= opts.patience,
+                            "worker {}: coordinator vanished ({:.1?} of silence, \
+                             heartbeats expected)",
+                            opts.id,
+                            last_heard.elapsed()
+                        );
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        bail!("worker {}: event stream ended", opts.id)
+                    }
+                };
+                match ev {
+                    WorkerEv::ReadDead(e) => {
+                        return Err(e.context(format!(
+                            "worker {}: coordinator connection failed",
+                            opts.id
+                        )))
+                    }
+                    WorkerEv::In(msg) => {
+                        last_heard = Instant::now();
+                        match msg {
+                            Msg::Ping => write_msg(&mut writer, &Msg::Pong)?,
+                            Msg::Spec { job, spec } => {
+                                // A new job obsoletes anything still
+                                // queued (in-flight replays of the old
+                                // job finish and are dropped stale).
+                                tasks.lock().expect("task queue poisoned").clear();
+                                let ctx = Arc::new(JobCtx {
+                                    job,
+                                    routing: spec.routing,
+                                    scenarios: spec.grid.scenarios(),
+                                    groups: spec.grid.work_groups(spec.fork),
+                                });
+                                cur = Some(ctx);
+                                inflight = 0;
+                                asked = 0;
+                                request_more(&mut writer, job, window, inflight, &mut asked)?;
+                            }
+                            Msg::Grant { job, groups } | Msg::Assign { job, groups } => {
+                                // Grants for any grid but the one we
+                                // were last told about are stale — a
+                                // rejoin or a queue advance raced this
+                                // frame. The coordinator re-dispatches.
+                                let Some(ctx) = cur.as_ref().filter(|c| c.job == job) else {
+                                    continue;
+                                };
+                                for &g in &groups {
+                                    ensure!(
+                                        (g as usize) < ctx.groups.len(),
+                                        "worker {}: group {g} out of range (grid has {})",
+                                        opts.id,
+                                        ctx.groups.len()
+                                    );
+                                }
+                                asked = asked.saturating_sub(groups.len());
+                                inflight += groups.len();
+                                {
+                                    let mut q =
+                                        tasks.lock().expect("task queue poisoned");
+                                    for g in groups {
+                                        q.push_back((Arc::clone(ctx), g as usize));
+                                    }
+                                }
+                                task_ready.notify_all();
+                            }
+                            Msg::Shutdown => return Ok(acked),
+                            other => bail!("worker {}: unexpected {other:?}", opts.id),
+                        }
+                    }
+                    WorkerEv::Done { job, group, rows } => {
+                        // A finished group of a stale job: its report
+                        // moved on, drop the rows.
+                        let Some(ctx) = cur.as_ref().filter(|c| c.job == job) else {
+                            continue;
+                        };
+                        let job = ctx.job;
+                        write_msg(&mut writer, &Msg::RowBatch { job, group, rows })?;
+                        inflight = inflight.saturating_sub(1);
+                        acked += 1;
+                        if opts.die_after_groups.is_some_and(|n| acked >= n) {
+                            // Simulated crash: drop the socket with
+                            // groups still granted and unbatched.
+                            return Ok(acked);
+                        }
+                        request_more(&mut writer, job, window, inflight, &mut asked)?;
                     }
                 }
             }
-            Msg::Shutdown => return Ok(acked),
-            other => bail!("worker {}: unexpected {other:?}", opts.id),
-        }
-        while let Some(g) = queue.pop_front() {
-            let (job, scenarios, groups) = cur
-                .as_ref()
-                .expect("assignments are only queued after their spec");
-            ensure!(
-                g < groups.len(),
-                "worker {}: group {g} out of range (grid has {})",
-                opts.id,
-                groups.len()
-            );
-            for (index, stats) in replay_group(&mut arena, twin, scenarios, &groups[g]) {
-                write_msg(
-                    &mut writer,
-                    &Msg::Row {
-                        job: *job,
-                        index: index as u64,
-                        stats,
-                    },
-                )?;
-            }
-            write_msg(
-                &mut writer,
-                &Msg::GroupDone {
-                    job: *job,
-                    group: g as u64,
-                },
-            )?;
-            acked += 1;
-            if opts.die_after_groups.is_some_and(|n| acked >= n) {
-                // Simulated crash: drop the socket with groups still
-                // assigned and unacknowledged.
-                return Ok(acked);
-            }
-        }
-    }
+        })();
+        // Unblock the pool and the reader so the scope can join: the
+        // condvar waiters check `stop`, the reader checks it each poll.
+        stop.store(true, Ordering::Relaxed);
+        tasks.lock().expect("task queue poisoned").clear();
+        task_ready.notify_all();
+        drop(rx);
+        out
+    })
 }
 
 /// Keep a worker on the fleet across coordinator restarts: connect,
@@ -318,13 +500,23 @@ pub fn run_worker_resilient(
 /// LEONARDO twin, join the fleet, replay until shut down — rejoining
 /// across coordinator restarts unless this worker is a chaos probe
 /// (whose deterministic schedule is a one-shot experiment) or a
-/// scripted crash (`--die-after`).
-pub fn work(connect: &str, die_after: Option<usize>, chaos: Option<u64>) -> Result<()> {
+/// scripted crash (`--die-after`). `threads` sizes the replay-arena
+/// pool, `prefetch` the per-thread credit window (`work --threads
+/// --prefetch`).
+pub fn work(
+    connect: &str,
+    die_after: Option<usize>,
+    chaos: Option<u64>,
+    threads: usize,
+    prefetch: usize,
+) -> Result<()> {
     let addr = parse_addr(connect)?;
     let mut twin = Twin::leonardo();
     let opts = WorkerOptions {
         die_after_groups: die_after,
         chaos,
+        threads: threads.max(1),
+        prefetch: prefetch.max(1),
         ..WorkerOptions::named(&format!("w{}", std::process::id()))
     };
     if let Some(seed) = chaos {

@@ -4,12 +4,14 @@
 //! service.
 //!
 //! Two modes. The *pinned* tests place one [`WireFault`] at an exact
-//! protocol position (operation 6 — past the `Hello` handshake, inside
-//! the row stream) on one half of one worker's connection, and assert
-//! the precise failure accounting for every fault kind. The *seeded*
-//! tests run the production probe path ([`WorkerOptions::chaos`], the
-//! CLI's `work --chaos SEED`) whose schedule is derived from the seed —
-//! the same probe the CI chaos step points at a live coordinator.
+//! protocol position (operation 4 — the length prefix of the worker's
+//! first `RowBatch` frame, past `Hello` at ops 0–1 and the first
+//! `Next` credit request at ops 2–3) on one half of one worker's
+//! connection, and assert the precise failure accounting for every
+//! fault kind. The *seeded* tests run the production probe path
+//! ([`WorkerOptions::chaos`], the CLI's `work --chaos SEED`) whose
+//! schedule is derived from the seed — the same probe the CI chaos
+//! step points at a live coordinator.
 //!
 //! Invariants under every fault, in every test: the coordinator never
 //! errors and never hangs, at most the faulted worker is lost, and
@@ -23,7 +25,7 @@ use leonardo_twin::campaign::{run_sweep_streaming, SweepGrid};
 use leonardo_twin::coordinator::Twin;
 use leonardo_twin::service::{
     drain, run_worker, run_worker_io, serve_listener, submit, CoordinatorConfig, FaultPlan,
-    FaultyTransport, HashRing, SweepSpec, WireFault, WorkerOptions, DEFAULT_REPLICAS,
+    FaultyTransport, SweepSpec, WireFault, WorkerOptions,
 };
 
 /// 12 scenarios → 12 singleton work groups: enough that every fleet
@@ -84,31 +86,24 @@ fn sabotaged_worker(
     let _ = run_worker_io(&mut wt, reader, writer, &fleet_opts(id));
 }
 
-/// Every write-side fault kind, pinned at operation 6 — inside w1's
-/// row stream (the canary below guarantees w1 owes at least two
-/// groups, so operation 6 always lands before its final ack). Each
-/// kind is detected through a different path — dropped link (EOF),
-/// truncated frame (closed mid-frame), corrupt byte (oversized length
-/// prefix or invalid JSON), long delay (progress deadline) — and every
-/// path converges on the same outcome: exactly one worker lost, the
-/// report byte-identical.
+/// Every write-side fault kind, pinned at operation 4 — the length
+/// prefix of w1's *first* `RowBatch` frame. With no pings in flight
+/// (the config below stretches the heartbeat past the test) the pull
+/// protocol's write sequence is fully deterministic — `Hello` (ops
+/// 0–1), `Next` (2–3), `RowBatch` (4–5) — and at op 4 the probe still
+/// holds its whole credit window unacked, so the fault always lands on
+/// owed work. Each kind is detected through a different path — dropped
+/// link (EOF), truncated frame (stalled partial frame), corrupt byte
+/// (garbage length prefix), long delay (per-class progress deadline,
+/// which ticks independently of the heartbeat) — and every path
+/// converges on the same outcome: exactly one worker lost, zero rows
+/// of the sabotaged batch merged, the report byte-identical.
 #[test]
 fn every_write_fault_kind_costs_one_worker_and_zero_report_bytes() {
     let twin = Twin::leonardo();
     let grid = chaos_grid();
     let oracle = run_sweep_streaming(&twin, &grid, 2);
     let sp = spec(&twin, &grid);
-
-    // The probe must still owe work when the fault fires: with at
-    // least 2 owned groups, write op 6 (Hello is ops 0–1, each row or
-    // ack is 2) precedes its final ack in any ping interleaving.
-    let mut ring = HashRing::new(DEFAULT_REPLICAS);
-    ring.add("w0");
-    ring.add("w1");
-    let w1_owns = (0..grid.len())
-        .filter(|&g| ring.assign_group(g).unwrap() == "w1")
-        .count();
-    assert!(w1_owns >= 2, "pinned ring layout moved ({w1_owns} groups)");
 
     for fault in [
         WireFault::Drop,
@@ -118,7 +113,13 @@ fn every_write_fault_kind_costs_one_worker_and_zero_report_bytes() {
     ] {
         let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
         let addr = listener.local_addr().unwrap();
-        let cfg = snappy_cfg(2);
+        // No pings (heartbeat outlives the test) so the write-op
+        // positions are exact; the progress-deadline clock still runs
+        // every service tick and convicts the stalled batch.
+        let cfg = CoordinatorConfig {
+            heartbeat: Duration::from_secs(60),
+            ..snappy_cfg(2)
+        };
         let (report, stats) = thread::scope(|s| {
             let mut wt = twin.clone();
             s.spawn(move || {
@@ -131,7 +132,7 @@ fn every_write_fault_kind_costs_one_worker_and_zero_report_bytes() {
                     twin,
                     addr,
                     "w1",
-                    FaultPlan::at(&[(6, fault)]),
+                    FaultPlan::at(&[(4, fault)]),
                     FaultPlan::at(&[]),
                 )
             });
@@ -142,6 +143,7 @@ fn every_write_fault_kind_costs_one_worker_and_zero_report_bytes() {
         assert_eq!(stats.workers_joined, 2, "{fault:?}: join accounting");
         assert_eq!(stats.workers_lost, 1, "{fault:?}: the probe was not convicted");
         assert_eq!(stats.jobs_served, 1, "{fault:?}: job accounting");
+        assert_eq!(stats.duplicate_rows, 0, "{fault:?}: a sabotaged batch merged twice");
     }
 }
 

@@ -24,8 +24,9 @@ use leonardo_twin::coordinator::Twin;
 use leonardo_twin::scheduler::{Coupling, PolicyKind};
 use leonardo_twin::service::messages::{read_msg, read_msg_patient, write_msg};
 use leonardo_twin::service::{
-    drain, run_distributed, run_worker, run_worker_resilient, serve_listener, submit,
-    CoordinatorConfig, HashRing, Msg, ServiceStats, SweepSpec, WorkerOptions, DEFAULT_REPLICAS,
+    drain, run_distributed, run_distributed_cfg, run_fleet, run_worker, run_worker_resilient,
+    serve_listener, submit, CoordinatorConfig, DispatchMode, HashRing, Msg, ServiceStats,
+    SweepSpec, WorkerOptions, DEFAULT_REPLICAS,
 };
 use leonardo_twin::workloads::FaultTrace;
 
@@ -80,6 +81,18 @@ fn fleet_opts(id: &str) -> WorkerOptions {
         poll: Duration::from_millis(25),
         patience: Duration::from_secs(20),
         ..WorkerOptions::named(id)
+    }
+}
+
+/// Static-dispatch variant of a config: the tests below that predict
+/// exact group ownership from the ring (or hand-roll a worker that
+/// waits for an unsolicited `Assign`) pin the PR 8 dispatcher; the
+/// adaptive pull path is exercised by everything else plus the
+/// threaded/straggler tests.
+fn static_dispatch(cfg: CoordinatorConfig) -> CoordinatorConfig {
+    CoordinatorConfig {
+        dispatch: DispatchMode::Static,
+        ..cfg
     }
 }
 
@@ -209,10 +222,10 @@ fn distributed_fork_mode_matches_the_forked_oracle() {
     assert!(oracle.stats.iter().all(|s| s.forks == 1));
 }
 
-/// Churn: one of three workers dies mid-sweep. The ring hands exactly
-/// its unacknowledged groups to the survivors, the merge backfills
-/// them, and the final report is still byte-identical to the
-/// single-process oracle.
+/// Churn under static dispatch: one of three workers dies mid-sweep.
+/// The ring hands exactly its unacknowledged groups to the survivors,
+/// the merge backfills them, and the final report is still
+/// byte-identical to the single-process oracle.
 #[test]
 fn worker_churn_reassigns_only_the_lost_workers_groups() {
     let twin = Twin::leonardo();
@@ -229,7 +242,8 @@ fn worker_churn_reassigns_only_the_lost_workers_groups() {
     // the other. Only that one group may move.
     let oracle = run_sweep_streaming(&twin, &grid, 2);
     let sp = spec(&twin, &grid, false);
-    let (report, stats) = run_distributed(&twin, &sp, 3, &[(0, 1)]).unwrap();
+    let cfg = static_dispatch(CoordinatorConfig::default());
+    let (report, stats) = run_distributed_cfg(&twin, &sp, 3, &[(0, 1)], &cfg).unwrap();
     assert_eq!(oracle, report, "churned sweep diverged from the oracle");
     assert_eq!(stats.workers_joined, 3);
     assert_eq!(stats.workers_lost, 1);
@@ -287,7 +301,7 @@ fn a_stalled_worker_is_timed_out_and_its_groups_reassigned() {
 
     let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
     let addr = listener.local_addr().unwrap();
-    let cfg = snappy_cfg(3, Duration::from_millis(700));
+    let cfg = static_dispatch(snappy_cfg(3, Duration::from_millis(700)));
 
     let (report, stats) = thread::scope(|s| {
         for k in 0..2 {
@@ -338,7 +352,7 @@ fn a_lying_ack_and_junk_rows_expel_the_worker_without_merging() {
 
     let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
     let addr = listener.local_addr().unwrap();
-    let cfg = snappy_cfg(2, Duration::from_millis(700));
+    let cfg = static_dispatch(snappy_cfg(2, Duration::from_millis(700)));
 
     let (report, stats) = thread::scope(|s| {
         let mut wt = twin.clone();
@@ -414,7 +428,7 @@ fn duplicate_group_acks_are_a_clean_no_op() {
 
     let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
     let addr = listener.local_addr().unwrap();
-    let cfg = snappy_cfg(1, Duration::from_millis(700));
+    let cfg = static_dispatch(snappy_cfg(1, Duration::from_millis(700)));
 
     let (report, stats) = thread::scope(|s| {
         let mut wt = twin.clone();
@@ -639,11 +653,11 @@ fn a_churned_fleet_serves_a_three_job_queue_byte_identically() {
 
     let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
     let addr = listener.local_addr().unwrap();
-    let cfg = CoordinatorConfig {
+    let cfg = static_dispatch(CoordinatorConfig {
         queue_cap: 4,
         persist: true,
         ..snappy_cfg(4, Duration::from_millis(800))
-    };
+    });
 
     let (r1, stats, r2, r3) = thread::scope(|s| {
         let serve = s.spawn(|| serve_listener(listener, Some(&sp1), &cfg));
@@ -698,4 +712,130 @@ fn a_churned_fleet_serves_a_three_job_queue_byte_identically() {
     assert!(stats.reassign_latency_max_s > 0.5);
     assert!(stats.reassign_latency_mean_s > 0.0);
     assert!(stats.reassign_latency_max_s >= stats.reassign_latency_mean_s);
+}
+
+/// Tentpole acceptance: adaptive pull dispatch, multi-thread worker
+/// arenas and batched `RowBatch` frames are invisible in the output.
+/// The streaming and forked oracles are reproduced byte-for-byte at
+/// several (fleet size × thread count) shapes — policy and fault axes
+/// included — and the starvation counter pins the no-idle invariant.
+#[test]
+fn pull_dispatch_with_threaded_workers_matches_the_oracles() {
+    let twin = Twin::leonardo();
+    let faulted = FaultTrace {
+        seed: 7,
+        duration_s: 86_400.0,
+        node_mtbf_s: 200_000.0,
+        repair_mean_s: 7_200.0,
+        group: 4,
+        link_mtbf_s: 400_000.0,
+        link_repair_mean_s: 3_600.0,
+        degraded_factor: 0.5,
+    };
+    let grid = SweepGrid::new(vec![1, 2], vec![None, Some(7.0)], vec!["day".into()], 80)
+        .unwrap()
+        .with_coupling(Coupling::full())
+        .with_policies(vec![PolicyKind::PackFirst, PolicyKind::SpreadLinks])
+        .with_fault_traces(vec![FaultTrace::none(), faulted]);
+    let oracle = run_sweep_streaming(&twin, &grid, 2);
+    let sp = spec(&twin, &grid, false);
+    for (workers, threads) in [(2, 4), (3, 2)] {
+        let (report, stats) =
+            run_fleet(&twin, &sp, workers, threads, &[], &CoordinatorConfig::default())
+                .unwrap();
+        assert_eq!(oracle, report, "{workers}x{threads} pull sweep diverged");
+        assert_eq!(stats.workers_lost, 0);
+        assert_eq!(stats.starved_ticks, 0, "a credited worker idled with work queued");
+    }
+
+    // Fork mode: whole divergence trees replay on pool arenas, each
+    // group's rows and ack riding one RowBatch frame.
+    let forked = canonical_grid()
+        .with_coupling(Coupling::full())
+        .with_cap_time(20_000.0);
+    let oracle = run_sweep_forked(&twin, &forked, 2);
+    let sp = spec(&twin, &forked, true);
+    let (report, stats) =
+        run_fleet(&twin, &sp, 2, 4, &[], &CoordinatorConfig::default()).unwrap();
+    assert_eq!(oracle, report, "threaded forked pull sweep diverged");
+    assert_eq!(stats.workers_lost, 0);
+    assert_eq!(stats.starved_ticks, 0);
+    assert!(report.stats.iter().all(|s| s.forks == 1));
+}
+
+/// The straggler test the tentpole exists for: a skewed grid — faulted
+/// fork groups cost a multiple of clean ones — served by three workers
+/// running three different prefetch depths. Adaptive pull keeps every
+/// worker fed until the queue runs dry: all three replay at least one
+/// group, no service tick observes a credited worker idling beside
+/// queued work, and the merged report is byte-identical to the forked
+/// oracle at every prefetch depth.
+#[test]
+fn skewed_grid_keeps_every_worker_fed_regardless_of_prefetch_depth() {
+    let twin = Twin::leonardo();
+    let faulted = FaultTrace {
+        seed: 11,
+        duration_s: 86_400.0,
+        node_mtbf_s: 150_000.0,
+        repair_mean_s: 7_200.0,
+        group: 4,
+        link_mtbf_s: 300_000.0,
+        link_repair_mean_s: 3_600.0,
+        degraded_factor: 0.5,
+    };
+    let grid = SweepGrid::new(
+        vec![1, 2, 3, 4],
+        vec![None, Some(7.0), Some(6.5)],
+        vec!["day".into()],
+        40,
+    )
+    .unwrap()
+    .with_coupling(Coupling::full())
+    .with_cap_time(20_000.0)
+    .with_fault_traces(vec![FaultTrace::none(), faulted]);
+    let n_groups = grid.work_groups(true).len();
+    assert_eq!(n_groups, 8, "4 seeds x 2 fault traces, one fork group each");
+    let oracle = run_sweep_forked(&twin, &grid, 2);
+    let sp = spec(&twin, &grid, true);
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = CoordinatorConfig {
+        expect: 3,
+        ..CoordinatorConfig::default()
+    };
+
+    let (report, stats, acked) = thread::scope(|s| {
+        let fleet: Vec<_> = (0..3usize)
+            .map(|k| {
+                let mut wt = twin.clone();
+                s.spawn(move || {
+                    let sock = TcpStream::connect(addr).unwrap();
+                    let opts = WorkerOptions {
+                        prefetch: k + 1,
+                        ..fleet_opts(&format!("w{k}"))
+                    };
+                    run_worker(&mut wt, sock, &opts).unwrap()
+                })
+            })
+            .collect();
+        let (report, stats) = serve_listener(listener, Some(&sp), &cfg).unwrap();
+        let acked: Vec<usize> = fleet.into_iter().map(|h| h.join().unwrap()).collect();
+        (report, stats, acked)
+    });
+    let report = report.expect("initial grid always yields its report");
+
+    assert_eq!(oracle, report, "skewed pull sweep diverged from the forked oracle");
+    assert_eq!(stats.workers_joined, 3);
+    assert_eq!(stats.workers_lost, 0);
+    assert_eq!(stats.starved_ticks, 0, "a credited worker idled beside queued work");
+    assert_eq!(
+        acked.iter().sum::<usize>(),
+        n_groups,
+        "every group must be acked exactly once: {acked:?}"
+    );
+    assert!(
+        acked.iter().all(|&a| a >= 1),
+        "pull dispatch left a worker idle for the whole sweep: {acked:?}"
+    );
 }
